@@ -1,0 +1,40 @@
+//! Table 2/3-style dataset sweep with CLI-selectable geometry — the
+//! knob-turning companion to the fixed paper benches.
+//!
+//! ```bash
+//! cargo run --release --example dataset_sweep -- [image_size] [scale]
+//! # e.g. a fast 64px sweep over 5% of each flower group:
+//! cargo run --release --example dataset_sweep -- 64 0.05
+//! ```
+
+use ukstc::bench::{table2, BenchConfig};
+use ukstc::workload::datasets::{FLOWER_GROUPS, TABLE3_GROUPS};
+
+fn main() {
+    let args: Vec<String> = std::env::args().skip(1).collect();
+    let image_size: usize = args
+        .first()
+        .and_then(|v| v.parse().ok())
+        .unwrap_or(64);
+    let scale: f64 = args.get(1).and_then(|v| v.parse().ok()).unwrap_or(0.02);
+    let cfg = BenchConfig {
+        scale,
+        iters: 2,
+        warmup: 1,
+        ..Default::default()
+    };
+    println!("dataset sweep: image={image_size}px scale={scale} workers={}", cfg.workers);
+
+    let rows = table2::run_sweep(&FLOWER_GROUPS, &cfg, image_size);
+    table2::print_rows(
+        &format!("Flower dataset @ {image_size}px (conventional vs proposed)"),
+        &rows,
+    );
+
+    let rows3 = table2::run_sweep(&TABLE3_GROUPS, &cfg, image_size);
+    table2::print_rows(
+        &format!("MSCOCO + PASCAL @ {image_size}px (conventional vs proposed)"),
+        &rows3,
+    );
+    println!("\ndataset_sweep OK");
+}

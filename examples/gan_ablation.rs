@@ -1,0 +1,52 @@
+//! GAN ablation walk-through (the paper's §4.3 protocol on one model):
+//! per-layer conventional vs unified timings, FLOP ratios, and the
+//! exact memory savings — then a full latent→image generation.
+//!
+//! ```bash
+//! cargo run --release --example gan_ablation [dcgan|artgan|gpgan|ebgan]
+//! ```
+
+use ukstc::bench::{table4, BenchConfig};
+use ukstc::conv::parallel::{Algorithm, Lane};
+use ukstc::models::{GanModel, Generator};
+use ukstc::util::rng::Rng;
+use ukstc::util::timing;
+
+fn main() {
+    let model = std::env::args()
+        .nth(1)
+        .and_then(|n| GanModel::from_name(&n))
+        .unwrap_or(GanModel::DcGan);
+    println!("== Table 4 ablation: {} ==", model.name());
+
+    // Per-layer measurement with the shared harness.
+    let cfg = BenchConfig {
+        iters: 3,
+        warmup: 1,
+        ..Default::default()
+    };
+    let result = table4::measure_model(model, &cfg);
+    table4::print_model(&result);
+
+    // Full generator pass: latent → image through the unified kernel.
+    println!("\nfull generator forward (latent → image):");
+    let mut rng = Rng::seeded(7);
+    let generator = Generator::random(model, &mut rng);
+    let z: Vec<f32> = (0..model.z_dim()).map(|_| rng.normal_f32()).collect();
+    for (alg, label) in [
+        (Algorithm::Conventional, "conventional"),
+        (Algorithm::Unified, "unified"),
+    ] {
+        let (dt, img) = timing::time_once(|| generator.forward(&z, alg, Lane::Serial));
+        println!(
+            "  {label:13} {} → image {}×{}×{} (range [{:.3}, {:.3}])",
+            timing::fmt_duration(dt),
+            img.h,
+            img.w,
+            img.c,
+            img.data.iter().cloned().fold(f32::INFINITY, f32::min),
+            img.data.iter().cloned().fold(f32::NEG_INFINITY, f32::max),
+        );
+    }
+    println!("\ngan_ablation OK");
+}

@@ -1,0 +1,32 @@
+//! §Perf hot-path probe (EXPERIMENTS.md §Perf): times the shared
+//! correlation primitive on the three shapes that dominate the paper's
+//! workloads — the Table 2/3 dataset shape (224²×3→×1), a GAN head
+//! layer (8²×256→16²×128) and a GAN tail layer (64²×128→128²×64).
+//!
+//! ```bash
+//! cargo run --release --example perf_probe
+//! ```
+
+use ukstc::conv::parallel::{run, Algorithm, Lane};
+use ukstc::tensor::{Feature, Kernel};
+use ukstc::util::rng::Rng;
+use ukstc::util::timing;
+
+fn main() {
+    let mut rng = Rng::seeded(1);
+    // Case A: Table 2 shape (224px, k5, P2, cin3, cout1)
+    let xa = Feature::random(224, 224, 3, &mut rng);
+    let ka = Kernel::random(5, 3, 1, &mut rng);
+    // Case B: GAN layer (8x8x256 -> 16x16x128)
+    let xb = Feature::random(8, 8, 256, &mut rng);
+    let kb = Kernel::random(4, 256, 128, &mut rng);
+    // Case C: late GAN layer (64x64x128 -> 128x128x64)
+    let xc = Feature::random(64, 64, 128, &mut rng);
+    let kc = Kernel::random(4, 128, 64, &mut rng);
+    for (name, x, k) in [("A:224px/c3->1", &xa, &ka), ("B:8px/c256->128", &xb, &kb), ("C:64px/c128->64", &xc, &kc)] {
+        for alg in [Algorithm::Conventional, Algorithm::Unified] {
+            let m = timing::measure(2, 7, || run(alg, Lane::Serial, x, k, 2));
+            println!("{name} {:<14} {}", alg.name(), timing::fmt_duration(m.best()));
+        }
+    }
+}

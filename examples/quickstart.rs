@@ -1,0 +1,88 @@
+//! Quickstart: segregate a kernel, run all three transpose-conv
+//! algorithms on one feature map, verify they agree, and print the
+//! timing + analytic savings.
+//!
+//! ```bash
+//! cargo run --release --example quickstart
+//! ```
+
+use ukstc::conv::parallel::{run, Algorithm, Lane};
+use ukstc::conv::segregation::segregate;
+use ukstc::conv::{flops, memory, ConvTransposeParams};
+use ukstc::tensor::{ops, Feature, Kernel};
+use ukstc::util::rng::Rng;
+use ukstc::util::timing;
+
+fn main() {
+    // The paper's Fig. 5/6 setting, scaled up to a realistic feature
+    // map: 64×64×32 input, 5×5 kernel, conventional padding P=2.
+    let (n_in, n_k, padding, cin, cout) = (64, 5, 2, 32, 16);
+    let mut rng = Rng::seeded(42);
+    let x = Feature::random(n_in, n_in, cin, &mut rng);
+    let k = Kernel::random(n_k, cin, cout, &mut rng);
+
+    println!("== Unified Kernel-Segregated Transpose Convolution — quickstart ==\n");
+
+    // 1. Kernel segregation (Fig. 4).
+    let seg = segregate(&k);
+    println!("kernel {n_k}×{n_k} segregates into sub-kernels (rows×cols):");
+    for (i, sub) in seg.subs.iter().enumerate() {
+        println!(
+            "  k{}{}: {}×{} ({} taps)",
+            i / 2,
+            i % 2,
+            sub.rows,
+            sub.cols,
+            sub.taps()
+        );
+    }
+
+    // 2. All algorithms agree.
+    let reference = run(Algorithm::Conventional, Lane::Serial, &x, &k, padding);
+    println!(
+        "\noutput: {}×{}×{} ({})",
+        reference.h,
+        reference.w,
+        reference.c,
+        if reference.h % 2 == 1 { "odd — the case the paper fixes" } else { "even" }
+    );
+    for alg in Algorithm::all() {
+        let out = run(alg, Lane::Serial, &x, &k, padding);
+        let err = ops::max_abs_diff(&reference, &out);
+        println!("  {:22} max |Δ| vs conventional = {err:.2e}", alg.name());
+        assert!(err < 1e-3);
+    }
+
+    // 3. Timing comparison.
+    println!("\ntimings (serial lane):");
+    for alg in [
+        Algorithm::Conventional,
+        Algorithm::Grouped,
+        Algorithm::UnifiedPerElement,
+        Algorithm::Unified,
+    ] {
+        let m = timing::measure(1, 5, || run(alg, Lane::Serial, &x, &k, padding));
+        println!(
+            "  {:22} {}",
+            alg.name(),
+            timing::fmt_duration(m.median())
+        );
+    }
+
+    // 4. Analytic models (the paper's exact savings columns).
+    let p = ConvTransposeParams::new(n_in, n_k, padding, cin, cout);
+    println!("\nanalytic models:");
+    println!(
+        "  MACs: conventional {} vs unified {}  (reduction {:.2}×)",
+        flops::conventional(&p),
+        flops::unified(&p),
+        flops::reduction_ratio(&p)
+    );
+    println!(
+        "  memory: upsampled buffer {} B eliminated (Table 4 definition); \
+         net savings {} B (Table 2 definition)",
+        memory::savings_table4(&p),
+        memory::savings_table2(&p)
+    );
+    println!("\nquickstart OK");
+}

@@ -1,0 +1,104 @@
+//! **End-to-end driver** (the EXPERIMENTS.md validation run): start the
+//! serving coordinator, load the AOT-compiled DC-GAN generator through
+//! PJRT (JAX/Pallas → HLO text → PJRT CPU — no Python at runtime),
+//! replay a Poisson request trace, and report latency/throughput.
+//!
+//! Falls back to the native Rust backend with `--rust` or when the
+//! artifacts are missing.
+//!
+//! ```bash
+//! make artifacts && cargo run --release --example serve
+//! cargo run --release --example serve -- --rust      # native backend
+//! ```
+
+use std::path::Path;
+use std::sync::Arc;
+use std::time::Duration;
+
+use ukstc::conv::parallel::{Algorithm, Lane};
+use ukstc::coordinator::backend::{Backend, RustBackend};
+use ukstc::coordinator::batcher::BatchPolicy;
+use ukstc::coordinator::Coordinator;
+use ukstc::models::GanModel;
+use ukstc::runtime::{Engine, PjrtBackend};
+use ukstc::util::rng::Rng;
+use ukstc::workload::generator::poisson_trace;
+
+fn main() -> anyhow::Result<()> {
+    ukstc::util::logging::init();
+    let use_rust = std::env::args().any(|a| a == "--rust");
+    let artifacts = Path::new("artifacts");
+
+    let backend: Arc<dyn Backend> = if !use_rust && artifacts.join("manifest.json").exists() {
+        println!("backend: PJRT (AOT Pallas artifact dcgan_b8)");
+        let mut engine = Engine::new(artifacts)?;
+        engine.compile("dcgan_b8")?;
+        Arc::new(PjrtBackend::new(Arc::new(engine), "dcgan_b8", 7)?)
+    } else {
+        println!("backend: native Rust unified kernels (dcgan)");
+        Arc::new(RustBackend::new(
+            GanModel::DcGan,
+            Algorithm::Unified,
+            Lane::Serial,
+            7,
+            8,
+        ))
+    };
+    let z_dim = backend.z_dim();
+    let model = backend.model_name().to_string();
+
+    let coord = Coordinator::builder()
+        .queue_capacity(256)
+        .workers_per_model(2)
+        .batch_policy(BatchPolicy {
+            max_batch: 8,
+            max_delay: Duration::from_millis(4),
+        })
+        .register(backend)
+        .start()?;
+
+    // Open-loop Poisson trace: 80 requests at 25 req/s.
+    let (rate, n) = (15.0, 80);
+    println!("replaying {n} Poisson requests at {rate} req/s against '{model}'...");
+    let mut rng = Rng::seeded(2026);
+    let trace = poisson_trace(&model, z_dim, rate, n, &mut rng);
+    let t0 = std::time::Instant::now();
+    let mut pending = Vec::new();
+    for tr in trace {
+        let now = t0.elapsed().as_secs_f64();
+        if tr.at > now {
+            std::thread::sleep(std::time::Duration::from_secs_f64(tr.at - now));
+        }
+        match coord.submit(tr.request) {
+            Ok(rx) => pending.push(rx),
+            Err(e) => eprintln!("rejected: {e}"),
+        }
+    }
+    let mut latencies: Vec<f64> = Vec::new();
+    let mut first_image_stats = None;
+    for rx in pending {
+        let resp = rx.recv()?;
+        latencies.push(resp.total_s());
+        first_image_stats.get_or_insert((resp.image.h, resp.image.w, resp.image.c));
+    }
+    let wall = t0.elapsed().as_secs_f64();
+
+    let snap = coord.metrics(&model).unwrap();
+    let (h, w, c) = first_image_stats.unwrap();
+    latencies.sort_by(|a, b| a.partial_cmp(b).unwrap());
+    let pct = |q: f64| latencies[((latencies.len() - 1) as f64 * q) as usize] * 1e3;
+    println!("\n=== serve results ===");
+    println!("images generated : {} ({h}×{w}×{c})", snap.completed);
+    println!("wall time        : {wall:.2} s");
+    println!("throughput       : {:.2} img/s", snap.completed as f64 / wall);
+    println!(
+        "latency          : p50 {:.1} ms  p95 {:.1} ms  p99 {:.1} ms",
+        pct(0.50),
+        pct(0.95),
+        pct(0.99)
+    );
+    println!("mean batch size  : {:.2}", snap.mean_batch_size);
+    println!("rejected         : {}", snap.rejected);
+    println!("\nserve OK");
+    Ok(())
+}

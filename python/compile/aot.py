@@ -1,0 +1,173 @@
+"""AOT pipeline: lower the L2 JAX functions to HLO *text* artifacts.
+
+Interchange format is HLO text, NOT a serialized ``HloModuleProto``:
+jax ≥ 0.5 emits protos with 64-bit instruction ids which the Rust side's
+xla_extension 0.5.1 rejects (``proto.id() <= INT_MAX``); the text parser
+reassigns ids and round-trips cleanly.  See /opt/xla-example/README.md.
+
+Outputs (``--outdir``, default ``../artifacts``):
+  * ``<name>.hlo.txt``   — one per compiled variant,
+  * ``manifest.json``    — input/output specs per artifact (read by the
+    Rust runtime: ``rust/src/runtime/artifact.rs``),
+  * ``golden.json``      — oracle test vectors for the Rust kernels.
+
+Python runs ONLY here (``make artifacts``); never on the request path.
+"""
+
+from __future__ import annotations
+
+import argparse
+import json
+import os
+from functools import partial
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from jax._src.lib import xla_client as xc
+
+from . import model as M
+from .kernels import ref
+
+
+def to_hlo_text(lowered) -> str:
+    """stablehlo → XlaComputation → HLO text (return_tuple=True)."""
+    mlir_mod = lowered.compiler_ir("stablehlo")
+    comp = xc._xla.mlir.mlir_module_to_xla_computation(
+        str(mlir_mod), use_tuple_args=False, return_tuple=True
+    )
+    return comp.as_hlo_text()
+
+
+def _spec(shape) -> jax.ShapeDtypeStruct:
+    return jax.ShapeDtypeStruct(tuple(shape), jnp.float32)
+
+
+def lower_single_layer(outdir: str, manifest: list, *, conventional: bool) -> None:
+    """Smoke-test layer artifact: x[1,8,8,8] ⊛ᵀ k[4,4,8,4], P=2 → [1,16,16,4]."""
+    name = "conv_layer_s8" if conventional else "unified_layer_s8"
+    fn = (
+        M.single_layer_conventional_fwd if conventional else M.single_layer_fwd
+    )
+    x_shape, k_shape = (1, 8, 8, 8), (4, 4, 8, 4)
+    lowered = jax.jit(lambda x, k: (fn(x, k, padding=2),)).lower(
+        _spec(x_shape), _spec(k_shape)
+    )
+    path = f"{name}.hlo.txt"
+    with open(os.path.join(outdir, path), "w") as f:
+        f.write(to_hlo_text(lowered))
+    manifest.append(
+        {
+            "name": name,
+            "path": path,
+            "kind": "layer",
+            "padding": 2,
+            "inputs": [
+                {"name": "x", "shape": list(x_shape)},
+                {"name": "k", "shape": list(k_shape)},
+            ],
+            "output_shape": [1, 16, 16, 4],
+        }
+    )
+
+
+def lower_generator(outdir: str, manifest: list, model: str, batch: int) -> None:
+    """Full generator artifact ``<model>_b<batch>`` with weight arguments."""
+    name = f"{model}_b{batch}"
+    shapes = [(batch, M.Z_DIM)] + M.weight_shapes(model)
+    fn = partial(M.generator_fwd, model)
+    lowered = jax.jit(lambda *a: (fn(*a),)).lower(*[_spec(s) for s in shapes])
+    path = f"{name}.hlo.txt"
+    with open(os.path.join(outdir, path), "w") as f:
+        f.write(to_hlo_text(lowered))
+    last = M.GAN_ZOO[model][-1]
+    manifest.append(
+        {
+            "name": name,
+            "path": path,
+            "kind": "generator",
+            "model": model,
+            "batch": batch,
+            "inputs": [{"name": "z", "shape": list(shapes[0])}]
+            + [
+                {"name": f"w{i}", "shape": list(s)}
+                for i, s in enumerate(shapes[1:])
+            ],
+            "output_shape": [batch, last.n_out, last.n_out, last.cout],
+        }
+    )
+
+
+GOLDEN_CASES = [
+    # (n_in, n_k, padding, cin, cout) — covers odd/even kernels, odd/even
+    # output sizes, and the §3.4 odd-P sub-kernel role swap.
+    (4, 5, 2, 3, 2),
+    (4, 4, 1, 2, 3),
+    (5, 3, 1, 1, 1),
+    (6, 4, 2, 3, 3),
+    (4, 5, 0, 1, 2),
+    (7, 5, 3, 2, 1),
+    (3, 3, 2, 2, 2),
+    (8, 4, 2, 3, 4),
+    (1, 3, 2, 1, 1),
+    (2, 2, 0, 2, 2),
+]
+
+
+def emit_golden(outdir: str) -> None:
+    """Oracle vectors consumed by the Rust kernel tests (tests/golden.rs)."""
+    rng = np.random.default_rng(2024)
+    cases = []
+    for n_in, n_k, pad, cin, cout in GOLDEN_CASES:
+        x = rng.standard_normal((n_in, n_in, cin)).astype(np.float32)
+        k = rng.standard_normal((n_k, n_k, cin, cout)).astype(np.float32)
+        out = np.asarray(
+            ref.conventional_transpose_conv(jnp.asarray(x), jnp.asarray(k), pad)
+        )
+        cases.append(
+            {
+                "n_in": n_in,
+                "n_k": n_k,
+                "padding": pad,
+                "cin": cin,
+                "cout": cout,
+                "x": [round(float(v), 6) for v in x.ravel()],
+                "k": [round(float(v), 6) for v in k.ravel()],
+                "out_shape": list(out.shape),
+                "out": [float(v) for v in out.ravel()],
+            }
+        )
+    with open(os.path.join(outdir, "golden.json"), "w") as f:
+        json.dump({"layout": "HWC/HWIO row-major", "cases": cases}, f)
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--outdir", default="../artifacts")
+    ap.add_argument(
+        "--models",
+        default="dcgan:1,dcgan:8",
+        help="comma-separated <model>:<batch> generator variants",
+    )
+    ap.add_argument("--out", default=None, help=argparse.SUPPRESS)  # legacy
+    args = ap.parse_args()
+    outdir = args.outdir
+    if args.out:  # legacy single-file invocation from early Makefile
+        outdir = os.path.dirname(args.out) or "."
+    os.makedirs(outdir, exist_ok=True)
+
+    manifest: list = []
+    lower_single_layer(outdir, manifest, conventional=False)
+    lower_single_layer(outdir, manifest, conventional=True)
+    for spec in args.models.split(","):
+        model, batch = spec.split(":")
+        lower_generator(outdir, manifest, model, int(batch))
+    emit_golden(outdir)
+
+    with open(os.path.join(outdir, "manifest.json"), "w") as f:
+        json.dump({"version": 1, "artifacts": manifest}, f, indent=1)
+    print(f"wrote {len(manifest)} artifacts + manifest + golden to {outdir}")
+
+
+if __name__ == "__main__":
+    main()

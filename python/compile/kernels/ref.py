@@ -1,0 +1,155 @@
+"""Pure-jnp correctness oracles for the transpose-convolution algorithms.
+
+This module is the ground truth every other implementation (the Pallas
+kernel, the JAX model layers, and — via golden vectors exported by
+``aot.py`` — the Rust kernels) is validated against.
+
+Conventions
+-----------
+* Feature maps are ``[H, W, C]`` (or ``[B, H, W, C]``) float32.
+* Kernels are ``[n, n, Cin, Cout]`` (HWIO).
+* ``conv`` means cross-correlation, as in every DL framework and as the
+  paper's ``⊛`` is used in Algorithm 1.
+* ``padding`` is the paper's padding factor ``P`` applied to the
+  *upsampled* feature map (bed-of-nails framing).  The standard GAN layer
+  ``ConvTranspose2d(k=4, s=2, p=1)`` corresponds to ``P = k - 1 - p = 2``.
+
+Output size: ``Ho = 2N - 1 + 2P - n + 1 = 2N + 2P - n`` for input ``N``.
+"""
+
+from __future__ import annotations
+
+import math
+
+import jax.numpy as jnp
+from jax import lax
+
+
+def upsample_bed_of_nails(x: jnp.ndarray) -> jnp.ndarray:
+    """Insert zeros between rows/cols: ``N×N → (2N-1)×(2N-1)`` (Alg. 1).
+
+    Accepts ``[H, W, C]`` or ``[B, H, W, C]``.
+    """
+    batched = x.ndim == 4
+    if not batched:
+        x = x[None]
+    b, h, w, c = x.shape
+    up = jnp.zeros((b, 2 * h - 1, 2 * w - 1, c), x.dtype)
+    up = up.at[:, ::2, ::2, :].set(x)
+    return up if batched else up[0]
+
+
+def correlate2d(x: jnp.ndarray, k: jnp.ndarray) -> jnp.ndarray:
+    """VALID stride-1 cross-correlation, NHWC × HWIO → NHWC."""
+    batched = x.ndim == 4
+    if not batched:
+        x = x[None]
+    out = lax.conv_general_dilated(
+        x,
+        k,
+        window_strides=(1, 1),
+        padding="VALID",
+        dimension_numbers=("NHWC", "HWIO", "NHWC"),
+    )
+    return out if batched else out[0]
+
+
+def conventional_transpose_conv(
+    x: jnp.ndarray, k: jnp.ndarray, padding: int = 0
+) -> jnp.ndarray:
+    """Algorithm 1: bed-of-nails upsample, zero-pad by ``P``, correlate.
+
+    This is the literal, wasteful reference the paper optimizes away.
+    """
+    up = upsample_bed_of_nails(x)
+    if padding:
+        pad = [(padding, padding), (padding, padding), (0, 0)]
+        if up.ndim == 4:
+            pad = [(0, 0)] + pad
+        up = jnp.pad(up, pad)
+    return correlate2d(up, k)
+
+
+def segregate_kernel(k: jnp.ndarray):
+    """Fig. 4: split ``k`` into ``(k00, k01, k10, k11)``.
+
+    ``k_rs = k[r::2, s::2]`` — the rows/cols of the original kernel that
+    land on non-zero (even) positions of the upsampled map when the
+    output index has parity ``(r, s)``.  Sizes: ``⌈n/2⌉``/``⌊n/2⌋`` per
+    axis — 9/6/6/4 elements for the paper's 5×5 example.
+    """
+    return k[0::2, 0::2], k[0::2, 1::2], k[1::2, 0::2], k[1::2, 1::2]
+
+
+def output_size(n_in: int, n_k: int, padding: int) -> int:
+    """Paper output-size formula ``2N + 2P - n``."""
+    return 2 * n_in + 2 * padding - n_k
+
+
+def unified_transpose_conv_ref(
+    x: jnp.ndarray, k: jnp.ndarray, padding: int = 0
+) -> jnp.ndarray:
+    """Algorithm 2 / Eqs. 1–4, written densely in jnp (phase form).
+
+    The output decomposes into four parity phases ``out[rp::2, sp::2]``;
+    phase ``(rp, sp)`` uses sub-kernel ``k_{(rp+P)%2, (sp+P)%2}`` (the
+    §3.4 odd-``P`` role swap falls out of the ``+P``), correlated against
+    an input slab whose first row is ``base(i) = ⌈(i - P)/2⌉``.
+    """
+    batched = x.ndim == 4
+    if not batched:
+        x = x[None]
+    b, n, _, cin = x.shape
+    nk = k.shape[0]
+    cout = k.shape[3]
+    ho = output_size(n, nk, padding)
+    subs = segregate_kernel(k)
+    out = jnp.zeros((b, ho, ho, cout), x.dtype)
+
+    for rp in (0, 1):  # output-row parity
+        for sp in (0, 1):  # output-col parity
+            r, s = (rp + padding) % 2, (sp + padding) % 2
+            sub = subs[2 * r + s]
+            kr, kc = sub.shape[0], sub.shape[1]
+            n_rows = len(range(rp, ho, 2))
+            n_cols = len(range(sp, ho, 2))
+            if n_rows == 0 or n_cols == 0 or kr == 0 or kc == 0:
+                continue
+            # base(i) = ceil((i - P)/2) for i = rp + 2t  →  base0 + t
+            base0_r = math.ceil((rp - padding) / 2)
+            base0_c = math.ceil((sp - padding) / 2)
+            # Input slab rows needed: base0 .. base0 + (n_rows-1) + kr - 1
+            lo_r, hi_r = base0_r, base0_r + n_rows - 1 + kr - 1
+            lo_c, hi_c = base0_c, base0_c + n_cols - 1 + kc - 1
+            pad_lo_r, pad_hi_r = max(0, -lo_r), max(0, hi_r - (n - 1))
+            pad_lo_c, pad_hi_c = max(0, -lo_c), max(0, hi_c - (n - 1))
+            slab = jnp.pad(
+                x,
+                [(0, 0), (pad_lo_r, pad_hi_r), (pad_lo_c, pad_hi_c), (0, 0)],
+            )[:, lo_r + pad_lo_r : hi_r + pad_lo_r + 1,
+              lo_c + pad_lo_c : hi_c + pad_lo_c + 1, :]
+            phase = correlate2d(slab, sub)
+            out = out.at[:, rp::2, sp::2, :].set(phase)
+    return out if batched else out[0]
+
+
+def flops_conventional(n_in: int, n_k: int, padding: int, cin: int, cout: int) -> int:
+    """MACs of Algorithm 1 (counting multiplications against zeros)."""
+    ho = output_size(n_in, n_k, padding)
+    return ho * ho * n_k * n_k * cin * cout
+
+
+def flops_unified(n_in: int, n_k: int, padding: int, cin: int, cout: int) -> int:
+    """MACs of Algorithm 2 — only the effective taps of each phase."""
+    ho = output_size(n_in, n_k, padding)
+    kc, kf = math.ceil(n_k / 2), math.floor(n_k / 2)
+    total = 0
+    for rp in (0, 1):
+        for sp in (0, 1):
+            r, s = (rp + padding) % 2, (sp + padding) % 2
+            kr = kc if r == 0 else kf
+            ks = kc if s == 0 else kf
+            n_rows = len(range(rp, ho, 2))
+            n_cols = len(range(sp, ho, 2))
+            total += n_rows * n_cols * kr * ks * cin * cout
+    return total

@@ -1,0 +1,156 @@
+"""L1 Pallas kernel: unified kernel-segregated transpose convolution.
+
+Hardware adaptation (see DESIGN.md §Hardware-Adaptation)
+--------------------------------------------------------
+The paper's CUDA formulation launches one thread per output element and
+selects sub-kernel ``k_{i%2, j%2}`` at runtime.  A literal port would be
+scalar gather/select soup on a TPU.  The same *exact-optimization*
+insight — never multiply against a bed-of-nails zero — restructured for
+the MXU:
+
+* the runtime parity selection partitions the output into four phases
+  ``out[rp::2, sp::2]``, each a dense stride-1 correlation of the
+  **un-upsampled** input slab with one sub-kernel (Eqs. 1–4);
+* each phase is computed shift-and-matmul style: per sub-kernel tap
+  ``(u, v)`` one ``[B·Ho·Wo, Cin] × [Cin, Cout]`` matmul accumulating in
+  VMEM scratch — MXU-shaped work, zero wasted multiplications;
+* the four phase outputs are interleaved by the caller with strided
+  stores (the TPU analogue of CUDA's scatter-by-thread-id).
+
+``interpret=True`` is mandatory here: real TPU lowering emits a Mosaic
+custom-call the CPU PJRT plugin cannot execute.  Interpret mode traces
+the kernel into plain HLO, which is exactly what ``aot.py`` ships to the
+Rust runtime.
+"""
+
+from __future__ import annotations
+
+import math
+from functools import partial
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+from . import ref
+
+
+def _phase_conv_kernel(x_ref, k_ref, o_ref, *, taps_r: int, taps_c: int):
+    """One parity phase: dense VALID correlation, shift-and-matmul.
+
+    ``x_ref``: [B, Hs, Ws, Cin] input slab (already padded/cropped),
+    ``k_ref``: [taps_r, taps_c, Cin, Cout] sub-kernel,
+    ``o_ref``: [B, Ho, Wo, Cout] phase output.
+
+    The tap loops are Python-level (static), so each iteration lowers to
+    one reshape + one ``jnp.dot`` — the MXU-friendly shape.
+    """
+    b, ho, wo, cout = o_ref.shape
+    cin = x_ref.shape[3]
+    acc = jnp.zeros((b * ho * wo, cout), jnp.float32)
+    for u in range(taps_r):
+        for v in range(taps_c):
+            window = x_ref[:, u : u + ho, v : v + wo, :]
+            lhs = window.reshape(b * ho * wo, cin)
+            acc = acc + jnp.dot(
+                lhs, k_ref[u, v, :, :], preferred_element_type=jnp.float32
+            )
+    o_ref[...] = acc.reshape(b, ho, wo, cout)
+
+
+def phase_conv(x_slab: jnp.ndarray, sub: jnp.ndarray) -> jnp.ndarray:
+    """Run the Pallas phase kernel: VALID correlation of slab × sub-kernel."""
+    b, hs, ws, cin = x_slab.shape
+    kr, kc, _, cout = sub.shape
+    ho, wo = hs - kr + 1, ws - kc + 1
+    return pl.pallas_call(
+        partial(_phase_conv_kernel, taps_r=kr, taps_c=kc),
+        out_shape=jax.ShapeDtypeStruct((b, ho, wo, cout), jnp.float32),
+        interpret=True,
+    )(x_slab, sub)
+
+
+def _phase_geometry(n: int, nk: int, padding: int, ho: int):
+    """Static slab/sub-kernel geometry for the four output parities.
+
+    Yields ``(rp, sp, sub_index, pads, crops, n_rows, n_cols)`` where
+    ``sub_index`` picks from ``segregate_kernel``'s (k00,k01,k10,k11)
+    and the slab is ``pad(x)[lo:hi]`` per axis.
+    """
+    out = []
+    for rp in (0, 1):
+        for sp in (0, 1):
+            r, s = (rp + padding) % 2, (sp + padding) % 2
+            kr = math.ceil(nk / 2) if r == 0 else nk // 2
+            kc = math.ceil(nk / 2) if s == 0 else nk // 2
+            n_rows = len(range(rp, ho, 2))
+            n_cols = len(range(sp, ho, 2))
+            if n_rows == 0 or n_cols == 0 or kr == 0 or kc == 0:
+                continue
+            base0_r = math.ceil((rp - padding) / 2)
+            base0_c = math.ceil((sp - padding) / 2)
+            lo_r, hi_r = base0_r, base0_r + n_rows - 1 + kr - 1
+            lo_c, hi_c = base0_c, base0_c + n_cols - 1 + kc - 1
+            pad_lo_r, pad_hi_r = max(0, -lo_r), max(0, hi_r - (n - 1))
+            pad_lo_c, pad_hi_c = max(0, -lo_c), max(0, hi_c - (n - 1))
+            out.append(
+                dict(
+                    rp=rp,
+                    sp=sp,
+                    sub=2 * r + s,
+                    pads=((pad_lo_r, pad_hi_r), (pad_lo_c, pad_hi_c)),
+                    rows=(lo_r + pad_lo_r, hi_r + pad_lo_r + 1),
+                    cols=(lo_c + pad_lo_c, hi_c + pad_lo_c + 1),
+                )
+            )
+    return out
+
+
+def unified_transpose_conv(
+    x: jnp.ndarray, k: jnp.ndarray, padding: int = 0
+) -> jnp.ndarray:
+    """Unified kernel-segregated transpose convolution (Algorithm 2).
+
+    ``x``: [B, N, N, Cin] (or unbatched [N, N, Cin]),
+    ``k``: [n, n, Cin, Cout] original (un-segregated) kernel,
+    ``padding``: the conventional padding factor ``P``; the proposed
+    path pads the raw input by ``⌊P/2⌋``-derived amounts and, for odd
+    ``P``, swaps sub-kernel roles (§3.4) — both fall out of the
+    geometry computation.
+
+    Returns [B, 2N+2P-n, 2N+2P-n, Cout].
+    """
+    batched = x.ndim == 4
+    if not batched:
+        x = x[None]
+    b, n, _, _ = x.shape
+    nk = k.shape[0]
+    cout = k.shape[3]
+    ho = ref.output_size(n, nk, padding)
+    subs = ref.segregate_kernel(k)
+
+    out = jnp.zeros((b, ho, ho, cout), jnp.float32)
+    for g in _phase_geometry(n, nk, padding, ho):
+        (plr, phr), (plc, phc) = g["pads"]
+        slab = jnp.pad(x, [(0, 0), (plr, phr), (plc, phc), (0, 0)])
+        slab = slab[:, g["rows"][0] : g["rows"][1], g["cols"][0] : g["cols"][1], :]
+        phase = phase_conv(slab, subs[g["sub"]])
+        out = out.at[:, g["rp"] :: 2, g["sp"] :: 2, :].set(phase)
+    return out if batched else out[0]
+
+
+def conventional_transpose_conv_pallas(
+    x: jnp.ndarray, k: jnp.ndarray, padding: int = 0
+) -> jnp.ndarray:
+    """Algorithm 1 as a Pallas kernel (baseline for kernel-vs-kernel
+    comparisons): bed-of-nails upsample then one dense correlation whose
+    tap loop runs over the FULL ``n×n`` kernel — i.e. it performs the
+    wasted multiply-by-zero work the paper eliminates."""
+    batched = x.ndim == 4
+    if not batched:
+        x = x[None]
+    up = ref.upsample_bed_of_nails(x)
+    if padding:
+        up = jnp.pad(up, [(0, 0), (padding, padding), (padding, padding), (0, 0)])
+    out = phase_conv(up, k)  # same shift-and-matmul kernel, full kernel
+    return out if batched else out[0]

@@ -1,0 +1,131 @@
+"""L2: GAN generator models in JAX, built on the L1 unified kernel.
+
+The paper's ablation (Table 4) times the transpose-convolution layers of
+DC-GAN/DiscoGAN, ArtGAN, GP-GAN and EB-GAN.  This module defines those
+generators as JAX functions whose every ConvTranspose layer calls
+``kernels.unified.unified_transpose_conv`` (the Pallas kernel), so the
+whole generator lowers into a single HLO module for the Rust runtime.
+
+Weights are *arguments*, not baked constants — keeps the HLO text small
+and lets the Rust side own weight initialization.  Layer geometry is the
+standard GAN generator block ``ConvTranspose2d(k=4, s=2, p=1)``, i.e.
+paper padding factor ``P = k - 1 - p = 2`` (doubles spatial size).
+"""
+
+from __future__ import annotations
+
+from dataclasses import dataclass
+
+import jax
+import jax.numpy as jnp
+
+from .kernels import ref
+from .kernels import unified as uk
+
+
+@dataclass(frozen=True)
+class LayerSpec:
+    """One transpose-conv layer of a generator (a Table 4 row)."""
+
+    n_in: int  # input spatial size (square)
+    cin: int
+    cout: int
+    ksize: int = 4
+    padding: int = 2  # paper's P (upsampled-map framing)
+
+    @property
+    def n_out(self) -> int:
+        return ref.output_size(self.n_in, self.ksize, self.padding)
+
+
+# Layer tables transcribed from Table 4.  The ArtGAN "4×4×246×128" kernel
+# is a typo in the paper for 256→128 input channels; we keep the input
+# sizes column as ground truth (16×16×128 → cin=128).
+GAN_ZOO: dict[str, list[LayerSpec]] = {
+    "dcgan": [
+        LayerSpec(4, 1024, 512),
+        LayerSpec(8, 512, 256),
+        LayerSpec(16, 256, 128),
+        LayerSpec(32, 128, 3),
+    ],
+    "artgan": [
+        LayerSpec(4, 512, 256),
+        LayerSpec(8, 256, 128),
+        LayerSpec(16, 128, 128),
+        LayerSpec(32, 128, 3),
+    ],
+    "gpgan": [
+        LayerSpec(4, 512, 256),
+        LayerSpec(8, 256, 128),
+        LayerSpec(16, 128, 64),
+        LayerSpec(32, 64, 3),
+    ],
+    "ebgan": [
+        LayerSpec(4, 2048, 1024),
+        LayerSpec(8, 1024, 512),
+        LayerSpec(16, 512, 256),
+        LayerSpec(32, 256, 128),
+        LayerSpec(64, 128, 64),
+        LayerSpec(128, 64, 64),
+    ],
+}
+
+Z_DIM = 100
+
+
+def weight_shapes(model: str) -> list[tuple[int, ...]]:
+    """Argument shapes (after z) for ``generator_fwd``: projection w/b then
+    per-layer kernel/bias pairs.  Mirrored into the artifact manifest."""
+    layers = GAN_ZOO[model]
+    c0 = layers[0].cin
+    n0 = layers[0].n_in
+    shapes: list[tuple[int, ...]] = [(Z_DIM, n0 * n0 * c0), (n0 * n0 * c0,)]
+    for l in layers:
+        shapes.append((l.ksize, l.ksize, l.cin, l.cout))
+        shapes.append((l.cout,))
+    return shapes
+
+
+def generator_fwd(model: str, z: jnp.ndarray, *params: jnp.ndarray) -> jnp.ndarray:
+    """Full generator forward: z [B, Z_DIM] → image [B, H, W, C_last].
+
+    Projection (dense) → reshape 4×4 → N unified transpose-conv blocks
+    with ReLU, tanh on the last.  Every conv is the L1 Pallas kernel.
+    """
+    layers = GAN_ZOO[model]
+    c0, n0 = layers[0].cin, layers[0].n_in
+    proj_w, proj_b = params[0], params[1]
+    b = z.shape[0]
+    x = (z @ proj_w + proj_b).reshape(b, n0, n0, c0)
+    x = jax.nn.relu(x)
+    for i, spec in enumerate(layers):
+        kw, kb = params[2 + 2 * i], params[3 + 2 * i]
+        x = uk.unified_transpose_conv(x, kw, padding=spec.padding) + kb
+        x = jnp.tanh(x) if i == len(layers) - 1 else jax.nn.relu(x)
+    return x
+
+
+def single_layer_fwd(
+    x: jnp.ndarray, k: jnp.ndarray, *, padding: int = 2
+) -> jnp.ndarray:
+    """One unified transpose-conv layer — the runtime smoke-test artifact."""
+    return uk.unified_transpose_conv(x, k, padding=padding)
+
+
+def single_layer_conventional_fwd(
+    x: jnp.ndarray, k: jnp.ndarray, *, padding: int = 2
+) -> jnp.ndarray:
+    """Algorithm-1 baseline layer (artifact for runtime A/B comparisons)."""
+    return uk.conventional_transpose_conv_pallas(x, k, padding=padding)
+
+
+def init_params(model: str, seed: int = 0) -> list[jnp.ndarray]:
+    """He-style random init matching ``weight_shapes`` (testing aid)."""
+    key = jax.random.PRNGKey(seed)
+    params = []
+    for shape in weight_shapes(model):
+        key, sub = jax.random.split(key)
+        fan_in = shape[0] if len(shape) > 1 else 1
+        scale = 1.0 / jnp.sqrt(jnp.maximum(1.0, fan_in))
+        params.append(scale * jax.random.normal(sub, shape, jnp.float32))
+    return params

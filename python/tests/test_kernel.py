@@ -1,0 +1,168 @@
+"""L1 correctness: Pallas unified kernel vs the pure-jnp oracle.
+
+This is the CORE correctness signal of the build path — every shape,
+padding and dtype combination exercised here is a configuration the Rust
+runtime may ship as an artifact.
+"""
+
+import math
+
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from compile.kernels import ref, unified
+
+RNG = np.random.default_rng(7)
+
+
+def _rand(*shape):
+    return jnp.asarray(RNG.standard_normal(shape), jnp.float32)
+
+
+def _assert_close(a, b, tol=2e-4):
+    np.testing.assert_allclose(np.asarray(a), np.asarray(b), atol=tol, rtol=tol)
+
+
+# ---------------------------------------------------------------- fixtures
+
+CASES = [
+    # (n_in, n_k, padding) — paper configurations + edge cases
+    (4, 5, 2),  # Fig. 5/6 worked example
+    (4, 4, 2),  # GAN layer geometry (k=4, s=2, p=1 → P=2)
+    (4, 3, 1),
+    (5, 3, 0),
+    (5, 5, 2),
+    (6, 4, 1),
+    (7, 5, 3),  # odd P → §3.4 sub-kernel role swap
+    (3, 3, 2),
+    (8, 4, 2),
+    (1, 3, 2),  # degenerate 1×1 input
+    (2, 2, 0),  # minimal even kernel
+]
+
+
+@pytest.mark.parametrize("n_in,n_k,pad", CASES)
+def test_unified_pallas_matches_oracle(n_in, n_k, pad):
+    x = _rand(n_in, n_in, 3)
+    k = _rand(n_k, n_k, 3, 2)
+    _assert_close(
+        unified.unified_transpose_conv(x, k, pad),
+        ref.conventional_transpose_conv(x, k, pad),
+    )
+
+
+@pytest.mark.parametrize("n_in,n_k,pad", CASES)
+def test_conventional_pallas_matches_oracle(n_in, n_k, pad):
+    x = _rand(n_in, n_in, 2)
+    k = _rand(n_k, n_k, 2, 2)
+    _assert_close(
+        unified.conventional_transpose_conv_pallas(x, k, pad),
+        ref.conventional_transpose_conv(x, k, pad),
+    )
+
+
+@pytest.mark.parametrize("batch", [1, 2, 5])
+def test_batched(batch):
+    x = _rand(batch, 4, 4, 3)
+    k = _rand(4, 4, 3, 2)
+    got = unified.unified_transpose_conv(x, k, 2)
+    want = ref.conventional_transpose_conv(x, k, 2)
+    assert got.shape == (batch, 8, 8, 2)
+    _assert_close(got, want)
+
+
+def test_unified_ref_matches_conventional_ref():
+    x = _rand(6, 6, 4)
+    k = _rand(5, 5, 4, 3)
+    _assert_close(
+        ref.unified_transpose_conv_ref(x, k, 2),
+        ref.conventional_transpose_conv(x, k, 2),
+    )
+
+
+# ------------------------------------------------------------ segregation
+
+
+def test_segregation_sizes_5x5():
+    """Fig. 4: a 5×5 kernel segregates into 9/6/6/4-element sub-kernels."""
+    k = _rand(5, 5, 1, 1)
+    k00, k01, k10, k11 = ref.segregate_kernel(k)
+    assert k00.shape[:2] == (3, 3)
+    assert k01.shape[:2] == (3, 2)
+    assert k10.shape[:2] == (2, 3)
+    assert k11.shape[:2] == (2, 2)
+
+
+@pytest.mark.parametrize("n_k", [2, 3, 4, 5, 6, 7])
+def test_segregation_partitions_kernel(n_k):
+    """The four sub-kernels partition the original kernel's elements."""
+    k = _rand(n_k, n_k, 1, 1)
+    subs = ref.segregate_kernel(k)
+    total = sum(s.shape[0] * s.shape[1] for s in subs)
+    assert total == n_k * n_k
+    ceil, floor = math.ceil(n_k / 2), n_k // 2
+    assert subs[0].shape[:2] == (ceil, ceil)
+    assert subs[1].shape[:2] == (ceil, floor)
+    assert subs[2].shape[:2] == (floor, ceil)
+    assert subs[3].shape[:2] == (floor, floor)
+
+
+def test_output_size_formula():
+    assert ref.output_size(4, 5, 2) == 7  # Fig. 5 worked example
+    assert ref.output_size(4, 4, 2) == 8  # GAN doubling layer
+    assert ref.output_size(224, 3, 1) == 447
+
+
+# ------------------------------------------------------------ flop model
+
+
+@pytest.mark.parametrize("n_in,n_k,pad", [(4, 4, 2), (8, 5, 2), (16, 3, 1)])
+def test_flops_unified_about_quarter(n_in, n_k, pad):
+    """Exact optimization skips ~3/4 of multiplications (paper §3.1:
+    '25 multiplications ... to produce four output elements')."""
+    conv = ref.flops_conventional(n_in, n_k, pad, 1, 1)
+    uni = ref.flops_unified(n_in, n_k, pad, 1, 1)
+    assert uni * 3 < conv  # strictly better than 3×
+    assert conv <= uni * 5  # and not better than the ideal ~4× by much
+
+
+# ----------------------------------------------------------- hypothesis
+
+shape_strategy = st.tuples(
+    st.integers(min_value=1, max_value=7),  # n_in
+    st.integers(min_value=2, max_value=6),  # n_k
+    st.integers(min_value=0, max_value=3),  # padding
+    st.integers(min_value=1, max_value=4),  # cin
+    st.integers(min_value=1, max_value=3),  # cout
+).filter(lambda t: 2 * t[0] + 2 * t[2] - t[1] > 0)
+
+
+@settings(max_examples=40, deadline=None)
+@given(shape_strategy, st.integers(min_value=0, max_value=2**31 - 1))
+def test_unified_matches_oracle_property(cfg, seed):
+    """Property sweep: ∀ (N, n, P, Cin, Cout) the Pallas unified kernel
+    equals Algorithm 1 up to float tolerance."""
+    n_in, n_k, pad, cin, cout = cfg
+    rng = np.random.default_rng(seed)
+    x = jnp.asarray(rng.standard_normal((n_in, n_in, cin)), jnp.float32)
+    k = jnp.asarray(rng.standard_normal((n_k, n_k, cin, cout)), jnp.float32)
+    _assert_close(
+        unified.unified_transpose_conv(x, k, pad),
+        ref.conventional_transpose_conv(x, k, pad),
+    )
+
+
+@settings(max_examples=20, deadline=None)
+@given(
+    st.integers(min_value=2, max_value=7),
+    st.integers(min_value=0, max_value=3),
+)
+def test_flop_model_consistency(n_k, pad):
+    """FLOP model: unified counts exactly the non-zero taps; it is never
+    more than the conventional count and always positive."""
+    n_in = 5
+    conv = ref.flops_conventional(n_in, n_k, pad, 2, 3)
+    uni = ref.flops_unified(n_in, n_k, pad, 2, 3)
+    assert 0 < uni <= conv

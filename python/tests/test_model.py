@@ -1,0 +1,132 @@
+"""L2 correctness: generator shapes, zoo geometry, AOT manifest sanity."""
+
+import json
+import os
+
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from compile import model as M
+from compile.kernels import ref
+
+RNG = np.random.default_rng(11)
+
+
+# -------------------------------------------------------------- zoo geometry
+
+
+@pytest.mark.parametrize("name", list(M.GAN_ZOO))
+def test_zoo_layers_chain(name):
+    """Each layer's output size/channels feed the next layer (Table 4)."""
+    layers = M.GAN_ZOO[name]
+    for a, b in zip(layers, layers[1:]):
+        assert a.n_out == b.n_in, (name, a, b)
+        assert a.cout == b.cin, (name, a, b)
+
+
+def test_zoo_matches_table4_shapes():
+    assert [l.n_in for l in M.GAN_ZOO["dcgan"]] == [4, 8, 16, 32]
+    assert [l.cin for l in M.GAN_ZOO["dcgan"]] == [1024, 512, 256, 128]
+    assert M.GAN_ZOO["dcgan"][-1].cout == 3
+    assert [l.n_in for l in M.GAN_ZOO["ebgan"]] == [4, 8, 16, 32, 64, 128]
+    assert M.GAN_ZOO["ebgan"][0].cin == 2048
+    assert M.GAN_ZOO["ebgan"][-1].cout == 64
+
+
+def test_gan_layer_doubles_spatial():
+    """k=4, P=2 (the zoo default) is the standard 2× upsampling block."""
+    spec = M.LayerSpec(16, 8, 4)
+    assert spec.n_out == 32
+
+
+# ------------------------------------------------------------- generator fwd
+
+
+def _tiny_zoo(monkeypatch):
+    """Shrink channel counts so the full forward runs in milliseconds."""
+    tiny = {
+        "tiny": [
+            M.LayerSpec(4, 8, 6),
+            M.LayerSpec(8, 6, 4),
+            M.LayerSpec(16, 4, 3),
+        ]
+    }
+    monkeypatch.setitem(M.GAN_ZOO, "tiny", tiny["tiny"])
+
+
+def test_generator_fwd_shape(monkeypatch):
+    _tiny_zoo(monkeypatch)
+    params = M.init_params("tiny", seed=3)
+    z = jnp.asarray(RNG.standard_normal((2, M.Z_DIM)), jnp.float32)
+    img = M.generator_fwd("tiny", z, *params)
+    assert img.shape == (2, 32, 32, 3)
+    assert np.all(np.abs(np.asarray(img)) <= 1.0)  # tanh range
+
+
+def test_generator_deterministic(monkeypatch):
+    _tiny_zoo(monkeypatch)
+    params = M.init_params("tiny", seed=3)
+    z = jnp.asarray(RNG.standard_normal((1, M.Z_DIM)), jnp.float32)
+    a = M.generator_fwd("tiny", z, *params)
+    b = M.generator_fwd("tiny", z, *params)
+    np.testing.assert_array_equal(np.asarray(a), np.asarray(b))
+
+
+def test_weight_shapes_consistent():
+    shapes = M.weight_shapes("dcgan")
+    # projection w/b + 4 × (kernel, bias)
+    assert len(shapes) == 2 + 2 * 4
+    assert shapes[0] == (M.Z_DIM, 4 * 4 * 1024)
+    assert shapes[2] == (4, 4, 1024, 512)
+    assert shapes[-1] == (3,)
+
+
+def test_single_layer_fwd_matches_oracle():
+    x = jnp.asarray(RNG.standard_normal((1, 8, 8, 8)), jnp.float32)
+    k = jnp.asarray(RNG.standard_normal((4, 4, 8, 4)), jnp.float32)
+    got = M.single_layer_fwd(x, k, padding=2)
+    want = ref.conventional_transpose_conv(x, k, 2)
+    np.testing.assert_allclose(
+        np.asarray(got), np.asarray(want), atol=2e-4, rtol=2e-4
+    )
+
+
+# ----------------------------------------------------------------- manifest
+
+ARTIFACTS = os.path.join(os.path.dirname(__file__), "..", "..", "artifacts")
+
+
+@pytest.mark.skipif(
+    not os.path.exists(os.path.join(ARTIFACTS, "manifest.json")),
+    reason="run `make artifacts` first",
+)
+def test_manifest_artifacts_exist():
+    with open(os.path.join(ARTIFACTS, "manifest.json")) as f:
+        manifest = json.load(f)
+    assert manifest["version"] == 1
+    names = {a["name"] for a in manifest["artifacts"]}
+    assert {"unified_layer_s8", "conv_layer_s8"} <= names
+    for art in manifest["artifacts"]:
+        path = os.path.join(ARTIFACTS, art["path"])
+        assert os.path.exists(path), art["path"]
+        head = open(path).read(200)
+        assert "HloModule" in head  # HLO text, not proto
+        assert art["output_shape"]
+        assert all(i["shape"] for i in art["inputs"])
+
+
+@pytest.mark.skipif(
+    not os.path.exists(os.path.join(ARTIFACTS, "golden.json")),
+    reason="run `make artifacts` first",
+)
+def test_golden_vectors_shapes():
+    with open(os.path.join(ARTIFACTS, "golden.json")) as f:
+        golden = json.load(f)
+    assert len(golden["cases"]) >= 8
+    for c in golden["cases"]:
+        assert len(c["x"]) == c["n_in"] ** 2 * c["cin"]
+        assert len(c["k"]) == c["n_k"] ** 2 * c["cin"] * c["cout"]
+        ho = 2 * c["n_in"] + 2 * c["padding"] - c["n_k"]
+        assert c["out_shape"] == [ho, ho, c["cout"]]
+        assert len(c["out"]) == ho * ho * c["cout"]

@@ -1,0 +1,20 @@
+//! `cargo bench --bench ablation` — design-choice ablations beyond the
+//! paper's tables: formulation (phase vs per-element vs grouped), GEMM
+//! routes (§5 discussion), zero-skip baseline honesty check, dilated
+//! convolution (§5 future work), and parallel-lane scaling.
+
+use ukstc::bench::{ablation, BenchConfig};
+
+fn main() {
+    let iters = std::env::var("UKSTC_BENCH_ITERS")
+        .ok()
+        .and_then(|v| v.parse().ok())
+        .unwrap_or(3);
+    let cfg = BenchConfig {
+        iters,
+        warmup: 1,
+        ..Default::default()
+    };
+    eprintln!("ablation: iters={} workers={}", cfg.iters, cfg.workers);
+    ablation::run_all(&cfg);
+}

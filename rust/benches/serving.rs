@@ -1,0 +1,31 @@
+//! `cargo bench --bench serving` — end-to-end serving A/B: identical
+//! coordinator (router + dynamic batcher + worker pool), backend kernel
+//! switched between unified (proposed) and conventional (baseline).
+
+use ukstc::bench::serving::{print_ab, run_ab, ServingConfig};
+use ukstc::models::GanModel;
+
+fn main() {
+    let requests = std::env::var("UKSTC_BENCH_REQUESTS")
+        .ok()
+        .and_then(|v| v.parse().ok())
+        .unwrap_or(24);
+    let model = std::env::var("UKSTC_BENCH_MODEL")
+        .ok()
+        .and_then(|v| GanModel::from_name(&v))
+        .unwrap_or(GanModel::GpGan);
+    let cfg = ServingConfig {
+        model,
+        requests,
+        ..Default::default()
+    };
+    eprintln!(
+        "serving A/B: model={} requests={} workers={} max_batch={}",
+        cfg.model.name(),
+        cfg.requests,
+        cfg.workers_per_model,
+        cfg.max_batch
+    );
+    let (unified, conventional) = run_ab(&cfg).expect("serving run");
+    print_ab(&unified, &conventional);
+}

@@ -1,0 +1,32 @@
+//! `cargo bench --bench table2_flowers` — regenerates paper Table 2:
+//! the Flower dataset sweep (5 groups × kernels 5/4/3, conventional vs
+//! proposed, serial "CPU" + parallel "GPU" lanes, memory savings).
+//!
+//! Env overrides: `UKSTC_BENCH_SCALE` (default 0.02),
+//! `UKSTC_BENCH_ITERS` (default 2), `UKSTC_BENCH_SIZE` (default 224).
+
+use ukstc::bench::{table2, BenchConfig};
+use ukstc::workload::datasets::{FLOWER_GROUPS, IMAGE_SIZE};
+
+fn env_f64(key: &str, default: f64) -> f64 {
+    std::env::var(key).ok().and_then(|v| v.parse().ok()).unwrap_or(default)
+}
+
+fn env_usize(key: &str, default: usize) -> usize {
+    std::env::var(key).ok().and_then(|v| v.parse().ok()).unwrap_or(default)
+}
+
+fn main() {
+    let cfg = BenchConfig {
+        scale: env_f64("UKSTC_BENCH_SCALE", 0.02),
+        iters: env_usize("UKSTC_BENCH_ITERS", 2),
+        ..Default::default()
+    };
+    let size = env_usize("UKSTC_BENCH_SIZE", IMAGE_SIZE);
+    eprintln!(
+        "table2: scale={} iters={} workers={} image={size}px (totals extrapolated to full Table 1 counts)",
+        cfg.scale, cfg.iters, cfg.workers
+    );
+    let rows = table2::run_sweep(&FLOWER_GROUPS, &cfg, size);
+    table2::print_rows("Table 2 — Flower dataset (conventional vs proposed)", &rows);
+}

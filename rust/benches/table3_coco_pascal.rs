@@ -1,0 +1,32 @@
+//! `cargo bench --bench table3_coco_pascal` — regenerates paper
+//! Table 3: MSCOCO 2017 (10% subset) + PASCAL VOC 2012 sweeps.
+//!
+//! Same protocol and env overrides as table2_flowers.
+
+use ukstc::bench::{table3, BenchConfig};
+use ukstc::workload::datasets::IMAGE_SIZE;
+
+fn env_f64(key: &str, default: f64) -> f64 {
+    std::env::var(key).ok().and_then(|v| v.parse().ok()).unwrap_or(default)
+}
+
+fn env_usize(key: &str, default: usize) -> usize {
+    std::env::var(key).ok().and_then(|v| v.parse().ok()).unwrap_or(default)
+}
+
+fn main() {
+    let cfg = BenchConfig {
+        // The Table 3 datasets are 10-20× larger than the flower groups;
+        // a smaller default scale keeps the run comparable.
+        scale: env_f64("UKSTC_BENCH_SCALE", 0.004),
+        iters: env_usize("UKSTC_BENCH_ITERS", 2),
+        ..Default::default()
+    };
+    let size = env_usize("UKSTC_BENCH_SIZE", IMAGE_SIZE);
+    eprintln!(
+        "table3: scale={} iters={} workers={} image={size}px",
+        cfg.scale, cfg.iters, cfg.workers
+    );
+    let rows = table3::run_sweep(&cfg, size);
+    table3::print_rows(&rows);
+}

@@ -1,0 +1,42 @@
+//! `cargo bench --bench table4_gans` — regenerates paper Table 4:
+//! per-layer transpose-conv ablation for DC-GAN/DiscoGAN, ArtGAN,
+//! GP-GAN and EB-GAN, with exact memory-savings bytes.
+//!
+//! Env overrides: `UKSTC_BENCH_ITERS` (default 2), `UKSTC_BENCH_MODELS`
+//! (comma list, default all).
+
+use ukstc::bench::{table4, BenchConfig};
+use ukstc::models::GanModel;
+
+fn main() {
+    let iters = std::env::var("UKSTC_BENCH_ITERS")
+        .ok()
+        .and_then(|v| v.parse().ok())
+        .unwrap_or(2);
+    let cfg = BenchConfig {
+        iters,
+        ..Default::default()
+    };
+    let models: Vec<GanModel> = match std::env::var("UKSTC_BENCH_MODELS") {
+        Ok(list) => list
+            .split(',')
+            .filter_map(GanModel::from_name)
+            .collect(),
+        Err(_) => GanModel::all().to_vec(),
+    };
+    eprintln!("table4: iters={} workers={} models={:?}", cfg.iters, cfg.workers, models.iter().map(|m| m.name()).collect::<Vec<_>>());
+    let mut ser = Vec::new();
+    let mut par = Vec::new();
+    for m in models {
+        let res = table4::measure_model(m, &cfg);
+        table4::print_model(&res);
+        ser.push(res.speedup_ser());
+        par.push(res.speedup_par());
+    }
+    println!(
+        "\n=== §4.3 summary: mean speedup parallel {:.3}× / serial {:.3}× \
+         (paper: ~3× GPU / ~4.2× CPU average) ===",
+        ukstc::bench::mean(&par),
+        ukstc::bench::mean(&ser)
+    );
+}

@@ -1,0 +1,210 @@
+//! Design-choice ablations beyond the paper's tables (DESIGN.md §6):
+//!
+//! 1. **Formulation**: phase-decomposed unified vs literal per-element
+//!    Algorithm 2 vs grouped (HICSS'23) on odd-output layers — isolates
+//!    the cost of runtime sub-kernel selection and the prior work's
+//!    extra-element waste.
+//! 2. **GEMM route** (§5 discussion): im2col conventional vs segregated
+//!    GEMM vs direct unified — quantifies the re-arrangement overhead
+//!    the paper predicts.
+//! 3. **Zero-skip baseline**: how much of the win a branchy CPU
+//!    baseline recovers (honesty check on the conventional baseline).
+//! 4. **Dilated convolution** (§5 future work): naive vs
+//!    segregated-input.
+
+use crate::conv::parallel::{run, Algorithm, Lane};
+use crate::conv::{conventional, dilated, im2col, unified};
+use crate::tensor::{Feature, Kernel};
+use crate::util::rng::Rng;
+use crate::util::timing;
+
+use super::{report, BenchConfig};
+
+/// A named measurement in seconds.
+#[derive(Debug, Clone)]
+pub struct Entry {
+    pub name: String,
+    pub seconds: f64,
+}
+
+fn time_it(cfg: &BenchConfig, f: impl FnMut() -> Feature) -> f64 {
+    timing::measure(cfg.warmup, cfg.iters.max(2), f).median()
+}
+
+/// Ablation 1: formulation comparison on an odd-output configuration
+/// (input 112×112×8, kernel 5×5, P=2 → 223×223 output, odd).
+pub fn formulation(cfg: &BenchConfig) -> Vec<Entry> {
+    let mut rng = Rng::seeded(0xF0);
+    let x = Feature::random(112, 112, 8, &mut rng);
+    let k = Kernel::random(5, 8, 4, &mut rng);
+    let p = 2;
+    vec![
+        Entry {
+            name: "conventional (Alg.1)".into(),
+            seconds: time_it(cfg, || run(Algorithm::Conventional, Lane::Serial, &x, &k, p)),
+        },
+        Entry {
+            name: "grouped (HICSS'23, extra elements)".into(),
+            seconds: time_it(cfg, || run(Algorithm::Grouped, Lane::Serial, &x, &k, p)),
+        },
+        Entry {
+            name: "unified per-element (Alg.2 literal)".into(),
+            seconds: time_it(cfg, || {
+                run(Algorithm::UnifiedPerElement, Lane::Serial, &x, &k, p)
+            }),
+        },
+        Entry {
+            name: "unified phase-decomposed (hot path)".into(),
+            seconds: time_it(cfg, || run(Algorithm::Unified, Lane::Serial, &x, &k, p)),
+        },
+    ]
+}
+
+/// Ablation 2: GEMM routes (§5).
+pub fn gemm_routes(cfg: &BenchConfig) -> Vec<Entry> {
+    let mut rng = Rng::seeded(0xF1);
+    let x = Feature::random(56, 56, 16, &mut rng);
+    let k = Kernel::random(4, 16, 8, &mut rng);
+    let p = 2;
+    vec![
+        Entry {
+            name: "im2col conventional GEMM".into(),
+            seconds: time_it(cfg, || im2col::transpose_conv(&x, &k, p)),
+        },
+        Entry {
+            name: "segregated GEMM + rearrange (§5)".into(),
+            seconds: time_it(cfg, || im2col::transpose_conv_segregated_gemm(&x, &k, p).0),
+        },
+        Entry {
+            name: "unified direct (no GEMM)".into(),
+            seconds: time_it(cfg, || unified::transpose_conv(&x, &k, p)),
+        },
+    ]
+}
+
+/// Ablation 3: zero-skip branchy baseline vs dense vs unified.
+pub fn zero_skip(cfg: &BenchConfig) -> Vec<Entry> {
+    let mut rng = Rng::seeded(0xF2);
+    let x = Feature::random(112, 112, 3, &mut rng);
+    let k = Kernel::random(5, 3, 1, &mut rng);
+    let p = 2;
+    vec![
+        Entry {
+            name: "conventional dense".into(),
+            seconds: time_it(cfg, || conventional::transpose_conv(&x, &k, p)),
+        },
+        Entry {
+            name: "conventional + zero-skip branch".into(),
+            seconds: time_it(cfg, || conventional::transpose_conv_zeroskip(&x, &k, p)),
+        },
+        Entry {
+            name: "unified".into(),
+            seconds: time_it(cfg, || unified::transpose_conv(&x, &k, p)),
+        },
+    ]
+}
+
+/// Ablation 4: dilated conv, naive vs segregated-input (§5 future work).
+pub fn dilated_routes(cfg: &BenchConfig) -> Vec<Entry> {
+    let mut rng = Rng::seeded(0xF3);
+    let x = Feature::random(128, 128, 8, &mut rng);
+    let k = Kernel::random(3, 8, 8, &mut rng);
+    vec![
+        Entry {
+            name: "dilated naive (upsampled kernel)".into(),
+            seconds: time_it(cfg, || dilated::dilated_conv_naive(&x, &k)),
+        },
+        Entry {
+            name: "dilated segregated-input (§5)".into(),
+            seconds: time_it(cfg, || dilated::dilated_conv_segregated(&x, &k)),
+        },
+    ]
+}
+
+/// Ablation 5: parallel-lane scaling of the unified kernel.
+pub fn lane_scaling(cfg: &BenchConfig) -> Vec<Entry> {
+    let mut rng = Rng::seeded(0xF4);
+    let x = Feature::random(112, 112, 8, &mut rng);
+    let k = Kernel::random(4, 8, 8, &mut rng);
+    let mut out = vec![Entry {
+        name: "serial".into(),
+        seconds: time_it(cfg, || run(Algorithm::Unified, Lane::Serial, &x, &k, 2)),
+    }];
+    for w in [2, 4, cfg.workers.max(2)] {
+        out.push(Entry {
+            name: format!("parallel({w})"),
+            seconds: time_it(cfg, || run(Algorithm::Unified, Lane::Parallel(w), &x, &k, 2)),
+        });
+    }
+    out
+}
+
+/// Print one ablation block with ratios relative to the first entry.
+pub fn print_entries(title: &str, entries: &[Entry]) {
+    let base = entries[0].seconds;
+    let rows: Vec<Vec<String>> = entries
+        .iter()
+        .map(|e| {
+            vec![
+                e.name.clone(),
+                timing::fmt_duration(e.seconds),
+                report::speedup(base / e.seconds),
+            ]
+        })
+        .collect();
+    report::print_table(title, &["variant", "time", "speedup vs first"], &rows);
+}
+
+/// Run and print every ablation.
+pub fn run_all(cfg: &BenchConfig) {
+    print_entries("Ablation 1 — formulation (odd 223×223 output)", &formulation(cfg));
+    print_entries("Ablation 2 — GEMM routes (§5 discussion)", &gemm_routes(cfg));
+    print_entries("Ablation 3 — zero-skip baseline honesty check", &zero_skip(cfg));
+    print_entries("Ablation 4 — dilated conv (§5 future work)", &dilated_routes(cfg));
+    print_entries("Ablation 5 — unified kernel lane scaling", &lane_scaling(cfg));
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn quick() -> BenchConfig {
+        BenchConfig {
+            scale: 1.0,
+            warmup: 0,
+            iters: 2,
+            workers: 2,
+        }
+    }
+
+    #[test]
+    fn formulation_entries_ordered_sanely() {
+        let e = formulation(&quick());
+        assert_eq!(e.len(), 4);
+        // Phase-decomposed must beat conventional comfortably.
+        assert!(e[3].seconds < e[0].seconds);
+    }
+
+    #[test]
+    fn dilated_segregated_wins() {
+        let e = dilated_routes(&quick());
+        assert!(e[1].seconds < e[0].seconds, "{e:?}");
+    }
+
+    #[test]
+    fn print_smoke() {
+        print_entries(
+            "smoke",
+            &[
+                Entry {
+                    name: "a".into(),
+                    seconds: 1.0,
+                },
+                Entry {
+                    name: "b".into(),
+                    seconds: 0.5,
+                },
+            ],
+        );
+    }
+}

@@ -1,0 +1,106 @@
+//! Benchmark harness: regenerates every table of the paper's
+//! evaluation (criterion is unavailable offline, so `cargo bench` runs
+//! these `harness = false` drivers; the same code backs the `ukstc`
+//! CLI subcommands).
+//!
+//! * [`report`] — markdown table printing
+//! * [`table2`] — Flower dataset sweep (paper Table 2)
+//! * [`table3`] — MSCOCO + PASCAL sweep (paper Table 3)
+//! * [`table4`] — GAN-layer ablation (paper Table 4)
+//! * [`ablation`] — design-choice ablations beyond the paper's tables
+//! * [`serving`] — coordinator throughput/latency A/B
+//!
+//! Measurement protocol: per-image cost is measured on a scaled sample
+//! subset (`BenchConfig::scale`) and extrapolated to the full Table 1
+//! sample counts — the computation is identical per image, so the
+//! extrapolation is exact up to scheduler noise, and speedup ratios are
+//! scale-invariant.
+
+pub mod ablation;
+pub mod report;
+pub mod serving;
+pub mod table2;
+pub mod table3;
+pub mod table4;
+
+use crate::util::threadpool;
+
+/// Common benchmark knobs.
+#[derive(Debug, Clone, Copy)]
+pub struct BenchConfig {
+    /// Fraction of each dataset's samples to actually time (≥ 1 image).
+    pub scale: f64,
+    /// Unrecorded warmup iterations per measurement.
+    pub warmup: usize,
+    /// Recorded iterations per measurement.
+    pub iters: usize,
+    /// Workers for the parallel lane (the paper's "GPU" column).
+    pub workers: usize,
+}
+
+impl Default for BenchConfig {
+    fn default() -> Self {
+        BenchConfig {
+            scale: 0.02,
+            warmup: 1,
+            iters: 2,
+            workers: threadpool::default_parallelism(),
+        }
+    }
+}
+
+impl BenchConfig {
+    /// Quick mode for CI / `cargo bench` smoke runs.
+    pub fn quick() -> Self {
+        BenchConfig {
+            scale: 0.005,
+            warmup: 0,
+            iters: 1,
+            ..Default::default()
+        }
+    }
+
+    /// Number of images to time for a group with `samples` total.
+    pub fn sample_count(&self, samples: usize) -> usize {
+        ((samples as f64 * self.scale).round() as usize).clamp(1, samples)
+    }
+}
+
+/// Geometric mean of speedups (the paper's "average speedup" is an
+/// arithmetic mean; we report both, geomean is the robust one).
+pub fn geomean(xs: &[f64]) -> f64 {
+    assert!(!xs.is_empty());
+    (xs.iter().map(|x| x.ln()).sum::<f64>() / xs.len() as f64).exp()
+}
+
+/// Arithmetic mean.
+pub fn mean(xs: &[f64]) -> f64 {
+    assert!(!xs.is_empty());
+    xs.iter().sum::<f64>() / xs.len() as f64
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn sample_count_clamps() {
+        let cfg = BenchConfig {
+            scale: 0.01,
+            ..Default::default()
+        };
+        assert_eq!(cfg.sample_count(734), 7);
+        assert_eq!(cfg.sample_count(10), 1); // min 1
+        let full = BenchConfig {
+            scale: 2.0,
+            ..Default::default()
+        };
+        assert_eq!(full.sample_count(10), 10); // max samples
+    }
+
+    #[test]
+    fn means() {
+        assert!((geomean(&[1.0, 4.0]) - 2.0).abs() < 1e-12);
+        assert!((mean(&[1.0, 3.0]) - 2.0).abs() < 1e-12);
+    }
+}

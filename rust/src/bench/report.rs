@@ -1,0 +1,86 @@
+//! Markdown table rendering for the bench harness.
+
+use std::fmt::Write as _;
+
+/// Render a markdown table with right-padded columns.
+pub fn render_table(headers: &[&str], rows: &[Vec<String>]) -> String {
+    let ncols = headers.len();
+    let mut widths: Vec<usize> = headers.iter().map(|h| h.len()).collect();
+    for row in rows {
+        assert_eq!(row.len(), ncols, "row arity mismatch");
+        for (w, cell) in widths.iter_mut().zip(row) {
+            *w = (*w).max(cell.len());
+        }
+    }
+    let mut out = String::new();
+    let write_row = |out: &mut String, cells: &[String]| {
+        let _ = write!(out, "|");
+        for (w, cell) in widths.iter().zip(cells) {
+            let _ = write!(out, " {cell:<w$} |");
+        }
+        let _ = writeln!(out);
+    };
+    write_row(
+        &mut out,
+        &headers.iter().map(|h| h.to_string()).collect::<Vec<_>>(),
+    );
+    let _ = write!(out, "|");
+    for w in &widths {
+        let _ = write!(out, "{:-<1$}|", "", w + 2);
+    }
+    let _ = writeln!(out);
+    for row in rows {
+        write_row(&mut out, row);
+    }
+    out
+}
+
+/// Print a titled table to stdout.
+pub fn print_table(title: &str, headers: &[&str], rows: &[Vec<String>]) {
+    println!("\n## {title}\n");
+    print!("{}", render_table(headers, rows));
+}
+
+/// Format seconds with 4 significant decimals (the paper's unit).
+pub fn secs(t: f64) -> String {
+    format!("{t:.4}")
+}
+
+/// Format a speedup ratio like the paper ("2.03×").
+pub fn speedup(r: f64) -> String {
+    format!("{r:.3}×")
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn renders_aligned() {
+        let t = render_table(
+            &["a", "long-header"],
+            &[
+                vec!["1".into(), "2".into()],
+                vec!["333".into(), "4".into()],
+            ],
+        );
+        let lines: Vec<&str> = t.lines().collect();
+        assert_eq!(lines.len(), 4);
+        assert!(lines[0].contains("long-header"));
+        // All lines same width.
+        assert_eq!(lines[0].len(), lines[2].len());
+        assert!(lines[1].starts_with("|--"));
+    }
+
+    #[test]
+    #[should_panic(expected = "row arity")]
+    fn arity_checked() {
+        render_table(&["a", "b"], &[vec!["1".into()]]);
+    }
+
+    #[test]
+    fn formatting() {
+        assert_eq!(secs(1.23456), "1.2346");
+        assert_eq!(speedup(2.034), "2.034×");
+    }
+}

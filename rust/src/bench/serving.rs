@@ -1,0 +1,153 @@
+//! Serving A/B bench: coordinator throughput/latency with the unified
+//! kernel vs the conventional baseline as the backend compute.
+//!
+//! This is the end-to-end claim check: the kernel-level ~4× FLOP
+//! reduction must translate into service-level throughput/latency wins
+//! when everything above it (router, batcher, workers) is identical.
+
+use std::sync::Arc;
+use std::time::Duration;
+
+use crate::conv::parallel::{Algorithm, Lane};
+use crate::coordinator::backend::RustBackend;
+use crate::coordinator::batcher::BatchPolicy;
+use crate::coordinator::metrics::Snapshot;
+use crate::coordinator::Coordinator;
+use crate::models::GanModel;
+use crate::util::rng::Rng;
+use crate::workload::generator::burst;
+
+/// Serving scenario knobs.
+#[derive(Debug, Clone, Copy)]
+pub struct ServingConfig {
+    pub model: GanModel,
+    pub requests: usize,
+    pub workers_per_model: usize,
+    pub lane_workers: usize,
+    pub max_batch: usize,
+    pub max_delay: Duration,
+    pub queue_capacity: usize,
+}
+
+impl Default for ServingConfig {
+    fn default() -> Self {
+        ServingConfig {
+            model: GanModel::GpGan,
+            requests: 24,
+            workers_per_model: 2,
+            lane_workers: 2,
+            max_batch: 8,
+            max_delay: Duration::from_millis(3),
+            queue_capacity: 512,
+        }
+    }
+}
+
+/// Result of one serving run.
+#[derive(Debug, Clone)]
+pub struct ServingResult {
+    pub algorithm: Algorithm,
+    pub wall_s: f64,
+    pub snapshot: Snapshot,
+}
+
+/// Run a closed-loop burst through a coordinator whose backend uses
+/// `alg` for every transpose conv.
+pub fn run_once(cfg: &ServingConfig, alg: Algorithm) -> anyhow::Result<ServingResult> {
+    let lane = if cfg.lane_workers <= 1 {
+        Lane::Serial
+    } else {
+        Lane::Parallel(cfg.lane_workers)
+    };
+    let backend = Arc::new(RustBackend::new(cfg.model, alg, lane, 77, cfg.max_batch));
+    let coord = Coordinator::builder()
+        .queue_capacity(cfg.queue_capacity)
+        .workers_per_model(cfg.workers_per_model)
+        .batch_policy(BatchPolicy {
+            max_batch: cfg.max_batch,
+            max_delay: cfg.max_delay,
+        })
+        .register(backend)
+        .start()?;
+
+    let mut rng = Rng::seeded(4242);
+    let reqs = burst(cfg.model.name(), 100, cfg.requests, &mut rng);
+    let t0 = std::time::Instant::now();
+    let rxs: Vec<_> = reqs
+        .into_iter()
+        .map(|r| coord.submit_blocking(r).expect("submit"))
+        .collect();
+    for rx in rxs {
+        rx.recv().expect("response");
+    }
+    let wall_s = t0.elapsed().as_secs_f64();
+    let snapshot = coord.metrics(cfg.model.name()).unwrap();
+    Ok(ServingResult {
+        algorithm: alg,
+        wall_s,
+        snapshot,
+    })
+}
+
+/// A/B the unified kernel against the conventional baseline.
+pub fn run_ab(cfg: &ServingConfig) -> anyhow::Result<(ServingResult, ServingResult)> {
+    let unified = run_once(cfg, Algorithm::Unified)?;
+    let conventional = run_once(cfg, Algorithm::Conventional)?;
+    Ok((unified, conventional))
+}
+
+/// Print the A/B comparison.
+pub fn print_ab(unified: &ServingResult, conventional: &ServingResult) {
+    use super::report;
+    let row = |r: &ServingResult| {
+        vec![
+            r.algorithm.name().to_string(),
+            format!("{:.3}", r.wall_s),
+            format!("{:.2}", r.snapshot.completed as f64 / r.wall_s),
+            format!("{:.1}", r.snapshot.total_p50_s * 1e3),
+            format!("{:.1}", r.snapshot.total_p95_s * 1e3),
+            format!("{:.2}", r.snapshot.mean_batch_size),
+        ]
+    };
+    report::print_table(
+        "Serving A/B — coordinator end-to-end",
+        &[
+            "backend kernel",
+            "wall (s)",
+            "thpt (img/s)",
+            "p50 (ms)",
+            "p95 (ms)",
+            "mean batch",
+        ],
+        &[row(unified), row(conventional)],
+    );
+    println!(
+        "\nend-to-end speedup (unified vs conventional): {:.3}×",
+        conventional.wall_s / unified.wall_s
+    );
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn serving_ab_unified_wins() {
+        let cfg = ServingConfig {
+            requests: 6,
+            workers_per_model: 1,
+            lane_workers: 1,
+            ..Default::default()
+        };
+        let (u, c) = run_ab(&cfg).unwrap();
+        assert_eq!(u.snapshot.completed, 6);
+        assert_eq!(c.snapshot.completed, 6);
+        // The unified backend must serve the burst faster.
+        assert!(
+            u.wall_s < c.wall_s,
+            "unified {:.3}s vs conventional {:.3}s",
+            u.wall_s,
+            c.wall_s
+        );
+    }
+}

@@ -1,0 +1,52 @@
+//! Table 3 regeneration: MSCOCO 2017 (10% subset) and PASCAL VOC 2012
+//! (classification + segmentation) — same protocol as Table 2, larger
+//! sample counts, no memory column in the paper (it equals Table 2's
+//! since the image geometry is identical; we print it anyway).
+
+use crate::workload::datasets::{DatasetGroup, TABLE3_GROUPS};
+
+use super::table2::{self, Row};
+use super::BenchConfig;
+
+/// Run the Table 3 sweep.
+pub fn run_sweep(cfg: &BenchConfig, image_size: usize) -> Vec<Row> {
+    table2::run_sweep(&TABLE3_GROUPS, cfg, image_size)
+}
+
+/// Run over a custom group list (used by the dataset_sweep example).
+pub fn run_sweep_groups(
+    groups: &[DatasetGroup],
+    cfg: &BenchConfig,
+    image_size: usize,
+) -> Vec<Row> {
+    table2::run_sweep(groups, cfg, image_size)
+}
+
+/// Print in the paper's Table 3 shape.
+pub fn print_rows(rows: &[Row]) {
+    table2::print_rows(
+        "Table 3 — MSCOCO 2017 + PASCAL VOC 2012 (conventional vs proposed)",
+        rows,
+    );
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn sweep_covers_all_groups_and_kernels() {
+        let cfg = BenchConfig {
+            scale: 0.0001,
+            warmup: 0,
+            iters: 1,
+            workers: 2,
+        };
+        let rows = run_sweep(&cfg, 8);
+        assert_eq!(rows.len(), TABLE3_GROUPS.len() * table2::KERNEL_SWEEP.len());
+        // Groups appear in order with full kernel sweeps each.
+        assert_eq!(rows[0].group, "(10% subset)");
+        assert_eq!(rows[3].group, "Classification");
+        assert_eq!(rows[6].group, "Segmentation");
+    }
+}

@@ -1,0 +1,384 @@
+//! Backward pass of the transpose convolution — the training-stage
+//! benefit the paper claims ("reduces computational load and memory
+//! requirements in the **training** and inference stages", §2; the
+//! §2.1 criticism that bed-of-nails methods add "extra load ... during
+//! the backward propagation phase").
+//!
+//! Gradients of `y = T_K(x)` (transpose conv, padding factor `P`):
+//!
+//! * **∂L/∂x** — conventional route: correlate the padded upsampled
+//!   input's gradient ... i.e. propagate through the explicit upsample:
+//!   `dL/dU = full_corr(dL/dy, flip(K))`, then *downsample* (read every
+//!   other element).  Unified route: never materialize `dL/dU`; each
+//!   input pixel only receives gradients from the output phase its
+//!   sub-kernel touched, so `dL/dx = Σ_phases corr_full(dy_phase,
+//!   flip(k_rs))` — the same 4× multiplication saving, now in the
+//!   backward direction.
+//! * **∂L/∂K** — per-tap: `dL/dK[u,v] = Σ_i,j U_pad[i+u, j+v] ⊗
+//!   dy[i,j]`; the unified route computes each sub-kernel's gradient
+//!   from its phase only and re-interleaves (zero wasted work).
+//!
+//! Both routes are validated against each other and against central
+//! finite differences.
+
+use crate::tensor::{ops, Feature};
+use crate::tensor::Kernel;
+
+use super::segregation::segregate;
+use super::unified::phase_geometries;
+
+/// Gradient w.r.t. the input, conventional route (materializes the
+/// upsampled-gradient buffer — the training-time cost the paper
+/// criticizes).
+pub fn grad_input_conventional(
+    dy: &Feature,
+    k: &Kernel,
+    n_in: usize,
+    padding: usize,
+) -> Feature {
+    // dL/dU_pad[a, b] = Σ_{u,v} dy[a-u, b-v] · K[u,v]  (full correlation
+    // with the flipped kernel).  Implement by zero-padding dy by (n-1)
+    // and correlating with the flipped kernel.
+    let n_k = k.n;
+    let flipped = flip_kernel(k);
+    let dy_pad = ops::pad(dy, n_k - 1);
+    let du = super::conventional::correlate_valid(&dy_pad, &flipped); // [2N-1+2P]²
+    // Strip the padding ring, then downsample (bed-of-nails adjoint).
+    let up_side = 2 * n_in - 1;
+    let du_core = ops::crop(&du, padding, padding, up_side, up_side);
+    ops::extract_phase(&du_core, 0, 0)
+}
+
+/// Gradient w.r.t. the input, unified route: per-phase correlation with
+/// the flipped sub-kernels, no upsampled buffer.
+pub fn grad_input_unified(dy: &Feature, k: &Kernel, n_in: usize, padding: usize) -> Feature {
+    let seg = segregate(k);
+    let cin = k.cin;
+    let cout = k.cout;
+    let mut dx = Feature::zeros(n_in, n_in, cin);
+    for g in phase_geometries(n_in, k.n, padding) {
+        let sub = &seg.subs[g.sub];
+        // Phase slice of dy.
+        let dyp = extract_output_phase(dy, g.rp, g.sp, g.n_rows, g.n_cols, cout);
+        // dL/dslab = full-corr(dyp, flip(sub)) over the slab coordinates,
+        // then accumulate the slab back into dx (adjoint of pad+crop).
+        let flipped = flip_sub(sub);
+        let dyp_pad = ops::pad_asym(
+            &dyp,
+            sub.rows - 1,
+            sub.rows - 1,
+            sub.cols - 1,
+            sub.cols - 1,
+        );
+        let dslab = super::conventional::correlate_valid(&dyp_pad, &flipped);
+        accumulate_slab_adjoint(&mut dx, &dslab, &g);
+    }
+    dx
+}
+
+/// Gradient w.r.t. the kernel, conventional route.
+pub fn grad_kernel_conventional(
+    x: &Feature,
+    dy: &Feature,
+    n_k: usize,
+    padding: usize,
+) -> Kernel {
+    let up = ops::upsample_bed_of_nails(x);
+    let upp = ops::pad(&up, padding);
+    let cin = x.c;
+    let cout = dy.c;
+    let mut dk = Kernel::zeros(n_k, cin, cout);
+    for u in 0..n_k {
+        for v in 0..n_k {
+            for oy in 0..dy.h {
+                for ox in 0..dy.w {
+                    let px = upp.pixel(oy + u, ox + v);
+                    let gy = dy.pixel(oy, ox);
+                    let base = dk.idx(u, v, 0, 0);
+                    for (ci, &xv) in px.iter().enumerate() {
+                        if xv == 0.0 {
+                            continue;
+                        }
+                        let row = &mut dk.data[base + ci * cout..base + (ci + 1) * cout];
+                        for (d, &g) in row.iter_mut().zip(gy) {
+                            *d += xv * g;
+                        }
+                    }
+                }
+            }
+        }
+    }
+    dk
+}
+
+/// Gradient w.r.t. the kernel, unified route: each sub-kernel's
+/// gradient comes from its phase only; re-interleave into the full dK.
+pub fn grad_kernel_unified(x: &Feature, dy: &Feature, n_k: usize, padding: usize) -> Kernel {
+    let cin = x.c;
+    let cout = dy.c;
+    let n_in = x.h;
+    let mut dk = Kernel::zeros(n_k, cin, cout);
+    for g in phase_geometries(n_in, n_k, padding) {
+        let (r, s) = (g.sub / 2, g.sub % 2);
+        let dyp = extract_output_phase(dy, g.rp, g.sp, g.n_rows, g.n_cols, cout);
+        // Slab as in forward.
+        let (pt, pb, pl, pr) = g.pads;
+        let padded = ops::pad_asym(x, pt, pb, pl, pr);
+        let slab = ops::crop(
+            &padded,
+            g.rows.0,
+            g.cols.0,
+            g.rows.1 - g.rows.0,
+            g.cols.1 - g.cols.0,
+        );
+        // dSub[u,v] = Σ slab[oy+u, ox+v] ⊗ dyp[oy, ox]; scatter into the
+        // full-kernel taps (r + 2u, s + 2v).
+        let sub_rows = (n_k - r).div_ceil(2);
+        let sub_cols = (n_k - s).div_ceil(2);
+        for u in 0..sub_rows {
+            for v in 0..sub_cols {
+                let base = dk.idx(r + 2 * u, s + 2 * v, 0, 0);
+                for oy in 0..dyp.h {
+                    for ox in 0..dyp.w {
+                        let px = slab.pixel(oy + u, ox + v);
+                        let gy = dyp.pixel(oy, ox);
+                        for (ci, &xv) in px.iter().enumerate() {
+                            let row =
+                                &mut dk.data[base + ci * cout..base + (ci + 1) * cout];
+                            for (d, &g2) in row.iter_mut().zip(gy) {
+                                *d += xv * g2;
+                            }
+                        }
+                    }
+                }
+            }
+        }
+    }
+    dk
+}
+
+// ------------------------------------------------------------- helpers
+
+/// Spatial flip + channel transpose: the backward kernel maps cout→cin,
+/// so `f[n-1-u, n-1-v, co, ci] = k[u, v, ci, co]`.
+fn flip_kernel(k: &Kernel) -> Kernel {
+    let mut f = Kernel::zeros(k.n, k.cout, k.cin);
+    for u in 0..k.n {
+        for v in 0..k.n {
+            for ci in 0..k.cin {
+                for co in 0..k.cout {
+                    let dst = f.idx(k.n - 1 - u, k.n - 1 - v, co, ci);
+                    f.data[dst] = k.get(u, v, ci, co);
+                }
+            }
+        }
+    }
+    f
+}
+
+/// Sub-kernel analogue of [`flip_kernel`].
+fn flip_sub(s: &crate::tensor::SubKernel) -> crate::tensor::SubKernel {
+    let mut f = crate::tensor::SubKernel::zeros(s.rows, s.cols, s.cout, s.cin);
+    for u in 0..s.rows {
+        for v in 0..s.cols {
+            for ci in 0..s.cin {
+                for co in 0..s.cout {
+                    let dst = f.idx(s.rows - 1 - u, s.cols - 1 - v, co, ci);
+                    f.data[dst] = s.get(u, v, ci, co);
+                }
+            }
+        }
+    }
+    f
+}
+
+/// Extract output phase `(rp, sp)` of `dy` as a dense map.
+fn extract_output_phase(
+    dy: &Feature,
+    rp: usize,
+    sp: usize,
+    n_rows: usize,
+    n_cols: usize,
+    cout: usize,
+) -> Feature {
+    let mut out = Feature::zeros(n_rows, n_cols, cout);
+    for (py, y) in (rp..dy.h).step_by(2).enumerate().take(n_rows) {
+        for (px, x) in (sp..dy.w).step_by(2).enumerate().take(n_cols) {
+            let src = dy.idx(y, x, 0);
+            let dst = out.idx(py, px, 0);
+            out.data[dst..dst + cout].copy_from_slice(&dy.data[src..src + cout]);
+        }
+    }
+    out
+}
+
+/// Adjoint of `phase_slab`: accumulate a slab-gradient back into dx,
+/// discarding positions that fell in zero padding.
+fn accumulate_slab_adjoint(
+    dx: &mut Feature,
+    dslab: &Feature,
+    g: &super::unified::PhaseGeometry,
+) {
+    let (pt, _, pl, _) = g.pads;
+    let row0 = g.rows.0;
+    let col0 = g.cols.0;
+    let n = dx.h as isize;
+    let c = dx.c;
+    for sy in 0..dslab.h {
+        // Position in the padded frame → raw-input frame.
+        let iy = (row0 + sy) as isize - pt as isize;
+        if iy < 0 || iy >= n {
+            continue;
+        }
+        for sx in 0..dslab.w {
+            let ix = (col0 + sx) as isize - pl as isize;
+            if ix < 0 || ix >= n {
+                continue;
+            }
+            let src = dslab.idx(sy, sx, 0);
+            let dst = dx.idx(iy as usize, ix as usize, 0);
+            for ci in 0..c {
+                dx.data[dst + ci] += dslab.data[src + ci];
+            }
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::conv::conventional;
+    use crate::conv::out_size;
+    use crate::util::prop::{close, forall_res, Config};
+    use crate::util::rng::Rng;
+
+    /// Loss = Σ y ⊙ w for a fixed random weighting w → dL/dy = w.
+    fn weighted_loss_grad(shape: (usize, usize, usize), rng: &mut Rng) -> Feature {
+        Feature::random(shape.0, shape.1, shape.2, rng)
+    }
+
+    fn forward(x: &Feature, k: &Kernel, p: usize) -> Feature {
+        conventional::transpose_conv(x, k, p)
+    }
+
+    /// Central finite difference of dL/dx[idx].
+    fn fd_input(x: &Feature, k: &Kernel, p: usize, w: &Feature, idx: usize) -> f32 {
+        let eps = 1e-2f32;
+        let mut xp = x.clone();
+        xp.data[idx] += eps;
+        let mut xm = x.clone();
+        xm.data[idx] -= eps;
+        let yp = forward(&xp, k, p);
+        let ym = forward(&xm, k, p);
+        let lp: f32 = yp.data.iter().zip(&w.data).map(|(a, b)| a * b).sum();
+        let lm: f32 = ym.data.iter().zip(&w.data).map(|(a, b)| a * b).sum();
+        (lp - lm) / (2.0 * eps)
+    }
+
+    fn fd_kernel(x: &Feature, k: &Kernel, p: usize, w: &Feature, idx: usize) -> f32 {
+        let eps = 1e-2f32;
+        let mut kp = k.clone();
+        kp.data[idx] += eps;
+        let mut km = k.clone();
+        km.data[idx] -= eps;
+        let yp = forward(x, &kp, p);
+        let ym = forward(x, &km, p);
+        let lp: f32 = yp.data.iter().zip(&w.data).map(|(a, b)| a * b).sum();
+        let lm: f32 = ym.data.iter().zip(&w.data).map(|(a, b)| a * b).sum();
+        (lp - lm) / (2.0 * eps)
+    }
+
+    #[test]
+    fn grad_input_matches_finite_difference() {
+        let mut rng = Rng::seeded(80);
+        for (n_in, nk, p) in [(4, 3, 1), (4, 4, 2), (3, 5, 2)] {
+            let x = Feature::random(n_in, n_in, 2, &mut rng);
+            let k = Kernel::random(nk, 2, 2, &mut rng);
+            let ho = out_size(n_in, nk, p);
+            let w = weighted_loss_grad((ho, ho, 2), &mut rng);
+            let dx = grad_input_conventional(&w, &k, n_in, p);
+            assert_eq!((dx.h, dx.w, dx.c), (n_in, n_in, 2));
+            for idx in [0, dx.data.len() / 2, dx.data.len() - 1] {
+                let fd = fd_input(&x, &k, p, &w, idx);
+                assert!(
+                    (dx.data[idx] - fd).abs() < 2e-2 * (1.0 + fd.abs()),
+                    "dx[{idx}]={} fd={fd} (n={n_in} k={nk} p={p})",
+                    dx.data[idx]
+                );
+            }
+        }
+    }
+
+    #[test]
+    fn grad_input_unified_equals_conventional() {
+        forall_res(
+            Config::default().cases(40),
+            "grad_input unified == conventional",
+            |rng| {
+                let n_in = rng.range(1, 7);
+                let nk = rng.range(2, 5);
+                let p = rng.range(0, 3);
+                if 2 * n_in + 2 * p <= nk {
+                    return ((n_in, nk, p), Ok(()));
+                }
+                let mut r2 = rng.split();
+                let k = Kernel::random(nk, 2, 3, &mut r2);
+                let ho = out_size(n_in, nk, p);
+                let dy = Feature::random(ho, ho, 3, &mut r2);
+                let a = grad_input_conventional(&dy, &k, n_in, p);
+                let b = grad_input_unified(&dy, &k, n_in, p);
+                ((n_in, nk, p), close(&a.data, &b.data, 1e-3))
+            },
+        );
+    }
+
+    #[test]
+    fn grad_kernel_matches_finite_difference() {
+        let mut rng = Rng::seeded(81);
+        let (n_in, nk, p) = (4, 4, 2);
+        let x = Feature::random(n_in, n_in, 2, &mut rng);
+        let k = Kernel::random(nk, 2, 2, &mut rng);
+        let ho = out_size(n_in, nk, p);
+        let w = weighted_loss_grad((ho, ho, 2), &mut rng);
+        let dk = grad_kernel_conventional(&x, &w, nk, p);
+        for idx in [0, dk.data.len() / 3, dk.data.len() - 1] {
+            let fd = fd_kernel(&x, &k, p, &w, idx);
+            assert!(
+                (dk.data[idx] - fd).abs() < 2e-2 * (1.0 + fd.abs()),
+                "dk[{idx}]={} fd={fd}",
+                dk.data[idx]
+            );
+        }
+    }
+
+    #[test]
+    fn grad_kernel_unified_equals_conventional() {
+        forall_res(
+            Config::default().cases(30),
+            "grad_kernel unified == conventional",
+            |rng| {
+                let n_in = rng.range(1, 6);
+                let nk = rng.range(2, 5);
+                let p = rng.range(0, 3);
+                if 2 * n_in + 2 * p <= nk {
+                    return ((n_in, nk, p), Ok(()));
+                }
+                let mut r2 = rng.split();
+                let x = Feature::random(n_in, n_in, 2, &mut r2);
+                let ho = out_size(n_in, nk, p);
+                let dy = Feature::random(ho, ho, 2, &mut r2);
+                let a = grad_kernel_conventional(&x, &dy, nk, p);
+                let b = grad_kernel_unified(&x, &dy, nk, p);
+                ((n_in, nk, p), close(&a.data, &b.data, 1e-3))
+            },
+        );
+    }
+
+    #[test]
+    fn flip_is_involution() {
+        let mut rng = Rng::seeded(82);
+        let k = Kernel::random(5, 2, 3, &mut rng);
+        let ff = flip_kernel(&flip_kernel(&k));
+        assert_eq!(ff, k); // flip+transpose twice is the identity
+    }
+}

@@ -1,0 +1,225 @@
+//! Algorithm 1: conventional transpose convolution.
+//!
+//! Literal implementation of the paper's baseline: bed-of-nails
+//! upsampling (`N×N → (2N-1)×(2N-1)`), zero-padding by `P`, then a
+//! stride-1 VALID cross-correlation with the full `n×n` kernel —
+//! including every multiplication against an inserted zero that the
+//! unified algorithm skips.  The correlation primitive here is dense on
+//! purpose: the baseline must *pay* for the zeros, exactly as the
+//! paper's C++/CUDA baseline does.
+
+use crate::tensor::{ops, Feature};
+use crate::util::threadpool;
+
+use super::TapSet;
+
+/// VALID stride-1 cross-correlation of `x` with `taps`, serial, dense.
+///
+/// Inner loop is channel-contiguous: for each output pixel and tap, an
+/// `acc[co] += px[ci] * tap[ci][co]` rank-1 update over contiguous
+/// slices, which LLVM auto-vectorizes.  No data-dependent branches.
+pub fn correlate_valid<T: TapSet>(x: &Feature, taps: &T) -> Feature {
+    let (kr, kc) = (taps.rows(), taps.cols());
+    assert!(x.h >= kr && x.w >= kc, "correlate_valid: input smaller than kernel");
+    assert_eq!(x.c, taps.cin(), "correlate_valid: channel mismatch");
+    let (ho, wo) = (x.h - kr + 1, x.w - kc + 1);
+    let cout = taps.cout();
+    let mut out = Feature::zeros(ho, wo, cout);
+    correlate_valid_into(x, taps, &mut out.data, wo, 0, ho);
+    out
+}
+
+/// Correlate output rows `[row_lo, row_hi)` into `out` (a buffer
+/// covering exactly those rows, `wo * cout` floats per row).
+pub(crate) fn correlate_valid_into<T: TapSet>(
+    x: &Feature,
+    taps: &T,
+    out: &mut [f32],
+    wo: usize,
+    row_lo: usize,
+    row_hi: usize,
+) {
+    let (kr, kc) = (taps.rows(), taps.cols());
+    let (cin, cout) = (taps.cin(), taps.cout());
+    if cout == 1 {
+        // Scalar-output specialization (the Table 2/3 configuration):
+        // keep the accumulator in a register across the whole tap loop.
+        for oy in row_lo..row_hi {
+            let row_base = (oy - row_lo) * wo;
+            for ox in 0..wo {
+                let mut acc = 0f32;
+                for u in 0..kr {
+                    let in_row = x.row(oy + u);
+                    for v in 0..kc {
+                        let tap = taps.tap(u, v);
+                        let px = &in_row[(ox + v) * cin..(ox + v + 1) * cin];
+                        for (xv, t) in px.iter().zip(tap) {
+                            acc += xv * t;
+                        }
+                    }
+                }
+                out[row_base + ox] = acc;
+            }
+        }
+        return;
+    }
+    // General path: tap-outer so each `[Cin, Cout]` tap matrix is
+    // streamed once per output row instead of once per pixel (pixel-
+    // outer was tried and regressed large-Cout layers ~25% — the tap
+    // matrices blow L2; EXPERIMENTS.md §Perf iteration 1).
+    for oy in row_lo..row_hi {
+        let row_base = (oy - row_lo) * wo * cout;
+        for u in 0..kr {
+            let in_row = x.row(oy + u);
+            for v in 0..kc {
+                let tap = taps.tap(u, v);
+                for ox in 0..wo {
+                    let px = &in_row[(ox + v) * cin..(ox + v + 1) * cin];
+                    let acc = &mut out[row_base + ox * cout..row_base + (ox + 1) * cout];
+                    for (ci, &xv) in px.iter().enumerate() {
+                        let trow = &tap[ci * cout..(ci + 1) * cout];
+                        for (a, &t) in acc.iter_mut().zip(trow) {
+                            *a += xv * t;
+                        }
+                    }
+                }
+            }
+        }
+    }
+}
+
+/// Algorithm 1, serial: upsample → pad → dense correlate.
+pub fn transpose_conv<T: TapSet>(x: &Feature, k: &T, padding: usize) -> Feature {
+    let up = ops::upsample_bed_of_nails(x);
+    let padded = ops::pad(&up, padding);
+    correlate_valid(&padded, k)
+}
+
+/// Algorithm 1 with a runtime zero-skip branch — an ablation lane (NOT
+/// the paper baseline): shows how much of the unified win a branchy
+/// CPU baseline could recover by testing for inserted zeros, at the
+/// cost of a data-dependent branch per input element.
+pub fn transpose_conv_zeroskip<T: TapSet>(x: &Feature, k: &T, padding: usize) -> Feature {
+    let up = ops::upsample_bed_of_nails(x);
+    let padded = ops::pad(&up, padding);
+    let (kr, kc) = (k.rows(), k.cols());
+    let (ho, wo) = (padded.h - kr + 1, padded.w - kc + 1);
+    let (cin, cout) = (k.cin(), k.cout());
+    let mut out = Feature::zeros(ho, wo, cout);
+    for oy in 0..ho {
+        for u in 0..kr {
+            let in_row = padded.row(oy + u);
+            for v in 0..kc {
+                let tap = k.tap(u, v);
+                for ox in 0..wo {
+                    let px = &in_row[(ox + v) * cin..(ox + v + 1) * cin];
+                    let base = (oy * wo + ox) * cout;
+                    let acc = &mut out.data[base..base + cout];
+                    for (ci, &xv) in px.iter().enumerate() {
+                        if xv != 0.0 {
+                            let trow = &tap[ci * cout..(ci + 1) * cout];
+                            for (a, &t) in acc.iter_mut().zip(trow) {
+                                *a += xv * t;
+                            }
+                        }
+                    }
+                }
+            }
+        }
+    }
+    out
+}
+
+/// Algorithm 1, parallel lane: output rows distributed over `workers`
+/// threads (the "GPU" emulation — the CUDA grid of per-element threads
+/// becomes row-chunks per OS thread; see DESIGN.md §2).
+pub fn transpose_conv_par<T: TapSet + Sync>(
+    x: &Feature,
+    k: &T,
+    padding: usize,
+    workers: usize,
+) -> Feature {
+    let up = ops::upsample_bed_of_nails(x);
+    let padded = ops::pad(&up, padding);
+    let (kr, kc) = (k.rows(), k.cols());
+    let (ho, wo) = (padded.h - kr + 1, padded.w - kc + 1);
+    let cout = k.cout();
+    let mut out = Feature::zeros(ho, wo, cout);
+    let row_len = wo * cout;
+    let padded_ref = &padded;
+    threadpool::parallel_chunks_mut(&mut out.data, ho.max(1), workers, |row, chunk| {
+        debug_assert_eq!(chunk.len(), row_len);
+        correlate_valid_into(padded_ref, k, chunk, wo, row, row + 1);
+    });
+    out
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::tensor::Kernel;
+    use crate::util::rng::Rng;
+
+    /// Hand-computed 1-channel example: 2×2 input, 2×2 kernel, P=0.
+    /// Upsampled = [[1,0,2],[0,0,0],[3,0,4]]; out = 2×2.
+    #[test]
+    fn tiny_hand_example() {
+        let x = Feature::from_vec(2, 2, 1, vec![1.0, 2.0, 3.0, 4.0]);
+        let k = Kernel::from_vec(2, 1, 1, vec![10.0, 20.0, 30.0, 40.0]);
+        let out = transpose_conv(&x, &k, 0);
+        assert_eq!((out.h, out.w, out.c), (2, 2, 1));
+        assert_eq!(out.get(0, 0, 0), 10.0); // 1*k[0,0]
+        assert_eq!(out.get(0, 1, 0), 40.0); // 2*k[0,1]
+        assert_eq!(out.get(1, 0, 0), 3.0 * 30.0);
+        assert_eq!(out.get(1, 1, 0), 4.0 * 40.0);
+    }
+
+    #[test]
+    fn output_shape_with_padding() {
+        let mut rng = Rng::seeded(1);
+        let x = Feature::random(4, 4, 3, &mut rng);
+        let k = Kernel::random(5, 3, 2, &mut rng);
+        let out = transpose_conv(&x, &k, 2);
+        assert_eq!((out.h, out.w, out.c), (7, 7, 2)); // 2*4+4-5 = 7
+    }
+
+    #[test]
+    fn zeroskip_matches_dense() {
+        let mut rng = Rng::seeded(2);
+        let x = Feature::random(5, 5, 2, &mut rng);
+        let k = Kernel::random(3, 2, 3, &mut rng);
+        let a = transpose_conv(&x, &k, 1);
+        let b = transpose_conv_zeroskip(&x, &k, 1);
+        assert!(ops::max_abs_diff(&a, &b) < 1e-5);
+    }
+
+    #[test]
+    fn parallel_matches_serial() {
+        let mut rng = Rng::seeded(3);
+        let x = Feature::random(6, 6, 3, &mut rng);
+        let k = Kernel::random(4, 3, 4, &mut rng);
+        let serial = transpose_conv(&x, &k, 2);
+        for workers in [1, 2, 4, 8] {
+            let par = transpose_conv_par(&x, &k, 2, workers);
+            assert!(ops::max_abs_diff(&serial, &par) < 1e-5);
+        }
+    }
+
+    #[test]
+    fn correlate_identity_kernel() {
+        // 1×1 kernel with weight 1 is the identity.
+        let mut rng = Rng::seeded(4);
+        let x = Feature::random(3, 3, 1, &mut rng);
+        let k = Kernel::from_vec(1, 1, 1, vec![1.0]);
+        let out = correlate_valid(&x, &k);
+        assert_eq!(out, x);
+    }
+
+    #[test]
+    #[should_panic(expected = "channel mismatch")]
+    fn channel_mismatch_panics() {
+        let x = Feature::zeros(3, 3, 2);
+        let k = Kernel::zeros(2, 3, 1);
+        correlate_valid(&x, &k);
+    }
+}

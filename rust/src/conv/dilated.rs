@@ -1,0 +1,120 @@
+//! Dilated convolution via segregated *inputs* (paper §5 future work).
+//!
+//! Dilated (atrous) convolution upsamples the **kernel** with
+//! bed-of-nails zeros (Yu & Koltun 2015): with rate 2, an `n×n` kernel
+//! becomes `(2n-1)×(2n-1)` and most of its taps are zeros.  The paper's
+//! §5 observes the same computation-pattern trick applies with the
+//! roles swapped: segregate the *input feature map* into its four
+//! parity phases and convolve each phase with the original, un-dilated
+//! kernel — zero wasted multiplications, no dilated kernel buffer.
+//!
+//! Both routes are implemented; the naive one is the correctness oracle
+//! and the ablation bench quantifies the savings (extending the paper's
+//! future-work claim with a measurement).
+
+use crate::tensor::{ops, Feature};
+use crate::tensor::Kernel;
+
+use super::conventional::correlate_valid;
+
+/// Output size of a VALID rate-2 dilated conv: `H - 2(n-1)`.
+pub fn out_size_dilated(n_in: usize, n_k: usize) -> usize {
+    n_in
+        .checked_sub(2 * (n_k - 1))
+        .expect("input too small for dilated kernel")
+}
+
+/// Naive route: bed-of-nails-upsample the kernel to `(2n-1)×(2n-1)`,
+/// then dense VALID correlation (pays for all the inserted zeros).
+pub fn dilated_conv_naive(x: &Feature, k: &Kernel) -> Feature {
+    let nd = 2 * k.n - 1;
+    let mut kd = Kernel::zeros(nd, k.cin, k.cout);
+    for u in 0..k.n {
+        for v in 0..k.n {
+            let src = k.tap(u, v);
+            let base = kd.idx(2 * u, 2 * v, 0, 0);
+            kd.data[base..base + src.len()].copy_from_slice(src);
+        }
+    }
+    correlate_valid(x, &kd)
+}
+
+/// Optimized route (§5): segregate the input into parity phases and
+/// convolve each with the original kernel.
+///
+/// For output index `(i, j)`: `out[i,j] = Σ x[i+2u, j+2v]·k[u,v]`, and
+/// `i + 2u` has the parity of `i` — so output phase `(r, s)` is exactly
+/// the VALID correlation of input phase `(r, s)` with `k`.
+pub fn dilated_conv_segregated(x: &Feature, k: &Kernel) -> Feature {
+    let ho = out_size_dilated(x.h, k.n);
+    let wo = out_size_dilated(x.w, k.n);
+    let mut out = Feature::zeros(ho, wo, k.cout);
+    for r in 0..2usize {
+        if r >= ho {
+            continue;
+        }
+        for s in 0..2usize {
+            if s >= wo {
+                continue;
+            }
+            let phase_in = ops::extract_phase(x, r, s);
+            let phase_out = correlate_valid(&phase_in, k);
+            // Scatter into out[r::2, s::2].
+            let n_rows = (ho - r).div_ceil(2);
+            let n_cols = (wo - s).div_ceil(2);
+            for py in 0..n_rows {
+                for px in 0..n_cols {
+                    let src = phase_out.idx(py, px, 0);
+                    let dst = out.idx(r + 2 * py, s + 2 * px, 0);
+                    out.data[dst..dst + k.cout]
+                        .copy_from_slice(&phase_out.data[src..src + k.cout]);
+                }
+            }
+        }
+    }
+    out
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::prop::{close, forall_res, Config};
+    use crate::util::rng::Rng;
+
+    #[test]
+    fn shapes() {
+        assert_eq!(out_size_dilated(9, 3), 5);
+        assert_eq!(out_size_dilated(7, 2), 5);
+    }
+
+    #[test]
+    fn segregated_matches_naive() {
+        let mut rng = Rng::seeded(50);
+        let x = Feature::random(9, 9, 3, &mut rng);
+        let k = Kernel::random(3, 3, 2, &mut rng);
+        let a = dilated_conv_naive(&x, &k);
+        let b = dilated_conv_segregated(&x, &k);
+        assert_eq!((a.h, a.w, a.c), (b.h, b.w, b.c));
+        assert!(ops::max_abs_diff(&a, &b) < 1e-4);
+    }
+
+    #[test]
+    fn prop_dilated_equivalence() {
+        forall_res(Config::default().cases(30), "dilated seg == naive", |rng| {
+            let nk = rng.range(2, 4);
+            let n_in = rng.range(2 * (nk - 1) + 1, 12);
+            let mut r2 = rng.split();
+            let x = Feature::random(n_in, n_in, 2, &mut r2);
+            let k = Kernel::random(nk, 2, 2, &mut r2);
+            let a = dilated_conv_naive(&x, &k);
+            let b = dilated_conv_segregated(&x, &k);
+            ((n_in, nk), close(&a.data, &b.data, 1e-3))
+        });
+    }
+
+    #[test]
+    #[should_panic(expected = "input too small")]
+    fn too_small_input_panics() {
+        out_size_dilated(3, 3);
+    }
+}

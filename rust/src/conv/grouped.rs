@@ -1,0 +1,256 @@
+//! Prior work (HICSS'23): grouped kernel-segregated transpose conv.
+//!
+//! The predecessor algorithm the paper improves on: kernel segregation
+//! is the same (Fig. 4), but one work-item computes a full **2×2 output
+//! block** by applying all four sub-kernels sequentially.  The block
+//! grid is `⌈Ho/2⌉ × ⌈Wo/2⌉`, so when the output feature map has odd
+//! dimensions the last row/column of blocks computes **extra elements**
+//! past the output boundary — wasted multiplications *and* a padded
+//! output allocation (the paper's headline criticism, §3.2: "extra
+//! memory usage if the output feature map has odd dimensions").
+//!
+//! We reproduce that over-computation faithfully: the block loop writes
+//! into an even-rounded buffer which is cropped at the end, and the
+//! extra elements are really computed (input-clipped like the CUDA
+//! original), so the measured waste matches the prior system's.
+
+use crate::tensor::{ops, Feature};
+use crate::util::threadpool;
+
+use super::segregation::{segregate, Segregated};
+use super::out_size;
+use crate::tensor::Kernel;
+
+/// Bytes of the even-rounded output allocation the grouped approach
+/// makes (vs the exact `ho²`): the paper's "extra elements" overhead.
+pub fn extra_output_bytes(ho: usize, cout: usize) -> usize {
+    let ho_pad = ho.div_ceil(2) * 2;
+    (ho_pad * ho_pad - ho * ho) * cout * std::mem::size_of::<f32>()
+}
+
+/// Compute one 2×2 block at block coords `(a, b)` into the padded
+/// buffer.  `n` = input size, `p` = padding factor.
+#[inline]
+fn compute_block(
+    x: &Feature,
+    seg: &Segregated,
+    p: usize,
+    a: usize,
+    b: usize,
+    buf: &mut [f32],
+    wo_pad: usize,
+) {
+    let n = x.h as isize;
+    let pi = p as isize;
+    let cout = seg.subs[0].cout;
+    for rp in 0..2usize {
+        for sp in 0..2usize {
+            let i = (2 * a + rp) as isize;
+            let j = (2 * b + sp) as isize;
+            let base_i = (i - pi).div_euclid(2) + ((i - pi).rem_euclid(2) != 0) as isize;
+            let base_j = (j - pi).div_euclid(2) + ((j - pi).rem_euclid(2) != 0) as isize;
+            let sub = seg.for_output_parity(rp, sp, p);
+            let dst = ((i as usize) * wo_pad + j as usize) * cout;
+            let acc = &mut buf[dst..dst + cout];
+            for u in 0..sub.rows {
+                let iy = base_i + u as isize;
+                if iy < 0 || iy >= n {
+                    continue;
+                }
+                for v in 0..sub.cols {
+                    let ix = base_j + v as isize;
+                    if ix < 0 || ix >= n {
+                        continue;
+                    }
+                    let px = x.pixel(iy as usize, ix as usize);
+                    let tap = sub.tap(u, v);
+                    for (ci, &xv) in px.iter().enumerate() {
+                        let trow = &tap[ci * cout..(ci + 1) * cout];
+                        for (acc_v, &t) in acc.iter_mut().zip(trow) {
+                            *acc_v += xv * t;
+                        }
+                    }
+                }
+            }
+        }
+    }
+}
+
+/// Grouped segregated transpose conv from a pre-segregated kernel.
+pub fn transpose_conv_seg(x: &Feature, seg: &Segregated, padding: usize) -> Feature {
+    assert_eq!(x.h, x.w, "square inputs only (paper setting)");
+    let ho = out_size(x.h, seg.n, padding);
+    let cout = seg.subs[0].cout;
+    let ho_pad = ho.div_ceil(2) * 2; // extra row/col when ho is odd
+    let mut buf = vec![0.0f32; ho_pad * ho_pad * cout];
+    let blocks = ho_pad / 2;
+    for a in 0..blocks {
+        for b in 0..blocks {
+            compute_block(x, seg, padding, a, b, &mut buf, ho_pad);
+        }
+    }
+    crop_padded(buf, ho_pad, ho, cout)
+}
+
+/// Grouped segregated transpose conv (segregates internally).
+pub fn transpose_conv(x: &Feature, k: &Kernel, padding: usize) -> Feature {
+    transpose_conv_seg(x, &segregate(k), padding)
+}
+
+/// Parallel lane: one work-item per 2×2 block (the prior work's CUDA
+/// thread mapping), chunked over `workers` threads.
+pub fn transpose_conv_par_seg(
+    x: &Feature,
+    seg: &Segregated,
+    padding: usize,
+    workers: usize,
+) -> Feature {
+    assert_eq!(x.h, x.w, "square inputs only (paper setting)");
+    let ho = out_size(x.h, seg.n, padding);
+    let cout = seg.subs[0].cout;
+    let ho_pad = ho.div_ceil(2) * 2;
+    let blocks = ho_pad / 2;
+    let mut buf = vec![0.0f32; ho_pad * ho_pad * cout];
+    // Two block-rows per chunk keeps rows whole (each block writes two
+    // output rows, so chunking by block-row pairs keeps writes disjoint).
+    let row_floats = ho_pad * cout;
+    threadpool::parallel_chunks_mut(&mut buf, blocks, workers, |block_row, chunk| {
+        debug_assert_eq!(chunk.len(), 2 * row_floats);
+        // Chunk covers output rows [2*block_row, 2*block_row+2); rebase
+        // a local view so compute_block can write with global indices.
+        let base = 2 * block_row * row_floats;
+        for b in 0..blocks {
+            compute_block_offset(x, seg, padding, block_row, b, chunk, ho_pad, base);
+        }
+    });
+    crop_padded(buf, ho_pad, ho, cout)
+}
+
+/// As [`compute_block`] but writing into a chunk that starts at global
+/// flat offset `chunk_base`.
+#[inline]
+#[allow(clippy::too_many_arguments)]
+fn compute_block_offset(
+    x: &Feature,
+    seg: &Segregated,
+    p: usize,
+    a: usize,
+    b: usize,
+    chunk: &mut [f32],
+    wo_pad: usize,
+    chunk_base: usize,
+) {
+    let n = x.h as isize;
+    let pi = p as isize;
+    let cout = seg.subs[0].cout;
+    for rp in 0..2usize {
+        for sp in 0..2usize {
+            let i = (2 * a + rp) as isize;
+            let j = (2 * b + sp) as isize;
+            let base_i = (i - pi).div_euclid(2) + ((i - pi).rem_euclid(2) != 0) as isize;
+            let base_j = (j - pi).div_euclid(2) + ((j - pi).rem_euclid(2) != 0) as isize;
+            let sub = seg.for_output_parity(rp, sp, p);
+            let dst = ((i as usize) * wo_pad + j as usize) * cout - chunk_base;
+            let acc = &mut chunk[dst..dst + cout];
+            for u in 0..sub.rows {
+                let iy = base_i + u as isize;
+                if iy < 0 || iy >= n {
+                    continue;
+                }
+                for v in 0..sub.cols {
+                    let ix = base_j + v as isize;
+                    if ix < 0 || ix >= n {
+                        continue;
+                    }
+                    let px = x.pixel(iy as usize, ix as usize);
+                    let tap = sub.tap(u, v);
+                    for (ci, &xv) in px.iter().enumerate() {
+                        let trow = &tap[ci * cout..(ci + 1) * cout];
+                        for (acc_v, &t) in acc.iter_mut().zip(trow) {
+                            *acc_v += xv * t;
+                        }
+                    }
+                }
+            }
+        }
+    }
+}
+
+fn crop_padded(buf: Vec<f32>, ho_pad: usize, ho: usize, cout: usize) -> Feature {
+    if ho_pad == ho {
+        return Feature::from_vec(ho, ho, cout, buf);
+    }
+    let full = Feature::from_vec(ho_pad, ho_pad, cout, buf);
+    ops::crop(&full, 0, 0, ho, ho)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::conv::conventional;
+    use crate::util::prop::{close, forall_res, Config};
+    use crate::util::rng::Rng;
+
+    #[test]
+    fn matches_conventional_even_output() {
+        let mut rng = Rng::seeded(20);
+        let x = Feature::random(4, 4, 3, &mut rng);
+        let k = Kernel::random(4, 3, 2, &mut rng);
+        let want = conventional::transpose_conv(&x, &k, 2); // 8×8 even
+        let got = transpose_conv(&x, &k, 2);
+        assert!(ops::max_abs_diff(&want, &got) < 1e-4);
+    }
+
+    #[test]
+    fn matches_conventional_odd_output() {
+        let mut rng = Rng::seeded(21);
+        let x = Feature::random(4, 4, 2, &mut rng);
+        let k = Kernel::random(5, 2, 3, &mut rng);
+        let want = conventional::transpose_conv(&x, &k, 2); // 7×7 odd
+        let got = transpose_conv(&x, &k, 2);
+        assert_eq!((got.h, got.w), (7, 7)); // extra elements cropped away
+        assert!(ops::max_abs_diff(&want, &got) < 1e-4);
+    }
+
+    #[test]
+    fn extra_bytes_only_for_odd() {
+        assert_eq!(extra_output_bytes(8, 4), 0);
+        // 7×7 → padded 8×8: (64-49)*cout*4 bytes
+        assert_eq!(extra_output_bytes(7, 4), 15 * 4 * 4);
+    }
+
+    #[test]
+    fn parallel_matches_serial() {
+        let mut rng = Rng::seeded(22);
+        let x = Feature::random(6, 6, 2, &mut rng);
+        let k = Kernel::random(5, 2, 3, &mut rng);
+        let seg = segregate(&k);
+        let want = transpose_conv_seg(&x, &seg, 2);
+        for workers in [1, 2, 4] {
+            let got = transpose_conv_par_seg(&x, &seg, 2, workers);
+            assert!(ops::max_abs_diff(&want, &got) < 1e-5);
+        }
+    }
+
+    #[test]
+    fn prop_grouped_equals_conventional() {
+        forall_res(
+            Config::default().cases(50),
+            "grouped (HICSS'23) == conventional",
+            |rng| {
+                let n_in = rng.range(1, 7);
+                let nk = rng.range(2, 5);
+                let p = rng.range(0, 3);
+                if 2 * n_in + 2 * p <= nk {
+                    return ((n_in, nk, p), Ok(()));
+                }
+                let mut r2 = rng.split();
+                let x = Feature::random(n_in, n_in, 2, &mut r2);
+                let k = Kernel::random(nk, 2, 2, &mut r2);
+                let want = conventional::transpose_conv(&x, &k, p);
+                let got = transpose_conv(&x, &k, p);
+                ((n_in, nk, p), close(&want.data, &got.data, 1e-3))
+            },
+        );
+    }
+}

@@ -1,0 +1,217 @@
+//! GEMM-based transpose convolution (paper §5 discussion).
+//!
+//! The matrix-multiplication route: lower the (upsampled, padded) input
+//! to an im2col patch matrix `[Ho·Wo, n·n·Cin]` and multiply by the
+//! kernel reshaped to `[n·n·Cin, Cout]`.  The §5 discussion also
+//! sketches a *segregated* GEMM — four phase GEMMs whose outputs land in
+//! four sub-arrays that must then be re-interleaved, costing an extra
+//! output-sized buffer and a rearrangement pass; both are implemented
+//! so the ablation bench can quantify the §5 claim.
+
+use crate::tensor::{ops, Feature};
+use crate::tensor::Kernel;
+
+use super::segregation::segregate;
+use super::{out_size, TapSet};
+
+/// Naive-but-cache-aware GEMM: `c[m×n] += a[m×k] · b[k×n]`, row-major.
+/// i-k-j loop order streams `b` rows and keeps `c` rows hot.
+pub fn gemm(a: &[f32], b: &[f32], c: &mut [f32], m: usize, k: usize, n: usize) {
+    assert_eq!(a.len(), m * k);
+    assert_eq!(b.len(), k * n);
+    assert_eq!(c.len(), m * n);
+    for i in 0..m {
+        let a_row = &a[i * k..(i + 1) * k];
+        let c_row = &mut c[i * n..(i + 1) * n];
+        for (kk, &av) in a_row.iter().enumerate() {
+            if av == 0.0 {
+                continue; // im2col of an upsampled map is ~75% zeros
+            }
+            let b_row = &b[kk * n..(kk + 1) * n];
+            for (cv, &bv) in c_row.iter_mut().zip(b_row) {
+                *cv += av * bv;
+            }
+        }
+    }
+}
+
+/// Dense GEMM without the zero-skip (for fair FLOP-cost comparisons).
+pub fn gemm_dense(a: &[f32], b: &[f32], c: &mut [f32], m: usize, k: usize, n: usize) {
+    assert_eq!(a.len(), m * k);
+    assert_eq!(b.len(), k * n);
+    assert_eq!(c.len(), m * n);
+    for i in 0..m {
+        let a_row = &a[i * k..(i + 1) * k];
+        let c_row = &mut c[i * n..(i + 1) * n];
+        for (kk, &av) in a_row.iter().enumerate() {
+            let b_row = &b[kk * n..(kk + 1) * n];
+            for (cv, &bv) in c_row.iter_mut().zip(b_row) {
+                *cv += av * bv;
+            }
+        }
+    }
+}
+
+/// im2col patch matrix of `x` for a `kr×kc` VALID window sweep:
+/// row `oy*wo + ox` holds the flattened `[kr, kc, C]` patch.
+pub fn im2col(x: &Feature, kr: usize, kc: usize) -> (Vec<f32>, usize, usize) {
+    let ho = x.h - kr + 1;
+    let wo = x.w - kc + 1;
+    let patch = kr * kc * x.c;
+    let mut m = vec![0.0f32; ho * wo * patch];
+    for oy in 0..ho {
+        for ox in 0..wo {
+            let row = &mut m[(oy * wo + ox) * patch..(oy * wo + ox + 1) * patch];
+            for u in 0..kr {
+                let src = x.idx(oy + u, ox, 0);
+                let dst = u * kc * x.c;
+                row[dst..dst + kc * x.c]
+                    .copy_from_slice(&x.data[src..src + kc * x.c]);
+            }
+        }
+    }
+    (m, ho * wo, patch)
+}
+
+/// Kernel reshaped to the GEMM operand `[n·n·Cin, Cout]` (tap-major,
+/// matching [`im2col`]'s patch layout).
+pub fn kernel_matrix<T: TapSet>(k: &T) -> Vec<f32> {
+    let (kr, kc, cin, cout) = (k.rows(), k.cols(), k.cin(), k.cout());
+    let mut m = vec![0.0f32; kr * kc * cin * cout];
+    for u in 0..kr {
+        for v in 0..kc {
+            let tap = k.tap(u, v);
+            let base = (u * kc + v) * cin * cout;
+            m[base..base + cin * cout].copy_from_slice(tap);
+        }
+    }
+    m
+}
+
+/// Conventional GEMM transpose conv: upsample → pad → im2col → GEMM.
+pub fn transpose_conv(x: &Feature, k: &Kernel, padding: usize) -> Feature {
+    let up = ops::upsample_bed_of_nails(x);
+    let padded = ops::pad(&up, padding);
+    let (patches, rows, patch) = im2col(&padded, k.n, k.n);
+    let km = kernel_matrix(k);
+    let ho = padded.h - k.n + 1;
+    let wo = padded.w - k.n + 1;
+    let mut out = vec![0.0f32; rows * k.cout];
+    gemm(&patches, &km, &mut out, rows, patch, k.cout);
+    Feature::from_vec(ho, wo, k.cout, out)
+}
+
+/// §5 segregated GEMM: four phase GEMMs over the raw input, followed by
+/// the re-interleaving pass the paper warns costs "more memory, which
+/// might be equivalent to double the size of the output feature map".
+/// Returns `(result, extra_bytes)` where `extra_bytes` is the transient
+/// phase-buffer footprint beyond the final output.
+pub fn transpose_conv_segregated_gemm(
+    x: &Feature,
+    k: &Kernel,
+    padding: usize,
+) -> (Feature, usize) {
+    let seg = segregate(k);
+    let ho = out_size(x.h, k.n, padding);
+    let mut phases: Vec<Feature> = Vec::with_capacity(4);
+    let mut extra = 0usize;
+    for g in super::unified::phase_geometries(x.h, k.n, padding) {
+        let (pt, pb, pl, pr) = g.pads;
+        let padded = ops::pad_asym(x, pt, pb, pl, pr);
+        let slab = ops::crop(
+            &padded,
+            g.rows.0,
+            g.cols.0,
+            g.rows.1 - g.rows.0,
+            g.cols.1 - g.cols.0,
+        );
+        let sub = &seg.subs[g.sub];
+        let (patches, rows, patch) = im2col(&slab, sub.rows, sub.cols);
+        let km = kernel_matrix(sub);
+        let mut out = vec![0.0f32; rows * sub.cout];
+        gemm_dense(&patches, &km, &mut out, rows, patch, sub.cout);
+        let phase = Feature::from_vec(g.n_rows, g.n_cols, sub.cout, out);
+        extra += phase.bytes();
+        // Phases are produced in (0,0),(0,1),(1,0),(1,1) order because
+        // phase_geometries iterates rp-major.
+        phases.push(phase);
+    }
+    assert_eq!(phases.len(), 4, "degenerate geometry in segregated GEMM");
+    let refs = [&phases[0], &phases[1], &phases[2], &phases[3]];
+    (ops::interleave_phases(refs, ho, ho), extra)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::conv::conventional;
+    use crate::util::prop::{close, forall_res, Config};
+    use crate::util::rng::Rng;
+
+    #[test]
+    fn gemm_small_known() {
+        // [1 2; 3 4] * [5 6; 7 8] = [19 22; 43 50]
+        let a = [1.0, 2.0, 3.0, 4.0];
+        let b = [5.0, 6.0, 7.0, 8.0];
+        let mut c = [0.0; 4];
+        gemm(&a, &b, &mut c, 2, 2, 2);
+        assert_eq!(c, [19.0, 22.0, 43.0, 50.0]);
+    }
+
+    #[test]
+    fn gemm_zero_skip_matches_dense() {
+        let mut rng = Rng::seeded(40);
+        let mut a = vec![0.0f32; 6 * 5];
+        rng.fill_normal(&mut a);
+        for v in a.iter_mut().step_by(3) {
+            *v = 0.0;
+        }
+        let mut b = vec![0.0f32; 5 * 4];
+        rng.fill_normal(&mut b);
+        let mut c1 = vec![0.0f32; 6 * 4];
+        let mut c2 = vec![0.0f32; 6 * 4];
+        gemm(&a, &b, &mut c1, 6, 5, 4);
+        gemm_dense(&a, &b, &mut c2, 6, 5, 4);
+        assert!(close(&c1, &c2, 1e-5).is_ok());
+    }
+
+    #[test]
+    fn gemm_route_matches_direct() {
+        let mut rng = Rng::seeded(41);
+        let x = Feature::random(5, 5, 3, &mut rng);
+        let k = Kernel::random(4, 3, 2, &mut rng);
+        let want = conventional::transpose_conv(&x, &k, 2);
+        let got = transpose_conv(&x, &k, 2);
+        assert!(ops::max_abs_diff(&want, &got) < 1e-4);
+    }
+
+    #[test]
+    fn segregated_gemm_matches_and_reports_extra() {
+        let mut rng = Rng::seeded(42);
+        let x = Feature::random(4, 4, 2, &mut rng);
+        let k = Kernel::random(5, 2, 3, &mut rng);
+        let want = conventional::transpose_conv(&x, &k, 2);
+        let (got, extra) = transpose_conv_segregated_gemm(&x, &k, 2);
+        assert!(ops::max_abs_diff(&want, &got) < 1e-4);
+        // §5: phase buffers ≈ one extra output copy.
+        assert_eq!(extra, want.bytes());
+    }
+
+    #[test]
+    fn prop_gemm_route_equals_conventional() {
+        forall_res(Config::default().cases(30), "im2col == conventional", |rng| {
+            let n_in = rng.range(2, 6);
+            let nk = rng.range(2, 5);
+            let p = rng.range(0, 2);
+            if 2 * n_in + 2 * p <= nk {
+                return ((n_in, nk, p), Ok(()));
+            }
+            let mut r2 = rng.split();
+            let x = Feature::random(n_in, n_in, 2, &mut r2);
+            let k = Kernel::random(nk, 2, 2, &mut r2);
+            let want = conventional::transpose_conv(&x, &k, p);
+            let got = transpose_conv(&x, &k, p);
+            ((n_in, nk, p), close(&want.data, &got.data, 1e-3))
+        });
+    }
+}

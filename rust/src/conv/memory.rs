@@ -1,0 +1,187 @@
+//! Analytic memory accounting — reproduces the paper's savings columns
+//! **exactly** (they are analytic, not measured; see DESIGN.md §6).
+//!
+//! Two definitions appear in the paper:
+//!
+//! * **Table 4 (GAN ablation)**: savings = the eliminated
+//!   upsampled+padded buffer, `(2N−1+2P)² · C · 4` bytes.
+//!   Verified: DC-GAN layer 2 → `11²·1024·4 = 495,616` ✓,
+//!   EB-GAN layer 7 → `259²·64·4 = 17,172,736` ✓.
+//! * **Table 2/3 (datasets)**: savings = upsampled+padded buffer minus
+//!   the proposed path's padded input,
+//!   `[(2N−1+2P)² − (N+2⌊P/2⌋)²] · C · 4` bytes.
+//!   Verified: N=224, P=2, C=3 → `1,827,900 B = 1.8279 MB` (decimal) ✓.
+
+use super::ConvTransposeParams;
+
+const F32: usize = std::mem::size_of::<f32>(); // 4
+
+/// Size in bytes of the conventional path's upsampled+padded buffer
+/// `(2N−1+2P)² · Cin · 4`.
+pub fn upsampled_buffer_bytes(p: &ConvTransposeParams) -> usize {
+    let side = 2 * p.n_in - 1 + 2 * p.padding;
+    side * side * p.cin * F32
+}
+
+/// Size in bytes of the proposed path's padded raw input
+/// `(N + 2⌊P/2⌋)² · Cin · 4`.
+pub fn proposed_input_bytes(p: &ConvTransposeParams) -> usize {
+    let side = p.n_in + 2 * (p.padding / 2);
+    side * side * p.cin * F32
+}
+
+/// Table 4 definition: the whole upsampled buffer is saved.
+pub fn savings_table4(p: &ConvTransposeParams) -> usize {
+    upsampled_buffer_bytes(p)
+}
+
+/// Table 2/3 definition: upsampled buffer minus the padded raw input.
+pub fn savings_table2(p: &ConvTransposeParams) -> usize {
+    upsampled_buffer_bytes(p) - proposed_input_bytes(p)
+}
+
+/// Decimal megabytes (the paper's Table 2 unit: 1 MB = 10⁶ B).
+pub fn to_decimal_mb(bytes: usize) -> f64 {
+    bytes as f64 / 1e6
+}
+
+/// Full memory footprint of one layer under each algorithm (input,
+/// intermediate, kernel, output) — used by the serving coordinator's
+/// admission control and the ablation report.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct LayerFootprint {
+    pub input_bytes: usize,
+    pub intermediate_bytes: usize,
+    pub kernel_bytes: usize,
+    pub output_bytes: usize,
+}
+
+impl LayerFootprint {
+    pub fn total(&self) -> usize {
+        self.input_bytes + self.intermediate_bytes + self.kernel_bytes + self.output_bytes
+    }
+}
+
+/// Footprint of the conventional algorithm (materializes the upsampled
+/// padded map as its intermediate).
+pub fn footprint_conventional(p: &ConvTransposeParams) -> LayerFootprint {
+    let ho = p.out_size();
+    LayerFootprint {
+        input_bytes: p.n_in * p.n_in * p.cin * F32,
+        intermediate_bytes: upsampled_buffer_bytes(p),
+        kernel_bytes: p.n_k * p.n_k * p.cin * p.cout * F32,
+        output_bytes: ho * ho * p.cout * F32,
+    }
+}
+
+/// Footprint of the unified algorithm (no upsampled buffer; transient
+/// phase slabs are bounded by the padded input and reused per phase).
+pub fn footprint_unified(p: &ConvTransposeParams) -> LayerFootprint {
+    let ho = p.out_size();
+    LayerFootprint {
+        input_bytes: p.n_in * p.n_in * p.cin * F32,
+        intermediate_bytes: proposed_input_bytes(p),
+        kernel_bytes: p.n_k * p.n_k * p.cin * p.cout * F32,
+        output_bytes: ho * ho * p.cout * F32,
+    }
+}
+
+/// Footprint of the grouped (HICSS'23) algorithm: like unified but with
+/// the even-rounded output allocation on odd output sizes.
+pub fn footprint_grouped(p: &ConvTransposeParams) -> LayerFootprint {
+    let mut f = footprint_unified(p);
+    let ho = p.out_size();
+    let ho_pad = ho.div_ceil(2) * 2;
+    f.output_bytes = ho_pad * ho_pad * p.cout * F32;
+    f
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn dcgan_layer2_matches_paper_exactly() {
+        // Table 4, DC-GAN row 2: 4×4×1024 input, k=4, P=2 → 495,616 B.
+        let p = ConvTransposeParams::new(4, 4, 2, 1024, 512);
+        assert_eq!(savings_table4(&p), 495_616);
+    }
+
+    #[test]
+    fn dcgan_all_layers_match_paper() {
+        let rows = [
+            (4, 1024, 495_616),
+            (8, 512, 739_328),
+            (16, 256, 1_254_400),
+            (32, 128, 2_298_368),
+        ];
+        let mut total = 0;
+        for (n, c, want) in rows {
+            let p = ConvTransposeParams::new(n, 4, 2, c, 1);
+            assert_eq!(savings_table4(&p), want, "N={n} C={c}");
+            total += savings_table4(&p);
+        }
+        assert_eq!(total, 4_787_712); // paper's DC-GAN total
+    }
+
+    #[test]
+    fn ebgan_layers_match_paper() {
+        let rows = [
+            (4, 2048, 991_232),
+            (8, 1024, 1_478_656),
+            (16, 512, 2_508_800),
+            (32, 256, 4_596_736),
+            (64, 128, 8_786_432),
+            (128, 64, 17_172_736),
+        ];
+        let mut total = 0;
+        for (n, c, want) in rows {
+            let p = ConvTransposeParams::new(n, 4, 2, c, 1);
+            assert_eq!(savings_table4(&p), want, "N={n} C={c}");
+            total += savings_table4(&p);
+        }
+        assert_eq!(total, 35_534_592); // the paper's "35 MB" headline
+    }
+
+    #[test]
+    fn flower_dataset_matches_table2() {
+        // Table 2: 224×224×3, 5×5 kernel (P=2) → 1.8279 MB (decimal).
+        let p = ConvTransposeParams::new(224, 5, 2, 3, 1);
+        assert_eq!(savings_table2(&p), 1_827_900);
+        assert!((to_decimal_mb(savings_table2(&p)) - 1.8279).abs() < 1e-9);
+    }
+
+    #[test]
+    fn table2_per_kernel_actuals() {
+        // The paper reports the 5×5 figure for all kernels; actual
+        // per-kernel savings differ slightly (flagged in EXPERIMENTS.md).
+        let k3 = ConvTransposeParams::new(224, 3, 1, 3, 1);
+        let k4 = ConvTransposeParams::new(224, 4, 2, 3, 1);
+        assert_eq!(savings_table2(&k3), 1_817_100);
+        assert_eq!(savings_table2(&k4), 1_827_900);
+    }
+
+    #[test]
+    fn footprints_ordered() {
+        let p = ConvTransposeParams::new(16, 4, 2, 64, 32);
+        let conv = footprint_conventional(&p);
+        let uni = footprint_unified(&p);
+        assert!(conv.intermediate_bytes > uni.intermediate_bytes);
+        assert_eq!(conv.output_bytes, uni.output_bytes);
+        // Table 2's savings definition is exactly the intermediate delta.
+        assert_eq!(
+            conv.intermediate_bytes - uni.intermediate_bytes,
+            savings_table2(&p)
+        );
+    }
+
+    #[test]
+    fn grouped_output_padding_on_odd() {
+        let p = ConvTransposeParams::new(4, 5, 2, 8, 4); // ho = 7
+        let g = footprint_grouped(&p);
+        let u = footprint_unified(&p);
+        assert_eq!(g.output_bytes, 8 * 8 * 4 * F32);
+        assert_eq!(u.output_bytes, 7 * 7 * 4 * F32);
+        assert!(g.total() > u.total());
+    }
+}

@@ -1,0 +1,172 @@
+//! The paper's transpose-convolution algorithms and their extensions.
+//!
+//! * [`conventional`] — Algorithm 1: bed-of-nails upsample + stride-1
+//!   correlation (the baseline every speedup is measured against)
+//! * [`segregation`] — the Fig. 4 kernel-splitting mechanism
+//! * [`grouped`] — the HICSS'23 prior work: four sub-kernels grouped per
+//!   work-item, over-computing on odd output sizes
+//! * [`unified`] — **the paper's contribution** (Algorithm 2 / Eqs. 1–4)
+//! * [`parallel`] — multi-threaded lanes of all three ("GPU" substitute)
+//! * [`im2col`] — GEMM-based transpose conv (§5 discussion baseline)
+//! * [`dilated`] — segregated-input dilated convolution (§5 future work)
+//! * [`flops`] — analytic MAC counts
+//! * [`memory`] — analytic buffer accounting (matches the paper's
+//!   savings columns exactly; see DESIGN.md §6)
+//! * [`backward`] — training-stage gradients, both routes
+//! * [`stride`] — generalized stride-s segregation (extension)
+//!
+//! All algorithms share the geometry in [`ConvTransposeParams`] and are
+//! bit-comparable: given the same input/kernel they produce the same
+//! output up to f32 accumulation-order error.
+
+pub mod backward;
+pub mod conventional;
+pub mod dilated;
+pub mod flops;
+pub mod grouped;
+pub mod im2col;
+pub mod memory;
+pub mod parallel;
+pub mod segregation;
+pub mod stride;
+pub mod unified;
+
+use crate::tensor::{Kernel, SubKernel};
+
+/// Geometry of one transpose-convolution operation, in the paper's
+/// bed-of-nails framing: input `N×N×Cin`, kernel `n×n×Cin×Cout`,
+/// padding factor `P` applied to the *upsampled* map.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct ConvTransposeParams {
+    /// Input spatial size `N` (square).
+    pub n_in: usize,
+    /// Kernel spatial size `n` (square).
+    pub n_k: usize,
+    /// Padding factor `P` on the upsampled map.
+    pub padding: usize,
+    pub cin: usize,
+    pub cout: usize,
+}
+
+impl ConvTransposeParams {
+    pub fn new(n_in: usize, n_k: usize, padding: usize, cin: usize, cout: usize) -> Self {
+        ConvTransposeParams {
+            n_in,
+            n_k,
+            padding,
+            cin,
+            cout,
+        }
+    }
+
+    /// The standard GAN generator block: `k=4, s=2, p=1` in framework
+    /// terms, i.e. paper padding factor `P = k - 1 - p = 2` (exactly
+    /// doubles the spatial size).
+    pub fn gan_layer() -> Self {
+        ConvTransposeParams::new(0, 4, 2, 0, 0)
+    }
+
+    /// Output spatial size: `2N + 2P - n` (paper §3.3).
+    pub fn out_size(&self) -> usize {
+        out_size(self.n_in, self.n_k, self.padding)
+    }
+
+    /// Upsampled (pre-padding) size: `2N - 1`.
+    pub fn upsampled_size(&self) -> usize {
+        2 * self.n_in - 1
+    }
+
+    /// True if the output feature map has odd spatial dimensions — the
+    /// case where the prior grouped approach over-computes.
+    pub fn odd_output(&self) -> bool {
+        self.out_size() % 2 == 1
+    }
+}
+
+/// Output spatial size `2N + 2P - n` (callers must ensure it's > 0).
+pub fn out_size(n_in: usize, n_k: usize, padding: usize) -> usize {
+    (2 * n_in + 2 * padding)
+        .checked_sub(n_k)
+        .expect("kernel larger than padded upsampled input")
+}
+
+/// Uniform view over full kernels and sub-kernels so the correlation
+/// helpers work with both.
+pub trait TapSet {
+    fn rows(&self) -> usize;
+    fn cols(&self) -> usize;
+    fn cin(&self) -> usize;
+    fn cout(&self) -> usize;
+    /// `[Cin, Cout]` row-major matrix at spatial tap `(u, v)`.
+    fn tap(&self, u: usize, v: usize) -> &[f32];
+}
+
+impl TapSet for Kernel {
+    fn rows(&self) -> usize {
+        self.n
+    }
+    fn cols(&self) -> usize {
+        self.n
+    }
+    fn cin(&self) -> usize {
+        self.cin
+    }
+    fn cout(&self) -> usize {
+        self.cout
+    }
+    fn tap(&self, u: usize, v: usize) -> &[f32] {
+        Kernel::tap(self, u, v)
+    }
+}
+
+impl TapSet for SubKernel {
+    fn rows(&self) -> usize {
+        self.rows
+    }
+    fn cols(&self) -> usize {
+        self.cols
+    }
+    fn cin(&self) -> usize {
+        self.cin
+    }
+    fn cout(&self) -> usize {
+        self.cout
+    }
+    fn tap(&self, u: usize, v: usize) -> &[f32] {
+        SubKernel::tap(self, u, v)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn out_size_formula() {
+        assert_eq!(out_size(4, 5, 2), 7); // Fig. 5 worked example
+        assert_eq!(out_size(4, 4, 2), 8); // GAN doubling layer
+        assert_eq!(out_size(224, 3, 1), 447);
+        assert_eq!(out_size(224, 5, 2), 447);
+    }
+
+    #[test]
+    fn gan_layer_doubles() {
+        let mut p = ConvTransposeParams::gan_layer();
+        p.n_in = 16;
+        assert_eq!(p.out_size(), 32);
+        assert!(!p.odd_output());
+    }
+
+    #[test]
+    fn odd_output_detection() {
+        let p = ConvTransposeParams::new(4, 5, 2, 1, 1);
+        assert_eq!(p.out_size(), 7);
+        assert!(p.odd_output());
+    }
+
+    #[test]
+    #[should_panic(expected = "kernel larger")]
+    fn oversized_kernel_panics() {
+        out_size(1, 5, 0);
+    }
+}

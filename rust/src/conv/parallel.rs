@@ -1,0 +1,229 @@
+//! Device-lane abstraction over the transpose-conv algorithms.
+//!
+//! The paper reports every experiment twice — "CPU" (single-thread
+//! C++) and "GPU" (CUDA grid).  On this testbed the two lanes are
+//! [`Lane::Serial`] and [`Lane::Parallel`] (thread-pool over the same
+//! output index space); DESIGN.md §2 argues why the conventional-vs-
+//! unified *ratio* survives the substitution.
+//!
+//! [`Algorithm`] × [`Lane`] is the full measurement matrix used by the
+//! bench harness and by the end-to-end examples.
+
+use crate::tensor::Feature;
+use crate::tensor::Kernel;
+
+use super::segregation::{segregate, Segregated};
+use super::{conventional, grouped, im2col, unified};
+
+/// Which transpose-convolution algorithm to run.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash)]
+pub enum Algorithm {
+    /// Algorithm 1 — bed-of-nails upsample + dense correlation.
+    Conventional,
+    /// HICSS'23 grouped segregation (prior work).
+    Grouped,
+    /// **Algorithm 2 — unified segregation (the contribution),**
+    /// phase-decomposed hot path.
+    Unified,
+    /// Algorithm 2, literal per-element formulation (ablation lane).
+    UnifiedPerElement,
+    /// GEMM-based transpose conv (§5 discussion baseline).
+    Im2col,
+}
+
+impl Algorithm {
+    pub fn name(&self) -> &'static str {
+        match self {
+            Algorithm::Conventional => "conventional",
+            Algorithm::Grouped => "grouped",
+            Algorithm::Unified => "unified",
+            Algorithm::UnifiedPerElement => "unified-per-element",
+            Algorithm::Im2col => "im2col",
+        }
+    }
+
+    /// All algorithms, for exhaustive test/bench sweeps.
+    pub fn all() -> [Algorithm; 5] {
+        [
+            Algorithm::Conventional,
+            Algorithm::Grouped,
+            Algorithm::Unified,
+            Algorithm::UnifiedPerElement,
+            Algorithm::Im2col,
+        ]
+    }
+}
+
+/// Execution lane: the paper's CPU (serial) or GPU (parallel) column.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash)]
+pub enum Lane {
+    Serial,
+    /// Thread-pool lane with this many workers.
+    Parallel(usize),
+}
+
+impl Lane {
+    pub fn name(&self) -> String {
+        match self {
+            Lane::Serial => "serial".to_string(),
+            Lane::Parallel(w) => format!("parallel({w})"),
+        }
+    }
+}
+
+/// Run `alg` on `lane`.  Segregation (where applicable) is performed
+/// inside the call — use [`run_seg`] to amortize it across calls the
+/// way a real layer does (weights are segregated once at load time).
+pub fn run(alg: Algorithm, lane: Lane, x: &Feature, k: &Kernel, padding: usize) -> Feature {
+    match (alg, lane) {
+        (Algorithm::Conventional, Lane::Serial) => conventional::transpose_conv(x, k, padding),
+        (Algorithm::Conventional, Lane::Parallel(w)) => {
+            conventional::transpose_conv_par(x, k, padding, w)
+        }
+        (Algorithm::Grouped, Lane::Serial) => grouped::transpose_conv(x, k, padding),
+        (Algorithm::Grouped, Lane::Parallel(w)) => {
+            grouped::transpose_conv_par_seg(x, &segregate(k), padding, w)
+        }
+        (Algorithm::Unified, Lane::Serial) => unified::transpose_conv(x, k, padding),
+        (Algorithm::Unified, Lane::Parallel(w)) => {
+            unified::transpose_conv_par(x, k, padding, w)
+        }
+        (Algorithm::UnifiedPerElement, Lane::Serial) => {
+            unified::transpose_conv_per_element(x, k, padding)
+        }
+        (Algorithm::UnifiedPerElement, Lane::Parallel(w)) => {
+            let seg = segregate(k);
+            unified_per_element_par(x, &seg, padding, w)
+        }
+        (Algorithm::Im2col, Lane::Serial) => im2col::transpose_conv(x, k, padding),
+        (Algorithm::Im2col, Lane::Parallel(_)) => im2col::transpose_conv(x, k, padding),
+    }
+}
+
+/// Run from a pre-segregated kernel (weights prepared once at model
+/// load — the deployment-realistic path).  Falls back to the full
+/// kernel for algorithms that do not use segregation.
+pub fn run_seg(
+    alg: Algorithm,
+    lane: Lane,
+    x: &Feature,
+    k: &Kernel,
+    seg: &Segregated,
+    padding: usize,
+) -> Feature {
+    match (alg, lane) {
+        (Algorithm::Grouped, Lane::Serial) => grouped::transpose_conv_seg(x, seg, padding),
+        (Algorithm::Grouped, Lane::Parallel(w)) => {
+            grouped::transpose_conv_par_seg(x, seg, padding, w)
+        }
+        (Algorithm::Unified, Lane::Serial) => unified::transpose_conv_seg(x, seg, padding),
+        (Algorithm::Unified, Lane::Parallel(w)) => {
+            unified::transpose_conv_par_seg(x, seg, padding, w)
+        }
+        (Algorithm::UnifiedPerElement, Lane::Serial) => {
+            unified::transpose_conv_per_element_seg(x, seg, padding)
+        }
+        (Algorithm::UnifiedPerElement, Lane::Parallel(w)) => {
+            unified_per_element_par(x, seg, padding, w)
+        }
+        _ => run(alg, lane, x, k, padding),
+    }
+}
+
+/// The paper's *exact* GPU mapping for Algorithm 2: one work-item per
+/// output element with runtime sub-kernel selection, distributed over
+/// threads by output-row chunks.
+pub fn unified_per_element_par(
+    x: &Feature,
+    seg: &Segregated,
+    padding: usize,
+    workers: usize,
+) -> Feature {
+    use crate::util::threadpool::parallel_chunks_mut;
+    assert_eq!(x.h, x.w, "square inputs only (paper setting)");
+    let ho = super::out_size(x.h, seg.n, padding);
+    let cout = seg.subs[0].cout;
+    let n = x.h as isize;
+    let p = padding as isize;
+    let mut out = Feature::zeros(ho, ho, cout);
+    parallel_chunks_mut(&mut out.data, ho.max(1), workers, |i, row| {
+        let ii = i as isize;
+        let base_i = (ii - p).div_euclid(2) + ((ii - p).rem_euclid(2) != 0) as isize;
+        for j in 0..ho {
+            let jj = j as isize;
+            let base_j = (jj - p).div_euclid(2) + ((jj - p).rem_euclid(2) != 0) as isize;
+            let sub = seg.for_output_parity(i % 2, j % 2, padding);
+            let acc = &mut row[j * cout..(j + 1) * cout];
+            for u in 0..sub.rows {
+                let iy = base_i + u as isize;
+                if iy < 0 || iy >= n {
+                    continue;
+                }
+                for v in 0..sub.cols {
+                    let ix = base_j + v as isize;
+                    if ix < 0 || ix >= n {
+                        continue;
+                    }
+                    let px = x.pixel(iy as usize, ix as usize);
+                    let tap = sub.tap(u, v);
+                    for (ci, &xv) in px.iter().enumerate() {
+                        let trow = &tap[ci * cout..(ci + 1) * cout];
+                        for (a, &t) in acc.iter_mut().zip(trow) {
+                            *a += xv * t;
+                        }
+                    }
+                }
+            }
+        }
+    });
+    out
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::tensor::ops;
+    use crate::util::rng::Rng;
+
+    #[test]
+    fn all_algorithms_agree_all_lanes() {
+        let mut rng = Rng::seeded(30);
+        for (n_in, nk, p) in [(4, 4, 2), (4, 5, 2), (5, 3, 1), (6, 4, 0)] {
+            let x = Feature::random(n_in, n_in, 3, &mut rng);
+            let k = Kernel::random(nk, 3, 2, &mut rng);
+            let want = run(Algorithm::Conventional, Lane::Serial, &x, &k, p);
+            for alg in Algorithm::all() {
+                for lane in [Lane::Serial, Lane::Parallel(4)] {
+                    let got = run(alg, lane, &x, &k, p);
+                    assert!(
+                        ops::max_abs_diff(&want, &got) < 1e-3,
+                        "{} on {} disagrees (n={n_in} k={nk} p={p})",
+                        alg.name(),
+                        lane.name()
+                    );
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn run_seg_matches_run() {
+        let mut rng = Rng::seeded(31);
+        let x = Feature::random(6, 6, 2, &mut rng);
+        let k = Kernel::random(4, 2, 3, &mut rng);
+        let seg = segregate(&k);
+        for alg in Algorithm::all() {
+            let a = run(alg, Lane::Serial, &x, &k, 2);
+            let b = run_seg(alg, Lane::Serial, &x, &k, &seg, 2);
+            assert!(ops::max_abs_diff(&a, &b) < 1e-4, "{}", alg.name());
+        }
+    }
+
+    #[test]
+    fn names_unique() {
+        let names: Vec<_> = Algorithm::all().iter().map(|a| a.name()).collect();
+        let mut dedup = names.clone();
+        dedup.dedup();
+        assert_eq!(names.len(), dedup.len());
+    }
+}

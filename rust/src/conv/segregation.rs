@@ -1,0 +1,202 @@
+//! Kernel segregation mechanism (paper §3.1–§3.2, Fig. 4).
+//!
+//! Splits the original `n×n` kernel into four sub-kernels by taking
+//! every other row/column:
+//!
+//! * `k00 = K[0::2, 0::2]` — `⌈n/2⌉ × ⌈n/2⌉` (9 elements for 5×5)
+//! * `k01 = K[0::2, 1::2]` — `⌈n/2⌉ × ⌊n/2⌋` (6)
+//! * `k10 = K[1::2, 0::2]` — `⌊n/2⌋ × ⌈n/2⌉` (6)
+//! * `k11 = K[1::2, 1::2]` — `⌊n/2⌋ × ⌊n/2⌋` (4)
+//!
+//! Sub-kernel `k_rs` contains exactly the kernel taps that land on
+//! non-zero (even) positions of the upsampled map when the output index
+//! has parity `(r, s)` — so convolving the raw input with `k_rs`
+//! reproduces phase `(r, s)` of the output with zero wasted
+//! multiplications.
+//!
+//! §3.4: with padding factor `P`, the sub-kernel serving output parity
+//! `(rp, sp)` is `k_{(rp+P)%2, (sp+P)%2}` — for odd `P` the roles swap
+//! to `k11, k10, k01, k00`.
+
+use crate::tensor::{Kernel, SubKernel};
+
+/// The four segregated sub-kernels, indexed `[r*2 + s]`.
+#[derive(Debug, Clone, PartialEq)]
+pub struct Segregated {
+    pub subs: [SubKernel; 4],
+    /// Original kernel size `n`.
+    pub n: usize,
+}
+
+/// Segregate `k` into the four sub-kernels (Fig. 4).
+pub fn segregate(k: &Kernel) -> Segregated {
+    let n = k.n;
+    let make = |r: usize, s: usize| -> SubKernel {
+        let rows = (n - r).div_ceil(2);
+        let cols = (n - s).div_ceil(2);
+        let mut sub = SubKernel::zeros(rows, cols, k.cin, k.cout);
+        for (su, u) in (r..n).step_by(2).enumerate() {
+            for (sv, v) in (s..n).step_by(2).enumerate() {
+                let src = k.tap(u, v);
+                let base = sub.idx(su, sv, 0, 0);
+                sub.data[base..base + src.len()].copy_from_slice(src);
+            }
+        }
+        sub
+    };
+    Segregated {
+        subs: [make(0, 0), make(0, 1), make(1, 0), make(1, 1)],
+        n,
+    }
+}
+
+impl Segregated {
+    /// Sub-kernel for output parity `(rp, sp)` under padding factor `P`
+    /// (§3.4 role swap folded in).
+    pub fn for_output_parity(&self, rp: usize, sp: usize, padding: usize) -> &SubKernel {
+        let r = (rp + padding) % 2;
+        let s = (sp + padding) % 2;
+        &self.subs[r * 2 + s]
+    }
+
+    /// Total spatial taps across all four sub-kernels (== n²).
+    pub fn total_taps(&self) -> usize {
+        self.subs.iter().map(|s| s.taps()).sum()
+    }
+
+    /// Bytes of all sub-kernel data (equals the original kernel's bytes:
+    /// segregation re-arranges, never duplicates).
+    pub fn bytes(&self) -> usize {
+        self.subs.iter().map(|s| s.bytes()).sum()
+    }
+
+    /// The §5-discussed bookkeeping array: the four (rows, cols) pairs a
+    /// device implementation keeps resident (≤ 32 bytes in the paper).
+    pub fn size_table(&self) -> [(usize, usize); 4] {
+        [
+            (self.subs[0].rows, self.subs[0].cols),
+            (self.subs[1].rows, self.subs[1].cols),
+            (self.subs[2].rows, self.subs[2].cols),
+            (self.subs[3].rows, self.subs[3].cols),
+        ]
+    }
+}
+
+/// Reassemble the original kernel from its segregation (inverse of
+/// [`segregate`]; used by property tests).
+pub fn desegregate(seg: &Segregated, cin: usize, cout: usize) -> Kernel {
+    let n = seg.n;
+    let mut k = Kernel::zeros(n, cin, cout);
+    for r in 0..2 {
+        for s in 0..2 {
+            let sub = &seg.subs[r * 2 + s];
+            for (su, u) in (r..n).step_by(2).enumerate() {
+                for (sv, v) in (s..n).step_by(2).enumerate() {
+                    let dst = k.idx(u, v, 0, 0);
+                    let src = sub.idx(su, sv, 0, 0);
+                    let len = cin * cout;
+                    let tmp = sub.data[src..src + len].to_vec();
+                    k.data[dst..dst + len].copy_from_slice(&tmp);
+                }
+            }
+        }
+    }
+    k
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::prop::{forall, Config};
+    use crate::util::rng::Rng;
+
+    #[test]
+    fn fig4_sizes_for_5x5() {
+        let mut rng = Rng::seeded(1);
+        let k = Kernel::random(5, 1, 1, &mut rng);
+        let seg = segregate(&k);
+        assert_eq!((seg.subs[0].rows, seg.subs[0].cols), (3, 3)); // 9
+        assert_eq!((seg.subs[1].rows, seg.subs[1].cols), (3, 2)); // 6
+        assert_eq!((seg.subs[2].rows, seg.subs[2].cols), (2, 3)); // 6
+        assert_eq!((seg.subs[3].rows, seg.subs[3].cols), (2, 2)); // 4
+        assert_eq!(seg.total_taps(), 25);
+    }
+
+    #[test]
+    fn even_kernel_equal_subs() {
+        let mut rng = Rng::seeded(2);
+        let k = Kernel::random(4, 1, 1, &mut rng);
+        let seg = segregate(&k);
+        for sub in &seg.subs {
+            assert_eq!((sub.rows, sub.cols), (2, 2));
+        }
+        assert_eq!(seg.total_taps(), 16);
+    }
+
+    #[test]
+    fn values_land_in_right_subkernel() {
+        // k[u][v] = 10*u + v, single channel → easy to check placement.
+        let n = 5;
+        let mut k = Kernel::zeros(n, 1, 1);
+        for u in 0..n {
+            for v in 0..n {
+                let i = k.idx(u, v, 0, 0);
+                k.data[i] = (10 * u + v) as f32;
+            }
+        }
+        let seg = segregate(&k);
+        assert_eq!(seg.subs[0].get(0, 0, 0, 0), 0.0); // k[0][0]
+        assert_eq!(seg.subs[0].get(1, 1, 0, 0), 22.0); // k[2][2]
+        assert_eq!(seg.subs[1].get(0, 0, 0, 0), 1.0); // k[0][1]
+        assert_eq!(seg.subs[2].get(0, 0, 0, 0), 10.0); // k[1][0]
+        assert_eq!(seg.subs[3].get(1, 1, 0, 0), 33.0); // k[3][3]
+    }
+
+    #[test]
+    fn parity_selection_even_padding() {
+        let mut rng = Rng::seeded(3);
+        let k = Kernel::random(5, 1, 1, &mut rng);
+        let seg = segregate(&k);
+        // Even P: identity mapping.
+        assert_eq!(
+            seg.for_output_parity(0, 1, 2) as *const _,
+            &seg.subs[1] as *const _
+        );
+        // Odd P: role swap k00 ↔ k11, k01 ↔ k10 (§3.4).
+        assert_eq!(
+            seg.for_output_parity(0, 0, 1) as *const _,
+            &seg.subs[3] as *const _
+        );
+        assert_eq!(
+            seg.for_output_parity(0, 1, 3) as *const _,
+            &seg.subs[2] as *const _
+        );
+    }
+
+    #[test]
+    fn size_table_fits_32_bytes() {
+        // §5: the sub-kernel size array is ≤ 32 bytes on device (4 pairs
+        // of u32).  Sanity-check our table is exactly 4 pairs.
+        let mut rng = Rng::seeded(4);
+        let k = Kernel::random(3, 2, 2, &mut rng);
+        let table = segregate(&k).size_table();
+        assert_eq!(table.len(), 4);
+        assert_eq!(std::mem::size_of_val(&[0u32; 8]), 32);
+    }
+
+    #[test]
+    fn prop_segregate_partitions_and_roundtrips() {
+        forall(Config::default().cases(40), "segregate-roundtrip", |rng| {
+            let n = rng.range(2, 7);
+            let cin = rng.range(1, 3);
+            let cout = rng.range(1, 3);
+            let mut r2 = rng.split();
+            let k = Kernel::random(n, cin, cout, &mut r2);
+            let seg = segregate(&k);
+            let ok_taps = seg.total_taps() == n * n;
+            let ok_bytes = seg.bytes() == k.bytes();
+            let back = desegregate(&seg, cin, cout);
+            ((n, cin, cout), ok_taps && ok_bytes && back == k)
+        });
+    }
+}

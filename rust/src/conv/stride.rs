@@ -1,0 +1,210 @@
+//! Generalized stride-`s` kernel segregation (extension beyond the
+//! paper, which fixes `s = 2`).
+//!
+//! For stride `s`, bed-of-nails upsampling maps `N×N → (sN - s + 1)²`
+//! with real pixels at multiples of `s`; the kernel segregates into
+//! `s × s` sub-kernels `k_rs = K[r::s, s'::s]` and output element
+//! `(i, j)` (padding `P`) uses `k_{(i+P)%s, (j+P)%s}` starting at input
+//! offset `⌈(i − P)/s⌉`.  Setting `s = 2` recovers Algorithm 2 exactly
+//! (checked by a regression test against `unified`).
+
+use crate::tensor::{Feature, SubKernel};
+use crate::tensor::Kernel;
+
+/// Output size for stride `s`: `(sN - s + 1) + 2P - n + 1`.
+pub fn out_size_s(n_in: usize, n_k: usize, padding: usize, stride: usize) -> usize {
+    (stride * n_in - stride + 1 + 2 * padding)
+        .checked_sub(n_k)
+        .expect("kernel larger than padded upsampled input")
+        + 1
+}
+
+/// `s × s` segregation: `subs[r * s + c] = K[r::s, c::s]`.
+pub fn segregate_s(k: &Kernel, stride: usize) -> Vec<SubKernel> {
+    assert!(stride >= 1);
+    let n = k.n;
+    let mut subs = Vec::with_capacity(stride * stride);
+    for r in 0..stride {
+        for c in 0..stride {
+            let rows = if n > r { (n - r).div_ceil(stride) } else { 0 };
+            let cols = if n > c { (n - c).div_ceil(stride) } else { 0 };
+            let mut sub = SubKernel::zeros(rows.max(0), cols.max(0), k.cin, k.cout);
+            for (su, u) in (r..n).step_by(stride).enumerate() {
+                for (sv, v) in (c..n).step_by(stride).enumerate() {
+                    let src = k.tap(u, v);
+                    let base = sub.idx(su, sv, 0, 0);
+                    sub.data[base..base + src.len()].copy_from_slice(src);
+                }
+            }
+            subs.push(sub);
+        }
+    }
+    subs
+}
+
+/// Reference: bed-of-nails upsample with stride `s` then dense VALID
+/// correlation (the generalization of Algorithm 1).
+pub fn transpose_conv_naive_s(
+    x: &Feature,
+    k: &Kernel,
+    padding: usize,
+    stride: usize,
+) -> Feature {
+    use crate::tensor::ops;
+    let side = stride * x.h - stride + 1;
+    let mut up = Feature::zeros(side, side, x.c);
+    for y in 0..x.h {
+        for xx in 0..x.w {
+            let src = x.idx(y, xx, 0);
+            let dst = up.idx(stride * y, stride * xx, 0);
+            up.data[dst..dst + x.c].copy_from_slice(&x.data[src..src + x.c]);
+        }
+    }
+    let padded = ops::pad(&up, padding);
+    super::conventional::correlate_valid(&padded, k)
+}
+
+/// Unified stride-`s` segregated transpose conv (per-element form with
+/// runtime sub-kernel selection — the natural generalization of the
+/// paper's Algorithm 2).
+pub fn transpose_conv_unified_s(
+    x: &Feature,
+    k: &Kernel,
+    padding: usize,
+    stride: usize,
+) -> Feature {
+    assert_eq!(x.h, x.w, "square inputs only");
+    let subs = segregate_s(k, stride);
+    let n = x.h as isize;
+    let s = stride as isize;
+    let p = padding as isize;
+    let ho = out_size_s(x.h, k.n, padding, stride);
+    let cout = k.cout;
+    let mut out = Feature::zeros(ho, ho, cout);
+    for i in 0..ho {
+        let ii = i as isize;
+        // Selection: u ≡ (P − i) mod s (for s=2 this equals the paper's
+        // (i+P) mod 2); base(i) = ceil((i − P)/s).
+        let r = ((p - ii).rem_euclid(s)) as usize;
+        let base_i = (ii - p).div_euclid(s)
+            + ((ii - p).rem_euclid(s) != 0) as isize;
+        for j in 0..ho {
+            let jj = j as isize;
+            let c = ((p - jj).rem_euclid(s)) as usize;
+            let base_j = (jj - p).div_euclid(s)
+                + ((jj - p).rem_euclid(s) != 0) as isize;
+            let sub = &subs[r * stride + c];
+            if sub.rows == 0 || sub.cols == 0 {
+                continue;
+            }
+            let dst = out.idx(i, j, 0);
+            // Split the mutable borrow: take the accumulator row out.
+            for u in 0..sub.rows {
+                let iy = base_i + u as isize;
+                if iy < 0 || iy >= n {
+                    continue;
+                }
+                for v in 0..sub.cols {
+                    let ix = base_j + v as isize;
+                    if ix < 0 || ix >= n {
+                        continue;
+                    }
+                    let px_base = x.idx(iy as usize, ix as usize, 0);
+                    let tap = sub.tap(u, v);
+                    for ci in 0..x.c {
+                        let xv = x.data[px_base + ci];
+                        let trow = &tap[ci * cout..(ci + 1) * cout];
+                        for (co, &t) in trow.iter().enumerate() {
+                            out.data[dst + co] += xv * t;
+                        }
+                    }
+                }
+            }
+        }
+    }
+    out
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::conv::unified;
+    use crate::tensor::ops;
+    use crate::util::prop::{close, forall_res, Config};
+    use crate::util::rng::Rng;
+
+    #[test]
+    fn stride2_recovers_algorithm2() {
+        let mut rng = Rng::seeded(90);
+        for (n_in, nk, p) in [(4, 4, 2), (5, 3, 1), (4, 5, 2)] {
+            let x = Feature::random(n_in, n_in, 2, &mut rng);
+            let k = Kernel::random(nk, 2, 2, &mut rng);
+            let a = unified::transpose_conv(&x, &k, p);
+            let b = transpose_conv_unified_s(&x, &k, p, 2);
+            assert_eq!((a.h, a.w), (b.h, b.w));
+            assert!(ops::max_abs_diff(&a, &b) < 1e-4, "n={n_in} k={nk} p={p}");
+        }
+    }
+
+    #[test]
+    fn stride3_matches_naive() {
+        let mut rng = Rng::seeded(91);
+        for (n_in, nk, p) in [(3, 3, 0), (4, 4, 2), (3, 5, 2)] {
+            let x = Feature::random(n_in, n_in, 2, &mut rng);
+            let k = Kernel::random(nk, 2, 2, &mut rng);
+            let a = transpose_conv_naive_s(&x, &k, p, 3);
+            let b = transpose_conv_unified_s(&x, &k, p, 3);
+            assert_eq!((a.h, a.w), (b.h, b.w));
+            assert!(ops::max_abs_diff(&a, &b) < 1e-4, "n={n_in} k={nk} p={p}");
+        }
+    }
+
+    #[test]
+    fn stride1_is_plain_convolution() {
+        // s=1: no upsampling at all; unified == plain padded correlation.
+        let mut rng = Rng::seeded(92);
+        let x = Feature::random(5, 5, 2, &mut rng);
+        let k = Kernel::random(3, 2, 2, &mut rng);
+        let a = transpose_conv_naive_s(&x, &k, 1, 1);
+        let b = transpose_conv_unified_s(&x, &k, 1, 1);
+        assert!(ops::max_abs_diff(&a, &b) < 1e-4);
+    }
+
+    #[test]
+    fn segregation_partitions_for_any_stride() {
+        let mut rng = Rng::seeded(93);
+        for stride in 1..=4 {
+            for nk in 2..=6 {
+                let k = Kernel::random(nk, 1, 1, &mut rng);
+                let subs = segregate_s(&k, stride);
+                assert_eq!(subs.len(), stride * stride);
+                let total: usize = subs.iter().map(|s| s.taps()).sum();
+                assert_eq!(total, nk * nk, "stride={stride} nk={nk}");
+            }
+        }
+    }
+
+    #[test]
+    fn prop_general_stride_equivalence() {
+        forall_res(
+            Config::default().cases(40),
+            "stride-s unified == naive",
+            |rng| {
+                let stride = rng.range(1, 4);
+                let n_in = rng.range(2, 5);
+                let nk = rng.range(2, 5);
+                let p = rng.range(0, 2);
+                let up_side = stride * n_in - stride + 1 + 2 * p;
+                if up_side < nk {
+                    return ((stride, n_in, nk, p), Ok(()));
+                }
+                let mut r2 = rng.split();
+                let x = Feature::random(n_in, n_in, 2, &mut r2);
+                let k = Kernel::random(nk, 2, 2, &mut r2);
+                let a = transpose_conv_naive_s(&x, &k, p, stride);
+                let b = transpose_conv_unified_s(&x, &k, p, stride);
+                ((stride, n_in, nk, p), close(&a.data, &b.data, 1e-3))
+            },
+        );
+    }
+}

@@ -1,0 +1,391 @@
+//! **The paper's contribution**: unified kernel-segregated transpose
+//! convolution (Algorithm 2, Eqs. 1–4).
+//!
+//! No upsampled buffer is ever materialized.  Each output element
+//! `(i, j)` is produced by correlating the *raw* input with the
+//! sub-kernel selected at runtime from the output parity
+//! (`k_{(i+P)%2, (j+P)%2}`, §3.4 role swap folded in), starting at input
+//! offset `base(i) = ⌈(i − P)/2⌉`.
+//!
+//! Two formulations, numerically identical:
+//!
+//! * [`transpose_conv`] — **phase decomposition** (the optimized hot
+//!   path): the parity selection is hoisted out of the inner loop, so
+//!   each of the four phases becomes one dense VALID correlation over a
+//!   contiguous input slab, written back with strided stores.  This is
+//!   the TPU/MXU-shaped formulation (DESIGN.md §Hardware-Adaptation)
+//!   and also what the Pallas kernel does.
+//! * [`transpose_conv_per_element`] — the literal Algorithm 2 loop (one
+//!   logical work-item per output element, runtime sub-kernel pick).
+//!   Kept as the faithful-to-pseudocode lane and for the formulation
+//!   ablation bench.
+
+use crate::tensor::{ops, Feature};
+use crate::util::threadpool;
+
+use super::conventional::correlate_valid_into;
+use super::segregation::{segregate, Segregated};
+use super::out_size;
+use crate::tensor::Kernel;
+
+/// Static geometry of one parity phase (mirrors the Python
+/// `_phase_geometry`; see `python/compile/kernels/unified.py`).
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct PhaseGeometry {
+    /// Output parity (row, col).
+    pub rp: usize,
+    pub sp: usize,
+    /// Index into `Segregated::subs`.
+    pub sub: usize,
+    /// Zero-padding of the raw input: (top, bottom, left, right).
+    pub pads: (usize, usize, usize, usize),
+    /// Slab window in the padded input: rows `[row0, row1)`, cols
+    /// `[col0, col1)`.
+    pub rows: (usize, usize),
+    pub cols: (usize, usize),
+    /// Phase output extent.
+    pub n_rows: usize,
+    pub n_cols: usize,
+}
+
+/// Compute the four phase geometries for input `n`, kernel `nk`,
+/// padding `p`.  Phases with an empty output are omitted.
+pub fn phase_geometries(n: usize, nk: usize, p: usize) -> Vec<PhaseGeometry> {
+    let ho = out_size(n, nk, p) as isize;
+    let pi = p as isize;
+    let ni = n as isize;
+    let mut out = Vec::with_capacity(4);
+    for rp in 0..2isize {
+        for sp in 0..2isize {
+            let r = ((rp + pi) % 2) as usize;
+            let s = ((sp + pi) % 2) as usize;
+            let kr = ((nk - r) as isize + 1) / 2; // ceil((nk - r)/2)
+            let kc = ((nk - s) as isize + 1) / 2;
+            let n_rows = if ho > rp { (ho - rp + 1) / 2 } else { 0 };
+            let n_cols = if ho > sp { (ho - sp + 1) / 2 } else { 0 };
+            if n_rows == 0 || n_cols == 0 || kr == 0 || kc == 0 {
+                continue;
+            }
+            // base(i) = ceil((i - P)/2) at i = rp  (then +1 per phase row)
+            let base0_r = (rp - pi).div_euclid(2) + ((rp - pi).rem_euclid(2) != 0) as isize;
+            let base0_c = (sp - pi).div_euclid(2) + ((sp - pi).rem_euclid(2) != 0) as isize;
+            let (lo_r, hi_r) = (base0_r, base0_r + n_rows - 1 + kr - 1);
+            let (lo_c, hi_c) = (base0_c, base0_c + n_cols - 1 + kc - 1);
+            let pad_lo_r = (-lo_r).max(0) as usize;
+            let pad_hi_r = (hi_r - (ni - 1)).max(0) as usize;
+            let pad_lo_c = (-lo_c).max(0) as usize;
+            let pad_hi_c = (hi_c - (ni - 1)).max(0) as usize;
+            out.push(PhaseGeometry {
+                rp: rp as usize,
+                sp: sp as usize,
+                sub: r * 2 + s,
+                pads: (pad_lo_r, pad_hi_r, pad_lo_c, pad_hi_c),
+                rows: (
+                    (lo_r + pad_lo_r as isize) as usize,
+                    (hi_r + pad_lo_r as isize + 1) as usize,
+                ),
+                cols: (
+                    (lo_c + pad_lo_c as isize) as usize,
+                    (hi_c + pad_lo_c as isize + 1) as usize,
+                ),
+                n_rows: n_rows as usize,
+                n_cols: n_cols as usize,
+            });
+        }
+    }
+    out
+}
+
+/// Build the contiguous input slab for one phase.
+fn phase_slab(x: &Feature, g: &PhaseGeometry) -> Feature {
+    let (pt, pb, pl, pr) = g.pads;
+    let padded = if pt + pb + pl + pr == 0 {
+        x.clone()
+    } else {
+        ops::pad_asym(x, pt, pb, pl, pr)
+    };
+    ops::crop(
+        &padded,
+        g.rows.0,
+        g.cols.0,
+        g.rows.1 - g.rows.0,
+        g.cols.1 - g.cols.0,
+    )
+}
+
+/// Scatter a phase result into the strided positions of the output.
+fn scatter_phase(out: &mut Feature, phase: &Feature, rp: usize, sp: usize) {
+    let c = out.c;
+    for (py, y) in (rp..out.h).step_by(2).enumerate().take(phase.h) {
+        for (px, x) in (sp..out.w).step_by(2).enumerate().take(phase.w) {
+            let src = phase.idx(py, px, 0);
+            let dst = out.idx(y, x, 0);
+            out.data[dst..dst + c].copy_from_slice(&phase.data[src..src + c]);
+        }
+    }
+}
+
+/// Unified transpose convolution from a pre-segregated kernel —
+/// phase-decomposed hot path.
+pub fn transpose_conv_seg(x: &Feature, seg: &Segregated, padding: usize) -> Feature {
+    assert_eq!(x.h, x.w, "square inputs only (paper setting)");
+    let ho = out_size(x.h, seg.n, padding);
+    let cout = seg.subs[0].cout;
+    let mut out = Feature::zeros(ho, ho, cout);
+    for g in phase_geometries(x.h, seg.n, padding) {
+        let slab = phase_slab(x, &g);
+        let sub = &seg.subs[g.sub];
+        let mut phase = Feature::zeros(g.n_rows, g.n_cols, cout);
+        correlate_valid_into(&slab, sub, &mut phase.data, g.n_cols, 0, g.n_rows);
+        scatter_phase(&mut out, &phase, g.rp, g.sp);
+    }
+    out
+}
+
+/// Unified transpose convolution (segregates internally).
+pub fn transpose_conv(x: &Feature, k: &Kernel, padding: usize) -> Feature {
+    transpose_conv_seg(x, &segregate(k), padding)
+}
+
+/// Literal Algorithm 2: one logical work-item per output element with a
+/// runtime sub-kernel selection.  Faithful to the paper's pseudocode;
+/// slower than the phase form on CPUs (the formulation ablation
+/// quantifies by how much).
+pub fn transpose_conv_per_element(x: &Feature, k: &Kernel, padding: usize) -> Feature {
+    let seg = segregate(k);
+    transpose_conv_per_element_seg(x, &seg, padding)
+}
+
+/// Per-element formulation from a pre-segregated kernel.
+pub fn transpose_conv_per_element_seg(
+    x: &Feature,
+    seg: &Segregated,
+    padding: usize,
+) -> Feature {
+    assert_eq!(x.h, x.w, "square inputs only (paper setting)");
+    let n = x.h as isize;
+    let ho = out_size(x.h, seg.n, padding);
+    let cin = x.c;
+    let cout = seg.subs[0].cout;
+    let p = padding as isize;
+    let mut out = Feature::zeros(ho, ho, cout);
+    for i in 0..ho {
+        let ii = i as isize;
+        let base_i = (ii - p).div_euclid(2) + ((ii - p).rem_euclid(2) != 0) as isize;
+        for j in 0..ho {
+            let jj = j as isize;
+            let base_j = (jj - p).div_euclid(2) + ((jj - p).rem_euclid(2) != 0) as isize;
+            // Runtime sub-kernel selection: r ← (i+P)%2, s ← (j+P)%2.
+            let sub = seg.for_output_parity(i % 2, j % 2, padding);
+            let dst = out.idx(i, j, 0);
+            let acc = &mut out.data[dst..dst + cout];
+            for u in 0..sub.rows {
+                let iy = base_i + u as isize;
+                if iy < 0 || iy >= n {
+                    continue; // zero padding
+                }
+                for v in 0..sub.cols {
+                    let ix = base_j + v as isize;
+                    if ix < 0 || ix >= n {
+                        continue;
+                    }
+                    let px = x.pixel(iy as usize, ix as usize);
+                    let tap = sub.tap(u, v);
+                    for (ci, &xv) in px.iter().enumerate().take(cin) {
+                        let trow = &tap[ci * cout..(ci + 1) * cout];
+                        for (a, &t) in acc.iter_mut().zip(trow) {
+                            *a += xv * t;
+                        }
+                    }
+                }
+            }
+        }
+    }
+    out
+}
+
+/// Phase-decomposed parallel lane: phases × row-chunks over `workers`
+/// threads.  The "GPU" emulation of the paper's unified CUDA kernel.
+pub fn transpose_conv_par(x: &Feature, k: &Kernel, padding: usize, workers: usize) -> Feature {
+    let seg = segregate(k);
+    transpose_conv_par_seg(x, &seg, padding, workers)
+}
+
+/// Parallel phase-decomposed lane from a pre-segregated kernel.
+pub fn transpose_conv_par_seg(
+    x: &Feature,
+    seg: &Segregated,
+    padding: usize,
+    workers: usize,
+) -> Feature {
+    assert_eq!(x.h, x.w, "square inputs only (paper setting)");
+    let ho = out_size(x.h, seg.n, padding);
+    let cout = seg.subs[0].cout;
+    let mut out = Feature::zeros(ho, ho, cout);
+    let geoms = phase_geometries(x.h, seg.n, padding);
+    // Compute each phase into its own buffer in parallel (row-chunked),
+    // then scatter serially (pure memcpy, memory-bound).
+    let mut phases: Vec<Feature> = geoms
+        .iter()
+        .map(|g| Feature::zeros(g.n_rows, g.n_cols, cout))
+        .collect();
+    let slabs: Vec<Feature> = geoms.iter().map(|g| phase_slab(x, g)).collect();
+    for ((g, slab), phase) in geoms.iter().zip(&slabs).zip(&mut phases) {
+        let sub = &seg.subs[g.sub];
+        let n_cols = g.n_cols;
+        threadpool::parallel_chunks_mut(
+            &mut phase.data,
+            g.n_rows.max(1),
+            workers,
+            |row, chunk| {
+                correlate_valid_into(slab, sub, chunk, n_cols, row, row + 1);
+            },
+        );
+    }
+    for (g, phase) in geoms.iter().zip(&phases) {
+        scatter_phase(&mut out, phase, g.rp, g.sp);
+    }
+    out
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::conv::conventional;
+    use crate::util::prop::{close, forall_res, Config};
+    use crate::util::rng::Rng;
+
+    fn check_case(n_in: usize, nk: usize, p: usize, cin: usize, cout: usize, seed: u64) {
+        let mut rng = Rng::seeded(seed);
+        let x = Feature::random(n_in, n_in, cin, &mut rng);
+        let k = Kernel::random(nk, cin, cout, &mut rng);
+        let want = conventional::transpose_conv(&x, &k, p);
+        let got = transpose_conv(&x, &k, p);
+        assert_eq!((got.h, got.w, got.c), (want.h, want.w, want.c));
+        assert!(
+            ops::max_abs_diff(&want, &got) < 1e-4,
+            "phase form mismatch n={n_in} k={nk} p={p}"
+        );
+        let got2 = transpose_conv_per_element(&x, &k, p);
+        assert!(
+            ops::max_abs_diff(&want, &got2) < 1e-4,
+            "per-element mismatch n={n_in} k={nk} p={p}"
+        );
+    }
+
+    #[test]
+    fn fig6_worked_example_geometry() {
+        // Fig. 5/6: input 4×4, kernel 5×5, conventional P=2 → output 7×7
+        // (odd!), proposed effective input padding ⌊P/2⌋ = 1.
+        let geoms = phase_geometries(4, 5, 2);
+        assert_eq!(geoms.len(), 4);
+        let g00 = geoms.iter().find(|g| (g.rp, g.sp) == (0, 0)).unwrap();
+        // Even P → parity (0,0) uses k00 and pads the raw input by 1.
+        assert_eq!(g00.sub, 0);
+        assert_eq!(g00.pads, (1, 1, 1, 1));
+        assert_eq!((g00.n_rows, g00.n_cols), (4, 4));
+        // Output 7×7 is odd: phase (1,1) covers only 3×3.
+        let g11 = geoms.iter().find(|g| (g.rp, g.sp) == (1, 1)).unwrap();
+        assert_eq!((g11.n_rows, g11.n_cols), (3, 3));
+    }
+
+    #[test]
+    fn fig6_numeric_equivalence() {
+        check_case(4, 5, 2, 3, 2, 10);
+    }
+
+    #[test]
+    fn gan_layer_equivalence() {
+        check_case(4, 4, 2, 8, 4, 11);
+        check_case(8, 4, 2, 4, 2, 12);
+    }
+
+    #[test]
+    fn odd_padding_role_swap() {
+        check_case(5, 3, 1, 2, 2, 13);
+        check_case(7, 5, 3, 2, 1, 14);
+    }
+
+    #[test]
+    fn no_padding() {
+        check_case(4, 5, 0, 1, 2, 15);
+        check_case(3, 2, 0, 2, 2, 16);
+    }
+
+    #[test]
+    fn degenerate_single_pixel() {
+        check_case(1, 3, 2, 1, 1, 17);
+    }
+
+    #[test]
+    fn parallel_matches_serial() {
+        let mut rng = Rng::seeded(18);
+        let x = Feature::random(9, 9, 3, &mut rng);
+        let k = Kernel::random(5, 3, 4, &mut rng);
+        let want = transpose_conv(&x, &k, 2);
+        for workers in [1, 2, 3, 8] {
+            let got = transpose_conv_par(&x, &k, 2, workers);
+            assert!(ops::max_abs_diff(&want, &got) < 1e-5);
+        }
+    }
+
+    #[test]
+    fn prop_unified_equals_conventional() {
+        forall_res(
+            Config::default().cases(60),
+            "unified == conventional (Alg.2 == Alg.1)",
+            |rng| {
+                let n_in = rng.range(1, 8);
+                let nk = rng.range(2, 6);
+                let p = rng.range(0, 3);
+                if 2 * n_in + 2 * p <= nk {
+                    return ((n_in, nk, p, 0, 0), Ok(())); // invalid geometry
+                }
+                let cin = rng.range(1, 4);
+                let cout = rng.range(1, 3);
+                let mut r2 = rng.split();
+                let x = Feature::random(n_in, n_in, cin, &mut r2);
+                let k = Kernel::random(nk, cin, cout, &mut r2);
+                let want = conventional::transpose_conv(&x, &k, p);
+                let got = transpose_conv(&x, &k, p);
+                let res = close(&want.data, &got.data, 1e-3);
+                ((n_in, nk, p, cin, cout), res)
+            },
+        );
+    }
+
+    #[test]
+    fn prop_per_element_equals_phase_form() {
+        forall_res(
+            Config::default().cases(40),
+            "per-element == phase decomposition",
+            |rng| {
+                let n_in = rng.range(1, 7);
+                let nk = rng.range(2, 5);
+                let p = rng.range(0, 3);
+                if 2 * n_in + 2 * p <= nk {
+                    return ((n_in, nk, p), Ok(()));
+                }
+                let mut r2 = rng.split();
+                let x = Feature::random(n_in, n_in, 2, &mut r2);
+                let k = Kernel::random(nk, 2, 2, &mut r2);
+                let a = transpose_conv(&x, &k, p);
+                let b = transpose_conv_per_element(&x, &k, p);
+                ((n_in, nk, p), close(&a.data, &b.data, 1e-4))
+            },
+        );
+    }
+
+    #[test]
+    fn phase_geometry_covers_output_exactly() {
+        // Union of phase extents == output size, no overlap (partition).
+        for (n, nk, p) in [(4, 5, 2), (4, 4, 2), (5, 3, 1), (7, 5, 3), (6, 4, 0)] {
+            let ho = out_size(n, nk, p);
+            let total: usize = phase_geometries(n, nk, p)
+                .iter()
+                .map(|g| g.n_rows * g.n_cols)
+                .sum();
+            assert_eq!(total, ho * ho, "n={n} nk={nk} p={p}");
+        }
+    }
+}

@@ -1,0 +1,200 @@
+//! Coordinator configuration (JSON file or programmatic).
+//!
+//! ```json
+//! {
+//!   "queue_capacity": 256,
+//!   "workers_per_model": 2,
+//!   "max_batch": 8,
+//!   "max_delay_ms": 5.0,
+//!   "models": [
+//!     {"name": "dcgan", "backend": "rust", "algorithm": "unified",
+//!      "lane_workers": 4, "seed": 7}
+//!   ]
+//! }
+//! ```
+
+use std::path::Path;
+use std::time::Duration;
+
+use crate::conv::parallel::{Algorithm, Lane};
+use crate::util::json::{self, Json};
+
+use super::batcher::BatchPolicy;
+
+/// Per-model backend configuration.
+#[derive(Debug, Clone, PartialEq)]
+pub struct ModelConfig {
+    pub name: String,
+    /// `"rust"` (native kernels) or `"pjrt"` (AOT HLO artifact).
+    pub backend: String,
+    /// Conv algorithm for the rust backend.
+    pub algorithm: Algorithm,
+    /// 0 → serial lane, else parallel with this many workers.
+    pub lane_workers: usize,
+    pub seed: u64,
+    /// Artifact name for the pjrt backend (defaults to `<name>_b<max_batch>`).
+    pub artifact: Option<String>,
+}
+
+impl ModelConfig {
+    pub fn lane(&self) -> Lane {
+        if self.lane_workers == 0 {
+            Lane::Serial
+        } else {
+            Lane::Parallel(self.lane_workers)
+        }
+    }
+}
+
+/// Whole-coordinator configuration.
+#[derive(Debug, Clone, PartialEq)]
+pub struct CoordinatorConfig {
+    pub queue_capacity: usize,
+    pub workers_per_model: usize,
+    pub max_batch: usize,
+    pub max_delay: Duration,
+    pub models: Vec<ModelConfig>,
+}
+
+impl Default for CoordinatorConfig {
+    fn default() -> Self {
+        CoordinatorConfig {
+            queue_capacity: 256,
+            workers_per_model: 1,
+            max_batch: 8,
+            max_delay: Duration::from_millis(5),
+            models: vec![ModelConfig {
+                name: "dcgan".into(),
+                backend: "rust".into(),
+                algorithm: Algorithm::Unified,
+                lane_workers: 0,
+                seed: 7,
+                artifact: None,
+            }],
+        }
+    }
+}
+
+impl CoordinatorConfig {
+    pub fn batch_policy(&self) -> BatchPolicy {
+        BatchPolicy {
+            max_batch: self.max_batch,
+            max_delay: self.max_delay,
+        }
+    }
+
+    /// Parse from a JSON value (see module docs for the schema).
+    pub fn from_json(v: &Json) -> anyhow::Result<CoordinatorConfig> {
+        let mut cfg = CoordinatorConfig::default();
+        if let Some(n) = v.get("queue_capacity").and_then(Json::as_usize) {
+            cfg.queue_capacity = n;
+        }
+        if let Some(n) = v.get("workers_per_model").and_then(Json::as_usize) {
+            cfg.workers_per_model = n;
+        }
+        if let Some(n) = v.get("max_batch").and_then(Json::as_usize) {
+            cfg.max_batch = n;
+        }
+        if let Some(ms) = v.get("max_delay_ms").and_then(Json::as_f64) {
+            cfg.max_delay = Duration::from_secs_f64(ms / 1e3);
+        }
+        if let Some(models) = v.get("models").and_then(Json::as_arr) {
+            cfg.models = models
+                .iter()
+                .map(parse_model)
+                .collect::<anyhow::Result<Vec<_>>>()?;
+        }
+        if cfg.queue_capacity == 0 || cfg.max_batch == 0 {
+            anyhow::bail!("queue_capacity and max_batch must be positive");
+        }
+        Ok(cfg)
+    }
+
+    pub fn from_file(path: &Path) -> anyhow::Result<CoordinatorConfig> {
+        Self::from_json(&json::parse_file(path)?)
+    }
+}
+
+fn parse_model(v: &Json) -> anyhow::Result<ModelConfig> {
+    let name = v
+        .get("name")
+        .and_then(Json::as_str)
+        .ok_or_else(|| anyhow::anyhow!("model entry missing 'name'"))?
+        .to_string();
+    let backend = v
+        .get("backend")
+        .and_then(Json::as_str)
+        .unwrap_or("rust")
+        .to_string();
+    if backend != "rust" && backend != "pjrt" {
+        anyhow::bail!("model '{name}': unknown backend '{backend}'");
+    }
+    let algorithm = match v.get("algorithm").and_then(Json::as_str).unwrap_or("unified") {
+        "conventional" => Algorithm::Conventional,
+        "grouped" => Algorithm::Grouped,
+        "unified" => Algorithm::Unified,
+        "unified-per-element" => Algorithm::UnifiedPerElement,
+        "im2col" => Algorithm::Im2col,
+        other => anyhow::bail!("model '{name}': unknown algorithm '{other}'"),
+    };
+    Ok(ModelConfig {
+        name,
+        backend,
+        algorithm,
+        lane_workers: v.get("lane_workers").and_then(Json::as_usize).unwrap_or(0),
+        seed: v.get("seed").and_then(Json::as_usize).unwrap_or(7) as u64,
+        artifact: v
+            .get("artifact")
+            .and_then(Json::as_str)
+            .map(str::to_string),
+    })
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::json::parse;
+
+    #[test]
+    fn parses_full_config() {
+        let j = parse(
+            r#"{
+            "queue_capacity": 64, "workers_per_model": 2,
+            "max_batch": 16, "max_delay_ms": 2.5,
+            "models": [
+                {"name": "dcgan", "backend": "rust", "algorithm": "unified",
+                 "lane_workers": 4, "seed": 3},
+                {"name": "ebgan", "backend": "pjrt", "artifact": "ebgan_b8"}
+            ]}"#,
+        )
+        .unwrap();
+        let cfg = CoordinatorConfig::from_json(&j).unwrap();
+        assert_eq!(cfg.queue_capacity, 64);
+        assert_eq!(cfg.max_batch, 16);
+        assert_eq!(cfg.max_delay, Duration::from_micros(2500));
+        assert_eq!(cfg.models.len(), 2);
+        assert_eq!(cfg.models[0].lane(), Lane::Parallel(4));
+        assert_eq!(cfg.models[1].backend, "pjrt");
+        assert_eq!(cfg.models[1].artifact.as_deref(), Some("ebgan_b8"));
+    }
+
+    #[test]
+    fn defaults_fill_missing() {
+        let cfg = CoordinatorConfig::from_json(&parse("{}").unwrap()).unwrap();
+        assert_eq!(cfg, CoordinatorConfig::default());
+    }
+
+    #[test]
+    fn rejects_bad_backend_and_algorithm() {
+        let j = parse(r#"{"models": [{"name": "x", "backend": "cuda"}]}"#).unwrap();
+        assert!(CoordinatorConfig::from_json(&j).is_err());
+        let j = parse(r#"{"models": [{"name": "x", "algorithm": "winograd"}]}"#).unwrap();
+        assert!(CoordinatorConfig::from_json(&j).is_err());
+    }
+
+    #[test]
+    fn rejects_zero_capacity() {
+        let j = parse(r#"{"queue_capacity": 0}"#).unwrap();
+        assert!(CoordinatorConfig::from_json(&j).is_err());
+    }
+}

@@ -1,0 +1,164 @@
+//! Serving metrics: counters + latency histograms with cheap recording
+//! on the hot path and consistent snapshots for reporting.
+
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::Mutex;
+use std::time::Instant;
+
+use crate::util::stats::LatencyHistogram;
+
+/// Aggregated service metrics (one per model lane).
+#[derive(Debug)]
+pub struct Metrics {
+    started: Instant,
+    pub submitted: AtomicU64,
+    pub rejected: AtomicU64,
+    pub completed: AtomicU64,
+    pub batches: AtomicU64,
+    batch_size_sum: AtomicU64,
+    queue_hist: Mutex<LatencyHistogram>,
+    total_hist: Mutex<LatencyHistogram>,
+}
+
+impl Default for Metrics {
+    fn default() -> Self {
+        Self::new()
+    }
+}
+
+impl Metrics {
+    pub fn new() -> Metrics {
+        Metrics {
+            started: Instant::now(),
+            submitted: AtomicU64::new(0),
+            rejected: AtomicU64::new(0),
+            completed: AtomicU64::new(0),
+            batches: AtomicU64::new(0),
+            batch_size_sum: AtomicU64::new(0),
+            queue_hist: Mutex::new(LatencyHistogram::new()),
+            total_hist: Mutex::new(LatencyHistogram::new()),
+        }
+    }
+
+    pub fn record_submit(&self) {
+        self.submitted.fetch_add(1, Ordering::Relaxed);
+    }
+
+    pub fn record_reject(&self) {
+        self.rejected.fetch_add(1, Ordering::Relaxed);
+    }
+
+    pub fn record_batch(&self, size: usize) {
+        self.batches.fetch_add(1, Ordering::Relaxed);
+        self.batch_size_sum.fetch_add(size as u64, Ordering::Relaxed);
+    }
+
+    pub fn record_completion(&self, queued_s: f64, total_s: f64) {
+        self.completed.fetch_add(1, Ordering::Relaxed);
+        self.queue_hist.lock().unwrap().record(queued_s);
+        self.total_hist.lock().unwrap().record(total_s);
+    }
+
+    pub fn snapshot(&self) -> Snapshot {
+        let completed = self.completed.load(Ordering::Relaxed);
+        let batches = self.batches.load(Ordering::Relaxed);
+        let qh = self.queue_hist.lock().unwrap();
+        let th = self.total_hist.lock().unwrap();
+        let elapsed = self.started.elapsed().as_secs_f64();
+        Snapshot {
+            submitted: self.submitted.load(Ordering::Relaxed),
+            rejected: self.rejected.load(Ordering::Relaxed),
+            completed,
+            batches,
+            mean_batch_size: if batches == 0 {
+                0.0
+            } else {
+                self.batch_size_sum.load(Ordering::Relaxed) as f64 / batches as f64
+            },
+            throughput_rps: if elapsed > 0.0 {
+                completed as f64 / elapsed
+            } else {
+                0.0
+            },
+            queue_p50_s: qh.quantile(0.50),
+            queue_p95_s: qh.quantile(0.95),
+            total_p50_s: th.quantile(0.50),
+            total_p95_s: th.quantile(0.95),
+            total_p99_s: th.quantile(0.99),
+        }
+    }
+}
+
+/// Point-in-time metrics view.
+#[derive(Debug, Clone, PartialEq)]
+pub struct Snapshot {
+    pub submitted: u64,
+    pub rejected: u64,
+    pub completed: u64,
+    pub batches: u64,
+    pub mean_batch_size: f64,
+    pub throughput_rps: f64,
+    pub queue_p50_s: f64,
+    pub queue_p95_s: f64,
+    pub total_p50_s: f64,
+    pub total_p95_s: f64,
+    pub total_p99_s: f64,
+}
+
+impl Snapshot {
+    /// One-line human-readable summary.
+    pub fn summary(&self) -> String {
+        format!(
+            "completed={}/{} rejected={} batches={} (mean size {:.2}) \
+             thpt={:.1} req/s p50={:.1}ms p95={:.1}ms p99={:.1}ms",
+            self.completed,
+            self.submitted,
+            self.rejected,
+            self.batches,
+            self.mean_batch_size,
+            self.throughput_rps,
+            self.total_p50_s * 1e3,
+            self.total_p95_s * 1e3,
+            self.total_p99_s * 1e3,
+        )
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn counters_accumulate() {
+        let m = Metrics::new();
+        m.record_submit();
+        m.record_submit();
+        m.record_reject();
+        m.record_batch(4);
+        m.record_batch(2);
+        m.record_completion(0.001, 0.005);
+        let s = m.snapshot();
+        assert_eq!(s.submitted, 2);
+        assert_eq!(s.rejected, 1);
+        assert_eq!(s.completed, 1);
+        assert_eq!(s.batches, 2);
+        assert!((s.mean_batch_size - 3.0).abs() < 1e-12);
+        assert!(s.total_p50_s > 0.0);
+    }
+
+    #[test]
+    fn empty_snapshot_sane() {
+        let s = Metrics::new().snapshot();
+        assert_eq!(s.completed, 0);
+        assert_eq!(s.mean_batch_size, 0.0);
+        assert_eq!(s.total_p99_s, 0.0);
+    }
+
+    #[test]
+    fn summary_mentions_throughput() {
+        let m = Metrics::new();
+        m.record_submit();
+        m.record_completion(0.0, 0.001);
+        assert!(m.snapshot().summary().contains("req/s"));
+    }
+}

@@ -1,0 +1,38 @@
+//! L3 serving coordinator: a GAN image-generation service with the
+//! unified kernel as its first-class compute feature.
+//!
+//! Architecture (vLLM-router-shaped, scaled to this paper's workload):
+//!
+//! ```text
+//!  clients ──submit──▶ Router ──▶ per-model BoundedQueue (backpressure)
+//!                                   │
+//!                             DynamicBatcher (max_batch / max_delay)
+//!                                   │
+//!                              Worker pool ──▶ Backend
+//!                                   │            ├─ RustBackend   (native unified kernels)
+//!                                   │            └─ PjrtBackend   (AOT HLO via runtime/)
+//!                                responses (per-request channels) + Metrics
+//! ```
+//!
+//! * [`request`] — request/response types
+//! * [`queue`] — bounded MPMC queue with blocking push (backpressure)
+//! * [`batcher`] — dynamic batching (size + delay window)
+//! * [`backend`] — the model-execution trait + native Rust backend
+//! * [`worker`] — batch-execution loop
+//! * [`server`] — [`server::Coordinator`]: router + lifecycle + submit API
+//! * [`metrics`] — counters and latency histograms
+//! * [`config`] — JSON-file configuration
+
+pub mod backend;
+pub mod batcher;
+pub mod config;
+pub mod metrics;
+pub mod queue;
+pub mod request;
+pub mod server;
+pub mod worker;
+
+pub use backend::Backend;
+pub use config::CoordinatorConfig;
+pub use request::{GenRequest, GenResponse};
+pub use server::Coordinator;

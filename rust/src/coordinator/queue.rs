@@ -1,0 +1,266 @@
+//! Bounded MPMC queue with blocking and non-blocking push — the
+//! coordinator's backpressure primitive.
+
+use std::collections::VecDeque;
+use std::sync::{Condvar, Mutex};
+use std::time::Duration;
+
+/// Result of a non-blocking push.
+#[derive(Debug, PartialEq, Eq)]
+pub enum TryPush<T> {
+    Ok,
+    /// Queue at capacity; the item is handed back.
+    Full(T),
+    /// Queue closed; the item is handed back.
+    Closed(T),
+}
+
+struct Inner<T> {
+    items: VecDeque<T>,
+    closed: bool,
+}
+
+/// Bounded multi-producer multi-consumer queue.
+pub struct BoundedQueue<T> {
+    inner: Mutex<Inner<T>>,
+    not_empty: Condvar,
+    not_full: Condvar,
+    capacity: usize,
+}
+
+impl<T> BoundedQueue<T> {
+    pub fn new(capacity: usize) -> Self {
+        assert!(capacity > 0, "queue capacity must be positive");
+        BoundedQueue {
+            inner: Mutex::new(Inner {
+                items: VecDeque::with_capacity(capacity),
+                closed: false,
+            }),
+            not_empty: Condvar::new(),
+            not_full: Condvar::new(),
+            capacity,
+        }
+    }
+
+    pub fn capacity(&self) -> usize {
+        self.capacity
+    }
+
+    pub fn len(&self) -> usize {
+        self.inner.lock().unwrap().items.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.len() == 0
+    }
+
+    /// Non-blocking push.
+    pub fn try_push(&self, item: T) -> TryPush<T> {
+        let mut g = self.inner.lock().unwrap();
+        if g.closed {
+            return TryPush::Closed(item);
+        }
+        if g.items.len() >= self.capacity {
+            return TryPush::Full(item);
+        }
+        g.items.push_back(item);
+        drop(g);
+        self.not_empty.notify_one();
+        TryPush::Ok
+    }
+
+    /// Blocking push: waits for space (backpressure).  Returns the item
+    /// back if the queue closes while waiting.
+    pub fn push(&self, item: T) -> Result<(), T> {
+        let mut g = self.inner.lock().unwrap();
+        loop {
+            if g.closed {
+                return Err(item);
+            }
+            if g.items.len() < self.capacity {
+                g.items.push_back(item);
+                drop(g);
+                self.not_empty.notify_one();
+                return Ok(());
+            }
+            g = self.not_full.wait(g).unwrap();
+        }
+    }
+
+    /// Blocking pop.  `None` once the queue is closed AND drained.
+    pub fn pop(&self) -> Option<T> {
+        let mut g = self.inner.lock().unwrap();
+        loop {
+            if let Some(item) = g.items.pop_front() {
+                drop(g);
+                self.not_full.notify_one();
+                return Some(item);
+            }
+            if g.closed {
+                return None;
+            }
+            g = self.not_empty.wait(g).unwrap();
+        }
+    }
+
+    /// Pop with a deadline.  `Ok(None)` means timed out; `Err(())` means
+    /// closed and drained.
+    pub fn pop_timeout(&self, timeout: Duration) -> Result<Option<T>, ()> {
+        let mut g = self.inner.lock().unwrap();
+        let deadline = std::time::Instant::now() + timeout;
+        loop {
+            if let Some(item) = g.items.pop_front() {
+                drop(g);
+                self.not_full.notify_one();
+                return Ok(Some(item));
+            }
+            if g.closed {
+                return Err(());
+            }
+            let now = std::time::Instant::now();
+            if now >= deadline {
+                return Ok(None);
+            }
+            let (guard, res) = self.not_empty.wait_timeout(g, deadline - now).unwrap();
+            g = guard;
+            if res.timed_out() && g.items.is_empty() {
+                if g.closed {
+                    return Err(());
+                }
+                return Ok(None);
+            }
+        }
+    }
+
+    /// Drain up to `max` immediately-available items (non-blocking).
+    pub fn drain_up_to(&self, max: usize) -> Vec<T> {
+        let mut g = self.inner.lock().unwrap();
+        let n = max.min(g.items.len());
+        let out: Vec<T> = g.items.drain(..n).collect();
+        drop(g);
+        if !out.is_empty() {
+            self.not_full.notify_all();
+        }
+        out
+    }
+
+    /// Close the queue: producers fail, consumers drain then get `None`.
+    pub fn close(&self) {
+        self.inner.lock().unwrap().closed = true;
+        self.not_empty.notify_all();
+        self.not_full.notify_all();
+    }
+
+    pub fn is_closed(&self) -> bool {
+        self.inner.lock().unwrap().closed
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use std::sync::Arc;
+    use std::thread;
+
+    #[test]
+    fn fifo_order() {
+        let q = BoundedQueue::new(4);
+        for i in 0..4 {
+            assert_eq!(q.try_push(i), TryPush::Ok);
+        }
+        for i in 0..4 {
+            assert_eq!(q.pop(), Some(i));
+        }
+    }
+
+    #[test]
+    fn try_push_full() {
+        let q = BoundedQueue::new(1);
+        assert_eq!(q.try_push(1), TryPush::Ok);
+        assert_eq!(q.try_push(2), TryPush::Full(2));
+    }
+
+    #[test]
+    fn close_rejects_producers_drains_consumers() {
+        let q = BoundedQueue::new(4);
+        q.try_push(1);
+        q.close();
+        assert_eq!(q.try_push(2), TryPush::Closed(2));
+        assert_eq!(q.pop(), Some(1));
+        assert_eq!(q.pop(), None);
+    }
+
+    #[test]
+    fn blocking_push_applies_backpressure() {
+        let q = Arc::new(BoundedQueue::new(1));
+        q.try_push(0);
+        let q2 = Arc::clone(&q);
+        let producer = thread::spawn(move || q2.push(1).is_ok());
+        thread::sleep(Duration::from_millis(20));
+        assert_eq!(q.pop(), Some(0)); // frees space
+        assert!(producer.join().unwrap());
+        assert_eq!(q.pop(), Some(1));
+    }
+
+    #[test]
+    fn pop_timeout_times_out() {
+        let q: BoundedQueue<u32> = BoundedQueue::new(1);
+        let r = q.pop_timeout(Duration::from_millis(10));
+        assert_eq!(r, Ok(None));
+    }
+
+    #[test]
+    fn pop_timeout_closed() {
+        let q: BoundedQueue<u32> = BoundedQueue::new(1);
+        q.close();
+        assert_eq!(q.pop_timeout(Duration::from_millis(10)), Err(()));
+    }
+
+    #[test]
+    fn drain_up_to_bounded() {
+        let q = BoundedQueue::new(8);
+        for i in 0..6 {
+            q.try_push(i);
+        }
+        let d = q.drain_up_to(4);
+        assert_eq!(d, vec![0, 1, 2, 3]);
+        assert_eq!(q.len(), 2);
+    }
+
+    #[test]
+    fn concurrent_producers_consumers() {
+        let q = Arc::new(BoundedQueue::new(16));
+        let mut handles = Vec::new();
+        for p in 0..4 {
+            let q = Arc::clone(&q);
+            handles.push(thread::spawn(move || {
+                for i in 0..100 {
+                    q.push(p * 1000 + i).unwrap();
+                }
+            }));
+        }
+        let consumed = Arc::new(Mutex::new(Vec::new()));
+        let mut consumers = Vec::new();
+        for _ in 0..2 {
+            let q = Arc::clone(&q);
+            let consumed = Arc::clone(&consumed);
+            consumers.push(thread::spawn(move || {
+                while let Some(v) = q.pop() {
+                    consumed.lock().unwrap().push(v);
+                }
+            }));
+        }
+        for h in handles {
+            h.join().unwrap();
+        }
+        q.close();
+        for c in consumers {
+            c.join().unwrap();
+        }
+        let mut got = consumed.lock().unwrap().clone();
+        got.sort_unstable();
+        assert_eq!(got.len(), 400);
+        got.dedup();
+        assert_eq!(got.len(), 400);
+    }
+}

@@ -1,0 +1,88 @@
+//! Request/response types of the image-generation service.
+
+use std::time::Instant;
+
+use crate::tensor::Feature;
+
+/// A latent→image generation request.
+#[derive(Debug, Clone)]
+pub struct GenRequest {
+    pub id: u64,
+    /// Target model name (router key), e.g. `"dcgan"`.
+    pub model: String,
+    /// Latent vector (length = the model's z_dim).
+    pub latent: Vec<f32>,
+    /// Creation time (for end-to-end latency accounting).
+    pub created: Instant,
+}
+
+impl GenRequest {
+    pub fn new(id: u64, model: String, latent: Vec<f32>) -> GenRequest {
+        GenRequest {
+            id,
+            model,
+            latent,
+            created: Instant::now(),
+        }
+    }
+}
+
+/// The service's answer.
+#[derive(Debug, Clone)]
+pub struct GenResponse {
+    pub id: u64,
+    pub image: Feature,
+    /// Seconds spent queued (submit → batch formation).
+    pub queued_s: f64,
+    /// Seconds of backend execution (shared by the whole batch).
+    pub service_s: f64,
+    /// Size of the batch this request was served in.
+    pub batch_size: usize,
+}
+
+impl GenResponse {
+    /// End-to-end latency.
+    pub fn total_s(&self) -> f64 {
+        self.queued_s + self.service_s
+    }
+}
+
+/// Submission failure modes surfaced to clients.
+#[derive(Debug, Clone, PartialEq, Eq, thiserror::Error)]
+pub enum SubmitError {
+    #[error("unknown model '{0}'")]
+    UnknownModel(String),
+    #[error("queue for model '{0}' is full (backpressure)")]
+    QueueFull(String),
+    #[error("coordinator is shutting down")]
+    ShuttingDown,
+    #[error("latent length {got} != expected {want}")]
+    BadLatent { got: usize, want: usize },
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn response_total_is_sum() {
+        let r = GenResponse {
+            id: 1,
+            image: Feature::zeros(1, 1, 1),
+            queued_s: 0.25,
+            service_s: 0.5,
+            batch_size: 4,
+        };
+        assert!((r.total_s() - 0.75).abs() < 1e-12);
+    }
+
+    #[test]
+    fn errors_display() {
+        assert!(SubmitError::UnknownModel("x".into())
+            .to_string()
+            .contains("unknown model"));
+        assert!(SubmitError::BadLatent { got: 3, want: 100 }
+            .to_string()
+            .contains("3"));
+    }
+}

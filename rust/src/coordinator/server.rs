@@ -1,0 +1,277 @@
+//! The coordinator: router + per-model worker pools + lifecycle.
+
+use std::collections::BTreeMap;
+use std::sync::mpsc::{self, Receiver};
+use std::sync::Arc;
+use std::thread::JoinHandle;
+
+use super::backend::Backend;
+use super::batcher::BatchPolicy;
+use super::metrics::{Metrics, Snapshot};
+use super::queue::{BoundedQueue, TryPush};
+use super::request::{GenRequest, GenResponse, SubmitError};
+use super::worker::{worker_loop, Envelope};
+
+struct ModelLane {
+    queue: Arc<BoundedQueue<Envelope>>,
+    metrics: Arc<Metrics>,
+    z_dim: usize,
+    workers: Vec<JoinHandle<()>>,
+}
+
+/// The serving coordinator.  Construct with [`Coordinator::builder`],
+/// submit with [`Coordinator::submit`], stop with
+/// [`Coordinator::shutdown`] (also runs on drop).
+pub struct Coordinator {
+    lanes: BTreeMap<String, ModelLane>,
+}
+
+/// Builder: register one backend per model, then `start()`.
+pub struct Builder {
+    queue_capacity: usize,
+    workers_per_model: usize,
+    policy: BatchPolicy,
+    backends: Vec<Arc<dyn Backend>>,
+}
+
+impl Coordinator {
+    pub fn builder() -> Builder {
+        Builder {
+            queue_capacity: 256,
+            workers_per_model: 1,
+            policy: BatchPolicy::default(),
+            backends: Vec::new(),
+        }
+    }
+
+    /// Route a request to its model lane.  Non-blocking: a full queue is
+    /// surfaced as [`SubmitError::QueueFull`] (backpressure to clients).
+    ///
+    /// `created` is re-stamped at admission so latency metrics measure
+    /// admission→completion (a pre-built trace would otherwise charge
+    /// its generation time to the queue).
+    pub fn submit(&self, mut request: GenRequest) -> Result<Receiver<GenResponse>, SubmitError> {
+        request.created = std::time::Instant::now();
+        let lane = self
+            .lanes
+            .get(&request.model)
+            .ok_or_else(|| SubmitError::UnknownModel(request.model.clone()))?;
+        if request.latent.len() != lane.z_dim {
+            return Err(SubmitError::BadLatent {
+                got: request.latent.len(),
+                want: lane.z_dim,
+            });
+        }
+        let (tx, rx) = mpsc::channel();
+        let model = request.model.clone();
+        lane.metrics.record_submit();
+        match lane.queue.try_push(Envelope {
+            request,
+            respond: tx,
+        }) {
+            TryPush::Ok => Ok(rx),
+            TryPush::Full(_) => {
+                lane.metrics.record_reject();
+                Err(SubmitError::QueueFull(model))
+            }
+            TryPush::Closed(_) => Err(SubmitError::ShuttingDown),
+        }
+    }
+
+    /// Blocking submit: waits for queue space instead of rejecting.
+    pub fn submit_blocking(
+        &self,
+        mut request: GenRequest,
+    ) -> Result<Receiver<GenResponse>, SubmitError> {
+        request.created = std::time::Instant::now();
+        let lane = self
+            .lanes
+            .get(&request.model)
+            .ok_or_else(|| SubmitError::UnknownModel(request.model.clone()))?;
+        if request.latent.len() != lane.z_dim {
+            return Err(SubmitError::BadLatent {
+                got: request.latent.len(),
+                want: lane.z_dim,
+            });
+        }
+        let (tx, rx) = mpsc::channel();
+        lane.metrics.record_submit();
+        lane.queue
+            .push(Envelope {
+                request,
+                respond: tx,
+            })
+            .map_err(|_| SubmitError::ShuttingDown)?;
+        Ok(rx)
+    }
+
+    /// Metrics snapshot for one model.
+    pub fn metrics(&self, model: &str) -> Option<Snapshot> {
+        self.lanes.get(model).map(|l| l.metrics.snapshot())
+    }
+
+    /// Registered model names.
+    pub fn models(&self) -> Vec<&str> {
+        self.lanes.keys().map(String::as_str).collect()
+    }
+
+    /// Drain queues and join all workers.
+    pub fn shutdown(&mut self) {
+        for lane in self.lanes.values() {
+            lane.queue.close();
+        }
+        for lane in self.lanes.values_mut() {
+            for handle in lane.workers.drain(..) {
+                let _ = handle.join();
+            }
+        }
+    }
+}
+
+impl Drop for Coordinator {
+    fn drop(&mut self) {
+        self.shutdown();
+    }
+}
+
+impl Builder {
+    pub fn queue_capacity(mut self, n: usize) -> Self {
+        self.queue_capacity = n.max(1);
+        self
+    }
+
+    pub fn workers_per_model(mut self, n: usize) -> Self {
+        self.workers_per_model = n.max(1);
+        self
+    }
+
+    pub fn batch_policy(mut self, policy: BatchPolicy) -> Self {
+        self.policy = policy;
+        self
+    }
+
+    pub fn register(mut self, backend: Arc<dyn Backend>) -> Self {
+        self.backends.push(backend);
+        self
+    }
+
+    /// Spawn the worker pools and return the running coordinator.
+    pub fn start(self) -> anyhow::Result<Coordinator> {
+        if self.backends.is_empty() {
+            anyhow::bail!("coordinator needs at least one backend");
+        }
+        let mut lanes = BTreeMap::new();
+        for backend in self.backends {
+            let name = backend.model_name().to_string();
+            if lanes.contains_key(&name) {
+                anyhow::bail!("duplicate backend for model '{name}'");
+            }
+            let queue = Arc::new(BoundedQueue::new(self.queue_capacity));
+            let metrics = Arc::new(Metrics::new());
+            let mut workers = Vec::with_capacity(self.workers_per_model);
+            for w in 0..self.workers_per_model {
+                let (q, b, m, p) = (
+                    Arc::clone(&queue),
+                    Arc::clone(&backend),
+                    Arc::clone(&metrics),
+                    self.policy,
+                );
+                workers.push(
+                    std::thread::Builder::new()
+                        .name(format!("ukstc-worker-{name}-{w}"))
+                        .spawn(move || worker_loop(q, b, p, m))?,
+                );
+            }
+            lanes.insert(
+                name,
+                ModelLane {
+                    queue,
+                    metrics,
+                    z_dim: backend.z_dim(),
+                    workers,
+                },
+            );
+        }
+        Ok(Coordinator { lanes })
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::conv::parallel::Algorithm;
+    use crate::coordinator::backend::testutil::tiny_backend;
+    use std::time::Duration;
+
+    fn start_tiny() -> Coordinator {
+        Coordinator::builder()
+            .queue_capacity(32)
+            .workers_per_model(2)
+            .batch_policy(BatchPolicy {
+                max_batch: 4,
+                max_delay: Duration::from_millis(2),
+            })
+            .register(Arc::new(tiny_backend(Algorithm::Unified)))
+            .start()
+            .unwrap()
+    }
+
+    #[test]
+    fn end_to_end_submit_receive() {
+        let coord = start_tiny();
+        let mut rxs = Vec::new();
+        for i in 0..10 {
+            let req = GenRequest::new(i, "gpgan".into(), vec![0.05; 100]);
+            rxs.push((i, coord.submit(req).unwrap()));
+        }
+        for (i, rx) in rxs {
+            let resp = rx.recv_timeout(Duration::from_secs(10)).unwrap();
+            assert_eq!(resp.id, i);
+            assert_eq!((resp.image.h, resp.image.w, resp.image.c), (16, 16, 3));
+        }
+        let snap = coord.metrics("gpgan").unwrap();
+        assert_eq!(snap.completed, 10);
+        assert!(snap.mean_batch_size >= 1.0);
+    }
+
+    #[test]
+    fn unknown_model_rejected() {
+        let coord = start_tiny();
+        let req = GenRequest::new(0, "stylegan".into(), vec![0.0; 100]);
+        assert!(matches!(
+            coord.submit(req),
+            Err(SubmitError::UnknownModel(_))
+        ));
+    }
+
+    #[test]
+    fn bad_latent_rejected() {
+        let coord = start_tiny();
+        let req = GenRequest::new(0, "gpgan".into(), vec![0.0; 3]);
+        assert!(matches!(
+            coord.submit(req),
+            Err(SubmitError::BadLatent { got: 3, want: 100 })
+        ));
+    }
+
+    #[test]
+    fn shutdown_joins_workers() {
+        let mut coord = start_tiny();
+        let req = GenRequest::new(0, "gpgan".into(), vec![0.1; 100]);
+        let rx = coord.submit(req).unwrap();
+        let _ = rx.recv_timeout(Duration::from_secs(10)).unwrap();
+        coord.shutdown();
+        // Submitting after shutdown fails.
+        let req = GenRequest::new(1, "gpgan".into(), vec![0.1; 100]);
+        assert!(coord.submit(req).is_err());
+    }
+
+    #[test]
+    fn duplicate_model_rejected_at_build() {
+        let r = Coordinator::builder()
+            .register(Arc::new(tiny_backend(Algorithm::Unified)))
+            .register(Arc::new(tiny_backend(Algorithm::Conventional)))
+            .start();
+        assert!(r.is_err());
+    }
+}

@@ -1,0 +1,104 @@
+//! Worker loop: batch formation → backend execution → response fanout.
+
+use std::sync::mpsc::Sender;
+use std::sync::Arc;
+use std::time::Instant;
+
+use super::backend::Backend;
+use super::batcher::{next_batch, BatchPolicy};
+use super::metrics::Metrics;
+use super::queue::BoundedQueue;
+use super::request::{GenRequest, GenResponse};
+
+/// A queued request with its response channel.
+pub struct Envelope {
+    pub request: GenRequest,
+    pub respond: Sender<GenResponse>,
+}
+
+/// Run one worker until the queue closes.  Several workers may share
+/// the same queue (pool).
+pub fn worker_loop(
+    queue: Arc<BoundedQueue<Envelope>>,
+    backend: Arc<dyn Backend>,
+    policy: BatchPolicy,
+    metrics: Arc<Metrics>,
+) {
+    let policy = BatchPolicy {
+        max_batch: policy.max_batch.min(backend.max_batch()),
+        ..policy
+    };
+    while let Some(batch) = next_batch(&queue, policy) {
+        let formed_at = Instant::now();
+        let size = batch.len();
+        metrics.record_batch(size);
+        let latents: Vec<Vec<f32>> = batch.iter().map(|e| e.request.latent.clone()).collect();
+        let images = backend.generate(&latents);
+        debug_assert_eq!(images.len(), size);
+        let service_s = formed_at.elapsed().as_secs_f64();
+        for (env, image) in batch.into_iter().zip(images) {
+            let queued_s = formed_at
+                .saturating_duration_since(env.request.created)
+                .as_secs_f64();
+            let resp = GenResponse {
+                id: env.request.id,
+                image,
+                queued_s,
+                service_s,
+                batch_size: size,
+            };
+            metrics.record_completion(queued_s, resp.total_s());
+            // A dropped receiver (client gave up) is not an error.
+            let _ = env.respond.send(resp);
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::conv::parallel::Algorithm;
+    use crate::coordinator::backend::testutil::tiny_backend;
+    use std::sync::mpsc;
+    use std::thread;
+    use std::time::Duration;
+
+    #[test]
+    fn worker_serves_and_exits_on_close() {
+        let queue = Arc::new(BoundedQueue::new(16));
+        let backend: Arc<dyn Backend> = Arc::new(tiny_backend(Algorithm::Unified));
+        let metrics = Arc::new(Metrics::new());
+        let policy = BatchPolicy {
+            max_batch: 4,
+            max_delay: Duration::from_millis(2),
+        };
+        let handle = {
+            let (q, b, m) = (Arc::clone(&queue), Arc::clone(&backend), Arc::clone(&metrics));
+            thread::spawn(move || worker_loop(q, b, policy, m))
+        };
+        let mut receivers = Vec::new();
+        for i in 0..6 {
+            let (tx, rx) = mpsc::channel();
+            let req = GenRequest::new(i, "gpgan".into(), vec![0.1; 100]);
+            queue
+                .push(Envelope {
+                    request: req,
+                    respond: tx,
+                })
+                .ok()
+                .unwrap();
+            receivers.push((i, rx));
+        }
+        for (i, rx) in receivers {
+            let resp = rx.recv_timeout(Duration::from_secs(10)).unwrap();
+            assert_eq!(resp.id, i);
+            assert_eq!((resp.image.h, resp.image.w), (16, 16));
+            assert!(resp.batch_size >= 1);
+        }
+        queue.close();
+        handle.join().unwrap();
+        let snap = metrics.snapshot();
+        assert_eq!(snap.completed, 6);
+        assert!(snap.batches >= 2); // 6 requests, max_batch 4
+    }
+}

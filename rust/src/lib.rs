@@ -1,0 +1,48 @@
+//! # UKSTC — Unified Kernel-Segregated Transpose Convolution
+//!
+//! A production-grade reproduction of *"Unified Kernel-Segregated
+//! Transpose Convolution Operation"* (Tida et al., 2025): the unified
+//! kernel-segregation algorithm (Algorithm 2) for stride-2 transpose
+//! convolution, its baselines (conventional bed-of-nails Algorithm 1 and
+//! the HICSS'23 grouped segregation), the paper's GAN-generator
+//! workloads, an AOT (JAX/Pallas → HLO → PJRT) execution runtime, and a
+//! serving coordinator that makes the optimized kernel a first-class
+//! feature of a GAN image-generation service.
+//!
+//! ## Layout
+//!
+//! * [`tensor`] — feature-map / kernel containers (substrate)
+//! * [`conv`] — the paper's algorithms: conventional, grouped
+//!   (prior work), **unified** (the contribution), plus im2col and
+//!   dilated-convolution extensions, FLOP and memory models
+//! * [`models`] — GAN generator zoo (Table 4) and forward pass
+//! * [`workload`] — dataset specs (Table 1) and request generators
+//! * [`runtime`] — PJRT client: load + execute AOT HLO artifacts
+//! * [`coordinator`] — serving layer: router, batcher, workers, metrics
+//! * [`bench`] — benchmark harness regenerating every paper table
+//! * [`util`] — offline-image substrates: JSON, RNG, CLI, stats,
+//!   thread pool, property-testing
+//!
+//! ## Quickstart
+//!
+//! ```no_run
+//! use ukstc::conv::{unified, ConvTransposeParams};
+//! use ukstc::tensor::{Feature, Kernel};
+//! use ukstc::util::rng::Rng;
+//!
+//! let mut rng = Rng::seeded(42);
+//! let x = Feature::random(8, 8, 16, &mut rng);
+//! let k = Kernel::random(4, 16, 32, &mut rng);
+//! let p = ConvTransposeParams::gan_layer(); // k=4, s=2, P=2
+//! let y = unified::transpose_conv(&x, &k, p.padding);
+//! assert_eq!((y.h, y.w, y.c), (16, 16, 32));
+//! ```
+
+pub mod bench;
+pub mod conv;
+pub mod coordinator;
+pub mod models;
+pub mod runtime;
+pub mod tensor;
+pub mod util;
+pub mod workload;

@@ -1,0 +1,257 @@
+//! `ukstc` — leader binary: serve, bench, and inspect the unified
+//! kernel-segregated transpose-convolution stack.
+//!
+//! ```text
+//! ukstc table1                       # print the dataset spec (Table 1)
+//! ukstc table2 [--scale F] ...       # regenerate Table 2 (Flowers)
+//! ukstc table3 [--scale F] ...       # regenerate Table 3 (COCO/PASCAL)
+//! ukstc table4 [--model M] ...       # regenerate Table 4 (GAN ablation)
+//! ukstc ablation                     # design-choice ablations
+//! ukstc serve [--config F] ...       # run the serving coordinator demo
+//! ukstc info                         # model zoo + analytic summaries
+//! ```
+
+use std::sync::Arc;
+
+use ukstc::bench::{ablation, serving, table2, table3, table4, BenchConfig};
+use ukstc::coordinator::backend::RustBackend;
+use ukstc::coordinator::{Coordinator, CoordinatorConfig};
+use ukstc::models::GanModel;
+use ukstc::runtime::{Engine, PjrtBackend};
+use ukstc::util::cli::Command;
+use ukstc::util::logging;
+use ukstc::util::rng::Rng;
+use ukstc::workload::datasets::{table1_rows, FLOWER_GROUPS, IMAGE_SIZE};
+use ukstc::workload::generator::poisson_trace;
+
+fn main() {
+    logging::init();
+    let args: Vec<String> = std::env::args().skip(1).collect();
+    let sub = args.first().map(String::as_str).unwrap_or("help");
+    let rest = args.get(1..).unwrap_or(&[]).to_vec();
+    let code = match dispatch(sub, &rest) {
+        Ok(()) => 0,
+        Err(e) => {
+            eprintln!("error: {e:#}");
+            2
+        }
+    };
+    std::process::exit(code);
+}
+
+fn bench_cfg(a: &ukstc::util::cli::Args) -> anyhow::Result<BenchConfig> {
+    let mut cfg = BenchConfig::default();
+    cfg.scale = a.get_f64("scale", cfg.scale)?;
+    cfg.warmup = a.get_usize("warmup", cfg.warmup)?;
+    cfg.iters = a.get_usize("iters", cfg.iters)?;
+    cfg.workers = a.get_usize("workers", cfg.workers)?;
+    Ok(cfg)
+}
+
+fn bench_command(name: &'static str, about: &'static str) -> Command {
+    Command::new(name, about)
+        .opt("scale", "fraction of each dataset to time", Some("0.02"))
+        .opt("warmup", "warmup iterations", Some("1"))
+        .opt("iters", "recorded iterations", Some("2"))
+        .opt("workers", "parallel-lane worker threads", None)
+        .opt("image-size", "image side length", Some("224"))
+}
+
+fn dispatch(sub: &str, rest: &[String]) -> anyhow::Result<()> {
+    match sub {
+        "table1" => {
+            let rows: Vec<Vec<String>> = table1_rows()
+                .into_iter()
+                .map(|(d, g, n)| vec![d.into(), g.into(), n.to_string()])
+                .collect();
+            ukstc::bench::report::print_table(
+                "Table 1 — dataset characteristics",
+                &["Dataset", "Group", "Samples"],
+                &rows,
+            );
+            Ok(())
+        }
+        "table2" => {
+            let cmd = bench_command("table2", "regenerate Table 2 (Flower dataset)");
+            let a = cmd.parse(rest)?;
+            let cfg = bench_cfg(&a)?;
+            let size = a.get_usize("image-size", IMAGE_SIZE)?;
+            let rows = table2::run_sweep(&FLOWER_GROUPS, &cfg, size);
+            table2::print_rows("Table 2 — Flower dataset (conventional vs proposed)", &rows);
+            Ok(())
+        }
+        "table3" => {
+            let cmd = bench_command("table3", "regenerate Table 3 (MSCOCO + PASCAL)");
+            let a = cmd.parse(rest)?;
+            let cfg = bench_cfg(&a)?;
+            let size = a.get_usize("image-size", IMAGE_SIZE)?;
+            let rows = table3::run_sweep(&cfg, size);
+            table3::print_rows(&rows);
+            Ok(())
+        }
+        "table4" => {
+            let cmd = bench_command("table4", "regenerate Table 4 (GAN ablation)")
+                .opt("model", "dcgan|artgan|gpgan|ebgan|all", Some("all"));
+            let a = cmd.parse(rest)?;
+            let cfg = bench_cfg(&a)?;
+            let models: Vec<GanModel> = match a.get_or("model", "all") {
+                "all" => GanModel::all().to_vec(),
+                name => vec![GanModel::from_name(name)
+                    .ok_or_else(|| anyhow::anyhow!("unknown model '{name}'"))?],
+            };
+            for m in models {
+                let res = table4::measure_model(m, &cfg);
+                table4::print_model(&res);
+            }
+            Ok(())
+        }
+        "ablation" => {
+            let cmd = bench_command("ablation", "design-choice ablations");
+            let a = cmd.parse(rest)?;
+            let cfg = bench_cfg(&a)?;
+            ablation::run_all(&cfg);
+            Ok(())
+        }
+        "serve" => serve(rest),
+        "serve-ab" => {
+            let cmd = Command::new("serve-ab", "serving A/B: unified vs conventional")
+                .opt("model", "gan model", Some("gpgan"))
+                .opt("requests", "burst size", Some("24"))
+                .opt("workers", "coordinator workers", Some("2"))
+                .opt("max-batch", "dynamic batch cap", Some("8"));
+            let a = cmd.parse(rest)?;
+            let cfg = serving::ServingConfig {
+                model: GanModel::from_name(a.get_or("model", "gpgan"))
+                    .ok_or_else(|| anyhow::anyhow!("unknown model"))?,
+                requests: a.get_usize("requests", 24)?,
+                workers_per_model: a.get_usize("workers", 2)?,
+                max_batch: a.get_usize("max-batch", 8)?,
+                ..Default::default()
+            };
+            let (u, c) = serving::run_ab(&cfg)?;
+            serving::print_ab(&u, &c);
+            Ok(())
+        }
+        "info" => {
+            for m in GanModel::all() {
+                println!(
+                    "{:8} layers={} z_dim={} memory_savings={} B",
+                    m.name(),
+                    m.layers().len(),
+                    m.z_dim(),
+                    m.total_memory_savings()
+                );
+            }
+            Ok(())
+        }
+        "help" | "--help" | "-h" => {
+            println!("{HELP}");
+            Ok(())
+        }
+        other => anyhow::bail!("unknown subcommand '{other}'\n{HELP}"),
+    }
+}
+
+/// `ukstc serve`: run the coordinator on a Poisson trace, native or
+/// PJRT backend, from a JSON config or flags.
+fn serve(rest: &[String]) -> anyhow::Result<()> {
+    let cmd = Command::new("serve", "run the serving coordinator demo")
+        .opt("config", "JSON config file", None)
+        .opt("model", "gan model", Some("dcgan"))
+        .opt("backend", "rust|pjrt", Some("rust"))
+        .opt("artifacts", "artifact directory", Some("artifacts"))
+        .opt("rate", "Poisson request rate (req/s)", Some("20"))
+        .opt("requests", "number of requests", Some("40"))
+        .opt("workers", "coordinator workers per model", Some("2"))
+        .opt("max-batch", "dynamic batch cap", Some("8"));
+    let a = cmd.parse(rest)?;
+
+    let mut cfg = if let Some(path) = a.get("config") {
+        CoordinatorConfig::from_file(std::path::Path::new(path))?
+    } else {
+        CoordinatorConfig::default()
+    };
+    if a.get("config").is_none() {
+        cfg.models[0].name = a.get_or("model", "dcgan").to_string();
+        cfg.models[0].backend = a.get_or("backend", "rust").to_string();
+    }
+    cfg.workers_per_model = a.get_usize("workers", cfg.workers_per_model)?;
+    cfg.max_batch = a.get_usize("max-batch", cfg.max_batch)?;
+
+    let mut builder = Coordinator::builder()
+        .queue_capacity(cfg.queue_capacity)
+        .workers_per_model(cfg.workers_per_model)
+        .batch_policy(cfg.batch_policy());
+
+    let model_cfg = cfg.models[0].clone();
+    let model_name;
+    let z_dim;
+    if model_cfg.backend == "pjrt" {
+        let mut engine = Engine::new(std::path::Path::new(a.get_or("artifacts", "artifacts")))?;
+        let artifact = model_cfg
+            .artifact
+            .clone()
+            .unwrap_or_else(|| format!("{}_b{}", model_cfg.name, cfg.max_batch.min(8)));
+        engine.compile(&artifact)?;
+        let backend = PjrtBackend::new(Arc::new(engine), &artifact, model_cfg.seed)?;
+        model_name = ukstc::coordinator::Backend::model_name(&backend).to_string();
+        z_dim = ukstc::coordinator::Backend::z_dim(&backend);
+        builder = builder.register(Arc::new(backend));
+    } else {
+        let model = GanModel::from_name(&model_cfg.name)
+            .ok_or_else(|| anyhow::anyhow!("unknown model '{}'", model_cfg.name))?;
+        let backend = RustBackend::new(
+            model,
+            model_cfg.algorithm,
+            model_cfg.lane(),
+            model_cfg.seed,
+            cfg.max_batch,
+        );
+        model_name = model.name().to_string();
+        z_dim = model.z_dim();
+        builder = builder.register(Arc::new(backend));
+    }
+
+    let coord = builder.start()?;
+    let rate = a.get_f64("rate", 20.0)?;
+    let n = a.get_usize("requests", 40)?;
+    log::info!("serving {n} Poisson requests at {rate} req/s to '{model_name}'");
+
+    let mut rng = Rng::seeded(2026);
+    let trace = poisson_trace(&model_name, z_dim, rate, n, &mut rng);
+    let t0 = std::time::Instant::now();
+    let mut pending = Vec::new();
+    for tr in trace {
+        // Open-loop replay: honor arrival times.
+        let now = t0.elapsed().as_secs_f64();
+        if tr.at > now {
+            std::thread::sleep(std::time::Duration::from_secs_f64(tr.at - now));
+        }
+        match coord.submit(tr.request) {
+            Ok(rx) => pending.push(rx),
+            Err(e) => log::warn!("rejected: {e}"),
+        }
+    }
+    for rx in pending {
+        let _ = rx.recv();
+    }
+    let wall = t0.elapsed().as_secs_f64();
+    let snap = coord.metrics(&model_name).unwrap();
+    println!("\nserve run complete in {wall:.2}s");
+    println!("{}", snap.summary());
+    Ok(())
+}
+
+const HELP: &str = "\
+ukstc — Unified Kernel-Segregated Transpose Convolution
+
+subcommands:
+  table1     print the dataset spec (paper Table 1)
+  table2     regenerate Table 2 (Flower dataset sweep)
+  table3     regenerate Table 3 (MSCOCO + PASCAL sweep)
+  table4     regenerate Table 4 (GAN-layer ablation)
+  ablation   design-choice ablations (formulation, GEMM, dilated, lanes)
+  serve      run the serving coordinator on a Poisson trace
+  serve-ab   serving A/B: unified vs conventional backend
+  info       model zoo + analytic memory summaries
+common bench flags: --scale F --warmup N --iters N --workers N --image-size N";

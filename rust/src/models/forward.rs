@@ -1,0 +1,239 @@
+//! Generator forward pass over the Rust conv backends.
+//!
+//! Mirrors `python/compile/model.py::generator_fwd`: dense projection of
+//! the latent, reshape to 4×4, N transpose-conv blocks (ReLU between,
+//! tanh last).  The conv algorithm and lane are injected so the same
+//! model definition drives the paper benches (conventional vs grouped
+//! vs unified, serial vs parallel).
+
+use crate::conv::parallel::{run_seg, Algorithm, Lane};
+use crate::conv::segregation::{segregate, Segregated};
+use crate::tensor::{ops, Feature, Kernel};
+use crate::util::rng::Rng;
+
+use super::zoo::{GanModel, LayerSpec};
+
+/// Weights of one transpose-conv block.
+#[derive(Debug, Clone)]
+pub struct LayerWeights {
+    pub spec: LayerSpec,
+    pub kernel: Kernel,
+    /// Pre-segregated at construction (deployment-realistic: weights
+    /// are prepared once, reused per request).
+    pub seg: Segregated,
+    pub bias: Vec<f32>,
+}
+
+/// A generator with materialized weights.
+#[derive(Debug, Clone)]
+pub struct Generator {
+    pub model: GanModel,
+    /// Dense projection `z[z_dim] → 4·4·C0` (row-major `[z_dim, out]`).
+    pub proj_w: Vec<f32>,
+    pub proj_b: Vec<f32>,
+    pub layers: Vec<LayerWeights>,
+}
+
+impl Generator {
+    /// He-style random initialization (matches the scale convention of
+    /// `python/compile/model.py::init_params`).
+    pub fn random(model: GanModel, rng: &mut Rng) -> Generator {
+        let layers_spec = model.layers();
+        let c0 = layers_spec[0].cin;
+        let n0 = layers_spec[0].n_in;
+        let z = model.z_dim();
+        let proj_out = n0 * n0 * c0;
+        let scale_proj = 1.0 / (z as f32).sqrt();
+        let mut proj_w = vec![0.0f32; z * proj_out];
+        rng.fill_normal(&mut proj_w);
+        for v in &mut proj_w {
+            *v *= scale_proj;
+        }
+        let mut proj_b = vec![0.0f32; proj_out];
+        rng.fill_normal(&mut proj_b);
+        let layers = layers_spec
+            .iter()
+            .map(|&spec| {
+                let mut kernel = Kernel::random(spec.ksize, spec.cin, spec.cout, rng);
+                let scale = 1.0 / (spec.ksize as f32);
+                for v in &mut kernel.data {
+                    *v *= scale;
+                }
+                let mut bias = vec![0.0f32; spec.cout];
+                rng.fill_normal(&mut bias);
+                for v in &mut bias {
+                    *v *= 0.01;
+                }
+                let seg = segregate(&kernel);
+                LayerWeights {
+                    spec,
+                    kernel,
+                    seg,
+                    bias,
+                }
+            })
+            .collect();
+        Generator {
+            model,
+            proj_w,
+            proj_b,
+            layers,
+        }
+    }
+
+    /// Latent → first feature map (dense + ReLU).
+    pub fn project(&self, z: &[f32]) -> Feature {
+        let spec0 = self.layers[0].spec;
+        let (n0, c0) = (spec0.n_in, spec0.cin);
+        let out_len = n0 * n0 * c0;
+        let z_dim = self.model.z_dim();
+        assert_eq!(z.len(), z_dim, "latent length mismatch");
+        let mut out = self.proj_b.clone();
+        debug_assert_eq!(out.len(), out_len);
+        for (zi, &zv) in z.iter().enumerate() {
+            if zv == 0.0 {
+                continue;
+            }
+            let row = &self.proj_w[zi * out_len..(zi + 1) * out_len];
+            for (o, &w) in out.iter_mut().zip(row) {
+                *o += zv * w;
+            }
+        }
+        let mut f = Feature::from_vec(n0, n0, c0, out);
+        ops::relu_inplace(&mut f);
+        f
+    }
+
+    /// Full forward pass: latent → image, with the chosen conv backend.
+    pub fn forward(&self, z: &[f32], alg: Algorithm, lane: Lane) -> Feature {
+        let mut x = self.project(z);
+        let last = self.layers.len() - 1;
+        for (i, lw) in self.layers.iter().enumerate() {
+            x = run_seg(alg, lane, &x, &lw.kernel, &lw.seg, lw.spec.padding);
+            ops::add_bias_inplace(&mut x, &lw.bias);
+            if i == last {
+                ops::tanh_inplace(&mut x);
+            } else {
+                ops::relu_inplace(&mut x);
+            }
+        }
+        x
+    }
+
+    /// Forward pass through the transpose-conv layers only, from a given
+    /// first feature map — exactly what Table 4 times ("computation time
+    /// ... only for the forward propagation stage for the transpose
+    /// convolution layers").
+    pub fn forward_conv_only(&self, x0: &Feature, alg: Algorithm, lane: Lane) -> Feature {
+        let mut x = x0.clone();
+        for lw in &self.layers {
+            x = run_seg(alg, lane, &x, &lw.kernel, &lw.seg, lw.spec.padding);
+        }
+        x
+    }
+
+    /// Expected output shape `(H, W, C)`.
+    pub fn output_shape(&self) -> (usize, usize, usize) {
+        let last = self.layers.last().unwrap().spec;
+        (last.n_out(), last.n_out(), last.cout)
+    }
+
+    /// Total weight bytes (projection + kernels + biases).
+    pub fn weight_bytes(&self) -> usize {
+        let f32s = std::mem::size_of::<f32>();
+        (self.proj_w.len() + self.proj_b.len()) * f32s
+            + self
+                .layers
+                .iter()
+                .map(|l| l.kernel.bytes() + l.bias.len() * f32s)
+                .sum::<usize>()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::tensor::ops::max_abs_diff;
+
+    fn tiny_generator() -> Generator {
+        // Shrink DC-GAN channels for fast tests by building a custom
+        // Generator directly.
+        let mut rng = Rng::seeded(60);
+        let mut g = Generator::random(GanModel::GpGan, &mut rng);
+        // Truncate to the first two layers and shrink channels via a
+        // fresh random build of just those specs.
+        let specs = [LayerSpec::gan(4, 8, 6), LayerSpec::gan(8, 6, 3)];
+        g.layers = specs
+            .iter()
+            .map(|&spec| {
+                let kernel = Kernel::random(spec.ksize, spec.cin, spec.cout, &mut rng);
+                let seg = segregate(&kernel);
+                LayerWeights {
+                    spec,
+                    kernel,
+                    seg,
+                    bias: vec![0.01; spec.cout],
+                }
+            })
+            .collect();
+        let z = g.model.z_dim();
+        let out0 = 4 * 4 * 8;
+        g.proj_w = vec![0.02; z * out0];
+        g.proj_b = vec![0.0; out0];
+        g
+    }
+
+    #[test]
+    fn forward_shape_and_range() {
+        let g = tiny_generator();
+        let mut rng = Rng::seeded(61);
+        let z: Vec<f32> = (0..g.model.z_dim()).map(|_| rng.normal_f32()).collect();
+        let img = g.forward(&z, Algorithm::Unified, Lane::Serial);
+        assert_eq!((img.h, img.w, img.c), (16, 16, 3));
+        assert!(img.data.iter().all(|v| v.abs() <= 1.0)); // tanh range
+    }
+
+    #[test]
+    fn algorithms_agree_through_full_model() {
+        let g = tiny_generator();
+        let mut rng = Rng::seeded(62);
+        let z: Vec<f32> = (0..g.model.z_dim()).map(|_| rng.normal_f32()).collect();
+        let want = g.forward(&z, Algorithm::Conventional, Lane::Serial);
+        for alg in [Algorithm::Grouped, Algorithm::Unified, Algorithm::Im2col] {
+            let got = g.forward(&z, alg, Lane::Serial);
+            assert!(
+                max_abs_diff(&want, &got) < 1e-3,
+                "{} disagrees through the generator",
+                alg.name()
+            );
+        }
+        let par = g.forward(&z, Algorithm::Unified, Lane::Parallel(4));
+        assert!(max_abs_diff(&want, &par) < 1e-3);
+    }
+
+    #[test]
+    fn deterministic() {
+        let g = tiny_generator();
+        let z = vec![0.1; g.model.z_dim()];
+        let a = g.forward(&z, Algorithm::Unified, Lane::Serial);
+        let b = g.forward(&z, Algorithm::Unified, Lane::Serial);
+        assert_eq!(a, b);
+    }
+
+    #[test]
+    fn conv_only_matches_table4_protocol() {
+        let g = tiny_generator();
+        let mut rng = Rng::seeded(63);
+        let x0 = Feature::random(4, 4, 8, &mut rng);
+        let a = g.forward_conv_only(&x0, Algorithm::Conventional, Lane::Serial);
+        let b = g.forward_conv_only(&x0, Algorithm::Unified, Lane::Serial);
+        assert_eq!((a.h, a.w, a.c), (16, 16, 3));
+        assert!(max_abs_diff(&a, &b) < 1e-3);
+    }
+
+    #[test]
+    fn weight_bytes_positive() {
+        let g = tiny_generator();
+        assert!(g.weight_bytes() > 0);
+    }
+}

@@ -1,0 +1,17 @@
+//! GAN generator models (the paper's ablation workload, Table 4).
+//!
+//! * [`zoo`] — layer tables for DC-GAN/DiscoGAN, ArtGAN, GP-GAN, EB-GAN
+//!   transcribed verbatim from Table 4
+//! * [`forward`] — generator forward pass over any conv
+//!   [`Algorithm`](crate::conv::parallel::Algorithm)/[`Lane`](crate::conv::parallel::Lane)
+//!
+//! These are the *Rust-native* models used by the paper-table benches;
+//! the serving path runs the AOT-compiled JAX twins (see
+//! [`crate::runtime`]), and the integration tests check the two stay
+//! numerically consistent via the shared golden vectors.
+
+pub mod forward;
+pub mod zoo;
+
+pub use forward::{Generator, LayerWeights};
+pub use zoo::{GanModel, LayerSpec};

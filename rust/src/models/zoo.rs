@@ -1,0 +1,181 @@
+//! The GAN model zoo — Table 4's layer tables, transcribed verbatim.
+//!
+//! Every generator is a stack of `ConvTranspose2d(k=4, s=2, p=1)`
+//! blocks (paper padding factor `P = 2`), each doubling the spatial
+//! size.  The ArtGAN "4×4×246×128" kernel entry is a typo in the paper
+//! for 128 input channels (the input-size column says 16×16×**128**);
+//! we keep the input-size column as ground truth.
+
+use crate::conv::ConvTransposeParams;
+
+/// One transpose-conv layer of a generator (a Table 4 row).
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct LayerSpec {
+    /// Input spatial size `N` (square).
+    pub n_in: usize,
+    pub cin: usize,
+    pub cout: usize,
+    /// Kernel size (always 4 in Table 4).
+    pub ksize: usize,
+    /// Paper padding factor `P` (always 2 in Table 4).
+    pub padding: usize,
+}
+
+impl LayerSpec {
+    pub const fn gan(n_in: usize, cin: usize, cout: usize) -> LayerSpec {
+        LayerSpec {
+            n_in,
+            cin,
+            cout,
+            ksize: 4,
+            padding: 2,
+        }
+    }
+
+    /// Output spatial size (`2N` for the standard GAN block).
+    pub fn n_out(&self) -> usize {
+        crate::conv::out_size(self.n_in, self.ksize, self.padding)
+    }
+
+    /// Conversion to the conv-geometry struct.
+    pub fn params(&self) -> ConvTransposeParams {
+        ConvTransposeParams::new(self.n_in, self.ksize, self.padding, self.cin, self.cout)
+    }
+}
+
+/// Which GAN the layer stack comes from.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash)]
+pub enum GanModel {
+    /// DC-GAN and DiscoGAN share a generator (Radford'15 / Kim'17).
+    DcGan,
+    ArtGan,
+    GpGan,
+    EbGan,
+}
+
+impl GanModel {
+    pub fn name(&self) -> &'static str {
+        match self {
+            GanModel::DcGan => "dcgan",
+            GanModel::ArtGan => "artgan",
+            GanModel::GpGan => "gpgan",
+            GanModel::EbGan => "ebgan",
+        }
+    }
+
+    pub fn from_name(name: &str) -> Option<GanModel> {
+        match name {
+            "dcgan" | "discogan" => Some(GanModel::DcGan),
+            "artgan" => Some(GanModel::ArtGan),
+            "gpgan" | "gp-gan" => Some(GanModel::GpGan),
+            "ebgan" | "eb-gan" => Some(GanModel::EbGan),
+            _ => None,
+        }
+    }
+
+    pub fn all() -> [GanModel; 4] {
+        [
+            GanModel::DcGan,
+            GanModel::ArtGan,
+            GanModel::GpGan,
+            GanModel::EbGan,
+        ]
+    }
+
+    /// The transpose-conv layer stack (Table 4 rows, top to bottom).
+    pub fn layers(&self) -> &'static [LayerSpec] {
+        static DCGAN: [LayerSpec; 4] = [
+            LayerSpec::gan(4, 1024, 512),
+            LayerSpec::gan(8, 512, 256),
+            LayerSpec::gan(16, 256, 128),
+            LayerSpec::gan(32, 128, 3),
+        ];
+        static ARTGAN: [LayerSpec; 4] = [
+            LayerSpec::gan(4, 512, 256),
+            LayerSpec::gan(8, 256, 128),
+            LayerSpec::gan(16, 128, 128),
+            LayerSpec::gan(32, 128, 3),
+        ];
+        static GPGAN: [LayerSpec; 4] = [
+            LayerSpec::gan(4, 512, 256),
+            LayerSpec::gan(8, 256, 128),
+            LayerSpec::gan(16, 128, 64),
+            LayerSpec::gan(32, 64, 3),
+        ];
+        static EBGAN: [LayerSpec; 6] = [
+            LayerSpec::gan(4, 2048, 1024),
+            LayerSpec::gan(8, 1024, 512),
+            LayerSpec::gan(16, 512, 256),
+            LayerSpec::gan(32, 256, 128),
+            LayerSpec::gan(64, 128, 64),
+            LayerSpec::gan(128, 64, 64),
+        ];
+        match self {
+            GanModel::DcGan => &DCGAN,
+            GanModel::ArtGan => &ARTGAN,
+            GanModel::GpGan => &GPGAN,
+            GanModel::EbGan => &EBGAN,
+        }
+    }
+
+    /// Latent dimension of the generator input (standard DCGAN setting).
+    pub fn z_dim(&self) -> usize {
+        100
+    }
+
+    /// Total Table 4 memory savings (bytes) for this model's layers.
+    pub fn total_memory_savings(&self) -> usize {
+        self.layers()
+            .iter()
+            .map(|l| crate::conv::memory::savings_table4(&l.params()))
+            .sum()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn layer_stacks_chain() {
+        for model in GanModel::all() {
+            let layers = model.layers();
+            for pair in layers.windows(2) {
+                assert_eq!(pair[0].n_out(), pair[1].n_in, "{}", model.name());
+                assert_eq!(pair[0].cout, pair[1].cin, "{}", model.name());
+            }
+        }
+    }
+
+    #[test]
+    fn every_layer_doubles() {
+        for model in GanModel::all() {
+            for l in model.layers() {
+                assert_eq!(l.n_out(), 2 * l.n_in);
+            }
+        }
+    }
+
+    #[test]
+    fn table4_totals_match_paper() {
+        assert_eq!(GanModel::DcGan.total_memory_savings(), 4_787_712);
+        assert_eq!(GanModel::EbGan.total_memory_savings(), 35_534_592);
+        assert_eq!(GanModel::GpGan.total_memory_savings(), 2_393_856);
+    }
+
+    #[test]
+    fn name_roundtrip() {
+        for model in GanModel::all() {
+            assert_eq!(GanModel::from_name(model.name()), Some(model));
+        }
+        assert_eq!(GanModel::from_name("discogan"), Some(GanModel::DcGan));
+        assert_eq!(GanModel::from_name("vae"), None);
+    }
+
+    #[test]
+    fn ebgan_final_resolution() {
+        let last = GanModel::EbGan.layers().last().unwrap();
+        assert_eq!(last.n_out(), 256);
+        assert_eq!(last.cout, 64);
+    }
+}

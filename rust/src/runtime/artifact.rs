@@ -1,0 +1,167 @@
+//! Artifact manifest parsing (`artifacts/manifest.json`, produced by
+//! `python/compile/aot.py`).
+
+use std::path::{Path, PathBuf};
+
+use crate::util::json::{self, Json};
+
+/// One input tensor spec of an artifact.
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub struct InputSpec {
+    pub name: String,
+    pub shape: Vec<usize>,
+}
+
+impl InputSpec {
+    pub fn elements(&self) -> usize {
+        self.shape.iter().product()
+    }
+}
+
+/// One compiled-artifact entry.
+#[derive(Debug, Clone, PartialEq)]
+pub struct ArtifactSpec {
+    pub name: String,
+    /// HLO text file, relative to the artifact directory.
+    pub path: String,
+    /// `"layer"` or `"generator"`.
+    pub kind: String,
+    /// Source GAN model (generators only).
+    pub model: Option<String>,
+    /// Compiled batch size (generators only).
+    pub batch: Option<usize>,
+    pub inputs: Vec<InputSpec>,
+    pub output_shape: Vec<usize>,
+}
+
+impl ArtifactSpec {
+    pub fn output_elements(&self) -> usize {
+        self.output_shape.iter().product()
+    }
+}
+
+/// The parsed manifest.
+#[derive(Debug, Clone, PartialEq)]
+pub struct Manifest {
+    pub dir: PathBuf,
+    pub artifacts: Vec<ArtifactSpec>,
+}
+
+impl Manifest {
+    /// Load `<dir>/manifest.json`.
+    pub fn load(dir: &Path) -> anyhow::Result<Manifest> {
+        let v = json::parse_file(&dir.join("manifest.json"))?;
+        let version = v
+            .get("version")
+            .and_then(Json::as_usize)
+            .ok_or_else(|| anyhow::anyhow!("manifest missing version"))?;
+        if version != 1 {
+            anyhow::bail!("unsupported manifest version {version}");
+        }
+        let artifacts = v
+            .get("artifacts")
+            .and_then(Json::as_arr)
+            .ok_or_else(|| anyhow::anyhow!("manifest missing artifacts"))?
+            .iter()
+            .map(parse_artifact)
+            .collect::<anyhow::Result<Vec<_>>>()?;
+        Ok(Manifest {
+            dir: dir.to_path_buf(),
+            artifacts,
+        })
+    }
+
+    pub fn get(&self, name: &str) -> Option<&ArtifactSpec> {
+        self.artifacts.iter().find(|a| a.name == name)
+    }
+
+    /// Absolute path of an artifact's HLO file.
+    pub fn hlo_path(&self, spec: &ArtifactSpec) -> PathBuf {
+        self.dir.join(&spec.path)
+    }
+}
+
+fn parse_artifact(v: &Json) -> anyhow::Result<ArtifactSpec> {
+    let get_str = |k: &str| -> anyhow::Result<String> {
+        v.get(k)
+            .and_then(Json::as_str)
+            .map(str::to_string)
+            .ok_or_else(|| anyhow::anyhow!("artifact entry missing '{k}'"))
+    };
+    let inputs = v
+        .get("inputs")
+        .and_then(Json::as_arr)
+        .ok_or_else(|| anyhow::anyhow!("artifact missing inputs"))?
+        .iter()
+        .map(|i| {
+            Ok(InputSpec {
+                name: i
+                    .get("name")
+                    .and_then(Json::as_str)
+                    .unwrap_or("arg")
+                    .to_string(),
+                shape: i
+                    .get("shape")
+                    .and_then(Json::as_usize_vec)
+                    .ok_or_else(|| anyhow::anyhow!("input missing shape"))?,
+            })
+        })
+        .collect::<anyhow::Result<Vec<_>>>()?;
+    Ok(ArtifactSpec {
+        name: get_str("name")?,
+        path: get_str("path")?,
+        kind: get_str("kind")?,
+        model: v.get("model").and_then(Json::as_str).map(str::to_string),
+        batch: v.get("batch").and_then(Json::as_usize),
+        inputs,
+        output_shape: v
+            .get("output_shape")
+            .and_then(Json::as_usize_vec)
+            .ok_or_else(|| anyhow::anyhow!("artifact missing output_shape"))?,
+    })
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn artifacts_dir() -> PathBuf {
+        PathBuf::from(env!("CARGO_MANIFEST_DIR")).join("artifacts")
+    }
+
+    #[test]
+    fn loads_real_manifest() {
+        let dir = artifacts_dir();
+        if !dir.join("manifest.json").exists() {
+            eprintln!("skipping: run `make artifacts` first");
+            return;
+        }
+        let m = Manifest::load(&dir).unwrap();
+        let layer = m.get("unified_layer_s8").expect("layer artifact");
+        assert_eq!(layer.kind, "layer");
+        assert_eq!(layer.inputs.len(), 2);
+        assert_eq!(layer.inputs[0].shape, vec![1, 8, 8, 8]);
+        assert_eq!(layer.output_shape, vec![1, 16, 16, 4]);
+        assert!(m.hlo_path(layer).exists());
+        let g = m.get("dcgan_b1").expect("generator artifact");
+        assert_eq!(g.kind, "generator");
+        assert_eq!(g.batch, Some(1));
+        assert_eq!(g.model.as_deref(), Some("dcgan"));
+        // z + proj w/b + 4 layers × (kernel, bias)
+        assert_eq!(g.inputs.len(), 1 + 2 + 8);
+    }
+
+    #[test]
+    fn missing_manifest_errors() {
+        assert!(Manifest::load(Path::new("/nonexistent")).is_err());
+    }
+
+    #[test]
+    fn input_spec_elements() {
+        let s = InputSpec {
+            name: "x".into(),
+            shape: vec![2, 3, 4],
+        };
+        assert_eq!(s.elements(), 24);
+    }
+}

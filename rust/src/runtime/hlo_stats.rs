@@ -1,0 +1,167 @@
+//! HLO-text analysis: op census and memory estimates for the lowered
+//! modules — the L2 profiling tool used in the §Perf pass
+//! (EXPERIMENTS.md) to verify the lowered graph contains no redundant
+//! recomputation and that fusion happened where expected.
+//!
+//! The parser is deliberately shallow: HLO text is line-oriented
+//! (`  %name = type opcode(args), ...`), so an opcode census plus
+//! shape-byte accounting covers what the perf pass needs without a
+//! full grammar.
+
+use std::collections::BTreeMap;
+use std::path::Path;
+
+/// Census of one HLO module.
+#[derive(Debug, Clone, Default, PartialEq)]
+pub struct HloStats {
+    /// Instructions per opcode.
+    pub op_counts: BTreeMap<String, usize>,
+    /// Total instruction count.
+    pub total_ops: usize,
+    /// Number of fused computations (`fusion` opcodes).
+    pub fusions: usize,
+    /// Total bytes of all f32 instruction outputs (upper bound on live
+    /// memory; XLA reuses buffers so the true peak is lower).
+    pub f32_output_bytes: usize,
+    /// Dot/convolution ops (the MXU-shaped work).
+    pub dot_like: usize,
+}
+
+/// Parse HLO text into an op census.
+pub fn analyze(text: &str) -> HloStats {
+    let mut stats = HloStats::default();
+    for line in text.lines() {
+        let trimmed = line.trim_start();
+        // Instruction lines look like `x.1 = f32[2,3]{1,0} add(...)` —
+        // jax's dumper omits the `%` sigil; older dumps include it, and
+        // ROOT instructions carry a `ROOT ` prefix.  Either way: an
+        // identifier, `=`, a shape, an opcode.
+        let rest = trimmed.strip_prefix("ROOT ").unwrap_or(trimmed);
+        let rest = rest.strip_prefix('%').unwrap_or(rest);
+        let ident_len = rest
+            .chars()
+            .take_while(|c| c.is_ascii_alphanumeric() || matches!(c, '.' | '_' | '-'))
+            .count();
+        if ident_len == 0 || !rest[ident_len..].trim_start().starts_with('=') {
+            continue;
+        }
+        let eq = rest[ident_len..].trim_start();
+        let after = eq[1..].trim_start();
+        // after = "f32[2,3]{1,0} add(%a, %b), metadata=..."
+        let Some(space) = after.find(' ') else { continue };
+        let shape = &after[..space];
+        let op_part = after[space + 1..].trim_start();
+        let opcode: String = op_part
+            .chars()
+            .take_while(|c| c.is_ascii_alphanumeric() || *c == '-' || *c == '_')
+            .collect();
+        if opcode.is_empty() {
+            continue;
+        }
+        *stats.op_counts.entry(opcode.clone()).or_insert(0) += 1;
+        stats.total_ops += 1;
+        if opcode == "fusion" {
+            stats.fusions += 1;
+        }
+        if opcode == "dot" || opcode == "convolution" {
+            stats.dot_like += 1;
+        }
+        stats.f32_output_bytes += shape_bytes(shape);
+    }
+    stats
+}
+
+/// Parse `f32[4,8,8]{...}`-style shapes into byte counts (f32 only; other
+/// dtypes contribute zero — fine for this crate's all-f32 artifacts).
+fn shape_bytes(shape: &str) -> usize {
+    let Some(rest) = shape.strip_prefix("f32[") else {
+        return 0;
+    };
+    let Some(close) = rest.find(']') else { return 0 };
+    let dims = &rest[..close];
+    if dims.is_empty() {
+        return 4; // scalar
+    }
+    dims.split(',')
+        .map(|d| d.trim().parse::<usize>().unwrap_or(0))
+        .product::<usize>()
+        * 4
+}
+
+/// Analyze an HLO text file.
+pub fn analyze_file(path: &Path) -> anyhow::Result<HloStats> {
+    Ok(analyze(&std::fs::read_to_string(path)?))
+}
+
+impl HloStats {
+    /// Human-readable summary (top-k opcodes).
+    pub fn summary(&self, top: usize) -> String {
+        let mut by_count: Vec<(&String, &usize)> = self.op_counts.iter().collect();
+        by_count.sort_by(|a, b| b.1.cmp(a.1));
+        let tops: Vec<String> = by_count
+            .iter()
+            .take(top)
+            .map(|(op, n)| format!("{op}:{n}"))
+            .collect();
+        format!(
+            "{} ops ({} dot-like, {} fusions), ~{:.1} MB f32 outputs; top: {}",
+            self.total_ops,
+            self.dot_like,
+            self.fusions,
+            self.f32_output_bytes as f64 / 1e6,
+            tops.join(" ")
+        )
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    const SAMPLE: &str = r#"
+HloModule jit_fn
+
+ENTRY %main.10 (Arg_0.1: f32[2,2], Arg_1.2: f32[2,2]) -> (f32[2,2]) {
+  %Arg_0.1 = f32[2,2]{1,0} parameter(0)
+  %Arg_1.2 = f32[2,2]{1,0} parameter(1)
+  %dot.3 = f32[2,2]{1,0} dot(%Arg_0.1, %Arg_1.2)
+  %constant.4 = f32[] constant(2)
+  %broadcast.5 = f32[2,2]{1,0} broadcast(%constant.4), dimensions={}
+  %add.6 = f32[2,2]{1,0} add(%dot.3, %broadcast.5)
+  ROOT %tuple.7 = (f32[2,2]{1,0}) tuple(%add.6)
+}
+"#;
+
+    #[test]
+    fn censuses_sample() {
+        let s = analyze(SAMPLE);
+        assert_eq!(s.op_counts["dot"], 1);
+        assert_eq!(s.op_counts["parameter"], 2);
+        assert_eq!(s.op_counts["add"], 1);
+        assert_eq!(s.dot_like, 1);
+        assert!(s.total_ops >= 6);
+        // 4 f32[2,2] outputs + scalar + tuple(unparsed=0).
+        assert_eq!(s.f32_output_bytes, 5 * 16 + 4);
+    }
+
+    #[test]
+    fn shape_bytes_parses() {
+        assert_eq!(shape_bytes("f32[2,3]{1,0}"), 24);
+        assert_eq!(shape_bytes("f32[]"), 4);
+        assert_eq!(shape_bytes("(f32[2])"), 0); // tuples skipped
+        assert_eq!(shape_bytes("s32[4]"), 0); // non-f32 skipped
+    }
+
+    #[test]
+    fn analyzes_real_artifact_if_present() {
+        let dir = std::path::PathBuf::from(env!("CARGO_MANIFEST_DIR"))
+            .join("artifacts/unified_layer_s8.hlo.txt");
+        if !dir.exists() {
+            return;
+        }
+        let s = analyze_file(&dir).unwrap();
+        assert!(s.dot_like >= 1, "Pallas phase matmuls must lower to dots");
+        assert!(s.total_ops > 10);
+        assert!(s.summary(3).contains("dot-like"));
+    }
+}

@@ -1,0 +1,288 @@
+//! PJRT execution runtime: load AOT HLO-text artifacts and run them on
+//! the request path.
+//!
+//! Flow (see /opt/xla-example/load_hlo and DESIGN.md §3): python lowers
+//! jax+Pallas to **HLO text** once at build time (`make artifacts`);
+//! here `HloModuleProto::from_text_file` → `XlaComputation` →
+//! `PjRtClient::compile` happens once at startup, and the compiled
+//! executable serves every request with no Python anywhere.
+//!
+//! * [`artifact`] — manifest parsing
+//! * [`Engine`] — artifact registry + compile cache + execute API
+//! * [`PjrtBackend`] — [`crate::coordinator::Backend`] adapter
+
+pub mod artifact;
+pub mod hlo_stats;
+
+use std::collections::BTreeMap;
+use std::path::Path;
+use std::sync::Mutex;
+
+use anyhow::Context;
+
+pub use artifact::{ArtifactSpec, InputSpec, Manifest};
+
+/// A compiled artifact.
+///
+/// SAFETY rationale for the `Send + Sync` below: `PjRtLoadedExecutable`
+/// wraps a PJRT C-API executable handle.  The PJRT CPU client is
+/// thread-safe for concurrent `Execute` calls; the `xla` crate merely
+/// never declared it.  We still serialize calls through a `Mutex` to
+/// stay conservative (one execute at a time per executable).
+struct Compiled {
+    spec: ArtifactSpec,
+    exe: Mutex<xla::PjRtLoadedExecutable>,
+}
+
+unsafe impl Send for Compiled {}
+unsafe impl Sync for Compiled {}
+
+/// The runtime engine: a PJRT CPU client plus compiled artifacts.
+pub struct Engine {
+    client: xla::PjRtClient,
+    manifest: Manifest,
+    compiled: BTreeMap<String, Compiled>,
+}
+
+unsafe impl Send for Engine {}
+unsafe impl Sync for Engine {}
+
+impl Engine {
+    /// Create a CPU engine over an artifact directory (reads the
+    /// manifest; compiles lazily via [`Engine::compile`]).
+    pub fn new(artifact_dir: &Path) -> anyhow::Result<Engine> {
+        let manifest = Manifest::load(artifact_dir)?;
+        let client = xla::PjRtClient::cpu()
+            .map_err(|e| anyhow::anyhow!("creating PJRT CPU client: {e:?}"))?;
+        log::info!(
+            "PJRT engine up: platform={} devices={} artifacts={}",
+            client.platform_name(),
+            client.device_count(),
+            manifest.artifacts.len()
+        );
+        Ok(Engine {
+            client,
+            manifest,
+            compiled: BTreeMap::new(),
+        })
+    }
+
+    pub fn manifest(&self) -> &Manifest {
+        &self.manifest
+    }
+
+    /// Compile one artifact by name (idempotent).
+    pub fn compile(&mut self, name: &str) -> anyhow::Result<()> {
+        if self.compiled.contains_key(name) {
+            return Ok(());
+        }
+        let spec = self
+            .manifest
+            .get(name)
+            .with_context(|| format!("artifact '{name}' not in manifest"))?
+            .clone();
+        let path = self.manifest.hlo_path(&spec);
+        let t0 = std::time::Instant::now();
+        let proto = xla::HloModuleProto::from_text_file(&path)
+            .map_err(|e| anyhow::anyhow!("parsing {}: {e:?}", path.display()))?;
+        let comp = xla::XlaComputation::from_proto(&proto);
+        let exe = self
+            .client
+            .compile(&comp)
+            .map_err(|e| anyhow::anyhow!("compiling '{name}': {e:?}"))?;
+        log::info!(
+            "compiled artifact '{name}' in {:.2}s",
+            t0.elapsed().as_secs_f64()
+        );
+        self.compiled.insert(
+            name.to_string(),
+            Compiled {
+                spec,
+                exe: Mutex::new(exe),
+            },
+        );
+        Ok(())
+    }
+
+    /// Compile every artifact in the manifest.
+    pub fn compile_all(&mut self) -> anyhow::Result<()> {
+        let names: Vec<String> = self
+            .manifest
+            .artifacts
+            .iter()
+            .map(|a| a.name.clone())
+            .collect();
+        for n in names {
+            self.compile(&n)?;
+        }
+        Ok(())
+    }
+
+    /// Execute a compiled artifact.  `inputs` must match the manifest's
+    /// input specs in order; returns the flat f32 output plus its shape.
+    pub fn execute(&self, name: &str, inputs: &[Vec<f32>]) -> anyhow::Result<(Vec<f32>, Vec<usize>)> {
+        let compiled = self
+            .compiled
+            .get(name)
+            .with_context(|| format!("artifact '{name}' not compiled"))?;
+        let spec = &compiled.spec;
+        if inputs.len() != spec.inputs.len() {
+            anyhow::bail!(
+                "artifact '{name}' expects {} inputs, got {}",
+                spec.inputs.len(),
+                inputs.len()
+            );
+        }
+        let mut literals = Vec::with_capacity(inputs.len());
+        for (data, ispec) in inputs.iter().zip(&spec.inputs) {
+            if data.len() != ispec.elements() {
+                anyhow::bail!(
+                    "artifact '{name}' input '{}' expects {} elements, got {}",
+                    ispec.name,
+                    ispec.elements(),
+                    data.len()
+                );
+            }
+            let dims: Vec<i64> = ispec.shape.iter().map(|&d| d as i64).collect();
+            let lit = xla::Literal::vec1(data)
+                .reshape(&dims)
+                .map_err(|e| anyhow::anyhow!("reshaping input '{}': {e:?}", ispec.name))?;
+            literals.push(lit);
+        }
+        let exe = compiled.exe.lock().unwrap();
+        let result = exe
+            .execute::<xla::Literal>(&literals)
+            .map_err(|e| anyhow::anyhow!("executing '{name}': {e:?}"))?;
+        drop(exe);
+        let lit = result[0][0]
+            .to_literal_sync()
+            .map_err(|e| anyhow::anyhow!("fetching output of '{name}': {e:?}"))?;
+        // aot.py lowers with return_tuple=True → unwrap the 1-tuple.
+        let out = lit
+            .to_tuple1()
+            .map_err(|e| anyhow::anyhow!("untupling output of '{name}': {e:?}"))?;
+        let data = out
+            .to_vec::<f32>()
+            .map_err(|e| anyhow::anyhow!("reading output of '{name}': {e:?}"))?;
+        if data.len() != spec.output_elements() {
+            anyhow::bail!(
+                "artifact '{name}' produced {} elements, manifest says {}",
+                data.len(),
+                spec.output_elements()
+            );
+        }
+        Ok((data, spec.output_shape.clone()))
+    }
+}
+
+// ---------------------------------------------------------------- backend
+
+use crate::coordinator::backend::Backend;
+use crate::tensor::Feature;
+use crate::util::rng::Rng;
+use std::sync::Arc;
+
+/// Serving backend over an AOT-compiled generator artifact.
+///
+/// Weights are generated once (seeded) to match the artifact's weight
+/// argument shapes and reused for every request; latent batches are
+/// padded up to the compiled batch size.
+pub struct PjrtBackend {
+    engine: Arc<Engine>,
+    artifact: String,
+    model_name: String,
+    z_dim: usize,
+    batch: usize,
+    weights: Vec<Vec<f32>>,
+    out_shape: Vec<usize>,
+}
+
+impl PjrtBackend {
+    /// Build from an engine that has already compiled `artifact`.
+    pub fn new(engine: Arc<Engine>, artifact: &str, seed: u64) -> anyhow::Result<PjrtBackend> {
+        let spec = engine
+            .manifest()
+            .get(artifact)
+            .with_context(|| format!("artifact '{artifact}' not in manifest"))?
+            .clone();
+        if spec.kind != "generator" {
+            anyhow::bail!("artifact '{artifact}' is not a generator");
+        }
+        let batch = spec.batch.context("generator artifact missing batch")?;
+        let z_dim = spec.inputs[0].shape[1];
+        let mut rng = Rng::seeded(seed);
+        // He-style init mirroring model.init_params: scale 1/sqrt(fan_in).
+        let weights = spec.inputs[1..]
+            .iter()
+            .map(|ispec| {
+                let mut w = vec![0.0f32; ispec.elements()];
+                rng.fill_normal(&mut w);
+                let fan_in = if ispec.shape.len() > 1 {
+                    ispec.shape[0] as f32
+                } else {
+                    1.0
+                };
+                let scale = 1.0 / fan_in.max(1.0).sqrt();
+                for v in &mut w {
+                    *v *= scale;
+                }
+                w
+            })
+            .collect();
+        Ok(PjrtBackend {
+            model_name: spec.model.clone().unwrap_or_else(|| artifact.to_string()),
+            out_shape: spec.output_shape.clone(),
+            engine,
+            artifact: artifact.to_string(),
+            z_dim,
+            batch,
+            weights,
+        })
+    }
+
+    /// Run one batch (padded to the compiled size) and split per-image.
+    fn run_batch(&self, latents: &[Vec<f32>]) -> anyhow::Result<Vec<Feature>> {
+        let mut z = vec![0.0f32; self.batch * self.z_dim];
+        for (i, lat) in latents.iter().enumerate() {
+            z[i * self.z_dim..(i + 1) * self.z_dim].copy_from_slice(lat);
+        }
+        let mut inputs = Vec::with_capacity(1 + self.weights.len());
+        inputs.push(z);
+        inputs.extend(self.weights.iter().cloned());
+        let (data, shape) = self.engine.execute(&self.artifact, &inputs)?;
+        let (h, w, c) = (shape[1], shape[2], shape[3]);
+        let per = h * w * c;
+        Ok(latents
+            .iter()
+            .enumerate()
+            .map(|(i, _)| Feature::from_vec(h, w, c, data[i * per..(i + 1) * per].to_vec()))
+            .collect())
+    }
+}
+
+impl Backend for PjrtBackend {
+    fn model_name(&self) -> &str {
+        &self.model_name
+    }
+
+    fn z_dim(&self) -> usize {
+        self.z_dim
+    }
+
+    fn max_batch(&self) -> usize {
+        self.batch
+    }
+
+    fn generate(&self, latents: &[Vec<f32>]) -> Vec<Feature> {
+        match self.run_batch(latents) {
+            Ok(images) => images,
+            Err(e) => {
+                // Serving must not bring the worker down; surface a
+                // zero image and log (clients see all-zeros).
+                log::error!("pjrt backend '{}' failed: {e:#}", self.artifact);
+                let (h, w, c) = (self.out_shape[1], self.out_shape[2], self.out_shape[3]);
+                latents.iter().map(|_| Feature::zeros(h, w, c)).collect()
+            }
+        }
+    }
+}

@@ -1,0 +1,116 @@
+//! Image output: dump feature maps as PPM/PGM so the serving examples
+//! produce inspectable artifacts (binary formats, no codec deps).
+
+use std::io::Write as _;
+use std::path::Path;
+
+use super::Feature;
+
+/// Map `[-1, 1]`-ish float data to `u8` with clamping.
+fn to_u8(v: f32) -> u8 {
+    (((v.clamp(-1.0, 1.0) + 1.0) / 2.0) * 255.0).round() as u8
+}
+
+/// Write a 3-channel feature map as binary PPM (P6).
+pub fn write_ppm(img: &Feature, path: &Path) -> anyhow::Result<()> {
+    anyhow::ensure!(img.c == 3, "PPM needs exactly 3 channels, got {}", img.c);
+    let mut out = std::io::BufWriter::new(std::fs::File::create(path)?);
+    write!(out, "P6\n{} {}\n255\n", img.w, img.h)?;
+    let bytes: Vec<u8> = img.data.iter().map(|&v| to_u8(v)).collect();
+    out.write_all(&bytes)?;
+    Ok(())
+}
+
+/// Write channel `ch` of a feature map as binary PGM (P5).
+pub fn write_pgm(img: &Feature, ch: usize, path: &Path) -> anyhow::Result<()> {
+    anyhow::ensure!(ch < img.c, "channel {ch} out of range ({})", img.c);
+    let mut out = std::io::BufWriter::new(std::fs::File::create(path)?);
+    write!(out, "P5\n{} {}\n255\n", img.w, img.h)?;
+    let bytes: Vec<u8> = (0..img.h)
+        .flat_map(|y| (0..img.w).map(move |x| (y, x)))
+        .map(|(y, x)| to_u8(img.get(y, x, ch)))
+        .collect();
+    out.write_all(&bytes)?;
+    Ok(())
+}
+
+/// Read back a P6 PPM into a Feature (for roundtrip tests / tooling).
+pub fn read_ppm(path: &Path) -> anyhow::Result<Feature> {
+    let data = std::fs::read(path)?;
+    let header_end = find_header_end(&data, 3)?;
+    let header = std::str::from_utf8(&data[..header_end])?;
+    let mut fields = header.split_ascii_whitespace();
+    anyhow::ensure!(fields.next() == Some("P6"), "not a P6 PPM");
+    let w: usize = fields.next().unwrap_or("0").parse()?;
+    let h: usize = fields.next().unwrap_or("0").parse()?;
+    let maxv: usize = fields.next().unwrap_or("0").parse()?;
+    anyhow::ensure!(maxv == 255, "only 8-bit PPM supported");
+    let pixels = &data[header_end + 1..];
+    anyhow::ensure!(pixels.len() >= w * h * 3, "truncated PPM");
+    let floats: Vec<f32> = pixels[..w * h * 3]
+        .iter()
+        .map(|&b| b as f32 / 255.0 * 2.0 - 1.0)
+        .collect();
+    Ok(Feature::from_vec(h, w, 3, floats))
+}
+
+/// Find the byte offset of the end of the ASCII header (after the
+/// `maxval` token), before the single whitespace preceding pixel data.
+fn find_header_end(data: &[u8], n_fields: usize) -> anyhow::Result<usize> {
+    let mut fields = 0;
+    let mut in_token = false;
+    for (i, &b) in data.iter().enumerate() {
+        let ws = b.is_ascii_whitespace();
+        if in_token && ws {
+            fields += 1;
+            if fields == n_fields + 1 {
+                return Ok(i);
+            }
+            in_token = false;
+        } else if !ws {
+            in_token = true;
+        }
+    }
+    anyhow::bail!("PPM header truncated")
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::rng::Rng;
+
+    #[test]
+    fn ppm_roundtrip() {
+        let mut rng = Rng::seeded(100);
+        let mut img = Feature::random(5, 7, 3, &mut rng);
+        for v in &mut img.data {
+            *v = v.tanh(); // clamp-free range
+        }
+        let path = std::env::temp_dir().join("ukstc_test.ppm");
+        write_ppm(&img, &path).unwrap();
+        let back = read_ppm(&path).unwrap();
+        assert_eq!((back.h, back.w, back.c), (5, 7, 3));
+        // Quantization error ≤ 1/255 of the 2-unit range.
+        let err = crate::tensor::ops::max_abs_diff(&img, &back);
+        assert!(err <= 2.0 / 255.0 + 1e-6, "err {err}");
+        std::fs::remove_file(path).ok();
+    }
+
+    #[test]
+    fn pgm_writes_single_channel() {
+        let img = Feature::from_vec(2, 2, 2, vec![0.0; 8]);
+        let path = std::env::temp_dir().join("ukstc_test.pgm");
+        write_pgm(&img, 1, &path).unwrap();
+        let data = std::fs::read(&path).unwrap();
+        assert!(data.starts_with(b"P5\n2 2\n255\n"));
+        assert_eq!(data.len(), 11 + 4);
+        std::fs::remove_file(path).ok();
+    }
+
+    #[test]
+    fn ppm_rejects_wrong_channels() {
+        let img = Feature::zeros(2, 2, 1);
+        let path = std::env::temp_dir().join("ukstc_bad.ppm");
+        assert!(write_ppm(&img, &path).is_err());
+    }
+}

@@ -1,0 +1,261 @@
+//! Feature-map and kernel containers (substrate).
+//!
+//! Concrete, layout-explicit types rather than a generic ndarray:
+//! * [`Feature`] — `[H, W, C]` row-major f32 feature map,
+//! * [`Kernel`] — `[n, n, Cin, Cout]` (HWIO) f32 convolution kernel,
+//! * [`SubKernel`] — a segregated `[R, C, Cin, Cout]` fragment.
+//!
+//! Row-major HWC matches the Python oracle's layout, so golden vectors
+//! flow between the two sides without permutation.
+
+pub mod io;
+pub mod ops;
+
+use crate::util::rng::Rng;
+
+/// `[H, W, C]` row-major f32 feature map.
+#[derive(Debug, Clone, PartialEq)]
+pub struct Feature {
+    pub h: usize,
+    pub w: usize,
+    pub c: usize,
+    pub data: Vec<f32>,
+}
+
+impl Feature {
+    /// Zero-filled map.
+    pub fn zeros(h: usize, w: usize, c: usize) -> Feature {
+        Feature {
+            h,
+            w,
+            c,
+            data: vec![0.0; h * w * c],
+        }
+    }
+
+    /// Standard-normal random map.
+    pub fn random(h: usize, w: usize, c: usize, rng: &mut Rng) -> Feature {
+        let mut f = Feature::zeros(h, w, c);
+        rng.fill_normal(&mut f.data);
+        f
+    }
+
+    /// Wrap an existing buffer (length must be `h*w*c`).
+    pub fn from_vec(h: usize, w: usize, c: usize, data: Vec<f32>) -> Feature {
+        assert_eq!(data.len(), h * w * c, "Feature::from_vec length mismatch");
+        Feature { h, w, c, data }
+    }
+
+    #[inline]
+    pub fn idx(&self, y: usize, x: usize, ch: usize) -> usize {
+        (y * self.w + x) * self.c + ch
+    }
+
+    #[inline]
+    pub fn get(&self, y: usize, x: usize, ch: usize) -> f32 {
+        self.data[self.idx(y, x, ch)]
+    }
+
+    #[inline]
+    pub fn set(&mut self, y: usize, x: usize, ch: usize, v: f32) {
+        let i = self.idx(y, x, ch);
+        self.data[i] = v;
+    }
+
+    /// Borrow the `C`-length pixel vector at `(y, x)`.
+    #[inline]
+    pub fn pixel(&self, y: usize, x: usize) -> &[f32] {
+        let base = (y * self.w + x) * self.c;
+        &self.data[base..base + self.c]
+    }
+
+    /// Borrow one row (all x, all channels) — `w*c` contiguous floats.
+    #[inline]
+    pub fn row(&self, y: usize) -> &[f32] {
+        let base = y * self.w * self.c;
+        &self.data[base..base + self.w * self.c]
+    }
+
+    /// Total element count.
+    pub fn len(&self) -> usize {
+        self.data.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.data.is_empty()
+    }
+
+    /// Bytes occupied by the raw data (fp32).
+    pub fn bytes(&self) -> usize {
+        self.data.len() * std::mem::size_of::<f32>()
+    }
+}
+
+/// `[n, n, Cin, Cout]` (HWIO) f32 kernel.
+#[derive(Debug, Clone, PartialEq)]
+pub struct Kernel {
+    pub n: usize,
+    pub cin: usize,
+    pub cout: usize,
+    pub data: Vec<f32>,
+}
+
+impl Kernel {
+    pub fn zeros(n: usize, cin: usize, cout: usize) -> Kernel {
+        Kernel {
+            n,
+            cin,
+            cout,
+            data: vec![0.0; n * n * cin * cout],
+        }
+    }
+
+    pub fn random(n: usize, cin: usize, cout: usize, rng: &mut Rng) -> Kernel {
+        let mut k = Kernel::zeros(n, cin, cout);
+        rng.fill_normal(&mut k.data);
+        k
+    }
+
+    pub fn from_vec(n: usize, cin: usize, cout: usize, data: Vec<f32>) -> Kernel {
+        assert_eq!(
+            data.len(),
+            n * n * cin * cout,
+            "Kernel::from_vec length mismatch"
+        );
+        Kernel { n, cin, cout, data }
+    }
+
+    #[inline]
+    pub fn idx(&self, u: usize, v: usize, ci: usize, co: usize) -> usize {
+        (((u * self.n) + v) * self.cin + ci) * self.cout + co
+    }
+
+    #[inline]
+    pub fn get(&self, u: usize, v: usize, ci: usize, co: usize) -> f32 {
+        self.data[self.idx(u, v, ci, co)]
+    }
+
+    /// Borrow the `[Cin, Cout]` matrix at tap `(u, v)` — contiguous.
+    #[inline]
+    pub fn tap(&self, u: usize, v: usize) -> &[f32] {
+        let base = ((u * self.n) + v) * self.cin * self.cout;
+        &self.data[base..base + self.cin * self.cout]
+    }
+
+    pub fn bytes(&self) -> usize {
+        self.data.len() * std::mem::size_of::<f32>()
+    }
+}
+
+/// A segregated sub-kernel: `[rows, cols, Cin, Cout]` (HWIO), possibly
+/// non-square (Fig. 4: 3×3 / 3×2 / 2×3 / 2×2 for a 5×5 original).
+#[derive(Debug, Clone, PartialEq)]
+pub struct SubKernel {
+    pub rows: usize,
+    pub cols: usize,
+    pub cin: usize,
+    pub cout: usize,
+    pub data: Vec<f32>,
+}
+
+impl SubKernel {
+    pub fn zeros(rows: usize, cols: usize, cin: usize, cout: usize) -> SubKernel {
+        SubKernel {
+            rows,
+            cols,
+            cin,
+            cout,
+            data: vec![0.0; rows * cols * cin * cout],
+        }
+    }
+
+    #[inline]
+    pub fn idx(&self, u: usize, v: usize, ci: usize, co: usize) -> usize {
+        (((u * self.cols) + v) * self.cin + ci) * self.cout + co
+    }
+
+    #[inline]
+    pub fn get(&self, u: usize, v: usize, ci: usize, co: usize) -> f32 {
+        self.data[self.idx(u, v, ci, co)]
+    }
+
+    #[inline]
+    pub fn set(&mut self, u: usize, v: usize, ci: usize, co: usize, val: f32) {
+        let i = self.idx(u, v, ci, co);
+        self.data[i] = val;
+    }
+
+    /// Borrow the `[Cin, Cout]` matrix at tap `(u, v)`.
+    #[inline]
+    pub fn tap(&self, u: usize, v: usize) -> &[f32] {
+        let base = ((u * self.cols) + v) * self.cin * self.cout;
+        &self.data[base..base + self.cin * self.cout]
+    }
+
+    /// Element count (spatial only), e.g. 9/6/6/4 for the 5×5 example.
+    pub fn taps(&self) -> usize {
+        self.rows * self.cols
+    }
+
+    pub fn bytes(&self) -> usize {
+        self.data.len() * std::mem::size_of::<f32>()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn feature_indexing_row_major_hwc() {
+        let mut f = Feature::zeros(2, 3, 4);
+        f.set(1, 2, 3, 9.0);
+        assert_eq!(f.data[(1 * 3 + 2) * 4 + 3], 9.0);
+        assert_eq!(f.get(1, 2, 3), 9.0);
+        assert_eq!(f.pixel(1, 2)[3], 9.0);
+    }
+
+    #[test]
+    fn feature_row_slice() {
+        let mut f = Feature::zeros(2, 2, 2);
+        f.set(1, 0, 0, 5.0);
+        assert_eq!(f.row(1)[0], 5.0);
+        assert_eq!(f.row(1).len(), 4);
+    }
+
+    #[test]
+    #[should_panic(expected = "length mismatch")]
+    fn from_vec_checks_len() {
+        Feature::from_vec(2, 2, 2, vec![0.0; 7]);
+    }
+
+    #[test]
+    fn kernel_tap_is_cin_cout_matrix() {
+        let mut k = Kernel::zeros(3, 2, 4);
+        let i = k.idx(1, 2, 1, 3);
+        k.data[i] = 7.0;
+        let tap = k.tap(1, 2);
+        assert_eq!(tap.len(), 8);
+        assert_eq!(tap[1 * 4 + 3], 7.0);
+    }
+
+    #[test]
+    fn subkernel_taps_counts() {
+        assert_eq!(SubKernel::zeros(3, 3, 1, 1).taps(), 9);
+        assert_eq!(SubKernel::zeros(3, 2, 1, 1).taps(), 6);
+        assert_eq!(SubKernel::zeros(2, 2, 1, 1).taps(), 4);
+    }
+
+    #[test]
+    fn byte_accounting_fp32() {
+        assert_eq!(Feature::zeros(4, 4, 3).bytes(), 4 * 4 * 3 * 4);
+        assert_eq!(Kernel::zeros(4, 8, 16).bytes(), 4 * 4 * 8 * 16 * 4);
+    }
+
+    #[test]
+    fn random_fills_all() {
+        let mut rng = Rng::seeded(1);
+        let f = Feature::random(5, 5, 2, &mut rng);
+        assert!(f.data.iter().any(|&v| v != 0.0));
+    }
+}

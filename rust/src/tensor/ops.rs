@@ -1,0 +1,208 @@
+//! Feature-map transforms used by the conv algorithms.
+
+use super::Feature;
+
+/// Bed-of-nails upsampling (Algorithm 1): `N×M → (2N-1)×(2M-1)` with the
+/// original pixels at even coordinates and zeros elsewhere.
+pub fn upsample_bed_of_nails(x: &Feature) -> Feature {
+    if x.h == 0 || x.w == 0 {
+        return Feature::zeros(0, 0, x.c);
+    }
+    let mut up = Feature::zeros(2 * x.h - 1, 2 * x.w - 1, x.c);
+    for y in 0..x.h {
+        for xx in 0..x.w {
+            let src = x.idx(y, xx, 0);
+            let dst = up.idx(2 * y, 2 * xx, 0);
+            up.data[dst..dst + x.c].copy_from_slice(&x.data[src..src + x.c]);
+        }
+    }
+    up
+}
+
+/// Zero-pad by `p` on every spatial side.
+pub fn pad(x: &Feature, p: usize) -> Feature {
+    if p == 0 {
+        return x.clone();
+    }
+    pad_asym(x, p, p, p, p)
+}
+
+/// Zero-pad with independent top/bottom/left/right margins.
+pub fn pad_asym(x: &Feature, top: usize, bottom: usize, left: usize, right: usize) -> Feature {
+    let mut out = Feature::zeros(x.h + top + bottom, x.w + left + right, x.c);
+    for y in 0..x.h {
+        let src = x.idx(y, 0, 0);
+        let dst = out.idx(y + top, left, 0);
+        out.data[dst..dst + x.w * x.c].copy_from_slice(&x.data[src..src + x.w * x.c]);
+    }
+    out
+}
+
+/// Crop the window `[y0, y0+h) × [x0, x0+w)`.
+pub fn crop(x: &Feature, y0: usize, x0: usize, h: usize, w: usize) -> Feature {
+    assert!(y0 + h <= x.h && x0 + w <= x.w, "crop out of bounds");
+    let mut out = Feature::zeros(h, w, x.c);
+    for y in 0..h {
+        let src = x.idx(y0 + y, x0, 0);
+        let dst = out.idx(y, 0, 0);
+        out.data[dst..dst + w * x.c].copy_from_slice(&x.data[src..src + w * x.c]);
+    }
+    out
+}
+
+/// Interleave four parity phases into one map: phase `(r, s)` supplies
+/// `out[r::2, s::2]`.  Inverse of phase extraction; the Rust analogue of
+/// the CUDA scatter-by-thread-id (DESIGN.md §Hardware-Adaptation).
+pub fn interleave_phases(
+    phases: [&Feature; 4], // order: (0,0), (0,1), (1,0), (1,1)
+    h: usize,
+    w: usize,
+) -> Feature {
+    let c = phases[0].c;
+    let mut out = Feature::zeros(h, w, c);
+    for (pi, ph) in phases.iter().enumerate() {
+        let (r, s) = (pi / 2, pi % 2);
+        assert_eq!(ph.c, c, "phase channel mismatch");
+        for (py, y) in (r..h).step_by(2).enumerate() {
+            for (px, x) in (s..w).step_by(2).enumerate() {
+                let src = ph.idx(py, px, 0);
+                let dst = out.idx(y, x, 0);
+                out.data[dst..dst + c].copy_from_slice(&ph.data[src..src + c]);
+            }
+        }
+    }
+    out
+}
+
+/// Extract parity phase `(r, s)`: `x[r::2, s::2]`.
+pub fn extract_phase(x: &Feature, r: usize, s: usize) -> Feature {
+    let h = x.h.saturating_sub(r).div_ceil(2);
+    let w = x.w.saturating_sub(s).div_ceil(2);
+    let mut out = Feature::zeros(h, w, x.c);
+    for (py, y) in (r..x.h).step_by(2).enumerate() {
+        for (px, xx) in (s..x.w).step_by(2).enumerate() {
+            let src = x.idx(y, xx, 0);
+            let dst = out.idx(py, px, 0);
+            out.data[dst..dst + x.c].copy_from_slice(&x.data[src..src + x.c]);
+        }
+    }
+    out
+}
+
+/// Max |a-b| over two equally-shaped maps.
+pub fn max_abs_diff(a: &Feature, b: &Feature) -> f32 {
+    assert_eq!(
+        (a.h, a.w, a.c),
+        (b.h, b.w, b.c),
+        "max_abs_diff shape mismatch"
+    );
+    a.data
+        .iter()
+        .zip(&b.data)
+        .map(|(x, y)| (x - y).abs())
+        .fold(0.0, f32::max)
+}
+
+/// Elementwise ReLU in place.
+pub fn relu_inplace(x: &mut Feature) {
+    for v in &mut x.data {
+        *v = v.max(0.0);
+    }
+}
+
+/// Elementwise tanh in place.
+pub fn tanh_inplace(x: &mut Feature) {
+    for v in &mut x.data {
+        *v = v.tanh();
+    }
+}
+
+/// Add per-channel bias in place (`bias.len() == x.c`).
+pub fn add_bias_inplace(x: &mut Feature, bias: &[f32]) {
+    assert_eq!(bias.len(), x.c, "bias length mismatch");
+    for px in x.data.chunks_exact_mut(bias.len()) {
+        for (v, b) in px.iter_mut().zip(bias) {
+            *v += b;
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::rng::Rng;
+
+    #[test]
+    fn upsample_places_pixels_at_even_coords() {
+        let mut x = Feature::zeros(2, 2, 1);
+        x.set(0, 0, 0, 1.0);
+        x.set(0, 1, 0, 2.0);
+        x.set(1, 0, 0, 3.0);
+        x.set(1, 1, 0, 4.0);
+        let up = upsample_bed_of_nails(&x);
+        assert_eq!((up.h, up.w), (3, 3));
+        assert_eq!(up.get(0, 0, 0), 1.0);
+        assert_eq!(up.get(0, 2, 0), 2.0);
+        assert_eq!(up.get(2, 0, 0), 3.0);
+        assert_eq!(up.get(2, 2, 0), 4.0);
+        assert_eq!(up.get(1, 1, 0), 0.0);
+        assert_eq!(up.get(0, 1, 0), 0.0);
+    }
+
+    #[test]
+    fn pad_adds_zero_border() {
+        let mut x = Feature::zeros(1, 1, 2);
+        x.set(0, 0, 1, 5.0);
+        let p = pad(&x, 2);
+        assert_eq!((p.h, p.w), (5, 5));
+        assert_eq!(p.get(2, 2, 1), 5.0);
+        assert_eq!(p.get(0, 0, 1), 0.0);
+    }
+
+    #[test]
+    fn crop_inverse_of_pad() {
+        let mut rng = Rng::seeded(2);
+        let x = Feature::random(4, 5, 3, &mut rng);
+        let roundtrip = crop(&pad(&x, 3), 3, 3, 4, 5);
+        assert_eq!(roundtrip, x);
+    }
+
+    #[test]
+    fn phase_extract_interleave_roundtrip() {
+        let mut rng = Rng::seeded(3);
+        for (h, w) in [(4, 4), (5, 5), (5, 4), (7, 3)] {
+            let x = Feature::random(h, w, 2, &mut rng);
+            let p00 = extract_phase(&x, 0, 0);
+            let p01 = extract_phase(&x, 0, 1);
+            let p10 = extract_phase(&x, 1, 0);
+            let p11 = extract_phase(&x, 1, 1);
+            let back = interleave_phases([&p00, &p01, &p10, &p11], h, w);
+            assert_eq!(back, x, "roundtrip failed for {h}x{w}");
+        }
+    }
+
+    #[test]
+    fn bias_and_activations() {
+        let mut x = Feature::from_vec(1, 2, 2, vec![-1.0, 2.0, 3.0, -4.0]);
+        add_bias_inplace(&mut x, &[1.0, -1.0]);
+        assert_eq!(x.data, vec![0.0, 1.0, 4.0, -5.0]);
+        relu_inplace(&mut x);
+        assert_eq!(x.data, vec![0.0, 1.0, 4.0, 0.0]);
+        tanh_inplace(&mut x);
+        assert!((x.data[2] - 4f32.tanh()).abs() < 1e-6);
+    }
+
+    #[test]
+    fn max_abs_diff_zero_for_identical() {
+        let mut rng = Rng::seeded(4);
+        let x = Feature::random(3, 3, 3, &mut rng);
+        assert_eq!(max_abs_diff(&x, &x), 0.0);
+    }
+
+    #[test]
+    #[should_panic(expected = "crop out of bounds")]
+    fn crop_bounds_checked() {
+        let x = Feature::zeros(2, 2, 1);
+        crop(&x, 1, 1, 2, 2);
+    }
+}

@@ -1,0 +1,222 @@
+//! Command-line parsing substrate (replaces `clap` on the offline image).
+//!
+//! Grammar: `ukstc <subcommand> [--flag] [--key value] [positional...]`.
+//! Flags may use `--key=value` or `--key value`.  Unknown flags are
+//! errors; every flag must be declared so `--help` output stays honest.
+
+use std::collections::BTreeMap;
+use std::fmt::Write as _;
+
+/// Declared option for help text + validation.
+#[derive(Debug, Clone)]
+pub struct OptSpec {
+    pub name: &'static str,
+    pub help: &'static str,
+    /// `true` → boolean flag; `false` → takes a value.
+    pub is_flag: bool,
+    pub default: Option<&'static str>,
+}
+
+/// Parsed argument bag for one subcommand.
+#[derive(Debug, Clone, Default)]
+pub struct Args {
+    values: BTreeMap<String, String>,
+    flags: Vec<String>,
+    pub positional: Vec<String>,
+}
+
+impl Args {
+    pub fn get(&self, key: &str) -> Option<&str> {
+        self.values.get(key).map(|s| s.as_str())
+    }
+
+    pub fn get_or<'a>(&'a self, key: &str, default: &'a str) -> &'a str {
+        self.get(key).unwrap_or(default)
+    }
+
+    pub fn get_usize(&self, key: &str, default: usize) -> anyhow::Result<usize> {
+        match self.get(key) {
+            None => Ok(default),
+            Some(v) => v
+                .parse()
+                .map_err(|_| anyhow::anyhow!("--{key} expects an integer, got '{v}'")),
+        }
+    }
+
+    pub fn get_f64(&self, key: &str, default: f64) -> anyhow::Result<f64> {
+        match self.get(key) {
+            None => Ok(default),
+            Some(v) => v
+                .parse()
+                .map_err(|_| anyhow::anyhow!("--{key} expects a number, got '{v}'")),
+        }
+    }
+
+    pub fn has_flag(&self, key: &str) -> bool {
+        self.flags.iter().any(|f| f == key)
+    }
+}
+
+/// A subcommand with declared options.
+pub struct Command {
+    pub name: &'static str,
+    pub about: &'static str,
+    pub opts: Vec<OptSpec>,
+}
+
+impl Command {
+    pub fn new(name: &'static str, about: &'static str) -> Self {
+        Command {
+            name,
+            about,
+            opts: Vec::new(),
+        }
+    }
+
+    pub fn flag(mut self, name: &'static str, help: &'static str) -> Self {
+        self.opts.push(OptSpec {
+            name,
+            help,
+            is_flag: true,
+            default: None,
+        });
+        self
+    }
+
+    pub fn opt(
+        mut self,
+        name: &'static str,
+        help: &'static str,
+        default: Option<&'static str>,
+    ) -> Self {
+        self.opts.push(OptSpec {
+            name,
+            help,
+            is_flag: false,
+            default,
+        });
+        self
+    }
+
+    /// Parse raw args (after the subcommand name).
+    pub fn parse(&self, raw: &[String]) -> anyhow::Result<Args> {
+        let mut args = Args::default();
+        for spec in &self.opts {
+            if let Some(d) = spec.default {
+                args.values.insert(spec.name.to_string(), d.to_string());
+            }
+        }
+        let mut it = raw.iter().peekable();
+        while let Some(tok) = it.next() {
+            if let Some(body) = tok.strip_prefix("--") {
+                let (key, inline_val) = match body.split_once('=') {
+                    Some((k, v)) => (k, Some(v.to_string())),
+                    None => (body, None),
+                };
+                let spec = self
+                    .opts
+                    .iter()
+                    .find(|o| o.name == key)
+                    .ok_or_else(|| anyhow::anyhow!("unknown option --{key}\n{}", self.help()))?;
+                if spec.is_flag {
+                    if inline_val.is_some() {
+                        anyhow::bail!("flag --{key} takes no value");
+                    }
+                    args.flags.push(key.to_string());
+                } else {
+                    let val = match inline_val {
+                        Some(v) => v,
+                        None => it
+                            .next()
+                            .ok_or_else(|| anyhow::anyhow!("--{key} expects a value"))?
+                            .clone(),
+                    };
+                    args.values.insert(key.to_string(), val);
+                }
+            } else {
+                args.positional.push(tok.clone());
+            }
+        }
+        Ok(args)
+    }
+
+    /// Render help text for this subcommand.
+    pub fn help(&self) -> String {
+        let mut s = String::new();
+        let _ = writeln!(s, "{} — {}", self.name, self.about);
+        for o in &self.opts {
+            let kind = if o.is_flag { "" } else { " <value>" };
+            let dft = o
+                .default
+                .map(|d| format!(" [default: {d}]"))
+                .unwrap_or_default();
+            let _ = writeln!(s, "  --{}{kind}\t{}{dft}", o.name, o.help);
+        }
+        s
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn cmd() -> Command {
+        Command::new("bench", "run benchmarks")
+            .opt("iters", "iterations", Some("10"))
+            .opt("model", "gan model", None)
+            .flag("verbose", "chatty output")
+    }
+
+    fn raw(args: &[&str]) -> Vec<String> {
+        args.iter().map(|s| s.to_string()).collect()
+    }
+
+    #[test]
+    fn parses_key_value_both_styles() {
+        let a = cmd().parse(&raw(&["--iters", "5", "--model=ebgan"])).unwrap();
+        assert_eq!(a.get_usize("iters", 0).unwrap(), 5);
+        assert_eq!(a.get("model"), Some("ebgan"));
+    }
+
+    #[test]
+    fn defaults_apply() {
+        let a = cmd().parse(&raw(&[])).unwrap();
+        assert_eq!(a.get_usize("iters", 0).unwrap(), 10);
+        assert_eq!(a.get("model"), None);
+    }
+
+    #[test]
+    fn flags_and_positionals() {
+        let a = cmd().parse(&raw(&["--verbose", "table2", "table4"])).unwrap();
+        assert!(a.has_flag("verbose"));
+        assert_eq!(a.positional, vec!["table2", "table4"]);
+    }
+
+    #[test]
+    fn unknown_option_rejected() {
+        assert!(cmd().parse(&raw(&["--nope"])).is_err());
+    }
+
+    #[test]
+    fn flag_with_value_rejected() {
+        assert!(cmd().parse(&raw(&["--verbose=yes"])).is_err());
+    }
+
+    #[test]
+    fn missing_value_rejected() {
+        assert!(cmd().parse(&raw(&["--model"])).is_err());
+    }
+
+    #[test]
+    fn bad_int_rejected() {
+        let a = cmd().parse(&raw(&["--iters", "abc"])).unwrap();
+        assert!(a.get_usize("iters", 0).is_err());
+    }
+
+    #[test]
+    fn help_mentions_options() {
+        let h = cmd().help();
+        assert!(h.contains("--iters"));
+        assert!(h.contains("--verbose"));
+    }
+}

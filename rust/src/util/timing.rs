@@ -1,0 +1,134 @@
+//! Wall-clock measurement helpers for the bench harness.
+
+use std::time::Instant;
+
+use super::stats::Summary;
+
+/// Time a single invocation, returning (seconds, result).
+pub fn time_once<T>(f: impl FnOnce() -> T) -> (f64, T) {
+    let t0 = Instant::now();
+    let out = f();
+    (t0.elapsed().as_secs_f64(), out)
+}
+
+/// Repeated measurement: `warmup` unrecorded runs, then `iters` recorded
+/// ones.  A `black_box`-style sink prevents the optimizer from deleting
+/// the computation (results must flow through `consume`).
+pub fn measure<T>(warmup: usize, iters: usize, mut f: impl FnMut() -> T) -> Measurement {
+    for _ in 0..warmup {
+        consume(f());
+    }
+    let mut samples = Vec::with_capacity(iters);
+    for _ in 0..iters {
+        let t0 = Instant::now();
+        consume(f());
+        samples.push(t0.elapsed().as_secs_f64());
+    }
+    Measurement { samples }
+}
+
+/// Adaptive measurement: run until `min_time_s` of recorded samples or
+/// `max_iters`, whichever first (at least 3 iterations).
+pub fn measure_for<T>(
+    warmup: usize,
+    min_time_s: f64,
+    max_iters: usize,
+    mut f: impl FnMut() -> T,
+) -> Measurement {
+    for _ in 0..warmup {
+        consume(f());
+    }
+    let mut samples = Vec::new();
+    let started = Instant::now();
+    while (samples.len() < 3)
+        || (started.elapsed().as_secs_f64() < min_time_s && samples.len() < max_iters)
+    {
+        let t0 = Instant::now();
+        consume(f());
+        samples.push(t0.elapsed().as_secs_f64());
+    }
+    Measurement { samples }
+}
+
+/// Collected timing samples (seconds per iteration).
+#[derive(Debug, Clone)]
+pub struct Measurement {
+    pub samples: Vec<f64>,
+}
+
+impl Measurement {
+    pub fn summary(&self) -> Summary {
+        Summary::of(&self.samples)
+    }
+
+    /// Best (minimum) sample — the conventional proxy for "true" cost of
+    /// a deterministic computation under scheduler noise.
+    pub fn best(&self) -> f64 {
+        self.samples
+            .iter()
+            .copied()
+            .fold(f64::INFINITY, f64::min)
+    }
+
+    /// Median sample — robust central tendency used in the tables.
+    pub fn median(&self) -> f64 {
+        self.summary().p50
+    }
+
+    pub fn total(&self) -> f64 {
+        self.samples.iter().sum()
+    }
+}
+
+/// Optimizer sink, equivalent in spirit to `std::hint::black_box`.
+#[inline]
+pub fn consume<T>(value: T) {
+    let _ = std::hint::black_box(value);
+}
+
+/// Pretty-print a duration in adaptive units.
+pub fn fmt_duration(seconds: f64) -> String {
+    if seconds >= 1.0 {
+        format!("{seconds:.3} s")
+    } else if seconds >= 1e-3 {
+        format!("{:.3} ms", seconds * 1e3)
+    } else if seconds >= 1e-6 {
+        format!("{:.3} µs", seconds * 1e6)
+    } else {
+        format!("{:.1} ns", seconds * 1e9)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn measure_collects_samples() {
+        let m = measure(1, 5, || (0..1000).sum::<u64>());
+        assert_eq!(m.samples.len(), 5);
+        assert!(m.best() >= 0.0);
+        assert!(m.median() >= m.best());
+    }
+
+    #[test]
+    fn measure_for_respects_min_iters() {
+        let m = measure_for(0, 0.0, 100, || 1 + 1);
+        assert!(m.samples.len() >= 3);
+    }
+
+    #[test]
+    fn fmt_units() {
+        assert!(fmt_duration(2.0).ends_with(" s"));
+        assert!(fmt_duration(2e-3).ends_with(" ms"));
+        assert!(fmt_duration(2e-6).ends_with(" µs"));
+        assert!(fmt_duration(2e-9).ends_with(" ns"));
+    }
+
+    #[test]
+    fn time_once_returns_result() {
+        let (dt, v) = time_once(|| 41 + 1);
+        assert_eq!(v, 42);
+        assert!(dt >= 0.0);
+    }
+}

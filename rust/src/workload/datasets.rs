@@ -1,0 +1,143 @@
+//! Table 1: dataset characteristics, and synthetic image synthesis.
+//!
+//! The paper converts every image to `224×224×3` and applies the
+//! transpose convolution to each sample; computation cost is fully
+//! determined by (shape, count), so synthetic tensors with the *exact*
+//! Table 1 sample counts reproduce the workload (DESIGN.md §2).
+
+use crate::tensor::Feature;
+use crate::util::rng::Rng;
+
+/// The paper's standard image size after conversion.
+pub const IMAGE_SIZE: usize = 224;
+pub const IMAGE_CHANNELS: usize = 3;
+
+/// One dataset group (a Table 1 / Table 2 row).
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct DatasetGroup {
+    /// Parent dataset name.
+    pub dataset: &'static str,
+    /// Group/split name as the tables print it.
+    pub group: &'static str,
+    /// Exact sample count from Table 1.
+    pub samples: usize,
+}
+
+/// Table 1, transcribed verbatim.
+pub const FLOWER_GROUPS: [DatasetGroup; 5] = [
+    DatasetGroup {
+        dataset: "Flowers",
+        group: "Daisy",
+        samples: 769,
+    },
+    DatasetGroup {
+        dataset: "Flowers",
+        group: "Dandelion",
+        samples: 1052,
+    },
+    DatasetGroup {
+        dataset: "Flowers",
+        group: "Rose",
+        samples: 784,
+    },
+    DatasetGroup {
+        dataset: "Flowers",
+        group: "Sunflower",
+        samples: 734,
+    },
+    DatasetGroup {
+        dataset: "Flowers",
+        group: "Tulip",
+        samples: 984,
+    },
+];
+
+/// Table 3's rows (MSCOCO 2017 at the paper's 10% subset; PASCAL VOC
+/// 2012 classification + segmentation splits).
+pub const TABLE3_GROUPS: [DatasetGroup; 3] = [
+    DatasetGroup {
+        dataset: "MSCOCO 2017",
+        group: "(10% subset)",
+        samples: 11_828,
+    },
+    DatasetGroup {
+        dataset: "PASCAL VOC 2012",
+        group: "Classification",
+        samples: 17_125,
+    },
+    DatasetGroup {
+        dataset: "PASCAL VOC 2012",
+        group: "Segmentation",
+        samples: 2_913,
+    },
+];
+
+impl DatasetGroup {
+    /// Synthesize one sample (contents are irrelevant to timing; a
+    /// per-dataset seed keeps runs reproducible).
+    pub fn sample(&self, index: usize, size: usize) -> Feature {
+        let mut h = 0xcbf29ce484222325u64; // FNV-1a over the identity
+        for b in self
+            .dataset
+            .bytes()
+            .chain(self.group.bytes())
+            .chain(index.to_le_bytes())
+        {
+            h ^= b as u64;
+            h = h.wrapping_mul(0x100000001b3);
+        }
+        let mut rng = Rng::seeded(h);
+        Feature::random(size, size, IMAGE_CHANNELS, &mut rng)
+    }
+
+    /// Standard-size sample (224×224×3).
+    pub fn standard_sample(&self, index: usize) -> Feature {
+        self.sample(index, IMAGE_SIZE)
+    }
+}
+
+/// Table 1 as printable rows: (dataset, group, samples).
+pub fn table1_rows() -> Vec<(&'static str, &'static str, usize)> {
+    FLOWER_GROUPS
+        .iter()
+        .chain(TABLE3_GROUPS.iter())
+        .map(|g| (g.dataset, g.group, g.samples))
+        .collect()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn table1_counts_verbatim() {
+        let total_flowers: usize = FLOWER_GROUPS.iter().map(|g| g.samples).sum();
+        assert_eq!(total_flowers, 769 + 1052 + 784 + 734 + 984);
+        assert_eq!(TABLE3_GROUPS[0].samples, 11_828);
+        assert_eq!(TABLE3_GROUPS[1].samples, 17_125);
+        assert_eq!(TABLE3_GROUPS[2].samples, 2_913);
+    }
+
+    #[test]
+    fn samples_deterministic_and_distinct() {
+        let g = FLOWER_GROUPS[0];
+        let a = g.sample(0, 16);
+        let b = g.sample(0, 16);
+        let c = g.sample(1, 16);
+        assert_eq!(a, b);
+        assert_ne!(a, c);
+        assert_eq!((a.h, a.w, a.c), (16, 16, 3));
+    }
+
+    #[test]
+    fn groups_have_distinct_streams() {
+        let a = FLOWER_GROUPS[0].sample(0, 8);
+        let b = FLOWER_GROUPS[1].sample(0, 8);
+        assert_ne!(a, b);
+    }
+
+    #[test]
+    fn table1_rows_complete() {
+        assert_eq!(table1_rows().len(), 8);
+    }
+}

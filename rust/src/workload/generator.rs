@@ -1,0 +1,105 @@
+//! Serving-request generators for the coordinator's end-to-end driver.
+//!
+//! Open-loop (Poisson arrivals at a target rate) and closed-loop
+//! (fixed concurrency) generators over the GAN image-generation
+//! request type.
+
+use crate::coordinator::request::GenRequest;
+use crate::util::rng::Rng;
+
+/// A request paired with its (relative) arrival time in seconds.
+#[derive(Debug, Clone)]
+pub struct TimedRequest {
+    pub at: f64,
+    pub request: GenRequest,
+}
+
+/// Open-loop Poisson trace: `count` requests at `rate` req/s targeting
+/// `model`, each with a fresh random latent.
+pub fn poisson_trace(
+    model: &str,
+    z_dim: usize,
+    rate: f64,
+    count: usize,
+    rng: &mut Rng,
+) -> Vec<TimedRequest> {
+    let mut t = 0.0;
+    (0..count)
+        .map(|i| {
+            t += rng.exponential(rate);
+            let mut z = vec![0.0f32; z_dim];
+            rng.fill_normal(&mut z);
+            TimedRequest {
+                at: t,
+                request: GenRequest::new(i as u64, model.to_string(), z),
+            }
+        })
+        .collect()
+}
+
+/// Uniform (deterministic-interval) trace at `rate` req/s.
+pub fn uniform_trace(
+    model: &str,
+    z_dim: usize,
+    rate: f64,
+    count: usize,
+    rng: &mut Rng,
+) -> Vec<TimedRequest> {
+    let dt = 1.0 / rate;
+    (0..count)
+        .map(|i| {
+            let mut z = vec![0.0f32; z_dim];
+            rng.fill_normal(&mut z);
+            TimedRequest {
+                at: dt * (i + 1) as f64,
+                request: GenRequest::new(i as u64, model.to_string(), z),
+            }
+        })
+        .collect()
+}
+
+/// Batch of ready-now requests (closed-loop building block).
+pub fn burst(model: &str, z_dim: usize, count: usize, rng: &mut Rng) -> Vec<GenRequest> {
+    (0..count)
+        .map(|i| {
+            let mut z = vec![0.0f32; z_dim];
+            rng.fill_normal(&mut z);
+            GenRequest::new(i as u64, model.to_string(), z)
+        })
+        .collect()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn poisson_arrival_times_increase() {
+        let mut rng = Rng::seeded(70);
+        let trace = poisson_trace("dcgan", 100, 50.0, 200, &mut rng);
+        assert_eq!(trace.len(), 200);
+        for pair in trace.windows(2) {
+            assert!(pair[1].at > pair[0].at);
+        }
+        // Mean inter-arrival ≈ 1/rate.
+        let mean = trace.last().unwrap().at / 200.0;
+        assert!((mean - 0.02).abs() < 0.005, "mean={mean}");
+    }
+
+    #[test]
+    fn uniform_trace_spacing() {
+        let mut rng = Rng::seeded(71);
+        let trace = uniform_trace("dcgan", 10, 10.0, 5, &mut rng);
+        assert!((trace[1].at - trace[0].at - 0.1).abs() < 1e-9);
+    }
+
+    #[test]
+    fn burst_ids_unique() {
+        let mut rng = Rng::seeded(72);
+        let reqs = burst("dcgan", 10, 20, &mut rng);
+        let mut ids: Vec<u64> = reqs.iter().map(|r| r.id).collect();
+        ids.dedup();
+        assert_eq!(ids.len(), 20);
+        assert_eq!(reqs[0].latent.len(), 10);
+    }
+}

@@ -1,0 +1,11 @@
+//! Workload substrate: the paper's datasets and serving-request
+//! generators.
+//!
+//! * [`datasets`] — Table 1's dataset characteristics (exact sample
+//!   counts) with synthetic image synthesis; the convolution is
+//!   data-independent, so shape + count reproduce the timing workload
+//! * [`generator`] — open/closed-loop request generators (Poisson
+//!   arrivals) for the serving coordinator
+
+pub mod datasets;
+pub mod generator;

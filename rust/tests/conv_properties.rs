@@ -1,0 +1,185 @@
+//! Cross-module property suite: the algebraic invariants that tie the
+//! paper's claims together, run wider than the per-module unit props.
+
+use ukstc::conv::parallel::{run, Algorithm, Lane};
+use ukstc::conv::segregation::segregate;
+use ukstc::conv::{flops, memory, out_size, ConvTransposeParams};
+use ukstc::tensor::{ops, Feature, Kernel};
+use ukstc::util::prop::{close, forall, forall_res, Config};
+
+/// Valid random geometry: guarantees a positive output size.
+fn geometry(rng: &mut ukstc::util::rng::Rng) -> Option<(usize, usize, usize)> {
+    let n_in = rng.range(1, 10);
+    let nk = rng.range(2, 7);
+    let p = rng.range(0, 4);
+    (2 * n_in + 2 * p > nk).then_some((n_in, nk, p))
+}
+
+#[test]
+fn prop_all_algorithms_agree_everywhere() {
+    forall_res(
+        Config::default().cases(80).seed(0xABCD),
+        "all 5 algorithms × 2 lanes agree",
+        |rng| {
+            let Some((n_in, nk, p)) = geometry(rng) else {
+                return ((0, 0, 0), Ok(()));
+            };
+            let cin = rng.range(1, 4);
+            let cout = rng.range(1, 4);
+            let mut r2 = rng.split();
+            let x = Feature::random(n_in, n_in, cin, &mut r2);
+            let k = Kernel::random(nk, cin, cout, &mut r2);
+            let want = run(Algorithm::Conventional, Lane::Serial, &x, &k, p);
+            for alg in Algorithm::all() {
+                for lane in [Lane::Serial, Lane::Parallel(3)] {
+                    let got = run(alg, lane, &x, &k, p);
+                    if let Err(e) = close(&want.data, &got.data, 2e-3) {
+                        return (
+                            (n_in, nk, p),
+                            Err(format!("{} {}: {e}", alg.name(), lane.name())),
+                        );
+                    }
+                }
+            }
+            ((n_in, nk, p), Ok(()))
+        },
+    );
+}
+
+#[test]
+fn prop_linearity_in_input() {
+    // Transpose conv is linear: T(a·x) = a·T(x).
+    forall_res(Config::default().cases(40), "linearity", |rng| {
+        let Some((n_in, nk, p)) = geometry(rng) else {
+            return ((0, 0, 0), Ok(()));
+        };
+        let mut r2 = rng.split();
+        let x = Feature::random(n_in, n_in, 2, &mut r2);
+        let k = Kernel::random(nk, 2, 2, &mut r2);
+        let mut x2 = x.clone();
+        for v in &mut x2.data {
+            *v *= 2.5;
+        }
+        let mut want = run(Algorithm::Unified, Lane::Serial, &x, &k, p);
+        for v in &mut want.data {
+            *v *= 2.5;
+        }
+        let got = run(Algorithm::Unified, Lane::Serial, &x2, &k, p);
+        ((n_in, nk, p), close(&want.data, &got.data, 1e-2))
+    });
+}
+
+#[test]
+fn prop_additivity_in_kernel() {
+    // T_{k1+k2}(x) = T_{k1}(x) + T_{k2}(x).
+    forall_res(Config::default().cases(30), "kernel additivity", |rng| {
+        let Some((n_in, nk, p)) = geometry(rng) else {
+            return ((0, 0, 0), Ok(()));
+        };
+        let mut r2 = rng.split();
+        let x = Feature::random(n_in, n_in, 2, &mut r2);
+        let k1 = Kernel::random(nk, 2, 2, &mut r2);
+        let k2 = Kernel::random(nk, 2, 2, &mut r2);
+        let mut ks = k1.clone();
+        for (a, b) in ks.data.iter_mut().zip(&k2.data) {
+            *a += b;
+        }
+        let y1 = run(Algorithm::Unified, Lane::Serial, &x, &k1, p);
+        let y2 = run(Algorithm::Unified, Lane::Serial, &x, &k2, p);
+        let mut want = y1;
+        for (a, b) in want.data.iter_mut().zip(&y2.data) {
+            *a += b;
+        }
+        let got = run(Algorithm::Unified, Lane::Serial, &x, &ks, p);
+        ((n_in, nk, p), close(&want.data, &got.data, 1e-2))
+    });
+}
+
+#[test]
+fn prop_zero_input_zero_output() {
+    forall(Config::default().cases(20), "zero in, zero out", |rng| {
+        let Some((n_in, nk, p)) = geometry(rng) else {
+            return ((0, 0, 0), true);
+        };
+        let mut r2 = rng.split();
+        let x = Feature::zeros(n_in, n_in, 2);
+        let k = Kernel::random(nk, 2, 2, &mut r2);
+        let y = run(Algorithm::Unified, Lane::Serial, &x, &k, p);
+        ((n_in, nk, p), y.data.iter().all(|&v| v == 0.0))
+    });
+}
+
+#[test]
+fn prop_flop_model_bounds_hold() {
+    forall(Config::default().cases(60), "flop bounds", |rng| {
+        let Some((n_in, nk, p)) = geometry(rng) else {
+            return ((0, 0, 0), true);
+        };
+        let params = ConvTransposeParams::new(n_in, nk, p, 2, 3);
+        let conv = flops::conventional(&params);
+        let uni = flops::unified(&params);
+        let grp = flops::grouped(&params);
+        let ok = uni <= grp && grp <= conv && uni > 0
+            && (params.odd_output() || grp == uni);
+        ((n_in, nk, p), ok)
+    });
+}
+
+#[test]
+fn prop_memory_model_invariants() {
+    forall(Config::default().cases(60), "memory invariants", |rng| {
+        let Some((n_in, nk, p)) = geometry(rng) else {
+            return ((0, 0, 0), true);
+        };
+        let params = ConvTransposeParams::new(n_in, nk, p, 3, 2);
+        let t4 = memory::savings_table4(&params);
+        let t2 = memory::savings_table2(&params);
+        let conv_fp = memory::footprint_conventional(&params).total();
+        let uni_fp = memory::footprint_unified(&params).total();
+        let ok = t2 <= t4 && conv_fp > uni_fp && conv_fp - uni_fp == t2;
+        ((n_in, nk, p), ok)
+    });
+}
+
+#[test]
+fn prop_segregation_taps_conserved() {
+    forall(Config::default().cases(40), "segregation conserves taps", |rng| {
+        let nk = rng.range(2, 9);
+        let mut r2 = rng.split();
+        let k = Kernel::random(nk, 2, 2, &mut r2);
+        let seg = segregate(&k);
+        let sum: f32 = k.data.iter().sum();
+        let seg_sum: f32 = seg.subs.iter().map(|s| s.data.iter().sum::<f32>()).sum();
+        (nk, (sum - seg_sum).abs() < 1e-3 * sum.abs().max(1.0))
+    });
+}
+
+#[test]
+fn prop_output_size_consistency() {
+    forall(Config::default().cases(50), "output size", |rng| {
+        let Some((n_in, nk, p)) = geometry(rng) else {
+            return ((0, 0, 0), true);
+        };
+        let mut r2 = rng.split();
+        let x = Feature::random(n_in, n_in, 1, &mut r2);
+        let k = Kernel::random(nk, 1, 1, &mut r2);
+        let y = run(Algorithm::Unified, Lane::Serial, &x, &k, p);
+        let expect = out_size(n_in, nk, p);
+        ((n_in, nk, p), y.h == expect && y.w == expect)
+    });
+}
+
+#[test]
+fn prop_upsample_crop_adjoint() {
+    // Sanity on the tensor substrate: upsample places exactly the
+    // original pixels at even coordinates.
+    forall(Config::default().cases(30), "upsample adjoint", |rng| {
+        let n = rng.range(1, 12);
+        let c = rng.range(1, 4);
+        let mut r2 = rng.split();
+        let x = Feature::random(n, n, c, &mut r2);
+        let up = ops::upsample_bed_of_nails(&x);
+        let back = ops::extract_phase(&up, 0, 0);
+        (n, back == x)
+    });
+}

@@ -1,0 +1,133 @@
+//! Cross-language golden tests: the Rust kernels must reproduce the JAX
+//! oracle's numbers (artifacts/golden.json, emitted by `make artifacts`).
+//!
+//! This is the contract that makes the three-layer stack coherent: the
+//! same (input, kernel, padding) triple produces the same output through
+//! the pure-jnp oracle, the Pallas kernel (checked in pytest), and every
+//! Rust algorithm (checked here).
+
+use std::path::PathBuf;
+
+use ukstc::conv::parallel::{run, Algorithm, Lane};
+use ukstc::tensor::{Feature, Kernel};
+use ukstc::util::json::{self, Json};
+
+fn artifacts_dir() -> PathBuf {
+    PathBuf::from(env!("CARGO_MANIFEST_DIR")).join("artifacts")
+}
+
+struct GoldenCase {
+    n_in: usize,
+    n_k: usize,
+    padding: usize,
+    cin: usize,
+    cout: usize,
+    x: Feature,
+    k: Kernel,
+    out: Feature,
+}
+
+fn load_golden() -> Option<Vec<GoldenCase>> {
+    let path = artifacts_dir().join("golden.json");
+    if !path.exists() {
+        eprintln!("skipping golden tests: run `make artifacts` first");
+        return None;
+    }
+    let v = json::parse_file(&path).expect("parse golden.json");
+    let cases = v
+        .get("cases")
+        .and_then(Json::as_arr)
+        .expect("golden cases")
+        .iter()
+        .map(|c| {
+            let g = |k: &str| c.get(k).and_then(Json::as_usize).unwrap();
+            let (n_in, n_k, padding, cin, cout) =
+                (g("n_in"), g("n_k"), g("padding"), g("cin"), g("cout"));
+            let out_shape = c.get("out_shape").and_then(Json::as_usize_vec).unwrap();
+            GoldenCase {
+                n_in,
+                n_k,
+                padding,
+                cin,
+                cout,
+                x: Feature::from_vec(
+                    n_in,
+                    n_in,
+                    cin,
+                    c.get("x").and_then(Json::as_f32_vec).unwrap(),
+                ),
+                k: Kernel::from_vec(
+                    n_k,
+                    cin,
+                    cout,
+                    c.get("k").and_then(Json::as_f32_vec).unwrap(),
+                ),
+                out: Feature::from_vec(
+                    out_shape[0],
+                    out_shape[1],
+                    out_shape[2],
+                    c.get("out").and_then(Json::as_f32_vec).unwrap(),
+                ),
+            }
+        })
+        .collect();
+    Some(cases)
+}
+
+fn check_algorithm(alg: Algorithm, lane: Lane) {
+    let Some(cases) = load_golden() else { return };
+    assert!(cases.len() >= 8, "golden set too small");
+    for case in &cases {
+        let got = run(alg, lane, &case.x, &case.k, case.padding);
+        assert_eq!(
+            (got.h, got.w, got.c),
+            (case.out.h, case.out.w, case.out.c),
+            "{} shape mismatch for N={} n={} P={}",
+            alg.name(),
+            case.n_in,
+            case.n_k,
+            case.padding
+        );
+        let err = ukstc::tensor::ops::max_abs_diff(&got, &case.out);
+        assert!(
+            err < 2e-3,
+            "{} vs JAX oracle: max err {err} for N={} n={} P={} cin={} cout={}",
+            alg.name(),
+            case.n_in,
+            case.n_k,
+            case.padding,
+            case.cin,
+            case.cout
+        );
+    }
+}
+
+#[test]
+fn conventional_matches_jax_oracle() {
+    check_algorithm(Algorithm::Conventional, Lane::Serial);
+}
+
+#[test]
+fn unified_matches_jax_oracle() {
+    check_algorithm(Algorithm::Unified, Lane::Serial);
+}
+
+#[test]
+fn unified_parallel_matches_jax_oracle() {
+    check_algorithm(Algorithm::Unified, Lane::Parallel(4));
+}
+
+#[test]
+fn grouped_matches_jax_oracle() {
+    check_algorithm(Algorithm::Grouped, Lane::Serial);
+}
+
+#[test]
+fn per_element_matches_jax_oracle() {
+    check_algorithm(Algorithm::UnifiedPerElement, Lane::Serial);
+}
+
+#[test]
+fn im2col_matches_jax_oracle() {
+    check_algorithm(Algorithm::Im2col, Lane::Serial);
+}
