@@ -1,0 +1,13 @@
+# Artifact pipeline: lower the JAX/Pallas side to HLO text + golden
+# vectors for the Rust runtime and golden tests (DESIGN.md §3).
+# Python runs only here — never on the request path.
+
+ARTIFACTS := rust/artifacts
+
+.PHONY: artifacts
+artifacts:
+	cd python && python3 -m compile.aot --outdir ../$(ARTIFACTS)
+
+.PHONY: clean-artifacts
+clean-artifacts:
+	rm -rf $(ARTIFACTS)

@@ -1,0 +1,62 @@
+"""Layout contract: the Rust kernels' semantics vs the JAX oracle.
+
+The Rust side cannot import jax, so its algorithms are pinned to the
+oracle through golden vectors (``make artifacts`` → ``golden.json`` →
+``rust/tests/golden.rs``).  That pin only catches layout drift *after*
+artifacts are rebuilt — this test closes the loop earlier by mirroring
+the exact semantics of ``rust/src/conv/conventional.rs`` (row-major HWC
+features, HWIO kernels, bed-of-nails upsample, pad by ``P``, VALID
+stride-1 cross-correlation) in plain numpy and asserting it agrees with
+``ref.conventional_transpose_conv`` on the same case grid ``aot.py``
+exports as goldens.  If either side changes its layout convention, this
+fails without any Rust toolchain in the loop.
+"""
+
+import jax.numpy as jnp
+import numpy as np
+
+from compile.aot import GOLDEN_CASES
+from compile.kernels import ref
+
+
+def rust_conventional_mirror(x: np.ndarray, k: np.ndarray, padding: int) -> np.ndarray:
+    """numpy mirror of ``rust/src/conv/conventional.rs::transpose_conv``.
+
+    Deliberately index-by-index (no lax.conv) so it shares nothing with
+    the oracle's implementation.
+    """
+    n = x.shape[0]
+    nk = k.shape[0]
+    up = np.zeros((2 * n - 1, 2 * n - 1, x.shape[2]), np.float32)
+    up[::2, ::2, :] = x  # real pixels at even coordinates
+    upp = np.pad(up, ((padding, padding), (padding, padding), (0, 0)))
+    ho = upp.shape[0] - nk + 1
+    out = np.zeros((ho, ho, k.shape[3]), np.float32)
+    for oy in range(ho):
+        for ox in range(ho):
+            patch = upp[oy : oy + nk, ox : ox + nk, :]
+            out[oy, ox, :] = np.einsum("uvc,uvco->o", patch, k)
+    return out
+
+
+def test_rust_semantics_match_oracle_on_golden_grid():
+    rng = np.random.default_rng(2024)  # same seed as aot.emit_golden
+    for n_in, n_k, pad, cin, cout in GOLDEN_CASES:
+        x = rng.standard_normal((n_in, n_in, cin)).astype(np.float32)
+        k = rng.standard_normal((n_k, n_k, cin, cout)).astype(np.float32)
+        want = np.asarray(
+            ref.conventional_transpose_conv(jnp.asarray(x), jnp.asarray(k), pad)
+        )
+        got = rust_conventional_mirror(x, k, pad)
+        assert got.shape == want.shape, (n_in, n_k, pad)
+        err = float(np.abs(got - want).max())
+        assert err < 2e-4, f"N={n_in} n={n_k} P={pad}: max err {err}"
+
+
+def test_output_size_formula():
+    # Ho = 2N + 2P - n, shared by rust conv::out_size and the oracle.
+    for n_in, n_k, pad, cin, _ in GOLDEN_CASES:
+        x = jnp.zeros((n_in, n_in, cin), jnp.float32)
+        k = jnp.zeros((n_k, n_k, cin, 1), jnp.float32)
+        out = ref.conventional_transpose_conv(x, k, pad)
+        assert out.shape[0] == 2 * n_in + 2 * pad - n_k

@@ -62,8 +62,31 @@ impl ConvTransposeParams {
     /// The standard GAN generator block: `k=4, s=2, p=1` in framework
     /// terms, i.e. paper padding factor `P = k - 1 - p = 2` (exactly
     /// doubles the spatial size).
+    ///
+    /// Only the *kernel geometry* (`n_k`, `padding`) is meaningful on
+    /// the returned value — `n_in`, `cin` and `cout` are zero
+    /// placeholders, so size- and cost-model methods
+    /// ([`out_size`](Self::out_size), [`odd_output`](Self::odd_output),
+    /// the [`flops`]/[`memory`] models) panic or return nonsense until
+    /// the I/O geometry is filled in.  Chain [`with_io`](Self::with_io)
+    /// to get a fully-specified layer:
+    ///
+    /// ```
+    /// use ukstc::conv::ConvTransposeParams;
+    /// let p = ConvTransposeParams::gan_layer().with_io(16, 64, 32);
+    /// assert_eq!(p.out_size(), 32); // doubles the spatial size
+    /// ```
     pub fn gan_layer() -> Self {
         ConvTransposeParams::new(0, 4, 2, 0, 0)
+    }
+
+    /// Fill in the I/O geometry (input spatial size and channel counts)
+    /// on a kernel-geometry template such as [`gan_layer`](Self::gan_layer).
+    pub fn with_io(mut self, n_in: usize, cin: usize, cout: usize) -> Self {
+        self.n_in = n_in;
+        self.cin = cin;
+        self.cout = cout;
+        self
     }
 
     /// Output spatial size: `2N + 2P - n` (paper §3.3).
@@ -155,6 +178,32 @@ mod tests {
         p.n_in = 16;
         assert_eq!(p.out_size(), 32);
         assert!(!p.odd_output());
+    }
+
+    #[test]
+    fn gan_layer_with_io_fully_specified() {
+        let p = ConvTransposeParams::gan_layer().with_io(16, 64, 32);
+        assert_eq!(
+            p,
+            ConvTransposeParams::new(16, 4, 2, 64, 32),
+            "with_io must fill every placeholder field"
+        );
+        assert_eq!(p.out_size(), 32);
+        assert_eq!(p.upsampled_size(), 31);
+        assert!(!p.odd_output());
+        // The cost models become usable once I/O geometry is set.
+        assert!(flops::conventional(&p) > 0);
+        assert!(memory::savings_table4(&p) > 0);
+    }
+
+    #[test]
+    fn gan_layer_placeholders_documented_behavior() {
+        // Without with_io the template has zero I/O geometry — the
+        // documented footgun this test pins down.
+        let p = ConvTransposeParams::gan_layer();
+        assert_eq!((p.n_in, p.cin, p.cout), (0, 0, 0));
+        assert_eq!((p.n_k, p.padding), (4, 2));
+        assert_eq!(flops::conventional(&p), 0);
     }
 
     #[test]

@@ -28,7 +28,7 @@ pub fn segregate_s(k: &Kernel, stride: usize) -> Vec<SubKernel> {
         for c in 0..stride {
             let rows = if n > r { (n - r).div_ceil(stride) } else { 0 };
             let cols = if n > c { (n - c).div_ceil(stride) } else { 0 };
-            let mut sub = SubKernel::zeros(rows.max(0), cols.max(0), k.cin, k.cout);
+            let mut sub = SubKernel::zeros(rows, cols, k.cin, k.cout);
             for (su, u) in (r..n).step_by(stride).enumerate() {
                 for (sv, v) in (c..n).step_by(stride).enumerate() {
                     let src = k.tap(u, v);

@@ -48,17 +48,34 @@ impl GenResponse {
 }
 
 /// Submission failure modes surfaced to clients.
-#[derive(Debug, Clone, PartialEq, Eq, thiserror::Error)]
+#[derive(Debug, Clone, PartialEq, Eq)]
 pub enum SubmitError {
-    #[error("unknown model '{0}'")]
     UnknownModel(String),
-    #[error("queue for model '{0}' is full (backpressure)")]
+    /// Queue for the model is at capacity (backpressure).
     QueueFull(String),
-    #[error("coordinator is shutting down")]
     ShuttingDown,
-    #[error("latent length {got} != expected {want}")]
-    BadLatent { got: usize, want: usize },
+    BadLatent {
+        got: usize,
+        want: usize,
+    },
 }
+
+impl std::fmt::Display for SubmitError {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        match self {
+            SubmitError::UnknownModel(m) => write!(f, "unknown model '{m}'"),
+            SubmitError::QueueFull(m) => {
+                write!(f, "queue for model '{m}' is full (backpressure)")
+            }
+            SubmitError::ShuttingDown => write!(f, "coordinator is shutting down"),
+            SubmitError::BadLatent { got, want } => {
+                write!(f, "latent length {got} != expected {want}")
+            }
+        }
+    }
+}
+
+impl std::error::Error for SubmitError {}
 
 #[cfg(test)]
 mod tests {

@@ -25,7 +25,7 @@
 //!
 //! ## Quickstart
 //!
-//! ```no_run
+//! ```
 //! use ukstc::conv::{unified, ConvTransposeParams};
 //! use ukstc::tensor::{Feature, Kernel};
 //! use ukstc::util::rng::Rng;
@@ -33,9 +33,10 @@
 //! let mut rng = Rng::seeded(42);
 //! let x = Feature::random(8, 8, 16, &mut rng);
 //! let k = Kernel::random(4, 16, 32, &mut rng);
-//! let p = ConvTransposeParams::gan_layer(); // k=4, s=2, P=2
+//! let p = ConvTransposeParams::gan_layer().with_io(8, 16, 32); // k=4, s=2, P=2
 //! let y = unified::transpose_conv(&x, &k, p.padding);
-//! assert_eq!((y.h, y.w, y.c), (16, 16, 32));
+//! assert_eq!((y.h, y.w, y.c), (p.out_size(), p.out_size(), p.cout));
+//! assert_eq!(p.out_size(), 16);
 //! ```
 
 pub mod bench;

@@ -40,12 +40,13 @@ fn main() {
 }
 
 fn bench_cfg(a: &ukstc::util::cli::Args) -> anyhow::Result<BenchConfig> {
-    let mut cfg = BenchConfig::default();
-    cfg.scale = a.get_f64("scale", cfg.scale)?;
-    cfg.warmup = a.get_usize("warmup", cfg.warmup)?;
-    cfg.iters = a.get_usize("iters", cfg.iters)?;
-    cfg.workers = a.get_usize("workers", cfg.workers)?;
-    Ok(cfg)
+    let d = BenchConfig::default();
+    Ok(BenchConfig {
+        scale: a.get_f64("scale", d.scale)?,
+        warmup: a.get_usize("warmup", d.warmup)?,
+        iters: a.get_usize("iters", d.iters)?,
+        workers: a.get_usize("workers", d.workers)?,
+    })
 }
 
 fn bench_command(name: &'static str, about: &'static str) -> Command {

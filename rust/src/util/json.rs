@@ -3,8 +3,7 @@
 //! Supports the full JSON grammar needed by the artifact manifest,
 //! golden vectors, and coordinator config files: objects, arrays,
 //! strings (with escapes), numbers, booleans, null.  Recursive-descent
-//! parser; serializer with stable key order (insertion order preserved
-//! via `Vec` of pairs).
+//! parser; serializer with stable (sorted) key order via `BTreeMap`.
 
 use std::collections::BTreeMap;
 use std::fmt;
@@ -21,12 +20,19 @@ pub enum Json {
 }
 
 /// Parse error with byte offset context.
-#[derive(Debug, thiserror::Error)]
-#[error("json parse error at byte {offset}: {msg}")]
+#[derive(Debug)]
 pub struct JsonError {
     pub offset: usize,
     pub msg: String,
 }
+
+impl fmt::Display for JsonError {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        write!(f, "json parse error at byte {}: {}", self.offset, self.msg)
+    }
+}
+
+impl std::error::Error for JsonError {}
 
 impl Json {
     // ------------------------------------------------------- accessors
@@ -347,7 +353,7 @@ impl<'a> Parser<'a> {
 pub fn parse_file(path: &std::path::Path) -> anyhow::Result<Json> {
     let text = std::fs::read_to_string(path)
         .map_err(|e| anyhow::anyhow!("reading {}: {e}", path.display()))?;
-    Ok(parse(&text).map_err(|e| anyhow::anyhow!("parsing {}: {e}", path.display()))?)
+    parse(&text).map_err(|e| anyhow::anyhow!("parsing {}: {e}", path.display()))
 }
 
 #[cfg(test)]

@@ -1,0 +1,129 @@
+//! Phase-geometry exact-cover suite: the unified algorithm's four
+//! parity phases must tile the output feature map exactly once — no
+//! gaps, no overlap and, critically for odd output sizes, **no
+//! over-compute** past the boundary (the prior grouped approach's
+//! headline flaw, paper §3.2 / Fig. 5).
+
+use ukstc::conv::unified::{phase_geometries, transpose_conv};
+use ukstc::conv::{conventional, flops, out_size, ConvTransposeParams};
+use ukstc::tensor::{ops, Feature, Kernel};
+use ukstc::util::rng::Rng;
+
+/// Count how many phases write each output cell; every cell must be
+/// written exactly once and no phase may extend past the output edge.
+fn assert_exact_cover(n_in: usize, n_k: usize, p: usize) {
+    let ho = out_size(n_in, n_k, p);
+    let mut cover = vec![0u32; ho * ho];
+    for g in phase_geometries(n_in, n_k, p) {
+        for i in 0..g.n_rows {
+            for j in 0..g.n_cols {
+                let (y, x) = (g.rp + 2 * i, g.sp + 2 * j);
+                assert!(
+                    y < ho && x < ho,
+                    "phase ({},{}) writes ({y},{x}) outside {ho}×{ho} \
+                     (over-compute) for n={n_in} k={n_k} p={p}",
+                    g.rp,
+                    g.sp
+                );
+                cover[y * ho + x] += 1;
+            }
+        }
+    }
+    for (idx, &c) in cover.iter().enumerate() {
+        assert_eq!(
+            c,
+            1,
+            "output cell ({}, {}) covered {c} times for n={n_in} k={n_k} p={p}",
+            idx / ho,
+            idx % ho
+        );
+    }
+}
+
+#[test]
+fn odd_outputs_covered_exactly_once() {
+    // All of these produce odd output sizes — the case where the
+    // grouped prior work computes extra elements and unified must not.
+    for (n_in, n_k, p) in [(4, 5, 2), (3, 3, 1), (5, 3, 2), (6, 5, 2), (2, 3, 0), (1, 3, 2)] {
+        let ho = out_size(n_in, n_k, p);
+        assert_eq!(ho % 2, 1, "case n={n_in} k={n_k} p={p} should be odd");
+        assert_exact_cover(n_in, n_k, p);
+    }
+}
+
+#[test]
+fn even_outputs_covered_exactly_once() {
+    for (n_in, n_k, p) in [(4, 4, 2), (8, 4, 2), (6, 4, 0), (5, 4, 1)] {
+        let ho = out_size(n_in, n_k, p);
+        assert_eq!(ho % 2, 0, "case n={n_in} k={n_k} p={p} should be even");
+        assert_exact_cover(n_in, n_k, p);
+    }
+}
+
+#[test]
+fn fig5_case_phase_extents_and_numerics() {
+    // Fig. 5 worked example: N=4, n=5, P=2 → 7×7 output (odd).
+    let (n_in, n_k, p) = (4, 5, 2);
+    assert_eq!(out_size(n_in, n_k, p), 7);
+    let geoms = phase_geometries(n_in, n_k, p);
+    assert_eq!(geoms.len(), 4);
+    // Exact per-phase extents: 4×4 + 4×3 + 3×4 + 3×3 = 49 = 7².
+    let extent = |rp: usize, sp: usize| {
+        let g = geoms.iter().find(|g| (g.rp, g.sp) == (rp, sp)).unwrap();
+        (g.n_rows, g.n_cols)
+    };
+    assert_eq!(extent(0, 0), (4, 4));
+    assert_eq!(extent(0, 1), (4, 3));
+    assert_eq!(extent(1, 0), (3, 4));
+    assert_eq!(extent(1, 1), (3, 3));
+    let total: usize = geoms.iter().map(|g| g.n_rows * g.n_cols).sum();
+    assert_eq!(total, 49, "phases must compute exactly ho² elements");
+
+    // Cross-check against the conventional (Algorithm 1) oracle.
+    let mut rng = Rng::seeded(0x0DD);
+    let x = Feature::random(n_in, n_in, 3, &mut rng);
+    let k = Kernel::random(n_k, 3, 2, &mut rng);
+    let want = conventional::transpose_conv(&x, &k, p);
+    let got = transpose_conv(&x, &k, p);
+    assert_eq!((got.h, got.w, got.c), (7, 7, 2));
+    assert!(ops::max_abs_diff(&want, &got) < 1e-4);
+}
+
+#[test]
+fn phase_work_matches_flop_model() {
+    // The geometric extents must agree with the analytic FLOP model:
+    // per-phase elements × sub-kernel taps × cin × cout == flops::unified.
+    for (n_in, n_k, p) in [(4, 5, 2), (4, 4, 2), (7, 5, 3), (3, 3, 1)] {
+        let params = ConvTransposeParams::new(n_in, n_k, p, 2, 3);
+        let ceil = n_k.div_ceil(2);
+        let floor = n_k / 2;
+        let counted: u64 = phase_geometries(n_in, n_k, p)
+            .iter()
+            .map(|g| {
+                let (r, s) = (g.sub / 2, g.sub % 2);
+                let kr = if r == 0 { ceil } else { floor };
+                let ks = if s == 0 { ceil } else { floor };
+                (g.n_rows * g.n_cols * kr * ks * params.cin * params.cout) as u64
+            })
+            .sum();
+        assert_eq!(
+            counted,
+            flops::unified(&params),
+            "n={n_in} k={n_k} p={p}"
+        );
+    }
+}
+
+#[test]
+fn grouped_overcomputes_on_odd_unified_does_not() {
+    // The contrast the paper draws: on odd outputs the grouped prior
+    // work rounds the block grid up and wastes MACs; the unified phase
+    // decomposition never exceeds the exact output element count.
+    let odd = ConvTransposeParams::new(4, 5, 2, 2, 2); // ho = 7
+    assert!(odd.odd_output());
+    assert!(flops::grouped(&odd) > flops::unified(&odd));
+
+    let even = ConvTransposeParams::new(4, 4, 2, 2, 2); // ho = 8
+    assert!(!even.odd_output());
+    assert_eq!(flops::grouped(&even), flops::unified(&even));
+}
