@@ -1,8 +1,10 @@
-//! `cargo bench --bench serving` — end-to-end serving A/B: identical
+//! `cargo bench --bench serving` — end-to-end serving matrix: identical
 //! coordinator (router + dynamic batcher + worker pool), backend kernel
-//! switched between unified (proposed) and conventional (baseline).
+//! switched between unified planned (AOT plans + per-worker scratch
+//! arenas), unified unplanned (per-call planning — the ablation
+//! column), and conventional (baseline).
 
-use ukstc::bench::serving::{print_ab, run_ab, ServingConfig};
+use ukstc::bench::serving::{print_results, run_matrix, ServingConfig};
 use ukstc::models::GanModel;
 
 fn main() {
@@ -14,18 +16,24 @@ fn main() {
         .ok()
         .and_then(|v| GanModel::from_name(&v))
         .unwrap_or(GanModel::GpGan);
+    let batch_workers = std::env::var("UKSTC_BENCH_BATCH_WORKERS")
+        .ok()
+        .and_then(|v| v.parse().ok())
+        .unwrap_or(1);
     let cfg = ServingConfig {
         model,
         requests,
+        batch_workers,
         ..Default::default()
     };
     eprintln!(
-        "serving A/B: model={} requests={} workers={} max_batch={}",
+        "serving matrix: model={} requests={} workers={} max_batch={} batch_workers={}",
         cfg.model.name(),
         cfg.requests,
         cfg.workers_per_model,
-        cfg.max_batch
+        cfg.max_batch,
+        cfg.batch_workers
     );
-    let (unified, conventional) = run_ab(&cfg).expect("serving run");
-    print_ab(&unified, &conventional);
+    let results = run_matrix(&cfg).expect("serving run");
+    print_results(&results);
 }

@@ -7,6 +7,7 @@
 //! ```
 
 use ukstc::conv::parallel::{run, Algorithm, Lane};
+use ukstc::conv::plan::{ConvTransposePlan, Scratch};
 use ukstc::conv::segregation::segregate;
 use ukstc::conv::{flops, memory, ConvTransposeParams};
 use ukstc::tensor::{ops, Feature, Kernel};
@@ -69,8 +70,28 @@ fn main() {
         );
     }
 
-    // 4. Analytic models (the paper's exact savings columns).
+    // 4. Plan/execute: the deployment path.  Build the plan once
+    // (segregation + phase geometry + exact scratch sizing), then run
+    // through a warm arena — zero allocations per call.
     let p = ConvTransposeParams::new(n_in, n_k, padding, cin, cout);
+    let plan = ConvTransposePlan::new(p, &k);
+    let mut scratch = Scratch::for_plan(&plan);
+    let mut y = plan.new_output();
+    plan.run(&x, &mut scratch, &mut y);
+    assert_eq!(y, run(Algorithm::Unified, Lane::Serial, &x, &k, padding));
+    let m_plan = timing::measure(1, 5, || plan.run(&x, &mut scratch, &mut y));
+    let m_oneshot = timing::measure(1, 5, || {
+        timing::consume(ukstc::conv::unified::transpose_conv(&x, &k, padding))
+    });
+    println!(
+        "\nplan/execute ({} B scratch, bit-identical): planned {} vs one-shot {} ({:.2}×)",
+        plan.scratch_bytes(),
+        timing::fmt_duration(m_plan.median()),
+        timing::fmt_duration(m_oneshot.median()),
+        m_oneshot.median() / m_plan.median()
+    );
+
+    // 5. Analytic models (the paper's exact savings columns).
     println!("\nanalytic models:");
     println!(
         "  MACs: conventional {} vs unified {}  (reduction {:.2}×)",

@@ -11,9 +11,15 @@
 //!    baseline recovers (honesty check on the conventional baseline).
 //! 4. **Dilated convolution** (§5 future work): naive vs
 //!    segregated-input.
+//! 5. **Lane scaling**: unified-kernel thread scaling.
+//! 6. **Plan/execute** (DESIGN.md §Plan-Execute): ahead-of-time
+//!    [`ConvTransposePlan`] + warm scratch arena vs the per-call paths
+//!    that re-segregate, re-plan and re-allocate on every invocation.
 
 use crate::conv::parallel::{run, Algorithm, Lane};
+use crate::conv::plan::{ConvTransposePlan, Scratch};
 use crate::conv::{conventional, dilated, im2col, unified};
+use crate::models::zoo::GanModel;
 use crate::tensor::{Feature, Kernel};
 use crate::util::rng::Rng;
 use crate::util::timing;
@@ -27,7 +33,7 @@ pub struct Entry {
     pub seconds: f64,
 }
 
-fn time_it(cfg: &BenchConfig, f: impl FnMut() -> Feature) -> f64 {
+fn time_it<T>(cfg: &BenchConfig, f: impl FnMut() -> T) -> f64 {
     timing::measure(cfg.warmup, cfg.iters.max(2), f).median()
 }
 
@@ -139,6 +145,61 @@ pub fn lane_scaling(cfg: &BenchConfig) -> Vec<Entry> {
     out
 }
 
+/// Ablation 6: plan/execute vs per-call planning over the Table-4
+/// DC-GAN transpose-conv layer set (serial lane, whole stack per
+/// iteration).
+///
+/// Rows, in increasing amounts of ahead-of-time work:
+/// 1. the naive caller — [`unified::transpose_conv`] segregates the
+///    kernel, recomputes phase geometry and allocates every buffer per
+///    call;
+/// 2. pre-segregated weights ([`unified::transpose_conv_seg`]) — still
+///    per-call geometry + allocations;
+/// 3. the planned path — geometry frozen in a [`ConvTransposePlan`],
+///    slabs/phases in a warm [`Scratch`] arena, output buffers reused:
+///    zero steady-state allocations.
+pub fn planning(cfg: &BenchConfig) -> Vec<Entry> {
+    let mut rng = Rng::seeded(0xF5);
+    let layers: Vec<(Feature, Kernel, ConvTransposePlan)> = GanModel::DcGan
+        .layers()
+        .iter()
+        .map(|spec| {
+            let x = Feature::random(spec.n_in, spec.n_in, spec.cin, &mut rng);
+            let k = Kernel::random(spec.ksize, spec.cin, spec.cout, &mut rng);
+            let plan = ConvTransposePlan::new(spec.params(), &k);
+            (x, k, plan)
+        })
+        .collect();
+    let unplanned = Entry {
+        name: "unplanned (segregate + plan per call)".into(),
+        seconds: time_it(cfg, || {
+            for (x, k, plan) in &layers {
+                timing::consume(unified::transpose_conv(x, k, plan.params().padding));
+            }
+        }),
+    };
+    let preseg = Entry {
+        name: "unplanned (pre-segregated weights)".into(),
+        seconds: time_it(cfg, || {
+            for (x, _, plan) in &layers {
+                timing::consume(unified::transpose_conv_seg(x, plan.seg(), plan.params().padding));
+            }
+        }),
+    };
+    let mut scratch = Scratch::for_plans(layers.iter().map(|(_, _, plan)| plan));
+    let mut outs: Vec<Feature> = layers.iter().map(|(_, _, plan)| plan.new_output()).collect();
+    let planned = Entry {
+        name: "planned (AOT plan + scratch arena)".into(),
+        seconds: time_it(cfg, || {
+            for ((x, _, plan), out) in layers.iter().zip(&mut outs) {
+                plan.run(x, &mut scratch, out);
+            }
+            outs[0].data[0]
+        }),
+    };
+    vec![unplanned, preseg, planned]
+}
+
 /// Print one ablation block with ratios relative to the first entry.
 pub fn print_entries(title: &str, entries: &[Entry]) {
     let base = entries[0].seconds;
@@ -162,6 +223,10 @@ pub fn run_all(cfg: &BenchConfig) {
     print_entries("Ablation 3 — zero-skip baseline honesty check", &zero_skip(cfg));
     print_entries("Ablation 4 — dilated conv (§5 future work)", &dilated_routes(cfg));
     print_entries("Ablation 5 — unified kernel lane scaling", &lane_scaling(cfg));
+    print_entries(
+        "Ablation 6 — plan/execute vs per-call (Table-4 DC-GAN layer set)",
+        &planning(cfg),
+    );
 }
 
 #[cfg(test)]

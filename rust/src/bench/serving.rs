@@ -24,6 +24,9 @@ pub struct ServingConfig {
     pub requests: usize,
     pub workers_per_model: usize,
     pub lane_workers: usize,
+    /// Threads the backend fans one batch's latents across (per-worker
+    /// scratch arenas; 1 = in-line).
+    pub batch_workers: usize,
     pub max_batch: usize,
     pub max_delay: Duration,
     pub queue_capacity: usize,
@@ -36,6 +39,7 @@ impl Default for ServingConfig {
             requests: 24,
             workers_per_model: 2,
             lane_workers: 2,
+            batch_workers: 1,
             max_batch: 8,
             max_delay: Duration::from_millis(3),
             queue_capacity: 512,
@@ -47,19 +51,39 @@ impl Default for ServingConfig {
 #[derive(Debug, Clone)]
 pub struct ServingResult {
     pub algorithm: Algorithm,
+    /// Whether the backend executed through the AOT plans.
+    pub planned: bool,
     pub wall_s: f64,
     pub snapshot: Snapshot,
 }
 
 /// Run a closed-loop burst through a coordinator whose backend uses
-/// `alg` for every transpose conv.
+/// `alg` (planned execution) for every transpose conv.
 pub fn run_once(cfg: &ServingConfig, alg: Algorithm) -> anyhow::Result<ServingResult> {
+    run_once_with(cfg, alg, true)
+}
+
+/// [`run_once`] with the planned path switchable — the
+/// planned-vs-unplanned serving ablation lane.  Only the unified
+/// algorithm has a planned path; for every other algorithm the result
+/// is recorded as unplanned regardless of the flag.
+pub fn run_once_with(
+    cfg: &ServingConfig,
+    alg: Algorithm,
+    planned: bool,
+) -> anyhow::Result<ServingResult> {
+    let planned = planned && alg == Algorithm::Unified;
     let lane = if cfg.lane_workers <= 1 {
         Lane::Serial
     } else {
         Lane::Parallel(cfg.lane_workers)
     };
-    let backend = Arc::new(RustBackend::new(cfg.model, alg, lane, 77, cfg.max_batch));
+    let mut backend = RustBackend::new(cfg.model, alg, lane, 77, cfg.max_batch)
+        .with_batch_workers(cfg.batch_workers);
+    if !planned {
+        backend = backend.with_unplanned();
+    }
+    let backend = Arc::new(backend);
     let coord = Coordinator::builder()
         .queue_capacity(cfg.queue_capacity)
         .workers_per_model(cfg.workers_per_model)
@@ -84,6 +108,7 @@ pub fn run_once(cfg: &ServingConfig, alg: Algorithm) -> anyhow::Result<ServingRe
     let snapshot = coord.metrics(cfg.model.name()).unwrap();
     Ok(ServingResult {
         algorithm: alg,
+        planned,
         wall_s,
         snapshot,
     })
@@ -96,40 +121,85 @@ pub fn run_ab(cfg: &ServingConfig) -> anyhow::Result<(ServingResult, ServingResu
     Ok((unified, conventional))
 }
 
-/// Print the A/B comparison.
-pub fn print_ab(unified: &ServingResult, conventional: &ServingResult) {
+/// The full serving matrix: unified planned, unified unplanned, and
+/// the conventional baseline — same coordinator, same trace.
+pub fn run_matrix(cfg: &ServingConfig) -> anyhow::Result<Vec<ServingResult>> {
+    Ok(vec![
+        run_once_with(cfg, Algorithm::Unified, true)?,
+        run_once_with(cfg, Algorithm::Unified, false)?,
+        run_once_with(cfg, Algorithm::Conventional, true)?,
+    ])
+}
+
+/// Print serving results side by side, with a planned column.
+pub fn print_results(results: &[ServingResult]) {
     use super::report;
-    let row = |r: &ServingResult| {
-        vec![
-            r.algorithm.name().to_string(),
-            format!("{:.3}", r.wall_s),
-            format!("{:.2}", r.snapshot.completed as f64 / r.wall_s),
-            format!("{:.1}", r.snapshot.total_p50_s * 1e3),
-            format!("{:.1}", r.snapshot.total_p95_s * 1e3),
-            format!("{:.2}", r.snapshot.mean_batch_size),
-        ]
-    };
+    let rows: Vec<Vec<String>> = results
+        .iter()
+        .map(|r| {
+            vec![
+                r.algorithm.name().to_string(),
+                if r.planned { "yes" } else { "no" }.to_string(),
+                format!("{:.3}", r.wall_s),
+                format!("{:.2}", r.snapshot.completed as f64 / r.wall_s),
+                format!("{:.1}", r.snapshot.total_p50_s * 1e3),
+                format!("{:.1}", r.snapshot.total_p95_s * 1e3),
+                format!("{:.2}", r.snapshot.mean_batch_size),
+            ]
+        })
+        .collect();
     report::print_table(
         "Serving A/B — coordinator end-to-end",
         &[
             "backend kernel",
+            "planned",
             "wall (s)",
             "thpt (img/s)",
             "p50 (ms)",
             "p95 (ms)",
             "mean batch",
         ],
-        &[row(unified), row(conventional)],
+        &rows,
     );
-    println!(
-        "\nend-to-end speedup (unified vs conventional): {:.3}×",
-        conventional.wall_s / unified.wall_s
-    );
+    let find = |alg: Algorithm, planned: bool| {
+        results
+            .iter()
+            .find(|r| r.algorithm == alg && r.planned == planned)
+    };
+    let unified_planned = find(Algorithm::Unified, true);
+    if let (Some(u), Some(c)) = (unified_planned, find(Algorithm::Conventional, false)) {
+        println!(
+            "\nend-to-end speedup (unified vs conventional): {:.3}×",
+            c.wall_s / u.wall_s
+        );
+    }
+    if let (Some(p), Some(n)) = (unified_planned, find(Algorithm::Unified, false)) {
+        println!(
+            "end-to-end speedup (planned vs unplanned unified): {:.3}×",
+            n.wall_s / p.wall_s
+        );
+    }
 }
 
 #[cfg(test)]
 mod tests {
     use super::*;
+
+    #[test]
+    fn serving_planned_and_batch_parallel_complete() {
+        let cfg = ServingConfig {
+            requests: 4,
+            workers_per_model: 1,
+            lane_workers: 1,
+            batch_workers: 2,
+            ..Default::default()
+        };
+        let planned = run_once_with(&cfg, Algorithm::Unified, true).unwrap();
+        let unplanned = run_once_with(&cfg, Algorithm::Unified, false).unwrap();
+        assert!(planned.planned && !unplanned.planned);
+        assert_eq!(planned.snapshot.completed, 4);
+        assert_eq!(unplanned.snapshot.completed, 4);
+    }
 
     #[test]
     fn serving_ab_unified_wins() {

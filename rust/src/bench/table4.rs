@@ -6,6 +6,7 @@
 //! layers only, one input sample, per layer.
 
 use crate::conv::parallel::{run_seg, Algorithm, Lane};
+use crate::conv::plan::{ConvTransposePlan, Scratch};
 use crate::conv::segregation::segregate;
 use crate::conv::{flops, memory};
 use crate::models::zoo::{GanModel, LayerSpec};
@@ -24,6 +25,9 @@ pub struct LayerRow {
     pub conv_ser: f64,
     pub prop_par: f64,
     pub prop_ser: f64,
+    /// Proposed kernel through the AOT plan + warm scratch arena
+    /// (serial lane) — the planned-vs-unplanned ablation column.
+    pub prop_planned_ser: f64,
     pub mem_savings_bytes: usize,
     pub flops_conv: u64,
     pub flops_prop: u64,
@@ -48,6 +52,13 @@ impl ModelResult {
     }
     pub fn total_prop_ser(&self) -> f64 {
         self.rows.iter().map(|r| r.prop_ser).sum()
+    }
+    pub fn total_prop_planned_ser(&self) -> f64 {
+        self.rows.iter().map(|r| r.prop_planned_ser).sum()
+    }
+    /// Planned-vs-unplanned ratio on the proposed serial path.
+    pub fn planned_speedup_ser(&self) -> f64 {
+        self.total_prop_ser() / self.total_prop_planned_ser()
     }
     pub fn speedup_par(&self) -> f64 {
         self.total_conv_par() / self.total_prop_par()
@@ -80,6 +91,15 @@ pub fn measure_model(model: GanModel, cfg: &BenchConfig) -> ModelResult {
             };
             let par = Lane::Parallel(cfg.workers);
             let params = spec.params();
+            // Planned lane: plan + arena + output built once, reused
+            // every iteration (the steady-state serving shape).
+            let plan = ConvTransposePlan::from_seg(params, seg.clone());
+            let mut scratch = Scratch::for_plan(&plan);
+            let mut out = plan.new_output();
+            let prop_planned_ser = timing::measure(cfg.warmup, cfg.iters, || {
+                plan.run(&x, &mut scratch, &mut out);
+            })
+            .median();
             LayerRow {
                 layer_index: i + 2, // Table 4 numbers layers from 2
                 spec,
@@ -87,6 +107,7 @@ pub fn measure_model(model: GanModel, cfg: &BenchConfig) -> ModelResult {
                 conv_ser: lane_time(Algorithm::Conventional, Lane::Serial),
                 prop_par: lane_time(Algorithm::Unified, par),
                 prop_ser: lane_time(Algorithm::Unified, Lane::Serial),
+                prop_planned_ser,
                 mem_savings_bytes: memory::savings_table4(&params),
                 flops_conv: flops::conventional(&params),
                 flops_prop: flops::unified(&params),
@@ -124,6 +145,7 @@ pub fn print_model(result: &ModelResult) {
                 report::secs(r.prop_par),
                 report::secs(r.conv_ser),
                 report::secs(r.prop_ser),
+                report::secs(r.prop_planned_ser),
                 r.mem_savings_bytes.to_string(),
                 format!("{:.2}", r.flops_conv as f64 / r.flops_prop as f64),
             ]
@@ -139,6 +161,7 @@ pub fn print_model(result: &ModelResult) {
             "Prop (par)",
             "Conv (serial)",
             "Prop (serial)",
+            "Prop (planned)",
             "Mem savings (B)",
             "FLOP ratio",
         ],
@@ -146,9 +169,11 @@ pub fn print_model(result: &ModelResult) {
     );
     let (paper_gpu, paper_cpu, paper_mem) = paper_reference(result.model);
     println!(
-        "total: speedup par {:.3}× / serial {:.3}×, memory saved {} B",
+        "total: speedup par {:.3}× / serial {:.3}×, planned-vs-unplanned {:.3}×, \
+         memory saved {} B",
         result.speedup_par(),
         result.speedup_ser(),
+        result.planned_speedup_ser(),
         result.total_savings()
     );
     println!(
@@ -179,6 +204,7 @@ mod tests {
         assert_eq!(res.rows.len(), 4);
         assert!(res.total_conv_ser() > 0.0);
         assert!(res.total_prop_ser() > 0.0);
+        assert!(res.total_prop_planned_ser() > 0.0);
         // The unified path must beat conventional on the serial lane
         // even in a single noisy iteration (≈4× FLOP reduction).
         assert!(

@@ -39,8 +39,28 @@ pub(crate) fn correlate_valid_into<T: TapSet>(
     row_lo: usize,
     row_hi: usize,
 ) {
+    debug_assert_eq!(x.c, taps.cin(), "correlate_valid_into: channel mismatch");
+    correlate_rows(&x.data, x.w, taps, out, wo, row_lo, row_hi)
+}
+
+/// [`correlate_valid_into`] over a raw row-major HWC slab (`data` of
+/// width `w`, channel count `taps.cin()`) — lets the plan/execute path
+/// (`conv::plan`) correlate straight out of a scratch arena without
+/// wrapping the slab in an owned [`Feature`].  Loop structure and f32
+/// accumulation order are identical to the `Feature` path, so the two
+/// are bit-identical.
+pub(crate) fn correlate_rows<T: TapSet>(
+    data: &[f32],
+    w: usize,
+    taps: &T,
+    out: &mut [f32],
+    wo: usize,
+    row_lo: usize,
+    row_hi: usize,
+) {
     let (kr, kc) = (taps.rows(), taps.cols());
     let (cin, cout) = (taps.cin(), taps.cout());
+    let stride = w * cin;
     if cout == 1 {
         // Scalar-output specialization (the Table 2/3 configuration):
         // keep the accumulator in a register across the whole tap loop.
@@ -49,7 +69,7 @@ pub(crate) fn correlate_valid_into<T: TapSet>(
             for ox in 0..wo {
                 let mut acc = 0f32;
                 for u in 0..kr {
-                    let in_row = x.row(oy + u);
+                    let in_row = &data[(oy + u) * stride..(oy + u + 1) * stride];
                     for v in 0..kc {
                         let tap = taps.tap(u, v);
                         let px = &in_row[(ox + v) * cin..(ox + v + 1) * cin];
@@ -70,7 +90,7 @@ pub(crate) fn correlate_valid_into<T: TapSet>(
     for oy in row_lo..row_hi {
         let row_base = (oy - row_lo) * wo * cout;
         for u in 0..kr {
-            let in_row = x.row(oy + u);
+            let in_row = &data[(oy + u) * stride..(oy + u + 1) * stride];
             for v in 0..kc {
                 let tap = taps.tap(u, v);
                 for ox in 0..wo {

@@ -27,6 +27,7 @@ pub mod grouped;
 pub mod im2col;
 pub mod memory;
 pub mod parallel;
+pub mod plan;
 pub mod segregation;
 pub mod stride;
 pub mod unified;
@@ -94,9 +95,12 @@ impl ConvTransposeParams {
         out_size(self.n_in, self.n_k, self.padding)
     }
 
-    /// Upsampled (pre-padding) size: `2N - 1`.
+    /// Upsampled (pre-padding) size: `2N - 1`, saturating to 0 for the
+    /// `n_in = 0` placeholder templates ([`gan_layer`](Self::gan_layer)
+    /// before [`with_io`](Self::with_io)) — `2·0 - 1` used to underflow
+    /// and panic in debug builds.
     pub fn upsampled_size(&self) -> usize {
-        2 * self.n_in - 1
+        (2 * self.n_in).saturating_sub(1)
     }
 
     /// True if the output feature map has odd spatial dimensions — the
@@ -204,6 +208,15 @@ mod tests {
         assert_eq!((p.n_in, p.cin, p.cout), (0, 0, 0));
         assert_eq!((p.n_k, p.padding), (4, 2));
         assert_eq!(flops::conventional(&p), 0);
+    }
+
+    #[test]
+    fn upsampled_size_saturates_on_placeholder_template() {
+        // `2 * 0 - 1` underflowed (debug-build panic) before saturation.
+        assert_eq!(ConvTransposeParams::gan_layer().upsampled_size(), 0);
+        let p = ConvTransposeParams::gan_layer().with_io(16, 64, 32);
+        assert_eq!(p.upsampled_size(), 31);
+        assert_eq!(ConvTransposeParams::new(1, 3, 2, 1, 1).upsampled_size(), 1);
     }
 
     #[test]

@@ -1,0 +1,482 @@
+//! Plan/execute: ahead-of-time transpose-conv plans and a zero-alloc
+//! scratch arena (DESIGN.md §Plan-Execute).
+//!
+//! The one-shot entry points in [`unified`](super::unified) recompute
+//! the phase geometry, build four slabs, and heap-allocate four phase
+//! buffers plus the output on *every* call — per-call overhead the
+//! paper's resident CUDA kernel never pays.  Following the
+//! plan-once/execute-many discipline of HUGE2 and the static operation
+//! schedules of GANAX (PAPERS.md), this module hoists all
+//! shape-dependent work to construction time:
+//!
+//! * [`ConvTransposePlan`] — built once per `(ConvTransposeParams,
+//!   kernel)`: segregates the kernel, freezes the four
+//!   [`PhaseGeometry`]s, derives every slab window and per-phase output
+//!   extent, and lays the whole working set out as offsets into one
+//!   contiguous arena with an **exact** float requirement
+//!   ([`scratch_floats`](ConvTransposePlan::scratch_floats)).
+//! * [`Scratch`] — the reusable arena.  It grows to the high-water mark
+//!   of whatever plans run through it and never shrinks, so steady-state
+//!   [`run`](ConvTransposePlan::run) performs **zero heap allocations**
+//!   (pinned by the counting-allocator test in `tests/plan_alloc.rs`).
+//!   One arena may be shared across differently-shaped layers: every
+//!   byte a run reads is written first (`build_slab` covers slabs, the
+//!   phase regions are zero-filled), so stale data never aliases in.
+//!
+//! Execution is bit-identical to the one-shot path — same slab values,
+//! same correlation loops, same f32 accumulation order — which the
+//! property suite asserts with `==`, not a tolerance.
+
+use std::sync::Mutex;
+
+use crate::tensor::{Feature, Kernel};
+
+use super::conventional::correlate_rows;
+use super::segregation::{segregate, Segregated};
+use super::unified::{build_slab, phase_geometries, scatter_rows, PhaseGeometry};
+use super::ConvTransposeParams;
+
+/// One phase of the plan: its frozen geometry plus the arena layout.
+#[derive(Debug, Clone)]
+struct PhasePlan {
+    geom: PhaseGeometry,
+    /// Slab (padded input window) width in pixels.
+    slab_w: usize,
+    /// Float offset/length of the slab within the arena's slab area.
+    slab_off: usize,
+    slab_len: usize,
+    /// Float offset/length of the phase output within the phase area.
+    phase_off: usize,
+    phase_len: usize,
+}
+
+/// An ahead-of-time plan for one transpose-convolution layer.
+///
+/// Owns the pre-segregated kernel and every shape-derived quantity, so
+/// the steady-state call does arithmetic and memory traffic only.
+#[derive(Debug, Clone)]
+pub struct ConvTransposePlan {
+    params: ConvTransposeParams,
+    seg: Segregated,
+    phases: Vec<PhasePlan>,
+    /// Output spatial size.
+    out: usize,
+    /// Total floats of the slab area (phase area follows it).
+    slab_floats: usize,
+    phase_floats: usize,
+}
+
+impl ConvTransposePlan {
+    /// Build a plan from a full kernel (segregates once, here).
+    pub fn new(params: ConvTransposeParams, kernel: &Kernel) -> ConvTransposePlan {
+        assert_eq!(kernel.n, params.n_k, "plan: kernel size mismatch");
+        assert_eq!(
+            (kernel.cin, kernel.cout),
+            (params.cin, params.cout),
+            "plan: kernel channel mismatch"
+        );
+        ConvTransposePlan::from_seg(params, segregate(kernel))
+    }
+
+    /// Build a plan from an already-segregated kernel (takes ownership —
+    /// weights are prepared once at load time and live in the plan).
+    pub fn from_seg(params: ConvTransposeParams, seg: Segregated) -> ConvTransposePlan {
+        assert!(
+            params.n_in > 0 && params.cin > 0 && params.cout > 0,
+            "plan requires fully-specified I/O geometry (chain with_io on templates)"
+        );
+        assert_eq!(seg.n, params.n_k, "plan: segregated kernel size mismatch");
+        assert_eq!(
+            (seg.subs[0].cin, seg.subs[0].cout),
+            (params.cin, params.cout),
+            "plan: segregated kernel channel mismatch"
+        );
+        let out = params.out_size();
+        let mut slab_off = 0usize;
+        let mut phase_off = 0usize;
+        let phases = phase_geometries(params.n_in, params.n_k, params.padding)
+            .into_iter()
+            .map(|geom| {
+                let slab_h = geom.rows.1 - geom.rows.0;
+                let slab_w = geom.cols.1 - geom.cols.0;
+                let slab_len = slab_h * slab_w * params.cin;
+                let phase_len = geom.n_rows * geom.n_cols * params.cout;
+                let pp = PhasePlan {
+                    geom,
+                    slab_w,
+                    slab_off,
+                    slab_len,
+                    phase_off,
+                    phase_len,
+                };
+                slab_off += slab_len;
+                phase_off += phase_len;
+                pp
+            })
+            .collect();
+        ConvTransposePlan {
+            params,
+            seg,
+            phases,
+            out,
+            slab_floats: slab_off,
+            phase_floats: phase_off,
+        }
+    }
+
+    /// The layer geometry this plan was built for.
+    pub fn params(&self) -> &ConvTransposeParams {
+        &self.params
+    }
+
+    /// The pre-segregated kernel the plan executes with.
+    pub fn seg(&self) -> &Segregated {
+        &self.seg
+    }
+
+    /// Output spatial size (square).
+    pub fn out_size(&self) -> usize {
+        self.out
+    }
+
+    /// Exact scratch requirement in floats: four slabs + four phase
+    /// outputs, laid out contiguously.
+    pub fn scratch_floats(&self) -> usize {
+        self.slab_floats + self.phase_floats
+    }
+
+    /// Exact scratch requirement in bytes (fp32).
+    pub fn scratch_bytes(&self) -> usize {
+        self.scratch_floats() * std::mem::size_of::<f32>()
+    }
+
+    /// A correctly-shaped output buffer for this plan.
+    pub fn new_output(&self) -> Feature {
+        Feature::zeros(self.out, self.out, self.params.cout)
+    }
+
+    fn check_shapes(&self, x: &Feature, out: &Feature) {
+        assert_eq!(
+            (x.h, x.w, x.c),
+            (self.params.n_in, self.params.n_in, self.params.cin),
+            "plan: input shape mismatch"
+        );
+        assert_eq!(
+            (out.h, out.w, out.c),
+            (self.out, self.out, self.params.cout),
+            "plan: output shape mismatch"
+        );
+    }
+
+    /// Execute serially: `x → out` through `scratch`.
+    ///
+    /// Steady state (arena at its high-water mark) performs **zero**
+    /// heap allocations: slabs are cropped into the arena, phases are
+    /// correlated into the arena, and the scatter writes every output
+    /// element (the phase extents partition the output, so `out` needs
+    /// no pre-clearing).
+    pub fn run(&self, x: &Feature, scratch: &mut Scratch, out: &mut Feature) {
+        self.check_shapes(x, out);
+        let buf = scratch.ensure(self.scratch_floats());
+        let (slab_area, phase_area) = buf.split_at_mut(self.slab_floats);
+        for pp in &self.phases {
+            build_slab(x, &pp.geom, &mut slab_area[pp.slab_off..pp.slab_off + pp.slab_len]);
+            let phase = &mut phase_area[pp.phase_off..pp.phase_off + pp.phase_len];
+            phase.fill(0.0);
+            correlate_rows(
+                &slab_area[pp.slab_off..pp.slab_off + pp.slab_len],
+                pp.slab_w,
+                &self.seg.subs[pp.geom.sub],
+                phase,
+                pp.geom.n_cols,
+                0,
+                pp.geom.n_rows,
+            );
+            scatter_rows(
+                out,
+                &phase_area[pp.phase_off..pp.phase_off + pp.phase_len],
+                pp.geom.rp,
+                pp.geom.sp,
+                pp.geom.n_rows,
+                pp.geom.n_cols,
+            );
+        }
+    }
+
+    /// Execute with the output allocated here (convenience for callers
+    /// that consume the result immediately).
+    pub fn run_alloc(&self, x: &Feature, scratch: &mut Scratch) -> Feature {
+        let mut out = self.new_output();
+        self.run(x, scratch, &mut out);
+        out
+    }
+
+    /// Parallel execution: one work queue of `(phase, output-row)` jobs
+    /// over `workers` scoped threads — parallelism across phases × rows,
+    /// not row-chunks of one phase at a time.  Tensor buffers all come
+    /// from the arena; only the per-call job list is allocated.
+    /// Bit-identical to [`run`] (each output row is computed by the same
+    /// serial loops).
+    pub fn run_par(&self, x: &Feature, scratch: &mut Scratch, out: &mut Feature, workers: usize) {
+        let workers = workers.max(1);
+        if workers == 1 {
+            return self.run(x, scratch, out);
+        }
+        self.check_shapes(x, out);
+        let cout = self.params.cout;
+        let buf = scratch.ensure(self.scratch_floats());
+        {
+            let (slab_area, phase_area) = buf.split_at_mut(self.slab_floats);
+            for pp in &self.phases {
+                let slab = &mut slab_area[pp.slab_off..pp.slab_off + pp.slab_len];
+                build_slab(x, &pp.geom, slab);
+            }
+            let slab_area: &[f32] = slab_area;
+            let mut jobs: Vec<(usize, usize, &mut [f32])> = Vec::new();
+            let mut rest: &mut [f32] = phase_area;
+            for (pi, pp) in self.phases.iter().enumerate() {
+                let (mine, tail) = rest.split_at_mut(pp.phase_len);
+                rest = tail;
+                let row_len = pp.geom.n_cols * cout;
+                for (ri, row) in mine.chunks_mut(row_len).enumerate() {
+                    jobs.push((pi, ri, row));
+                }
+            }
+            let n_workers = workers.min(jobs.len()).max(1);
+            let jobs = Mutex::new(jobs);
+            let jobs = &jobs;
+            std::thread::scope(|s| {
+                for _ in 0..n_workers {
+                    s.spawn(move || loop {
+                        let job = jobs.lock().unwrap().pop();
+                        let Some((pi, ri, row)) = job else { break };
+                        let pp = &self.phases[pi];
+                        row.fill(0.0);
+                        correlate_rows(
+                            &slab_area[pp.slab_off..pp.slab_off + pp.slab_len],
+                            pp.slab_w,
+                            &self.seg.subs[pp.geom.sub],
+                            row,
+                            pp.geom.n_cols,
+                            ri,
+                            ri + 1,
+                        );
+                    });
+                }
+            });
+        }
+        let phase_area = &buf[self.slab_floats..];
+        for pp in &self.phases {
+            scatter_rows(
+                out,
+                &phase_area[pp.phase_off..pp.phase_off + pp.phase_len],
+                pp.geom.rp,
+                pp.geom.sp,
+                pp.geom.n_rows,
+                pp.geom.n_cols,
+            );
+        }
+    }
+}
+
+/// Reusable scratch arena for planned execution.
+///
+/// One flat `Vec<f32>` that grows to the high-water mark of the plans
+/// run through it and never shrinks.  Safe to thread through
+/// differently-shaped layers back to back: plans write every scratch
+/// byte they read, so no run observes another run's data.
+#[derive(Debug, Clone, Default)]
+pub struct Scratch {
+    buf: Vec<f32>,
+}
+
+impl Scratch {
+    /// An empty arena (grows on first use).
+    pub fn new() -> Scratch {
+        Scratch { buf: Vec::new() }
+    }
+
+    /// An arena pre-sized to exactly `n` floats.
+    pub fn with_floats(n: usize) -> Scratch {
+        Scratch { buf: vec![0.0; n] }
+    }
+
+    /// An arena pre-sized for one plan (its steady state from call one).
+    pub fn for_plan(plan: &ConvTransposePlan) -> Scratch {
+        Scratch::with_floats(plan.scratch_floats())
+    }
+
+    /// An arena pre-sized for the largest of several plans — e.g. every
+    /// layer of a generator sharing one arena.
+    pub fn for_plans<'a>(plans: impl IntoIterator<Item = &'a ConvTransposePlan>) -> Scratch {
+        Scratch::with_floats(
+            plans
+                .into_iter()
+                .map(ConvTransposePlan::scratch_floats)
+                .max()
+                .unwrap_or(0),
+        )
+    }
+
+    /// Current arena size in floats (the high-water mark).
+    pub fn capacity_floats(&self) -> usize {
+        self.buf.len()
+    }
+
+    /// Borrow the first `n` floats, growing only if the arena is
+    /// smaller than `n` (never in steady state).
+    fn ensure(&mut self, n: usize) -> &mut [f32] {
+        if self.buf.len() < n {
+            self.buf.resize(n, 0.0);
+        }
+        &mut self.buf[..n]
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::conv::unified;
+    use crate::tensor::ops;
+    use crate::util::rng::Rng;
+
+    fn case(n_in: usize, nk: usize, p: usize, cin: usize, cout: usize, seed: u64) {
+        let mut rng = Rng::seeded(seed);
+        let x = Feature::random(n_in, n_in, cin, &mut rng);
+        let k = Kernel::random(nk, cin, cout, &mut rng);
+        let want = unified::transpose_conv(&x, &k, p);
+        let plan = ConvTransposePlan::new(ConvTransposeParams::new(n_in, nk, p, cin, cout), &k);
+        let mut scratch = Scratch::for_plan(&plan);
+        let mut out = plan.new_output();
+        plan.run(&x, &mut scratch, &mut out);
+        assert_eq!(out, want, "planned != one-shot (n={n_in} k={nk} p={p})");
+        for workers in [2, 3, 8] {
+            let mut out_par = plan.new_output();
+            plan.run_par(&x, &mut scratch, &mut out_par, workers);
+            assert_eq!(out_par, want, "run_par({workers}) != one-shot");
+        }
+    }
+
+    #[test]
+    fn planned_bit_identical_fig6() {
+        case(4, 5, 2, 3, 2, 40); // Fig. 5/6 worked example (odd output)
+    }
+
+    #[test]
+    fn planned_bit_identical_gan_layer() {
+        case(4, 4, 2, 8, 4, 41);
+        case(8, 4, 2, 4, 2, 42);
+    }
+
+    #[test]
+    fn planned_bit_identical_odd_padding_and_degenerate() {
+        case(5, 3, 1, 2, 2, 43); // role swap
+        case(1, 3, 2, 1, 1, 44); // single pixel
+        case(3, 2, 0, 2, 2, 45); // no padding
+    }
+
+    #[test]
+    fn scratch_sizing_is_exact() {
+        let mut rng = Rng::seeded(46);
+        let k = Kernel::random(5, 3, 2, &mut rng);
+        let plan = ConvTransposePlan::new(ConvTransposeParams::new(4, 5, 2, 3, 2), &k);
+        // Fig. 5 geometry: slabs + phase outputs, nothing else.
+        let by_hand: usize = unified::phase_geometries(4, 5, 2)
+            .iter()
+            .map(|g| (g.rows.1 - g.rows.0) * (g.cols.1 - g.cols.0) * 3 + g.n_rows * g.n_cols * 2)
+            .sum();
+        assert_eq!(plan.scratch_floats(), by_hand);
+        assert_eq!(plan.scratch_bytes(), 4 * by_hand);
+        // A cold arena grows to exactly the plan's requirement.
+        let x = Feature::random(4, 4, 3, &mut rng);
+        let mut scratch = Scratch::new();
+        let mut out = plan.new_output();
+        plan.run(&x, &mut scratch, &mut out);
+        assert_eq!(scratch.capacity_floats(), plan.scratch_floats());
+    }
+
+    #[test]
+    fn arena_shared_across_shapes_never_aliases() {
+        // Big layer, then small, then big again through ONE arena —
+        // every result must stay bit-identical to a fresh computation.
+        let mut rng = Rng::seeded(47);
+        let shapes = [(9, 4, 2, 3, 2), (3, 3, 1, 2, 4), (6, 5, 2, 1, 1)];
+        let cases: Vec<(Feature, ConvTransposePlan, Feature)> = shapes
+            .iter()
+            .map(|&(n, nk, p, cin, cout)| {
+                let x = Feature::random(n, n, cin, &mut rng);
+                let k = Kernel::random(nk, cin, cout, &mut rng);
+                let want = unified::transpose_conv(&x, &k, p);
+                let plan =
+                    ConvTransposePlan::new(ConvTransposeParams::new(n, nk, p, cin, cout), &k);
+                (x, plan, want)
+            })
+            .collect();
+        let mut scratch = Scratch::new();
+        for _round in 0..3 {
+            for (x, plan, want) in &cases {
+                let mut out = plan.new_output();
+                plan.run(x, &mut scratch, &mut out);
+                assert_eq!(&out, want);
+            }
+            for (x, plan, want) in cases.iter().rev() {
+                let mut out = plan.new_output();
+                plan.run_par(x, &mut scratch, &mut out, 3);
+                assert_eq!(&out, want);
+            }
+        }
+    }
+
+    #[test]
+    fn run_does_not_depend_on_stale_output() {
+        // The scatter covers the whole output, so a dirty `out` buffer
+        // must not leak through.
+        let mut rng = Rng::seeded(48);
+        let x = Feature::random(5, 5, 2, &mut rng);
+        let k = Kernel::random(4, 2, 3, &mut rng);
+        let plan = ConvTransposePlan::new(ConvTransposeParams::new(5, 4, 2, 2, 3), &k);
+        let mut scratch = Scratch::for_plan(&plan);
+        let mut out = plan.new_output();
+        plan.run(&x, &mut scratch, &mut out);
+        let want = out.clone();
+        out.data.fill(f32::NAN);
+        plan.run(&x, &mut scratch, &mut out);
+        assert!(out
+            .data
+            .iter()
+            .zip(&want.data)
+            .all(|(a, b)| a.to_bits() == b.to_bits()));
+    }
+
+    #[test]
+    #[should_panic(expected = "fully-specified")]
+    fn plan_rejects_placeholder_template() {
+        let seg = segregate(&Kernel::zeros(4, 2, 2));
+        // gan_layer() has zero n_in/cin/cout — the with_io footgun.
+        ConvTransposePlan::from_seg(ConvTransposeParams::gan_layer(), seg);
+    }
+
+    #[test]
+    #[should_panic(expected = "input shape mismatch")]
+    fn run_checks_input_shape() {
+        let mut rng = Rng::seeded(49);
+        let k = Kernel::random(4, 2, 2, &mut rng);
+        let plan = ConvTransposePlan::new(ConvTransposeParams::new(4, 4, 2, 2, 2), &k);
+        let x = Feature::zeros(5, 5, 2);
+        let mut out = plan.new_output();
+        plan.run(&x, &mut Scratch::new(), &mut out);
+    }
+
+    #[test]
+    fn planned_matches_conventional_reference() {
+        // End-to-end sanity against Algorithm 1 (tolerance, not bits —
+        // different accumulation order).
+        let mut rng = Rng::seeded(50);
+        let x = Feature::random(6, 6, 3, &mut rng);
+        let k = Kernel::random(4, 3, 2, &mut rng);
+        let want = crate::conv::conventional::transpose_conv(&x, &k, 2);
+        let plan = ConvTransposePlan::new(ConvTransposeParams::new(6, 4, 2, 3, 2), &k);
+        let got = plan.run_alloc(&x, &mut Scratch::for_plan(&plan));
+        assert!(ops::max_abs_diff(&want, &got) < 1e-4);
+    }
+}

@@ -20,7 +20,7 @@
 //!   Kept as the faithful-to-pseudocode lane and for the formulation
 //!   ablation bench.
 
-use crate::tensor::{ops, Feature};
+use crate::tensor::Feature;
 use crate::util::threadpool;
 
 use super::conventional::correlate_valid_into;
@@ -97,30 +97,73 @@ pub fn phase_geometries(n: usize, nk: usize, p: usize) -> Vec<PhaseGeometry> {
 }
 
 /// Build the contiguous input slab for one phase.
+///
+/// Single-copy: rows are cropped straight out of the raw input into a
+/// fresh buffer, zero-filling only the pad margins — no full-input
+/// clone and no padded intermediate (both existed here once; the
+/// allocation-count test in `tests/plan_alloc.rs` pins their absence).
 fn phase_slab(x: &Feature, g: &PhaseGeometry) -> Feature {
-    let (pt, pb, pl, pr) = g.pads;
-    let padded = if pt + pb + pl + pr == 0 {
-        x.clone()
-    } else {
-        ops::pad_asym(x, pt, pb, pl, pr)
-    };
-    ops::crop(
-        &padded,
-        g.rows.0,
-        g.cols.0,
-        g.rows.1 - g.rows.0,
-        g.cols.1 - g.cols.0,
-    )
+    let mut slab = Feature::zeros(g.rows.1 - g.rows.0, g.cols.1 - g.cols.0, x.c);
+    build_slab(x, g, &mut slab.data);
+    slab
+}
+
+/// Fill `dst` (a `slab_h × slab_w × C` row-major buffer) with the phase
+/// slab: the window `g.rows × g.cols` of the virtually-padded input,
+/// cropped directly from the raw input with pad margins zero-filled.
+/// Every element of `dst` is written, so a dirty scratch region is safe
+/// to reuse — the zero-alloc plan path (`conv::plan`) relies on this.
+pub(crate) fn build_slab(x: &Feature, g: &PhaseGeometry, dst: &mut [f32]) {
+    let c = x.c;
+    let (pt, _pb, pl, _pr) = g.pads;
+    let slab_h = g.rows.1 - g.rows.0;
+    let slab_w = g.cols.1 - g.cols.0;
+    debug_assert_eq!(dst.len(), slab_h * slab_w * c, "build_slab: dst size mismatch");
+    // Raw-input column of slab column 0 (negative inside the left pad).
+    let c0 = g.cols.0 as isize - pl as isize;
+    let v0 = c0.max(0);
+    let v1 = (c0 + slab_w as isize).min(x.w as isize);
+    let left = (v0 - c0) as usize;
+    let valid = (v1 - v0).max(0) as usize;
+    for sy in 0..slab_h {
+        let row = &mut dst[sy * slab_w * c..(sy + 1) * slab_w * c];
+        let ry = (g.rows.0 + sy) as isize - pt as isize;
+        if ry < 0 || ry >= x.h as isize || valid == 0 {
+            row.fill(0.0);
+            continue;
+        }
+        row[..left * c].fill(0.0);
+        let src = x.idx(ry as usize, v0 as usize, 0);
+        row[left * c..(left + valid) * c].copy_from_slice(&x.data[src..src + valid * c]);
+        row[(left + valid) * c..].fill(0.0);
+    }
 }
 
 /// Scatter a phase result into the strided positions of the output.
 fn scatter_phase(out: &mut Feature, phase: &Feature, rp: usize, sp: usize) {
+    scatter_rows(out, &phase.data, rp, sp, phase.h, phase.w);
+}
+
+/// Scatter an `n_rows × n_cols × C` phase buffer into the output
+/// positions of parity `(rp, sp)` — the raw-slice form used by both the
+/// one-shot path above and the plan/execute path (`conv::plan`).
+pub(crate) fn scatter_rows(
+    out: &mut Feature,
+    phase: &[f32],
+    rp: usize,
+    sp: usize,
+    n_rows: usize,
+    n_cols: usize,
+) {
     let c = out.c;
-    for (py, y) in (rp..out.h).step_by(2).enumerate().take(phase.h) {
-        for (px, x) in (sp..out.w).step_by(2).enumerate().take(phase.w) {
-            let src = phase.idx(py, px, 0);
-            let dst = out.idx(y, x, 0);
-            out.data[dst..dst + c].copy_from_slice(&phase.data[src..src + c]);
+    for py in 0..n_rows {
+        let y = rp + 2 * py;
+        let mut dst = out.idx(y, sp, 0);
+        let mut src = py * n_cols * c;
+        for _ in 0..n_cols {
+            out.data[dst..dst + c].copy_from_slice(&phase[src..src + c]);
+            dst += 2 * c;
+            src += c;
         }
     }
 }
@@ -252,6 +295,7 @@ pub fn transpose_conv_par_seg(
 mod tests {
     use super::*;
     use crate::conv::conventional;
+    use crate::tensor::ops;
     use crate::util::prop::{close, forall_res, Config};
     use crate::util::rng::Rng;
 
@@ -374,6 +418,49 @@ mod tests {
                 ((n_in, nk, p), close(&a.data, &b.data, 1e-4))
             },
         );
+    }
+
+    #[test]
+    fn build_slab_matches_pad_then_crop() {
+        let mut rng = Rng::seeded(19);
+        for (n, nk, p) in [(4, 5, 2), (4, 4, 2), (5, 3, 1), (1, 3, 2), (6, 4, 0)] {
+            let x = Feature::random(n, n, 3, &mut rng);
+            for g in phase_geometries(n, nk, p) {
+                let (pt, pb, pl, pr) = g.pads;
+                let padded = ops::pad_asym(&x, pt, pb, pl, pr);
+                let want = ops::crop(
+                    &padded,
+                    g.rows.0,
+                    g.cols.0,
+                    g.rows.1 - g.rows.0,
+                    g.cols.1 - g.cols.0,
+                );
+                let got = phase_slab(&x, &g);
+                assert_eq!(got, want, "n={n} nk={nk} p={p} phase ({},{})", g.rp, g.sp);
+            }
+        }
+    }
+
+    #[test]
+    fn build_slab_overwrites_dirty_scratch() {
+        // The plan path reuses scratch regions without clearing them
+        // first — every slab element must be written.
+        let mut rng = Rng::seeded(20);
+        let x = Feature::random(4, 4, 2, &mut rng);
+        for g in phase_geometries(4, 5, 2) {
+            let want = phase_slab(&x, &g);
+            let mut dirty = vec![f32::NAN; want.data.len()];
+            build_slab(&x, &g, &mut dirty);
+            assert!(
+                dirty
+                    .iter()
+                    .zip(&want.data)
+                    .all(|(a, b)| a.to_bits() == b.to_bits()),
+                "stale data survived in phase ({},{})",
+                g.rp,
+                g.sp
+            );
+        }
     }
 
     #[test]

@@ -5,7 +5,10 @@
 //! unified kernels ([`RustBackend`]) or on an AOT-compiled HLO module
 //! via PJRT ([`crate::runtime::PjrtBackend`]).
 
+use std::sync::Mutex;
+
 use crate::conv::parallel::{Algorithm, Lane};
+use crate::conv::plan::Scratch;
 use crate::models::{Generator, GanModel};
 use crate::tensor::Feature;
 use crate::util::rng::Rng;
@@ -27,32 +30,92 @@ pub trait Backend: Send + Sync {
 
 /// Native backend: the Rust generator running the **unified** kernel
 /// (or any other algorithm, for A/B serving experiments).
+///
+/// Executes through the per-layer
+/// [`ConvTransposePlan`](crate::conv::plan::ConvTransposePlan)s with a
+/// pool of scratch arenas that persists across batches (one arena per
+/// concurrent worker), so steady-state batches allocate activations
+/// only — never planning structures or conv scratch.  With
+/// [`with_batch_workers`](Self::with_batch_workers) the latents of one
+/// batch fan out across scoped threads (parallelism across latents ×
+/// phases, on top of the row-level [`Lane::Parallel`] lane).
 pub struct RustBackend {
     pub generator: Generator,
     pub alg: Algorithm,
     pub lane: Lane,
     max_batch: usize,
+    /// Threads that split one batch's latents (1 = in-line).
+    batch_workers: usize,
+    /// `false` → per-call (unplanned) dispatch, the A/B ablation lane.
+    planned: bool,
+    /// Warm scratch arenas, reused across batches.  Bounded by the
+    /// number of concurrent `generate` workers.
+    arenas: Mutex<Vec<Scratch>>,
 }
 
 impl RustBackend {
     pub fn new(model: GanModel, alg: Algorithm, lane: Lane, seed: u64, max_batch: usize) -> Self {
         let mut rng = Rng::seeded(seed);
-        RustBackend {
-            generator: Generator::random(model, &mut rng),
-            alg,
-            lane,
-            max_batch: max_batch.max(1),
-        }
+        RustBackend::from_generator(Generator::random(model, &mut rng), alg, lane, max_batch)
     }
 
     /// Wrap an existing generator (e.g. a shrunken test model).
-    pub fn from_generator(generator: Generator, alg: Algorithm, lane: Lane, max_batch: usize) -> Self {
+    pub fn from_generator(
+        generator: Generator,
+        alg: Algorithm,
+        lane: Lane,
+        max_batch: usize,
+    ) -> Self {
         RustBackend {
             generator,
             alg,
             lane,
             max_batch: max_batch.max(1),
+            batch_workers: 1,
+            planned: true,
+            arenas: Mutex::new(Vec::new()),
         }
+    }
+
+    /// Fan each batch's latents out over `workers` threads, one scratch
+    /// arena per worker.
+    pub fn with_batch_workers(mut self, workers: usize) -> Self {
+        self.batch_workers = workers.max(1);
+        self
+    }
+
+    /// Disable the ahead-of-time planned path (planned-vs-unplanned
+    /// serving ablation; see `bench::serving`).
+    pub fn with_unplanned(mut self) -> Self {
+        self.planned = false;
+        self
+    }
+
+    /// Whether this backend runs the planned execution path.
+    pub fn is_planned(&self) -> bool {
+        self.planned
+    }
+
+    fn generate_one(&self, z: &[f32], scratch: &mut Scratch) -> Feature {
+        if self.planned {
+            self.generator.forward_with(z, self.alg, self.lane, scratch)
+        } else {
+            self.generator.forward_unplanned(z, self.alg, self.lane)
+        }
+    }
+
+    /// Pop a warm arena from the pool (pre-sized on first use).
+    fn take_arena(&self) -> Scratch {
+        self.arenas
+            .lock()
+            .unwrap()
+            .pop()
+            .unwrap_or_else(|| self.generator.scratch())
+    }
+
+    /// Return an arena to the pool for the next batch.
+    fn put_arena(&self, scratch: Scratch) {
+        self.arenas.lock().unwrap().push(scratch);
     }
 }
 
@@ -70,17 +133,42 @@ impl Backend for RustBackend {
     }
 
     fn generate(&self, latents: &[Vec<f32>]) -> Vec<Feature> {
-        latents
-            .iter()
-            .map(|z| self.generator.forward(z, self.alg, self.lane))
-            .collect()
+        let workers = self.batch_workers.min(latents.len()).max(1);
+        if workers <= 1 {
+            let mut scratch = self.take_arena();
+            let images = latents
+                .iter()
+                .map(|z| self.generate_one(z, &mut scratch))
+                .collect();
+            self.put_arena(scratch);
+            return images;
+        }
+        // Batch-parallel lane: a shared work queue of latents, each
+        // worker owns one warm arena for its whole share of the batch.
+        let mut images: Vec<Feature> = latents.iter().map(|_| Feature::zeros(0, 0, 0)).collect();
+        let jobs: Vec<(usize, &mut Feature)> = images.iter_mut().enumerate().collect();
+        let jobs = Mutex::new(jobs);
+        let jobs = &jobs;
+        std::thread::scope(|s| {
+            for _ in 0..workers {
+                s.spawn(move || {
+                    let mut scratch = self.take_arena();
+                    loop {
+                        let job = jobs.lock().unwrap().pop();
+                        let Some((i, slot)) = job else { break };
+                        *slot = self.generate_one(&latents[i], &mut scratch);
+                    }
+                    self.put_arena(scratch);
+                });
+            }
+        });
+        images
     }
 }
 
 #[cfg(test)]
 pub(crate) mod testutil {
     use super::*;
-    use crate::conv::segregation::segregate;
     use crate::models::{forward::LayerWeights, zoo::LayerSpec};
     use crate::tensor::Kernel;
 
@@ -93,13 +181,7 @@ pub(crate) mod testutil {
             .iter()
             .map(|&spec| {
                 let kernel = Kernel::random(spec.ksize, spec.cin, spec.cout, &mut rng);
-                let seg = segregate(&kernel);
-                LayerWeights {
-                    spec,
-                    kernel,
-                    seg,
-                    bias: vec![0.0; spec.cout],
-                }
+                LayerWeights::new(spec, kernel, vec![0.0; spec.cout])
             })
             .collect();
         let out0 = 4 * 4 * 6;
@@ -133,6 +215,32 @@ mod tests {
         let ia = a.generate(&z);
         let ib = b.generate(&z);
         assert!(crate::tensor::ops::max_abs_diff(&ia[0], &ib[0]) < 1e-3);
+    }
+
+    #[test]
+    fn batch_parallel_lane_matches_serial() {
+        let serial = tiny_backend(Algorithm::Unified);
+        let latents: Vec<Vec<f32>> = (0..7)
+            .map(|i| vec![0.05 * (i + 1) as f32; serial.z_dim()])
+            .collect();
+        let want = serial.generate(&latents);
+        for workers in [2, 3, 16] {
+            let par = tiny_backend(Algorithm::Unified).with_batch_workers(workers);
+            let got = par.generate(&latents);
+            assert_eq!(got.len(), want.len());
+            for (g, w) in got.iter().zip(&want) {
+                assert_eq!(g, w, "batch-parallel ({workers}) diverged");
+            }
+        }
+    }
+
+    #[test]
+    fn unplanned_lane_matches_planned() {
+        let planned = tiny_backend(Algorithm::Unified);
+        let unplanned = tiny_backend(Algorithm::Unified).with_unplanned();
+        assert!(planned.is_planned() && !unplanned.is_planned());
+        let z = vec![vec![0.2; planned.z_dim()]; 2];
+        assert_eq!(planned.generate(&z), unplanned.generate(&z));
     }
 
     #[test]

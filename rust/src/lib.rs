@@ -25,8 +25,14 @@
 //!
 //! ## Quickstart
 //!
+//! Plan once, execute many (DESIGN.md §Plan-Execute): the plan owns the
+//! pre-segregated kernel and every shape-derived quantity; steady-state
+//! `run` calls through a warm [`Scratch`](conv::plan::Scratch) arena
+//! perform zero heap allocations.
+//!
 //! ```
-//! use ukstc::conv::{unified, ConvTransposeParams};
+//! use ukstc::conv::plan::{ConvTransposePlan, Scratch};
+//! use ukstc::conv::ConvTransposeParams;
 //! use ukstc::tensor::{Feature, Kernel};
 //! use ukstc::util::rng::Rng;
 //!
@@ -34,10 +40,16 @@
 //! let x = Feature::random(8, 8, 16, &mut rng);
 //! let k = Kernel::random(4, 16, 32, &mut rng);
 //! let p = ConvTransposeParams::gan_layer().with_io(8, 16, 32); // k=4, s=2, P=2
-//! let y = unified::transpose_conv(&x, &k, p.padding);
+//! let plan = ConvTransposePlan::new(p, &k);   // build once: segregate + freeze geometry
+//! let mut scratch = Scratch::for_plan(&plan); // exact scratch sizing, reusable
+//! let mut y = plan.new_output();
+//! plan.run(&x, &mut scratch, &mut y);         // steady state: zero allocations
 //! assert_eq!((y.h, y.w, y.c), (p.out_size(), p.out_size(), p.cout));
 //! assert_eq!(p.out_size(), 16);
 //! ```
+//!
+//! The one-shot entry points ([`conv::unified::transpose_conv`]) remain
+//! for single calls and as the bit-identical reference for the plan.
 
 pub mod bench;
 pub mod conv;

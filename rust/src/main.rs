@@ -115,22 +115,27 @@ fn dispatch(sub: &str, rest: &[String]) -> anyhow::Result<()> {
         }
         "serve" => serve(rest),
         "serve-ab" => {
-            let cmd = Command::new("serve-ab", "serving A/B: unified vs conventional")
-                .opt("model", "gan model", Some("gpgan"))
-                .opt("requests", "burst size", Some("24"))
-                .opt("workers", "coordinator workers", Some("2"))
-                .opt("max-batch", "dynamic batch cap", Some("8"));
+            let cmd = Command::new(
+                "serve-ab",
+                "serving matrix: unified planned/unplanned vs conventional",
+            )
+            .opt("model", "gan model", Some("gpgan"))
+            .opt("requests", "burst size", Some("24"))
+            .opt("workers", "coordinator workers", Some("2"))
+            .opt("batch-workers", "threads per batch (per-worker arenas)", Some("1"))
+            .opt("max-batch", "dynamic batch cap", Some("8"));
             let a = cmd.parse(rest)?;
             let cfg = serving::ServingConfig {
                 model: GanModel::from_name(a.get_or("model", "gpgan"))
                     .ok_or_else(|| anyhow::anyhow!("unknown model"))?,
                 requests: a.get_usize("requests", 24)?,
                 workers_per_model: a.get_usize("workers", 2)?,
+                batch_workers: a.get_usize("batch-workers", 1)?,
                 max_batch: a.get_usize("max-batch", 8)?,
                 ..Default::default()
             };
-            let (u, c) = serving::run_ab(&cfg)?;
-            serving::print_ab(&u, &c);
+            let results = serving::run_matrix(&cfg)?;
+            serving::print_results(&results);
             Ok(())
         }
         "info" => {
@@ -253,6 +258,6 @@ subcommands:
   table4     regenerate Table 4 (GAN-layer ablation)
   ablation   design-choice ablations (formulation, GEMM, dilated, lanes)
   serve      run the serving coordinator on a Poisson trace
-  serve-ab   serving A/B: unified vs conventional backend
+  serve-ab   serving matrix: unified planned/unplanned vs conventional
   info       model zoo + analytic memory summaries
 common bench flags: --scale F --warmup N --iters N --workers N --image-size N";

@@ -5,9 +5,17 @@
 //! tanh last).  The conv algorithm and lane are injected so the same
 //! model definition drives the paper benches (conventional vs grouped
 //! vs unified, serial vs parallel).
+//!
+//! Every layer carries an ahead-of-time [`ConvTransposePlan`] built at
+//! construction (DESIGN.md §Plan-Execute): the unified algorithm
+//! executes through the plan and a caller-supplied [`Scratch`] arena, so
+//! steady-state serving performs no per-layer planning and no scratch
+//! allocations.  One arena, sized for the largest layer, is threaded
+//! through the whole stack.
 
 use crate::conv::parallel::{run_seg, Algorithm, Lane};
-use crate::conv::segregation::{segregate, Segregated};
+use crate::conv::plan::{ConvTransposePlan, Scratch};
+use crate::conv::segregation::Segregated;
 use crate::tensor::{ops, Feature, Kernel};
 use crate::util::rng::Rng;
 
@@ -18,10 +26,53 @@ use super::zoo::{GanModel, LayerSpec};
 pub struct LayerWeights {
     pub spec: LayerSpec,
     pub kernel: Kernel,
-    /// Pre-segregated at construction (deployment-realistic: weights
-    /// are prepared once, reused per request).
-    pub seg: Segregated,
+    /// Ahead-of-time plan: the pre-segregated kernel plus frozen phase
+    /// geometry, slab windows and exact scratch sizing — built once at
+    /// construction (deployment-realistic: weights are prepared once,
+    /// reused per request).
+    pub plan: ConvTransposePlan,
     pub bias: Vec<f32>,
+}
+
+impl LayerWeights {
+    /// Build the layer: segregates the kernel and freezes the plan.
+    pub fn new(spec: LayerSpec, kernel: Kernel, bias: Vec<f32>) -> LayerWeights {
+        let plan = ConvTransposePlan::new(spec.params(), &kernel);
+        LayerWeights {
+            spec,
+            kernel,
+            plan,
+            bias,
+        }
+    }
+
+    /// The pre-segregated kernel (owned by the plan).
+    pub fn seg(&self) -> &Segregated {
+        self.plan.seg()
+    }
+
+    /// One transpose conv under `alg`/`lane`.  The unified algorithm
+    /// takes the planned path through `scratch` (zero steady-state
+    /// allocations beyond the output); other algorithms fall back to
+    /// the per-call kernels.
+    pub fn apply(&self, x: &Feature, alg: Algorithm, lane: Lane, scratch: &mut Scratch) -> Feature {
+        match (alg, lane) {
+            (Algorithm::Unified, Lane::Serial) => self.plan.run_alloc(x, scratch),
+            (Algorithm::Unified, Lane::Parallel(w)) => {
+                let mut out = self.plan.new_output();
+                self.plan.run_par(x, scratch, &mut out, w);
+                out
+            }
+            _ => self.apply_unplanned(x, alg, lane),
+        }
+    }
+
+    /// Pre-plan dispatch (per-call geometry + buffer allocation) — the
+    /// comparison lane for the planned-vs-unplanned ablation and A/B
+    /// serving bench.
+    pub fn apply_unplanned(&self, x: &Feature, alg: Algorithm, lane: Lane) -> Feature {
+        run_seg(alg, lane, x, &self.kernel, self.seg(), self.spec.padding)
+    }
 }
 
 /// A generator with materialized weights.
@@ -64,13 +115,7 @@ impl Generator {
                 for v in &mut bias {
                     *v *= 0.01;
                 }
-                let seg = segregate(&kernel);
-                LayerWeights {
-                    spec,
-                    kernel,
-                    seg,
-                    bias,
-                }
+                LayerWeights::new(spec, kernel, bias)
             })
             .collect();
         Generator {
@@ -104,12 +149,58 @@ impl Generator {
         f
     }
 
+    /// Arena sized for the largest layer of this generator.
+    pub fn scratch(&self) -> Scratch {
+        Scratch::for_plans(self.layers.iter().map(|l| &l.plan))
+    }
+
+    /// Exact per-arena float requirement (max over the layer plans).
+    pub fn max_scratch_floats(&self) -> usize {
+        self.layers
+            .iter()
+            .map(|l| l.plan.scratch_floats())
+            .max()
+            .unwrap_or(0)
+    }
+
     /// Full forward pass: latent → image, with the chosen conv backend.
+    /// Allocates a fresh arena — steady-state callers (the serving
+    /// backend, the benches) should hold one and use
+    /// [`forward_with`](Self::forward_with).
     pub fn forward(&self, z: &[f32], alg: Algorithm, lane: Lane) -> Feature {
+        let mut scratch = self.scratch();
+        self.forward_with(z, alg, lane, &mut scratch)
+    }
+
+    /// Full forward pass threading one scratch arena through all layers.
+    pub fn forward_with(
+        &self,
+        z: &[f32],
+        alg: Algorithm,
+        lane: Lane,
+        scratch: &mut Scratch,
+    ) -> Feature {
         let mut x = self.project(z);
         let last = self.layers.len() - 1;
         for (i, lw) in self.layers.iter().enumerate() {
-            x = run_seg(alg, lane, &x, &lw.kernel, &lw.seg, lw.spec.padding);
+            x = lw.apply(&x, alg, lane, scratch);
+            ops::add_bias_inplace(&mut x, &lw.bias);
+            if i == last {
+                ops::tanh_inplace(&mut x);
+            } else {
+                ops::relu_inplace(&mut x);
+            }
+        }
+        x
+    }
+
+    /// Full forward pass on the unplanned per-call path (ablation lane
+    /// for planned-vs-unplanned A/B serving).
+    pub fn forward_unplanned(&self, z: &[f32], alg: Algorithm, lane: Lane) -> Feature {
+        let mut x = self.project(z);
+        let last = self.layers.len() - 1;
+        for (i, lw) in self.layers.iter().enumerate() {
+            x = lw.apply_unplanned(&x, alg, lane);
             ops::add_bias_inplace(&mut x, &lw.bias);
             if i == last {
                 ops::tanh_inplace(&mut x);
@@ -125,9 +216,21 @@ impl Generator {
     /// ... only for the forward propagation stage for the transpose
     /// convolution layers").
     pub fn forward_conv_only(&self, x0: &Feature, alg: Algorithm, lane: Lane) -> Feature {
+        let mut scratch = self.scratch();
+        self.forward_conv_only_with(x0, alg, lane, &mut scratch)
+    }
+
+    /// Conv-only forward threading one scratch arena through all layers.
+    pub fn forward_conv_only_with(
+        &self,
+        x0: &Feature,
+        alg: Algorithm,
+        lane: Lane,
+        scratch: &mut Scratch,
+    ) -> Feature {
         let mut x = x0.clone();
         for lw in &self.layers {
-            x = run_seg(alg, lane, &x, &lw.kernel, &lw.seg, lw.spec.padding);
+            x = lw.apply(&x, alg, lane, scratch);
         }
         x
     }
@@ -167,13 +270,7 @@ mod tests {
             .iter()
             .map(|&spec| {
                 let kernel = Kernel::random(spec.ksize, spec.cin, spec.cout, &mut rng);
-                let seg = segregate(&kernel);
-                LayerWeights {
-                    spec,
-                    kernel,
-                    seg,
-                    bias: vec![0.01; spec.cout],
-                }
+                LayerWeights::new(spec, kernel, vec![0.01; spec.cout])
             })
             .collect();
         let z = g.model.z_dim();
@@ -209,6 +306,34 @@ mod tests {
         }
         let par = g.forward(&z, Algorithm::Unified, Lane::Parallel(4));
         assert!(max_abs_diff(&want, &par) < 1e-3);
+    }
+
+    #[test]
+    fn planned_equals_unplanned_through_full_model() {
+        // The planned path must be bit-identical to the per-call unified
+        // dispatch — same slabs, same loops, same accumulation order.
+        let g = tiny_generator();
+        let z = vec![0.2; g.model.z_dim()];
+        for lane in [Lane::Serial, Lane::Parallel(3)] {
+            let planned = g.forward(&z, Algorithm::Unified, lane);
+            let unplanned = g.forward_unplanned(&z, Algorithm::Unified, lane);
+            assert_eq!(planned, unplanned);
+        }
+    }
+
+    #[test]
+    fn shared_arena_reused_across_calls() {
+        let g = tiny_generator();
+        let z = vec![0.1; g.model.z_dim()];
+        let want = g.forward(&z, Algorithm::Unified, Lane::Serial);
+        let mut scratch = g.scratch();
+        assert_eq!(scratch.capacity_floats(), g.max_scratch_floats());
+        for _ in 0..3 {
+            let got = g.forward_with(&z, Algorithm::Unified, Lane::Serial, &mut scratch);
+            assert_eq!(got, want);
+        }
+        // The arena never grows past the precomputed exact requirement.
+        assert_eq!(scratch.capacity_floats(), g.max_scratch_floats());
     }
 
     #[test]

@@ -2,8 +2,9 @@
 //! paper's claims together, run wider than the per-module unit props.
 
 use ukstc::conv::parallel::{run, Algorithm, Lane};
+use ukstc::conv::plan::{ConvTransposePlan, Scratch};
 use ukstc::conv::segregation::segregate;
-use ukstc::conv::{flops, memory, out_size, ConvTransposeParams};
+use ukstc::conv::{flops, memory, out_size, unified, ConvTransposeParams};
 use ukstc::tensor::{ops, Feature, Kernel};
 use ukstc::util::prop::{close, forall, forall_res, Config};
 
@@ -42,6 +43,84 @@ fn prop_all_algorithms_agree_everywhere() {
                 }
             }
             ((n_in, nk, p), Ok(()))
+        },
+    );
+}
+
+#[test]
+fn prop_planned_bit_identical_to_one_shot() {
+    // The plan/execute path must match the one-shot unified kernel
+    // *bitwise* — same slabs, same correlation loops, same f32
+    // accumulation order — on the full prop-test geometry grid, for
+    // both the serial and the phase×row-parallel planned lanes.
+    forall_res(
+        Config::default().cases(60).seed(0x91A4),
+        "plan.run == transpose_conv (bit-identical)",
+        |rng| {
+            let Some((n_in, nk, p)) = geometry(rng) else {
+                return ((0, 0, 0, 0, 0), Ok(()));
+            };
+            let cin = rng.range(1, 4);
+            let cout = rng.range(1, 4);
+            let mut r2 = rng.split();
+            let x = Feature::random(n_in, n_in, cin, &mut r2);
+            let k = Kernel::random(nk, cin, cout, &mut r2);
+            let want = unified::transpose_conv(&x, &k, p);
+            let plan = ConvTransposePlan::new(ConvTransposeParams::new(n_in, nk, p, cin, cout), &k);
+            let mut scratch = Scratch::for_plan(&plan);
+            let mut out = plan.new_output();
+            plan.run(&x, &mut scratch, &mut out);
+            let desc = (n_in, nk, p, cin, cout);
+            if out != want {
+                return (desc, Err("serial planned != one-shot bitwise".into()));
+            }
+            let mut out_par = plan.new_output();
+            plan.run_par(&x, &mut scratch, &mut out_par, 3);
+            if out_par != want {
+                return (desc, Err("parallel planned != one-shot bitwise".into()));
+            }
+            (desc, Ok(()))
+        },
+    );
+}
+
+#[test]
+fn prop_scratch_arena_reuse_never_aliases() {
+    // One arena threaded through a random sequence of differently-shaped
+    // plans (shrinking and growing) must leave every result bit-identical
+    // to a fresh computation — no stale slab/phase data leaks across runs.
+    forall_res(
+        Config::default().cases(25).seed(0x5C1A),
+        "shared Scratch across shapes",
+        |rng| {
+            let mut shapes = Vec::new();
+            for _ in 0..4 {
+                if let Some((n_in, nk, p)) = geometry(rng) {
+                    shapes.push((n_in, nk, p, rng.range(1, 3), rng.range(1, 3)));
+                }
+            }
+            let mut r2 = rng.split();
+            let cases: Vec<(Feature, ConvTransposePlan, Feature)> = shapes
+                .iter()
+                .map(|&(n_in, nk, p, cin, cout)| {
+                    let x = Feature::random(n_in, n_in, cin, &mut r2);
+                    let k = Kernel::random(nk, cin, cout, &mut r2);
+                    let want = unified::transpose_conv(&x, &k, p);
+                    let params = ConvTransposeParams::new(n_in, nk, p, cin, cout);
+                    (x, ConvTransposePlan::new(params, &k), want)
+                })
+                .collect();
+            let mut scratch = Scratch::new();
+            for _round in 0..2 {
+                for (x, plan, want) in cases.iter().chain(cases.iter().rev()) {
+                    let mut out = plan.new_output();
+                    plan.run(x, &mut scratch, &mut out);
+                    if &out != want {
+                        return (shapes.clone(), Err("stale scratch data aliased in".into()));
+                    }
+                }
+            }
+            (shapes, Ok(()))
         },
     );
 }

@@ -5,7 +5,6 @@ use std::sync::Arc;
 use std::time::Duration;
 
 use ukstc::conv::parallel::{Algorithm, Lane};
-use ukstc::conv::segregation::segregate;
 use ukstc::coordinator::backend::RustBackend;
 use ukstc::coordinator::batcher::BatchPolicy;
 use ukstc::coordinator::request::{GenRequest, SubmitError};
@@ -24,13 +23,7 @@ fn tiny_generator(seed: u64) -> Generator {
         .iter()
         .map(|&spec| {
             let kernel = Kernel::random(spec.ksize, spec.cin, spec.cout, &mut rng);
-            let seg = segregate(&kernel);
-            LayerWeights {
-                spec,
-                kernel,
-                seg,
-                bias: vec![0.0; spec.cout],
-            }
+            LayerWeights::new(spec, kernel, vec![0.0; spec.cout])
         })
         .collect();
     let out0 = 4 * 4 * 6;

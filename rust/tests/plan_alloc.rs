@@ -1,0 +1,125 @@
+//! Counting-allocator proof of the plan/execute contract
+//! (DESIGN.md §Plan-Execute):
+//!
+//! 1. steady-state `ConvTransposePlan::run` performs **zero** heap
+//!    allocations once the scratch arena is at its high-water mark, and
+//! 2. the unplanned unified path's `phase_slab` crops straight into a
+//!    single fresh slab — the old full-input clone and pad+crop double
+//!    copy stay gone.
+//!
+//! This file deliberately holds exactly one `#[test]`: the global
+//! allocation counter is process-wide, and a sibling test running on
+//! another harness thread would perturb it.
+
+use std::alloc::{GlobalAlloc, Layout, System};
+use std::sync::atomic::{AtomicUsize, Ordering};
+
+use ukstc::conv::plan::{ConvTransposePlan, Scratch};
+use ukstc::conv::segregation::segregate;
+use ukstc::conv::unified;
+use ukstc::conv::ConvTransposeParams;
+use ukstc::tensor::{Feature, Kernel};
+use ukstc::util::rng::Rng;
+
+struct CountingAlloc;
+
+static ALLOCS: AtomicUsize = AtomicUsize::new(0);
+
+unsafe impl GlobalAlloc for CountingAlloc {
+    unsafe fn alloc(&self, layout: Layout) -> *mut u8 {
+        ALLOCS.fetch_add(1, Ordering::SeqCst);
+        System.alloc(layout)
+    }
+
+    unsafe fn alloc_zeroed(&self, layout: Layout) -> *mut u8 {
+        ALLOCS.fetch_add(1, Ordering::SeqCst);
+        System.alloc_zeroed(layout)
+    }
+
+    unsafe fn realloc(&self, ptr: *mut u8, layout: Layout, new_size: usize) -> *mut u8 {
+        ALLOCS.fetch_add(1, Ordering::SeqCst);
+        System.realloc(ptr, layout, new_size)
+    }
+
+    unsafe fn dealloc(&self, ptr: *mut u8, layout: Layout) {
+        System.dealloc(ptr, layout)
+    }
+}
+
+#[global_allocator]
+static GLOBAL: CountingAlloc = CountingAlloc;
+
+fn allocs() -> usize {
+    ALLOCS.load(Ordering::SeqCst)
+}
+
+#[test]
+fn planned_path_is_zero_alloc_after_warmup() {
+    // --- Part 1: zero allocations in steady state, across a stack of
+    // differently-shaped layers sharing one arena (the generator
+    // shape: GAN blocks k=4, P=2, shrunk channels).
+    let mut rng = Rng::seeded(0xA110C);
+    let shapes = [(4usize, 16usize, 8usize), (8, 8, 4), (5, 3, 2)];
+    let cases: Vec<(Feature, ConvTransposePlan, Feature)> = shapes
+        .iter()
+        .map(|&(n, cin, cout)| {
+            let x = Feature::random(n, n, cin, &mut rng);
+            let k = Kernel::random(4, cin, cout, &mut rng);
+            let params = ConvTransposeParams::new(n, 4, 2, cin, cout);
+            let plan = ConvTransposePlan::new(params, &k);
+            let out = plan.new_output();
+            (x, plan, out)
+        })
+        .collect();
+    let mut outs: Vec<Feature> = cases.iter().map(|(_, _, out)| out.clone()).collect();
+    let mut scratch = Scratch::new();
+    // Warm-up: the arena grows to the high-water mark of the stack.
+    for ((x, plan, _), out) in cases.iter().zip(&mut outs) {
+        plan.run(x, &mut scratch, out);
+    }
+    let before = allocs();
+    for _ in 0..5 {
+        for ((x, plan, _), out) in cases.iter().zip(&mut outs) {
+            plan.run(x, &mut scratch, out);
+        }
+    }
+    assert_eq!(
+        allocs(),
+        before,
+        "plan.run heap-allocated in steady state (warm arena)"
+    );
+    // A pre-sized arena is warm from call one.
+    let mut exact = Scratch::for_plans(cases.iter().map(|(_, plan, _)| plan));
+    let before = allocs();
+    for ((x, plan, _), out) in cases.iter().zip(&mut outs) {
+        plan.run(x, &mut scratch, out);
+        plan.run(x, &mut exact, out);
+    }
+    assert_eq!(allocs(), before, "pre-sized arena still allocated");
+
+    // Results stay correct after all that reuse.
+    for ((x, plan, _), out) in cases.iter().zip(&outs) {
+        let want = unified::transpose_conv_seg(x, plan.seg(), 2);
+        assert_eq!(out, &want, "planned result diverged after arena reuse");
+    }
+
+    // --- Part 2: the unplanned path's slab construction is single-copy.
+    // With this geometry no phase needs padding, so each phase costs
+    // exactly one slab + one phase buffer; plus the output and the
+    // geometry Vec that is 2 + 2·phases allocations total.  The old
+    // clone-then-crop path cost 3 per phase.
+    let x = Feature::random(4, 4, 3, &mut rng);
+    let k = Kernel::random(4, 3, 2, &mut rng);
+    let seg = segregate(&k);
+    let geoms = unified::phase_geometries(4, 4, 0);
+    assert!(geoms.iter().all(|g| g.pads == (0, 0, 0, 0)));
+    let before = allocs();
+    let out = unified::transpose_conv_seg(&x, &seg, 0);
+    let spent = allocs() - before;
+    assert!(
+        spent <= 2 + 2 * geoms.len(),
+        "phase_slab full-copy path is back: {spent} allocations for {} phases",
+        geoms.len()
+    );
+    assert_eq!((out.h, out.w, out.c), (4, 4, 2));
+}
