@@ -21,20 +21,32 @@ use crate::conv::plan::{ConvTransposePlan, Scratch};
 use crate::conv::{conventional, dilated, im2col, unified};
 use crate::models::zoo::GanModel;
 use crate::tensor::{Feature, Kernel};
+use crate::tune::{ExecStrategy, MeasureBudget, ParAxis, Tuner, WallClockMeasurer};
 use crate::util::rng::Rng;
 use crate::util::timing;
 
 use super::{report, BenchConfig};
 
-/// A named measurement in seconds.
+/// A named measurement: median seconds plus the raw samples, so the
+/// table can report the shared mean/best/p50/p95 vocabulary
+/// ([`report::Latency`]).
 #[derive(Debug, Clone)]
 pub struct Entry {
     pub name: String,
     pub seconds: f64,
+    pub samples: Vec<f64>,
 }
 
-fn time_it<T>(cfg: &BenchConfig, f: impl FnMut() -> T) -> f64 {
-    timing::measure(cfg.warmup, cfg.iters.max(2), f).median()
+impl Entry {
+    /// Measure `f` under `cfg` and keep the samples.
+    pub fn measure<T>(name: impl Into<String>, cfg: &BenchConfig, f: impl FnMut() -> T) -> Entry {
+        let m = timing::measure(cfg.warmup, cfg.iters.max(2), f);
+        Entry {
+            name: name.into(),
+            seconds: m.median(),
+            samples: m.samples,
+        }
+    }
 }
 
 /// Ablation 1: formulation comparison on an odd-output configuration
@@ -45,24 +57,18 @@ pub fn formulation(cfg: &BenchConfig) -> Vec<Entry> {
     let k = Kernel::random(5, 8, 4, &mut rng);
     let p = 2;
     vec![
-        Entry {
-            name: "conventional (Alg.1)".into(),
-            seconds: time_it(cfg, || run(Algorithm::Conventional, Lane::Serial, &x, &k, p)),
-        },
-        Entry {
-            name: "grouped (HICSS'23, extra elements)".into(),
-            seconds: time_it(cfg, || run(Algorithm::Grouped, Lane::Serial, &x, &k, p)),
-        },
-        Entry {
-            name: "unified per-element (Alg.2 literal)".into(),
-            seconds: time_it(cfg, || {
-                run(Algorithm::UnifiedPerElement, Lane::Serial, &x, &k, p)
-            }),
-        },
-        Entry {
-            name: "unified phase-decomposed (hot path)".into(),
-            seconds: time_it(cfg, || run(Algorithm::Unified, Lane::Serial, &x, &k, p)),
-        },
+        Entry::measure("conventional (Alg.1)", cfg, || {
+            run(Algorithm::Conventional, Lane::Serial, &x, &k, p)
+        }),
+        Entry::measure("grouped (HICSS'23, extra elements)", cfg, || {
+            run(Algorithm::Grouped, Lane::Serial, &x, &k, p)
+        }),
+        Entry::measure("unified per-element (Alg.2 literal)", cfg, || {
+            run(Algorithm::UnifiedPerElement, Lane::Serial, &x, &k, p)
+        }),
+        Entry::measure("unified phase-decomposed (hot path)", cfg, || {
+            run(Algorithm::Unified, Lane::Serial, &x, &k, p)
+        }),
     ]
 }
 
@@ -73,18 +79,15 @@ pub fn gemm_routes(cfg: &BenchConfig) -> Vec<Entry> {
     let k = Kernel::random(4, 16, 8, &mut rng);
     let p = 2;
     vec![
-        Entry {
-            name: "im2col conventional GEMM".into(),
-            seconds: time_it(cfg, || im2col::transpose_conv(&x, &k, p)),
-        },
-        Entry {
-            name: "segregated GEMM + rearrange (§5)".into(),
-            seconds: time_it(cfg, || im2col::transpose_conv_segregated_gemm(&x, &k, p).0),
-        },
-        Entry {
-            name: "unified direct (no GEMM)".into(),
-            seconds: time_it(cfg, || unified::transpose_conv(&x, &k, p)),
-        },
+        Entry::measure("im2col conventional GEMM", cfg, || {
+            im2col::transpose_conv(&x, &k, p)
+        }),
+        Entry::measure("segregated GEMM + rearrange (§5)", cfg, || {
+            im2col::transpose_conv_segregated_gemm(&x, &k, p).0
+        }),
+        Entry::measure("unified direct (no GEMM)", cfg, || {
+            unified::transpose_conv(&x, &k, p)
+        }),
     ]
 }
 
@@ -95,18 +98,13 @@ pub fn zero_skip(cfg: &BenchConfig) -> Vec<Entry> {
     let k = Kernel::random(5, 3, 1, &mut rng);
     let p = 2;
     vec![
-        Entry {
-            name: "conventional dense".into(),
-            seconds: time_it(cfg, || conventional::transpose_conv(&x, &k, p)),
-        },
-        Entry {
-            name: "conventional + zero-skip branch".into(),
-            seconds: time_it(cfg, || conventional::transpose_conv_zeroskip(&x, &k, p)),
-        },
-        Entry {
-            name: "unified".into(),
-            seconds: time_it(cfg, || unified::transpose_conv(&x, &k, p)),
-        },
+        Entry::measure("conventional dense", cfg, || {
+            conventional::transpose_conv(&x, &k, p)
+        }),
+        Entry::measure("conventional + zero-skip branch", cfg, || {
+            conventional::transpose_conv_zeroskip(&x, &k, p)
+        }),
+        Entry::measure("unified", cfg, || unified::transpose_conv(&x, &k, p)),
     ]
 }
 
@@ -116,14 +114,12 @@ pub fn dilated_routes(cfg: &BenchConfig) -> Vec<Entry> {
     let x = Feature::random(128, 128, 8, &mut rng);
     let k = Kernel::random(3, 8, 8, &mut rng);
     vec![
-        Entry {
-            name: "dilated naive (upsampled kernel)".into(),
-            seconds: time_it(cfg, || dilated::dilated_conv_naive(&x, &k)),
-        },
-        Entry {
-            name: "dilated segregated-input (§5)".into(),
-            seconds: time_it(cfg, || dilated::dilated_conv_segregated(&x, &k)),
-        },
+        Entry::measure("dilated naive (upsampled kernel)", cfg, || {
+            dilated::dilated_conv_naive(&x, &k)
+        }),
+        Entry::measure("dilated segregated-input (§5)", cfg, || {
+            dilated::dilated_conv_segregated(&x, &k)
+        }),
     ]
 }
 
@@ -132,15 +128,13 @@ pub fn lane_scaling(cfg: &BenchConfig) -> Vec<Entry> {
     let mut rng = Rng::seeded(0xF4);
     let x = Feature::random(112, 112, 8, &mut rng);
     let k = Kernel::random(4, 8, 8, &mut rng);
-    let mut out = vec![Entry {
-        name: "serial".into(),
-        seconds: time_it(cfg, || run(Algorithm::Unified, Lane::Serial, &x, &k, 2)),
-    }];
+    let mut out = vec![Entry::measure("serial", cfg, || {
+        run(Algorithm::Unified, Lane::Serial, &x, &k, 2)
+    })];
     for w in [2, 4, cfg.workers.max(2)] {
-        out.push(Entry {
-            name: format!("parallel({w})"),
-            seconds: time_it(cfg, || run(Algorithm::Unified, Lane::Parallel(w), &x, &k, 2)),
-        });
+        out.push(Entry::measure(format!("parallel({w})"), cfg, || {
+            run(Algorithm::Unified, Lane::Parallel(w), &x, &k, 2)
+        }));
     }
     out
 }
@@ -170,50 +164,104 @@ pub fn planning(cfg: &BenchConfig) -> Vec<Entry> {
             (x, k, plan)
         })
         .collect();
-    let unplanned = Entry {
-        name: "unplanned (segregate + plan per call)".into(),
-        seconds: time_it(cfg, || {
-            for (x, k, plan) in &layers {
-                timing::consume(unified::transpose_conv(x, k, plan.params().padding));
-            }
-        }),
-    };
-    let preseg = Entry {
-        name: "unplanned (pre-segregated weights)".into(),
-        seconds: time_it(cfg, || {
-            for (x, _, plan) in &layers {
-                timing::consume(unified::transpose_conv_seg(x, plan.seg(), plan.params().padding));
-            }
-        }),
-    };
+    let unplanned = Entry::measure("unplanned (segregate + plan per call)", cfg, || {
+        for (x, k, plan) in &layers {
+            timing::consume(unified::transpose_conv(x, k, plan.params().padding));
+        }
+    });
+    let preseg = Entry::measure("unplanned (pre-segregated weights)", cfg, || {
+        for (x, _, plan) in &layers {
+            timing::consume(unified::transpose_conv_seg(x, plan.seg(), plan.params().padding));
+        }
+    });
     let mut scratch = Scratch::for_plans(layers.iter().map(|(_, _, plan)| plan));
     let mut outs: Vec<Feature> = layers.iter().map(|(_, _, plan)| plan.new_output()).collect();
-    let planned = Entry {
-        name: "planned (AOT plan + scratch arena)".into(),
-        seconds: time_it(cfg, || {
-            for ((x, _, plan), out) in layers.iter().zip(&mut outs) {
-                plan.run(x, &mut scratch, out);
-            }
-            outs[0].data[0]
-        }),
-    };
+    let planned = Entry::measure("planned (AOT plan + scratch arena)", cfg, || {
+        for ((x, _, plan), out) in layers.iter().zip(&mut outs) {
+            plan.run(x, &mut scratch, out);
+        }
+        outs[0].data[0]
+    });
     vec![unplanned, preseg, planned]
 }
 
-/// Print one ablation block with ratios relative to the first entry.
+/// Ablation 7 (DESIGN.md §Autotuning): hand-picked execution
+/// strategies vs the autotuner's per-layer winners over the Table-4
+/// DC-GAN layer set — the "tuned" column for the design ablations.
+/// "Hand-picked" is what every caller did before the tuner existed:
+/// the serial phase decomposition, or one global parallel lane at the
+/// bench's worker count.
+pub fn autotune(cfg: &BenchConfig) -> Vec<Entry> {
+    let mut rng = Rng::seeded(0xF6);
+    let layers: Vec<(Feature, ConvTransposePlan)> = GanModel::DcGan
+        .layers()
+        .iter()
+        .map(|spec| {
+            let x = Feature::random(spec.n_in, spec.n_in, spec.cin, &mut rng);
+            let k = Kernel::random(spec.ksize, spec.cin, spec.cout, &mut rng);
+            (x, ConvTransposePlan::new(spec.params(), &k))
+        })
+        .collect();
+    let mut scratch = Scratch::for_plans(layers.iter().map(|(_, plan)| plan));
+    let mut outs: Vec<Feature> = layers.iter().map(|(_, plan)| plan.new_output()).collect();
+    let serial = Entry::measure("hand-picked: phase/serial (whole stack)", cfg, || {
+        for ((x, plan), out) in layers.iter().zip(&mut outs) {
+            plan.run(x, &mut scratch, out);
+        }
+        outs[0].data[0]
+    });
+    let par = ExecStrategy::parallel(cfg.workers.max(2), ParAxis::PhaseRows);
+    let hand_par = Entry::measure(format!("hand-picked: {} (whole stack)", par.name()), cfg, || {
+        for ((x, plan), out) in layers.iter().zip(&mut outs) {
+            plan.run_with(&par, x, &mut scratch, out);
+        }
+        outs[0].data[0]
+    });
+    let tuner = Tuner::new(cfg.workers.max(2)).with_budget(MeasureBudget {
+        warmup: cfg.warmup,
+        min_time_s: 0.0,
+        max_iters: cfg.iters.max(1),
+    });
+    let mut measurer = WallClockMeasurer::new(tuner.budget);
+    let winners: Vec<ExecStrategy> = layers
+        .iter()
+        .map(|(_, plan)| tuner.tune_layer(plan, &mut measurer).strategy)
+        .collect();
+    let tuned = Entry::measure("autotuned per layer", cfg, || {
+        for (((x, plan), out), s) in layers.iter().zip(&mut outs).zip(&winners) {
+            plan.run_with(s, x, &mut scratch, out);
+        }
+        outs[0].data[0]
+    });
+    vec![serial, hand_par, tuned]
+}
+
+/// Print one ablation block: median plus the shared mean/best/p50/p95
+/// latency vocabulary, with ratios relative to the first entry.
 pub fn print_entries(title: &str, entries: &[Entry]) {
     let base = entries[0].seconds;
     let rows: Vec<Vec<String>> = entries
         .iter()
         .map(|e| {
-            vec![
-                e.name.clone(),
-                timing::fmt_duration(e.seconds),
-                report::speedup(base / e.seconds),
-            ]
+            let mut row = vec![e.name.clone(), timing::fmt_duration(e.seconds)];
+            row.extend(report::Latency::of(&e.samples).cells());
+            row.push(report::speedup(base / e.seconds));
+            row
         })
         .collect();
-    report::print_table(title, &["variant", "time", "speedup vs first"], &rows);
+    report::print_table(
+        title,
+        &[
+            "variant",
+            "median",
+            report::Latency::HEADERS[0],
+            report::Latency::HEADERS[1],
+            report::Latency::HEADERS[2],
+            report::Latency::HEADERS[3],
+            "speedup vs first",
+        ],
+        &rows,
+    );
 }
 
 /// Run and print every ablation.
@@ -226,6 +274,10 @@ pub fn run_all(cfg: &BenchConfig) {
     print_entries(
         "Ablation 6 — plan/execute vs per-call (Table-4 DC-GAN layer set)",
         &planning(cfg),
+    );
+    print_entries(
+        "Ablation 7 — hand-picked vs autotuned (Table-4 DC-GAN layer set)",
+        &autotune(cfg),
     );
 }
 
@@ -257,6 +309,24 @@ mod tests {
     }
 
     #[test]
+    fn autotune_never_loses_to_serial_hand_pick() {
+        // The winner of a search that *includes* the serial default can
+        // only beat (or tie) it up to scheduler noise; allow 1.5× slack
+        // for a 2-iteration CI box.
+        let e = autotune(&quick());
+        assert_eq!(e.len(), 3);
+        assert!(
+            e[2].seconds <= e[0].seconds * 1.5,
+            "tuned {}s vs hand-picked serial {}s",
+            e[2].seconds,
+            e[0].seconds
+        );
+        for entry in &e {
+            assert!(!entry.samples.is_empty());
+        }
+    }
+
+    #[test]
     fn print_smoke() {
         print_entries(
             "smoke",
@@ -264,10 +334,12 @@ mod tests {
                 Entry {
                     name: "a".into(),
                     seconds: 1.0,
+                    samples: vec![1.0, 1.1],
                 },
                 Entry {
                     name: "b".into(),
                     seconds: 0.5,
+                    samples: vec![0.5, 0.6],
                 },
             ],
         );

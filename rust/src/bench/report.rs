@@ -1,6 +1,11 @@
-//! Markdown table rendering for the bench harness.
+//! Markdown table rendering for the bench harness, plus the shared
+//! latency vocabulary ([`Latency`]: mean/best/p50/p95) that the bench
+//! tables and the autotuner's decisions both report in.
 
 use std::fmt::Write as _;
+
+use crate::util::stats::Summary;
+use crate::util::timing::fmt_duration;
 
 /// Render a markdown table with right-padded columns.
 pub fn render_table(headers: &[&str], rows: &[Vec<String>]) -> String {
@@ -46,6 +51,43 @@ pub fn secs(t: f64) -> String {
     format!("{t:.4}")
 }
 
+/// Latency summary of one measurement's samples: mean and best next
+/// to p50/p95, so tuning decisions and bench tables speak one
+/// vocabulary.  A thin projection of [`Summary`] — one stats
+/// implementation, one percentile convention.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct Latency {
+    pub mean: f64,
+    pub best: f64,
+    pub p50: f64,
+    pub p95: f64,
+}
+
+impl Latency {
+    /// Column headers matching [`cells`](Self::cells).
+    pub const HEADERS: [&'static str; 4] = ["mean", "best", "p50", "p95"];
+
+    /// Compute from raw samples (seconds).  Panics on an empty slice.
+    pub fn of(samples: &[f64]) -> Latency {
+        let s = Summary::of(samples);
+        Latency {
+            mean: s.mean,
+            best: s.min,
+            p50: s.p50,
+            p95: s.p95,
+        }
+    }
+
+    /// Formatted table cells (adaptive units), ordered as
+    /// [`HEADERS`](Self::HEADERS).
+    pub fn cells(&self) -> Vec<String> {
+        [self.mean, self.best, self.p50, self.p95]
+            .iter()
+            .map(|&t| fmt_duration(t))
+            .collect()
+    }
+}
+
 /// Format a speedup ratio like the paper ("2.03×").
 pub fn speedup(r: f64) -> String {
     format!("{r:.3}×")
@@ -82,5 +124,22 @@ mod tests {
     fn formatting() {
         assert_eq!(secs(1.23456), "1.2346");
         assert_eq!(speedup(2.034), "2.034×");
+    }
+
+    #[test]
+    fn latency_summary() {
+        let l = Latency::of(&[3.0, 1.0, 2.0, 4.0, 5.0]);
+        assert!((l.mean - 3.0).abs() < 1e-12);
+        assert_eq!(l.best, 1.0);
+        assert!((l.p50 - 3.0).abs() < 1e-12);
+        assert!((l.p95 - 4.8).abs() < 1e-12);
+        assert_eq!(l.cells().len(), Latency::HEADERS.len());
+        assert!(l.cells()[0].ends_with(" s"));
+    }
+
+    #[test]
+    #[should_panic(expected = "empty")]
+    fn latency_empty_panics() {
+        Latency::of(&[]);
     }
 }

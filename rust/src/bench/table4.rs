@@ -11,6 +11,7 @@ use crate::conv::segregation::segregate;
 use crate::conv::{flops, memory};
 use crate::models::zoo::{GanModel, LayerSpec};
 use crate::tensor::{Feature, Kernel};
+use crate::tune::{MeasureBudget, Tuner, WallClockMeasurer};
 use crate::util::rng::Rng;
 use crate::util::timing;
 
@@ -28,6 +29,11 @@ pub struct LayerRow {
     /// Proposed kernel through the AOT plan + warm scratch arena
     /// (serial lane) — the planned-vs-unplanned ablation column.
     pub prop_planned_ser: f64,
+    /// Proposed kernel under the autotuner's per-layer winner
+    /// (DESIGN.md §Autotuning) — hand-picked vs autotuned side by side.
+    pub prop_tuned: f64,
+    /// Display name of the winning strategy for this layer.
+    pub tuned_strategy: String,
     pub mem_savings_bytes: usize,
     pub flops_conv: u64,
     pub flops_prop: u64,
@@ -56,9 +62,16 @@ impl ModelResult {
     pub fn total_prop_planned_ser(&self) -> f64 {
         self.rows.iter().map(|r| r.prop_planned_ser).sum()
     }
+    pub fn total_prop_tuned(&self) -> f64 {
+        self.rows.iter().map(|r| r.prop_tuned).sum()
+    }
     /// Planned-vs-unplanned ratio on the proposed serial path.
     pub fn planned_speedup_ser(&self) -> f64 {
         self.total_prop_ser() / self.total_prop_planned_ser()
+    }
+    /// Autotuned-vs-hand-picked-serial ratio on the planned path.
+    pub fn tuned_speedup(&self) -> f64 {
+        self.total_prop_planned_ser() / self.total_prop_tuned()
     }
     pub fn speedup_par(&self) -> f64 {
         self.total_conv_par() / self.total_prop_par()
@@ -100,6 +113,19 @@ pub fn measure_model(model: GanModel, cfg: &BenchConfig) -> ModelResult {
                 plan.run(&x, &mut scratch, &mut out);
             })
             .median();
+            // Tuned lane: search the strategy space under the bench's
+            // iteration budget, then time the winner with the same
+            // protocol as every other column.
+            let tuner = Tuner::new(cfg.workers.max(2)).with_budget(MeasureBudget {
+                warmup: cfg.warmup,
+                min_time_s: 0.0,
+                max_iters: cfg.iters.max(1),
+            });
+            let tuned = tuner.tune_layer(&plan, &mut WallClockMeasurer::new(tuner.budget));
+            let prop_tuned = timing::measure(cfg.warmup, cfg.iters, || {
+                plan.run_with(&tuned.strategy, &x, &mut scratch, &mut out);
+            })
+            .median();
             LayerRow {
                 layer_index: i + 2, // Table 4 numbers layers from 2
                 spec,
@@ -108,6 +134,8 @@ pub fn measure_model(model: GanModel, cfg: &BenchConfig) -> ModelResult {
                 prop_par: lane_time(Algorithm::Unified, par),
                 prop_ser: lane_time(Algorithm::Unified, Lane::Serial),
                 prop_planned_ser,
+                prop_tuned,
+                tuned_strategy: tuned.strategy.name(),
                 mem_savings_bytes: memory::savings_table4(&params),
                 flops_conv: flops::conventional(&params),
                 flops_prop: flops::unified(&params),
@@ -146,6 +174,8 @@ pub fn print_model(result: &ModelResult) {
                 report::secs(r.conv_ser),
                 report::secs(r.prop_ser),
                 report::secs(r.prop_planned_ser),
+                report::secs(r.prop_tuned),
+                r.tuned_strategy.clone(),
                 r.mem_savings_bytes.to_string(),
                 format!("{:.2}", r.flops_conv as f64 / r.flops_prop as f64),
             ]
@@ -162,6 +192,8 @@ pub fn print_model(result: &ModelResult) {
             "Conv (serial)",
             "Prop (serial)",
             "Prop (planned)",
+            "Prop (tuned)",
+            "Tuned strategy",
             "Mem savings (B)",
             "FLOP ratio",
         ],
@@ -170,10 +202,11 @@ pub fn print_model(result: &ModelResult) {
     let (paper_gpu, paper_cpu, paper_mem) = paper_reference(result.model);
     println!(
         "total: speedup par {:.3}× / serial {:.3}×, planned-vs-unplanned {:.3}×, \
-         memory saved {} B",
+         tuned-vs-planned {:.3}×, memory saved {} B",
         result.speedup_par(),
         result.speedup_ser(),
         result.planned_speedup_ser(),
+        result.tuned_speedup(),
         result.total_savings()
     );
     println!(
@@ -205,6 +238,8 @@ mod tests {
         assert!(res.total_conv_ser() > 0.0);
         assert!(res.total_prop_ser() > 0.0);
         assert!(res.total_prop_planned_ser() > 0.0);
+        assert!(res.total_prop_tuned() > 0.0);
+        assert!(res.rows.iter().all(|r| !r.tuned_strategy.is_empty()));
         // The unified path must beat conventional on the serial lane
         // even in a single noisy iteration (≈4× FLOP reduction).
         assert!(

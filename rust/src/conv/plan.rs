@@ -27,9 +27,9 @@
 //! same correlation loops, same f32 accumulation order — which the
 //! property suite asserts with `==`, not a tolerance.
 
-use std::sync::Mutex;
-
 use crate::tensor::{Feature, Kernel};
+use crate::tune::space::{ExecStrategy, Formulation, ParAxis};
+use crate::util::threadpool;
 
 use super::conventional::correlate_rows;
 use super::segregation::{segregate, Segregated};
@@ -211,12 +211,14 @@ impl ConvTransposePlan {
         out
     }
 
-    /// Parallel execution: one work queue of `(phase, output-row)` jobs
-    /// over `workers` scoped threads — parallelism across phases × rows,
-    /// not row-chunks of one phase at a time.  Tensor buffers all come
-    /// from the arena; only the per-call job list is allocated.
-    /// Bit-identical to [`run`] (each output row is computed by the same
-    /// serial loops).
+    /// Parallel execution, phase×row axis: one work queue of
+    /// `(phase, output-row)` jobs drained by `workers` threads of the
+    /// persistent kernel pool ([`threadpool::parallel_drain`] — no
+    /// per-call thread spawning, so small-layer timings measure the
+    /// kernel and tuned worker counts mean what they measure).  Tensor
+    /// buffers all come from the arena; only the per-call job list is
+    /// allocated.  Bit-identical to [`run`] (each output row is
+    /// computed by the same serial loops).
     pub fn run_par(&self, x: &Feature, scratch: &mut Scratch, out: &mut Feature, workers: usize) {
         let workers = workers.max(1);
         if workers == 1 {
@@ -242,27 +244,18 @@ impl ConvTransposePlan {
                     jobs.push((pi, ri, row));
                 }
             }
-            let n_workers = workers.min(jobs.len()).max(1);
-            let jobs = Mutex::new(jobs);
-            let jobs = &jobs;
-            std::thread::scope(|s| {
-                for _ in 0..n_workers {
-                    s.spawn(move || loop {
-                        let job = jobs.lock().unwrap().pop();
-                        let Some((pi, ri, row)) = job else { break };
-                        let pp = &self.phases[pi];
-                        row.fill(0.0);
-                        correlate_rows(
-                            &slab_area[pp.slab_off..pp.slab_off + pp.slab_len],
-                            pp.slab_w,
-                            &self.seg.subs[pp.geom.sub],
-                            row,
-                            pp.geom.n_cols,
-                            ri,
-                            ri + 1,
-                        );
-                    });
-                }
+            threadpool::parallel_drain(jobs, workers, |(pi, ri, row)| {
+                let pp = &self.phases[pi];
+                row.fill(0.0);
+                correlate_rows(
+                    &slab_area[pp.slab_off..pp.slab_off + pp.slab_len],
+                    pp.slab_w,
+                    &self.seg.subs[pp.geom.sub],
+                    row,
+                    pp.geom.n_cols,
+                    ri,
+                    ri + 1,
+                );
             });
         }
         let phase_area = &buf[self.slab_floats..];
@@ -275,6 +268,112 @@ impl ConvTransposePlan {
                 pp.geom.n_rows,
                 pp.geom.n_cols,
             );
+        }
+    }
+
+    /// Parallel execution, row axis: phases processed one at a time,
+    /// each phase's output rows drained across `workers` pool threads —
+    /// trades the phase×row queue's load balance for locality (one
+    /// slab + sub-kernel resident per step).  Bit-identical to [`run`].
+    pub fn run_par_rows(
+        &self,
+        x: &Feature,
+        scratch: &mut Scratch,
+        out: &mut Feature,
+        workers: usize,
+    ) {
+        let workers = workers.max(1);
+        if workers == 1 {
+            return self.run(x, scratch, out);
+        }
+        self.check_shapes(x, out);
+        let cout = self.params.cout;
+        let buf = scratch.ensure(self.scratch_floats());
+        {
+            let (slab_area, phase_area) = buf.split_at_mut(self.slab_floats);
+            for pp in &self.phases {
+                let slab = &mut slab_area[pp.slab_off..pp.slab_off + pp.slab_len];
+                build_slab(x, &pp.geom, slab);
+            }
+            let slab_area: &[f32] = slab_area;
+            let mut rest: &mut [f32] = phase_area;
+            for pp in &self.phases {
+                let (mine, tail) = rest.split_at_mut(pp.phase_len);
+                rest = tail;
+                let row_len = pp.geom.n_cols * cout;
+                let jobs: Vec<(usize, &mut [f32])> = mine.chunks_mut(row_len).enumerate().collect();
+                threadpool::parallel_drain(jobs, workers, |(ri, row)| {
+                    row.fill(0.0);
+                    correlate_rows(
+                        &slab_area[pp.slab_off..pp.slab_off + pp.slab_len],
+                        pp.slab_w,
+                        &self.seg.subs[pp.geom.sub],
+                        row,
+                        pp.geom.n_cols,
+                        ri,
+                        ri + 1,
+                    );
+                });
+            }
+        }
+        let phase_area = &buf[self.slab_floats..];
+        for pp in &self.phases {
+            scatter_rows(
+                out,
+                &phase_area[pp.phase_off..pp.phase_off + pp.phase_len],
+                pp.geom.rp,
+                pp.geom.sp,
+                pp.geom.n_rows,
+                pp.geom.n_cols,
+            );
+        }
+    }
+
+    /// Execute under an autotuned [`ExecStrategy`]
+    /// (`tune::space`, DESIGN.md §Autotuning): dispatches to [`run`],
+    /// [`run_par`] (phase×row axis), [`run_par_rows`], or the
+    /// per-element formulation of Algorithm 2.  Every strategy in the
+    /// search space is bit-identical to [`run`] — same in-range
+    /// contributions accumulated in the same (tap-row, tap-col,
+    /// channel) order — which the equivalence property in
+    /// `tests/conv_properties.rs` pins with `==`; the tuner can change
+    /// speed only, never output bits.
+    pub fn run_with(
+        &self,
+        strategy: &ExecStrategy,
+        x: &Feature,
+        scratch: &mut Scratch,
+        out: &mut Feature,
+    ) {
+        match strategy.formulation {
+            Formulation::PhaseDecomposed => {
+                if strategy.workers <= 1 {
+                    self.run(x, scratch, out);
+                } else {
+                    match strategy.axis {
+                        ParAxis::PhaseRows => self.run_par(x, scratch, out, strategy.workers),
+                        ParAxis::Rows => self.run_par_rows(x, scratch, out, strategy.workers),
+                    }
+                }
+            }
+            Formulation::PerElement => {
+                self.check_shapes(x, out);
+                let got = if strategy.workers <= 1 {
+                    super::unified::transpose_conv_per_element_seg(
+                        x,
+                        &self.seg,
+                        self.params.padding,
+                    )
+                } else {
+                    super::parallel::unified_per_element_par(
+                        x,
+                        &self.seg,
+                        self.params.padding,
+                        strategy.workers,
+                    )
+                };
+                out.data.copy_from_slice(&got.data);
+            }
         }
     }
 }
@@ -465,6 +564,46 @@ mod tests {
         let x = Feature::zeros(5, 5, 2);
         let mut out = plan.new_output();
         plan.run(&x, &mut Scratch::new(), &mut out);
+    }
+
+    #[test]
+    fn run_with_every_strategy_bit_identical() {
+        // The whole autotuner search space, on an odd-output (Fig. 5/6)
+        // and an even-output (GAN block) shape, against dirty output
+        // buffers — every strategy must reproduce the planned serial
+        // reference exactly and overwrite every output element.
+        let mut rng = Rng::seeded(51);
+        for (n_in, nk, p, cin, cout) in [(4, 5, 2, 3, 2), (4, 4, 2, 3, 2)] {
+            let x = Feature::random(n_in, n_in, cin, &mut rng);
+            let k = Kernel::random(nk, cin, cout, &mut rng);
+            let plan =
+                ConvTransposePlan::new(ConvTransposeParams::new(n_in, nk, p, cin, cout), &k);
+            let mut scratch = Scratch::for_plan(&plan);
+            let mut want = plan.new_output();
+            plan.run(&x, &mut scratch, &mut want);
+            for s in crate::tune::space::search_space(4) {
+                let mut got = plan.new_output();
+                got.data.fill(f32::NAN);
+                plan.run_with(&s, &x, &mut scratch, &mut got);
+                assert_eq!(got, want, "{} diverged (n={n_in} k={nk} p={p})", s.name());
+            }
+        }
+    }
+
+    #[test]
+    fn run_par_rows_matches_run_par() {
+        let mut rng = Rng::seeded(52);
+        let x = Feature::random(6, 6, 3, &mut rng);
+        let k = Kernel::random(5, 3, 2, &mut rng);
+        let plan = ConvTransposePlan::new(ConvTransposeParams::new(6, 5, 2, 3, 2), &k);
+        let mut scratch = Scratch::for_plan(&plan);
+        let mut want = plan.new_output();
+        plan.run(&x, &mut scratch, &mut want);
+        for workers in [1, 2, 5] {
+            let mut got = plan.new_output();
+            plan.run_par_rows(&x, &mut scratch, &mut got, workers);
+            assert_eq!(got, want, "run_par_rows({workers})");
+        }
     }
 
     #[test]

@@ -5,13 +5,16 @@
 //! unified kernels ([`RustBackend`]) or on an AOT-compiled HLO module
 //! via PJRT ([`crate::runtime::PjrtBackend`]).
 
+use std::path::Path;
 use std::sync::Mutex;
 
 use crate::conv::parallel::{Algorithm, Lane};
 use crate::conv::plan::Scratch;
 use crate::models::{Generator, GanModel};
 use crate::tensor::Feature;
+use crate::tune::{ExecStrategy, Tuner, TuningCache, WallClockMeasurer};
 use crate::util::rng::Rng;
+use crate::util::threadpool;
 
 /// A batched latent→image executor.
 pub trait Backend: Send + Sync {
@@ -88,6 +91,56 @@ impl RustBackend {
     /// serving ablation; see `bench::serving`).
     pub fn with_unplanned(mut self) -> Self {
         self.planned = false;
+        self
+    }
+
+    /// Autotune every layer of the model at construction (DESIGN.md
+    /// §Autotuning): search the execution-strategy space per layer —
+    /// through the tuning cache at `cache_path` when given, so a
+    /// machine pays the search once — and pin the winners on the
+    /// generator.  The pinned strategies drive the unified planned
+    /// path for every request (including the batch-worker lane, whose
+    /// latent fan-out composes on top); they are bit-identical to the
+    /// untuned execution, so tuning can never change served bits.
+    /// Cache I/O problems are downgraded to warnings: serving must
+    /// come up even on a read-only filesystem.
+    pub fn with_autotune(self, cache_path: Option<&Path>) -> Self {
+        self.with_autotune_tuner(cache_path, &Tuner::new(threadpool::default_parallelism()))
+    }
+
+    /// [`with_autotune`](Self::with_autotune) with an explicit tuner
+    /// (search space + measurement budget) — tests and the CLI use
+    /// tighter budgets.
+    pub fn with_autotune_tuner(mut self, cache_path: Option<&Path>, tuner: &Tuner) -> Self {
+        let mut cache = match cache_path {
+            Some(p) => TuningCache::load(p).unwrap_or_else(|e| {
+                log::warn!("tuning cache {}: {e}; re-tuning from scratch", p.display());
+                TuningCache::backed(p)
+            }),
+            None => TuningCache::in_memory(),
+        };
+        let mut measurer = WallClockMeasurer::new(tuner.budget);
+        let strategies: Vec<ExecStrategy> = self
+            .generator
+            .layers
+            .iter()
+            .map(|lw| {
+                let tuned = tuner.tune_layer_cached(&lw.plan, &mut cache, &mut measurer);
+                log::info!(
+                    "autotune {} {}: {} ({}){}",
+                    self.generator.model.name(),
+                    lw.spec.describe(),
+                    tuned.strategy.name(),
+                    crate::util::timing::fmt_duration(tuned.best_seconds),
+                    if tuned.cached { " [cache hit]" } else { "" }
+                );
+                tuned.strategy
+            })
+            .collect();
+        self.generator.set_strategies(&strategies);
+        if let Err(e) = cache.save() {
+            log::warn!("could not persist tuning cache: {e}");
+        }
         self
     }
 
@@ -241,6 +294,39 @@ mod tests {
         assert!(planned.is_planned() && !unplanned.is_planned());
         let z = vec![vec![0.2; planned.z_dim()]; 2];
         assert_eq!(planned.generate(&z), unplanned.generate(&z));
+    }
+
+    #[test]
+    fn autotuned_backend_serves_identical_bits() {
+        use crate::tune::MeasureBudget;
+        let baseline = tiny_backend(Algorithm::Unified);
+        let latents: Vec<Vec<f32>> = (0..3)
+            .map(|i| vec![0.07 * (i + 1) as f32; baseline.z_dim()])
+            .collect();
+        let want = baseline.generate(&latents);
+        let tuner = Tuner::new(2).with_budget(MeasureBudget::quick());
+        let tuned = tiny_backend(Algorithm::Unified)
+            .with_autotune_tuner(None, &tuner)
+            .with_batch_workers(2);
+        assert!(tuned.generator.strategies().iter().all(Option::is_some));
+        assert_eq!(tuned.generate(&latents), want, "autotune changed output bits");
+    }
+
+    #[test]
+    fn autotune_persists_cache_file() {
+        use crate::tune::MeasureBudget;
+        let dir = std::env::temp_dir().join(format!("ukstc-backend-tune-{}", std::process::id()));
+        std::fs::create_dir_all(&dir).unwrap();
+        let path = dir.join("cache.json");
+        let _ = std::fs::remove_file(&path);
+        let tuner = Tuner::new(2).with_budget(MeasureBudget::quick());
+        let _b = tiny_backend(Algorithm::Unified).with_autotune_tuner(Some(&path), &tuner);
+        let cache = TuningCache::load(&path).unwrap();
+        assert_eq!(cache.len(), 2, "one verdict per tiny-backend layer");
+        // Second construction resolves every layer from the cache.
+        let again = tiny_backend(Algorithm::Unified).with_autotune_tuner(Some(&path), &tuner);
+        assert!(again.generator.strategies().iter().all(Option::is_some));
+        std::fs::remove_file(&path).ok();
     }
 
     #[test]

@@ -19,6 +19,8 @@
 //! * [`workload`] — dataset specs (Table 1) and request generators
 //! * [`runtime`] — PJRT client: load + execute AOT HLO artifacts
 //! * [`coordinator`] — serving layer: router, batcher, workers, metrics
+//! * [`tune`] — per-layer execution-strategy autotuner with a
+//!   persisted tuning cache
 //! * [`bench`] — benchmark harness regenerating every paper table
 //! * [`util`] — offline-image substrates: JSON, RNG, CLI, stats,
 //!   thread pool, property-testing
@@ -57,5 +59,6 @@ pub mod coordinator;
 pub mod models;
 pub mod runtime;
 pub mod tensor;
+pub mod tune;
 pub mod util;
 pub mod workload;

@@ -7,20 +7,24 @@
 //! ukstc table3 [--scale F] ...       # regenerate Table 3 (COCO/PASCAL)
 //! ukstc table4 [--model M] ...       # regenerate Table 4 (GAN ablation)
 //! ukstc ablation                     # design-choice ablations
+//! ukstc tune [--model M] ...         # autotune per-layer strategies
 //! ukstc serve [--config F] ...       # run the serving coordinator demo
 //! ukstc info                         # model zoo + analytic summaries
 //! ```
 
 use std::sync::Arc;
 
-use ukstc::bench::{ablation, serving, table2, table3, table4, BenchConfig};
+use ukstc::bench::{ablation, report, serving, table2, table3, table4, BenchConfig};
 use ukstc::coordinator::backend::RustBackend;
 use ukstc::coordinator::{Coordinator, CoordinatorConfig};
-use ukstc::models::GanModel;
+use ukstc::models::{GanModel, Generator};
 use ukstc::runtime::{Engine, PjrtBackend};
-use ukstc::util::cli::Command;
+use ukstc::tune::{cache, MeasureBudget, Tuner, TuningCache, WallClockMeasurer};
+use ukstc::util::cli::{Args, Command};
 use ukstc::util::logging;
 use ukstc::util::rng::Rng;
+use ukstc::util::threadpool;
+use ukstc::util::timing;
 use ukstc::workload::datasets::{table1_rows, FLOWER_GROUPS, IMAGE_SIZE};
 use ukstc::workload::generator::poisson_trace;
 
@@ -113,6 +117,21 @@ fn dispatch(sub: &str, rest: &[String]) -> anyhow::Result<()> {
             ablation::run_all(&cfg);
             Ok(())
         }
+        "tune" => {
+            let cmd = Command::new(
+                "tune",
+                "autotune per-layer execution strategies for a zoo model",
+            )
+            .opt("model", "dcgan|artgan|gpgan|ebgan|smallest", Some("smallest"))
+            .opt("cache", "tuning-cache JSON path", Some("tuning-cache.json"))
+            .opt("workers", "max worker count in the search space", None)
+            .opt("warmup", "warmup iterations per candidate", Some("1"))
+            .opt("max-iters", "recorded iterations per candidate", Some("25"))
+            .opt("min-time-ms", "min recorded milliseconds per candidate", Some("20"))
+            .flag("no-cache", "tune in memory only (neither load nor persist)");
+            let a = cmd.parse(rest)?;
+            tune(&a)
+        }
         "serve" => serve(rest),
         "serve-ab" => {
             let cmd = Command::new(
@@ -156,6 +175,80 @@ fn dispatch(sub: &str, rest: &[String]) -> anyhow::Result<()> {
         }
         other => anyhow::bail!("unknown subcommand '{other}'\n{HELP}"),
     }
+}
+
+/// `ukstc tune`: search the execution-strategy space for every layer
+/// of a zoo model, print the per-layer winners, and persist the
+/// tuning cache so the next invocation (and
+/// `RustBackend::with_autotune`) loads the verdicts without
+/// re-measuring.
+fn tune(a: &Args) -> anyhow::Result<()> {
+    let model = match a.get_or("model", "smallest") {
+        "smallest" => GanModel::smallest(),
+        name => GanModel::from_name(name)
+            .ok_or_else(|| anyhow::anyhow!("unknown model '{name}'"))?,
+    };
+    let max_workers = a.get_usize("workers", threadpool::default_parallelism())?;
+    let budget = MeasureBudget {
+        warmup: a.get_usize("warmup", 1)?,
+        min_time_s: a.get_f64("min-time-ms", 20.0)? / 1e3,
+        max_iters: a.get_usize("max-iters", 25)?.max(1),
+    };
+    let tuner = Tuner::new(max_workers).with_budget(budget);
+    let mut tuning_cache = if a.has_flag("no-cache") {
+        TuningCache::in_memory()
+    } else {
+        TuningCache::load(std::path::Path::new(a.get_or("cache", "tuning-cache.json")))?
+    };
+    log::info!(
+        "tuning {} ({} strategies, fingerprint {})",
+        model.name(),
+        tuner.space.len(),
+        cache::host_fingerprint()
+    );
+    // Weights are irrelevant to timing (the kernels are
+    // data-independent); the layer *plans* carry everything the
+    // search needs.
+    let mut rng = Rng::seeded(0x7E4E);
+    let generator = Generator::random(model, &mut rng);
+    let mut measurer = WallClockMeasurer::new(budget);
+    let mut rows = Vec::new();
+    for (i, lw) in generator.layers.iter().enumerate() {
+        let tuned = tuner.tune_layer_cached(&lw.plan, &mut tuning_cache, &mut measurer);
+        rows.push(vec![
+            (i + 2).to_string(), // Table 4 numbers layers from 2
+            lw.spec.describe(),
+            tuned.strategy.name(),
+            timing::fmt_duration(tuned.best_seconds),
+            tuned
+                .serial_seconds()
+                .map(|s| report::speedup(s / tuned.best_seconds))
+                .unwrap_or_else(|| "-".into()),
+            if tuned.cached {
+                "hit".into()
+            } else {
+                format!("miss ({} timed, {} pruned)", tuned.measured(), tuned.pruned())
+            },
+        ]);
+    }
+    report::print_table(
+        &format!(
+            "Autotune — {} per-layer winners ({})",
+            model.name(),
+            cache::host_fingerprint()
+        ),
+        &["#", "layer", "strategy", "best", "vs serial", "cache"],
+        &rows,
+    );
+    tuning_cache.save()?;
+    if let Some(p) = tuning_cache.path() {
+        println!(
+            "\ntuning cache: {} ({} entries)",
+            p.display(),
+            tuning_cache.len()
+        );
+    }
+    Ok(())
 }
 
 /// `ukstc serve`: run the coordinator on a Poisson trace, native or
@@ -256,7 +349,8 @@ subcommands:
   table2     regenerate Table 2 (Flower dataset sweep)
   table3     regenerate Table 3 (MSCOCO + PASCAL sweep)
   table4     regenerate Table 4 (GAN-layer ablation)
-  ablation   design-choice ablations (formulation, GEMM, dilated, lanes)
+  ablation   design-choice ablations (formulation, GEMM, dilated, lanes, tuning)
+  tune       autotune per-layer execution strategies (persists a tuning cache)
   serve      run the serving coordinator on a Poisson trace
   serve-ab   serving matrix: unified planned/unplanned vs conventional
   info       model zoo + analytic memory summaries

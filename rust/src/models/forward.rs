@@ -17,6 +17,7 @@ use crate::conv::parallel::{run_seg, Algorithm, Lane};
 use crate::conv::plan::{ConvTransposePlan, Scratch};
 use crate::conv::segregation::Segregated;
 use crate::tensor::{ops, Feature, Kernel};
+use crate::tune::space::ExecStrategy;
 use crate::util::rng::Rng;
 
 use super::zoo::{GanModel, LayerSpec};
@@ -32,6 +33,12 @@ pub struct LayerWeights {
     /// reused per request).
     pub plan: ConvTransposePlan,
     pub bias: Vec<f32>,
+    /// Pinned per-layer execution strategy (DESIGN.md §Autotuning).
+    /// When set, the unified algorithm executes the plan under it,
+    /// overriding the caller's `Lane` — bit-identical either way; only
+    /// speed changes.  `None` = the caller's lane decides (the
+    /// pre-autotuner behavior).
+    pub strategy: Option<ExecStrategy>,
 }
 
 impl LayerWeights {
@@ -43,7 +50,14 @@ impl LayerWeights {
             kernel,
             plan,
             bias,
+            strategy: None,
         }
+    }
+
+    /// Pin an autotuned execution strategy on this layer.
+    pub fn with_strategy(mut self, strategy: ExecStrategy) -> LayerWeights {
+        self.strategy = Some(strategy);
+        self
     }
 
     /// The pre-segregated kernel (owned by the plan).
@@ -53,9 +67,17 @@ impl LayerWeights {
 
     /// One transpose conv under `alg`/`lane`.  The unified algorithm
     /// takes the planned path through `scratch` (zero steady-state
-    /// allocations beyond the output); other algorithms fall back to
-    /// the per-call kernels.
+    /// allocations beyond the output) — under the pinned
+    /// [`ExecStrategy`] when one is set, else under the caller's lane;
+    /// other algorithms fall back to the per-call kernels.
     pub fn apply(&self, x: &Feature, alg: Algorithm, lane: Lane, scratch: &mut Scratch) -> Feature {
+        if alg == Algorithm::Unified {
+            if let Some(strategy) = &self.strategy {
+                let mut out = self.plan.new_output();
+                self.plan.run_with(strategy, x, scratch, &mut out);
+                return out;
+            }
+        }
         match (alg, lane) {
             (Algorithm::Unified, Lane::Serial) => self.plan.run_alloc(x, scratch),
             (Algorithm::Unified, Lane::Parallel(w)) => {
@@ -147,6 +169,31 @@ impl Generator {
         let mut f = Feature::from_vec(n0, n0, c0, out);
         ops::relu_inplace(&mut f);
         f
+    }
+
+    /// Pin per-layer execution strategies (e.g. the autotuner's
+    /// winners, in layer order).  Panics on a length mismatch.
+    pub fn set_strategies(&mut self, strategies: &[ExecStrategy]) {
+        assert_eq!(
+            strategies.len(),
+            self.layers.len(),
+            "one strategy per layer"
+        );
+        for (lw, s) in self.layers.iter_mut().zip(strategies) {
+            lw.strategy = Some(*s);
+        }
+    }
+
+    /// Drop all pinned strategies (back to lane-driven dispatch).
+    pub fn clear_strategies(&mut self) {
+        for lw in &mut self.layers {
+            lw.strategy = None;
+        }
+    }
+
+    /// The pinned per-layer strategies, in layer order.
+    pub fn strategies(&self) -> Vec<Option<ExecStrategy>> {
+        self.layers.iter().map(|l| l.strategy).collect()
     }
 
     /// Arena sized for the largest layer of this generator.
@@ -334,6 +381,31 @@ mod tests {
         }
         // The arena never grows past the precomputed exact requirement.
         assert_eq!(scratch.capacity_floats(), g.max_scratch_floats());
+    }
+
+    #[test]
+    fn pinned_strategies_bit_identical_and_clearable() {
+        // Any mix of tuned strategies must reproduce the default
+        // unified forward exactly, whatever lane the caller asks for.
+        use crate::tune::space::{ExecStrategy, ParAxis};
+        let mut g = tiny_generator();
+        let z = vec![0.15; g.model.z_dim()];
+        let want = g.forward(&z, Algorithm::Unified, Lane::Serial);
+        g.set_strategies(&[
+            ExecStrategy::serial_per_element(),
+            ExecStrategy::parallel(3, ParAxis::Rows),
+        ]);
+        assert!(g.strategies().iter().all(Option::is_some));
+        for lane in [Lane::Serial, Lane::Parallel(2)] {
+            let got = g.forward(&z, Algorithm::Unified, lane);
+            assert_eq!(got, want, "pinned strategies diverged on {}", lane.name());
+        }
+        // Non-unified algorithms ignore the pins entirely.
+        let conv = g.forward(&z, Algorithm::Conventional, Lane::Serial);
+        assert!(max_abs_diff(&conv, &want) < 1e-3);
+        g.clear_strategies();
+        assert!(g.strategies().iter().all(Option::is_none));
+        assert_eq!(g.forward(&z, Algorithm::Unified, Lane::Serial), want);
     }
 
     #[test]

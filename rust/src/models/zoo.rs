@@ -41,6 +41,15 @@ impl LayerSpec {
     pub fn params(&self) -> ConvTransposeParams {
         ConvTransposeParams::new(self.n_in, self.ksize, self.padding, self.cin, self.cout)
     }
+
+    /// Human-readable shape for the tune/bench tables,
+    /// e.g. `4×4×512→256 k4 P2`.
+    pub fn describe(&self) -> String {
+        format!(
+            "{0}×{0}×{1}→{2} k{3} P{4}",
+            self.n_in, self.cin, self.cout, self.ksize, self.padding
+        )
+    }
 }
 
 /// Which GAN the layer stack comes from.
@@ -123,6 +132,20 @@ impl GanModel {
         100
     }
 
+    /// The cheapest zoo entry by analytic conventional FLOPs — what
+    /// the CI `ukstc tune` smoke run and quick experiments target.
+    pub fn smallest() -> GanModel {
+        GanModel::all()
+            .into_iter()
+            .min_by_key(|m| {
+                m.layers()
+                    .iter()
+                    .map(|l| crate::conv::flops::conventional(&l.params()))
+                    .sum::<u64>()
+            })
+            .unwrap()
+    }
+
     /// Total Table 4 memory savings (bytes) for this model's layers.
     pub fn total_memory_savings(&self) -> usize {
         self.layers()
@@ -170,6 +193,21 @@ mod tests {
         }
         assert_eq!(GanModel::from_name("discogan"), Some(GanModel::DcGan));
         assert_eq!(GanModel::from_name("vae"), None);
+    }
+
+    #[test]
+    fn smallest_is_gpgan() {
+        // GP-GAN's stack is dominated layer-for-layer by every other
+        // entry (ArtGAN shares its first two rows but widens layers
+        // 3–4), so it is the analytic minimum.
+        assert_eq!(GanModel::smallest(), GanModel::GpGan);
+    }
+
+    #[test]
+    fn describe_mentions_geometry() {
+        let d = LayerSpec::gan(4, 512, 256).describe();
+        assert!(d.contains("4×4×512→256"), "{d}");
+        assert!(d.contains("k4") && d.contains("P2"), "{d}");
     }
 
     #[test]

@@ -1,0 +1,240 @@
+//! Persisted tuning cache (DESIGN.md §Autotuning): JSON on disk via
+//! [`util::json`](crate::util::json), keyed by `(layer shape, host
+//! parallelism fingerprint, search-space worker bound)` so tuning pays
+//! once per machine class and one file can hold verdicts from
+//! differently-sized hosts — or differently-bounded searches — without
+//! cross-contamination.
+//!
+//! Format (version 1, stable key order from `BTreeMap`):
+//!
+//! ```json
+//! {"entries":{"n4k4p2ci512co256@cpu8w8":
+//!     {"seconds":0.0012,
+//!      "strategy":{"axis":"rows","formulation":"phase","workers":4}}},
+//!  "version":1}
+//! ```
+
+use std::collections::BTreeMap;
+use std::path::{Path, PathBuf};
+
+use crate::conv::ConvTransposeParams;
+use crate::util::json::{self, Json};
+
+use super::space::ExecStrategy;
+
+/// Schema version of the on-disk format.
+pub const CACHE_VERSION: usize = 1;
+
+/// Host fingerprint baked into every key: tuned worker counts only
+/// transfer between hosts with the same available parallelism.
+pub fn host_fingerprint() -> String {
+    let cores = std::thread::available_parallelism()
+        .map(|n| n.get())
+        .unwrap_or(1);
+    format!("cpu{cores}")
+}
+
+/// One cached verdict.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct CacheEntry {
+    pub strategy: ExecStrategy,
+    /// Best measured seconds when the verdict was recorded.
+    pub seconds: f64,
+}
+
+/// The tuning cache: an in-memory map plus an optional backing file.
+#[derive(Debug, Clone, Default)]
+pub struct TuningCache {
+    path: Option<PathBuf>,
+    entries: BTreeMap<String, CacheEntry>,
+}
+
+impl TuningCache {
+    /// A cache with no backing file ([`save`](Self::save) is a no-op).
+    pub fn in_memory() -> TuningCache {
+        TuningCache::default()
+    }
+
+    /// An empty cache backed by `path` (what [`load`](Self::load)
+    /// returns for a missing file — the first run of a machine).
+    pub fn backed(path: &Path) -> TuningCache {
+        TuningCache {
+            path: Some(path.to_path_buf()),
+            entries: BTreeMap::new(),
+        }
+    }
+
+    /// Open the cache at `path`.  A missing file is an empty cache; a
+    /// malformed or version-mismatched one is an error (callers decide
+    /// whether to re-tune or abort).
+    pub fn load(path: &Path) -> anyhow::Result<TuningCache> {
+        let mut cache = TuningCache::backed(path);
+        if !path.exists() {
+            return Ok(cache);
+        }
+        let doc = json::parse_file(path)?;
+        let version = doc.get("version").and_then(Json::as_usize).unwrap_or(0);
+        anyhow::ensure!(
+            version == CACHE_VERSION,
+            "tuning cache {}: unsupported version {version} (want {CACHE_VERSION})",
+            path.display()
+        );
+        let Some(Json::Obj(entries)) = doc.get("entries") else {
+            anyhow::bail!("tuning cache {}: missing 'entries' object", path.display());
+        };
+        for (key, v) in entries {
+            let strategy = v.get("strategy").and_then(ExecStrategy::from_json);
+            let seconds = v.get("seconds").and_then(Json::as_f64);
+            let (Some(strategy), Some(seconds)) = (strategy, seconds) else {
+                anyhow::bail!("tuning cache {}: malformed entry '{key}'", path.display());
+            };
+            cache
+                .entries
+                .insert(key.clone(), CacheEntry { strategy, seconds });
+        }
+        Ok(cache)
+    }
+
+    /// Cache key: full layer geometry, the host fingerprint, and the
+    /// search space's worker bound (`space_workers`) — so a verdict
+    /// from a narrower space (`--workers 2`) can never shadow a
+    /// full-space tune on the same host.  The measurement *budget* is
+    /// deliberately not part of the key (it is a fidelity knob, not a
+    /// different question); delete the cache file to re-tune at a
+    /// higher budget.
+    pub fn key(params: &ConvTransposeParams, space_workers: usize) -> String {
+        format!(
+            "n{}k{}p{}ci{}co{}@{}w{}",
+            params.n_in,
+            params.n_k,
+            params.padding,
+            params.cin,
+            params.cout,
+            host_fingerprint(),
+            space_workers
+        )
+    }
+
+    pub fn get(&self, params: &ConvTransposeParams, space_workers: usize) -> Option<&CacheEntry> {
+        self.entries.get(&Self::key(params, space_workers))
+    }
+
+    pub fn put(
+        &mut self,
+        params: &ConvTransposeParams,
+        space_workers: usize,
+        strategy: ExecStrategy,
+        seconds: f64,
+    ) {
+        self.entries
+            .insert(Self::key(params, space_workers), CacheEntry { strategy, seconds });
+    }
+
+    pub fn len(&self) -> usize {
+        self.entries.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.entries.is_empty()
+    }
+
+    /// Backing file, if any.
+    pub fn path(&self) -> Option<&Path> {
+        self.path.as_deref()
+    }
+
+    /// Serialize to the on-disk JSON document.
+    pub fn to_json(&self) -> Json {
+        let mut entries = BTreeMap::new();
+        for (key, entry) in &self.entries {
+            let mut e = BTreeMap::new();
+            e.insert("strategy".to_string(), entry.strategy.to_json());
+            e.insert("seconds".to_string(), Json::Num(entry.seconds));
+            entries.insert(key.clone(), Json::Obj(e));
+        }
+        let mut doc = BTreeMap::new();
+        doc.insert("version".to_string(), Json::Num(CACHE_VERSION as f64));
+        doc.insert("entries".to_string(), Json::Obj(entries));
+        Json::Obj(doc)
+    }
+
+    /// Persist to the backing file (no-op for in-memory caches).
+    pub fn save(&self) -> anyhow::Result<()> {
+        let Some(path) = &self.path else {
+            return Ok(());
+        };
+        if let Some(dir) = path.parent() {
+            if !dir.as_os_str().is_empty() {
+                std::fs::create_dir_all(dir)
+                    .map_err(|e| anyhow::anyhow!("creating {}: {e}", dir.display()))?;
+            }
+        }
+        std::fs::write(path, self.to_json().to_string_compact())
+            .map_err(|e| anyhow::anyhow!("writing {}: {e}", path.display()))
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::tune::space::ParAxis;
+
+    fn params(n_in: usize) -> ConvTransposeParams {
+        ConvTransposeParams::new(n_in, 4, 2, 8, 4)
+    }
+
+    #[test]
+    fn key_carries_shape_fingerprint_and_space_bound() {
+        let a = TuningCache::key(&params(4), 8);
+        let b = TuningCache::key(&params(8), 8);
+        assert_ne!(a, b);
+        assert!(a.starts_with("n4k4p2ci8co4@"), "{a}");
+        assert!(a.contains(&host_fingerprint()), "{a}");
+        // A narrower search space is a different question.
+        assert_ne!(TuningCache::key(&params(4), 2), a);
+        assert!(a.ends_with("w8"), "{a}");
+    }
+
+    #[test]
+    fn put_get_roundtrip_in_memory() {
+        let mut cache = TuningCache::in_memory();
+        assert!(cache.is_empty());
+        assert!(cache.get(&params(4), 4).is_none());
+        let s = ExecStrategy::parallel(4, ParAxis::Rows);
+        cache.put(&params(4), 4, s, 1.5e-3);
+        let hit = cache.get(&params(4), 4).unwrap();
+        assert_eq!(hit.strategy, s);
+        assert_eq!(hit.seconds, 1.5e-3);
+        assert_eq!(cache.len(), 1);
+        assert!(cache.get(&params(8), 4).is_none());
+        // A narrower-space verdict does not shadow the wider space.
+        assert!(cache.get(&params(4), 2).is_none());
+        // Overwrite is an update, not a duplicate.
+        cache.put(&params(4), 4, ExecStrategy::serial(), 1.0e-3);
+        assert_eq!(cache.len(), 1);
+        assert_eq!(
+            cache.get(&params(4), 4).unwrap().strategy,
+            ExecStrategy::serial()
+        );
+        // In-memory save is a no-op that succeeds.
+        assert!(cache.path().is_none());
+        cache.save().unwrap();
+    }
+
+    #[test]
+    fn json_document_roundtrips() {
+        let mut cache = TuningCache::in_memory();
+        cache.put(&params(4), 2, ExecStrategy::parallel(2, ParAxis::PhaseRows), 2e-4);
+        cache.put(&params(8), 2, ExecStrategy::serial_per_element(), 7e-4);
+        let text = cache.to_json().to_string_compact();
+        let doc = crate::util::json::parse(&text).unwrap();
+        assert_eq!(doc.get("version").and_then(Json::as_usize), Some(CACHE_VERSION));
+        let entries = doc.get("entries").unwrap();
+        let hit = entries.get(&TuningCache::key(&params(8), 2)).unwrap();
+        assert_eq!(
+            hit.get("strategy").and_then(ExecStrategy::from_json),
+            Some(ExecStrategy::serial_per_element())
+        );
+        assert_eq!(hit.get("seconds").and_then(Json::as_f64), Some(7e-4));
+    }
+}

@@ -1,0 +1,188 @@
+//! Candidate measurement: warmup + trials with early pruning
+//! (DESIGN.md §Autotuning).
+//!
+//! Timing goes through [`crate::util::timing::measure_for`], so a
+//! candidate gets an adaptive number of trials (until `min_time_s` of
+//! recorded samples or `max_iters`, whichever first); budgets below
+//! three iterations fall back to the fixed-count
+//! [`crate::util::timing::measure`] so a CI `--max-iters 1` smoke run
+//! really is one trial.  Before spending the full budget, one probe
+//! run prunes candidates already [`PRUNE_FACTOR`]× slower than the
+//! incumbent — on a big search space most losers cost one iteration.
+//!
+//! [`Measurer`] is a trait so the cache tests can inject a counting
+//! fake and prove that a cache hit performs **zero** measurements.
+
+use crate::conv::plan::{ConvTransposePlan, Scratch};
+use crate::tensor::Feature;
+use crate::util::rng::Rng;
+use crate::util::timing;
+
+use super::space::ExecStrategy;
+
+/// Prune a candidate whose probe run exceeds this multiple of the
+/// incumbent's best time.
+pub const PRUNE_FACTOR: f64 = 2.0;
+
+/// Measurement budget for one candidate strategy.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct MeasureBudget {
+    /// Unrecorded warmup iterations per candidate.
+    pub warmup: usize,
+    /// Keep sampling until this much recorded time (seconds) ...
+    pub min_time_s: f64,
+    /// ... or this many recorded iterations, whichever comes first.
+    pub max_iters: usize,
+}
+
+impl Default for MeasureBudget {
+    fn default() -> Self {
+        MeasureBudget {
+            warmup: 1,
+            min_time_s: 0.02,
+            max_iters: 25,
+        }
+    }
+}
+
+impl MeasureBudget {
+    /// One-trial budget (`ukstc tune --warmup 0 --max-iters 1
+    /// --min-time-ms 0`), used by the CI smoke run.
+    pub fn quick() -> Self {
+        MeasureBudget {
+            warmup: 0,
+            min_time_s: 0.0,
+            max_iters: 1,
+        }
+    }
+}
+
+/// Times one `(plan, strategy)` candidate.
+pub trait Measurer {
+    /// Best observed seconds for one execution of `plan` under
+    /// `strategy`, or `None` if the candidate was pruned against
+    /// `incumbent` (the best seconds of any candidate so far for this
+    /// layer).  The first candidate of a search is passed
+    /// `incumbent == None` and therefore can never be pruned.
+    fn time_strategy(
+        &mut self,
+        plan: &ConvTransposePlan,
+        strategy: &ExecStrategy,
+        incumbent: Option<f64>,
+    ) -> Option<f64>;
+}
+
+/// Wall-clock [`Measurer`]: deterministic random input per layer
+/// shape, warm scratch + output reused across the timed iterations
+/// (the steady-state serving shape the strategies will actually run
+/// in), probe-based pruning.
+#[derive(Debug, Clone, Copy)]
+pub struct WallClockMeasurer {
+    pub budget: MeasureBudget,
+}
+
+impl WallClockMeasurer {
+    pub fn new(budget: MeasureBudget) -> WallClockMeasurer {
+        // Spawn the persistent kernel pool now: with `warmup: 0`
+        // budgets the pruning probe must not charge the first parallel
+        // candidate for one-time thread startup that steady-state
+        // serving never pays.
+        crate::util::threadpool::shared_pool();
+        WallClockMeasurer { budget }
+    }
+}
+
+impl Measurer for WallClockMeasurer {
+    fn time_strategy(
+        &mut self,
+        plan: &ConvTransposePlan,
+        strategy: &ExecStrategy,
+        incumbent: Option<f64>,
+    ) -> Option<f64> {
+        let p = *plan.params();
+        // Deterministic per shape: candidates for one layer all see the
+        // same input (the kernels are data-independent, but determinism
+        // keeps reruns comparable).
+        let mut rng = Rng::seeded(
+            0x7EA5 ^ ((p.n_in as u64) << 16) ^ ((p.cin as u64) << 8) ^ (p.cout as u64),
+        );
+        let x = Feature::random(p.n_in, p.n_in, p.cin, &mut rng);
+        let mut scratch = Scratch::for_plan(plan);
+        let mut out = plan.new_output();
+        for _ in 0..self.budget.warmup {
+            plan.run_with(strategy, &x, &mut scratch, &mut out);
+        }
+        // One probe run, then prune hopeless candidates before spending
+        // the full trial budget on them.
+        let (probe, _) = timing::time_once(|| {
+            plan.run_with(strategy, &x, &mut scratch, &mut out);
+            out.data[0]
+        });
+        if let Some(best) = incumbent {
+            if probe > PRUNE_FACTOR * best {
+                return None;
+            }
+        }
+        let b = self.budget;
+        let m = if b.max_iters < 3 {
+            // measure_for insists on ≥3 samples; honor 1/2-trial budgets.
+            timing::measure(0, b.max_iters.max(1), || {
+                plan.run_with(strategy, &x, &mut scratch, &mut out);
+                out.data[0]
+            })
+        } else {
+            timing::measure_for(0, b.min_time_s, b.max_iters, || {
+                plan.run_with(strategy, &x, &mut scratch, &mut out);
+                out.data[0]
+            })
+        };
+        Some(m.best().min(probe))
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::conv::ConvTransposeParams;
+    use crate::tensor::Kernel;
+
+    fn plan() -> ConvTransposePlan {
+        let mut rng = Rng::seeded(0xBEEF);
+        let k = Kernel::random(4, 8, 8, &mut rng);
+        ConvTransposePlan::new(ConvTransposeParams::new(16, 4, 2, 8, 8), &k)
+    }
+
+    #[test]
+    fn measures_first_candidate_without_incumbent() {
+        let plan = plan();
+        let mut m = WallClockMeasurer::new(MeasureBudget::quick());
+        let t = m.time_strategy(&plan, &ExecStrategy::serial(), None);
+        assert!(t.is_some());
+        assert!(t.unwrap() >= 0.0);
+    }
+
+    #[test]
+    fn prunes_against_unbeatable_incumbent() {
+        // A 16×16×8→8 conv takes far longer than 2 × 1 femtosecond, so
+        // the probe must prune.
+        let plan = plan();
+        let mut m = WallClockMeasurer::new(MeasureBudget::quick());
+        let t = m.time_strategy(&plan, &ExecStrategy::serial_per_element(), Some(1e-15));
+        assert_eq!(t, None);
+    }
+
+    #[test]
+    fn generous_incumbent_not_pruned() {
+        let plan = plan();
+        let mut m = WallClockMeasurer::new(MeasureBudget::quick());
+        let t = m.time_strategy(&plan, &ExecStrategy::serial(), Some(1e9));
+        assert!(t.is_some());
+    }
+
+    #[test]
+    fn quick_budget_is_single_trial_shaped() {
+        assert_eq!(MeasureBudget::quick().max_iters, 1);
+        assert_eq!(MeasureBudget::quick().warmup, 0);
+        assert!(MeasureBudget::default().max_iters >= 3);
+    }
+}

@@ -1,0 +1,39 @@
+//! Empirical per-layer autotuner (DESIGN.md §Autotuning).
+//!
+//! The paper's speedups come from picking the right formulation of the
+//! unified kernel for the hardware, and §Hardware-Adaptation keeps two
+//! formulations of Algorithm 2 precisely because the winner is
+//! machine-dependent — yet before this module every caller hardcoded
+//! `Algorithm`, `Lane` and worker counts by hand.  Following the
+//! per-layer schedule specialization of GANAX and HUGE² (PAPERS.md),
+//! this subsystem searches the execution-strategy space *empirically*,
+//! one layer shape at a time, and remembers the verdicts:
+//!
+//! * [`space`] — [`ExecStrategy`]: formulation (phase-decomposed vs
+//!   per-element) × lane (serial vs parallel worker count) × parallel
+//!   axis (phase×row queue vs per-phase rows), and the
+//!   [`search_space`] enumeration
+//! * [`measure`] — warmup + adaptive trials per candidate
+//!   (`util::timing::measure_for`) with probe-based early pruning of
+//!   candidates already 2× slower than the incumbent
+//! * [`tuner`] — the per-layer search returning a [`TunedPlan`]
+//! * [`cache`] — [`TuningCache`]: JSON persistence keyed by
+//!   `(layer shape, host fingerprint)` so tuning pays once per machine
+//!
+//! Execution plugs in beneath the existing plan/execute seam:
+//! [`ConvTransposePlan::run_with`](crate::conv::plan::ConvTransposePlan::run_with)
+//! dispatches a strategy, `models::forward::LayerWeights` pins one per
+//! layer, and `RustBackend::with_autotune` tunes a whole generator at
+//! construction.  Every strategy is bit-identical to the planned
+//! serial reference (pinned by `tests/conv_properties.rs`), so tuning
+//! can change throughput only — never output bits.
+
+pub mod cache;
+pub mod measure;
+pub mod space;
+pub mod tuner;
+
+pub use cache::{CacheEntry, TuningCache};
+pub use measure::{MeasureBudget, Measurer, WallClockMeasurer};
+pub use space::{search_space, ExecStrategy, Formulation, ParAxis};
+pub use tuner::{TunedPlan, Tuner};

@@ -1,0 +1,262 @@
+//! The execution-strategy search space (DESIGN.md §Autotuning).
+//!
+//! DESIGN.md §Hardware-Adaptation keeps **two** formulations of
+//! Algorithm 2 because the winner is machine-dependent; the parallel
+//! lane adds a worker count and a split axis on top.  An
+//! [`ExecStrategy`] names one point of that space, and
+//! [`search_space`] enumerates every point the tuner considers for a
+//! machine with a given parallelism bound.  Every point is
+//! bit-identical to the planned serial reference
+//! ([`ConvTransposePlan::run`](crate::conv::plan::ConvTransposePlan::run))
+//! — pinned by the equivalence property in `tests/conv_properties.rs` —
+//! so the tuner can only ever change *speed*, never output bits.
+
+use std::collections::BTreeMap;
+
+use crate::util::json::Json;
+
+/// Which formulation of Algorithm 2 executes the layer.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash)]
+pub enum Formulation {
+    /// Hoisted parity selection: four dense slab correlations
+    /// (`unified::transpose_conv`, the TPU/MXU shape).
+    PhaseDecomposed,
+    /// Literal Algorithm 2: runtime sub-kernel pick per output element
+    /// (the paper's CUDA shape).
+    PerElement,
+}
+
+impl Formulation {
+    pub fn name(&self) -> &'static str {
+        match self {
+            Formulation::PhaseDecomposed => "phase",
+            Formulation::PerElement => "per-element",
+        }
+    }
+
+    fn from_name(name: &str) -> Option<Formulation> {
+        match name {
+            "phase" => Some(Formulation::PhaseDecomposed),
+            "per-element" => Some(Formulation::PerElement),
+            _ => None,
+        }
+    }
+}
+
+/// Which axis the parallel lane splits across (phase-decomposed
+/// formulation only; the per-element formulation always splits by
+/// output rows).
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash)]
+pub enum ParAxis {
+    /// One work queue of (phase × output-row) jobs — best load balance.
+    PhaseRows,
+    /// Rows within one phase at a time — one slab + sub-kernel resident
+    /// per step, best cache locality.
+    Rows,
+}
+
+impl ParAxis {
+    pub fn name(&self) -> &'static str {
+        match self {
+            ParAxis::PhaseRows => "phase-rows",
+            ParAxis::Rows => "rows",
+        }
+    }
+
+    fn from_name(name: &str) -> Option<ParAxis> {
+        match name {
+            "phase-rows" => Some(ParAxis::PhaseRows),
+            "rows" => Some(ParAxis::Rows),
+            _ => None,
+        }
+    }
+}
+
+/// One point in the execution-strategy space for a planned layer.
+///
+/// Constructed through the helpers so the serial lane is canonical
+/// (`workers == 1` always carries `ParAxis::PhaseRows`); `Eq`/`Hash`
+/// then mean semantic equality.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash)]
+pub struct ExecStrategy {
+    pub formulation: Formulation,
+    /// Worker threads; 1 = the serial lane.
+    pub workers: usize,
+    /// Parallel split axis (ignored on the serial lane and by the
+    /// per-element formulation).
+    pub axis: ParAxis,
+}
+
+impl ExecStrategy {
+    /// The conventional default every caller hardcoded before the
+    /// tuner existed: serial phase decomposition.  Always first in
+    /// [`search_space`] so it seeds the incumbent for pruning.
+    pub fn serial() -> ExecStrategy {
+        ExecStrategy {
+            formulation: Formulation::PhaseDecomposed,
+            workers: 1,
+            axis: ParAxis::PhaseRows,
+        }
+    }
+
+    /// Serial literal-Algorithm-2 lane.
+    pub fn serial_per_element() -> ExecStrategy {
+        ExecStrategy {
+            formulation: Formulation::PerElement,
+            workers: 1,
+            axis: ParAxis::PhaseRows,
+        }
+    }
+
+    /// Phase-decomposed parallel lane over `workers` threads.
+    pub fn parallel(workers: usize, axis: ParAxis) -> ExecStrategy {
+        let workers = workers.max(1);
+        ExecStrategy {
+            formulation: Formulation::PhaseDecomposed,
+            axis: if workers == 1 { ParAxis::PhaseRows } else { axis },
+            workers,
+        }
+    }
+
+    /// Per-element parallel lane (row split) over `workers` threads.
+    pub fn per_element_parallel(workers: usize) -> ExecStrategy {
+        ExecStrategy {
+            formulation: Formulation::PerElement,
+            workers: workers.max(1),
+            axis: ParAxis::PhaseRows,
+        }
+    }
+
+    pub fn is_serial(&self) -> bool {
+        self.workers == 1
+    }
+
+    /// Compact display name, e.g. `phase/par4/rows`.
+    pub fn name(&self) -> String {
+        match (self.formulation, self.workers) {
+            (f, 1) => format!("{}/serial", f.name()),
+            (Formulation::PerElement, w) => format!("per-element/par{w}"),
+            (Formulation::PhaseDecomposed, w) => {
+                format!("phase/par{w}/{}", self.axis.name())
+            }
+        }
+    }
+
+    /// JSON encoding for the tuning cache (`util::json`).
+    pub fn to_json(&self) -> Json {
+        let mut m = BTreeMap::new();
+        m.insert(
+            "formulation".to_string(),
+            Json::Str(self.formulation.name().to_string()),
+        );
+        m.insert("workers".to_string(), Json::Num(self.workers as f64));
+        m.insert("axis".to_string(), Json::Str(self.axis.name().to_string()));
+        Json::Obj(m)
+    }
+
+    /// Decode from the cache encoding; `None` on any malformed field.
+    pub fn from_json(v: &Json) -> Option<ExecStrategy> {
+        let formulation = Formulation::from_name(v.get("formulation")?.as_str()?)?;
+        let workers = v.get("workers")?.as_usize()?;
+        if workers == 0 {
+            return None;
+        }
+        let axis = ParAxis::from_name(v.get("axis")?.as_str()?)?;
+        Some(match formulation {
+            Formulation::PhaseDecomposed => ExecStrategy::parallel(workers, axis),
+            Formulation::PerElement => ExecStrategy::per_element_parallel(workers),
+        })
+    }
+}
+
+/// Candidate worker counts: powers of two up to `max_workers`, plus
+/// `max_workers` itself (so a 6-core host still tries 6).
+fn worker_counts(max_workers: usize) -> Vec<usize> {
+    let mut counts = Vec::new();
+    let mut w = 2;
+    while w < max_workers {
+        counts.push(w);
+        w *= 2;
+    }
+    if max_workers >= 2 {
+        counts.push(max_workers);
+    }
+    counts
+}
+
+/// The full search space for a machine with `max_workers` usable
+/// threads: both formulations serial, then every candidate worker
+/// count × axis.  [`ExecStrategy::serial`] is always element zero.
+pub fn search_space(max_workers: usize) -> Vec<ExecStrategy> {
+    let mut out = vec![ExecStrategy::serial(), ExecStrategy::serial_per_element()];
+    for w in worker_counts(max_workers) {
+        out.push(ExecStrategy::parallel(w, ParAxis::PhaseRows));
+        out.push(ExecStrategy::parallel(w, ParAxis::Rows));
+        out.push(ExecStrategy::per_element_parallel(w));
+    }
+    out
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn serial_default_is_first() {
+        for max in [1, 2, 3, 8] {
+            assert_eq!(search_space(max)[0], ExecStrategy::serial());
+        }
+    }
+
+    #[test]
+    fn space_sizes() {
+        // max 1 → only the two serial lanes; each worker count adds 3.
+        assert_eq!(search_space(1).len(), 2);
+        assert_eq!(search_space(2).len(), 2 + 3); // w ∈ {2}
+        assert_eq!(search_space(8).len(), 2 + 3 * 3); // w ∈ {2, 4, 8}
+        assert_eq!(worker_counts(6), vec![2, 4, 6]);
+    }
+
+    #[test]
+    fn names_unique() {
+        let names: Vec<String> = search_space(8).iter().map(ExecStrategy::name).collect();
+        let mut dedup = names.clone();
+        dedup.sort();
+        dedup.dedup();
+        assert_eq!(names.len(), dedup.len(), "{names:?}");
+    }
+
+    #[test]
+    fn serial_lane_is_canonical() {
+        // workers == 1 normalizes the axis, so Eq means semantic equality.
+        assert_eq!(
+            ExecStrategy::parallel(1, ParAxis::Rows),
+            ExecStrategy::serial()
+        );
+        assert_eq!(ExecStrategy::per_element_parallel(0).workers, 1);
+    }
+
+    #[test]
+    fn json_roundtrip_whole_space() {
+        for s in search_space(8) {
+            let encoded = s.to_json().to_string_compact();
+            let decoded =
+                ExecStrategy::from_json(&crate::util::json::parse(&encoded).unwrap()).unwrap();
+            assert_eq!(decoded, s, "{encoded}");
+        }
+    }
+
+    #[test]
+    fn from_json_rejects_malformed() {
+        for bad in [
+            r#"{"formulation":"phase","workers":0,"axis":"rows"}"#,
+            r#"{"formulation":"gpu","workers":2,"axis":"rows"}"#,
+            r#"{"formulation":"phase","workers":2,"axis":"cols"}"#,
+            r#"{"workers":2,"axis":"rows"}"#,
+            r#"[1,2,3]"#,
+        ] {
+            let v = crate::util::json::parse(bad).unwrap();
+            assert_eq!(ExecStrategy::from_json(&v), None, "{bad}");
+        }
+    }
+}

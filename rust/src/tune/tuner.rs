@@ -1,0 +1,222 @@
+//! Per-layer strategy search (DESIGN.md §Autotuning).
+//!
+//! One [`Tuner`] owns a search space and a budget; [`Tuner::tune_layer`]
+//! walks the space for one layer shape, seeding the incumbent with the
+//! conventional serial default (always element zero of the space, never
+//! pruned) and letting the [`Measurer`](super::measure::Measurer) prune
+//! candidates that can't win.  [`Tuner::tune_layer_cached`] goes
+//! through the [`TuningCache`] so a machine pays the search once per
+//! layer shape.
+
+use crate::conv::plan::ConvTransposePlan;
+use crate::conv::ConvTransposeParams;
+
+use super::cache::TuningCache;
+use super::measure::{MeasureBudget, Measurer};
+use super::space::{search_space, ExecStrategy};
+
+/// The tuning verdict for one layer shape.
+#[derive(Debug, Clone)]
+pub struct TunedPlan {
+    /// The layer geometry the verdict applies to.
+    pub params: ConvTransposeParams,
+    /// The winning strategy.
+    pub strategy: ExecStrategy,
+    /// Best measured seconds for the winner (the cached figure on a
+    /// cache hit).
+    pub best_seconds: f64,
+    /// Every candidate with its measurement (`None` = pruned).  Empty
+    /// on a cache hit — nothing was measured.
+    pub candidates: Vec<(ExecStrategy, Option<f64>)>,
+    /// True when the verdict came from the tuning cache.
+    pub cached: bool,
+}
+
+impl TunedPlan {
+    /// Candidates that were actually timed (not pruned).
+    pub fn measured(&self) -> usize {
+        self.candidates.iter().filter(|(_, t)| t.is_some()).count()
+    }
+
+    /// Candidates the probe pruned.
+    pub fn pruned(&self) -> usize {
+        self.candidates.len() - self.measured()
+    }
+
+    /// Seconds of the serial phase-decomposed default, when it was
+    /// among the measured candidates — the "hand-picked" baseline the
+    /// tables compare against.
+    pub fn serial_seconds(&self) -> Option<f64> {
+        self.candidates
+            .iter()
+            .find(|(s, _)| *s == ExecStrategy::serial())
+            .and_then(|(_, t)| *t)
+    }
+}
+
+/// Searches the execution-strategy space, one layer shape at a time.
+#[derive(Debug, Clone)]
+pub struct Tuner {
+    /// Candidate strategies, searched in order (element zero seeds the
+    /// incumbent).
+    pub space: Vec<ExecStrategy>,
+    /// Per-candidate measurement budget.
+    pub budget: MeasureBudget,
+}
+
+impl Tuner {
+    /// Space bounded by `max_workers`, default budget.
+    pub fn new(max_workers: usize) -> Tuner {
+        Tuner {
+            space: search_space(max_workers),
+            budget: MeasureBudget::default(),
+        }
+    }
+
+    pub fn with_budget(mut self, budget: MeasureBudget) -> Tuner {
+        self.budget = budget;
+        self
+    }
+
+    /// The space's worker bound — part of the cache key, so verdicts
+    /// from differently-bounded searches never shadow each other.
+    pub fn space_workers(&self) -> usize {
+        self.space.iter().map(|s| s.workers).max().unwrap_or(1)
+    }
+
+    /// Exhaustive search with incumbent pruning over one layer's plan.
+    pub fn tune_layer<M: Measurer>(&self, plan: &ConvTransposePlan, measurer: &mut M) -> TunedPlan {
+        assert!(!self.space.is_empty(), "tuner: empty search space");
+        let mut best: Option<(ExecStrategy, f64)> = None;
+        let mut candidates = Vec::with_capacity(self.space.len());
+        for s in &self.space {
+            let t = measurer.time_strategy(plan, s, best.as_ref().map(|b| b.1));
+            if let Some(sec) = t {
+                let improves = match &best {
+                    None => true,
+                    Some((_, b)) => sec < *b,
+                };
+                if improves {
+                    best = Some((*s, sec));
+                }
+            }
+            candidates.push((*s, t));
+        }
+        let (strategy, best_seconds) =
+            best.expect("tuner: no candidate measured (first is never pruned)");
+        TunedPlan {
+            params: *plan.params(),
+            strategy,
+            best_seconds,
+            candidates,
+            cached: false,
+        }
+    }
+
+    /// [`tune_layer`](Self::tune_layer) through the cache: a hit
+    /// returns the stored verdict without any measurement; a miss
+    /// searches and stores the winner.
+    pub fn tune_layer_cached<M: Measurer>(
+        &self,
+        plan: &ConvTransposePlan,
+        cache: &mut TuningCache,
+        measurer: &mut M,
+    ) -> TunedPlan {
+        if let Some(entry) = cache.get(plan.params(), self.space_workers()) {
+            return TunedPlan {
+                params: *plan.params(),
+                strategy: entry.strategy,
+                best_seconds: entry.seconds,
+                candidates: Vec::new(),
+                cached: true,
+            };
+        }
+        let tuned = self.tune_layer(plan, measurer);
+        cache.put(
+            plan.params(),
+            self.space_workers(),
+            tuned.strategy,
+            tuned.best_seconds,
+        );
+        tuned
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::tensor::Kernel;
+    use crate::tune::space::ParAxis;
+    use crate::util::rng::Rng;
+
+    fn plan() -> ConvTransposePlan {
+        let mut rng = Rng::seeded(0xD00D);
+        let k = Kernel::random(4, 2, 2, &mut rng);
+        ConvTransposePlan::new(ConvTransposeParams::new(4, 4, 2, 2, 2), &k)
+    }
+
+    /// Scripted measurer: fixed per-strategy times, records the
+    /// incumbents it was offered, prunes when told.
+    struct Scripted {
+        incumbents: Vec<Option<f64>>,
+        winner: ExecStrategy,
+    }
+
+    impl Measurer for Scripted {
+        fn time_strategy(
+            &mut self,
+            _plan: &ConvTransposePlan,
+            s: &ExecStrategy,
+            incumbent: Option<f64>,
+        ) -> Option<f64> {
+            self.incumbents.push(incumbent);
+            if s.workers > 2 {
+                return None; // "pruned"
+            }
+            Some(if *s == self.winner { 0.5 } else { 1.0 + self.incumbents.len() as f64 * 0.01 })
+        }
+    }
+
+    #[test]
+    fn picks_argmin_and_threads_incumbent() {
+        let winner = ExecStrategy::parallel(2, ParAxis::Rows);
+        let mut m = Scripted {
+            incumbents: Vec::new(),
+            winner,
+        };
+        let tuner = Tuner::new(4);
+        assert_eq!(tuner.space_workers(), 4);
+        let tuned = tuner.tune_layer(&plan(), &mut m);
+        assert_eq!(tuned.strategy, winner);
+        assert_eq!(tuned.best_seconds, 0.5);
+        assert!(!tuned.cached);
+        assert_eq!(tuned.candidates.len(), tuner.space.len());
+        // First candidate saw no incumbent; later ones saw the running best.
+        assert_eq!(m.incumbents[0], None);
+        assert!(m.incumbents[1].is_some());
+        assert_eq!(*m.incumbents.last().unwrap(), Some(0.5));
+        // Pruned candidates (workers > 2) are recorded as None.
+        assert!(tuned.pruned() > 0);
+        assert_eq!(tuned.measured() + tuned.pruned(), tuned.candidates.len());
+        assert!(tuned.serial_seconds().is_some());
+    }
+
+    #[test]
+    fn cached_roundtrip_in_memory() {
+        let winner = ExecStrategy::serial_per_element();
+        let mut m = Scripted {
+            incumbents: Vec::new(),
+            winner,
+        };
+        let tuner = Tuner::new(2);
+        let mut cache = TuningCache::in_memory();
+        let first = tuner.tune_layer_cached(&plan(), &mut cache, &mut m);
+        let timed_after_first = m.incumbents.len();
+        let second = tuner.tune_layer_cached(&plan(), &mut cache, &mut m);
+        assert!(!first.cached && second.cached);
+        assert_eq!(m.incumbents.len(), timed_after_first, "hit must not measure");
+        assert_eq!(second.strategy, first.strategy);
+        assert_eq!(second.best_seconds, first.best_seconds);
+        assert!(second.candidates.is_empty());
+    }
+}

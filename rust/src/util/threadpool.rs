@@ -1,6 +1,6 @@
 //! Thread-pool substrate (replaces `rayon` on the offline image).
 //!
-//! Two facilities:
+//! Three facilities:
 //!
 //! * [`parallel_for`] — scoped data-parallel loop over an index range,
 //!   built on `std::thread::scope`.  This is the paper's "GPU lane": the
@@ -9,11 +9,21 @@
 //!   the conventional-vs-unified *ratio* survives this substitution).
 //! * [`ThreadPool`] — a persistent pool with a submission queue, used by
 //!   the coordinator's worker lanes where jobs are `'static`.
+//! * [`parallel_drain`] / [`ThreadPool::run_scoped`] — *scoped* work on
+//!   the persistent [`shared_pool`]: borrowed jobs drain through warm
+//!   pool threads instead of freshly-spawned ones, so per-call cost is
+//!   queue traffic rather than OS thread startup.  This is what the
+//!   planned conv lanes (`conv::plan::ConvTransposePlan::run_par`) ride
+//!   on — and why the autotuner's measured worker counts mean what they
+//!   say on small layers (DESIGN.md §Autotuning).
 
+use std::panic::{catch_unwind, resume_unwind, AssertUnwindSafe};
 use std::sync::atomic::{AtomicUsize, Ordering};
 use std::sync::mpsc;
 use std::sync::{Arc, Condvar, Mutex};
 use std::thread;
+
+use once_cell::sync::Lazy;
 
 /// Number of worker threads to use by default (leaves one core for the
 /// coordinator / OS, min 1).
@@ -184,6 +194,128 @@ impl ThreadPool {
             n = cv.wait(n).unwrap();
         }
     }
+
+    /// Run `body(item)` for every item of `jobs` using up to `workers`
+    /// threads **including the calling thread**: `workers - 1` pool
+    /// helpers are enlisted and the caller always drains alongside
+    /// them, so the items complete even when every pool thread is busy
+    /// with other scopes.  Blocks until all items are processed *and*
+    /// every enlisted helper has released its borrows, which is what
+    /// lets `body` and the items borrow from the caller's stack with no
+    /// `'static` bound.  Panics in `body` are re-raised here after the
+    /// scope has fully quiesced.
+    ///
+    /// Invariant: `body` must not itself call `run_scoped` on the same
+    /// pool — a helper blocked inside a nested scope could starve the
+    /// queue.  The conv-kernel callers satisfy this trivially (their
+    /// bodies are leaf compute loops).
+    pub fn run_scoped<'env, T, F>(&self, jobs: Vec<T>, workers: usize, body: F)
+    where
+        T: Send + 'env,
+        F: Fn(T) + Send + Sync + 'env,
+    {
+        if jobs.is_empty() {
+            return;
+        }
+        let n_helpers = workers
+            .max(1)
+            .saturating_sub(1)
+            .min(jobs.len().saturating_sub(1))
+            .min(self.workers());
+        let state = Arc::new(ScopeState {
+            queue: Mutex::new(jobs),
+            body,
+        });
+        // 'static completion latch: each helper signals it only AFTER
+        // dropping its clone of `state`, so once the latch reaches
+        // `n_helpers` no pool thread holds any borrow of this frame.
+        let latch = Arc::new((Mutex::new(0usize), Condvar::new()));
+        // First helper panic payload, re-raised verbatim by the caller
+        // so the original message/location survive the pool hop.
+        let helper_panic: Arc<Mutex<Option<Box<dyn std::any::Any + Send>>>> =
+            Arc::new(Mutex::new(None));
+        for _ in 0..n_helpers {
+            let state = Arc::clone(&state);
+            let latch = Arc::clone(&latch);
+            let helper_panic = Arc::clone(&helper_panic);
+            let job: Box<dyn FnOnce() + Send + 'env> = Box::new(move || {
+                if let Err(payload) = catch_unwind(AssertUnwindSafe(|| drain_scope(&state))) {
+                    helper_panic.lock().unwrap().get_or_insert(payload);
+                }
+                drop(state);
+                let (done, cv) = &*latch;
+                *done.lock().unwrap() += 1;
+                cv.notify_all();
+            });
+            // SAFETY: the closure touches caller-borrowed data only
+            // through `state`, which it drops before signalling the
+            // ('static) latch; the wait below does not return until all
+            // `n_helpers` signals arrive, so no borrow escapes this
+            // call.  Box<dyn FnOnce> differs only in lifetime — same
+            // layout.
+            let job: Box<dyn FnOnce() + Send + 'static> = unsafe {
+                std::mem::transmute::<
+                    Box<dyn FnOnce() + Send + 'env>,
+                    Box<dyn FnOnce() + Send + 'static>,
+                >(job)
+            };
+            self.submit(job);
+        }
+        // The caller is worker zero: drain alongside the helpers.
+        let caller = catch_unwind(AssertUnwindSafe(|| drain_scope(&state)));
+        let (done, cv) = &*latch;
+        let mut n = done.lock().unwrap();
+        while *n < n_helpers {
+            n = cv.wait(n).unwrap();
+        }
+        drop(n);
+        if let Err(e) = caller {
+            resume_unwind(e);
+        }
+        if let Some(payload) = helper_panic.lock().unwrap().take() {
+            resume_unwind(payload);
+        }
+    }
+}
+
+/// Shared queue + body of one [`ThreadPool::run_scoped`] call.
+struct ScopeState<T, F> {
+    queue: Mutex<Vec<T>>,
+    body: F,
+}
+
+fn drain_scope<T, F: Fn(T)>(state: &ScopeState<T, F>) {
+    loop {
+        let item = state.queue.lock().unwrap().pop();
+        match item {
+            Some(t) => (state.body)(t),
+            None => break,
+        }
+    }
+}
+
+/// Process-wide persistent pool for scoped data-parallel kernel work,
+/// sized by [`default_parallelism`] and spawned on first use.  Used
+/// exclusively through [`parallel_drain`]; the coordinator keeps its
+/// own [`ThreadPool`] instances, so leaf kernel work and `'static`
+/// serving jobs never contend for the same queue.
+static SHARED_POOL: Lazy<ThreadPool> = Lazy::new(|| ThreadPool::new(default_parallelism()));
+
+/// The process-wide kernel pool (spawned on first use, sized by
+/// [`default_parallelism`]).
+pub fn shared_pool() -> &'static ThreadPool {
+    &SHARED_POOL
+}
+
+/// [`ThreadPool::run_scoped`] on the [`shared_pool`]: borrowed jobs on
+/// persistent threads.  `workers` counts the calling thread, so the
+/// effective parallelism equals the tuned/benched worker number.
+pub fn parallel_drain<T, F>(jobs: Vec<T>, workers: usize, body: F)
+where
+    T: Send,
+    F: Fn(T) + Send + Sync,
+{
+    shared_pool().run_scoped(jobs, workers, body);
 }
 
 impl Drop for ThreadPool {
@@ -266,5 +398,70 @@ mod tests {
         });
         drop(pool);
         assert_eq!(flag.load(Ordering::Relaxed), 1);
+    }
+
+    #[test]
+    fn run_scoped_covers_all_items_borrowed() {
+        // Items and body borrow the stack — the whole point of the API.
+        let hits: Vec<AtomicUsize> = (0..257).map(|_| AtomicUsize::new(0)).collect();
+        let jobs: Vec<usize> = (0..hits.len()).collect();
+        shared_pool().run_scoped(jobs, 4, |i| {
+            hits[i].fetch_add(1, Ordering::Relaxed);
+        });
+        assert!(hits.iter().all(|h| h.load(Ordering::Relaxed) == 1));
+    }
+
+    #[test]
+    fn run_scoped_empty_and_caller_only() {
+        shared_pool().run_scoped(Vec::<usize>::new(), 4, |_| panic!("must not run"));
+        // workers = 1 → no helpers enlisted; the caller drains alone.
+        let count = AtomicUsize::new(0);
+        shared_pool().run_scoped(vec![1, 2, 3], 1, |_| {
+            count.fetch_add(1, Ordering::Relaxed);
+        });
+        assert_eq!(count.load(Ordering::Relaxed), 3);
+    }
+
+    #[test]
+    fn run_scoped_disjoint_mut_slices() {
+        // The conv-plan shape: jobs hand out &mut rows of one buffer.
+        let mut data = vec![0u32; 64];
+        let jobs: Vec<(usize, &mut [u32])> = data.chunks_mut(8).enumerate().collect();
+        parallel_drain(jobs, 3, |(i, chunk)| {
+            for v in chunk {
+                *v = i as u32 + 1;
+            }
+        });
+        for (i, piece) in data.chunks(8).enumerate() {
+            assert!(piece.iter().all(|&v| v == i as u32 + 1));
+        }
+    }
+
+    #[test]
+    fn run_scoped_concurrent_scopes() {
+        // Several threads scope through the one shared pool at once.
+        let total = Arc::new(AtomicU64::new(0));
+        thread::scope(|s| {
+            for _ in 0..3 {
+                let total = Arc::clone(&total);
+                s.spawn(move || {
+                    let jobs: Vec<u64> = (0..100).collect();
+                    parallel_drain(jobs, 4, |i| {
+                        total.fetch_add(i, Ordering::Relaxed);
+                    });
+                });
+            }
+        });
+        assert_eq!(total.load(Ordering::Relaxed), 3 * 4950);
+    }
+
+    #[test]
+    #[should_panic]
+    fn run_scoped_propagates_body_panic() {
+        parallel_drain(vec![0usize, 1, 2, 3], 2, |i| {
+            if i == 2 {
+                panic!("boom");
+            }
+        });
     }
 }

@@ -6,6 +6,7 @@ use ukstc::conv::plan::{ConvTransposePlan, Scratch};
 use ukstc::conv::segregation::segregate;
 use ukstc::conv::{flops, memory, out_size, unified, ConvTransposeParams};
 use ukstc::tensor::{ops, Feature, Kernel};
+use ukstc::tune::space::search_space;
 use ukstc::util::prop::{close, forall, forall_res, Config};
 
 /// Valid random geometry: guarantees a positive output size.
@@ -78,6 +79,50 @@ fn prop_planned_bit_identical_to_one_shot() {
             plan.run_par(&x, &mut scratch, &mut out_par, 3);
             if out_par != want {
                 return (desc, Err("parallel planned != one-shot bitwise".into()));
+            }
+            (desc, Ok(()))
+        },
+    );
+}
+
+#[test]
+fn prop_every_exec_strategy_bit_identical() {
+    // The autotuner's whole search space (both formulations, every
+    // worker count × axis) must be bit-identical — the repo's `==`
+    // convention — to the planned serial reference, and agree with the
+    // conventional Algorithm 1 oracle, across the full random geometry
+    // grid (odd AND even output sizes).  This is what lets
+    // `RustBackend::with_autotune` promise that no tuning verdict can
+    // ever change served bits (ISSUE 3 acceptance).
+    let space = search_space(3);
+    forall_res(
+        Config::default().cases(40).seed(0x7E57),
+        "ExecStrategy space equivalence",
+        |rng| {
+            let Some((n_in, nk, p)) = geometry(rng) else {
+                return ((0, 0, 0, 0, 0), Ok(()));
+            };
+            let cin = rng.range(1, 4);
+            let cout = rng.range(1, 4);
+            let mut r2 = rng.split();
+            let x = Feature::random(n_in, n_in, cin, &mut r2);
+            let k = Kernel::random(nk, cin, cout, &mut r2);
+            let conventional = run(Algorithm::Conventional, Lane::Serial, &x, &k, p);
+            let plan = ConvTransposePlan::new(ConvTransposeParams::new(n_in, nk, p, cin, cout), &k);
+            let mut scratch = Scratch::for_plan(&plan);
+            let mut reference = plan.new_output();
+            plan.run(&x, &mut scratch, &mut reference);
+            let desc = (n_in, nk, p, cin, cout);
+            for s in &space {
+                let mut got = plan.new_output();
+                got.data.fill(f32::NAN); // dirty buffer must be fully overwritten
+                plan.run_with(s, &x, &mut scratch, &mut got);
+                if got != reference {
+                    return (desc, Err(format!("{} != planned serial reference", s.name())));
+                }
+                if let Err(e) = close(&conventional.data, &got.data, 2e-3) {
+                    return (desc, Err(format!("{} vs conventional: {e}", s.name())));
+                }
             }
             (desc, Ok(()))
         },

@@ -1,0 +1,132 @@
+//! Tuning-cache contract (ISSUE 3 satellites): the cache roundtrips
+//! through its JSON file, and a cache hit performs **zero**
+//! measurements — proven by injecting a counting measurer, exactly the
+//! seam `tune::measure::Measurer` exists for.
+
+use ukstc::conv::plan::ConvTransposePlan;
+use ukstc::conv::ConvTransposeParams;
+use ukstc::tensor::Kernel;
+use ukstc::tune::measure::Measurer;
+use ukstc::tune::space::{ExecStrategy, ParAxis};
+use ukstc::tune::{Tuner, TuningCache};
+use ukstc::util::rng::Rng;
+
+/// Deterministic counting measurer: every call is tallied; the
+/// 2-worker phase-rows strategy is scripted to win.
+struct CountingMeasurer {
+    calls: usize,
+}
+
+impl Measurer for CountingMeasurer {
+    fn time_strategy(
+        &mut self,
+        _plan: &ConvTransposePlan,
+        strategy: &ExecStrategy,
+        _incumbent: Option<f64>,
+    ) -> Option<f64> {
+        self.calls += 1;
+        Some(if *strategy == ExecStrategy::parallel(2, ParAxis::PhaseRows) {
+            1.0
+        } else {
+            2.0 + self.calls as f64 * 1e-3
+        })
+    }
+}
+
+fn plan_for(n_in: usize, cin: usize, cout: usize) -> ConvTransposePlan {
+    let mut rng = Rng::seeded(0xCAFE);
+    let k = Kernel::random(4, cin, cout, &mut rng);
+    ConvTransposePlan::new(ConvTransposeParams::new(n_in, 4, 2, cin, cout), &k)
+}
+
+#[test]
+fn cache_hit_skips_measurement() {
+    let plan = plan_for(4, 3, 2);
+    let tuner = Tuner::new(2);
+    let mut cache = TuningCache::in_memory();
+    let mut measurer = CountingMeasurer { calls: 0 };
+
+    let first = tuner.tune_layer_cached(&plan, &mut cache, &mut measurer);
+    assert!(!first.cached);
+    assert_eq!(
+        measurer.calls,
+        tuner.space.len(),
+        "a miss measures the whole space"
+    );
+    assert_eq!(first.strategy, ExecStrategy::parallel(2, ParAxis::PhaseRows));
+    assert_eq!(first.best_seconds, 1.0);
+
+    let calls_after_first = measurer.calls;
+    let second = tuner.tune_layer_cached(&plan, &mut cache, &mut measurer);
+    assert!(second.cached);
+    assert_eq!(
+        measurer.calls, calls_after_first,
+        "a cache hit must perform zero measurements"
+    );
+    assert_eq!(second.strategy, first.strategy);
+    assert_eq!(second.best_seconds, first.best_seconds);
+    assert!(second.candidates.is_empty());
+
+    // A different layer shape is a miss again.
+    tuner.tune_layer_cached(&plan_for(8, 2, 3), &mut cache, &mut measurer);
+    assert_eq!(measurer.calls, calls_after_first + tuner.space.len());
+    assert_eq!(cache.len(), 2);
+}
+
+#[test]
+fn cache_roundtrips_through_json_file() {
+    let dir = std::env::temp_dir().join(format!("ukstc-tune-cache-{}", std::process::id()));
+    std::fs::create_dir_all(&dir).unwrap();
+    let path = dir.join("cache.json");
+    let _ = std::fs::remove_file(&path);
+
+    let tuner = Tuner::new(3);
+    {
+        // A missing file is an empty, path-backed cache.
+        let mut cache = TuningCache::load(&path).unwrap();
+        assert!(cache.is_empty());
+        assert_eq!(cache.path(), Some(path.as_path()));
+        let mut measurer = CountingMeasurer { calls: 0 };
+        tuner.tune_layer_cached(&plan_for(4, 3, 2), &mut cache, &mut measurer);
+        assert_eq!(measurer.calls, tuner.space.len());
+        cache.save().unwrap();
+    }
+
+    // A fresh process-equivalent load must serve the verdict with zero
+    // measurements — tuning pays once per machine.
+    let mut reloaded = TuningCache::load(&path).unwrap();
+    assert_eq!(reloaded.len(), 1);
+    let mut measurer = CountingMeasurer { calls: 0 };
+    let verdict = tuner.tune_layer_cached(&plan_for(4, 3, 2), &mut reloaded, &mut measurer);
+    assert!(verdict.cached);
+    assert_eq!(measurer.calls, 0, "persisted cache must skip measurement");
+    assert_eq!(verdict.strategy, ExecStrategy::parallel(2, ParAxis::PhaseRows));
+    assert_eq!(verdict.best_seconds, 1.0);
+
+    std::fs::remove_file(&path).ok();
+}
+
+#[test]
+fn malformed_cache_is_an_error_not_a_crash() {
+    let dir = std::env::temp_dir().join(format!("ukstc-tune-bad-{}", std::process::id()));
+    std::fs::create_dir_all(&dir).unwrap();
+
+    let garbage = dir.join("garbage.json");
+    std::fs::write(&garbage, "{not json").unwrap();
+    assert!(TuningCache::load(&garbage).is_err());
+
+    let wrong_version = dir.join("version.json");
+    std::fs::write(&wrong_version, r#"{"version":99,"entries":{}}"#).unwrap();
+    let err = TuningCache::load(&wrong_version).unwrap_err().to_string();
+    assert!(err.contains("version"), "{err}");
+
+    let bad_entry = dir.join("entry.json");
+    std::fs::write(
+        &bad_entry,
+        r#"{"version":1,"entries":{"k":{"seconds":"fast"}}}"#,
+    )
+    .unwrap();
+    assert!(TuningCache::load(&bad_entry).is_err());
+
+    std::fs::remove_dir_all(&dir).ok();
+}
