@@ -15,10 +15,16 @@
 //! 6. **Plan/execute** (DESIGN.md §Plan-Execute): ahead-of-time
 //!    [`ConvTransposePlan`] + warm scratch arena vs the per-call paths
 //!    that re-segregate, re-plan and re-allocate on every invocation.
+//! 7. **Autotuning** (DESIGN.md §Autotuning): hand-picked execution
+//!    strategies vs the tuner's per-layer winners.
+//! 8. **Direct vs phase-GEMM** (DESIGN.md §GEMM-Execution): the
+//!    planned correlation path against the packed phase-GEMM engine,
+//!    per Table-4 DC-GAN layer, with achieved GFLOP/s — locating the
+//!    crossover on large-`Cout` layers.
 
 use crate::conv::parallel::{run, Algorithm, Lane};
 use crate::conv::plan::{ConvTransposePlan, Scratch};
-use crate::conv::{conventional, dilated, im2col, unified};
+use crate::conv::{conventional, dilated, flops, im2col, unified, ConvTransposeParams};
 use crate::models::zoo::GanModel;
 use crate::tensor::{Feature, Kernel};
 use crate::tune::{ExecStrategy, MeasureBudget, ParAxis, Tuner, WallClockMeasurer};
@@ -29,12 +35,17 @@ use super::{report, BenchConfig};
 
 /// A named measurement: median seconds plus the raw samples, so the
 /// table can report the shared mean/best/p50/p95 vocabulary
-/// ([`report::Latency`]).
+/// ([`report::Latency`]), and optionally the analytic MAC count of the
+/// measured operation so the table can report achieved GFLOP/s
+/// (`conv::flops` → [`report::gflops`]).
 #[derive(Debug, Clone)]
 pub struct Entry {
     pub name: String,
     pub seconds: f64,
     pub samples: Vec<f64>,
+    /// Analytic multiply-accumulates per iteration (`None` = no model,
+    /// GFLOP/s column prints "-").
+    pub macs: Option<u64>,
 }
 
 impl Entry {
@@ -45,7 +56,14 @@ impl Entry {
             name: name.into(),
             seconds: m.median(),
             samples: m.samples,
+            macs: None,
         }
+    }
+
+    /// Attach the analytic MAC count of the measured operation.
+    pub fn with_macs(mut self, macs: u64) -> Entry {
+        self.macs = Some(macs);
+        self
     }
 }
 
@@ -56,19 +74,24 @@ pub fn formulation(cfg: &BenchConfig) -> Vec<Entry> {
     let x = Feature::random(112, 112, 8, &mut rng);
     let k = Kernel::random(5, 8, 4, &mut rng);
     let p = 2;
+    let params = ConvTransposeParams::new(112, 5, p, 8, 4);
     vec![
         Entry::measure("conventional (Alg.1)", cfg, || {
             run(Algorithm::Conventional, Lane::Serial, &x, &k, p)
-        }),
+        })
+        .with_macs(flops::conventional(&params)),
         Entry::measure("grouped (HICSS'23, extra elements)", cfg, || {
             run(Algorithm::Grouped, Lane::Serial, &x, &k, p)
-        }),
+        })
+        .with_macs(flops::grouped(&params)),
         Entry::measure("unified per-element (Alg.2 literal)", cfg, || {
             run(Algorithm::UnifiedPerElement, Lane::Serial, &x, &k, p)
-        }),
+        })
+        .with_macs(flops::unified(&params)),
         Entry::measure("unified phase-decomposed (hot path)", cfg, || {
             run(Algorithm::Unified, Lane::Serial, &x, &k, p)
-        }),
+        })
+        .with_macs(flops::unified(&params)),
     ]
 }
 
@@ -78,16 +101,23 @@ pub fn gemm_routes(cfg: &BenchConfig) -> Vec<Entry> {
     let x = Feature::random(56, 56, 16, &mut rng);
     let k = Kernel::random(4, 16, 8, &mut rng);
     let p = 2;
+    // GFLOP/s denominators: the im2col route's GEMM is dimensioned for
+    // the full upsampled map (conventional MACs, zeros included); both
+    // segregated routes perform the unified count.
+    let params = ConvTransposeParams::new(56, 4, p, 16, 8);
     vec![
         Entry::measure("im2col conventional GEMM", cfg, || {
             im2col::transpose_conv(&x, &k, p)
-        }),
+        })
+        .with_macs(flops::conventional(&params)),
         Entry::measure("segregated GEMM + rearrange (§5)", cfg, || {
             im2col::transpose_conv_segregated_gemm(&x, &k, p).0
-        }),
+        })
+        .with_macs(flops::unified(&params)),
         Entry::measure("unified direct (no GEMM)", cfg, || {
             unified::transpose_conv(&x, &k, p)
-        }),
+        })
+        .with_macs(flops::unified(&params)),
     ]
 }
 
@@ -97,14 +127,18 @@ pub fn zero_skip(cfg: &BenchConfig) -> Vec<Entry> {
     let x = Feature::random(112, 112, 3, &mut rng);
     let k = Kernel::random(5, 3, 1, &mut rng);
     let p = 2;
+    let params = ConvTransposeParams::new(112, 5, p, 3, 1);
     vec![
         Entry::measure("conventional dense", cfg, || {
             conventional::transpose_conv(&x, &k, p)
-        }),
+        })
+        .with_macs(flops::conventional(&params)),
         Entry::measure("conventional + zero-skip branch", cfg, || {
             conventional::transpose_conv_zeroskip(&x, &k, p)
-        }),
-        Entry::measure("unified", cfg, || unified::transpose_conv(&x, &k, p)),
+        })
+        .with_macs(flops::unified(&params)),
+        Entry::measure("unified", cfg, || unified::transpose_conv(&x, &k, p))
+            .with_macs(flops::unified(&params)),
     ]
 }
 
@@ -128,13 +162,18 @@ pub fn lane_scaling(cfg: &BenchConfig) -> Vec<Entry> {
     let mut rng = Rng::seeded(0xF4);
     let x = Feature::random(112, 112, 8, &mut rng);
     let k = Kernel::random(4, 8, 8, &mut rng);
+    let macs = flops::unified(&ConvTransposeParams::new(112, 4, 2, 8, 8));
     let mut out = vec![Entry::measure("serial", cfg, || {
         run(Algorithm::Unified, Lane::Serial, &x, &k, 2)
-    })];
+    })
+    .with_macs(macs)];
     for w in [2, 4, cfg.workers.max(2)] {
-        out.push(Entry::measure(format!("parallel({w})"), cfg, || {
-            run(Algorithm::Unified, Lane::Parallel(w), &x, &k, 2)
-        }));
+        out.push(
+            Entry::measure(format!("parallel({w})"), cfg, || {
+                run(Algorithm::Unified, Lane::Parallel(w), &x, &k, 2)
+            })
+            .with_macs(macs),
+        );
     }
     out
 }
@@ -164,16 +203,22 @@ pub fn planning(cfg: &BenchConfig) -> Vec<Entry> {
             (x, k, plan)
         })
         .collect();
+    let stack_macs: u64 = layers
+        .iter()
+        .map(|(_, _, plan)| flops::unified(plan.params()))
+        .sum();
     let unplanned = Entry::measure("unplanned (segregate + plan per call)", cfg, || {
         for (x, k, plan) in &layers {
             timing::consume(unified::transpose_conv(x, k, plan.params().padding));
         }
-    });
+    })
+    .with_macs(stack_macs);
     let preseg = Entry::measure("unplanned (pre-segregated weights)", cfg, || {
         for (x, _, plan) in &layers {
             timing::consume(unified::transpose_conv_seg(x, plan.seg(), plan.params().padding));
         }
-    });
+    })
+    .with_macs(stack_macs);
     let mut scratch = Scratch::for_plans(layers.iter().map(|(_, _, plan)| plan));
     let mut outs: Vec<Feature> = layers.iter().map(|(_, _, plan)| plan.new_output()).collect();
     let planned = Entry::measure("planned (AOT plan + scratch arena)", cfg, || {
@@ -181,7 +226,8 @@ pub fn planning(cfg: &BenchConfig) -> Vec<Entry> {
             plan.run(x, &mut scratch, out);
         }
         outs[0].data[0]
-    });
+    })
+    .with_macs(stack_macs);
     vec![unplanned, preseg, planned]
 }
 
@@ -202,6 +248,10 @@ pub fn autotune(cfg: &BenchConfig) -> Vec<Entry> {
             (x, ConvTransposePlan::new(spec.params(), &k))
         })
         .collect();
+    let stack_macs: u64 = layers
+        .iter()
+        .map(|(_, plan)| flops::unified(plan.params()))
+        .sum();
     let mut scratch = Scratch::for_plans(layers.iter().map(|(_, plan)| plan));
     let mut outs: Vec<Feature> = layers.iter().map(|(_, plan)| plan.new_output()).collect();
     let serial = Entry::measure("hand-picked: phase/serial (whole stack)", cfg, || {
@@ -209,14 +259,16 @@ pub fn autotune(cfg: &BenchConfig) -> Vec<Entry> {
             plan.run(x, &mut scratch, out);
         }
         outs[0].data[0]
-    });
+    })
+    .with_macs(stack_macs);
     let par = ExecStrategy::parallel(cfg.workers.max(2), ParAxis::PhaseRows);
     let hand_par = Entry::measure(format!("hand-picked: {} (whole stack)", par.name()), cfg, || {
         for ((x, plan), out) in layers.iter().zip(&mut outs) {
             plan.run_with(&par, x, &mut scratch, out);
         }
         outs[0].data[0]
-    });
+    })
+    .with_macs(stack_macs);
     let tuner = Tuner::new(cfg.workers.max(2)).with_budget(MeasureBudget {
         warmup: cfg.warmup,
         min_time_s: 0.0,
@@ -232,12 +284,91 @@ pub fn autotune(cfg: &BenchConfig) -> Vec<Entry> {
             plan.run_with(s, x, &mut scratch, out);
         }
         outs[0].data[0]
-    });
+    })
+    .with_macs(stack_macs);
     vec![serial, hand_par, tuned]
 }
 
+/// Ablation 8 (DESIGN.md §GEMM-Execution): one row per Table-4 DC-GAN
+/// layer, planned **direct** serial execution next to the planned
+/// **phase-GEMM** serial engine — the direct-vs-GEMM column.  The
+/// formulations share the analytic MAC count, so the GFLOP/s columns
+/// expose the crossover in hardware terms: the packed GEMM wins where
+/// `Cout` fills the register tile (the wide early layers) and loses to
+/// the rank-1 correlation on the `Cout = 3` RGB head.
+pub struct GemmCrossRow {
+    pub layer: String,
+    pub direct: Entry,
+    pub gemm: Entry,
+    pub macs: u64,
+}
+
+/// Measure the direct-vs-GEMM crossover per layer of `model`
+/// (the printed ablation uses DC-GAN; tests use the lighter GP-GAN).
+pub fn gemm_crossover(model: GanModel, cfg: &BenchConfig) -> Vec<GemmCrossRow> {
+    let mut rng = Rng::seeded(0xF7);
+    model
+        .layers()
+        .iter()
+        .map(|spec| {
+            let x = Feature::random(spec.n_in, spec.n_in, spec.cin, &mut rng);
+            let k = Kernel::random(spec.ksize, spec.cin, spec.cout, &mut rng);
+            let plan = ConvTransposePlan::new(spec.params(), &k);
+            let macs = flops::unified(plan.params());
+            let mut scratch = Scratch::for_plan(&plan);
+            let mut out = plan.new_output();
+            let direct = Entry::measure("direct", cfg, || {
+                plan.run(&x, &mut scratch, &mut out);
+                out.data[0]
+            })
+            .with_macs(macs);
+            let gemm = Entry::measure("phase-gemm", cfg, || {
+                plan.run_gemm(&x, &mut scratch, &mut out);
+                out.data[0]
+            })
+            .with_macs(macs);
+            GemmCrossRow {
+                layer: spec.describe(),
+                direct,
+                gemm,
+                macs,
+            }
+        })
+        .collect()
+}
+
+/// Print the ablation-8 table (direct vs GEMM, latency + GFLOP/s).
+pub fn print_gemm_crossover(rows: &[GemmCrossRow]) {
+    let table: Vec<Vec<String>> = rows
+        .iter()
+        .map(|r| {
+            vec![
+                r.layer.clone(),
+                timing::fmt_duration(r.direct.seconds),
+                timing::fmt_duration(r.gemm.seconds),
+                report::gflops_cell(r.macs, r.direct.seconds),
+                report::gflops_cell(r.macs, r.gemm.seconds),
+                report::speedup(r.direct.seconds / r.gemm.seconds),
+            ]
+        })
+        .collect();
+    report::print_table(
+        "Ablation 8 — direct vs phase-GEMM (planned serial, Table-4 DC-GAN layers)",
+        &[
+            "layer",
+            "direct",
+            "phase-gemm",
+            "direct GF/s",
+            "gemm GF/s",
+            "gemm speedup",
+        ],
+        &table,
+    );
+}
+
 /// Print one ablation block: median plus the shared mean/best/p50/p95
-/// latency vocabulary, with ratios relative to the first entry.
+/// latency vocabulary, achieved GFLOP/s where an analytic MAC model
+/// exists, and ratios relative to the first entry.
 pub fn print_entries(title: &str, entries: &[Entry]) {
     let base = entries[0].seconds;
     let rows: Vec<Vec<String>> = entries
@@ -245,6 +376,11 @@ pub fn print_entries(title: &str, entries: &[Entry]) {
         .map(|e| {
             let mut row = vec![e.name.clone(), timing::fmt_duration(e.seconds)];
             row.extend(report::Latency::of(&e.samples).cells());
+            row.push(
+                e.macs
+                    .map(|m| report::gflops_cell(m, e.seconds))
+                    .unwrap_or_else(|| "-".into()),
+            );
             row.push(report::speedup(base / e.seconds));
             row
         })
@@ -258,6 +394,7 @@ pub fn print_entries(title: &str, entries: &[Entry]) {
             report::Latency::HEADERS[1],
             report::Latency::HEADERS[2],
             report::Latency::HEADERS[3],
+            "GFLOP/s",
             "speedup vs first",
         ],
         &rows,
@@ -279,6 +416,7 @@ pub fn run_all(cfg: &BenchConfig) {
         "Ablation 7 — hand-picked vs autotuned (Table-4 DC-GAN layer set)",
         &autotune(cfg),
     );
+    print_gemm_crossover(&gemm_crossover(GanModel::DcGan, cfg));
 }
 
 #[cfg(test)]
@@ -335,13 +473,27 @@ mod tests {
                     name: "a".into(),
                     seconds: 1.0,
                     samples: vec![1.0, 1.1],
+                    macs: Some(2_000_000_000),
                 },
                 Entry {
                     name: "b".into(),
                     seconds: 0.5,
                     samples: vec![0.5, 0.6],
+                    macs: None,
                 },
             ],
         );
+    }
+
+    #[test]
+    fn gemm_crossover_covers_layer_stack() {
+        let rows = gemm_crossover(GanModel::GpGan, &quick());
+        assert_eq!(rows.len(), GanModel::GpGan.layers().len());
+        for r in &rows {
+            assert!(r.direct.seconds > 0.0 && r.gemm.seconds > 0.0, "{}", r.layer);
+            assert_eq!(r.direct.macs, Some(r.macs));
+            assert!(r.macs > 0);
+        }
+        print_gemm_crossover(&rows);
     }
 }

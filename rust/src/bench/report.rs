@@ -93,6 +93,21 @@ pub fn speedup(r: f64) -> String {
     format!("{r:.3}×")
 }
 
+/// Achieved GFLOP/s for `macs` multiply-accumulates (2 FLOPs each)
+/// executed in `seconds` — the hardware-terms throughput column
+/// (`conv::flops` supplies the analytic MAC counts).
+pub fn gflops(macs: u64, seconds: f64) -> f64 {
+    if seconds <= 0.0 {
+        return 0.0;
+    }
+    2.0 * macs as f64 / seconds / 1e9
+}
+
+/// Table cell for [`gflops`], 2 decimals.
+pub fn gflops_cell(macs: u64, seconds: f64) -> String {
+    format!("{:.2}", gflops(macs, seconds))
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -124,6 +139,15 @@ mod tests {
     fn formatting() {
         assert_eq!(secs(1.23456), "1.2346");
         assert_eq!(speedup(2.034), "2.034×");
+    }
+
+    #[test]
+    fn gflops_formula() {
+        // 1e9 MACs in 2 s = 2e9 FLOPs / 2 s = 1 GFLOP/s.
+        assert!((gflops(1_000_000_000, 2.0) - 1.0).abs() < 1e-12);
+        assert_eq!(gflops_cell(1_000_000_000, 2.0), "1.00");
+        // Degenerate timings never divide by zero.
+        assert_eq!(gflops(42, 0.0), 0.0);
     }
 
     #[test]

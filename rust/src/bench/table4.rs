@@ -1,6 +1,7 @@
 //! Table 4 regeneration: the GAN ablation — per-layer conventional vs
-//! proposed times (serial + parallel lanes), totals, speedups, and the
-//! exact memory-savings bytes.
+//! proposed times (serial + parallel lanes), totals, speedups,
+//! achieved GFLOP/s (analytic MACs from `conv::flops` over measured
+//! time), and the exact memory-savings bytes.
 //!
 //! Protocol (paper §4.3): forward propagation of the transpose-conv
 //! layers only, one input sample, per layer.
@@ -176,6 +177,10 @@ pub fn print_model(result: &ModelResult) {
                 report::secs(r.prop_planned_ser),
                 report::secs(r.prop_tuned),
                 r.tuned_strategy.clone(),
+                // Achieved GFLOP/s (analytic MACs / measured time) so
+                // the table reports speed in hardware terms too.
+                report::gflops_cell(r.flops_conv, r.conv_ser),
+                report::gflops_cell(r.flops_prop, r.prop_tuned),
                 r.mem_savings_bytes.to_string(),
                 format!("{:.2}", r.flops_conv as f64 / r.flops_prop as f64),
             ]
@@ -194,6 +199,8 @@ pub fn print_model(result: &ModelResult) {
             "Prop (planned)",
             "Prop (tuned)",
             "Tuned strategy",
+            "Conv GF/s (ser)",
+            "Prop GF/s (tuned)",
             "Mem savings (B)",
             "FLOP ratio",
         ],

@@ -1,0 +1,372 @@
+//! Tiled f32 GEMM microkernel for the phase-GEMM execution engine
+//! (DESIGN.md §GEMM-Execution).
+//!
+//! The paper's §5 discussion frames the segregated transpose
+//! convolution as four dense phase GEMMs; GANAX and HUGE² (PAPERS.md)
+//! show that deconvolution throughput on real hardware comes from
+//! dense MACC engines.  This module is the CPU stand-in for such an
+//! engine: a register-blocked, cache-tiled `C += A·B` kernel that the
+//! planned [`PhaseGemm`](crate::tune::space::Formulation::PhaseGemm)
+//! formulation (`conv::plan`) and the §5 im2col ablation lanes
+//! (`conv::im2col`) both execute through.
+//!
+//! Blocking scheme (all sizes runtime-checked, any `m`/`n`/`k` works):
+//!
+//! * **Register tile** — [`MR`]`×`[`NR`] output elements accumulate in
+//!   a local `[[f32; NR]; MR]` that LLVM keeps in vector registers;
+//!   each loaded `a` element and each packed `b` row is reused across
+//!   the whole tile, so the inner loop does `MR·NR` MACs per
+//!   `MR + NR` loads instead of the rank-1 update's 1-per-load.
+//! * **K unroll** — the microkernel's K loop advances [`KU`] taps per
+//!   iteration (plus a remainder loop), keeping the accumulator chain
+//!   fed without reassociating any single output element's sum.
+//! * **B-panel packing** — [`pack_b`] lays `B[k×n]` out as
+//!   column-panels of width [`NR`] ([`packed_b_floats`] floats,
+//!   zero-padded at the ragged right edge), so the microkernel streams
+//!   one contiguous, aligned panel instead of striding across `B`
+//!   rows.  The conv plan packs each segregated sub-kernel **once at
+//!   construction**; steady-state execution never re-packs.
+//! * **Cache blocking** — the K dimension is processed in [`KC`]-sized
+//!   blocks, panel-inner, so one `KC×NR` panel block (≈8 KB) stays
+//!   L1-resident while every row tile sweeps over it.
+//!
+//! Accumulation order per output element is `kk` ascending — identical
+//! to the naive triple loop — but the *tiling* is still free to change
+//! which element a partial sum lands in when shapes are ragged, and
+//! future splits (multi-accumulator K, threaded K) would reassociate;
+//! callers therefore compare GEMM results with a 1e-4 tolerance, never
+//! bit-identity (DESIGN.md §GEMM-Execution).
+
+/// Register-tile rows (output rows accumulated in registers at once).
+pub const MR: usize = 4;
+/// Register-tile columns — one `[f32; NR]` accumulator row maps onto a
+/// 256-bit vector register.
+pub const NR: usize = 8;
+/// K-dimension cache block: `KC × NR` packed-panel floats ≈ 8 KB,
+/// comfortably L1-resident.
+pub const KC: usize = 256;
+/// K-loop unroll factor of the microkernel.
+pub const KU: usize = 4;
+
+/// Floats required by [`pack_b`] for a `k×n` operand: `n` rounded up
+/// to whole [`NR`] panels.
+pub fn packed_b_floats(k: usize, n: usize) -> usize {
+    n.div_ceil(NR) * NR * k
+}
+
+/// Pack row-major `b[k×n]` into the panel layout the microkernel
+/// streams: panel `jp` (columns `jp*NR..`) occupies
+/// `packed[jp*k*NR..(jp+1)*k*NR]`, row-of-panel `kk` holding the NR
+/// consecutive columns (zero-padded past the edge).  Every element of
+/// `packed` is written, so a dirty buffer is safe to reuse.
+pub fn pack_b(b: &[f32], k: usize, n: usize, packed: &mut [f32]) {
+    assert_eq!(b.len(), k * n, "pack_b: operand size mismatch");
+    assert_eq!(packed.len(), packed_b_floats(k, n), "pack_b: packed size mismatch");
+    let panels = n.div_ceil(NR);
+    for jp in 0..panels {
+        let j0 = jp * NR;
+        let nr = NR.min(n - j0);
+        let panel = &mut packed[jp * k * NR..(jp + 1) * k * NR];
+        for kk in 0..k {
+            let dst = &mut panel[kk * NR..(kk + 1) * NR];
+            let src = &b[kk * n + j0..kk * n + j0 + nr];
+            dst[..nr].copy_from_slice(src);
+            dst[nr..].fill(0.0);
+        }
+    }
+}
+
+/// One register tile: `c[i0.., j0..] += a[i0.., k0..] · panel`, where
+/// `panel` is the `kc × NR` packed block of B columns `j0..j0+nr`.
+/// The full-tile fast path keeps the `MR×NR` accumulator in registers
+/// with a [`KU`]-unrolled K loop; ragged edges (`mr < MR` or
+/// `nr < NR`) take the bounds-checked slow path over the same
+/// zero-padded accumulator.
+#[inline]
+#[allow(clippy::too_many_arguments)]
+fn tile(
+    a: &[f32],
+    lda: usize,
+    i0: usize,
+    mr: usize,
+    k0: usize,
+    kc: usize,
+    panel: &[f32],
+    c: &mut [f32],
+    ldc: usize,
+    j0: usize,
+    nr: usize,
+) {
+    debug_assert!(mr <= MR && nr <= NR && panel.len() >= kc * NR);
+    let mut acc = [[0f32; NR]; MR];
+    if mr == MR && nr == NR {
+        for (i, row) in acc.iter_mut().enumerate() {
+            row.copy_from_slice(&c[(i0 + i) * ldc + j0..][..NR]);
+        }
+        let mut kk = 0;
+        while kk + KU <= kc {
+            for u in 0..KU {
+                let b = &panel[(kk + u) * NR..(kk + u + 1) * NR];
+                for (i, row) in acc.iter_mut().enumerate() {
+                    let av = a[(i0 + i) * lda + k0 + kk + u];
+                    for (cv, &bv) in row.iter_mut().zip(b) {
+                        *cv += av * bv;
+                    }
+                }
+            }
+            kk += KU;
+        }
+        while kk < kc {
+            let b = &panel[kk * NR..(kk + 1) * NR];
+            for (i, row) in acc.iter_mut().enumerate() {
+                let av = a[(i0 + i) * lda + k0 + kk];
+                for (cv, &bv) in row.iter_mut().zip(b) {
+                    *cv += av * bv;
+                }
+            }
+            kk += 1;
+        }
+        for (i, row) in acc.iter().enumerate() {
+            c[(i0 + i) * ldc + j0..][..NR].copy_from_slice(row);
+        }
+        return;
+    }
+    for (i, row) in acc.iter_mut().enumerate().take(mr) {
+        row[..nr].copy_from_slice(&c[(i0 + i) * ldc + j0..][..nr]);
+    }
+    for kk in 0..kc {
+        let b = &panel[kk * NR..(kk + 1) * NR];
+        for (i, row) in acc.iter_mut().enumerate().take(mr) {
+            let av = a[(i0 + i) * lda + k0 + kk];
+            for (cv, &bv) in row.iter_mut().zip(b) {
+                *cv += av * bv;
+            }
+        }
+    }
+    for (i, row) in acc.iter().enumerate().take(mr) {
+        c[(i0 + i) * ldc + j0..][..nr].copy_from_slice(&row[..nr]);
+    }
+}
+
+/// `c[m×n] += a[m×k] · B` with `B` pre-packed by [`pack_b`] — the
+/// steady-state entry point of the phase-GEMM plan (operands packed
+/// once at plan construction, zero allocations here).
+pub fn gemm_packed(a: &[f32], packed_b: &[f32], c: &mut [f32], m: usize, k: usize, n: usize) {
+    assert_eq!(a.len(), m * k, "gemm_packed: A size mismatch");
+    assert_eq!(
+        packed_b.len(),
+        packed_b_floats(k, n),
+        "gemm_packed: packed B size mismatch"
+    );
+    assert_eq!(c.len(), m * n, "gemm_packed: C size mismatch");
+    if m == 0 || n == 0 || k == 0 {
+        return;
+    }
+    let panels = n.div_ceil(NR);
+    let mut k0 = 0;
+    while k0 < k {
+        let kc = KC.min(k - k0);
+        for jp in 0..panels {
+            let j0 = jp * NR;
+            let nr = NR.min(n - j0);
+            let panel = &packed_b[jp * k * NR + k0 * NR..][..kc * NR];
+            let mut i0 = 0;
+            while i0 < m {
+                let mr = MR.min(m - i0);
+                tile(a, k, i0, mr, k0, kc, panel, c, n, j0, nr);
+                i0 += MR;
+            }
+        }
+        k0 += KC;
+    }
+}
+
+/// `c[m×n] += a[m×k] · b[k×n]`, row-major — packs `b` into a transient
+/// panel buffer and runs the tiled kernel.  Convenience for one-shot
+/// callers (the im2col ablation lanes); planned execution packs once
+/// via [`pack_b`] and calls [`gemm_packed`] directly.
+pub fn gemm_tiled(a: &[f32], b: &[f32], c: &mut [f32], m: usize, k: usize, n: usize) {
+    assert_eq!(b.len(), k * n, "gemm_tiled: B size mismatch");
+    let mut packed = vec![0.0f32; packed_b_floats(k, n)];
+    pack_b(b, k, n, &mut packed);
+    gemm_packed(a, &packed, c, m, k, n);
+}
+
+/// im2col over a contiguous HWC slab, output rows `[row_lo, row_hi)`:
+/// patch row `(py - row_lo)·n_cols + px` of `dst` holds the flattened
+/// `[kr, kc, c]` window of the slab at `(py, px)`.  The slab is
+/// exactly the phase slab the direct path correlates
+/// (`slab_w = n_cols + kc - 1`), so the patch matrix times the
+/// tap-major kernel matrix reproduces the phase output.  Every `dst`
+/// element is written — dirty scratch regions are safe to reuse.
+#[allow(clippy::too_many_arguments)]
+pub(crate) fn im2col_rows(
+    slab: &[f32],
+    slab_w: usize,
+    c: usize,
+    kr: usize,
+    kc: usize,
+    n_cols: usize,
+    row_lo: usize,
+    row_hi: usize,
+    dst: &mut [f32],
+) {
+    let patch = kr * kc * c;
+    debug_assert_eq!(dst.len(), (row_hi - row_lo) * n_cols * patch);
+    debug_assert!(slab_w >= n_cols + kc - 1);
+    for py in row_lo..row_hi {
+        for px in 0..n_cols {
+            let row = &mut dst[((py - row_lo) * n_cols + px) * patch..][..patch];
+            for u in 0..kr {
+                let src = ((py + u) * slab_w + px) * c;
+                row[u * kc * c..(u + 1) * kc * c].copy_from_slice(&slab[src..src + kc * c]);
+            }
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::prop::close;
+    use crate::util::rng::Rng;
+
+    /// Reference: naive i-k-j triple loop (same per-element order).
+    fn gemm_naive(a: &[f32], b: &[f32], c: &mut [f32], m: usize, k: usize, n: usize) {
+        for i in 0..m {
+            for kk in 0..k {
+                let av = a[i * k + kk];
+                for j in 0..n {
+                    c[i * n + j] += av * b[kk * n + j];
+                }
+            }
+        }
+    }
+
+    fn random_mat(m: usize, n: usize, rng: &mut Rng) -> Vec<f32> {
+        let mut v = vec![0.0f32; m * n];
+        rng.fill_normal(&mut v);
+        v
+    }
+
+    #[test]
+    fn tiled_small_known() {
+        // [1 2; 3 4] * [5 6; 7 8] = [19 22; 43 50]
+        let a = [1.0, 2.0, 3.0, 4.0];
+        let b = [5.0, 6.0, 7.0, 8.0];
+        let mut c = [0.0; 4];
+        gemm_tiled(&a, &b, &mut c, 2, 2, 2);
+        assert_eq!(c, [19.0, 22.0, 43.0, 50.0]);
+    }
+
+    #[test]
+    fn tiled_matches_naive_on_ragged_edges() {
+        // Every combination of m/n/k straddling the MR/NR/KU tile
+        // boundaries, including exact multiples and off-by-ones.
+        let mut rng = Rng::seeded(0x6E33);
+        for &m in &[1, 3, MR, MR + 1, 2 * MR + 3] {
+            for &n in &[1, 3, NR - 1, NR, NR + 1, 2 * NR + 5] {
+                for &k in &[1, 2, KU, KU + 1, 3 * KU + 1, 37] {
+                    let a = random_mat(m, k, &mut rng);
+                    let b = random_mat(k, n, &mut rng);
+                    let mut want = random_mat(m, n, &mut rng);
+                    let mut got = want.clone(); // C += : dirty C must survive
+                    gemm_naive(&a, &b, &mut want, m, k, n);
+                    gemm_tiled(&a, &b, &mut got, m, k, n);
+                    close(&want, &got, 1e-4)
+                        .unwrap_or_else(|e| panic!("m={m} n={n} k={k}: {e}"));
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn cache_blocking_crosses_kc() {
+        // K > KC exercises the k0 block loop (partial sums re-loaded
+        // from C between blocks).
+        let (m, n, k) = (5, 9, KC + KC / 2 + 3);
+        let mut rng = Rng::seeded(0x6E34);
+        let a = random_mat(m, k, &mut rng);
+        let b = random_mat(k, n, &mut rng);
+        let mut want = vec![0.0f32; m * n];
+        let mut got = vec![0.0f32; m * n];
+        gemm_naive(&a, &b, &mut want, m, k, n);
+        gemm_tiled(&a, &b, &mut got, m, k, n);
+        assert!(close(&want, &got, 1e-3).is_ok());
+    }
+
+    #[test]
+    fn packed_layout_and_reuse() {
+        let (k, n) = (3, NR + 2); // two panels, second ragged
+        let mut rng = Rng::seeded(0x6E35);
+        let b = random_mat(k, n, &mut rng);
+        let mut packed = vec![f32::NAN; packed_b_floats(k, n)];
+        pack_b(&b, k, n, &mut packed);
+        assert_eq!(packed.len(), 2 * NR * k);
+        // Panel 0, row kk = b[kk][0..NR]; panel 1 zero-padded.
+        for kk in 0..k {
+            assert_eq!(&packed[kk * NR..(kk + 1) * NR], &b[kk * n..kk * n + NR]);
+            let p1 = &packed[k * NR + kk * NR..k * NR + (kk + 1) * NR];
+            assert_eq!(&p1[..2], &b[kk * n + NR..kk * n + NR + 2]);
+            assert!(p1[2..].iter().all(|&v| v == 0.0), "edge padding not zeroed");
+        }
+        // gemm_packed on the pre-packed operand matches the one-shot.
+        let m = 6;
+        let a = random_mat(m, k, &mut rng);
+        let mut want = vec![0.0f32; m * n];
+        gemm_tiled(&a, &b, &mut want, m, k, n);
+        let mut got = vec![0.0f32; m * n];
+        gemm_packed(&a, &packed, &mut got, m, k, n);
+        assert_eq!(got, want);
+    }
+
+    #[test]
+    fn degenerate_sizes_are_noops() {
+        gemm_tiled(&[], &[], &mut [], 0, 3, 0);
+        gemm_tiled(&[], &[1.0, 2.0], &mut [], 0, 1, 2);
+        let mut c = [7.0f32; 2];
+        gemm_tiled(&[], &[], &mut c, 2, 0, 1);
+        assert_eq!(c, [7.0, 7.0], "k=0 must leave C untouched");
+    }
+
+    #[test]
+    fn accumulates_into_existing_c() {
+        let a = [1.0f32, 1.0];
+        let b = [2.0f32, 3.0];
+        let mut c = [10.0f32];
+        gemm_tiled(&a, &b, &mut c, 1, 2, 1);
+        assert_eq!(c, [15.0]);
+    }
+
+    #[test]
+    fn im2col_rows_matches_whole_matrix() {
+        // Row-sliced im2col must tile the full patch matrix exactly —
+        // the contract the row-parallel GEMM lane relies on.
+        let (kr, kc, c, n_rows, n_cols) = (2, 3, 2, 4, 5);
+        let slab_h = n_rows + kr - 1;
+        let slab_w = n_cols + kc - 1;
+        let mut rng = Rng::seeded(0x6E36);
+        let slab = random_mat(slab_h, slab_w * c, &mut rng);
+        let patch = kr * kc * c;
+        let mut whole = vec![f32::NAN; n_rows * n_cols * patch];
+        im2col_rows(&slab, slab_w, c, kr, kc, n_cols, 0, n_rows, &mut whole);
+        for lo in 0..n_rows {
+            let mut piece = vec![f32::NAN; n_cols * patch];
+            im2col_rows(&slab, slab_w, c, kr, kc, n_cols, lo, lo + 1, &mut piece);
+            assert_eq!(&whole[lo * n_cols * patch..(lo + 1) * n_cols * patch], &piece[..]);
+        }
+        // Spot-check one patch against direct slab indexing.
+        let (py, px) = (1, 2);
+        let row = &whole[(py * n_cols + px) * patch..][..patch];
+        for u in 0..kr {
+            for v in 0..kc {
+                for ch in 0..c {
+                    assert_eq!(
+                        row[(u * kc + v) * c + ch],
+                        slab[((py + u) * slab_w + px + v) * c + ch]
+                    );
+                }
+            }
+        }
+    }
+}

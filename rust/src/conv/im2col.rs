@@ -12,10 +12,16 @@ use crate::tensor::{ops, Feature};
 use crate::tensor::Kernel;
 
 use super::segregation::segregate;
-use super::{out_size, TapSet};
+use super::unified::scatter_rows;
+use super::{gemm as tiled, out_size, TapSet};
 
-/// Naive-but-cache-aware GEMM: `c[m×n] += a[m×k] · b[k×n]`, row-major.
-/// i-k-j loop order streams `b` rows and keeps `c` rows hot.
+/// Zero-skipping GEMM: `c[m×n] += a[m×k] · b[k×n]`, row-major,
+/// branching past `a` elements that are exactly zero (the im2col of an
+/// upsampled map is ~75% zeros).  Deliberately kept as the scalar
+/// i-k-j loop — a thin sparse lane whose §5 ablation numbers stay
+/// comparable across PRs; the dense route ([`gemm_dense`]) runs the
+/// tiled microkernel ([`tiled::gemm_tiled`](crate::conv::gemm)), which
+/// cannot branch per element.
 pub fn gemm(a: &[f32], b: &[f32], c: &mut [f32], m: usize, k: usize, n: usize) {
     assert_eq!(a.len(), m * k);
     assert_eq!(b.len(), k * n);
@@ -35,21 +41,11 @@ pub fn gemm(a: &[f32], b: &[f32], c: &mut [f32], m: usize, k: usize, n: usize) {
     }
 }
 
-/// Dense GEMM without the zero-skip (for fair FLOP-cost comparisons).
+/// Dense GEMM — same signature as before, internals replaced by the
+/// register-blocked, cache-tiled microkernel (`conv::gemm`, DESIGN.md
+/// §GEMM-Execution).
 pub fn gemm_dense(a: &[f32], b: &[f32], c: &mut [f32], m: usize, k: usize, n: usize) {
-    assert_eq!(a.len(), m * k);
-    assert_eq!(b.len(), k * n);
-    assert_eq!(c.len(), m * n);
-    for i in 0..m {
-        let a_row = &a[i * k..(i + 1) * k];
-        let c_row = &mut c[i * n..(i + 1) * n];
-        for (kk, &av) in a_row.iter().enumerate() {
-            let b_row = &b[kk * n..(kk + 1) * n];
-            for (cv, &bv) in c_row.iter_mut().zip(b_row) {
-                *cv += av * bv;
-            }
-        }
-    }
+    tiled::gemm_tiled(a, b, c, m, k, n);
 }
 
 /// im2col patch matrix of `x` for a `kr×kc` VALID window sweep:
@@ -113,8 +109,12 @@ pub fn transpose_conv_segregated_gemm(
 ) -> (Feature, usize) {
     let seg = segregate(k);
     let ho = out_size(x.h, k.n, padding);
-    let mut phases: Vec<Feature> = Vec::with_capacity(4);
+    let mut result = Feature::zeros(ho, ho, k.cout);
     let mut extra = 0usize;
+    // `phase_geometries` omits empty phases (a 1×1 output has only the
+    // (0,0) phase), so interleave whatever phases exist by scattering
+    // each into its strided parity positions — the existing extents
+    // always partition the output exactly.
     for g in super::unified::phase_geometries(x.h, k.n, padding) {
         let (pt, pb, pl, pr) = g.pads;
         let padded = ops::pad_asym(x, pt, pb, pl, pr);
@@ -132,13 +132,9 @@ pub fn transpose_conv_segregated_gemm(
         gemm_dense(&patches, &km, &mut out, rows, patch, sub.cout);
         let phase = Feature::from_vec(g.n_rows, g.n_cols, sub.cout, out);
         extra += phase.bytes();
-        // Phases are produced in (0,0),(0,1),(1,0),(1,1) order because
-        // phase_geometries iterates rp-major.
-        phases.push(phase);
+        scatter_rows(&mut result, &phase.data, g.rp, g.sp, g.n_rows, g.n_cols);
     }
-    assert_eq!(phases.len(), 4, "degenerate geometry in segregated GEMM");
-    let refs = [&phases[0], &phases[1], &phases[2], &phases[3]];
-    (ops::interleave_phases(refs, ho, ho), extra)
+    (result, extra)
 }
 
 #[cfg(test)]
@@ -195,6 +191,34 @@ mod tests {
         assert!(ops::max_abs_diff(&want, &got) < 1e-4);
         // §5: phase buffers ≈ one extra output copy.
         assert_eq!(extra, want.bytes());
+    }
+
+    #[test]
+    fn segregated_gemm_handles_missing_phases() {
+        // ho = 1: only the (0,0) phase exists — `phase_geometries`
+        // omits the empty ones, and the old `phases.len() == 4` assert
+        // panicked on exactly these shapes.
+        let mut rng = Rng::seeded(43);
+        for (n, nk, p) in [(1usize, 3usize, 1usize), (2, 5, 1)] {
+            let x = Feature::random(n, n, 2, &mut rng);
+            let k = Kernel::random(nk, 2, 3, &mut rng);
+            let want = conventional::transpose_conv(&x, &k, p);
+            assert_eq!(want.h, 1, "shape picked for a degenerate 1×1 output");
+            let (got, extra) = transpose_conv_segregated_gemm(&x, &k, p);
+            assert!(
+                ops::max_abs_diff(&want, &got) < 1e-4,
+                "n={n} nk={nk} p={p}"
+            );
+            assert_eq!(extra, want.bytes(), "phase buffers still ≈ one output");
+        }
+        // Odd output with all four phases present still interleaves
+        // correctly through the scatter.
+        let x = Feature::random(2, 2, 2, &mut rng);
+        let k = Kernel::random(3, 2, 2, &mut rng);
+        let want = conventional::transpose_conv(&x, &k, 1);
+        assert_eq!(want.h, 3);
+        let (got, _) = transpose_conv_segregated_gemm(&x, &k, 1);
+        assert!(ops::max_abs_diff(&want, &got) < 1e-4);
     }
 
     #[test]

@@ -8,6 +8,8 @@
 //! * [`unified`] — **the paper's contribution** (Algorithm 2 / Eqs. 1–4)
 //! * [`parallel`] — multi-threaded lanes of all three ("GPU" substitute)
 //! * [`im2col`] — GEMM-based transpose conv (§5 discussion baseline)
+//! * [`gemm`] — register-blocked, cache-tiled f32 microkernel behind
+//!   the planned phase-GEMM formulation and the im2col lanes
 //! * [`dilated`] — segregated-input dilated convolution (§5 future work)
 //! * [`flops`] — analytic MAC counts
 //! * [`memory`] — analytic buffer accounting (matches the paper's
@@ -23,6 +25,7 @@ pub mod backward;
 pub mod conventional;
 pub mod dilated;
 pub mod flops;
+pub mod gemm;
 pub mod grouped;
 pub mod im2col;
 pub mod memory;

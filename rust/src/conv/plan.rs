@@ -23,20 +23,31 @@
 //!   byte a run reads is written first (`build_slab` covers slabs, the
 //!   phase regions are zero-filled), so stale data never aliases in.
 //!
-//! Execution is bit-identical to the one-shot path — same slab values,
-//! same correlation loops, same f32 accumulation order — which the
-//! property suite asserts with `==`, not a tolerance.
+//! Direct (correlation) execution is bit-identical to the one-shot
+//! path — same slab values, same correlation loops, same f32
+//! accumulation order — which the property suite asserts with `==`,
+//! not a tolerance.  The planned **phase-GEMM** formulation
+//! ([`run_gemm`](ConvTransposePlan::run_gemm), DESIGN.md
+//! §GEMM-Execution) executes the same phases as packed GEMMs through
+//! the tiled microkernel (`conv::gemm`): each segregated sub-kernel is
+//! packed into its GEMM operand layout **once at construction**, and
+//! the im2col patch matrix lives in the scratch arena — so the GEMM
+//! steady state is also zero-alloc, equivalent to the direct reference
+//! within 1e-4 (f32 reassociation through the register tile).
 
 use crate::tensor::{Feature, Kernel};
 use crate::tune::space::{ExecStrategy, Formulation, ParAxis};
 use crate::util::threadpool;
 
 use super::conventional::correlate_rows;
+use super::gemm;
+use super::im2col::kernel_matrix;
 use super::segregation::{segregate, Segregated};
 use super::unified::{build_slab, phase_geometries, scatter_rows, PhaseGeometry};
 use super::ConvTransposeParams;
 
-/// One phase of the plan: its frozen geometry plus the arena layout.
+/// One phase of the plan: its frozen geometry plus the arena layout
+/// and the plan-time-packed GEMM operand.
 #[derive(Debug, Clone)]
 struct PhasePlan {
     geom: PhaseGeometry,
@@ -48,6 +59,15 @@ struct PhasePlan {
     /// Float offset/length of the phase output within the phase area.
     phase_off: usize,
     phase_len: usize,
+    /// GEMM reduction depth `kr·kc·Cin` of this phase's sub-kernel.
+    gemm_k: usize,
+    /// im2col patch-matrix floats (`n_rows·n_cols·gemm_k`) — the
+    /// phase's claim on the arena's shared patch area.
+    patch_len: usize,
+    /// The sub-kernel as a packed GEMM B operand
+    /// (`gemm::pack_b` over the tap-major `[gemm_k, Cout]` matrix),
+    /// laid out once here so steady-state GEMM execution never packs.
+    packed_kernel: Vec<f32>,
 }
 
 /// An ahead-of-time plan for one transpose-convolution layer.
@@ -64,6 +84,9 @@ pub struct ConvTransposePlan {
     /// Total floats of the slab area (phase area follows it).
     slab_floats: usize,
     phase_floats: usize,
+    /// Floats of the shared im2col patch area (max over phases —
+    /// phases run one at a time, so one region serves all four).
+    patch_floats: usize,
 }
 
 impl ConvTransposePlan {
@@ -94,6 +117,7 @@ impl ConvTransposePlan {
         let out = params.out_size();
         let mut slab_off = 0usize;
         let mut phase_off = 0usize;
+        let mut patch_floats = 0usize;
         let phases = phase_geometries(params.n_in, params.n_k, params.padding)
             .into_iter()
             .map(|geom| {
@@ -101,6 +125,14 @@ impl ConvTransposePlan {
                 let slab_w = geom.cols.1 - geom.cols.0;
                 let slab_len = slab_h * slab_w * params.cin;
                 let phase_len = geom.n_rows * geom.n_cols * params.cout;
+                // Plan-time GEMM lowering: pack this phase's sub-kernel
+                // into its panel operand once, here.
+                let sub = &seg.subs[geom.sub];
+                let gemm_k = sub.rows * sub.cols * params.cin;
+                let patch_len = geom.n_rows * geom.n_cols * gemm_k;
+                patch_floats = patch_floats.max(patch_len);
+                let mut packed_kernel = vec![0.0f32; gemm::packed_b_floats(gemm_k, params.cout)];
+                gemm::pack_b(&kernel_matrix(sub), gemm_k, params.cout, &mut packed_kernel);
                 let pp = PhasePlan {
                     geom,
                     slab_w,
@@ -108,6 +140,9 @@ impl ConvTransposePlan {
                     slab_len,
                     phase_off,
                     phase_len,
+                    gemm_k,
+                    patch_len,
+                    packed_kernel,
                 };
                 slab_off += slab_len;
                 phase_off += phase_len;
@@ -121,6 +156,7 @@ impl ConvTransposePlan {
             out,
             slab_floats: slab_off,
             phase_floats: phase_off,
+            patch_floats,
         }
     }
 
@@ -139,13 +175,37 @@ impl ConvTransposePlan {
         self.out
     }
 
-    /// Exact scratch requirement in floats: four slabs + four phase
-    /// outputs, laid out contiguously.
+    /// Exact scratch requirement in floats covering **every**
+    /// execution strategy: slabs + phase outputs + the shared im2col
+    /// patch region the GEMM formulation fills (max over phases).  An
+    /// arena pre-sized to this runs any tuned [`ExecStrategy`] —
+    /// including [`Formulation::PhaseGemm`] — without ever growing.
     pub fn scratch_floats(&self) -> usize {
+        self.scratch_floats_direct() + self.patch_floats
+    }
+
+    /// Exact scratch requirement of the direct (correlation) paths
+    /// alone ([`run`](Self::run)/[`run_par`](Self::run_par)/
+    /// [`run_par_rows`](Self::run_par_rows)): slabs + phase outputs.
+    /// Direct execution only ever grows an arena to this, so
+    /// GEMM-free deployments don't pay for the patch region.
+    pub fn scratch_floats_direct(&self) -> usize {
         self.slab_floats + self.phase_floats
     }
 
-    /// Exact scratch requirement in bytes (fp32).
+    /// Exact scratch requirement of one strategy: the GEMM-inclusive
+    /// figure for [`Formulation::PhaseGemm`], the direct figure for
+    /// everything else (the per-element lanes allocate their own
+    /// output and use no scratch at all, but sizing them like the
+    /// direct paths keeps one arena safely shared across pins).
+    pub fn scratch_floats_for(&self, strategy: &ExecStrategy) -> usize {
+        match strategy.formulation {
+            Formulation::PhaseGemm => self.scratch_floats(),
+            _ => self.scratch_floats_direct(),
+        }
+    }
+
+    /// Exact scratch requirement in bytes (fp32, every strategy).
     pub fn scratch_bytes(&self) -> usize {
         self.scratch_floats() * std::mem::size_of::<f32>()
     }
@@ -177,7 +237,7 @@ impl ConvTransposePlan {
     /// no pre-clearing).
     pub fn run(&self, x: &Feature, scratch: &mut Scratch, out: &mut Feature) {
         self.check_shapes(x, out);
-        let buf = scratch.ensure(self.scratch_floats());
+        let buf = scratch.ensure(self.scratch_floats_direct());
         let (slab_area, phase_area) = buf.split_at_mut(self.slab_floats);
         for pp in &self.phases {
             build_slab(x, &pp.geom, &mut slab_area[pp.slab_off..pp.slab_off + pp.slab_len]);
@@ -226,7 +286,7 @@ impl ConvTransposePlan {
         }
         self.check_shapes(x, out);
         let cout = self.params.cout;
-        let buf = scratch.ensure(self.scratch_floats());
+        let buf = scratch.ensure(self.scratch_floats_direct());
         {
             let (slab_area, phase_area) = buf.split_at_mut(self.slab_floats);
             for pp in &self.phases {
@@ -288,7 +348,7 @@ impl ConvTransposePlan {
         }
         self.check_shapes(x, out);
         let cout = self.params.cout;
-        let buf = scratch.ensure(self.scratch_floats());
+        let buf = scratch.ensure(self.scratch_floats_direct());
         {
             let (slab_area, phase_area) = buf.split_at_mut(self.slab_floats);
             for pp in &self.phases {
@@ -329,15 +389,151 @@ impl ConvTransposePlan {
         }
     }
 
+    /// Execute through the planned phase-GEMM engine, serially
+    /// (DESIGN.md §GEMM-Execution): per phase, crop the slab into the
+    /// arena, im2col it into the arena's patch region, and multiply by
+    /// the sub-kernel packed at construction
+    /// ([`gemm::gemm_packed`], register-blocked + cache-tiled).
+    /// Steady state performs **zero** heap allocations (the patch
+    /// region is part of [`scratch_floats`](Self::scratch_floats)).
+    /// Equivalent to [`run`](Self::run) within 1e-4 — the register
+    /// tile reassociates f32 sums, so bit-identity is not promised.
+    pub fn run_gemm(&self, x: &Feature, scratch: &mut Scratch, out: &mut Feature) {
+        self.check_shapes(x, out);
+        let cout = self.params.cout;
+        let buf = scratch.ensure(self.scratch_floats());
+        let (slab_area, rest) = buf.split_at_mut(self.slab_floats);
+        let (phase_area, patch_area) = rest.split_at_mut(self.phase_floats);
+        for pp in &self.phases {
+            let slab = &mut slab_area[pp.slab_off..pp.slab_off + pp.slab_len];
+            build_slab(x, &pp.geom, slab);
+            let sub = &self.seg.subs[pp.geom.sub];
+            let patch = &mut patch_area[..pp.patch_len];
+            gemm::im2col_rows(
+                slab,
+                pp.slab_w,
+                self.params.cin,
+                sub.rows,
+                sub.cols,
+                pp.geom.n_cols,
+                0,
+                pp.geom.n_rows,
+                patch,
+            );
+            let phase = &mut phase_area[pp.phase_off..pp.phase_off + pp.phase_len];
+            phase.fill(0.0);
+            gemm::gemm_packed(
+                patch,
+                &pp.packed_kernel,
+                phase,
+                pp.geom.n_rows * pp.geom.n_cols,
+                pp.gemm_k,
+                cout,
+            );
+            scatter_rows(
+                out,
+                phase,
+                pp.geom.rp,
+                pp.geom.sp,
+                pp.geom.n_rows,
+                pp.geom.n_cols,
+            );
+        }
+    }
+
+    /// Row-parallel phase-GEMM lane: phases processed one at a time,
+    /// each phase's output rows drained across `workers` pool threads —
+    /// every job im2cols its own patch rows and runs its own
+    /// `n_cols × Cout` GEMM against the shared packed sub-kernel.
+    /// Same 1e-4 equivalence contract as [`run_gemm`](Self::run_gemm)
+    /// (each output element's sum is computed by the same microkernel
+    /// whatever the worker count, so this lane matches `run_gemm`
+    /// bit-for-bit; only the direct reference is tolerance-matched).
+    pub fn run_gemm_par_rows(
+        &self,
+        x: &Feature,
+        scratch: &mut Scratch,
+        out: &mut Feature,
+        workers: usize,
+    ) {
+        let workers = workers.max(1);
+        if workers == 1 {
+            return self.run_gemm(x, scratch, out);
+        }
+        self.check_shapes(x, out);
+        let cin = self.params.cin;
+        let cout = self.params.cout;
+        let buf = scratch.ensure(self.scratch_floats());
+        {
+            let (slab_area, rest) = buf.split_at_mut(self.slab_floats);
+            let (phase_area, patch_area) = rest.split_at_mut(self.phase_floats);
+            for pp in &self.phases {
+                let slab = &mut slab_area[pp.slab_off..pp.slab_off + pp.slab_len];
+                build_slab(x, &pp.geom, slab);
+            }
+            let slab_area: &[f32] = slab_area;
+            let mut rest: &mut [f32] = phase_area;
+            for pp in &self.phases {
+                let (mine, tail) = rest.split_at_mut(pp.phase_len);
+                rest = tail;
+                let sub = &self.seg.subs[pp.geom.sub];
+                let row_len = pp.geom.n_cols * cout;
+                let patch_row_len = pp.geom.n_cols * pp.gemm_k;
+                let jobs: Vec<(usize, &mut [f32], &mut [f32])> = mine
+                    .chunks_mut(row_len)
+                    .zip(patch_area[..pp.patch_len].chunks_mut(patch_row_len))
+                    .enumerate()
+                    .map(|(ri, (row, patch))| (ri, row, patch))
+                    .collect();
+                threadpool::parallel_drain(jobs, workers, |(ri, row, patch)| {
+                    let slab = &slab_area[pp.slab_off..pp.slab_off + pp.slab_len];
+                    gemm::im2col_rows(
+                        slab,
+                        pp.slab_w,
+                        cin,
+                        sub.rows,
+                        sub.cols,
+                        pp.geom.n_cols,
+                        ri,
+                        ri + 1,
+                        patch,
+                    );
+                    row.fill(0.0);
+                    gemm::gemm_packed(
+                        patch,
+                        &pp.packed_kernel,
+                        row,
+                        pp.geom.n_cols,
+                        pp.gemm_k,
+                        cout,
+                    );
+                });
+            }
+        }
+        let phase_area = &buf[self.slab_floats..];
+        for pp in &self.phases {
+            scatter_rows(
+                out,
+                &phase_area[pp.phase_off..pp.phase_off + pp.phase_len],
+                pp.geom.rp,
+                pp.geom.sp,
+                pp.geom.n_rows,
+                pp.geom.n_cols,
+            );
+        }
+    }
+
     /// Execute under an autotuned [`ExecStrategy`]
     /// (`tune::space`, DESIGN.md §Autotuning): dispatches to [`run`],
-    /// [`run_par`] (phase×row axis), [`run_par_rows`], or the
-    /// per-element formulation of Algorithm 2.  Every strategy in the
-    /// search space is bit-identical to [`run`] — same in-range
+    /// [`run_par`] (phase×row axis), [`run_par_rows`], the
+    /// per-element formulation of Algorithm 2, or the planned
+    /// phase-GEMM engine ([`run_gemm`]/[`run_gemm_par_rows`]).  The
+    /// direct strategies are bit-identical to [`run`] — same in-range
     /// contributions accumulated in the same (tap-row, tap-col,
     /// channel) order — which the equivalence property in
-    /// `tests/conv_properties.rs` pins with `==`; the tuner can change
-    /// speed only, never output bits.
+    /// `tests/conv_properties.rs` pins with `==`; the
+    /// [`Formulation::PhaseGemm`] strategies reassociate f32 sums
+    /// through the register tile and are pinned within 1e-4 instead.
     pub fn run_with(
         &self,
         strategy: &ExecStrategy,
@@ -354,6 +550,13 @@ impl ConvTransposePlan {
                         ParAxis::PhaseRows => self.run_par(x, scratch, out, strategy.workers),
                         ParAxis::Rows => self.run_par_rows(x, scratch, out, strategy.workers),
                     }
+                }
+            }
+            Formulation::PhaseGemm => {
+                if strategy.workers <= 1 {
+                    self.run_gemm(x, scratch, out);
+                } else {
+                    self.run_gemm_par_rows(x, scratch, out, strategy.workers);
                 }
             }
             Formulation::PerElement => {
@@ -479,19 +682,40 @@ mod tests {
         let mut rng = Rng::seeded(46);
         let k = Kernel::random(5, 3, 2, &mut rng);
         let plan = ConvTransposePlan::new(ConvTransposeParams::new(4, 5, 2, 3, 2), &k);
-        // Fig. 5 geometry: slabs + phase outputs, nothing else.
-        let by_hand: usize = unified::phase_geometries(4, 5, 2)
+        // Fig. 5 geometry: slabs + phase outputs for the direct paths,
+        // plus the largest phase's im2col patch matrix for the GEMM
+        // formulation — nothing else.
+        let seg = segregate(&k);
+        let geoms = unified::phase_geometries(4, 5, 2);
+        let by_hand_direct: usize = geoms
             .iter()
             .map(|g| (g.rows.1 - g.rows.0) * (g.cols.1 - g.cols.0) * 3 + g.n_rows * g.n_cols * 2)
             .sum();
-        assert_eq!(plan.scratch_floats(), by_hand);
-        assert_eq!(plan.scratch_bytes(), 4 * by_hand);
-        // A cold arena grows to exactly the plan's requirement.
+        let by_hand_patch: usize = geoms
+            .iter()
+            .map(|g| {
+                let s = &seg.subs[g.sub];
+                g.n_rows * g.n_cols * s.rows * s.cols * 3
+            })
+            .max()
+            .unwrap();
+        assert_eq!(plan.scratch_floats_direct(), by_hand_direct);
+        assert_eq!(plan.scratch_floats(), by_hand_direct + by_hand_patch);
+        assert_eq!(plan.scratch_bytes(), 4 * (by_hand_direct + by_hand_patch));
+        // A cold arena grows to exactly the direct requirement on the
+        // direct path — GEMM-free users never pay for the patch area —
         let x = Feature::random(4, 4, 3, &mut rng);
         let mut scratch = Scratch::new();
         let mut out = plan.new_output();
         plan.run(&x, &mut scratch, &mut out);
+        assert_eq!(scratch.capacity_floats(), plan.scratch_floats_direct());
+        // — and to exactly the full requirement once the GEMM lane runs.
+        plan.run_gemm(&x, &mut scratch, &mut out);
         assert_eq!(scratch.capacity_floats(), plan.scratch_floats());
+        // A for_plan arena covers every strategy from call one.
+        let mut full = Scratch::for_plan(&plan);
+        plan.run_gemm(&x, &mut full, &mut out);
+        assert_eq!(full.capacity_floats(), plan.scratch_floats());
     }
 
     #[test]
@@ -567,11 +791,13 @@ mod tests {
     }
 
     #[test]
-    fn run_with_every_strategy_bit_identical() {
+    fn run_with_every_strategy_matches_reference() {
         // The whole autotuner search space, on an odd-output (Fig. 5/6)
         // and an even-output (GAN block) shape, against dirty output
-        // buffers — every strategy must reproduce the planned serial
-        // reference exactly and overwrite every output element.
+        // buffers — every direct strategy must reproduce the planned
+        // serial reference exactly; the GEMM formulation within 1e-4
+        // (f32 reassociation through the register tile) — and all must
+        // overwrite every output element.
         let mut rng = Rng::seeded(51);
         for (n_in, nk, p, cin, cout) in [(4, 5, 2, 3, 2), (4, 4, 2, 3, 2)] {
             let x = Feature::random(n_in, n_in, cin, &mut rng);
@@ -585,7 +811,50 @@ mod tests {
                 let mut got = plan.new_output();
                 got.data.fill(f32::NAN);
                 plan.run_with(&s, &x, &mut scratch, &mut got);
-                assert_eq!(got, want, "{} diverged (n={n_in} k={nk} p={p})", s.name());
+                if s.formulation == Formulation::PhaseGemm {
+                    assert!(got.data.iter().all(|v| !v.is_nan()), "{} left NaNs", s.name());
+                    assert!(
+                        ops::max_abs_diff(&got, &want) < 1e-4,
+                        "{} diverged (n={n_in} k={nk} p={p})",
+                        s.name()
+                    );
+                } else {
+                    assert_eq!(got, want, "{} diverged (n={n_in} k={nk} p={p})", s.name());
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn gemm_lanes_match_direct_across_couts() {
+        // The register tile is MR×NR — Cout values off the NR multiple
+        // (1, 3, 17) exercise the ragged-edge path; 8 hits it exactly.
+        let mut rng = Rng::seeded(53);
+        for cout in [1usize, 3, 8, 17] {
+            for (n_in, nk, p) in [(4, 5, 2), (6, 4, 2), (5, 3, 1), (3, 4, 3)] {
+                let x = Feature::random(n_in, n_in, 3, &mut rng);
+                let k = Kernel::random(nk, 3, cout, &mut rng);
+                let plan =
+                    ConvTransposePlan::new(ConvTransposeParams::new(n_in, nk, p, 3, cout), &k);
+                let mut scratch = Scratch::for_plan(&plan);
+                let mut want = plan.new_output();
+                plan.run(&x, &mut scratch, &mut want);
+                let mut got = plan.new_output();
+                got.data.fill(f32::NAN);
+                plan.run_gemm(&x, &mut scratch, &mut got);
+                assert!(
+                    ops::max_abs_diff(&got, &want) < 1e-4,
+                    "run_gemm (cout={cout} n={n_in} k={nk} p={p})"
+                );
+                for workers in [2, 3, 8] {
+                    let mut par = plan.new_output();
+                    par.data.fill(f32::NAN);
+                    plan.run_gemm_par_rows(&x, &mut scratch, &mut par, workers);
+                    assert_eq!(
+                        par, got,
+                        "row-parallel GEMM ({workers}) != serial GEMM (cout={cout})"
+                    );
+                }
             }
         }
     }

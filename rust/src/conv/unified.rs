@@ -145,8 +145,11 @@ fn scatter_phase(out: &mut Feature, phase: &Feature, rp: usize, sp: usize) {
 }
 
 /// Scatter an `n_rows × n_cols × C` phase buffer into the output
-/// positions of parity `(rp, sp)` — the raw-slice form used by both the
-/// one-shot path above and the plan/execute path (`conv::plan`).
+/// positions of parity `(rp, sp)` — the raw-slice form used by the
+/// one-shot path above, the plan/execute path (`conv::plan`, direct
+/// and phase-GEMM engines alike), and the §5 segregated-GEMM ablation
+/// (`conv::im2col`), which interleaves whatever phases exist through
+/// it (degenerate 1×1 outputs have fewer than four).
 pub(crate) fn scatter_rows(
     out: &mut Feature,
     phase: &[f32],

@@ -100,10 +100,14 @@ impl RustBackend {
     /// machine pays the search once — and pin the winners on the
     /// generator.  The pinned strategies drive the unified planned
     /// path for every request (including the batch-worker lane, whose
-    /// latent fan-out composes on top); they are bit-identical to the
-    /// untuned execution, so tuning can never change served bits.
-    /// Cache I/O problems are downgraded to warnings: serving must
-    /// come up even on a read-only filesystem.
+    /// latent fan-out composes on top).  The direct strategies are
+    /// bit-identical to the untuned execution; a
+    /// [`PhaseGemm`](crate::tune::Formulation::PhaseGemm) verdict runs
+    /// the planned packed-GEMM engine, equivalent within 1e-4 (f32
+    /// reassociation — DESIGN.md §GEMM-Execution), so tuning can never
+    /// change served results beyond that tolerance.  Cache I/O
+    /// problems are downgraded to warnings: serving must come up even
+    /// on a read-only filesystem.
     pub fn with_autotune(self, cache_path: Option<&Path>) -> Self {
         self.with_autotune_tuner(cache_path, &Tuner::new(threadpool::default_parallelism()))
     }
@@ -297,8 +301,8 @@ mod tests {
     }
 
     #[test]
-    fn autotuned_backend_serves_identical_bits() {
-        use crate::tune::MeasureBudget;
+    fn autotuned_backend_serves_equivalent_results() {
+        use crate::tune::{Formulation, MeasureBudget};
         let baseline = tiny_backend(Algorithm::Unified);
         let latents: Vec<Vec<f32>> = (0..3)
             .map(|i| vec![0.07 * (i + 1) as f32; baseline.z_dim()])
@@ -308,8 +312,24 @@ mod tests {
         let tuned = tiny_backend(Algorithm::Unified)
             .with_autotune_tuner(None, &tuner)
             .with_batch_workers(2);
-        assert!(tuned.generator.strategies().iter().all(Option::is_some));
-        assert_eq!(tuned.generate(&latents), want, "autotune changed output bits");
+        let pinned = tuned.generator.strategies();
+        assert!(pinned.iter().all(Option::is_some));
+        let got = tuned.generate(&latents);
+        // Direct verdicts are bit-identical; a PhaseGemm verdict is
+        // allowed the 1e-4 reassociation tolerance (ISSUE 4).
+        if pinned
+            .iter()
+            .all(|s| s.unwrap().formulation != Formulation::PhaseGemm)
+        {
+            assert_eq!(got, want, "direct autotune verdicts changed output bits");
+        } else {
+            for (g, w) in got.iter().zip(&want) {
+                assert!(
+                    crate::tensor::ops::max_abs_diff(g, w) < 1e-4,
+                    "autotune changed output beyond the GEMM tolerance"
+                );
+            }
+        }
     }
 
     #[test]

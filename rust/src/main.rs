@@ -128,7 +128,8 @@ fn dispatch(sub: &str, rest: &[String]) -> anyhow::Result<()> {
             .opt("warmup", "warmup iterations per candidate", Some("1"))
             .opt("max-iters", "recorded iterations per candidate", Some("25"))
             .opt("min-time-ms", "min recorded milliseconds per candidate", Some("20"))
-            .flag("no-cache", "tune in memory only (neither load nor persist)");
+            .flag("no-cache", "tune in memory only (neither load nor persist)")
+            .flag("no-prune", "measure every candidate (no probe pruning)");
             let a = cmd.parse(rest)?;
             tune(&a)
         }
@@ -212,6 +213,9 @@ fn tune(a: &Args) -> anyhow::Result<()> {
     let mut rng = Rng::seeded(0x7E4E);
     let generator = Generator::random(model, &mut rng);
     let mut measurer = WallClockMeasurer::new(budget);
+    if a.has_flag("no-prune") {
+        measurer = measurer.without_pruning();
+    }
     let mut rows = Vec::new();
     for (i, lw) in generator.layers.iter().enumerate() {
         let tuned = tuner.tune_layer_cached(&lw.plan, &mut tuning_cache, &mut measurer);

@@ -95,6 +95,18 @@ impl LayerWeights {
     pub fn apply_unplanned(&self, x: &Feature, alg: Algorithm, lane: Lane) -> Feature {
         run_seg(alg, lane, x, &self.kernel, self.seg(), self.spec.padding)
     }
+
+    /// Scratch floats this layer's execution actually needs: the full
+    /// GEMM-inclusive requirement when a PhaseGemm strategy is pinned,
+    /// the direct requirement otherwise (lane-driven dispatch only
+    /// ever runs the direct paths) — so direct-only serving never
+    /// pays for the im2col patch region.
+    pub fn scratch_floats(&self) -> usize {
+        match &self.strategy {
+            Some(s) => self.plan.scratch_floats_for(s),
+            None => self.plan.scratch_floats_direct(),
+        }
+    }
 }
 
 /// A generator with materialized weights.
@@ -196,16 +208,21 @@ impl Generator {
         self.layers.iter().map(|l| l.strategy).collect()
     }
 
-    /// Arena sized for the largest layer of this generator.
+    /// Arena sized for the largest layer of this generator, honoring
+    /// each layer's pinned strategy: only layers pinned to the
+    /// PhaseGemm formulation claim the im2col patch region, so
+    /// direct-only generators stay at the direct sizing.  (The arena
+    /// still grows on demand if strategies are re-pinned afterwards.)
     pub fn scratch(&self) -> Scratch {
-        Scratch::for_plans(self.layers.iter().map(|l| &l.plan))
+        Scratch::with_floats(self.max_scratch_floats())
     }
 
-    /// Exact per-arena float requirement (max over the layer plans).
+    /// Exact per-arena float requirement (max over the layers, per
+    /// pinned strategy).
     pub fn max_scratch_floats(&self) -> usize {
         self.layers
             .iter()
-            .map(|l| l.plan.scratch_floats())
+            .map(LayerWeights::scratch_floats)
             .max()
             .unwrap_or(0)
     }
@@ -406,6 +423,61 @@ mod tests {
         g.clear_strategies();
         assert!(g.strategies().iter().all(Option::is_none));
         assert_eq!(g.forward(&z, Algorithm::Unified, Lane::Serial), want);
+    }
+
+    #[test]
+    fn arena_sizing_tracks_pinned_strategies() {
+        // Direct-only generators must not pay for the GEMM patch
+        // region; pinning a PhaseGemm strategy grows the requirement
+        // to that layer's full figure, and clearing restores it.
+        use crate::tune::space::ExecStrategy;
+        let mut g = tiny_generator();
+        let direct = g.max_scratch_floats();
+        assert_eq!(
+            direct,
+            g.layers
+                .iter()
+                .map(|l| l.plan.scratch_floats_direct())
+                .max()
+                .unwrap()
+        );
+        g.set_strategies(&[ExecStrategy::serial_gemm(), ExecStrategy::serial()]);
+        let with_gemm = g.max_scratch_floats();
+        assert_eq!(
+            with_gemm,
+            g.layers[0]
+                .plan
+                .scratch_floats()
+                .max(g.layers[1].plan.scratch_floats_direct())
+        );
+        assert!(with_gemm >= direct);
+        assert_eq!(g.scratch().capacity_floats(), with_gemm);
+        g.clear_strategies();
+        assert_eq!(g.max_scratch_floats(), direct);
+    }
+
+    #[test]
+    fn pinned_gemm_strategy_matches_within_tolerance() {
+        // A tuner verdict may pin the PhaseGemm formulation on a layer
+        // (ISSUE 4): the forward pass must match the direct reference
+        // within the 1e-4 reassociation tolerance — serial and
+        // row-parallel GEMM lanes alike.
+        use crate::tune::space::ExecStrategy;
+        let mut g = tiny_generator();
+        let z = vec![0.12; g.model.z_dim()];
+        let want = g.forward(&z, Algorithm::Unified, Lane::Serial);
+        for pins in [
+            [ExecStrategy::serial_gemm(), ExecStrategy::serial_gemm()],
+            [ExecStrategy::gemm_parallel(3), ExecStrategy::serial()],
+        ] {
+            g.set_strategies(&pins);
+            let got = g.forward(&z, Algorithm::Unified, Lane::Serial);
+            assert!(
+                max_abs_diff(&got, &want) < 1e-4,
+                "pinned GEMM strategies diverged"
+            );
+        }
+        g.clear_strategies();
     }
 
     #[test]

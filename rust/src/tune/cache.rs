@@ -9,10 +9,21 @@
 //!
 //! ```json
 //! {"entries":{"n4k4p2ci512co256@cpu8w8":
-//!     {"seconds":0.0012,
+//!     {"candidates":[
+//!        {"seconds":0.0015,
+//!         "strategy":{"axis":"phase-rows","formulation":"phase","workers":1}},
+//!        {"seconds":null,
+//!         "strategy":{"axis":"phase-rows","formulation":"phase-gemm","workers":1}}],
+//!      "seconds":0.0012,
 //!      "strategy":{"axis":"rows","formulation":"phase","workers":4}}},
 //!  "version":1}
 //! ```
+//!
+//! `candidates` records the full per-strategy measurement trace of the
+//! search that produced the verdict (`seconds: null` = pruned by the
+//! probe) — the CI smoke run asserts the searched space really
+//! contained a measured `phase-gemm` candidate.  The field is optional
+//! on load, so version-1 caches written before it exist keep working.
 
 use std::collections::BTreeMap;
 use std::path::{Path, PathBuf};
@@ -35,11 +46,14 @@ pub fn host_fingerprint() -> String {
 }
 
 /// One cached verdict.
-#[derive(Debug, Clone, Copy, PartialEq)]
+#[derive(Debug, Clone, PartialEq)]
 pub struct CacheEntry {
     pub strategy: ExecStrategy,
     /// Best measured seconds when the verdict was recorded.
     pub seconds: f64,
+    /// The search's per-candidate record (`None` = pruned); empty for
+    /// entries written before the field existed.
+    pub candidates: Vec<(ExecStrategy, Option<f64>)>,
 }
 
 /// The tuning cache: an in-memory map plus an optional backing file.
@@ -88,9 +102,46 @@ impl TuningCache {
             let (Some(strategy), Some(seconds)) = (strategy, seconds) else {
                 anyhow::bail!("tuning cache {}: malformed entry '{key}'", path.display());
             };
-            cache
-                .entries
-                .insert(key.clone(), CacheEntry { strategy, seconds });
+            // Optional measurement trace (absent in caches written
+            // before the field existed); a malformed trace is an error,
+            // not silently dropped data.
+            let mut candidates = Vec::new();
+            match v.get("candidates") {
+                None => {}
+                Some(Json::Arr(items)) => {
+                    for c in items {
+                        let s = c.get("strategy").and_then(ExecStrategy::from_json);
+                        let Some(s) = s else {
+                            anyhow::bail!(
+                                "tuning cache {}: malformed candidate in '{key}'",
+                                path.display()
+                            );
+                        };
+                        let t = match c.get("seconds") {
+                            Some(Json::Null) | None => None,
+                            Some(other) => Some(other.as_f64().ok_or_else(|| {
+                                anyhow::anyhow!(
+                                    "tuning cache {}: non-numeric candidate seconds in '{key}'",
+                                    path.display()
+                                )
+                            })?),
+                        };
+                        candidates.push((s, t));
+                    }
+                }
+                Some(_) => anyhow::bail!(
+                    "tuning cache {}: 'candidates' must be an array in '{key}'",
+                    path.display()
+                ),
+            }
+            cache.entries.insert(
+                key.clone(),
+                CacheEntry {
+                    strategy,
+                    seconds,
+                    candidates,
+                },
+            );
         }
         Ok(cache)
     }
@@ -126,8 +177,27 @@ impl TuningCache {
         strategy: ExecStrategy,
         seconds: f64,
     ) {
-        self.entries
-            .insert(Self::key(params, space_workers), CacheEntry { strategy, seconds });
+        self.put_with_candidates(params, space_workers, strategy, seconds, &[]);
+    }
+
+    /// [`put`](Self::put) carrying the search's full per-candidate
+    /// measurement trace (what `Tuner::tune_layer_cached` records).
+    pub fn put_with_candidates(
+        &mut self,
+        params: &ConvTransposeParams,
+        space_workers: usize,
+        strategy: ExecStrategy,
+        seconds: f64,
+        candidates: &[(ExecStrategy, Option<f64>)],
+    ) {
+        self.entries.insert(
+            Self::key(params, space_workers),
+            CacheEntry {
+                strategy,
+                seconds,
+                candidates: candidates.to_vec(),
+            },
+        );
     }
 
     pub fn len(&self) -> usize {
@@ -150,6 +220,22 @@ impl TuningCache {
             let mut e = BTreeMap::new();
             e.insert("strategy".to_string(), entry.strategy.to_json());
             e.insert("seconds".to_string(), Json::Num(entry.seconds));
+            if !entry.candidates.is_empty() {
+                let items = entry
+                    .candidates
+                    .iter()
+                    .map(|(s, t)| {
+                        let mut c = BTreeMap::new();
+                        c.insert("strategy".to_string(), s.to_json());
+                        c.insert(
+                            "seconds".to_string(),
+                            t.map(Json::Num).unwrap_or(Json::Null),
+                        );
+                        Json::Obj(c)
+                    })
+                    .collect();
+                e.insert("candidates".to_string(), Json::Arr(items));
+            }
             entries.insert(key.clone(), Json::Obj(e));
         }
         let mut doc = BTreeMap::new();
@@ -236,5 +322,32 @@ mod tests {
             Some(ExecStrategy::serial_per_element())
         );
         assert_eq!(hit.get("seconds").and_then(Json::as_f64), Some(7e-4));
+        // put() without a trace writes no candidates field at all.
+        assert!(hit.get("candidates").is_none());
+    }
+
+    #[test]
+    fn candidate_trace_roundtrips_through_file() {
+        let dir = std::env::temp_dir().join(format!("ukstc-cache-cand-{}", std::process::id()));
+        std::fs::create_dir_all(&dir).unwrap();
+        let path = dir.join("cache.json");
+        let trace = vec![
+            (ExecStrategy::serial(), Some(3e-4)),
+            (ExecStrategy::serial_gemm(), Some(1e-4)),
+            (ExecStrategy::per_element_parallel(2), None), // pruned
+        ];
+        let mut cache = TuningCache::backed(&path);
+        cache.put_with_candidates(&params(4), 2, ExecStrategy::serial_gemm(), 1e-4, &trace);
+        cache.save().unwrap();
+        // The on-disk text names the phase-gemm formulation — what the
+        // CI smoke assertion greps for.
+        let text = std::fs::read_to_string(&path).unwrap();
+        assert!(text.contains(r#""formulation":"phase-gemm""#), "{text}");
+        assert!(text.contains("null"), "pruned candidate must persist as null");
+        let reloaded = TuningCache::load(&path).unwrap();
+        let entry = reloaded.get(&params(4), 2).unwrap();
+        assert_eq!(entry.strategy, ExecStrategy::serial_gemm());
+        assert_eq!(entry.candidates, trace);
+        std::fs::remove_file(&path).ok();
     }
 }

@@ -75,10 +75,18 @@ pub trait Measurer {
 /// Wall-clock [`Measurer`]: deterministic random input per layer
 /// shape, warm scratch + output reused across the timed iterations
 /// (the steady-state serving shape the strategies will actually run
-/// in), probe-based pruning.
+/// in), probe-based pruning (optional).
 #[derive(Debug, Clone, Copy)]
 pub struct WallClockMeasurer {
     pub budget: MeasureBudget,
+    /// Probe-prune candidates [`PRUNE_FACTOR`]× slower than the
+    /// incumbent (the default).  Disabled by
+    /// [`without_pruning`](Self::without_pruning) when every candidate
+    /// must end up with a real measurement — e.g. the CI smoke run,
+    /// which asserts the persisted trace contains a *measured*
+    /// phase-gemm candidate and must not depend on one noisy probe
+    /// sample.
+    pub prune: bool,
 }
 
 impl WallClockMeasurer {
@@ -88,7 +96,13 @@ impl WallClockMeasurer {
         // candidate for one-time thread startup that steady-state
         // serving never pays.
         crate::util::threadpool::shared_pool();
-        WallClockMeasurer { budget }
+        WallClockMeasurer { budget, prune: true }
+    }
+
+    /// Measure every candidate to completion — no probe pruning.
+    pub fn without_pruning(mut self) -> WallClockMeasurer {
+        self.prune = false;
+        self
     }
 }
 
@@ -118,9 +132,11 @@ impl Measurer for WallClockMeasurer {
             plan.run_with(strategy, &x, &mut scratch, &mut out);
             out.data[0]
         });
-        if let Some(best) = incumbent {
-            if probe > PRUNE_FACTOR * best {
-                return None;
+        if self.prune {
+            if let Some(best) = incumbent {
+                if probe > PRUNE_FACTOR * best {
+                    return None;
+                }
             }
         }
         let b = self.budget;
@@ -169,6 +185,17 @@ mod tests {
         let mut m = WallClockMeasurer::new(MeasureBudget::quick());
         let t = m.time_strategy(&plan, &ExecStrategy::serial_per_element(), Some(1e-15));
         assert_eq!(t, None);
+    }
+
+    #[test]
+    fn without_pruning_measures_hopeless_candidates() {
+        // The CI smoke run relies on this: with pruning off, even a
+        // candidate that would lose the probe by far gets a real
+        // measurement.
+        let plan = plan();
+        let mut m = WallClockMeasurer::new(MeasureBudget::quick()).without_pruning();
+        let t = m.time_strategy(&plan, &ExecStrategy::serial_per_element(), Some(1e-15));
+        assert!(t.is_some());
     }
 
     #[test]

@@ -10,9 +10,9 @@
 //! one layer shape at a time, and remembers the verdicts:
 //!
 //! * [`space`] — [`ExecStrategy`]: formulation (phase-decomposed vs
-//!   per-element) × lane (serial vs parallel worker count) × parallel
-//!   axis (phase×row queue vs per-phase rows), and the
-//!   [`search_space`] enumeration
+//!   per-element vs planned phase-GEMM) × lane (serial vs parallel
+//!   worker count) × parallel axis (phase×row queue vs per-phase
+//!   rows), and the [`search_space`] enumeration
 //! * [`measure`] — warmup + adaptive trials per candidate
 //!   (`util::timing::measure_for`) with probe-based early pruning of
 //!   candidates already 2× slower than the incumbent
@@ -24,9 +24,11 @@
 //! [`ConvTransposePlan::run_with`](crate::conv::plan::ConvTransposePlan::run_with)
 //! dispatches a strategy, `models::forward::LayerWeights` pins one per
 //! layer, and `RustBackend::with_autotune` tunes a whole generator at
-//! construction.  Every strategy is bit-identical to the planned
-//! serial reference (pinned by `tests/conv_properties.rs`), so tuning
-//! can change throughput only — never output bits.
+//! construction.  The direct strategies are bit-identical to the
+//! planned serial reference; the [`Formulation::PhaseGemm`] strategies
+//! run the packed-GEMM engine and match within 1e-4 (both pinned by
+//! `tests/conv_properties.rs`), so tuning can change throughput only —
+//! never results beyond the f32 reassociation tolerance.
 
 pub mod cache;
 pub mod measure;

@@ -5,11 +5,15 @@
 //! lane adds a worker count and a split axis on top.  An
 //! [`ExecStrategy`] names one point of that space, and
 //! [`search_space`] enumerates every point the tuner considers for a
-//! machine with a given parallelism bound.  Every point is
-//! bit-identical to the planned serial reference
+//! machine with a given parallelism bound.  The direct formulations
+//! are bit-identical to the planned serial reference
 //! ([`ConvTransposePlan::run`](crate::conv::plan::ConvTransposePlan::run))
-//! — pinned by the equivalence property in `tests/conv_properties.rs` —
-//! so the tuner can only ever change *speed*, never output bits.
+//! — pinned with `==` by the equivalence property in
+//! `tests/conv_properties.rs`; the [`PhaseGemm`](Formulation::PhaseGemm)
+//! formulation reorders f32 accumulation through the tiled microkernel
+//! and is pinned to the same reference within 1e-4 (DESIGN.md
+//! §GEMM-Execution), so the tuner changes *speed*, never results
+//! beyond that reassociation tolerance.
 
 use std::collections::BTreeMap;
 
@@ -24,6 +28,12 @@ pub enum Formulation {
     /// Literal Algorithm 2: runtime sub-kernel pick per output element
     /// (the paper's CUDA shape).
     PerElement,
+    /// §5 phase GEMMs through the planned packed operands and the
+    /// tiled microkernel (`conv::gemm`): per phase, im2col the slab
+    /// into the scratch patch matrix and multiply by the
+    /// plan-time-packed sub-kernel.  Equivalent to the reference
+    /// within 1e-4 (f32 reassociation), not bit-identical.
+    PhaseGemm,
 }
 
 impl Formulation {
@@ -31,6 +41,7 @@ impl Formulation {
         match self {
             Formulation::PhaseDecomposed => "phase",
             Formulation::PerElement => "per-element",
+            Formulation::PhaseGemm => "phase-gemm",
         }
     }
 
@@ -38,6 +49,7 @@ impl Formulation {
         match name {
             "phase" => Some(Formulation::PhaseDecomposed),
             "per-element" => Some(Formulation::PerElement),
+            "phase-gemm" => Some(Formulation::PhaseGemm),
             _ => None,
         }
     }
@@ -127,6 +139,27 @@ impl ExecStrategy {
         }
     }
 
+    /// Serial phase-GEMM lane (planned packed operands + tiled
+    /// microkernel).
+    pub fn serial_gemm() -> ExecStrategy {
+        ExecStrategy {
+            formulation: Formulation::PhaseGemm,
+            workers: 1,
+            axis: ParAxis::PhaseRows,
+        }
+    }
+
+    /// Row-parallel phase-GEMM lane over `workers` threads (the GEMM
+    /// formulation always splits by output rows within a phase, so the
+    /// axis is normalized like the per-element lane's).
+    pub fn gemm_parallel(workers: usize) -> ExecStrategy {
+        ExecStrategy {
+            formulation: Formulation::PhaseGemm,
+            workers: workers.max(1),
+            axis: ParAxis::PhaseRows,
+        }
+    }
+
     pub fn is_serial(&self) -> bool {
         self.workers == 1
     }
@@ -136,6 +169,7 @@ impl ExecStrategy {
         match (self.formulation, self.workers) {
             (f, 1) => format!("{}/serial", f.name()),
             (Formulation::PerElement, w) => format!("per-element/par{w}"),
+            (Formulation::PhaseGemm, w) => format!("phase-gemm/par{w}"),
             (Formulation::PhaseDecomposed, w) => {
                 format!("phase/par{w}/{}", self.axis.name())
             }
@@ -165,6 +199,7 @@ impl ExecStrategy {
         Some(match formulation {
             Formulation::PhaseDecomposed => ExecStrategy::parallel(workers, axis),
             Formulation::PerElement => ExecStrategy::per_element_parallel(workers),
+            Formulation::PhaseGemm => ExecStrategy::gemm_parallel(workers),
         })
     }
 }
@@ -185,14 +220,20 @@ fn worker_counts(max_workers: usize) -> Vec<usize> {
 }
 
 /// The full search space for a machine with `max_workers` usable
-/// threads: both formulations serial, then every candidate worker
-/// count × axis.  [`ExecStrategy::serial`] is always element zero.
+/// threads: all three formulations serial, then every candidate
+/// worker count × lane (two phase-decomposed axes, per-element rows,
+/// phase-GEMM rows).  [`ExecStrategy::serial`] is always element zero.
 pub fn search_space(max_workers: usize) -> Vec<ExecStrategy> {
-    let mut out = vec![ExecStrategy::serial(), ExecStrategy::serial_per_element()];
+    let mut out = vec![
+        ExecStrategy::serial(),
+        ExecStrategy::serial_per_element(),
+        ExecStrategy::serial_gemm(),
+    ];
     for w in worker_counts(max_workers) {
         out.push(ExecStrategy::parallel(w, ParAxis::PhaseRows));
         out.push(ExecStrategy::parallel(w, ParAxis::Rows));
         out.push(ExecStrategy::per_element_parallel(w));
+        out.push(ExecStrategy::gemm_parallel(w));
     }
     out
 }
@@ -210,11 +251,21 @@ mod tests {
 
     #[test]
     fn space_sizes() {
-        // max 1 → only the two serial lanes; each worker count adds 3.
-        assert_eq!(search_space(1).len(), 2);
-        assert_eq!(search_space(2).len(), 2 + 3); // w ∈ {2}
-        assert_eq!(search_space(8).len(), 2 + 3 * 3); // w ∈ {2, 4, 8}
+        // max 1 → only the three serial lanes; each worker count adds 4.
+        assert_eq!(search_space(1).len(), 3);
+        assert_eq!(search_space(2).len(), 3 + 4); // w ∈ {2}
+        assert_eq!(search_space(8).len(), 3 + 3 * 4); // w ∈ {2, 4, 8}
         assert_eq!(worker_counts(6), vec![2, 4, 6]);
+    }
+
+    #[test]
+    fn space_includes_gemm_lanes() {
+        // ISSUE 4 acceptance: the search space carries the PhaseGemm
+        // formulation serial AND row-parallel.
+        let space = search_space(4);
+        assert!(space.contains(&ExecStrategy::serial_gemm()));
+        assert!(space.contains(&ExecStrategy::gemm_parallel(2)));
+        assert!(space.contains(&ExecStrategy::gemm_parallel(4)));
     }
 
     #[test]
@@ -234,6 +285,9 @@ mod tests {
             ExecStrategy::serial()
         );
         assert_eq!(ExecStrategy::per_element_parallel(0).workers, 1);
+        assert_eq!(ExecStrategy::gemm_parallel(1), ExecStrategy::serial_gemm());
+        assert_eq!(ExecStrategy::serial_gemm().name(), "phase-gemm/serial");
+        assert_eq!(ExecStrategy::gemm_parallel(4).name(), "phase-gemm/par4");
     }
 
     #[test]

@@ -132,11 +132,12 @@ impl Tuner {
             };
         }
         let tuned = self.tune_layer(plan, measurer);
-        cache.put(
+        cache.put_with_candidates(
             plan.params(),
             self.space_workers(),
             tuned.strategy,
             tuned.best_seconds,
+            &tuned.candidates,
         );
         tuned
     }

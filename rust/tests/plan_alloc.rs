@@ -2,8 +2,12 @@
 //! (DESIGN.md §Plan-Execute):
 //!
 //! 1. steady-state `ConvTransposePlan::run` performs **zero** heap
-//!    allocations once the scratch arena is at its high-water mark, and
-//! 2. the unplanned unified path's `phase_slab` crops straight into a
+//!    allocations once the scratch arena is at its high-water mark,
+//! 2. the planned phase-GEMM engine (`run_gemm`, DESIGN.md
+//!    §GEMM-Execution) is equally allocation-free in steady state —
+//!    its im2col patch matrix lives in the arena and its packed
+//!    kernel operands live in the plan, and
+//! 3. the unplanned unified path's `phase_slab` crops straight into a
 //!    single fresh slab — the old full-input clone and pad+crop double
 //!    copy stay gone.
 //!
@@ -18,7 +22,8 @@ use ukstc::conv::plan::{ConvTransposePlan, Scratch};
 use ukstc::conv::segregation::segregate;
 use ukstc::conv::unified;
 use ukstc::conv::ConvTransposeParams;
-use ukstc::tensor::{Feature, Kernel};
+use ukstc::tensor::{ops, Feature, Kernel};
+use ukstc::tune::space::ExecStrategy;
 use ukstc::util::rng::Rng;
 
 struct CountingAlloc;
@@ -103,7 +108,35 @@ fn planned_path_is_zero_alloc_after_warmup() {
         assert_eq!(out, &want, "planned result diverged after arena reuse");
     }
 
-    // --- Part 2: the unplanned path's slab construction is single-copy.
+    // --- Part 2: the phase-GEMM engine is zero-alloc in steady state
+    // too (ISSUE 4 acceptance).  One warm-up pass grows the shared
+    // arena to the GEMM high-water mark (its im2col patch region);
+    // after that, im2col + packed GEMM + scatter touch only the arena
+    // and the plan's packed operands.
+    let gemm = ExecStrategy::serial_gemm();
+    for ((x, plan, _), out) in cases.iter().zip(&mut outs) {
+        plan.run_with(&gemm, x, &mut scratch, out);
+    }
+    let before = allocs();
+    for _ in 0..5 {
+        for ((x, plan, _), out) in cases.iter().zip(&mut outs) {
+            plan.run_with(&gemm, x, &mut scratch, out);
+        }
+    }
+    assert_eq!(
+        allocs(),
+        before,
+        "run_gemm heap-allocated in steady state (warm arena)"
+    );
+    for ((x, plan, _), out) in cases.iter().zip(&outs) {
+        let want = unified::transpose_conv_seg(x, plan.seg(), 2);
+        assert!(
+            ops::max_abs_diff(out, &want) < 1e-4,
+            "phase-GEMM result diverged after arena reuse"
+        );
+    }
+
+    // --- Part 3: the unplanned path's slab construction is single-copy.
     // With this geometry no phase needs padding, so each phase costs
     // exactly one slab + one phase buffer; plus the output and the
     // geometry Vec that is 2 + 2·phases allocations total.  The old
