@@ -97,7 +97,10 @@ fn main() -> anyhow::Result<()> {
         pct(0.95),
         pct(0.99)
     );
-    println!("mean batch size  : {:.2}", snap.mean_batch_size);
+    println!(
+        "batch size       : mean {:.2}  p50 {:.0}  p95 {:.0}",
+        snap.mean_batch_size, snap.batch_p50, snap.batch_p95
+    );
     println!("rejected         : {}", snap.rejected);
     println!("\nserve OK");
     Ok(())

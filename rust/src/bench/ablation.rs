@@ -21,12 +21,16 @@
 //!    planned correlation path against the packed phase-GEMM engine,
 //!    per Table-4 DC-GAN layer, with achieved GFLOP/s — locating the
 //!    crossover on large-`Cout` layers.
+//! 9. **Fused batch vs per-latent** (DESIGN.md §Batched-Execution):
+//!    the fused batched GEMM lane against a per-latent loop of the
+//!    same engine, per Table-4 layer and batch size — how the
+//!    packed-panel reuse scales with `N`.
 
 use crate::conv::parallel::{run, Algorithm, Lane};
 use crate::conv::plan::{ConvTransposePlan, Scratch};
 use crate::conv::{conventional, dilated, flops, im2col, unified, ConvTransposeParams};
 use crate::models::zoo::GanModel;
-use crate::tensor::{Feature, Kernel};
+use crate::tensor::{Feature, FeatureBatch, Kernel};
 use crate::tune::{ExecStrategy, MeasureBudget, ParAxis, Tuner, WallClockMeasurer};
 use crate::util::rng::Rng;
 use crate::util::timing;
@@ -366,6 +370,99 @@ pub fn print_gemm_crossover(rows: &[GemmCrossRow]) {
     );
 }
 
+/// Ablation 9 (DESIGN.md §Batched-Execution): one row per
+/// `(Table-4 layer, batch size)` — the planned serial phase-GEMM
+/// engine run as a per-latent loop vs the fused batched lane
+/// (`run_gemm_batch`, one stacked GEMM per phase for the whole batch).
+/// Same engine, same packed operands, identical MACs per batch — the
+/// speedup column isolates what streaming each packed B panel once
+/// per batch (instead of once per latent) buys as `N` grows.
+pub struct BatchFusionRow {
+    pub layer: String,
+    pub batch: usize,
+    /// Per-latent loop of `run_gemm` over the batch.
+    pub per_latent: Entry,
+    /// Fused `run_gemm_batch` over the same batch.
+    pub fused: Entry,
+    /// Analytic MACs per batch (shared by both lanes).
+    pub macs: u64,
+}
+
+/// Measure the fused-batch vs per-latent crossover per layer of
+/// `model` at each batch size (the printed ablation uses DC-GAN and
+/// batches 1/4/8; tests use the lighter GP-GAN).
+pub fn batch_fusion(model: GanModel, cfg: &BenchConfig, batches: &[usize]) -> Vec<BatchFusionRow> {
+    let mut rng = Rng::seeded(0xF8);
+    let mut rows = Vec::new();
+    for spec in model.layers() {
+        let k = Kernel::random(spec.ksize, spec.cin, spec.cout, &mut rng);
+        let plan = ConvTransposePlan::new(spec.params(), &k);
+        for &n in batches {
+            let n = n.max(1);
+            let xb = FeatureBatch::random(n, spec.n_in, spec.n_in, spec.cin, &mut rng);
+            let xs: Vec<Feature> = (0..n).map(|i| xb.feature(i)).collect();
+            let macs = n as u64 * flops::unified(plan.params());
+            let mut scratch = Scratch::with_floats(
+                plan.scratch_floats_gemm_batch(n).max(plan.scratch_floats()),
+            );
+            let mut one = plan.new_output();
+            let per_latent = Entry::measure(format!("per-latent b{n}"), cfg, || {
+                for x in &xs {
+                    plan.run_gemm(x, &mut scratch, &mut one);
+                }
+                one.data[0]
+            })
+            .with_macs(macs);
+            let mut outb = plan.new_batch_output(n);
+            let fused = Entry::measure(format!("fused b{n}"), cfg, || {
+                plan.run_gemm_batch(&xb, &mut scratch, &mut outb);
+                outb.data[0]
+            })
+            .with_macs(macs);
+            rows.push(BatchFusionRow {
+                layer: spec.describe(),
+                batch: n,
+                per_latent,
+                fused,
+                macs,
+            });
+        }
+    }
+    rows
+}
+
+/// Print the ablation-9 table (fused batch vs per-latent, per layer ×
+/// batch size).
+pub fn print_batch_fusion(rows: &[BatchFusionRow]) {
+    let table: Vec<Vec<String>> = rows
+        .iter()
+        .map(|r| {
+            vec![
+                r.layer.clone(),
+                r.batch.to_string(),
+                timing::fmt_duration(r.per_latent.seconds),
+                timing::fmt_duration(r.fused.seconds),
+                report::gflops_cell(r.macs, r.per_latent.seconds),
+                report::gflops_cell(r.macs, r.fused.seconds),
+                report::speedup(r.per_latent.seconds / r.fused.seconds),
+            ]
+        })
+        .collect();
+    report::print_table(
+        "Ablation 9 — fused batch vs per-latent (planned phase-GEMM, Table-4 DC-GAN layers)",
+        &[
+            "layer",
+            "batch",
+            "per-latent",
+            "fused",
+            "per-latent GF/s",
+            "fused GF/s",
+            "fused speedup",
+        ],
+        &table,
+    );
+}
+
 /// Print one ablation block: median plus the shared mean/best/p50/p95
 /// latency vocabulary, achieved GFLOP/s where an analytic MAC model
 /// exists, and ratios relative to the first entry.
@@ -417,6 +514,7 @@ pub fn run_all(cfg: &BenchConfig) {
         &autotune(cfg),
     );
     print_gemm_crossover(&gemm_crossover(GanModel::DcGan, cfg));
+    print_batch_fusion(&batch_fusion(GanModel::DcGan, cfg, &[1, 4, 8]));
 }
 
 #[cfg(test)]
@@ -483,6 +581,18 @@ mod tests {
                 },
             ],
         );
+    }
+
+    #[test]
+    fn batch_fusion_covers_layers_and_batches() {
+        let rows = batch_fusion(GanModel::GpGan, &quick(), &[1, 3]);
+        assert_eq!(rows.len(), 2 * GanModel::GpGan.layers().len());
+        for r in &rows {
+            assert!(r.per_latent.seconds > 0.0 && r.fused.seconds > 0.0, "{}", r.layer);
+            assert!(r.batch == 1 || r.batch == 3);
+            assert_eq!(r.fused.macs, Some(r.macs));
+        }
+        print_batch_fusion(&rows);
     }
 
     #[test]

@@ -4,6 +4,11 @@
 //! This is the end-to-end claim check: the kernel-level ~4× FLOP
 //! reduction must translate into service-level throughput/latency wins
 //! when everything above it (router, batcher, workers) is identical.
+//! Since the batched refactor (DESIGN.md §Batched-Execution) the
+//! matrix also A/Bs the **fused batched** forward — one
+//! `forward_batch` per dynamic batch, packed GEMM operands streamed
+//! once per batch — against the historic per-latent loop, the
+//! throughput column the ISSUE-5 acceptance asks for.
 
 use std::sync::Arc;
 use std::time::Duration;
@@ -18,7 +23,7 @@ use crate::util::rng::Rng;
 use crate::workload::generator::burst;
 
 /// Serving scenario knobs.
-#[derive(Debug, Clone, Copy)]
+#[derive(Debug, Clone)]
 pub struct ServingConfig {
     pub model: GanModel,
     pub requests: usize,
@@ -30,6 +35,10 @@ pub struct ServingConfig {
     pub max_batch: usize,
     pub max_delay: Duration,
     pub queue_capacity: usize,
+    /// Tuning-cache path: when set, every backend is autotuned for
+    /// `max_batch` through it (`RustBackend::with_autotune_batch`), so
+    /// `ukstc tune --batch N` verdicts drive the serving runs.
+    pub tune_cache: Option<std::path::PathBuf>,
 }
 
 impl Default for ServingConfig {
@@ -43,6 +52,7 @@ impl Default for ServingConfig {
             max_batch: 8,
             max_delay: Duration::from_millis(3),
             queue_capacity: 512,
+            tune_cache: None,
         }
     }
 }
@@ -53,24 +63,39 @@ pub struct ServingResult {
     pub algorithm: Algorithm,
     /// Whether the backend executed through the AOT plans.
     pub planned: bool,
+    /// Whether batches ran through the fused batched forward (vs the
+    /// per-latent loop).
+    pub fused: bool,
     pub wall_s: f64,
     pub snapshot: Snapshot,
 }
 
 /// Run a closed-loop burst through a coordinator whose backend uses
-/// `alg` (planned execution) for every transpose conv.
+/// `alg` (planned, fused-batch execution) for every transpose conv.
 pub fn run_once(cfg: &ServingConfig, alg: Algorithm) -> anyhow::Result<ServingResult> {
-    run_once_with(cfg, alg, true)
+    run_once_mode(cfg, alg, true, true)
 }
 
 /// [`run_once`] with the planned path switchable — the
-/// planned-vs-unplanned serving ablation lane.  Only the unified
-/// algorithm has a planned path; for every other algorithm the result
-/// is recorded as unplanned regardless of the flag.
+/// planned-vs-unplanned serving ablation lane.
 pub fn run_once_with(
     cfg: &ServingConfig,
     alg: Algorithm,
     planned: bool,
+) -> anyhow::Result<ServingResult> {
+    run_once_mode(cfg, alg, planned, true)
+}
+
+/// [`run_once`] with both the planned path and the fused batched lane
+/// switchable.  Only the unified algorithm has a planned path or a
+/// fused batched forward; for every other algorithm the result is
+/// recorded as unplanned/unfused regardless of the flags, and
+/// `batch_workers > 1` also routes around the fused lane.
+pub fn run_once_mode(
+    cfg: &ServingConfig,
+    alg: Algorithm,
+    planned: bool,
+    fused: bool,
 ) -> anyhow::Result<ServingResult> {
     let planned = planned && alg == Algorithm::Unified;
     let lane = if cfg.lane_workers <= 1 {
@@ -83,6 +108,13 @@ pub fn run_once_with(
     if !planned {
         backend = backend.with_unplanned();
     }
+    if !fused {
+        backend = backend.with_per_latent();
+    }
+    if let Some(path) = &cfg.tune_cache {
+        backend = backend.with_autotune_batch(Some(path.as_path()), cfg.max_batch);
+    }
+    let fused = backend.is_fused_batch();
     let backend = Arc::new(backend);
     let coord = Coordinator::builder()
         .queue_capacity(cfg.queue_capacity)
@@ -109,6 +141,7 @@ pub fn run_once_with(
     Ok(ServingResult {
         algorithm: alg,
         planned,
+        fused,
         wall_s,
         snapshot,
     })
@@ -121,17 +154,19 @@ pub fn run_ab(cfg: &ServingConfig) -> anyhow::Result<(ServingResult, ServingResu
     Ok((unified, conventional))
 }
 
-/// The full serving matrix: unified planned, unified unplanned, and
-/// the conventional baseline — same coordinator, same trace.
+/// The full serving matrix: unified planned fused-batch, unified
+/// planned per-latent, unified unplanned, and the conventional
+/// baseline — same coordinator, same trace.
 pub fn run_matrix(cfg: &ServingConfig) -> anyhow::Result<Vec<ServingResult>> {
     Ok(vec![
-        run_once_with(cfg, Algorithm::Unified, true)?,
-        run_once_with(cfg, Algorithm::Unified, false)?,
-        run_once_with(cfg, Algorithm::Conventional, true)?,
+        run_once_mode(cfg, Algorithm::Unified, true, true)?,
+        run_once_mode(cfg, Algorithm::Unified, true, false)?,
+        run_once_mode(cfg, Algorithm::Unified, false, false)?,
+        run_once_mode(cfg, Algorithm::Conventional, true, false)?,
     ])
 }
 
-/// Print serving results side by side, with a planned column.
+/// Print serving results side by side, with planned and fused columns.
 pub fn print_results(results: &[ServingResult]) {
     use super::report;
     let rows: Vec<Vec<String>> = results
@@ -140,11 +175,15 @@ pub fn print_results(results: &[ServingResult]) {
             vec![
                 r.algorithm.name().to_string(),
                 if r.planned { "yes" } else { "no" }.to_string(),
+                if r.fused { "fused" } else { "per-latent" }.to_string(),
                 format!("{:.3}", r.wall_s),
                 format!("{:.2}", r.snapshot.completed as f64 / r.wall_s),
                 format!("{:.1}", r.snapshot.total_p50_s * 1e3),
                 format!("{:.1}", r.snapshot.total_p95_s * 1e3),
-                format!("{:.2}", r.snapshot.mean_batch_size),
+                format!(
+                    "{:.2}/{:.0}/{:.0}",
+                    r.snapshot.mean_batch_size, r.snapshot.batch_p50, r.snapshot.batch_p95
+                ),
             ]
         })
         .collect();
@@ -153,30 +192,39 @@ pub fn print_results(results: &[ServingResult]) {
         &[
             "backend kernel",
             "planned",
+            "batch lane",
             "wall (s)",
             "thpt (img/s)",
             "p50 (ms)",
             "p95 (ms)",
-            "mean batch",
+            "batch mean/p50/p95",
         ],
         &rows,
     );
-    let find = |alg: Algorithm, planned: bool| {
+    let find = |alg: Algorithm, planned: bool, fused: bool| {
         results
             .iter()
-            .find(|r| r.algorithm == alg && r.planned == planned)
+            .find(|r| r.algorithm == alg && r.planned == planned && r.fused == fused)
     };
-    let unified_planned = find(Algorithm::Unified, true);
-    if let (Some(u), Some(c)) = (unified_planned, find(Algorithm::Conventional, false)) {
+    let fused_batch = find(Algorithm::Unified, true, true);
+    let per_latent = find(Algorithm::Unified, true, false);
+    let unified_planned = fused_batch.or(per_latent);
+    if let (Some(u), Some(c)) = (unified_planned, find(Algorithm::Conventional, false, false)) {
         println!(
             "\nend-to-end speedup (unified vs conventional): {:.3}×",
             c.wall_s / u.wall_s
         );
     }
-    if let (Some(p), Some(n)) = (unified_planned, find(Algorithm::Unified, false)) {
+    if let (Some(p), Some(n)) = (unified_planned, find(Algorithm::Unified, false, false)) {
         println!(
             "end-to-end speedup (planned vs unplanned unified): {:.3}×",
             n.wall_s / p.wall_s
+        );
+    }
+    if let (Some(f), Some(l)) = (fused_batch, per_latent) {
+        println!(
+            "end-to-end speedup (fused batch vs per-latent): {:.3}×",
+            l.wall_s / f.wall_s
         );
     }
 }
@@ -197,8 +245,32 @@ mod tests {
         let planned = run_once_with(&cfg, Algorithm::Unified, true).unwrap();
         let unplanned = run_once_with(&cfg, Algorithm::Unified, false).unwrap();
         assert!(planned.planned && !unplanned.planned);
+        // batch_workers 2 routes around the fused lane.
+        assert!(!planned.fused && !unplanned.fused);
         assert_eq!(planned.snapshot.completed, 4);
         assert_eq!(unplanned.snapshot.completed, 4);
+    }
+
+    #[test]
+    fn serving_matrix_exercises_fused_batched_lane() {
+        let cfg = ServingConfig {
+            requests: 6,
+            workers_per_model: 1,
+            lane_workers: 1,
+            ..Default::default()
+        };
+        let results = run_matrix(&cfg).unwrap();
+        assert_eq!(results.len(), 4);
+        let fused: Vec<_> = results.iter().filter(|r| r.fused).collect();
+        assert_eq!(fused.len(), 1, "exactly one fused-batch row");
+        assert!(fused[0].planned && fused[0].algorithm == Algorithm::Unified);
+        for r in &results {
+            assert_eq!(r.snapshot.completed, 6);
+        }
+        // The fused run recorded a batch-size distribution.
+        assert!(fused[0].snapshot.batches >= 1);
+        assert!(fused[0].snapshot.batch_p95 >= 1.0);
+        print_results(&results);
     }
 
     #[test]

@@ -12,6 +12,8 @@
 //!   `[(2N−1+2P)² − (N+2⌊P/2⌋)²] · C · 4` bytes.
 //!   Verified: N=224, P=2, C=3 → `1,827,900 B = 1.8279 MB` (decimal) ✓.
 
+use super::gemm::packed_b_floats;
+use super::unified::phase_geometries;
 use super::ConvTransposeParams;
 
 const F32: usize = std::mem::size_of::<f32>(); // 4
@@ -96,6 +98,115 @@ pub fn footprint_grouped(p: &ConvTransposeParams) -> LayerFootprint {
     f
 }
 
+/// Exact working-set accounting of the **planned** execution engines
+/// (DESIGN.md §Plan-Execute / §GEMM-Execution / §Batched-Execution).
+///
+/// [`footprint_unified`] above reproduces the *paper's* analytic claim
+/// and deliberately stays verbatim — but as implemented since PR 4 the
+/// planned engines hold more than the padded input: the direct arena
+/// (slabs + phase outputs), the GEMM formulation's im2col patch
+/// region, and the plan-resident packed B operands.  This struct
+/// derives all of them from geometry alone (no plan construction, so
+/// `ukstc info` can report EB-GAN-sized layers without allocating
+/// hundreds of MB), and `conv::plan` unit tests pin it float-for-float
+/// to the real plan's sizing.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct PlannedScratch {
+    /// Slab area floats (sum over phases) — one image.
+    pub slab_floats: usize,
+    /// Phase-output area floats (sum over phases) — one image.
+    pub phase_floats: usize,
+    /// Largest single phase output (the batched GEMM lanes stack `N ×`
+    /// this instead of `N ×` the sum).
+    pub max_phase_floats: usize,
+    /// Shared im2col patch region (max over phases) — one image.
+    pub patch_floats: usize,
+    /// Plan-resident packed GEMM operands (not arena scratch, but very
+    /// much resident memory the old accounting ignored).
+    pub packed_kernel_floats: usize,
+}
+
+impl PlannedScratch {
+    /// Direct-path arena floats (`ConvTransposePlan::scratch_floats_direct`).
+    pub fn direct_floats(&self) -> usize {
+        self.slab_floats + self.phase_floats
+    }
+
+    /// Single-image GEMM arena floats (`ConvTransposePlan::scratch_floats`).
+    pub fn gemm_floats(&self) -> usize {
+        self.direct_floats() + self.patch_floats
+    }
+
+    /// Fused batched GEMM arena floats at batch `n`
+    /// (`ConvTransposePlan::scratch_floats_gemm_batch`).
+    pub fn gemm_batch_floats(&self, n: usize) -> usize {
+        self.slab_floats + n * (self.max_phase_floats + self.patch_floats)
+    }
+
+    /// Image-parallel batched direct arena floats at batch `n`
+    /// (`ConvTransposePlan::scratch_floats_batch_par`).
+    pub fn batch_par_floats(&self, n: usize) -> usize {
+        n.max(1) * self.direct_floats()
+    }
+
+    /// Per-batch peak arena floats: the worst any fused batched lane
+    /// demands at batch `n`.
+    pub fn peak_batch_floats(&self, n: usize) -> usize {
+        self.gemm_batch_floats(n).max(self.batch_par_floats(n))
+    }
+
+    /// Per-batch peak scratch **bytes**, packed operands included —
+    /// the honest Table-5-style resident figure for one planned layer
+    /// serving batches of `n`.
+    pub fn peak_batch_bytes(&self, n: usize) -> usize {
+        (self.peak_batch_floats(n) + self.packed_kernel_floats) * F32
+    }
+}
+
+/// Derive the planned engines' working set from layer geometry alone.
+pub fn planned_scratch(p: &ConvTransposeParams) -> PlannedScratch {
+    let mut s = PlannedScratch {
+        slab_floats: 0,
+        phase_floats: 0,
+        max_phase_floats: 0,
+        patch_floats: 0,
+        packed_kernel_floats: 0,
+    };
+    for g in phase_geometries(p.n_in, p.n_k, p.padding) {
+        let slab_h = g.rows.1 - g.rows.0;
+        let slab_w = g.cols.1 - g.cols.0;
+        // The slab is the phase output extent dilated by the sub-kernel
+        // (VALID correlation), so the sub-kernel dims fall out of it.
+        let kr = slab_h + 1 - g.n_rows;
+        let kc = slab_w + 1 - g.n_cols;
+        let phase = g.n_rows * g.n_cols * p.cout;
+        let k = kr * kc * p.cin;
+        s.slab_floats += slab_h * slab_w * p.cin;
+        s.phase_floats += phase;
+        s.max_phase_floats = s.max_phase_floats.max(phase);
+        s.patch_floats = s.patch_floats.max(g.n_rows * g.n_cols * k);
+        s.packed_kernel_floats += packed_b_floats(k, p.cout);
+    }
+    s
+}
+
+/// Measured-engine footprint of one planned layer at serving batch
+/// `batch`: inputs/outputs are batched, the intermediate is the
+/// per-batch peak arena, and the kernel figure includes the packed
+/// GEMM operands the plan keeps resident — everything the PR-4-era
+/// accounting under-counted.
+pub fn footprint_planned(p: &ConvTransposeParams, batch: usize) -> LayerFootprint {
+    let batch = batch.max(1);
+    let s = planned_scratch(p);
+    let ho = p.out_size();
+    LayerFootprint {
+        input_bytes: batch * p.n_in * p.n_in * p.cin * F32,
+        intermediate_bytes: s.peak_batch_floats(batch) * F32,
+        kernel_bytes: (p.n_k * p.n_k * p.cin * p.cout + s.packed_kernel_floats) * F32,
+        output_bytes: batch * ho * ho * p.cout * F32,
+    }
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -173,6 +284,57 @@ mod tests {
             conv.intermediate_bytes - uni.intermediate_bytes,
             savings_table2(&p)
         );
+    }
+
+    #[test]
+    fn planned_scratch_matches_real_plan_sizing() {
+        // The geometry-only derivation must agree float-for-float with
+        // a constructed plan — on even, odd and degenerate shapes.
+        use crate::conv::plan::ConvTransposePlan;
+        use crate::tensor::Kernel;
+        use crate::util::rng::Rng;
+        let mut rng = Rng::seeded(0x3E3);
+        let shapes = [(4, 5, 2, 3, 2), (8, 4, 2, 6, 4), (5, 3, 1, 2, 2), (1, 3, 2, 1, 1)];
+        for (n, nk, pd, cin, cout) in shapes {
+            let p = ConvTransposeParams::new(n, nk, pd, cin, cout);
+            let k = Kernel::random(nk, cin, cout, &mut rng);
+            let plan = ConvTransposePlan::new(p, &k);
+            let s = planned_scratch(&p);
+            assert_eq!(s.direct_floats(), plan.scratch_floats_direct(), "direct n={n}");
+            assert_eq!(s.gemm_floats(), plan.scratch_floats(), "gemm n={n}");
+            assert_eq!(s.patch_floats, plan.patch_region_floats(), "patch n={n}");
+            assert_eq!(
+                s.packed_kernel_floats,
+                plan.packed_operand_floats(),
+                "packed n={n}"
+            );
+            for b in [1usize, 4, 8] {
+                assert_eq!(s.gemm_batch_floats(b), plan.scratch_floats_gemm_batch(b));
+                assert_eq!(s.batch_par_floats(b), plan.scratch_floats_batch_par(b));
+                assert_eq!(s.peak_batch_floats(b), plan.peak_scratch_floats_batch(b));
+            }
+        }
+    }
+
+    #[test]
+    fn planned_footprint_counts_what_the_paper_figure_missed() {
+        // The under-count fix: once the GEMM patch/pack regions exist,
+        // the honest working set strictly exceeds the paper's
+        // padded-input intermediate and bare-kernel figures.
+        let p = ConvTransposeParams::new(16, 4, 2, 64, 32);
+        let paper = footprint_unified(&p);
+        let real = footprint_planned(&p, 1);
+        assert!(real.intermediate_bytes > paper.intermediate_bytes);
+        assert!(real.kernel_bytes > paper.kernel_bytes);
+        // Batched serving scales inputs/outputs/peak-arena, not weights.
+        let b8 = footprint_planned(&p, 8);
+        assert_eq!(b8.input_bytes, 8 * real.input_bytes);
+        assert_eq!(b8.output_bytes, 8 * real.output_bytes);
+        assert!(b8.intermediate_bytes > real.intermediate_bytes);
+        assert_eq!(b8.kernel_bytes, real.kernel_bytes);
+        let s = planned_scratch(&p);
+        assert!(s.peak_batch_bytes(8) > s.peak_batch_bytes(1));
+        assert_eq!(footprint_planned(&p, 0), footprint_planned(&p, 1));
     }
 
     #[test]

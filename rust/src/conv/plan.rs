@@ -34,8 +34,20 @@
 //! the im2col patch matrix lives in the scratch arena — so the GEMM
 //! steady state is also zero-alloc, equivalent to the direct reference
 //! within 1e-4 (f32 reassociation through the register tile).
+//!
+//! **Batched execution** (DESIGN.md §Batched-Execution): a plan also
+//! executes whole [`FeatureBatch`] micro-batches in one call.  The
+//! fused batched GEMM lanes ([`run_gemm_batch`](ConvTransposePlan::run_gemm_batch))
+//! stack every image's im2col patch rows into a single `[N·rows, K]`
+//! operand per phase, so each plan-time-packed B panel is streamed
+//! once for the whole batch — the packing finally amortizes `N×` — and
+//! the batched direct lanes stay bit-identical to `N` sequential
+//! single-image runs.  Batch-aware scratch sizing
+//! ([`scratch_floats_gemm_batch`](ConvTransposePlan::scratch_floats_gemm_batch),
+//! [`scratch_floats_for_batch`](ConvTransposePlan::scratch_floats_for_batch))
+//! extends the zero-alloc steady-state guarantee to batched serving.
 
-use crate::tensor::{Feature, Kernel};
+use crate::tensor::{Feature, FeatureBatch, Kernel};
 use crate::tune::space::{ExecStrategy, Formulation, ParAxis};
 use crate::util::threadpool;
 
@@ -43,7 +55,9 @@ use super::conventional::correlate_rows;
 use super::gemm;
 use super::im2col::kernel_matrix;
 use super::segregation::{segregate, Segregated};
-use super::unified::{build_slab, phase_geometries, scatter_rows, PhaseGeometry};
+use super::unified::{
+    build_slab, build_slab_view, phase_geometries, scatter_rows, scatter_rows_view, PhaseGeometry,
+};
 use super::ConvTransposeParams;
 
 /// One phase of the plan: its frozen geometry plus the arena layout
@@ -210,9 +224,74 @@ impl ConvTransposePlan {
         self.scratch_floats() * std::mem::size_of::<f32>()
     }
 
+    /// Largest single-phase output in floats — the batched GEMM lanes
+    /// process one phase at a time across the whole batch, so their
+    /// phase region is `N ×` this rather than `N ×` the sum.
+    fn max_phase_floats(&self) -> usize {
+        self.phases.iter().map(|p| p.phase_len).max().unwrap_or(0)
+    }
+
+    /// Exact scratch floats of the fused batched GEMM lanes
+    /// ([`run_gemm_batch`](Self::run_gemm_batch) /
+    /// [`run_gemm_batch_par`](Self::run_gemm_batch_par)) for batch
+    /// size `n`: one reusable slab area plus `n` stacked phase-output
+    /// and im2col-patch regions (DESIGN.md §Batched-Execution).
+    pub fn scratch_floats_gemm_batch(&self, n: usize) -> usize {
+        self.slab_floats + n * (self.max_phase_floats() + self.patch_floats)
+    }
+
+    /// Exact scratch floats of the image-parallel batched direct lane
+    /// ([`run_batch_par`](Self::run_batch_par)): one full direct region
+    /// per image, so every `(image, phase, row)` job owns disjoint
+    /// arena slices.
+    pub fn scratch_floats_batch_par(&self, n: usize) -> usize {
+        n.max(1) * self.scratch_floats_direct()
+    }
+
+    /// Exact scratch floats one *fused batched* execution of `strategy`
+    /// needs for batch size `n` (the batched analogue of
+    /// [`scratch_floats_for`](Self::scratch_floats_for); the serial
+    /// direct lane loops images through one direct region, and the
+    /// per-element lanes allocate their own buffers).
+    pub fn scratch_floats_for_batch(&self, strategy: &ExecStrategy, n: usize) -> usize {
+        match strategy.formulation {
+            Formulation::PhaseGemm => self.scratch_floats_gemm_batch(n),
+            Formulation::PhaseDecomposed if strategy.workers > 1 => {
+                self.scratch_floats_batch_par(n)
+            }
+            _ => self.scratch_floats_direct(),
+        }
+    }
+
+    /// Worst-case scratch floats any fused batched lane of this plan
+    /// can demand at batch size `n` — what serving arenas are sized to
+    /// (`conv::memory` reports it as the per-batch peak).
+    pub fn peak_scratch_floats_batch(&self, n: usize) -> usize {
+        self.scratch_floats_gemm_batch(n)
+            .max(self.scratch_floats_batch_par(n))
+    }
+
+    /// Total floats of the plan-time-packed GEMM operands — resident in
+    /// the plan (not the arena); `conv::memory`'s working-set
+    /// accounting includes them alongside the scratch regions.
+    pub fn packed_operand_floats(&self) -> usize {
+        self.phases.iter().map(|p| p.packed_kernel.len()).sum()
+    }
+
+    /// Floats of the shared im2col patch region (the GEMM formulation's
+    /// claim on the arena beyond the direct paths).
+    pub fn patch_region_floats(&self) -> usize {
+        self.patch_floats
+    }
+
     /// A correctly-shaped output buffer for this plan.
     pub fn new_output(&self) -> Feature {
         Feature::zeros(self.out, self.out, self.params.cout)
+    }
+
+    /// A correctly-shaped batched output for this plan.
+    pub fn new_batch_output(&self, n: usize) -> FeatureBatch {
+        FeatureBatch::zeros(n, self.out, self.out, self.params.cout)
     }
 
     fn check_shapes(&self, x: &Feature, out: &Feature) {
@@ -228,6 +307,20 @@ impl ConvTransposePlan {
         );
     }
 
+    fn check_batch_shapes(&self, x: &FeatureBatch, out: &FeatureBatch) {
+        assert_eq!(x.n, out.n, "plan: batch size mismatch");
+        assert_eq!(
+            (x.h, x.w, x.c),
+            (self.params.n_in, self.params.n_in, self.params.cin),
+            "plan: batch input shape mismatch"
+        );
+        assert_eq!(
+            (out.h, out.w, out.c),
+            (self.out, self.out, self.params.cout),
+            "plan: batch output shape mismatch"
+        );
+    }
+
     /// Execute serially: `x → out` through `scratch`.
     ///
     /// Steady state (arena at its high-water mark) performs **zero**
@@ -238,9 +331,29 @@ impl ConvTransposePlan {
     pub fn run(&self, x: &Feature, scratch: &mut Scratch, out: &mut Feature) {
         self.check_shapes(x, out);
         let buf = scratch.ensure(self.scratch_floats_direct());
+        self.run_image(&x.data, buf, &mut out.data);
+    }
+
+    /// Direct serial core over raw `[H, W, C]` image views (shapes are
+    /// the plan's own; public entry points validate).  This is the body
+    /// [`run`](Self::run) always had — same slab crops, same
+    /// correlation loops, same scatters — factored onto slices so the
+    /// batched lanes ([`run_batch`](Self::run_batch)) can execute each
+    /// [`FeatureBatch`] image in place, bit-identically.
+    fn run_image(&self, x: &[f32], buf: &mut [f32], out: &mut [f32]) {
+        let n_in = self.params.n_in;
+        let cin = self.params.cin;
+        let cout = self.params.cout;
         let (slab_area, phase_area) = buf.split_at_mut(self.slab_floats);
         for pp in &self.phases {
-            build_slab(x, &pp.geom, &mut slab_area[pp.slab_off..pp.slab_off + pp.slab_len]);
+            build_slab_view(
+                x,
+                n_in,
+                n_in,
+                cin,
+                &pp.geom,
+                &mut slab_area[pp.slab_off..pp.slab_off + pp.slab_len],
+            );
             let phase = &mut phase_area[pp.phase_off..pp.phase_off + pp.phase_len];
             phase.fill(0.0);
             correlate_rows(
@@ -252,9 +365,11 @@ impl ConvTransposePlan {
                 0,
                 pp.geom.n_rows,
             );
-            scatter_rows(
+            scatter_rows_view(
                 out,
-                &phase_area[pp.phase_off..pp.phase_off + pp.phase_len],
+                self.out,
+                cout,
+                phase,
                 pp.geom.rp,
                 pp.geom.sp,
                 pp.geom.n_rows,
@@ -400,19 +515,28 @@ impl ConvTransposePlan {
     /// tile reassociates f32 sums, so bit-identity is not promised.
     pub fn run_gemm(&self, x: &Feature, scratch: &mut Scratch, out: &mut Feature) {
         self.check_shapes(x, out);
-        let cout = self.params.cout;
         let buf = scratch.ensure(self.scratch_floats());
+        self.run_gemm_image(&x.data, buf, &mut out.data);
+    }
+
+    /// Serial phase-GEMM core over raw image views (`buf` laid out as
+    /// [`scratch_floats`](Self::scratch_floats): slabs | phases |
+    /// patch).  Factored from [`run_gemm`](Self::run_gemm) unchanged.
+    fn run_gemm_image(&self, x: &[f32], buf: &mut [f32], out: &mut [f32]) {
+        let n_in = self.params.n_in;
+        let cin = self.params.cin;
+        let cout = self.params.cout;
         let (slab_area, rest) = buf.split_at_mut(self.slab_floats);
         let (phase_area, patch_area) = rest.split_at_mut(self.phase_floats);
         for pp in &self.phases {
             let slab = &mut slab_area[pp.slab_off..pp.slab_off + pp.slab_len];
-            build_slab(x, &pp.geom, slab);
+            build_slab_view(x, n_in, n_in, cin, &pp.geom, slab);
             let sub = &self.seg.subs[pp.geom.sub];
             let patch = &mut patch_area[..pp.patch_len];
             gemm::im2col_rows(
                 slab,
                 pp.slab_w,
-                self.params.cin,
+                cin,
                 sub.rows,
                 sub.cols,
                 pp.geom.n_cols,
@@ -430,8 +554,10 @@ impl ConvTransposePlan {
                 pp.gemm_k,
                 cout,
             );
-            scatter_rows(
+            scatter_rows_view(
                 out,
+                self.out,
+                cout,
                 phase,
                 pp.geom.rp,
                 pp.geom.sp,
@@ -520,6 +646,314 @@ impl ConvTransposePlan {
                 pp.geom.n_rows,
                 pp.geom.n_cols,
             );
+        }
+    }
+
+    /// Batched direct serial lane (DESIGN.md §Batched-Execution): the
+    /// whole [`FeatureBatch`] through **one** direct scratch region,
+    /// image by image.  Bit-identical to `N` sequential
+    /// [`run`](Self::run) calls — it *is* `N` calls of the same core —
+    /// and zero-alloc in steady state like them.
+    pub fn run_batch(&self, x: &FeatureBatch, scratch: &mut Scratch, out: &mut FeatureBatch) {
+        self.check_batch_shapes(x, out);
+        let buf = scratch.ensure(self.scratch_floats_direct());
+        let in_len = x.image_floats();
+        let out_len = out.image_floats();
+        for i in 0..x.n {
+            self.run_image(
+                &x.data[i * in_len..(i + 1) * in_len],
+                buf,
+                &mut out.data[i * out_len..(i + 1) * out_len],
+            );
+        }
+    }
+
+    /// Batched direct parallel lane: every image's slabs are built into
+    /// its own direct arena region, then **one** work queue of
+    /// `(image, phase, output-row)` jobs drains across `workers`
+    /// threads of the persistent pool — the batch dimension simply
+    /// multiplies the job count, so small layers that could not feed
+    /// `workers` threads alone now can.  A singleton batch keeps its
+    /// row parallelism (the queue degenerates to exactly
+    /// [`run_par`](Self::run_par)'s job set — no serial fallback).
+    /// Bit-identical to [`run_batch`](Self::run_batch) (each row is
+    /// computed by the same serial correlation core).
+    pub fn run_batch_par(
+        &self,
+        x: &FeatureBatch,
+        scratch: &mut Scratch,
+        out: &mut FeatureBatch,
+        workers: usize,
+    ) {
+        let workers = workers.max(1);
+        if workers == 1 || x.n == 0 {
+            return self.run_batch(x, scratch, out);
+        }
+        self.check_batch_shapes(x, out);
+        let n_in = self.params.n_in;
+        let cin = self.params.cin;
+        let cout = self.params.cout;
+        let per = self.scratch_floats_direct();
+        let buf = scratch.ensure(self.scratch_floats_batch_par(x.n));
+        {
+            let mut jobs: Vec<(&[f32], usize, usize, &mut [f32])> = Vec::new();
+            let mut regions: &mut [f32] = &mut buf[..];
+            for i in 0..x.n {
+                let (region, tail) = regions.split_at_mut(per);
+                regions = tail;
+                let (slab_area, phase_area) = region.split_at_mut(self.slab_floats);
+                for pp in &self.phases {
+                    build_slab_view(
+                        x.image(i),
+                        n_in,
+                        n_in,
+                        cin,
+                        &pp.geom,
+                        &mut slab_area[pp.slab_off..pp.slab_off + pp.slab_len],
+                    );
+                }
+                let slab_area: &[f32] = slab_area;
+                let mut rest: &mut [f32] = phase_area;
+                for (pi, pp) in self.phases.iter().enumerate() {
+                    let (mine, tail) = rest.split_at_mut(pp.phase_len);
+                    rest = tail;
+                    let row_len = pp.geom.n_cols * cout;
+                    for (ri, row) in mine.chunks_mut(row_len).enumerate() {
+                        jobs.push((slab_area, pi, ri, row));
+                    }
+                }
+            }
+            threadpool::parallel_drain(jobs, workers, |(slab_area, pi, ri, row)| {
+                let pp = &self.phases[pi];
+                row.fill(0.0);
+                correlate_rows(
+                    &slab_area[pp.slab_off..pp.slab_off + pp.slab_len],
+                    pp.slab_w,
+                    &self.seg.subs[pp.geom.sub],
+                    row,
+                    pp.geom.n_cols,
+                    ri,
+                    ri + 1,
+                );
+            });
+        }
+        for i in 0..x.n {
+            let phase_area = &buf[i * per + self.slab_floats..(i + 1) * per];
+            for pp in &self.phases {
+                scatter_rows_view(
+                    out.image_mut(i),
+                    self.out,
+                    cout,
+                    &phase_area[pp.phase_off..pp.phase_off + pp.phase_len],
+                    pp.geom.rp,
+                    pp.geom.sp,
+                    pp.geom.n_rows,
+                    pp.geom.n_cols,
+                );
+            }
+        }
+    }
+
+    /// Build one phase's stacked `[N·rows, K]` patch operand: each
+    /// image's slab is cropped into the phase's (reused) slab region
+    /// and im2col'ed into its `patch_len` slice of `patch_area` — the
+    /// shared stacking step of both fused GEMM lanes, so their
+    /// patch-offset contract can never desynchronize.
+    fn stack_phase_patches(
+        &self,
+        pp: &PhasePlan,
+        x: &FeatureBatch,
+        slab_area: &mut [f32],
+        patch_area: &mut [f32],
+    ) {
+        let n_in = self.params.n_in;
+        let cin = self.params.cin;
+        let sub = &self.seg.subs[pp.geom.sub];
+        for i in 0..x.n {
+            let slab = &mut slab_area[pp.slab_off..pp.slab_off + pp.slab_len];
+            build_slab_view(x.image(i), n_in, n_in, cin, &pp.geom, slab);
+            gemm::im2col_rows(
+                slab,
+                pp.slab_w,
+                cin,
+                sub.rows,
+                sub.cols,
+                pp.geom.n_cols,
+                0,
+                pp.geom.n_rows,
+                &mut patch_area[i * pp.patch_len..(i + 1) * pp.patch_len],
+            );
+        }
+    }
+
+    /// Fused batched phase-GEMM lane — where the plan-time packing pays
+    /// `N×` (DESIGN.md §Batched-Execution): per phase, every image's
+    /// im2col patch rows are stacked back to back into one
+    /// `[N·rows, K]` operand and multiplied by the sub-kernel packed at
+    /// construction in a **single** GEMM, so the packed B panels are
+    /// streamed once per phase for the whole batch instead of once per
+    /// image.  Zero-alloc in steady state (the stacked patch/phase
+    /// regions are part of
+    /// [`scratch_floats_gemm_batch`](Self::scratch_floats_gemm_batch));
+    /// bit-identical to `N` sequential [`run_gemm`](Self::run_gemm)
+    /// calls (per-element f32 accumulation order does not depend on the
+    /// GEMM's M extent), hence within the same 1e-4 of the direct
+    /// reference.
+    pub fn run_gemm_batch(&self, x: &FeatureBatch, scratch: &mut Scratch, out: &mut FeatureBatch) {
+        self.check_batch_shapes(x, out);
+        let n = x.n;
+        let cout = self.params.cout;
+        let buf = scratch.ensure(self.scratch_floats_gemm_batch(n));
+        let (slab_area, rest) = buf.split_at_mut(self.slab_floats);
+        let (phase_area, patch_area) = rest.split_at_mut(n * self.max_phase_floats());
+        for pp in &self.phases {
+            self.stack_phase_patches(pp, x, slab_area, patch_area);
+            let phase = &mut phase_area[..n * pp.phase_len];
+            phase.fill(0.0);
+            gemm::gemm_packed(
+                &patch_area[..n * pp.patch_len],
+                &pp.packed_kernel,
+                phase,
+                n * pp.geom.n_rows * pp.geom.n_cols,
+                pp.gemm_k,
+                cout,
+            );
+            for i in 0..n {
+                scatter_rows_view(
+                    out.image_mut(i),
+                    self.out,
+                    cout,
+                    &phase[i * pp.phase_len..(i + 1) * pp.phase_len],
+                    pp.geom.rp,
+                    pp.geom.sp,
+                    pp.geom.n_rows,
+                    pp.geom.n_cols,
+                );
+            }
+        }
+    }
+
+    /// Row-parallel fused batched GEMM lane: the stacked `[N·rows, K]`
+    /// patch operand is built image-serially (im2col is a memcpy-bound
+    /// fraction of the work), then the batch-wide GEMM drains as
+    /// per-output-row jobs across `workers` pool threads, every job
+    /// multiplying its contiguous patch rows by the one shared packed
+    /// sub-kernel.  Bit-identical to [`run_gemm_batch`](Self::run_gemm_batch)
+    /// (same microkernel per element, whatever the worker count).
+    pub fn run_gemm_batch_par(
+        &self,
+        x: &FeatureBatch,
+        scratch: &mut Scratch,
+        out: &mut FeatureBatch,
+        workers: usize,
+    ) {
+        let workers = workers.max(1);
+        if workers == 1 {
+            return self.run_gemm_batch(x, scratch, out);
+        }
+        self.check_batch_shapes(x, out);
+        let n = x.n;
+        let cout = self.params.cout;
+        let buf = scratch.ensure(self.scratch_floats_gemm_batch(n));
+        let (slab_area, rest) = buf.split_at_mut(self.slab_floats);
+        let (phase_area, patch_area) = rest.split_at_mut(n * self.max_phase_floats());
+        for pp in &self.phases {
+            self.stack_phase_patches(pp, x, slab_area, patch_area);
+            {
+                let row_len = pp.geom.n_cols * cout;
+                let patch_row_len = pp.geom.n_cols * pp.gemm_k;
+                let patch: &[f32] = &patch_area[..n * pp.patch_len];
+                let jobs: Vec<(&[f32], &mut [f32])> = phase_area[..n * pp.phase_len]
+                    .chunks_mut(row_len)
+                    .zip(patch.chunks(patch_row_len))
+                    .map(|(row, prow)| (prow, row))
+                    .collect();
+                threadpool::parallel_drain(jobs, workers, |(prow, row)| {
+                    row.fill(0.0);
+                    gemm::gemm_packed(
+                        prow,
+                        &pp.packed_kernel,
+                        row,
+                        pp.geom.n_cols,
+                        pp.gemm_k,
+                        cout,
+                    );
+                });
+            }
+            for i in 0..n {
+                scatter_rows_view(
+                    out.image_mut(i),
+                    self.out,
+                    cout,
+                    &phase_area[i * pp.phase_len..(i + 1) * pp.phase_len],
+                    pp.geom.rp,
+                    pp.geom.sp,
+                    pp.geom.n_rows,
+                    pp.geom.n_cols,
+                );
+            }
+        }
+    }
+
+    /// Execute a whole batch under an [`ExecStrategy`], **fused**: the
+    /// batched analogue of [`run_with`](Self::run_with), dispatching to
+    /// [`run_batch`]/[`run_batch_par`] (direct — bit-identical to `N`
+    /// per-image runs), [`run_gemm_batch`]/[`run_gemm_batch_par`]
+    /// (stacked phase GEMMs — bit-identical to `N` per-image
+    /// [`run_gemm`]s, 1e-4 vs the direct reference), or a per-image
+    /// loop of the per-element formulation (no batch structure to
+    /// exploit there).  The per-latent execution of a strategy is the
+    /// caller's loop over [`run_with`] — that is the serving A/B lane.
+    ///
+    /// [`run_batch`]: Self::run_batch
+    /// [`run_batch_par`]: Self::run_batch_par
+    /// [`run_gemm_batch`]: Self::run_gemm_batch
+    /// [`run_gemm_batch_par`]: Self::run_gemm_batch_par
+    /// [`run_gemm`]: Self::run_gemm
+    /// [`run_with`]: Self::run_with
+    pub fn run_batch_with(
+        &self,
+        strategy: &ExecStrategy,
+        x: &FeatureBatch,
+        scratch: &mut Scratch,
+        out: &mut FeatureBatch,
+    ) {
+        match strategy.formulation {
+            Formulation::PhaseDecomposed => {
+                if strategy.workers <= 1 {
+                    self.run_batch(x, scratch, out);
+                } else {
+                    self.run_batch_par(x, scratch, out, strategy.workers);
+                }
+            }
+            Formulation::PhaseGemm => {
+                if strategy.workers <= 1 {
+                    self.run_gemm_batch(x, scratch, out);
+                } else {
+                    self.run_gemm_batch_par(x, scratch, out, strategy.workers);
+                }
+            }
+            Formulation::PerElement => {
+                self.check_batch_shapes(x, out);
+                for i in 0..x.n {
+                    let xi = x.feature(i);
+                    let got = if strategy.workers <= 1 {
+                        super::unified::transpose_conv_per_element_seg(
+                            &xi,
+                            &self.seg,
+                            self.params.padding,
+                        )
+                    } else {
+                        super::parallel::unified_per_element_par(
+                            &xi,
+                            &self.seg,
+                            self.params.padding,
+                            strategy.workers,
+                        )
+                    };
+                    out.image_mut(i).copy_from_slice(&got.data);
+                }
+            }
         }
     }
 
@@ -857,6 +1291,179 @@ mod tests {
                 }
             }
         }
+    }
+
+    /// `N` sequential single-image runs of `lane` — the batched lanes'
+    /// reference semantics.
+    fn sequential_reference(
+        plan: &ConvTransposePlan,
+        xb: &FeatureBatch,
+        gemm: bool,
+    ) -> FeatureBatch {
+        let mut scratch = Scratch::for_plan(plan);
+        let mut want = plan.new_batch_output(xb.n);
+        for i in 0..xb.n {
+            let xi = xb.feature(i);
+            let mut oi = plan.new_output();
+            if gemm {
+                plan.run_gemm(&xi, &mut scratch, &mut oi);
+            } else {
+                plan.run(&xi, &mut scratch, &mut oi);
+            }
+            want.image_mut(i).copy_from_slice(&oi.data);
+        }
+        want
+    }
+
+    #[test]
+    fn batched_direct_lanes_bit_identical_to_sequential() {
+        let mut rng = Rng::seeded(54);
+        for (n_in, nk, p, cin, cout) in [(4, 5, 2, 3, 2), (4, 4, 2, 3, 2), (5, 3, 1, 2, 2)] {
+            let k = Kernel::random(nk, cin, cout, &mut rng);
+            let plan =
+                ConvTransposePlan::new(ConvTransposeParams::new(n_in, nk, p, cin, cout), &k);
+            let mut scratch = Scratch::new();
+            for n in [1usize, 3, 5] {
+                let xb = FeatureBatch::random(n, n_in, n_in, cin, &mut rng);
+                let want = sequential_reference(&plan, &xb, false);
+                let mut got = plan.new_batch_output(n);
+                got.data.fill(f32::NAN);
+                plan.run_batch(&xb, &mut scratch, &mut got);
+                assert_eq!(got, want, "run_batch (n={n} shape n_in={n_in})");
+                for workers in [2, 3, 8] {
+                    let mut par = plan.new_batch_output(n);
+                    par.data.fill(f32::NAN);
+                    plan.run_batch_par(&xb, &mut scratch, &mut par, workers);
+                    assert_eq!(par, want, "run_batch_par({workers}) (n={n})");
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn batched_gemm_lanes_bit_identical_to_sequential_gemm() {
+        // The stacked [N·rows, K] GEMM accumulates every output element
+        // in the same kk order as the per-image GEMM, so the fused lane
+        // is bit-identical to N sequential run_gemm calls — and hence
+        // within the same 1e-4 of the direct reference.
+        let mut rng = Rng::seeded(55);
+        for cout in [1usize, 3, 8, 17] {
+            let (n_in, nk, p) = (4, 5, 2);
+            let k = Kernel::random(nk, 3, cout, &mut rng);
+            let plan = ConvTransposePlan::new(ConvTransposeParams::new(n_in, nk, p, 3, cout), &k);
+            let mut scratch = Scratch::new();
+            for n in [1usize, 3, 8] {
+                let xb = FeatureBatch::random(n, n_in, n_in, 3, &mut rng);
+                let want_gemm = sequential_reference(&plan, &xb, true);
+                let want_direct = sequential_reference(&plan, &xb, false);
+                let mut got = plan.new_batch_output(n);
+                got.data.fill(f32::NAN);
+                plan.run_gemm_batch(&xb, &mut scratch, &mut got);
+                assert_eq!(got, want_gemm, "run_gemm_batch (n={n} cout={cout})");
+                assert!(
+                    crate::tensor::ops::max_abs_diff_batch(&got, &want_direct) < 1e-4,
+                    "fused batched GEMM diverged from the direct reference (n={n} cout={cout})"
+                );
+                for workers in [2, 3, 8] {
+                    let mut par = plan.new_batch_output(n);
+                    par.data.fill(f32::NAN);
+                    plan.run_gemm_batch_par(&xb, &mut scratch, &mut par, workers);
+                    assert_eq!(par, got, "run_gemm_batch_par({workers}) != serial (n={n})");
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn run_batch_with_covers_search_space() {
+        // Every strategy, dispatched fused over a ragged batch, against
+        // dirty outputs: direct and per-element formulations must equal
+        // the per-image reference exactly; the GEMM formulation within
+        // 1e-4 and NaN-free (every element written).
+        let mut rng = Rng::seeded(56);
+        let (n_in, nk, p, cin, cout) = (4, 5, 2, 3, 2);
+        let k = Kernel::random(nk, cin, cout, &mut rng);
+        let plan = ConvTransposePlan::new(ConvTransposeParams::new(n_in, nk, p, cin, cout), &k);
+        for n in [1usize, 3] {
+            let xb = FeatureBatch::random(n, n_in, n_in, cin, &mut rng);
+            let want = sequential_reference(&plan, &xb, false);
+            let mut scratch = Scratch::new();
+            for s in crate::tune::space::search_space(4) {
+                let mut got = plan.new_batch_output(n);
+                got.data.fill(f32::NAN);
+                plan.run_batch_with(&s, &xb, &mut scratch, &mut got);
+                if s.formulation == Formulation::PhaseGemm {
+                    assert!(got.data.iter().all(|v| !v.is_nan()), "{} left NaNs", s.name());
+                    assert!(
+                        crate::tensor::ops::max_abs_diff_batch(&got, &want) < 1e-4,
+                        "{} diverged on batch n={n}",
+                        s.name()
+                    );
+                } else {
+                    assert_eq!(got, want, "{} diverged on batch n={n}", s.name());
+                }
+            }
+            // The arena never outgrew the documented per-strategy peak.
+            assert!(scratch.capacity_floats() <= plan.peak_scratch_floats_batch(n));
+        }
+    }
+
+    #[test]
+    fn batched_scratch_sizing_is_exact() {
+        let mut rng = Rng::seeded(57);
+        let k = Kernel::random(5, 3, 2, &mut rng);
+        let plan = ConvTransposePlan::new(ConvTransposeParams::new(4, 5, 2, 3, 2), &k);
+        let seg = segregate(&k);
+        let geoms = unified::phase_geometries(4, 5, 2);
+        let max_phase: usize = geoms.iter().map(|g| g.n_rows * g.n_cols * 2).max().unwrap();
+        let max_patch: usize = geoms
+            .iter()
+            .map(|g| {
+                let s = &seg.subs[g.sub];
+                g.n_rows * g.n_cols * s.rows * s.cols * 3
+            })
+            .max()
+            .unwrap();
+        let slab: usize = geoms
+            .iter()
+            .map(|g| (g.rows.1 - g.rows.0) * (g.cols.1 - g.cols.0) * 3)
+            .sum();
+        for n in [1usize, 4, 8] {
+            assert_eq!(
+                plan.scratch_floats_gemm_batch(n),
+                slab + n * (max_phase + max_patch)
+            );
+            assert_eq!(
+                plan.scratch_floats_batch_par(n),
+                n * plan.scratch_floats_direct()
+            );
+        }
+        // A cold arena grows to exactly the fused-GEMM batch figure on
+        // that lane, and to exactly the image-parallel figure on that
+        // one — the sizing functions are tight bounds, not estimates.
+        let n = 3;
+        let xb = FeatureBatch::random(n, 4, 4, 3, &mut rng);
+        let mut out = plan.new_batch_output(n);
+        let mut scratch = Scratch::new();
+        plan.run_gemm_batch(&xb, &mut scratch, &mut out);
+        assert_eq!(scratch.capacity_floats(), plan.scratch_floats_gemm_batch(n));
+        let mut scratch = Scratch::new();
+        plan.run_batch_par(&xb, &mut scratch, &mut out, 3);
+        assert_eq!(scratch.capacity_floats(), plan.scratch_floats_batch_par(n));
+        // The serial batched direct lane needs only one direct region.
+        let mut scratch = Scratch::new();
+        plan.run_batch(&xb, &mut scratch, &mut out);
+        assert_eq!(scratch.capacity_floats(), plan.scratch_floats_direct());
+        // packed operands + patch region accessors agree with the plan.
+        let packed: usize = geoms
+            .iter()
+            .map(|g| {
+                let s = &seg.subs[g.sub];
+                gemm::packed_b_floats(s.rows * s.cols * 3, 2)
+            })
+            .sum();
+        assert_eq!(plan.packed_operand_floats(), packed);
+        assert_eq!(plan.patch_region_floats(), max_patch);
     }
 
     #[test]

@@ -114,7 +114,23 @@ fn phase_slab(x: &Feature, g: &PhaseGeometry) -> Feature {
 /// Every element of `dst` is written, so a dirty scratch region is safe
 /// to reuse — the zero-alloc plan path (`conv::plan`) relies on this.
 pub(crate) fn build_slab(x: &Feature, g: &PhaseGeometry, dst: &mut [f32]) {
-    let c = x.c;
+    build_slab_view(&x.data, x.h, x.w, x.c, g, dst)
+}
+
+/// [`build_slab`] over a raw `[H, W, C]` row-major slice — the batched
+/// execution lanes (`conv::plan`) crop slabs straight out of a
+/// [`FeatureBatch`](crate::tensor::FeatureBatch) image view without
+/// wrapping it in an owned `Feature`.  Same copies, same zero-fills, so
+/// the two entry points are bit-identical.
+pub(crate) fn build_slab_view(
+    x: &[f32],
+    h: usize,
+    w: usize,
+    c: usize,
+    g: &PhaseGeometry,
+    dst: &mut [f32],
+) {
+    debug_assert_eq!(x.len(), h * w * c, "build_slab_view: input size mismatch");
     let (pt, _pb, pl, _pr) = g.pads;
     let slab_h = g.rows.1 - g.rows.0;
     let slab_w = g.cols.1 - g.cols.0;
@@ -122,19 +138,19 @@ pub(crate) fn build_slab(x: &Feature, g: &PhaseGeometry, dst: &mut [f32]) {
     // Raw-input column of slab column 0 (negative inside the left pad).
     let c0 = g.cols.0 as isize - pl as isize;
     let v0 = c0.max(0);
-    let v1 = (c0 + slab_w as isize).min(x.w as isize);
+    let v1 = (c0 + slab_w as isize).min(w as isize);
     let left = (v0 - c0) as usize;
     let valid = (v1 - v0).max(0) as usize;
     for sy in 0..slab_h {
         let row = &mut dst[sy * slab_w * c..(sy + 1) * slab_w * c];
         let ry = (g.rows.0 + sy) as isize - pt as isize;
-        if ry < 0 || ry >= x.h as isize || valid == 0 {
+        if ry < 0 || ry >= h as isize || valid == 0 {
             row.fill(0.0);
             continue;
         }
         row[..left * c].fill(0.0);
-        let src = x.idx(ry as usize, v0 as usize, 0);
-        row[left * c..(left + valid) * c].copy_from_slice(&x.data[src..src + valid * c]);
+        let src = (ry as usize * w + v0 as usize) * c;
+        row[left * c..(left + valid) * c].copy_from_slice(&x[src..src + valid * c]);
         row[(left + valid) * c..].fill(0.0);
     }
 }
@@ -158,13 +174,31 @@ pub(crate) fn scatter_rows(
     n_rows: usize,
     n_cols: usize,
 ) {
-    let c = out.c;
+    let (w, c) = (out.w, out.c);
+    scatter_rows_view(&mut out.data, w, c, phase, rp, sp, n_rows, n_cols)
+}
+
+/// [`scatter_rows`] over a raw `[H, W, C]` output slice — used by the
+/// batched lanes to scatter each image's phase rows into its slice of
+/// a [`FeatureBatch`](crate::tensor::FeatureBatch).  Same strided
+/// copies, bit-identical to the `Feature` entry point.
+#[allow(clippy::too_many_arguments)]
+pub(crate) fn scatter_rows_view(
+    out: &mut [f32],
+    out_w: usize,
+    c: usize,
+    phase: &[f32],
+    rp: usize,
+    sp: usize,
+    n_rows: usize,
+    n_cols: usize,
+) {
     for py in 0..n_rows {
         let y = rp + 2 * py;
-        let mut dst = out.idx(y, sp, 0);
+        let mut dst = (y * out_w + sp) * c;
         let mut src = py * n_cols * c;
         for _ in 0..n_cols {
-            out.data[dst..dst + c].copy_from_slice(&phase[src..src + c]);
+            out[dst..dst + c].copy_from_slice(&phase[src..src + c]);
             dst += 2 * c;
             src += c;
         }

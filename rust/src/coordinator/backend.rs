@@ -38,9 +38,16 @@ pub trait Backend: Send + Sync {
 /// [`ConvTransposePlan`](crate::conv::plan::ConvTransposePlan)s with a
 /// pool of scratch arenas that persists across batches (one arena per
 /// concurrent worker), so steady-state batches allocate activations
-/// only — never planning structures or conv scratch.  With
-/// [`with_batch_workers`](Self::with_batch_workers) the latents of one
-/// batch fan out across scoped threads (parallelism across latents ×
+/// only — never planning structures or conv scratch.
+///
+/// The default unified path is **fused batched** (DESIGN.md
+/// §Batched-Execution): one `Generator::forward_batch_with` call
+/// executes the whole dynamic batch through every layer, reusing each
+/// phase's plan-time-packed GEMM operand across all `N` latents.  Two
+/// A/B lanes remain: [`with_per_latent`](Self::with_per_latent) keeps
+/// the historic one-forward-per-latent loop, and
+/// [`with_batch_workers`](Self::with_batch_workers) fans the latents of
+/// one batch out across scoped threads (parallelism across latents ×
 /// phases, on top of the row-level [`Lane::Parallel`] lane).
 pub struct RustBackend {
     pub generator: Generator,
@@ -51,6 +58,9 @@ pub struct RustBackend {
     batch_workers: usize,
     /// `false` → per-call (unplanned) dispatch, the A/B ablation lane.
     planned: bool,
+    /// `false` → loop the batch per latent instead of the fused
+    /// batched forward (the fused-vs-per-latent serving A/B lane).
+    fused_batch: bool,
     /// Warm scratch arenas, reused across batches.  Bounded by the
     /// number of concurrent `generate` workers.
     arenas: Mutex<Vec<Scratch>>,
@@ -76,12 +86,14 @@ impl RustBackend {
             max_batch: max_batch.max(1),
             batch_workers: 1,
             planned: true,
+            fused_batch: true,
             arenas: Mutex::new(Vec::new()),
         }
     }
 
     /// Fan each batch's latents out over `workers` threads, one scratch
-    /// arena per worker.
+    /// arena per worker (a per-latent A/B lane — the fused batched
+    /// forward is not used).
     pub fn with_batch_workers(mut self, workers: usize) -> Self {
         self.batch_workers = workers.max(1);
         self
@@ -92,6 +104,23 @@ impl RustBackend {
     pub fn with_unplanned(mut self) -> Self {
         self.planned = false;
         self
+    }
+
+    /// Serve each batch as a per-latent loop instead of the fused
+    /// batched forward (the fused-vs-per-latent serving ablation; see
+    /// `bench::serving`).
+    pub fn with_per_latent(mut self) -> Self {
+        self.fused_batch = false;
+        self
+    }
+
+    /// Whether this backend serves batches through the fused batched
+    /// forward.
+    pub fn is_fused_batch(&self) -> bool {
+        self.fused_batch
+            && self.planned
+            && self.batch_workers == 1
+            && self.alg == Algorithm::Unified
     }
 
     /// Autotune every layer of the model at construction (DESIGN.md
@@ -110,6 +139,20 @@ impl RustBackend {
     /// on a read-only filesystem.
     pub fn with_autotune(self, cache_path: Option<&Path>) -> Self {
         self.with_autotune_tuner(cache_path, &Tuner::new(threadpool::default_parallelism()))
+    }
+
+    /// [`with_autotune`](Self::with_autotune) searching **batched**
+    /// strategies for serving batch size `batch` (DESIGN.md
+    /// §Batched-Execution): candidates are timed serving whole
+    /// batches — fused batched lanes included — and verdicts persist
+    /// under the batch-extended cache key, so `ukstc serve
+    /// --tune-cache` plumbs `ukstc tune --batch N` verdicts straight
+    /// into the fused serving path.
+    pub fn with_autotune_batch(self, cache_path: Option<&Path>, batch: usize) -> Self {
+        self.with_autotune_tuner(
+            cache_path,
+            &Tuner::for_batch(threadpool::default_parallelism(), batch),
+        )
     }
 
     /// [`with_autotune`](Self::with_autotune) with an explicit tuner
@@ -161,13 +204,17 @@ impl RustBackend {
         }
     }
 
-    /// Pop a warm arena from the pool (pre-sized on first use).
+    /// Pop a warm arena from the pool (pre-sized on first use — to the
+    /// max-batch fused requirement on the fused lane, so steady-state
+    /// batches of any admissible size never grow it).
     fn take_arena(&self) -> Scratch {
-        self.arenas
-            .lock()
-            .unwrap()
-            .pop()
-            .unwrap_or_else(|| self.generator.scratch())
+        self.arenas.lock().unwrap().pop().unwrap_or_else(|| {
+            if self.is_fused_batch() {
+                self.generator.scratch_batch(self.max_batch, self.lane)
+            } else {
+                self.generator.scratch()
+            }
+        })
     }
 
     /// Return an arena to the pool for the next batch.
@@ -192,6 +239,16 @@ impl Backend for RustBackend {
     fn generate(&self, latents: &[Vec<f32>]) -> Vec<Feature> {
         let workers = self.batch_workers.min(latents.len()).max(1);
         if workers <= 1 {
+            if self.is_fused_batch() && !latents.is_empty() {
+                // Fused batched lane (the default): one forward call
+                // serves the whole dynamic batch, so every layer's
+                // packed GEMM operands are fetched once per batch
+                // instead of once per latent.
+                let mut scratch = self.take_arena();
+                let images = self.generator.forward_batch_with(latents, self.lane, &mut scratch);
+                self.put_arena(scratch);
+                return images.into_features();
+            }
             let mut scratch = self.take_arena();
             let images = latents
                 .iter()
@@ -289,6 +346,34 @@ mod tests {
                 assert_eq!(g, w, "batch-parallel ({workers}) diverged");
             }
         }
+    }
+
+    #[test]
+    fn fused_batch_lane_matches_per_latent_bit_identically() {
+        // The default generate is now the fused batched forward; with
+        // no pinned strategies it runs the batched direct lanes, which
+        // must reproduce the per-latent loop exactly — ragged batch
+        // sizes (1 and 3 under max_batch 8) included.
+        let fused = tiny_backend(Algorithm::Unified);
+        let per_latent = tiny_backend(Algorithm::Unified).with_per_latent();
+        assert!(fused.is_fused_batch() && !per_latent.is_fused_batch());
+        for n in [1usize, 3, 8] {
+            let latents: Vec<Vec<f32>> = (0..n)
+                .map(|i| vec![0.03 * (i + 1) as f32; fused.z_dim()])
+                .collect();
+            let got = fused.generate(&latents);
+            let want = per_latent.generate(&latents);
+            assert_eq!(got.len(), n);
+            assert_eq!(got, want, "fused batch diverged at n={n}");
+        }
+    }
+
+    #[test]
+    fn non_unified_backends_skip_the_fused_lane() {
+        let conv = tiny_backend(Algorithm::Conventional);
+        assert!(!conv.is_fused_batch());
+        let imgs = conv.generate(&vec![vec![0.2; conv.z_dim()]; 2]);
+        assert_eq!(imgs.len(), 2);
     }
 
     #[test]

@@ -14,8 +14,13 @@ pub struct Metrics {
     pub submitted: AtomicU64,
     pub rejected: AtomicU64,
     pub completed: AtomicU64,
-    pub batches: AtomicU64,
-    batch_size_sum: AtomicU64,
+    /// Exact batch-size distribution: `batch_size_counts[s]` = number
+    /// of executed batches of size `s` (sizes are small integers
+    /// bounded by `max_batch`, so an exact count vector beats the
+    /// log-spaced latency buckets).  Batch count, mean and quantiles
+    /// are all derived from this one store — operators see whether
+    /// `BatchPolicy` actually forms batches for the fused lane.
+    batch_size_counts: Mutex<Vec<u64>>,
     queue_hist: Mutex<LatencyHistogram>,
     total_hist: Mutex<LatencyHistogram>,
 }
@@ -33,8 +38,7 @@ impl Metrics {
             submitted: AtomicU64::new(0),
             rejected: AtomicU64::new(0),
             completed: AtomicU64::new(0),
-            batches: AtomicU64::new(0),
-            batch_size_sum: AtomicU64::new(0),
+            batch_size_counts: Mutex::new(Vec::new()),
             queue_hist: Mutex::new(LatencyHistogram::new()),
             total_hist: Mutex::new(LatencyHistogram::new()),
         }
@@ -49,8 +53,28 @@ impl Metrics {
     }
 
     pub fn record_batch(&self, size: usize) {
-        self.batches.fetch_add(1, Ordering::Relaxed);
-        self.batch_size_sum.fetch_add(size as u64, Ordering::Relaxed);
+        let mut counts = self.batch_size_counts.lock().unwrap();
+        if counts.len() <= size {
+            counts.resize(size + 1, 0);
+        }
+        counts[size] += 1;
+    }
+
+    /// Exact quantile of the recorded batch sizes (0 when none yet).
+    fn batch_size_quantile(counts: &[u64], q: f64) -> f64 {
+        let total: u64 = counts.iter().sum();
+        if total == 0 {
+            return 0.0;
+        }
+        let target = ((q * total as f64).ceil() as u64).max(1);
+        let mut cum = 0;
+        for (size, &c) in counts.iter().enumerate() {
+            cum += c;
+            if cum >= target {
+                return size as f64;
+            }
+        }
+        (counts.len() - 1) as f64
     }
 
     pub fn record_completion(&self, queued_s: f64, total_s: f64) {
@@ -61,10 +85,16 @@ impl Metrics {
 
     pub fn snapshot(&self) -> Snapshot {
         let completed = self.completed.load(Ordering::Relaxed);
-        let batches = self.batches.load(Ordering::Relaxed);
         let qh = self.queue_hist.lock().unwrap();
         let th = self.total_hist.lock().unwrap();
+        let sizes = self.batch_size_counts.lock().unwrap();
         let elapsed = self.started.elapsed().as_secs_f64();
+        let batches: u64 = sizes.iter().sum();
+        let size_sum: u64 = sizes
+            .iter()
+            .enumerate()
+            .map(|(size, &c)| size as u64 * c)
+            .sum();
         Snapshot {
             submitted: self.submitted.load(Ordering::Relaxed),
             rejected: self.rejected.load(Ordering::Relaxed),
@@ -73,8 +103,10 @@ impl Metrics {
             mean_batch_size: if batches == 0 {
                 0.0
             } else {
-                self.batch_size_sum.load(Ordering::Relaxed) as f64 / batches as f64
+                size_sum as f64 / batches as f64
             },
+            batch_p50: Self::batch_size_quantile(&sizes, 0.50),
+            batch_p95: Self::batch_size_quantile(&sizes, 0.95),
             throughput_rps: if elapsed > 0.0 {
                 completed as f64 / elapsed
             } else {
@@ -97,6 +129,10 @@ pub struct Snapshot {
     pub completed: u64,
     pub batches: u64,
     pub mean_batch_size: f64,
+    /// Exact p50/p95 of the observed batch-size distribution — whether
+    /// the dynamic batcher actually forms batches for the fused lane.
+    pub batch_p50: f64,
+    pub batch_p95: f64,
     pub throughput_rps: f64,
     pub queue_p50_s: f64,
     pub queue_p95_s: f64,
@@ -109,13 +145,16 @@ impl Snapshot {
     /// One-line human-readable summary.
     pub fn summary(&self) -> String {
         format!(
-            "completed={}/{} rejected={} batches={} (mean size {:.2}) \
-             thpt={:.1} req/s p50={:.1}ms p95={:.1}ms p99={:.1}ms",
+            "completed={}/{} rejected={} batches={} (size mean {:.2} \
+             p50 {:.0} p95 {:.0}) thpt={:.1} req/s p50={:.1}ms \
+             p95={:.1}ms p99={:.1}ms",
             self.completed,
             self.submitted,
             self.rejected,
             self.batches,
             self.mean_batch_size,
+            self.batch_p50,
+            self.batch_p95,
             self.throughput_rps,
             self.total_p50_s * 1e3,
             self.total_p95_s * 1e3,
@@ -144,6 +183,25 @@ mod tests {
         assert_eq!(s.batches, 2);
         assert!((s.mean_batch_size - 3.0).abs() < 1e-12);
         assert!(s.total_p50_s > 0.0);
+        // Sizes 4 and 2: p50 is the lower, p95 the upper.
+        assert_eq!(s.batch_p50, 2.0);
+        assert_eq!(s.batch_p95, 4.0);
+    }
+
+    #[test]
+    fn batch_size_distribution_quantiles_exact() {
+        let m = Metrics::new();
+        // 8 singleton batches, one 8-wide batch: p50 = 1, p95 = 8.
+        for _ in 0..8 {
+            m.record_batch(1);
+        }
+        m.record_batch(8);
+        let s = m.snapshot();
+        assert_eq!(s.batch_p50, 1.0);
+        assert_eq!(s.batch_p95, 8.0);
+        assert!((s.mean_batch_size - 16.0 / 9.0).abs() < 1e-12);
+        let printed = s.summary();
+        assert!(printed.contains("p50 1"), "{printed}");
     }
 
     #[test]
@@ -151,6 +209,8 @@ mod tests {
         let s = Metrics::new().snapshot();
         assert_eq!(s.completed, 0);
         assert_eq!(s.mean_batch_size, 0.0);
+        assert_eq!(s.batch_p50, 0.0);
+        assert_eq!(s.batch_p95, 0.0);
         assert_eq!(s.total_p99_s, 0.0);
     }
 

@@ -123,6 +123,7 @@ fn dispatch(sub: &str, rest: &[String]) -> anyhow::Result<()> {
                 "autotune per-layer execution strategies for a zoo model",
             )
             .opt("model", "dcgan|artgan|gpgan|ebgan|smallest", Some("smallest"))
+            .opt("batch", "serving batch size to tune for (adds fused lanes)", Some("1"))
             .opt("cache", "tuning-cache JSON path", Some("tuning-cache.json"))
             .opt("workers", "max worker count in the search space", None)
             .opt("warmup", "warmup iterations per candidate", Some("1"))
@@ -143,7 +144,12 @@ fn dispatch(sub: &str, rest: &[String]) -> anyhow::Result<()> {
             .opt("requests", "burst size", Some("24"))
             .opt("workers", "coordinator workers", Some("2"))
             .opt("batch-workers", "threads per batch (per-worker arenas)", Some("1"))
-            .opt("max-batch", "dynamic batch cap", Some("8"));
+            .opt("max-batch", "dynamic batch cap", Some("8"))
+            .opt(
+                "tune-cache",
+                "autotune backends through this cache (batched for max-batch)",
+                None,
+            );
             let a = cmd.parse(rest)?;
             let cfg = serving::ServingConfig {
                 model: GanModel::from_name(a.get_or("model", "gpgan"))
@@ -152,6 +158,7 @@ fn dispatch(sub: &str, rest: &[String]) -> anyhow::Result<()> {
                 workers_per_model: a.get_usize("workers", 2)?,
                 batch_workers: a.get_usize("batch-workers", 1)?,
                 max_batch: a.get_usize("max-batch", 8)?,
+                tune_cache: a.get("tune-cache").map(std::path::PathBuf::from),
                 ..Default::default()
             };
             let results = serving::run_matrix(&cfg)?;
@@ -160,12 +167,37 @@ fn dispatch(sub: &str, rest: &[String]) -> anyhow::Result<()> {
         }
         "info" => {
             for m in GanModel::all() {
+                // Per-batch peak scratch (DESIGN.md §Batched-Execution):
+                // one shared arena per serving worker is sized by the
+                // worst layer; the packed GEMM operands are plan-resident
+                // across all layers.  Derived analytically — no plans are
+                // built, so EB-GAN stays cheap to inspect.
+                let scratches: Vec<ukstc::conv::memory::PlannedScratch> = m
+                    .layers()
+                    .iter()
+                    .map(|l| ukstc::conv::memory::planned_scratch(&l.params()))
+                    .collect();
+                let f32s = std::mem::size_of::<f32>();
+                let arena = |b: usize| {
+                    scratches
+                        .iter()
+                        .map(|s| s.peak_batch_floats(b))
+                        .max()
+                        .unwrap_or(0)
+                        * f32s
+                };
+                let packed: usize =
+                    scratches.iter().map(|s| s.packed_kernel_floats).sum::<usize>() * f32s;
                 println!(
-                    "{:8} layers={} z_dim={} memory_savings={} B",
+                    "{:8} layers={} z_dim={} memory_savings={} B peak_scratch(b=1)={} B \
+                     peak_scratch(b=8)={} B packed_operands={} B",
                     m.name(),
                     m.layers().len(),
                     m.z_dim(),
-                    m.total_memory_savings()
+                    m.total_memory_savings(),
+                    arena(1),
+                    arena(8),
+                    packed
                 );
             }
             Ok(())
@@ -190,20 +222,22 @@ fn tune(a: &Args) -> anyhow::Result<()> {
             .ok_or_else(|| anyhow::anyhow!("unknown model '{name}'"))?,
     };
     let max_workers = a.get_usize("workers", threadpool::default_parallelism())?;
+    let batch = a.get_usize("batch", 1)?.max(1);
     let budget = MeasureBudget {
         warmup: a.get_usize("warmup", 1)?,
         min_time_s: a.get_f64("min-time-ms", 20.0)? / 1e3,
         max_iters: a.get_usize("max-iters", 25)?.max(1),
     };
-    let tuner = Tuner::new(max_workers).with_budget(budget);
+    let tuner = Tuner::for_batch(max_workers, batch).with_budget(budget);
     let mut tuning_cache = if a.has_flag("no-cache") {
         TuningCache::in_memory()
     } else {
         TuningCache::load(std::path::Path::new(a.get_or("cache", "tuning-cache.json")))?
     };
     log::info!(
-        "tuning {} ({} strategies, fingerprint {})",
+        "tuning {} at batch {} ({} strategies, fingerprint {})",
         model.name(),
+        batch,
         tuner.space.len(),
         cache::host_fingerprint()
     );
@@ -237,8 +271,9 @@ fn tune(a: &Args) -> anyhow::Result<()> {
     }
     report::print_table(
         &format!(
-            "Autotune — {} per-layer winners ({})",
+            "Autotune — {} per-layer winners (batch {}, {})",
             model.name(),
+            batch,
             cache::host_fingerprint()
         ),
         &["#", "layer", "strategy", "best", "vs serial", "cache"],
@@ -266,7 +301,12 @@ fn serve(rest: &[String]) -> anyhow::Result<()> {
         .opt("rate", "Poisson request rate (req/s)", Some("20"))
         .opt("requests", "number of requests", Some("40"))
         .opt("workers", "coordinator workers per model", Some("2"))
-        .opt("max-batch", "dynamic batch cap", Some("8"));
+        .opt("max-batch", "dynamic batch cap", Some("8"))
+        .opt(
+            "tune-cache",
+            "autotune the rust backend through this cache (batched for max-batch)",
+            None,
+        );
     let a = cmd.parse(rest)?;
 
     let mut cfg = if let Some(path) = a.get("config") {
@@ -303,12 +343,20 @@ fn serve(rest: &[String]) -> anyhow::Result<()> {
     } else {
         let model = GanModel::from_name(&model_cfg.name)
             .ok_or_else(|| anyhow::anyhow!("unknown model '{}'", model_cfg.name))?;
-        let backend = RustBackend::new(
+        let mut backend = RustBackend::new(
             model,
             model_cfg.algorithm,
             model_cfg.lane(),
             model_cfg.seed,
             cfg.max_batch,
+        );
+        if let Some(path) = a.get("tune-cache") {
+            backend = backend.with_autotune_batch(Some(std::path::Path::new(path)), cfg.max_batch);
+        }
+        println!(
+            "backend: rust, {} batch lane (max_batch={})",
+            if backend.is_fused_batch() { "fused" } else { "per-latent" },
+            cfg.max_batch
         );
         model_name = model.name().to_string();
         z_dim = model.z_dim();

@@ -16,7 +16,7 @@
 use crate::conv::parallel::{run_seg, Algorithm, Lane};
 use crate::conv::plan::{ConvTransposePlan, Scratch};
 use crate::conv::segregation::Segregated;
-use crate::tensor::{ops, Feature, Kernel};
+use crate::tensor::{ops, Feature, FeatureBatch, Kernel};
 use crate::tune::space::ExecStrategy;
 use crate::util::rng::Rng;
 
@@ -105,6 +105,60 @@ impl LayerWeights {
         match &self.strategy {
             Some(s) => self.plan.scratch_floats_for(s),
             None => self.plan.scratch_floats_direct(),
+        }
+    }
+
+    /// One fused batched transpose conv (DESIGN.md §Batched-Execution):
+    /// under the pinned strategy when one is set — through the plan's
+    /// fused batched lanes when the strategy is fused, as a per-latent
+    /// loop of the single-image lane otherwise (the tuner's A/B) — or
+    /// under the caller's lane when no strategy is pinned.  The direct
+    /// dispatches are bit-identical to `N` sequential
+    /// [`apply`](Self::apply) calls.
+    pub fn apply_batch(
+        &self,
+        x: &FeatureBatch,
+        lane: Lane,
+        scratch: &mut Scratch,
+        out: &mut FeatureBatch,
+    ) {
+        match &self.strategy {
+            Some(s) if s.fused => self.plan.run_batch_with(s, x, scratch, out),
+            Some(s) => {
+                // One input/output pair reused across the whole loop —
+                // the per-latent pin costs two image copies per latent,
+                // never a per-latent heap allocation (the planned lanes
+                // overwrite every element, so reuse is safe).
+                let mut xi = Feature::zeros(x.h, x.w, x.c);
+                let mut oi = self.plan.new_output();
+                for i in 0..x.n {
+                    xi.data.copy_from_slice(x.image(i));
+                    self.plan.run_with(s, &xi, scratch, &mut oi);
+                    out.image_mut(i).copy_from_slice(&oi.data);
+                }
+            }
+            None => match lane {
+                Lane::Serial => self.plan.run_batch(x, scratch, out),
+                Lane::Parallel(w) => self.plan.run_batch_par(x, scratch, out, w),
+            },
+        }
+    }
+
+    /// Scratch floats the batched execution of this layer needs at
+    /// batch size `n` under `lane` (the batched analogue of
+    /// [`scratch_floats`](Self::scratch_floats)): lane-driven serial
+    /// dispatch loops one direct region, so it never pays the
+    /// image-parallel lane's `n×` regions.
+    pub fn scratch_floats_batch(&self, n: usize, lane: Lane) -> usize {
+        match &self.strategy {
+            Some(s) if s.fused => self.plan.scratch_floats_for_batch(s, n),
+            Some(s) => self.plan.scratch_floats_for(s),
+            None => match lane {
+                Lane::Serial => self.plan.scratch_floats_direct(),
+                // The image-parallel direct lane owns one direct
+                // region per image.
+                Lane::Parallel(_) => self.plan.scratch_floats_batch_par(n),
+            },
         }
     }
 }
@@ -227,6 +281,24 @@ impl Generator {
             .unwrap_or(0)
     }
 
+    /// Arena sized for fused batched execution at batch size `n`
+    /// under `lane` (DESIGN.md §Batched-Execution) — the batched
+    /// analogue of [`scratch`](Self::scratch).
+    pub fn scratch_batch(&self, n: usize, lane: Lane) -> Scratch {
+        Scratch::with_floats(self.max_scratch_floats_batch(n, lane))
+    }
+
+    /// Exact per-arena float requirement for batched execution at
+    /// batch size `n` under `lane` (max over the layers, per pinned
+    /// strategy).
+    pub fn max_scratch_floats_batch(&self, n: usize, lane: Lane) -> usize {
+        self.layers
+            .iter()
+            .map(|lw| lw.scratch_floats_batch(n, lane))
+            .max()
+            .unwrap_or(0)
+    }
+
     /// Full forward pass: latent → image, with the chosen conv backend.
     /// Allocates a fresh arena — steady-state callers (the serving
     /// backend, the benches) should hold one and use
@@ -253,6 +325,53 @@ impl Generator {
                 ops::tanh_inplace(&mut x);
             } else {
                 ops::relu_inplace(&mut x);
+            }
+        }
+        x
+    }
+
+    /// Fused batched forward pass (DESIGN.md §Batched-Execution):
+    /// latents → one [`FeatureBatch`] of images through the unified
+    /// planned path, each layer executing the **whole** micro-batch in
+    /// one call ([`LayerWeights::apply_batch`]) with batched
+    /// bias+activation epilogues.  Allocates a fresh arena —
+    /// steady-state callers use
+    /// [`forward_batch_with`](Self::forward_batch_with).
+    pub fn forward_batch(&self, latents: &[Vec<f32>], lane: Lane) -> FeatureBatch {
+        let mut scratch = self.scratch_batch(latents.len(), lane);
+        self.forward_batch_with(latents, lane, &mut scratch)
+    }
+
+    /// [`forward_batch`](Self::forward_batch) threading one scratch
+    /// arena through all layers.  Per image, the arithmetic is exactly
+    /// the single-image [`forward_with`](Self::forward_with)'s — same
+    /// projection, same conv cores, same epilogues — so the batched
+    /// forward is bit-identical to `N` sequential forwards on the
+    /// direct lanes and within 1e-4 on pinned GEMM lanes.
+    pub fn forward_batch_with(
+        &self,
+        latents: &[Vec<f32>],
+        lane: Lane,
+        scratch: &mut Scratch,
+    ) -> FeatureBatch {
+        let spec0 = self.layers[0].spec;
+        let (n0, c0) = (spec0.n_in, spec0.cin);
+        let n = latents.len();
+        let mut x = FeatureBatch::zeros(n, n0, n0, c0);
+        for (i, z) in latents.iter().enumerate() {
+            let f = self.project(z);
+            x.image_mut(i).copy_from_slice(&f.data);
+        }
+        let last = self.layers.len() - 1;
+        for (i, lw) in self.layers.iter().enumerate() {
+            let mut y = lw.plan.new_batch_output(n);
+            lw.apply_batch(&x, lane, scratch, &mut y);
+            x = y;
+            ops::add_bias_batch_inplace(&mut x, &lw.bias);
+            if i == last {
+                ops::tanh_batch_inplace(&mut x);
+            } else {
+                ops::relu_batch_inplace(&mut x);
             }
         }
         x
@@ -477,6 +596,120 @@ mod tests {
                 "pinned GEMM strategies diverged"
             );
         }
+        g.clear_strategies();
+    }
+
+    #[test]
+    fn forward_batch_bit_identical_to_sequential_forwards() {
+        // ISSUE 5 acceptance: forward_batch == N sequential forwards,
+        // bit-identically on direct lanes — ragged batch sizes included.
+        let g = tiny_generator();
+        let mut rng = Rng::seeded(64);
+        for n in [1usize, 3, 8] {
+            let latents: Vec<Vec<f32>> = (0..n)
+                .map(|_| (0..g.model.z_dim()).map(|_| rng.normal_f32()).collect())
+                .collect();
+            for lane in [Lane::Serial, Lane::Parallel(3)] {
+                let batched = g.forward_batch(&latents, lane);
+                assert_eq!((batched.n, batched.h, batched.w, batched.c), (n, 16, 16, 3));
+                for (i, z) in latents.iter().enumerate() {
+                    let want = g.forward(z, Algorithm::Unified, lane);
+                    assert_eq!(
+                        batched.image(i),
+                        &want.data[..],
+                        "image {i} diverged (n={n}, {})",
+                        lane.name()
+                    );
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn forward_batch_with_pinned_strategies() {
+        // Pinned fused GEMM strategies: within the 1e-4 reassociation
+        // tolerance of the direct forward.  Pinned non-fused strategies
+        // take the per-latent loop and stay bit-identical.
+        use crate::tune::space::ExecStrategy;
+        let mut g = tiny_generator();
+        let latents: Vec<Vec<f32>> = (0..3)
+            .map(|i| vec![0.05 * (i + 1) as f32; g.model.z_dim()])
+            .collect();
+        let want: Vec<Feature> = latents
+            .iter()
+            .map(|z| g.forward(z, Algorithm::Unified, Lane::Serial))
+            .collect();
+        g.set_strategies(&[
+            ExecStrategy::serial_gemm().fused(),
+            ExecStrategy::gemm_parallel(2).fused(),
+        ]);
+        let fused = g.forward_batch(&latents, Lane::Serial);
+        for (i, w) in want.iter().enumerate() {
+            let img = Feature::from_vec(16, 16, 3, fused.image(i).to_vec());
+            assert!(
+                max_abs_diff(&img, w) < 1e-4,
+                "fused GEMM batch diverged on image {i}"
+            );
+        }
+        g.set_strategies(&[
+            ExecStrategy::serial(),
+            ExecStrategy::parallel(2, crate::tune::space::ParAxis::Rows),
+        ]);
+        let per_latent = g.forward_batch(&latents, Lane::Serial);
+        for (i, w) in want.iter().enumerate() {
+            assert_eq!(per_latent.image(i), &w.data[..], "per-latent pin diverged");
+        }
+        g.clear_strategies();
+    }
+
+    #[test]
+    fn batched_arena_sizing_tracks_strategies_and_lane() {
+        use crate::tune::space::ExecStrategy;
+        let mut g = tiny_generator();
+        let n = 4;
+        // Lane-driven parallel dispatch goes image-parallel: n× direct;
+        // the serial lane loops one direct region and must not pay n×.
+        assert_eq!(
+            g.max_scratch_floats_batch(n, Lane::Parallel(2)),
+            g.layers
+                .iter()
+                .map(|l| l.plan.scratch_floats_batch_par(n))
+                .max()
+                .unwrap()
+        );
+        assert_eq!(
+            g.max_scratch_floats_batch(n, Lane::Serial),
+            g.layers
+                .iter()
+                .map(|l| l.plan.scratch_floats_direct())
+                .max()
+                .unwrap()
+        );
+        // A fused GEMM pin claims the stacked patch/phase regions
+        // (lane irrelevant once strategies are pinned).
+        g.set_strategies(&[
+            ExecStrategy::serial_gemm().fused(),
+            ExecStrategy::serial(),
+        ]);
+        assert_eq!(
+            g.max_scratch_floats_batch(n, Lane::Serial),
+            g.layers[0]
+                .plan
+                .scratch_floats_gemm_batch(n)
+                .max(g.layers[1].plan.scratch_floats_direct())
+        );
+        assert_eq!(
+            g.scratch_batch(n, Lane::Serial).capacity_floats(),
+            g.max_scratch_floats_batch(n, Lane::Serial)
+        );
+        // The batched forward never outgrows the precomputed figure.
+        let latents: Vec<Vec<f32>> = (0..n).map(|_| vec![0.1; g.model.z_dim()]).collect();
+        let mut scratch = g.scratch_batch(n, Lane::Serial);
+        let _ = g.forward_batch_with(&latents, Lane::Serial, &mut scratch);
+        assert_eq!(
+            scratch.capacity_floats(),
+            g.max_scratch_floats_batch(n, Lane::Serial)
+        );
         g.clear_strategies();
     }
 

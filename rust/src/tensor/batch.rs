@@ -1,0 +1,185 @@
+//! Batched feature maps (DESIGN.md §Batched-Execution).
+//!
+//! [`FeatureBatch`] is the serving-side substrate for fused micro-batch
+//! execution: `N` equally-shaped `[H, W, C]` maps laid out contiguously
+//! as `[N, H, W, C]` row-major f32.  Image `i` occupies the slice
+//! `data[i·H·W·C .. (i+1)·H·W·C]` and is bit-compatible with a
+//! standalone [`Feature`] of the same shape, so the batched execution
+//! lanes (`conv::plan::ConvTransposePlan::run_batch*`) and the
+//! per-image reference path see *exactly* the same bytes — which is
+//! what lets the batched direct lanes promise bit-identity with `N`
+//! sequential single-image runs.
+//!
+//! The layout contract is deliberately the simplest one that makes the
+//! batched phase-GEMM fusion work: stacking each image's im2col patch
+//! rows back to back yields one `[N·rows, K]` operand whose row order
+//! matches the `[N·rows, Cout]` result rows scattered back per image —
+//! no permutation, no per-image GEMM dispatch, one packed B panel
+//! streamed once for the whole batch.
+
+use super::Feature;
+use crate::util::rng::Rng;
+
+/// `[N, H, W, C]` row-major f32 batch of equally-shaped feature maps.
+#[derive(Debug, Clone, PartialEq)]
+pub struct FeatureBatch {
+    /// Batch size `N` (may be 0 for an empty batch).
+    pub n: usize,
+    pub h: usize,
+    pub w: usize,
+    pub c: usize,
+    pub data: Vec<f32>,
+}
+
+impl FeatureBatch {
+    /// Zero-filled batch.
+    pub fn zeros(n: usize, h: usize, w: usize, c: usize) -> FeatureBatch {
+        FeatureBatch {
+            n,
+            h,
+            w,
+            c,
+            data: vec![0.0; n * h * w * c],
+        }
+    }
+
+    /// Standard-normal random batch.
+    pub fn random(n: usize, h: usize, w: usize, c: usize, rng: &mut Rng) -> FeatureBatch {
+        let mut b = FeatureBatch::zeros(n, h, w, c);
+        rng.fill_normal(&mut b.data);
+        b
+    }
+
+    /// Wrap an existing buffer (length must be `n*h*w*c`).
+    pub fn from_vec(n: usize, h: usize, w: usize, c: usize, data: Vec<f32>) -> FeatureBatch {
+        assert_eq!(
+            data.len(),
+            n * h * w * c,
+            "FeatureBatch::from_vec length mismatch"
+        );
+        FeatureBatch { n, h, w, c, data }
+    }
+
+    /// Stack equally-shaped features into one contiguous batch.
+    pub fn from_features(features: &[Feature]) -> FeatureBatch {
+        assert!(!features.is_empty(), "FeatureBatch::from_features: empty");
+        let (h, w, c) = (features[0].h, features[0].w, features[0].c);
+        let mut out = FeatureBatch::zeros(features.len(), h, w, c);
+        for (i, f) in features.iter().enumerate() {
+            assert_eq!(
+                (f.h, f.w, f.c),
+                (h, w, c),
+                "FeatureBatch::from_features: shape mismatch at image {i}"
+            );
+            out.image_mut(i).copy_from_slice(&f.data);
+        }
+        out
+    }
+
+    /// Floats per image (`H·W·C`).
+    #[inline]
+    pub fn image_floats(&self) -> usize {
+        self.h * self.w * self.c
+    }
+
+    /// Borrow image `i` as its raw `[H, W, C]` row-major slice.
+    #[inline]
+    pub fn image(&self, i: usize) -> &[f32] {
+        let len = self.image_floats();
+        &self.data[i * len..(i + 1) * len]
+    }
+
+    /// Mutably borrow image `i`.
+    #[inline]
+    pub fn image_mut(&mut self, i: usize) -> &mut [f32] {
+        let len = self.image_floats();
+        &mut self.data[i * len..(i + 1) * len]
+    }
+
+    /// Copy image `i` out into an owned [`Feature`].
+    pub fn feature(&self, i: usize) -> Feature {
+        Feature::from_vec(self.h, self.w, self.c, self.image(i).to_vec())
+    }
+
+    /// Split the batch into owned per-image [`Feature`]s.
+    pub fn into_features(self) -> Vec<Feature> {
+        let (h, w, c) = (self.h, self.w, self.c);
+        let len = h * w * c;
+        self.data
+            .chunks(len.max(1))
+            .take(self.n)
+            .map(|img| Feature::from_vec(h, w, c, img.to_vec()))
+            .collect()
+    }
+
+    /// Total element count across the batch.
+    pub fn len(&self) -> usize {
+        self.data.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.data.is_empty()
+    }
+
+    /// Bytes occupied by the raw data (fp32).
+    pub fn bytes(&self) -> usize {
+        self.data.len() * std::mem::size_of::<f32>()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn layout_is_image_major_contiguous() {
+        let mut b = FeatureBatch::zeros(2, 2, 3, 4);
+        b.image_mut(1)[(1 * 3 + 2) * 4 + 3] = 9.0;
+        // Image 1 starts at offset H·W·C = 24.
+        assert_eq!(b.data[24 + (1 * 3 + 2) * 4 + 3], 9.0);
+        assert_eq!(b.image(0).len(), 24);
+        assert_eq!(b.image_floats(), 24);
+    }
+
+    #[test]
+    fn image_slices_bit_compatible_with_feature() {
+        let mut rng = Rng::seeded(7);
+        let fs: Vec<Feature> = (0..3).map(|_| Feature::random(4, 5, 2, &mut rng)).collect();
+        let b = FeatureBatch::from_features(&fs);
+        assert_eq!((b.n, b.h, b.w, b.c), (3, 4, 5, 2));
+        for (i, f) in fs.iter().enumerate() {
+            assert_eq!(b.image(i), &f.data[..], "image {i} bytes diverged");
+            assert_eq!(&b.feature(i), f);
+        }
+        let back = b.into_features();
+        assert_eq!(back, fs);
+    }
+
+    #[test]
+    fn bytes_and_len() {
+        let b = FeatureBatch::zeros(3, 2, 2, 2);
+        assert_eq!(b.len(), 24);
+        assert_eq!(b.bytes(), 24 * 4);
+        assert!(!b.is_empty());
+        assert!(FeatureBatch::zeros(0, 2, 2, 2).is_empty());
+    }
+
+    #[test]
+    #[should_panic(expected = "length mismatch")]
+    fn from_vec_checks_len() {
+        FeatureBatch::from_vec(2, 2, 2, 2, vec![0.0; 15]);
+    }
+
+    #[test]
+    #[should_panic(expected = "shape mismatch")]
+    fn from_features_checks_shapes() {
+        FeatureBatch::from_features(&[Feature::zeros(2, 2, 1), Feature::zeros(2, 3, 1)]);
+    }
+
+    #[test]
+    fn random_fills_all() {
+        let mut rng = Rng::seeded(8);
+        let b = FeatureBatch::random(2, 3, 3, 2, &mut rng);
+        assert!(b.data.iter().any(|&v| v != 0.0));
+    }
+}

@@ -2,14 +2,19 @@
 //!
 //! Concrete, layout-explicit types rather than a generic ndarray:
 //! * [`Feature`] — `[H, W, C]` row-major f32 feature map,
+//! * [`FeatureBatch`] — `[N, H, W, C]` contiguous micro-batch
+//!   (DESIGN.md §Batched-Execution),
 //! * [`Kernel`] — `[n, n, Cin, Cout]` (HWIO) f32 convolution kernel,
 //! * [`SubKernel`] — a segregated `[R, C, Cin, Cout]` fragment.
 //!
 //! Row-major HWC matches the Python oracle's layout, so golden vectors
 //! flow between the two sides without permutation.
 
+pub mod batch;
 pub mod io;
 pub mod ops;
+
+pub use batch::FeatureBatch;
 
 use crate::util::rng::Rng;
 

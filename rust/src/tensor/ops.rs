@@ -1,6 +1,6 @@
 //! Feature-map transforms used by the conv algorithms.
 
-use super::Feature;
+use super::{Feature, FeatureBatch};
 
 /// Bed-of-nails upsampling (Algorithm 1): `N×M → (2N-1)×(2M-1)` with the
 /// original pixels at even coordinates and zeros elsewhere.
@@ -103,28 +103,83 @@ pub fn max_abs_diff(a: &Feature, b: &Feature) -> f32 {
         .fold(0.0, f32::max)
 }
 
-/// Elementwise ReLU in place.
-pub fn relu_inplace(x: &mut Feature) {
-    for v in &mut x.data {
+/// Elementwise ReLU over a raw f32 slice — shared by the single-image
+/// and batched epilogues (identical arithmetic, so the batched forward
+/// stays bit-identical to per-image execution).
+pub fn relu_slice_inplace(xs: &mut [f32]) {
+    for v in xs {
         *v = v.max(0.0);
     }
 }
 
-/// Elementwise tanh in place.
-pub fn tanh_inplace(x: &mut Feature) {
-    for v in &mut x.data {
+/// Elementwise tanh over a raw f32 slice (see [`relu_slice_inplace`]).
+pub fn tanh_slice_inplace(xs: &mut [f32]) {
+    for v in xs {
         *v = v.tanh();
     }
+}
+
+/// Per-channel bias over a raw `[.., C]` row-major slice.
+pub fn add_bias_slice_inplace(xs: &mut [f32], bias: &[f32]) {
+    assert!(!bias.is_empty(), "bias length mismatch");
+    assert_eq!(xs.len() % bias.len(), 0, "bias length mismatch");
+    for px in xs.chunks_exact_mut(bias.len()) {
+        for (v, b) in px.iter_mut().zip(bias) {
+            *v += b;
+        }
+    }
+}
+
+/// Elementwise ReLU in place.
+pub fn relu_inplace(x: &mut Feature) {
+    relu_slice_inplace(&mut x.data);
+}
+
+/// Elementwise tanh in place.
+pub fn tanh_inplace(x: &mut Feature) {
+    tanh_slice_inplace(&mut x.data);
 }
 
 /// Add per-channel bias in place (`bias.len() == x.c`).
 pub fn add_bias_inplace(x: &mut Feature, bias: &[f32]) {
     assert_eq!(bias.len(), x.c, "bias length mismatch");
-    for px in x.data.chunks_exact_mut(bias.len()) {
-        for (v, b) in px.iter_mut().zip(bias) {
-            *v += b;
-        }
+    add_bias_slice_inplace(&mut x.data, bias);
+}
+
+/// Batched epilogues (DESIGN.md §Batched-Execution): the `[N, H, W, C]`
+/// layout is channel-minor like a single map, so one pass over the
+/// whole batch applies the per-channel bias / activation to every
+/// image with the same per-element arithmetic as N single-image calls.
+pub fn relu_batch_inplace(x: &mut FeatureBatch) {
+    relu_slice_inplace(&mut x.data);
+}
+
+/// Batched tanh (see [`relu_batch_inplace`]).
+pub fn tanh_batch_inplace(x: &mut FeatureBatch) {
+    tanh_slice_inplace(&mut x.data);
+}
+
+/// Batched per-channel bias (`bias.len() == x.c`).
+pub fn add_bias_batch_inplace(x: &mut FeatureBatch, bias: &[f32]) {
+    assert_eq!(bias.len(), x.c, "bias length mismatch");
+    if x.n == 0 {
+        return;
     }
+    add_bias_slice_inplace(&mut x.data, bias);
+}
+
+/// Max |a-b| over two equally-shaped batches.
+pub fn max_abs_diff_batch(a: &FeatureBatch, b: &FeatureBatch) -> f32 {
+    assert_eq!(
+        (a.n, a.h, a.w, a.c),
+        (b.n, b.h, b.w, b.c),
+        "max_abs_diff_batch shape mismatch"
+    );
+    a.data
+        .iter()
+        .zip(&b.data)
+        .map(|(x, y)| (x - y).abs())
+        .fold(0.0, f32::max)
 }
 
 #[cfg(test)]
@@ -190,6 +245,29 @@ mod tests {
         assert_eq!(x.data, vec![0.0, 1.0, 4.0, 0.0]);
         tanh_inplace(&mut x);
         assert!((x.data[2] - 4f32.tanh()).abs() < 1e-6);
+    }
+
+    #[test]
+    fn batched_epilogues_match_per_image() {
+        // One batched pass must be bit-identical to N per-image passes.
+        let mut rng = Rng::seeded(5);
+        let fs: Vec<Feature> = (0..3).map(|_| Feature::random(2, 3, 2, &mut rng)).collect();
+        let bias = [0.5f32, -1.25];
+        let mut batch = FeatureBatch::from_features(&fs);
+        add_bias_batch_inplace(&mut batch, &bias);
+        relu_batch_inplace(&mut batch);
+        tanh_batch_inplace(&mut batch);
+        for (i, f) in fs.iter().enumerate() {
+            let mut one = f.clone();
+            add_bias_inplace(&mut one, &bias);
+            relu_inplace(&mut one);
+            tanh_inplace(&mut one);
+            assert_eq!(batch.image(i), &one.data[..], "image {i}");
+        }
+        assert_eq!(max_abs_diff_batch(&batch, &batch), 0.0);
+        // Empty batches are fine (the coordinator never forms them, but
+        // the ops must not panic on the degenerate shape).
+        add_bias_batch_inplace(&mut FeatureBatch::zeros(0, 2, 2, 2), &[0.0, 0.0]);
     }
 
     #[test]

@@ -154,7 +154,17 @@ impl TuningCache {
     /// different question); delete the cache file to re-tune at a
     /// higher budget.
     pub fn key(params: &ConvTransposeParams, space_workers: usize) -> String {
-        format!(
+        Self::key_batch(params, space_workers, 1)
+    }
+
+    /// [`key`](Self::key) for a serving batch size: batch `> 1`
+    /// verdicts answer a different question (fused batched lanes are
+    /// in the space, the work per step is `N×`), so they get a `bN`
+    /// suffix and can never shadow — or be shadowed by — single-image
+    /// verdicts.  Batch 1 keeps the historic key, so existing cache
+    /// files stay valid.
+    pub fn key_batch(params: &ConvTransposeParams, space_workers: usize, batch: usize) -> String {
+        let base = format!(
             "n{}k{}p{}ci{}co{}@{}w{}",
             params.n_in,
             params.n_k,
@@ -163,11 +173,26 @@ impl TuningCache {
             params.cout,
             host_fingerprint(),
             space_workers
-        )
+        );
+        if batch <= 1 {
+            base
+        } else {
+            format!("{base}b{batch}")
+        }
     }
 
     pub fn get(&self, params: &ConvTransposeParams, space_workers: usize) -> Option<&CacheEntry> {
-        self.entries.get(&Self::key(params, space_workers))
+        self.get_batch(params, space_workers, 1)
+    }
+
+    /// Lookup for a serving batch size (see [`key_batch`](Self::key_batch)).
+    pub fn get_batch(
+        &self,
+        params: &ConvTransposeParams,
+        space_workers: usize,
+        batch: usize,
+    ) -> Option<&CacheEntry> {
+        self.entries.get(&Self::key_batch(params, space_workers, batch))
     }
 
     pub fn put(
@@ -190,8 +215,23 @@ impl TuningCache {
         seconds: f64,
         candidates: &[(ExecStrategy, Option<f64>)],
     ) {
+        self.put_with_candidates_batch(params, space_workers, 1, strategy, seconds, candidates);
+    }
+
+    /// [`put_with_candidates`](Self::put_with_candidates) under the
+    /// batch-extended key (what `Tuner::tune_layer_cached` records for
+    /// a batched search).
+    pub fn put_with_candidates_batch(
+        &mut self,
+        params: &ConvTransposeParams,
+        space_workers: usize,
+        batch: usize,
+        strategy: ExecStrategy,
+        seconds: f64,
+        candidates: &[(ExecStrategy, Option<f64>)],
+    ) {
         self.entries.insert(
-            Self::key(params, space_workers),
+            Self::key_batch(params, space_workers, batch),
             CacheEntry {
                 strategy,
                 seconds,
@@ -279,6 +319,31 @@ mod tests {
         // A narrower search space is a different question.
         assert_ne!(TuningCache::key(&params(4), 2), a);
         assert!(a.ends_with("w8"), "{a}");
+    }
+
+    #[test]
+    fn batch_keys_disjoint_from_single_image_keys() {
+        // Batch 1 is exactly the historic key (old cache files stay
+        // valid); batch > 1 is a distinct namespace per batch size.
+        let single = TuningCache::key(&params(4), 8);
+        assert_eq!(TuningCache::key_batch(&params(4), 8, 1), single);
+        let b4 = TuningCache::key_batch(&params(4), 8, 4);
+        assert!(b4.ends_with("w8b4"), "{b4}");
+        assert_ne!(b4, single);
+        assert_ne!(TuningCache::key_batch(&params(4), 8, 8), b4);
+        let mut cache = TuningCache::in_memory();
+        cache.put_with_candidates_batch(
+            &params(4),
+            8,
+            4,
+            ExecStrategy::serial_gemm().fused(),
+            1e-4,
+            &[],
+        );
+        assert!(cache.get(&params(4), 8).is_none(), "b4 must not shadow b1");
+        let hit = cache.get_batch(&params(4), 8, 4).unwrap();
+        assert_eq!(hit.strategy, ExecStrategy::serial_gemm().fused());
+        assert!(cache.get_batch(&params(4), 8, 2).is_none());
     }
 
     #[test]

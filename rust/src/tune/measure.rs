@@ -14,7 +14,7 @@
 //! fake and prove that a cache hit performs **zero** measurements.
 
 use crate::conv::plan::{ConvTransposePlan, Scratch};
-use crate::tensor::Feature;
+use crate::tensor::{Feature, FeatureBatch};
 use crate::util::rng::Rng;
 use crate::util::timing;
 
@@ -70,6 +70,24 @@ pub trait Measurer {
         strategy: &ExecStrategy,
         incumbent: Option<f64>,
     ) -> Option<f64>;
+
+    /// Best observed seconds for serving one whole batch of `batch`
+    /// inputs under `strategy` — fused
+    /// (`ConvTransposePlan::run_batch_with`) when the strategy says so,
+    /// a per-latent loop otherwise — so the batched tuner compares the
+    /// two dispatches on the same footing (DESIGN.md
+    /// §Batched-Execution).  Defaults to the single-image measurement
+    /// so scripted test measurers need not care about batching.
+    fn time_strategy_batch(
+        &mut self,
+        plan: &ConvTransposePlan,
+        strategy: &ExecStrategy,
+        batch: usize,
+        incumbent: Option<f64>,
+    ) -> Option<f64> {
+        let _ = batch;
+        self.time_strategy(plan, strategy, incumbent)
+    }
 }
 
 /// Wall-clock [`Measurer`]: deterministic random input per layer
@@ -104,6 +122,33 @@ impl WallClockMeasurer {
         self.prune = false;
         self
     }
+
+    /// Warmup + probe-prune + budgeted trials around one execution
+    /// closure — the measurement protocol shared by the single-image
+    /// and batched candidates.
+    fn run_budgeted(&self, incumbent: Option<f64>, mut step: impl FnMut() -> f32) -> Option<f64> {
+        for _ in 0..self.budget.warmup {
+            step();
+        }
+        // One probe run, then prune hopeless candidates before spending
+        // the full trial budget on them.
+        let (probe, _) = timing::time_once(&mut step);
+        if self.prune {
+            if let Some(best) = incumbent {
+                if probe > PRUNE_FACTOR * best {
+                    return None;
+                }
+            }
+        }
+        let b = self.budget;
+        let m = if b.max_iters < 3 {
+            // measure_for insists on ≥3 samples; honor 1/2-trial budgets.
+            timing::measure(0, b.max_iters.max(1), &mut step)
+        } else {
+            timing::measure_for(0, b.min_time_s, b.max_iters, &mut step)
+        };
+        Some(m.best().min(probe))
+    }
 }
 
 impl Measurer for WallClockMeasurer {
@@ -123,36 +168,53 @@ impl Measurer for WallClockMeasurer {
         let x = Feature::random(p.n_in, p.n_in, p.cin, &mut rng);
         let mut scratch = Scratch::for_plan(plan);
         let mut out = plan.new_output();
-        for _ in 0..self.budget.warmup {
-            plan.run_with(strategy, &x, &mut scratch, &mut out);
-        }
-        // One probe run, then prune hopeless candidates before spending
-        // the full trial budget on them.
-        let (probe, _) = timing::time_once(|| {
+        self.run_budgeted(incumbent, || {
             plan.run_with(strategy, &x, &mut scratch, &mut out);
             out.data[0]
-        });
-        if self.prune {
-            if let Some(best) = incumbent {
-                if probe > PRUNE_FACTOR * best {
-                    return None;
-                }
-            }
+        })
+    }
+
+    /// Batched candidate: one timed step serves the whole `batch` —
+    /// fused through `run_batch_with` when the strategy says so, as a
+    /// per-latent loop otherwise — so fused and per-latent variants of
+    /// the same lane compete on identical work.
+    fn time_strategy_batch(
+        &mut self,
+        plan: &ConvTransposePlan,
+        strategy: &ExecStrategy,
+        batch: usize,
+        incumbent: Option<f64>,
+    ) -> Option<f64> {
+        if batch <= 1 {
+            return self.time_strategy(plan, strategy, incumbent);
         }
-        let b = self.budget;
-        let m = if b.max_iters < 3 {
-            // measure_for insists on ≥3 samples; honor 1/2-trial budgets.
-            timing::measure(0, b.max_iters.max(1), || {
-                plan.run_with(strategy, &x, &mut scratch, &mut out);
+        let p = *plan.params();
+        let mut rng = Rng::seeded(
+            0x7EA5
+                ^ ((batch as u64) << 32)
+                ^ ((p.n_in as u64) << 16)
+                ^ ((p.cin as u64) << 8)
+                ^ (p.cout as u64),
+        );
+        let xb = FeatureBatch::random(batch, p.n_in, p.n_in, p.cin, &mut rng);
+        if strategy.fused {
+            let mut scratch = Scratch::with_floats(plan.scratch_floats_for_batch(strategy, batch));
+            let mut out = plan.new_batch_output(batch);
+            self.run_budgeted(incumbent, || {
+                plan.run_batch_with(strategy, &xb, &mut scratch, &mut out);
                 out.data[0]
             })
         } else {
-            timing::measure_for(0, b.min_time_s, b.max_iters, || {
-                plan.run_with(strategy, &x, &mut scratch, &mut out);
+            let xs: Vec<Feature> = (0..batch).map(|i| xb.feature(i)).collect();
+            let mut scratch = Scratch::for_plan(plan);
+            let mut out = plan.new_output();
+            self.run_budgeted(incumbent, || {
+                for x in &xs {
+                    plan.run_with(strategy, x, &mut scratch, &mut out);
+                }
                 out.data[0]
             })
-        };
-        Some(m.best().min(probe))
+        }
     }
 }
 
@@ -204,6 +266,26 @@ mod tests {
         let mut m = WallClockMeasurer::new(MeasureBudget::quick());
         let t = m.time_strategy(&plan, &ExecStrategy::serial(), Some(1e9));
         assert!(t.is_some());
+    }
+
+    #[test]
+    fn batched_measurement_times_fused_and_per_latent_candidates() {
+        let plan = plan();
+        let mut m = WallClockMeasurer::new(MeasureBudget::quick());
+        for s in [
+            ExecStrategy::serial(),                 // per-latent loop
+            ExecStrategy::serial_gemm().fused(),    // fused stacked GEMM
+            ExecStrategy::gemm_parallel(2).fused(), // fused row-parallel
+            ExecStrategy::parallel(2, crate::tune::space::ParAxis::PhaseRows).fused(),
+        ] {
+            let t = m.time_strategy_batch(&plan, &s, 4, None);
+            assert!(t.is_some(), "{} not measured", s.name());
+            assert!(t.unwrap() >= 0.0);
+        }
+        // Batch 1 delegates to the single-image measurement.
+        assert!(m
+            .time_strategy_batch(&plan, &ExecStrategy::serial(), 1, None)
+            .is_some());
     }
 
     #[test]

@@ -12,7 +12,9 @@
 //! * [`space`] — [`ExecStrategy`]: formulation (phase-decomposed vs
 //!   per-element vs planned phase-GEMM) × lane (serial vs parallel
 //!   worker count) × parallel axis (phase×row queue vs per-phase
-//!   rows), and the [`search_space`] enumeration
+//!   rows) × batched dispatch (fused vs per-latent, DESIGN.md
+//!   §Batched-Execution), and the [`search_space`] /
+//!   [`search_space_batch`] enumerations
 //! * [`measure`] — warmup + adaptive trials per candidate
 //!   (`util::timing::measure_for`) with probe-based early pruning of
 //!   candidates already 2× slower than the incumbent
@@ -37,5 +39,5 @@ pub mod tuner;
 
 pub use cache::{CacheEntry, TuningCache};
 pub use measure::{MeasureBudget, Measurer, WallClockMeasurer};
-pub use space::{search_space, ExecStrategy, Formulation, ParAxis};
+pub use space::{search_space, search_space_batch, ExecStrategy, Formulation, ParAxis};
 pub use tuner::{TunedPlan, Tuner};

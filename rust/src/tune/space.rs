@@ -97,6 +97,14 @@ pub struct ExecStrategy {
     /// Parallel split axis (ignored on the serial lane and by the
     /// per-element formulation).
     pub axis: ParAxis,
+    /// Batched dispatch (DESIGN.md §Batched-Execution): `true` executes
+    /// a whole micro-batch through the plan's fused lanes
+    /// (`ConvTransposePlan::run_batch_with` — stacked phase GEMMs /
+    /// the image×row job queue); `false` loops the batch per latent
+    /// through the single-image lane.  Irrelevant at batch size 1; the
+    /// batched search space ([`search_space_batch`]) carries both so
+    /// the tuner measures the fusion win instead of assuming it.
+    pub fused: bool,
 }
 
 impl ExecStrategy {
@@ -108,6 +116,7 @@ impl ExecStrategy {
             formulation: Formulation::PhaseDecomposed,
             workers: 1,
             axis: ParAxis::PhaseRows,
+            fused: false,
         }
     }
 
@@ -117,6 +126,7 @@ impl ExecStrategy {
             formulation: Formulation::PerElement,
             workers: 1,
             axis: ParAxis::PhaseRows,
+            fused: false,
         }
     }
 
@@ -127,6 +137,7 @@ impl ExecStrategy {
             formulation: Formulation::PhaseDecomposed,
             axis: if workers == 1 { ParAxis::PhaseRows } else { axis },
             workers,
+            fused: false,
         }
     }
 
@@ -136,6 +147,7 @@ impl ExecStrategy {
             formulation: Formulation::PerElement,
             workers: workers.max(1),
             axis: ParAxis::PhaseRows,
+            fused: false,
         }
     }
 
@@ -146,6 +158,7 @@ impl ExecStrategy {
             formulation: Formulation::PhaseGemm,
             workers: 1,
             axis: ParAxis::PhaseRows,
+            fused: false,
         }
     }
 
@@ -157,26 +170,44 @@ impl ExecStrategy {
             formulation: Formulation::PhaseGemm,
             workers: workers.max(1),
             axis: ParAxis::PhaseRows,
+            fused: false,
         }
+    }
+
+    /// Mark this strategy for fused batched dispatch
+    /// (`ConvTransposePlan::run_batch_with`).  The per-element
+    /// formulation has no fused lane — the flag is normalized away so
+    /// `Eq` stays semantic.
+    pub fn fused(mut self) -> ExecStrategy {
+        self.fused = self.formulation != Formulation::PerElement;
+        self
     }
 
     pub fn is_serial(&self) -> bool {
         self.workers == 1
     }
 
-    /// Compact display name, e.g. `phase/par4/rows`.
+    /// Compact display name, e.g. `phase/par4/rows` or
+    /// `phase-gemm/serial/fused`.
     pub fn name(&self) -> String {
-        match (self.formulation, self.workers) {
+        let base = match (self.formulation, self.workers) {
             (f, 1) => format!("{}/serial", f.name()),
             (Formulation::PerElement, w) => format!("per-element/par{w}"),
             (Formulation::PhaseGemm, w) => format!("phase-gemm/par{w}"),
             (Formulation::PhaseDecomposed, w) => {
                 format!("phase/par{w}/{}", self.axis.name())
             }
+        };
+        if self.fused {
+            format!("{base}/fused")
+        } else {
+            base
         }
     }
 
-    /// JSON encoding for the tuning cache (`util::json`).
+    /// JSON encoding for the tuning cache (`util::json`).  The `fused`
+    /// field is written only when set, so pre-batching caches and the
+    /// documented examples stay byte-stable.
     pub fn to_json(&self) -> Json {
         let mut m = BTreeMap::new();
         m.insert(
@@ -185,10 +216,15 @@ impl ExecStrategy {
         );
         m.insert("workers".to_string(), Json::Num(self.workers as f64));
         m.insert("axis".to_string(), Json::Str(self.axis.name().to_string()));
+        if self.fused {
+            m.insert("fused".to_string(), Json::Bool(true));
+        }
         Json::Obj(m)
     }
 
     /// Decode from the cache encoding; `None` on any malformed field.
+    /// A missing `fused` field decodes as per-latent (the only lane
+    /// that existed when such caches were written).
     pub fn from_json(v: &Json) -> Option<ExecStrategy> {
         let formulation = Formulation::from_name(v.get("formulation")?.as_str()?)?;
         let workers = v.get("workers")?.as_usize()?;
@@ -196,11 +232,21 @@ impl ExecStrategy {
             return None;
         }
         let axis = ParAxis::from_name(v.get("axis")?.as_str()?)?;
-        Some(match formulation {
+        let s = match formulation {
             Formulation::PhaseDecomposed => ExecStrategy::parallel(workers, axis),
             Formulation::PerElement => ExecStrategy::per_element_parallel(workers),
             Formulation::PhaseGemm => ExecStrategy::gemm_parallel(workers),
-        })
+        };
+        match v.get("fused") {
+            None => Some(s),
+            Some(f) => {
+                if f.as_bool()? {
+                    Some(s.fused())
+                } else {
+                    Some(s)
+                }
+            }
+        }
     }
 }
 
@@ -238,6 +284,28 @@ pub fn search_space(max_workers: usize) -> Vec<ExecStrategy> {
     out
 }
 
+/// The search space for serving batch size `batch`
+/// (DESIGN.md §Batched-Execution): at `batch ≤ 1` exactly
+/// [`search_space`]; above it, every per-latent strategy **plus** the
+/// fused batched variants — the serial fused GEMM (one stacked phase
+/// GEMM per phase, packed panels streamed once per batch), the fused
+/// row-parallel GEMM, and the fused image×row direct queue per worker
+/// count.  The per-latent serial default stays element zero, so the
+/// incumbent pruning baseline is the pre-batching behavior and a fused
+/// verdict can only come from measuring it faster.
+pub fn search_space_batch(max_workers: usize, batch: usize) -> Vec<ExecStrategy> {
+    let mut out = search_space(max_workers);
+    if batch <= 1 {
+        return out;
+    }
+    out.push(ExecStrategy::serial_gemm().fused());
+    for w in worker_counts(max_workers) {
+        out.push(ExecStrategy::parallel(w, ParAxis::PhaseRows).fused());
+        out.push(ExecStrategy::gemm_parallel(w).fused());
+    }
+    out
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -270,11 +338,41 @@ mod tests {
 
     #[test]
     fn names_unique() {
-        let names: Vec<String> = search_space(8).iter().map(ExecStrategy::name).collect();
+        let names: Vec<String> = search_space_batch(8, 4)
+            .iter()
+            .map(ExecStrategy::name)
+            .collect();
         let mut dedup = names.clone();
         dedup.sort();
         dedup.dedup();
         assert_eq!(names.len(), dedup.len(), "{names:?}");
+    }
+
+    #[test]
+    fn batched_space_extends_per_latent_space() {
+        // batch ≤ 1 is exactly the per-latent space; above it, the
+        // per-latent space is a prefix (serial default still seeds the
+        // incumbent) and the fused variants follow.
+        assert_eq!(search_space_batch(4, 1), search_space(4));
+        assert_eq!(search_space_batch(4, 0), search_space(4));
+        let batched = search_space_batch(4, 8);
+        let base = search_space(4);
+        assert_eq!(&batched[..base.len()], &base[..]);
+        assert_eq!(batched[0], ExecStrategy::serial());
+        assert!(batched.contains(&ExecStrategy::serial_gemm().fused()));
+        assert!(batched.contains(&ExecStrategy::gemm_parallel(4).fused()));
+        assert!(batched.contains(&ExecStrategy::parallel(2, ParAxis::PhaseRows).fused()));
+        // 1 fused serial gemm + 2 fused lanes per worker count {2, 4}.
+        assert_eq!(batched.len(), base.len() + 1 + 2 * 2);
+        assert_eq!(
+            ExecStrategy::serial_gemm().fused().name(),
+            "phase-gemm/serial/fused"
+        );
+        // The per-element formulation has no fused lane — normalized away.
+        assert_eq!(
+            ExecStrategy::serial_per_element().fused(),
+            ExecStrategy::serial_per_element()
+        );
     }
 
     #[test]
@@ -292,7 +390,7 @@ mod tests {
 
     #[test]
     fn json_roundtrip_whole_space() {
-        for s in search_space(8) {
+        for s in search_space_batch(8, 4) {
             let encoded = s.to_json().to_string_compact();
             let decoded =
                 ExecStrategy::from_json(&crate::util::json::parse(&encoded).unwrap()).unwrap();

@@ -13,7 +13,7 @@ use crate::conv::ConvTransposeParams;
 
 use super::cache::TuningCache;
 use super::measure::{MeasureBudget, Measurer};
-use super::space::{search_space, ExecStrategy};
+use super::space::{search_space, search_space_batch, ExecStrategy};
 
 /// The tuning verdict for one layer shape.
 #[derive(Debug, Clone)]
@@ -62,6 +62,12 @@ pub struct Tuner {
     pub space: Vec<ExecStrategy>,
     /// Per-candidate measurement budget.
     pub budget: MeasureBudget,
+    /// Serving batch size every candidate is measured at (1 = the
+    /// historic single-image search).  Batched tuners search the
+    /// extended space — per-latent *and* fused batched variants — and
+    /// their verdicts live under the batch-suffixed cache key
+    /// (DESIGN.md §Batched-Execution).
+    pub batch: usize,
 }
 
 impl Tuner {
@@ -70,6 +76,20 @@ impl Tuner {
         Tuner {
             space: search_space(max_workers),
             budget: MeasureBudget::default(),
+            batch: 1,
+        }
+    }
+
+    /// A tuner that searches batched strategies for serving batch size
+    /// `batch` (`ukstc tune --batch N`): the space gains the fused
+    /// batched lanes, every candidate is timed serving a whole batch,
+    /// and the verdict is cached under the batch-extended key.
+    pub fn for_batch(max_workers: usize, batch: usize) -> Tuner {
+        let batch = batch.max(1);
+        Tuner {
+            space: search_space_batch(max_workers, batch),
+            budget: MeasureBudget::default(),
+            batch,
         }
     }
 
@@ -85,12 +105,15 @@ impl Tuner {
     }
 
     /// Exhaustive search with incumbent pruning over one layer's plan.
+    /// Every candidate is timed at the tuner's serving batch size
+    /// ([`Self::batch`]; 1 = the single-image measurement).
     pub fn tune_layer<M: Measurer>(&self, plan: &ConvTransposePlan, measurer: &mut M) -> TunedPlan {
         assert!(!self.space.is_empty(), "tuner: empty search space");
         let mut best: Option<(ExecStrategy, f64)> = None;
         let mut candidates = Vec::with_capacity(self.space.len());
         for s in &self.space {
-            let t = measurer.time_strategy(plan, s, best.as_ref().map(|b| b.1));
+            let incumbent = best.as_ref().map(|b| b.1);
+            let t = measurer.time_strategy_batch(plan, s, self.batch, incumbent);
             if let Some(sec) = t {
                 let improves = match &best {
                     None => true,
@@ -122,7 +145,7 @@ impl Tuner {
         cache: &mut TuningCache,
         measurer: &mut M,
     ) -> TunedPlan {
-        if let Some(entry) = cache.get(plan.params(), self.space_workers()) {
+        if let Some(entry) = cache.get_batch(plan.params(), self.space_workers(), self.batch) {
             return TunedPlan {
                 params: *plan.params(),
                 strategy: entry.strategy,
@@ -132,9 +155,10 @@ impl Tuner {
             };
         }
         let tuned = self.tune_layer(plan, measurer);
-        cache.put_with_candidates(
+        cache.put_with_candidates_batch(
             plan.params(),
             self.space_workers(),
+            self.batch,
             tuned.strategy,
             tuned.best_seconds,
             &tuned.candidates,
@@ -200,6 +224,35 @@ mod tests {
         assert!(tuned.pruned() > 0);
         assert_eq!(tuned.measured() + tuned.pruned(), tuned.candidates.len());
         assert!(tuned.serial_seconds().is_some());
+    }
+
+    #[test]
+    fn batched_tuner_searches_fused_lanes_and_keys_by_batch() {
+        // The batched space includes fused candidates; verdicts cache
+        // under the batch-suffixed key, disjoint from single-image ones.
+        let winner = ExecStrategy::serial_gemm().fused();
+        let mut m = Scripted {
+            incumbents: Vec::new(),
+            winner,
+        };
+        let tuner = Tuner::for_batch(2, 4);
+        assert_eq!(tuner.batch, 4);
+        assert!(tuner.space.contains(&winner));
+        assert_eq!(tuner.space[0], ExecStrategy::serial());
+        let mut cache = TuningCache::in_memory();
+        let tuned = tuner.tune_layer_cached(&plan(), &mut cache, &mut m);
+        assert_eq!(tuned.strategy, winner);
+        // The single-image tuner must miss on the batched verdict.
+        let single = Tuner::new(2);
+        assert!(cache.get(plan().params(), single.space_workers()).is_none());
+        assert!(cache
+            .get_batch(plan().params(), tuner.space_workers(), 4)
+            .is_some());
+        // And the batched tuner hits on a rerun without measuring.
+        let timed = m.incumbents.len();
+        let again = tuner.tune_layer_cached(&plan(), &mut cache, &mut m);
+        assert!(again.cached);
+        assert_eq!(m.incumbents.len(), timed);
     }
 
     #[test]

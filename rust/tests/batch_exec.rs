@@ -1,0 +1,159 @@
+//! Batched-execution contracts end to end (ISSUE 5, DESIGN.md
+//! §Batched-Execution):
+//!
+//! * `Generator::forward_batch` equals `N` sequential `forward` calls
+//!   **bit-identically** on direct lanes and within 1e-4 on pinned
+//!   GEMM lanes — including ragged tail batches (N = 1, 3 under
+//!   `max_batch = 8`).
+//! * `RustBackend::generate`'s fused batched lane serves exactly what
+//!   the per-latent loop and the batch-worker fan-out lane serve.
+//! * The coordinator exercises the fused lane under dynamic batching
+//!   and records the observed batch-size distribution.
+
+use std::sync::Arc;
+use std::time::Duration;
+
+use ukstc::conv::parallel::{Algorithm, Lane};
+use ukstc::coordinator::backend::RustBackend;
+use ukstc::coordinator::batcher::BatchPolicy;
+use ukstc::coordinator::Coordinator;
+use ukstc::models::forward::LayerWeights;
+use ukstc::models::zoo::LayerSpec;
+use ukstc::models::{GanModel, Generator};
+use ukstc::tensor::{ops, Feature, Kernel};
+use ukstc::tune::space::ExecStrategy;
+use ukstc::util::rng::Rng;
+use ukstc::workload::generator::burst;
+
+/// A millisecond-fast two-layer generator (the coordinator-test shape).
+fn tiny_generator(seed: u64) -> Generator {
+    let mut rng = Rng::seeded(seed);
+    let mut g = Generator::random(GanModel::GpGan, &mut rng);
+    let specs = [LayerSpec::gan(4, 6, 4), LayerSpec::gan(8, 4, 3)];
+    g.layers = specs
+        .iter()
+        .map(|&spec| {
+            let kernel = Kernel::random(spec.ksize, spec.cin, spec.cout, &mut rng);
+            LayerWeights::new(spec, kernel, vec![0.01; spec.cout])
+        })
+        .collect();
+    let out0 = 4 * 4 * 6;
+    g.proj_w = vec![0.01; g.model.z_dim() * out0];
+    g.proj_b = vec![0.0; out0];
+    g
+}
+
+fn latents(n: usize, z_dim: usize, seed: u64) -> Vec<Vec<f32>> {
+    let mut rng = Rng::seeded(seed);
+    (0..n)
+        .map(|_| (0..z_dim).map(|_| rng.normal_f32()).collect())
+        .collect()
+}
+
+#[test]
+fn forward_batch_equals_sequential_forwards_ragged() {
+    let g = tiny_generator(0xBA7C);
+    for n in [1usize, 3, 8] {
+        let zs = latents(n, g.model.z_dim(), 0xFEED ^ n as u64);
+        for lane in [Lane::Serial, Lane::Parallel(3)] {
+            let batched = g.forward_batch(&zs, lane);
+            for (i, z) in zs.iter().enumerate() {
+                let want = g.forward(z, Algorithm::Unified, lane);
+                assert_eq!(
+                    batched.image(i),
+                    &want.data[..],
+                    "direct lane diverged (n={n}, image {i})"
+                );
+            }
+        }
+    }
+}
+
+#[test]
+fn forward_batch_gemm_lanes_within_tolerance() {
+    let mut g = tiny_generator(0xBA7D);
+    let zs = latents(3, g.model.z_dim(), 0xF00D);
+    let want: Vec<Feature> = zs
+        .iter()
+        .map(|z| g.forward(z, Algorithm::Unified, Lane::Serial))
+        .collect();
+    for pins in [
+        [ExecStrategy::serial_gemm().fused(), ExecStrategy::serial_gemm().fused()],
+        [ExecStrategy::gemm_parallel(3).fused(), ExecStrategy::serial()],
+    ] {
+        g.set_strategies(&pins);
+        let batched = g.forward_batch(&zs, Lane::Serial);
+        for (i, w) in want.iter().enumerate() {
+            let got = Feature::from_vec(w.h, w.w, w.c, batched.image(i).to_vec());
+            assert!(
+                ops::max_abs_diff(&got, w) < 1e-4,
+                "pinned fused GEMM batch diverged (image {i})"
+            );
+        }
+    }
+}
+
+#[test]
+fn backend_fused_lane_matches_ab_lanes_on_ragged_batches() {
+    let make = || {
+        RustBackend::from_generator(tiny_generator(0xBA7E), Algorithm::Unified, Lane::Serial, 8)
+    };
+    let fused = make();
+    let per_latent = make().with_per_latent();
+    let fanout = make().with_batch_workers(3);
+    assert!(fused.is_fused_batch());
+    assert_eq!(fused.max_batch(), 8);
+    use ukstc::coordinator::Backend;
+    for n in [1usize, 3, 8] {
+        let zs = latents(n, fused.z_dim(), 0xABC ^ n as u64);
+        let a = fused.generate(&zs);
+        let b = per_latent.generate(&zs);
+        let c = fanout.generate(&zs);
+        assert_eq!(a.len(), n);
+        assert_eq!(a, b, "fused vs per-latent diverged at n={n}");
+        assert_eq!(a, c, "fused vs batch-worker fan-out diverged at n={n}");
+    }
+}
+
+#[test]
+fn coordinator_exercises_fused_lane_and_batch_metrics() {
+    // One worker + a burst bigger than max_batch forces multi-request
+    // batches through the fused lane; the snapshot must expose the
+    // observed batch-size distribution.
+    let backend = Arc::new(RustBackend::from_generator(
+        tiny_generator(0xBA7F),
+        Algorithm::Unified,
+        Lane::Serial,
+        4,
+    ));
+    assert!(backend.is_fused_batch());
+    let coord = Coordinator::builder()
+        .queue_capacity(64)
+        .workers_per_model(1)
+        .batch_policy(BatchPolicy {
+            max_batch: 4,
+            max_delay: Duration::from_millis(5),
+        })
+        .register(backend)
+        .start()
+        .unwrap();
+    let mut rng = Rng::seeded(77);
+    let reqs = burst("gpgan", 100, 12, &mut rng);
+    let rxs: Vec<_> = reqs
+        .into_iter()
+        .map(|r| coord.submit_blocking(r).expect("submit"))
+        .collect();
+    for rx in rxs {
+        let resp = rx.recv().expect("response");
+        assert_eq!((resp.image.h, resp.image.w, resp.image.c), (16, 16, 3));
+    }
+    let snap = coord.metrics("gpgan").unwrap();
+    assert_eq!(snap.completed, 12);
+    assert!(snap.batches >= 3, "12 requests over max_batch 4");
+    assert!(snap.mean_batch_size >= 1.0);
+    assert!(snap.batch_p50 >= 1.0);
+    assert!(snap.batch_p95 >= snap.batch_p50);
+    assert!(snap.batch_p95 <= 4.0, "batch sizes bounded by max_batch");
+    let summary = snap.summary();
+    assert!(summary.contains("size mean"), "{summary}");
+}

@@ -22,7 +22,7 @@ use ukstc::conv::plan::{ConvTransposePlan, Scratch};
 use ukstc::conv::segregation::segregate;
 use ukstc::conv::unified;
 use ukstc::conv::ConvTransposeParams;
-use ukstc::tensor::{ops, Feature, Kernel};
+use ukstc::tensor::{ops, Feature, FeatureBatch, Kernel};
 use ukstc::tune::space::ExecStrategy;
 use ukstc::util::rng::Rng;
 
@@ -155,4 +155,36 @@ fn planned_path_is_zero_alloc_after_warmup() {
         geoms.len()
     );
     assert_eq!((out.h, out.w, out.c), (4, 4, 2));
+
+    // --- Part 4: the batched lanes (ISSUE 5) extend the zero-alloc
+    // guarantee: serial batched direct and the fused batched GEMM touch
+    // only the warm arena, the plan's packed operands, and the
+    // caller-owned FeatureBatch buffers.  One warm-up pass grows the
+    // shared arena to the batched high-water mark; after that, nothing.
+    let (_, plan0, _) = &cases[0];
+    let batch = 3;
+    let xb = FeatureBatch::random(batch, 4, 4, 16, &mut rng);
+    let mut outb = plan0.new_batch_output(batch);
+    plan0.run_batch(&xb, &mut scratch, &mut outb);
+    plan0.run_gemm_batch(&xb, &mut scratch, &mut outb);
+    let before = allocs();
+    for _ in 0..5 {
+        plan0.run_batch(&xb, &mut scratch, &mut outb);
+        plan0.run_gemm_batch(&xb, &mut scratch, &mut outb);
+    }
+    assert_eq!(
+        allocs(),
+        before,
+        "batched lanes heap-allocated in steady state (warm arena)"
+    );
+    // Results stay correct after all that reuse (GEMM ran last, so the
+    // 1e-4 reassociation tolerance applies).
+    for i in 0..batch {
+        let want = unified::transpose_conv_seg(&xb.feature(i), plan0.seg(), 2);
+        let got = Feature::from_vec(want.h, want.w, want.c, outb.image(i).to_vec());
+        assert!(
+            ops::max_abs_diff(&got, &want) < 1e-4,
+            "batched result diverged after arena reuse (image {i})"
+        );
+    }
 }
