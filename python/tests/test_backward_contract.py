@@ -1,0 +1,90 @@
+"""Backward contract: the Rust gradient semantics vs ``jax.vjp``.
+
+``rust/src/conv/backward.rs`` defines the gradient convention every
+planned backward lane is pinned to (bit-identically, by
+``rust/tests/backward_grad.rs``): data-grad as the full correlation of
+the padded output-gradient with the flipped kernel, weight-grad as the
+patch × output-gradient accumulation — both phrased over the same
+bed-of-nails upsample + pad-by-``P`` + VALID-correlation forward the
+layout contract pins.  This test mirrors those gradients index-by-index
+in plain numpy (sharing nothing with jax's autodiff) and asserts they
+agree with ``jax.vjp`` of ``ref.conventional_transpose_conv`` on the
+golden case grid — so a drift in either side's backward convention
+fails without any Rust toolchain in the loop.
+"""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from compile.aot import GOLDEN_CASES
+from compile.kernels import ref
+
+
+def rust_backward_mirror(x, k, dy, padding):
+    """numpy mirror of ``grad_input_conventional`` + ``grad_kernel_conventional``.
+
+    Chain rule through the conventional forward, written as explicit
+    scatter/gather loops: the upsampled-map gradient accumulates
+    ``dy ⊛ k`` patch by patch, then crops the padding and keeps the
+    even (real-pixel) positions; the kernel gradient accumulates
+    ``patch ⊗ dy`` over every output position.
+    """
+    n = x.shape[0]
+    nk = k.shape[0]
+    up_n = 2 * n - 1
+    c = x.shape[2]
+    padded = up_n + 2 * padding
+    up = np.zeros((up_n, up_n, c), np.float32)
+    up[::2, ::2, :] = x
+    upp = np.zeros((padded, padded, c), np.float32)
+    upp[padding : padding + up_n, padding : padding + up_n, :] = up
+    ho = padded - nk + 1
+    dupp = np.zeros_like(upp)
+    dk = np.zeros_like(k)
+    for oy in range(ho):
+        for ox in range(ho):
+            g = dy[oy, ox, :]
+            dupp[oy : oy + nk, ox : ox + nk, :] += np.einsum("uvco,o->uvc", k, g)
+            dk += np.einsum("uvc,o->uvco", upp[oy : oy + nk, ox : ox + nk, :], g)
+    dup = dupp[padding : padding + up_n, padding : padding + up_n, :]
+    dx = dup[::2, ::2, :]
+    return dx, dk
+
+
+def test_rust_backward_semantics_match_jax_vjp():
+    rng = np.random.default_rng(2024)  # same seed family as the goldens
+    for n_in, n_k, pad, cin, cout in GOLDEN_CASES:
+        x = rng.standard_normal((n_in, n_in, cin)).astype(np.float32)
+        k = rng.standard_normal((n_k, n_k, cin, cout)).astype(np.float32)
+        out_n = 2 * n_in + 2 * pad - n_k
+        dy = rng.standard_normal((out_n, out_n, cout)).astype(np.float32)
+
+        def f(xx, kk, pad=pad):
+            return ref.conventional_transpose_conv(xx, kk, pad)
+
+        y, vjp = jax.vjp(f, jnp.asarray(x), jnp.asarray(k))
+        assert y.shape == (out_n, out_n, cout), (n_in, n_k, pad)
+        want_dx, want_dk = (np.asarray(v) for v in vjp(jnp.asarray(dy)))
+        got_dx, got_dk = rust_backward_mirror(x, k, dy, pad)
+        assert got_dx.shape == want_dx.shape == x.shape
+        assert got_dk.shape == want_dk.shape == k.shape
+        dx_err = float(np.abs(got_dx - want_dx).max())
+        dk_err = float(np.abs(got_dk - want_dk).max())
+        dx_tol = 1e-3 * (1.0 + float(np.abs(want_dx).max()))
+        dk_tol = 1e-3 * (1.0 + float(np.abs(want_dk).max()))
+        assert dx_err < dx_tol, f"N={n_in} n={n_k} P={pad}: dx err {dx_err}"
+        assert dk_err < dk_tol, f"N={n_in} n={n_k} P={pad}: dk err {dk_err}"
+
+
+def test_zero_cotangent_gives_zero_grads():
+    # The gradient mirrors are linear in dy: a zero cotangent must
+    # produce exactly zero gradients (no stray accumulation).
+    n_in, n_k, pad, cin, cout = GOLDEN_CASES[0]
+    rng = np.random.default_rng(7)
+    x = rng.standard_normal((n_in, n_in, cin)).astype(np.float32)
+    k = rng.standard_normal((n_k, n_k, cin, cout)).astype(np.float32)
+    out_n = 2 * n_in + 2 * pad - n_k
+    dy = np.zeros((out_n, out_n, cout), np.float32)
+    dx, dk = rust_backward_mirror(x, k, dy, pad)
+    assert not dx.any() and not dk.any()

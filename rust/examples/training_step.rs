@@ -1,96 +1,74 @@
-//! Training-stage demo (§2's claim that the optimization helps "in the
-//! training and inference stages"): run forward + backward through a
-//! transpose-conv layer with both gradient routes, verify they agree,
-//! and take an SGD step that provably reduces the loss.
+//! Real generator training steps over the planned backward lanes
+//! (DESIGN.md §Backward-Execution): forward trace → MSE loss → planned
+//! data-grad + weight-grad per layer → SGD update, on a full Table-4
+//! GAN generator.  Exits nonzero unless the loss strictly decreases —
+//! CI runs this as the training gate.
 //!
 //! ```bash
-//! cargo run --release --example training_step
+//! cargo run --release --example training_step -- [--steps N] [--lr F] [--gemm]
 //! ```
 
-use ukstc::conv::backward::{
-    grad_input_conventional, grad_input_unified, grad_kernel_conventional, grad_kernel_unified,
-};
-use ukstc::conv::{conventional, unified};
-use ukstc::tensor::{ops, Feature, Kernel};
+use ukstc::models::{GanModel, Generator, TrainStep};
+use ukstc::tune::ExecStrategy;
 use ukstc::util::rng::Rng;
 use ukstc::util::timing;
 
-fn loss(y: &Feature, target: &Feature) -> f32 {
-    y.data
-        .iter()
-        .zip(&target.data)
-        .map(|(a, b)| (a - b) * (a - b))
-        .sum::<f32>()
-        / y.data.len() as f32
-}
-
 fn main() {
-    let (n_in, n_k, padding, cin, cout) = (16, 4, 2, 8, 4);
-    let mut rng = Rng::seeded(11);
-    let x = Feature::random(n_in, n_in, cin, &mut rng);
-    let mut k = Kernel::random(n_k, cin, cout, &mut rng);
-    for v in &mut k.data {
-        *v *= 0.25;
-    }
-    let target = Feature::random(2 * n_in, 2 * n_in, cout, &mut rng);
-
-    println!("== training step through the unified transpose conv ==\n");
-    let y0 = unified::transpose_conv(&x, &k, padding);
-    let l0 = loss(&y0, &target);
-    println!("initial loss: {l0:.6}");
-
-    // dL/dy for MSE.
-    let mut dy = y0.clone();
-    for (d, t) in dy.data.iter_mut().zip(&target.data) {
-        *d = 2.0 * (*d - t) / (y0.data.len() as f32);
-    }
-
-    // Both gradient routes agree (and the unified one never builds the
-    // upsampled buffer).
-    let (t_conv, dk_conv) =
-        timing::time_once(|| grad_kernel_conventional(&x, &dy, n_k, padding));
-    let (t_uni, dk_uni) = timing::time_once(|| grad_kernel_unified(&x, &dy, n_k, padding));
-    let dk_err = dk_conv
-        .data
-        .iter()
-        .zip(&dk_uni.data)
-        .map(|(a, b)| (a - b).abs())
-        .fold(0f32, f32::max);
-    println!("\ngrad_kernel: conventional {} vs unified {} (max |Δ| = {dk_err:.2e})",
-        timing::fmt_duration(t_conv), timing::fmt_duration(t_uni));
-    assert!(dk_err < 1e-4);
-
-    let (ti_conv, dx_conv) =
-        timing::time_once(|| grad_input_conventional(&dy, &k, n_in, padding));
-    let (ti_uni, dx_uni) = timing::time_once(|| grad_input_unified(&dy, &k, n_in, padding));
-    let dx_err = ops::max_abs_diff(&dx_conv, &dx_uni);
-    println!("grad_input:  conventional {} vs unified {} (max |Δ| = {dx_err:.2e})",
-        timing::fmt_duration(ti_conv), timing::fmt_duration(ti_uni));
-    assert!(dx_err < 1e-4);
-
-    // SGD steps on the kernel must reduce the loss monotonically-ish.
-    let lr = 2.0;
-    let mut prev = l0;
-    for step in 1..=5 {
-        let y = unified::transpose_conv(&x, &k, padding);
-        let mut dy = y.clone();
-        for (d, t) in dy.data.iter_mut().zip(&target.data) {
-            *d = 2.0 * (*d - t) / (y.data.len() as f32);
+    let args: Vec<String> = std::env::args().skip(1).collect();
+    let mut steps = 3usize;
+    let mut lr = 0.05f32;
+    let mut gemm = false;
+    let mut i = 0;
+    while i < args.len() {
+        match args[i].as_str() {
+            "--steps" => {
+                i += 1;
+                steps = args[i].parse().expect("--steps wants a number");
+            }
+            "--lr" => {
+                i += 1;
+                lr = args[i].parse().expect("--lr wants a number");
+            }
+            "--gemm" => gemm = true,
+            other => panic!("unknown argument: {other}"),
         }
-        let dk = grad_kernel_unified(&x, &dy, n_k, padding);
-        for (w, g) in k.data.iter_mut().zip(&dk.data) {
-            *w -= lr * g;
-        }
-        let l = loss(&unified::transpose_conv(&x, &k, padding), &target);
-        println!("step {step}: loss {l:.6}");
-        assert!(l < prev, "loss must decrease");
-        prev = l;
+        i += 1;
     }
 
-    // Cross-check forward against the conventional algorithm after
-    // training (weights changed, equality must still hold).
-    let a = unified::transpose_conv(&x, &k, padding);
-    let b = conventional::transpose_conv(&x, &k, padding);
-    assert!(ops::max_abs_diff(&a, &b) < 1e-4);
-    println!("\ntraining_step OK (loss {l0:.4} → {prev:.4}, both routes agree)");
+    let model = GanModel::smallest();
+    let mut rng = Rng::seeded(0x7EA1);
+    let mut gen = Generator::random(model, &mut rng);
+    if gemm {
+        // Pin the phase-GEMM backward data-grad lane on every layer —
+        // what `ukstc tune --backward` would pick on GEMM-friendly
+        // shapes.
+        let pins: Vec<ExecStrategy> =
+            gen.layers.iter().map(|_| ExecStrategy::serial_gemm()).collect();
+        gen.set_backward_strategies(&pins);
+    }
+    println!(
+        "== {} training: {} layers, {} weight floats, lr {lr}, {} backward ==\n",
+        model.name(),
+        gen.layers.len(),
+        gen.weight_bytes() / 4,
+        if gemm { "phase-GEMM" } else { "direct" }
+    );
+
+    let mut ts = TrainStep::new(gen, &mut rng, lr);
+    let mut prev = f32::INFINITY;
+    for step in 1..=steps {
+        let (t, loss) = timing::time_once(|| ts.step());
+        println!(
+            "step {step}: loss {loss:.6} ({})",
+            timing::fmt_duration(t)
+        );
+        assert!(
+            loss < prev,
+            "loss must strictly decrease (step {step}: {loss} >= {prev})"
+        );
+        prev = loss;
+    }
+    let final_loss = ts.loss();
+    assert!(final_loss < prev, "post-update loss must beat the last step");
+    println!("\ntraining_step OK (final loss {final_loss:.6}, strictly decreasing)");
 }

@@ -25,13 +25,25 @@
 //!    the fused batched GEMM lane against a per-latent loop of the
 //!    same engine, per Table-4 layer and batch size — how the
 //!    packed-panel reuse scales with `N`.
+//! 10. **Planned vs unplanned backward** (DESIGN.md
+//!    §Backward-Execution): the plan's batched backward lanes against a
+//!    per-image loop of the one-shot unified gradients, per Table-4
+//!    layer and batch size — plus a `training_step` column timing the
+//!    whole forward→loss→backward→SGD step.  [`backward_snapshot_json`]
+//!    serializes this ablation into the committed `BENCH_*.json`
+//!    snapshots.
 
+use std::collections::BTreeMap;
+
+use crate::conv::backward::{grad_input_unified, grad_kernel_unified};
 use crate::conv::parallel::{run, Algorithm, Lane};
 use crate::conv::plan::{ConvTransposePlan, Scratch};
 use crate::conv::{conventional, dilated, flops, im2col, unified, ConvTransposeParams};
 use crate::models::zoo::GanModel;
+use crate::models::{Generator, TrainStep};
 use crate::tensor::{Feature, FeatureBatch, Kernel};
 use crate::tune::{ExecStrategy, MeasureBudget, ParAxis, Tuner, WallClockMeasurer};
+use crate::util::json::Json;
 use crate::util::rng::Rng;
 use crate::util::timing;
 
@@ -463,6 +475,176 @@ pub fn print_batch_fusion(rows: &[BatchFusionRow]) {
     );
 }
 
+/// Ablation 10 (DESIGN.md §Backward-Execution): one row per
+/// `(Table-4 layer, batch size)` — a per-image loop of the one-shot
+/// unified gradients (re-deriving phase geometry and allocating every
+/// buffer per image, the pre-plan baseline) against the plan's batched
+/// backward lanes (frozen flipped sub-kernels, one warm arena, the
+/// weight-grad accumulated across the batch by the phase GEMM's
+/// `C +=`).  Data-grad and weight-grad each perform the unified MAC
+/// count, so `macs = 2·N·unified`.
+pub struct BackwardRow {
+    pub layer: String,
+    pub batch: usize,
+    /// Per-image `grad_input_unified` + `grad_kernel_unified` loop.
+    pub unplanned: Entry,
+    /// `run_backward_data_batch` + `run_backward_weights_batch`.
+    pub planned: Entry,
+    /// Analytic MACs per batch (shared by both lanes).
+    pub macs: u64,
+}
+
+/// Measure planned vs unplanned backward per layer of `model` at each
+/// batch size (the printed ablation uses DC-GAN and batches 1/4/8;
+/// tests use the lighter GP-GAN).
+pub fn backward_planning(
+    model: GanModel,
+    cfg: &BenchConfig,
+    batches: &[usize],
+) -> Vec<BackwardRow> {
+    let mut rng = Rng::seeded(0xF9);
+    let mut rows = Vec::new();
+    for spec in model.layers() {
+        let k = Kernel::random(spec.ksize, spec.cin, spec.cout, &mut rng);
+        let plan = ConvTransposePlan::new(spec.params(), &k);
+        let out = spec.n_out();
+        for &n in batches {
+            let n = n.max(1);
+            let xb = FeatureBatch::random(n, spec.n_in, spec.n_in, spec.cin, &mut rng);
+            let dyb = FeatureBatch::random(n, out, out, spec.cout, &mut rng);
+            let xs: Vec<Feature> = (0..n).map(|i| xb.feature(i)).collect();
+            let dys: Vec<Feature> = (0..n).map(|i| dyb.feature(i)).collect();
+            let macs = 2 * n as u64 * flops::unified(plan.params());
+            let unplanned = Entry::measure(format!("unplanned b{n}"), cfg, || {
+                let mut acc = 0.0f32;
+                for (x, dy) in xs.iter().zip(&dys) {
+                    let dx = grad_input_unified(dy, &k, spec.n_in, spec.padding);
+                    let dk = grad_kernel_unified(x, dy, spec.ksize, spec.padding);
+                    acc += dx.data[0] + dk.data[0];
+                }
+                acc
+            })
+            .with_macs(macs);
+            let mut scratch = Scratch::with_floats(plan.peak_scratch_floats_backward());
+            let mut dxb = FeatureBatch::zeros(n, spec.n_in, spec.n_in, spec.cin);
+            let mut dk = plan.new_kernel_grad();
+            let planned = Entry::measure(format!("planned b{n}"), cfg, || {
+                plan.run_backward_data_batch(&dyb, &mut scratch, &mut dxb);
+                plan.run_backward_weights_batch(&xb, &dyb, &mut scratch, &mut dk);
+                dxb.image(0)[0] + dk.data[0]
+            })
+            .with_macs(macs);
+            rows.push(BackwardRow {
+                layer: spec.describe(),
+                batch: n,
+                unplanned,
+                planned,
+                macs,
+            });
+        }
+    }
+    rows
+}
+
+/// Print the ablation-10 table (planned vs unplanned backward, per
+/// layer × batch size).
+pub fn print_backward_planning(rows: &[BackwardRow]) {
+    let table: Vec<Vec<String>> = rows
+        .iter()
+        .map(|r| {
+            vec![
+                r.layer.clone(),
+                r.batch.to_string(),
+                timing::fmt_duration(r.unplanned.seconds),
+                timing::fmt_duration(r.planned.seconds),
+                report::gflops_cell(r.macs, r.unplanned.seconds),
+                report::gflops_cell(r.macs, r.planned.seconds),
+                report::speedup(r.unplanned.seconds / r.planned.seconds),
+            ]
+        })
+        .collect();
+    report::print_table(
+        "Ablation 10 — planned vs unplanned backward (Table-4 DC-GAN layers)",
+        &[
+            "layer",
+            "batch",
+            "unplanned",
+            "planned",
+            "unplanned GF/s",
+            "planned GF/s",
+            "planned speedup",
+        ],
+        &table,
+    );
+}
+
+/// The `training_step` bench column: a full forward→MSE→backward→SGD
+/// step on the smallest Table-4 generator, direct vs phase-GEMM
+/// backward data-grad lanes ([`TrainStep`]).
+pub fn training_step(cfg: &BenchConfig) -> Vec<Entry> {
+    let model = GanModel::smallest();
+    let mut rng = Rng::seeded(0xFA);
+    let gen = Generator::random(model, &mut rng);
+    let mut gemm_gen = gen.clone();
+    let pins: Vec<ExecStrategy> = gemm_gen
+        .layers
+        .iter()
+        .map(|_| ExecStrategy::serial_gemm())
+        .collect();
+    gemm_gen.set_backward_strategies(&pins);
+    // A tiny learning rate keeps the weights (and so the work) stable
+    // across the timed repetitions.
+    let mut direct_ts = TrainStep::new(gen, &mut rng, 1e-4);
+    let direct = Entry::measure(
+        format!("training step ({}, direct backward)", model.name()),
+        cfg,
+        || direct_ts.step(),
+    );
+    let mut gemm_ts = TrainStep::new(gemm_gen, &mut rng, 1e-4);
+    let gemm = Entry::measure(
+        format!("training step ({}, phase-GEMM backward)", model.name()),
+        cfg,
+        || gemm_ts.step(),
+    );
+    vec![direct, gemm]
+}
+
+/// Serialize ablation 10 plus the `training_step` column into the
+/// `BENCH_*.json` snapshot document (what `ukstc ablation --json PATH`
+/// writes): stable key order, seconds + speedups, no derived columns
+/// the reader can't recompute.
+pub fn backward_snapshot_json(rows: &[BackwardRow], train: &[Entry]) -> Json {
+    let row_objs = rows
+        .iter()
+        .map(|r| {
+            let mut o = BTreeMap::new();
+            o.insert("layer".to_string(), Json::Str(r.layer.clone()));
+            o.insert("batch".to_string(), Json::Num(r.batch as f64));
+            o.insert("unplanned_s".to_string(), Json::Num(r.unplanned.seconds));
+            o.insert("planned_s".to_string(), Json::Num(r.planned.seconds));
+            o.insert(
+                "planned_speedup".to_string(),
+                Json::Num(r.unplanned.seconds / r.planned.seconds),
+            );
+            o.insert("macs".to_string(), Json::Num(r.macs as f64));
+            Json::Obj(o)
+        })
+        .collect();
+    let train_objs = train
+        .iter()
+        .map(|e| {
+            let mut o = BTreeMap::new();
+            o.insert("name".to_string(), Json::Str(e.name.clone()));
+            o.insert("seconds".to_string(), Json::Num(e.seconds));
+            Json::Obj(o)
+        })
+        .collect();
+    let mut doc = BTreeMap::new();
+    doc.insert("ablation10_backward".to_string(), Json::Arr(row_objs));
+    doc.insert("training_step".to_string(), Json::Arr(train_objs));
+    Json::Obj(doc)
+}
+
 /// Print one ablation block: median plus the shared mean/best/p50/p95
 /// latency vocabulary, achieved GFLOP/s where an analytic MAC model
 /// exists, and ratios relative to the first entry.
@@ -515,6 +697,11 @@ pub fn run_all(cfg: &BenchConfig) {
     );
     print_gemm_crossover(&gemm_crossover(GanModel::DcGan, cfg));
     print_batch_fusion(&batch_fusion(GanModel::DcGan, cfg, &[1, 4, 8]));
+    print_backward_planning(&backward_planning(GanModel::DcGan, cfg, &[1, 4, 8]));
+    print_entries(
+        "Training step — direct vs phase-GEMM backward (smallest Table-4 model)",
+        &training_step(cfg),
+    );
 }
 
 #[cfg(test)]
@@ -593,6 +780,42 @@ mod tests {
             assert_eq!(r.fused.macs, Some(r.macs));
         }
         print_batch_fusion(&rows);
+    }
+
+    #[test]
+    fn backward_planning_covers_layers_and_batches() {
+        let rows = backward_planning(GanModel::GpGan, &quick(), &[1, 3]);
+        assert_eq!(rows.len(), 2 * GanModel::GpGan.layers().len());
+        for r in &rows {
+            assert!(
+                r.unplanned.seconds > 0.0 && r.planned.seconds > 0.0,
+                "{}",
+                r.layer
+            );
+            assert!(r.batch == 1 || r.batch == 3);
+            assert_eq!(r.planned.macs, Some(r.macs));
+            assert_eq!(r.unplanned.macs, Some(r.macs));
+        }
+        print_backward_planning(&rows);
+        // The snapshot document round-trips through the JSON layer with
+        // every row and both training columns present.
+        let train = training_step(&quick());
+        assert_eq!(train.len(), 2);
+        for e in &train {
+            assert!(e.seconds > 0.0, "{}", e.name);
+        }
+        let doc = backward_snapshot_json(&rows, &train);
+        let text = doc.to_string_compact();
+        let parsed = crate::util::json::parse(&text).unwrap();
+        let Some(Json::Arr(items)) = parsed.get("ablation10_backward") else {
+            panic!("missing ablation10_backward array");
+        };
+        assert_eq!(items.len(), rows.len());
+        assert!(items[0].get("planned_speedup").and_then(Json::as_f64).is_some());
+        let Some(Json::Arr(ts)) = parsed.get("training_step") else {
+            panic!("missing training_step array");
+        };
+        assert_eq!(ts.len(), 2);
     }
 
     #[test]

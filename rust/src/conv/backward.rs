@@ -176,8 +176,10 @@ fn flip_kernel(k: &Kernel) -> Kernel {
     f
 }
 
-/// Sub-kernel analogue of [`flip_kernel`].
-fn flip_sub(s: &crate::tensor::SubKernel) -> crate::tensor::SubKernel {
+/// Sub-kernel analogue of [`flip_kernel`].  `pub(crate)` so
+/// [`crate::conv::plan`] can freeze the flipped sub-kernels (and their
+/// packed GEMM operands) at plan-construction time.
+pub(crate) fn flip_sub(s: &crate::tensor::SubKernel) -> crate::tensor::SubKernel {
     let mut f = crate::tensor::SubKernel::zeros(s.rows, s.cols, s.cout, s.cin);
     for u in 0..s.rows {
         for v in 0..s.cols {

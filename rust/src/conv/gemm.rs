@@ -225,6 +225,44 @@ pub(crate) fn im2col_rows(
     }
 }
 
+/// Transposed im2col over a contiguous HWC slab: column `r = py·n_cols
+/// + px` of the `[kr·kc·c, n_rows·n_cols]` output holds the flattened
+/// `[kr, kc, c]` window of the slab at `(py, px)` — i.e. exactly
+/// [`im2col_rows`]' patch matrix transposed.  This is the A operand of
+/// the backward-weights phase GEMM (`dSub = patchᵀ · dy_phase`, see
+/// `conv::plan::run_backward_weights`): laying the taps out row-major
+/// here lets the microkernel reduce over the `n_rows·n_cols` output
+/// positions with unit stride.  Every `dst` element is written — dirty
+/// scratch regions are safe to reuse.
+pub(crate) fn im2col_cols(
+    slab: &[f32],
+    slab_w: usize,
+    c: usize,
+    kr: usize,
+    kc: usize,
+    n_cols: usize,
+    n_rows: usize,
+    dst: &mut [f32],
+) {
+    let rows_total = n_rows * n_cols;
+    debug_assert_eq!(dst.len(), kr * kc * c * rows_total);
+    debug_assert!(slab_w >= n_cols + kc - 1);
+    for u in 0..kr {
+        for v in 0..kc {
+            for ch in 0..c {
+                let t = (u * kc + v) * c + ch;
+                let row = &mut dst[t * rows_total..(t + 1) * rows_total];
+                for py in 0..n_rows {
+                    let base = ((py + u) * slab_w + v) * c + ch;
+                    for (px, d) in row[py * n_cols..(py + 1) * n_cols].iter_mut().enumerate() {
+                        *d = slab[base + px * c];
+                    }
+                }
+            }
+        }
+    }
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -366,6 +404,33 @@ mod tests {
                         slab[((py + u) * slab_w + px + v) * c + ch]
                     );
                 }
+            }
+        }
+    }
+
+    #[test]
+    fn im2col_cols_is_transpose_of_im2col_rows() {
+        // The backward-weights A operand is exactly the forward patch
+        // matrix transposed — dirty destination buffers must be fully
+        // overwritten.
+        let (kr, kc, c, n_rows, n_cols) = (2, 3, 2, 4, 5);
+        let slab_h = n_rows + kr - 1;
+        let slab_w = n_cols + kc - 1;
+        let mut rng = Rng::seeded(0x6E37);
+        let slab = random_mat(slab_h, slab_w * c, &mut rng);
+        let patch = kr * kc * c;
+        let rows_total = n_rows * n_cols;
+        let mut by_rows = vec![f32::NAN; rows_total * patch];
+        im2col_rows(&slab, slab_w, c, kr, kc, n_cols, 0, n_rows, &mut by_rows);
+        let mut by_cols = vec![f32::NAN; patch * rows_total];
+        im2col_cols(&slab, slab_w, c, kr, kc, n_cols, n_rows, &mut by_cols);
+        for r in 0..rows_total {
+            for t in 0..patch {
+                assert_eq!(
+                    by_cols[t * rows_total + r],
+                    by_rows[r * patch + t],
+                    "transpose mismatch at (r={r}, t={t})"
+                );
             }
         }
     }

@@ -46,11 +46,28 @@
 //! ([`scratch_floats_gemm_batch`](ConvTransposePlan::scratch_floats_gemm_batch),
 //! [`scratch_floats_for_batch`](ConvTransposePlan::scratch_floats_for_batch))
 //! extends the zero-alloc steady-state guarantee to batched serving.
+//!
+//! **Backward execution** (DESIGN.md §Backward-Execution): the same
+//! plan also runs the training-direction gradients through the same
+//! arena.  Data-grad
+//! ([`run_backward_data`](ConvTransposePlan::run_backward_data)) is a
+//! per-phase full correlation of the `dy` phase against the flipped
+//! sub-kernel — frozen (and GEMM-packed) at construction, no
+//! upsampled-gradient buffer ever materializes — accumulated into `dx`
+//! through the adjoint of the slab crop.  Weight-grad
+//! ([`run_backward_weights`](ConvTransposePlan::run_backward_weights))
+//! is the phase GEMM with operands swapped: the im2col patch matrix
+//! (transposed) as A, the `dy` phase packed at runtime as B, so the
+//! batched variant accumulates `dK` across the whole batch for free
+//! (`C +=`).  Direct backward lanes are bit-identical to the one-shot
+//! [`backward`](super::backward) routes; GEMM lanes match within 1e-4
+//! (same reassociation contract as forward).
 
-use crate::tensor::{Feature, FeatureBatch, Kernel};
+use crate::tensor::{Feature, FeatureBatch, Kernel, SubKernel};
 use crate::tune::space::{ExecStrategy, Formulation, ParAxis};
 use crate::util::threadpool;
 
+use super::backward::flip_sub;
 use super::conventional::correlate_rows;
 use super::gemm;
 use super::im2col::kernel_matrix;
@@ -82,6 +99,34 @@ struct PhasePlan {
     /// (`gemm::pack_b` over the tap-major `[gemm_k, Cout]` matrix),
     /// laid out once here so steady-state GEMM execution never packs.
     packed_kernel: Vec<f32>,
+    /// Slab height in pixels (`rows.1 - rows.0 = n_rows + sub.rows - 1`).
+    slab_h: usize,
+    /// Flipped sub-kernel (spatial flip + Cin/Cout transpose) — the
+    /// backward-data correlation taps, frozen at construction so the
+    /// steady-state backward never flips.
+    flipped: SubKernel,
+    /// Padded dy-phase width in pixels (`n_cols + 2(sub.cols-1) =
+    /// slab_w + sub.cols - 1`): the full correlation producing the slab
+    /// gradient runs VALID over this frame.
+    pad_w: usize,
+    /// Float offset/length of the padded dy phase within the arena's
+    /// backward pad area.
+    pad_off: usize,
+    pad_len: usize,
+    /// Backward-data GEMM reduction depth `kr·kc·Cout` (the flipped
+    /// sub-kernel maps Cout→Cin).
+    gemm_k_bwd: usize,
+    /// Backward-data im2col patch floats (`slab_h·slab_w·gemm_k_bwd`) —
+    /// the phase's claim on the shared backward patch area.
+    patch_bwd_len: usize,
+    /// The flipped sub-kernel as a packed GEMM B operand
+    /// (`[gemm_k_bwd, Cin]`), packed once here.
+    packed_flip: Vec<f32>,
+    /// Float offset/length of this phase's dSub accumulator within the
+    /// weight-grad area (`sub.rows·sub.cols·Cin·Cout` floats, tap-major
+    /// like `kernel_matrix`).
+    dsub_off: usize,
+    dsub_len: usize,
 }
 
 /// An ahead-of-time plan for one transpose-convolution layer.
@@ -101,6 +146,15 @@ pub struct ConvTransposePlan {
     /// Floats of the shared im2col patch area (max over phases —
     /// phases run one at a time, so one region serves all four).
     patch_floats: usize,
+    /// Total floats of the backward padded-dy area (sum over phases).
+    pad_floats: usize,
+    /// Floats of the shared backward-data im2col patch area (max).
+    patch_bwd_floats: usize,
+    /// Floats of the runtime-packed dy panel region of the weight grad
+    /// (max over phases of `packed_b_floats(n_rows·n_cols, Cout)`).
+    packed_dy_floats: usize,
+    /// Total floats of the per-phase dSub accumulators (sum).
+    dsub_floats: usize,
 }
 
 impl ConvTransposePlan {
@@ -132,6 +186,10 @@ impl ConvTransposePlan {
         let mut slab_off = 0usize;
         let mut phase_off = 0usize;
         let mut patch_floats = 0usize;
+        let mut pad_off = 0usize;
+        let mut dsub_off = 0usize;
+        let mut patch_bwd_floats = 0usize;
+        let mut packed_dy_floats = 0usize;
         let phases = phase_geometries(params.n_in, params.n_k, params.padding)
             .into_iter()
             .map(|geom| {
@@ -147,6 +205,27 @@ impl ConvTransposePlan {
                 patch_floats = patch_floats.max(patch_len);
                 let mut packed_kernel = vec![0.0f32; gemm::packed_b_floats(gemm_k, params.cout)];
                 gemm::pack_b(&kernel_matrix(sub), gemm_k, params.cout, &mut packed_kernel);
+                // Backward lowering, frozen here too: the flipped
+                // sub-kernel (data-grad taps, packed as `[gemm_k_bwd,
+                // Cin]`), the padded-dy frame the full correlation runs
+                // over, and the dSub accumulator layout.
+                let flipped = flip_sub(sub);
+                let pad_w = slab_w + sub.cols - 1;
+                let pad_h = slab_h + sub.rows - 1;
+                let pad_len = pad_h * pad_w * params.cout;
+                let gemm_k_bwd = sub.rows * sub.cols * params.cout;
+                let patch_bwd_len = slab_h * slab_w * gemm_k_bwd;
+                patch_bwd_floats = patch_bwd_floats.max(patch_bwd_len);
+                packed_dy_floats = packed_dy_floats
+                    .max(gemm::packed_b_floats(geom.n_rows * geom.n_cols, params.cout));
+                let dsub_len = gemm_k * params.cout;
+                let mut packed_flip = vec![0.0f32; gemm::packed_b_floats(gemm_k_bwd, params.cin)];
+                gemm::pack_b(
+                    &kernel_matrix(&flipped),
+                    gemm_k_bwd,
+                    params.cin,
+                    &mut packed_flip,
+                );
                 let pp = PhasePlan {
                     geom,
                     slab_w,
@@ -157,9 +236,21 @@ impl ConvTransposePlan {
                     gemm_k,
                     patch_len,
                     packed_kernel,
+                    slab_h,
+                    flipped,
+                    pad_w,
+                    pad_off,
+                    pad_len,
+                    gemm_k_bwd,
+                    patch_bwd_len,
+                    packed_flip,
+                    dsub_off,
+                    dsub_len,
                 };
                 slab_off += slab_len;
                 phase_off += phase_len;
+                pad_off += pad_len;
+                dsub_off += dsub_len;
                 pp
             })
             .collect();
@@ -171,6 +262,10 @@ impl ConvTransposePlan {
             slab_floats: slab_off,
             phase_floats: phase_off,
             patch_floats,
+            pad_floats: pad_off,
+            patch_bwd_floats,
+            packed_dy_floats,
+            dsub_floats: dsub_off,
         }
     }
 
@@ -1013,6 +1108,517 @@ impl ConvTransposePlan {
             }
         }
     }
+
+    // ------------------------------------------------- backward lanes
+
+    /// Exact scratch floats of the direct backward-data lanes
+    /// ([`run_backward_data`](Self::run_backward_data) /
+    /// [`run_backward_data_par`](Self::run_backward_data_par)): the
+    /// slab-gradient area (reusing the forward slab layout) plus the
+    /// padded dy-phase area.
+    pub fn scratch_floats_backward_data(&self) -> usize {
+        self.slab_floats + self.pad_floats
+    }
+
+    /// Exact scratch floats of the GEMM backward-data lane
+    /// ([`run_backward_data_gemm`](Self::run_backward_data_gemm)): the
+    /// direct figure plus the shared backward im2col patch region
+    /// (max over phases).
+    pub fn scratch_floats_backward_data_gemm(&self) -> usize {
+        self.scratch_floats_backward_data() + self.patch_bwd_floats
+    }
+
+    /// Exact scratch floats one backward-data execution of `strategy`
+    /// needs (the backward analogue of
+    /// [`scratch_floats_for`](Self::scratch_floats_for)).
+    pub fn scratch_floats_backward_for(&self, strategy: &ExecStrategy) -> usize {
+        match strategy.formulation {
+            Formulation::PhaseGemm => self.scratch_floats_backward_data_gemm(),
+            _ => self.scratch_floats_backward_data(),
+        }
+    }
+
+    /// Exact scratch floats of the weight-grad phase GEMM
+    /// ([`run_backward_weights`](Self::run_backward_weights), single or
+    /// batched — the batch accumulates through the same regions):
+    /// slabs | dy phases | patchᵀ | runtime-packed dy panel | per-phase
+    /// dSub accumulators.
+    pub fn scratch_floats_backward_weights(&self) -> usize {
+        self.slab_floats
+            + self.phase_floats
+            + self.patch_floats
+            + self.packed_dy_floats
+            + self.dsub_floats
+    }
+
+    /// Worst-case scratch floats any backward lane of this plan can
+    /// demand — what training arenas are sized to.
+    pub fn peak_scratch_floats_backward(&self) -> usize {
+        self.scratch_floats_backward_data_gemm()
+            .max(self.scratch_floats_backward_weights())
+    }
+
+    fn check_backward_shapes(&self, dy: &Feature, dx: &Feature) {
+        assert_eq!(
+            (dy.h, dy.w, dy.c),
+            (self.out, self.out, self.params.cout),
+            "plan: dy shape mismatch"
+        );
+        assert_eq!(
+            (dx.h, dx.w, dx.c),
+            (self.params.n_in, self.params.n_in, self.params.cin),
+            "plan: dx shape mismatch"
+        );
+    }
+
+    fn check_backward_batch_shapes(&self, dy: &FeatureBatch, dx: &FeatureBatch) {
+        assert_eq!(dy.n, dx.n, "plan: batch size mismatch");
+        assert_eq!(
+            (dy.h, dy.w, dy.c),
+            (self.out, self.out, self.params.cout),
+            "plan: dy shape mismatch"
+        );
+        assert_eq!(
+            (dx.h, dx.w, dx.c),
+            (self.params.n_in, self.params.n_in, self.params.cin),
+            "plan: dx shape mismatch"
+        );
+    }
+
+    /// Write phase `(rp, sp)` of `dy` into its zero-filled padded frame
+    /// at interior offset `(sub.rows-1, sub.cols-1)` — the frame the
+    /// full correlation runs VALID over.  Produces exactly the values
+    /// of the one-shot route's `extract_output_phase` + `pad_asym`,
+    /// without the intermediate buffer.
+    fn fill_pad_phase(&self, pp: &PhasePlan, dy: &[f32], pad: &mut [f32]) {
+        let cout = self.params.cout;
+        let (sr, sc) = (pp.flipped.rows, pp.flipped.cols);
+        pad.fill(0.0);
+        for (py, y) in (pp.geom.rp..self.out)
+            .step_by(2)
+            .enumerate()
+            .take(pp.geom.n_rows)
+        {
+            for (px, x) in (pp.geom.sp..self.out)
+                .step_by(2)
+                .enumerate()
+                .take(pp.geom.n_cols)
+            {
+                let src = (y * self.out + x) * cout;
+                let dst = ((py + sr - 1) * pp.pad_w + (px + sc - 1)) * cout;
+                pad[dst..dst + cout].copy_from_slice(&dy[src..src + cout]);
+            }
+        }
+    }
+
+    /// Write phase `(rp, sp)` of `dy` densely (`[n_rows·n_cols, Cout]`
+    /// row-major) — the weight-grad GEMM's B operand before packing.
+    fn fill_phase_dense(&self, pp: &PhasePlan, dy: &[f32], dst: &mut [f32]) {
+        let cout = self.params.cout;
+        for (py, y) in (pp.geom.rp..self.out)
+            .step_by(2)
+            .enumerate()
+            .take(pp.geom.n_rows)
+        {
+            for (px, x) in (pp.geom.sp..self.out)
+                .step_by(2)
+                .enumerate()
+                .take(pp.geom.n_cols)
+            {
+                let src = (y * self.out + x) * cout;
+                let d = (py * pp.geom.n_cols + px) * cout;
+                dst[d..d + cout].copy_from_slice(&dy[src..src + cout]);
+            }
+        }
+    }
+
+    /// Adjoint of the forward slab crop: accumulate one phase's slab
+    /// gradient into `dx`, dropping positions that fell in zero
+    /// padding.  Phases **overlap** in `dx` (unlike the forward scatter,
+    /// which partitions the output), so callers zero `dx` once and
+    /// every phase adds.
+    fn accumulate_dslab(&self, pp: &PhasePlan, dslab: &[f32], dx: &mut [f32]) {
+        let n = self.params.n_in as isize;
+        let cin = self.params.cin;
+        let (pt, _, pl, _) = pp.geom.pads;
+        for sy in 0..pp.slab_h {
+            let iy = (pp.geom.rows.0 + sy) as isize - pt as isize;
+            if iy < 0 || iy >= n {
+                continue;
+            }
+            for sx in 0..pp.slab_w {
+                let ix = (pp.geom.cols.0 + sx) as isize - pl as isize;
+                if ix < 0 || ix >= n {
+                    continue;
+                }
+                let src = (sy * pp.slab_w + sx) * cin;
+                let dst = ((iy as usize) * self.params.n_in + ix as usize) * cin;
+                for ci in 0..cin {
+                    dx[dst + ci] += dslab[src + ci];
+                }
+            }
+        }
+    }
+
+    /// Serial direct backward-data core over raw views (`buf` laid out
+    /// as [`scratch_floats_backward_data`](Self::scratch_floats_backward_data):
+    /// dslabs | pads).
+    fn backward_data_image(&self, dy: &[f32], buf: &mut [f32], dx: &mut [f32]) {
+        dx.fill(0.0);
+        let (dslab_area, pad_area) = buf.split_at_mut(self.slab_floats);
+        for pp in &self.phases {
+            let pad = &mut pad_area[pp.pad_off..pp.pad_off + pp.pad_len];
+            self.fill_pad_phase(pp, dy, pad);
+            let dslab = &mut dslab_area[pp.slab_off..pp.slab_off + pp.slab_len];
+            dslab.fill(0.0);
+            correlate_rows(pad, pp.pad_w, &pp.flipped, dslab, pp.slab_w, 0, pp.slab_h);
+            self.accumulate_dslab(pp, dslab, dx);
+        }
+    }
+
+    /// GEMM backward-data core: the padded dy phase is im2col'ed and
+    /// multiplied by the flipped sub-kernel packed at construction.
+    fn backward_data_gemm_image(&self, dy: &[f32], buf: &mut [f32], dx: &mut [f32]) {
+        dx.fill(0.0);
+        let cin = self.params.cin;
+        let cout = self.params.cout;
+        let (dslab_area, rest) = buf.split_at_mut(self.slab_floats);
+        let (pad_area, patch_area) = rest.split_at_mut(self.pad_floats);
+        for pp in &self.phases {
+            let pad = &mut pad_area[pp.pad_off..pp.pad_off + pp.pad_len];
+            self.fill_pad_phase(pp, dy, pad);
+            let patch = &mut patch_area[..pp.patch_bwd_len];
+            gemm::im2col_rows(
+                pad,
+                pp.pad_w,
+                cout,
+                pp.flipped.rows,
+                pp.flipped.cols,
+                pp.slab_w,
+                0,
+                pp.slab_h,
+                patch,
+            );
+            let dslab = &mut dslab_area[pp.slab_off..pp.slab_off + pp.slab_len];
+            dslab.fill(0.0);
+            gemm::gemm_packed(
+                patch,
+                &pp.packed_flip,
+                dslab,
+                pp.slab_h * pp.slab_w,
+                pp.gemm_k_bwd,
+                cin,
+            );
+            self.accumulate_dslab(pp, dslab, dx);
+        }
+    }
+
+    /// Parallel direct backward-data core: pads built serially, then
+    /// one `(phase, slab-row)` job queue drained across `workers` pool
+    /// threads (each job correlates into its disjoint dslab row), then
+    /// a serial accumulate into `dx` (phases overlap there).
+    fn backward_data_par_image(&self, dy: &[f32], buf: &mut [f32], dx: &mut [f32], workers: usize) {
+        let cin = self.params.cin;
+        {
+            let (dslab_area, pad_area) = buf.split_at_mut(self.slab_floats);
+            for pp in &self.phases {
+                self.fill_pad_phase(pp, dy, &mut pad_area[pp.pad_off..pp.pad_off + pp.pad_len]);
+            }
+            let pad_area: &[f32] = pad_area;
+            let mut jobs: Vec<(usize, usize, &mut [f32])> = Vec::new();
+            let mut rest: &mut [f32] = dslab_area;
+            for (pi, pp) in self.phases.iter().enumerate() {
+                let (mine, tail) = rest.split_at_mut(pp.slab_len);
+                rest = tail;
+                let row_len = pp.slab_w * cin;
+                for (ri, row) in mine.chunks_mut(row_len).enumerate() {
+                    jobs.push((pi, ri, row));
+                }
+            }
+            threadpool::parallel_drain(jobs, workers, |(pi, ri, row)| {
+                let pp = &self.phases[pi];
+                row.fill(0.0);
+                correlate_rows(
+                    &pad_area[pp.pad_off..pp.pad_off + pp.pad_len],
+                    pp.pad_w,
+                    &pp.flipped,
+                    row,
+                    pp.slab_w,
+                    ri,
+                    ri + 1,
+                );
+            });
+        }
+        dx.fill(0.0);
+        let dslab_area = &buf[..self.slab_floats];
+        for pp in &self.phases {
+            self.accumulate_dslab(pp, &dslab_area[pp.slab_off..pp.slab_off + pp.slab_len], dx);
+        }
+    }
+
+    /// Gradient w.r.t. the layer input, planned direct route: per
+    /// phase, full-correlate the dy phase against the flipped
+    /// sub-kernel frozen at construction (no upsampled-gradient buffer)
+    /// and accumulate the slab gradient into `dx` through the adjoint
+    /// of the slab crop.  Bit-identical to
+    /// [`backward::grad_input_unified`](super::backward::grad_input_unified)
+    /// — same values, same f32 accumulation order — and zero-alloc in
+    /// steady state like the forward lanes.
+    pub fn run_backward_data(&self, dy: &Feature, scratch: &mut Scratch, dx: &mut Feature) {
+        self.check_backward_shapes(dy, dx);
+        let buf = scratch.ensure(self.scratch_floats_backward_data());
+        self.backward_data_image(&dy.data, buf, &mut dx.data);
+    }
+
+    /// Gradient w.r.t. the layer input through the phase-GEMM engine:
+    /// the padded dy phase is im2col'ed into the arena and multiplied
+    /// by the flipped sub-kernel packed at construction.  Within 1e-4
+    /// of [`run_backward_data`](Self::run_backward_data) (the same f32
+    /// reassociation contract as the forward GEMM lanes).
+    pub fn run_backward_data_gemm(&self, dy: &Feature, scratch: &mut Scratch, dx: &mut Feature) {
+        self.check_backward_shapes(dy, dx);
+        let buf = scratch.ensure(self.scratch_floats_backward_data_gemm());
+        self.backward_data_gemm_image(&dy.data, buf, &mut dx.data);
+    }
+
+    /// Parallel direct backward-data lane: `(phase, slab-row)` jobs
+    /// across `workers` threads of the persistent pool; the overlap-ful
+    /// accumulate into `dx` stays serial.  Bit-identical to
+    /// [`run_backward_data`](Self::run_backward_data).
+    pub fn run_backward_data_par(
+        &self,
+        dy: &Feature,
+        scratch: &mut Scratch,
+        dx: &mut Feature,
+        workers: usize,
+    ) {
+        let workers = workers.max(1);
+        if workers == 1 {
+            return self.run_backward_data(dy, scratch, dx);
+        }
+        self.check_backward_shapes(dy, dx);
+        let buf = scratch.ensure(self.scratch_floats_backward_data());
+        self.backward_data_par_image(&dy.data, buf, &mut dx.data, workers);
+    }
+
+    /// Backward-data under an autotuned [`ExecStrategy`] (the backward
+    /// search space — `tune::space::backward_search_space` — emits
+    /// serial direct, row-parallel direct, and serial GEMM candidates;
+    /// any other formulation falls back to the serial direct lane).
+    pub fn run_backward_data_with(
+        &self,
+        strategy: &ExecStrategy,
+        dy: &Feature,
+        scratch: &mut Scratch,
+        dx: &mut Feature,
+    ) {
+        match strategy.formulation {
+            Formulation::PhaseGemm => self.run_backward_data_gemm(dy, scratch, dx),
+            _ => {
+                if strategy.workers <= 1 {
+                    self.run_backward_data(dy, scratch, dx);
+                } else {
+                    self.run_backward_data_par(dy, scratch, dx, strategy.workers);
+                }
+            }
+        }
+    }
+
+    /// Batched direct backward-data: the whole dy batch through **one**
+    /// backward region, image by image — bit-identical to `N`
+    /// sequential [`run_backward_data`](Self::run_backward_data) calls,
+    /// zero-alloc in steady state.
+    pub fn run_backward_data_batch(
+        &self,
+        dy: &FeatureBatch,
+        scratch: &mut Scratch,
+        dx: &mut FeatureBatch,
+    ) {
+        self.check_backward_batch_shapes(dy, dx);
+        let buf = scratch.ensure(self.scratch_floats_backward_data());
+        for i in 0..dy.n {
+            self.backward_data_image(dy.image(i), buf, dx.image_mut(i));
+        }
+    }
+
+    /// Batched backward-data under a strategy: each image runs the
+    /// chosen single-image lane through one shared region, so the
+    /// result is bit-identical to `N` sequential
+    /// [`run_backward_data_with`](Self::run_backward_data_with) calls.
+    pub fn run_backward_data_batch_with(
+        &self,
+        strategy: &ExecStrategy,
+        dy: &FeatureBatch,
+        scratch: &mut Scratch,
+        dx: &mut FeatureBatch,
+    ) {
+        self.check_backward_batch_shapes(dy, dx);
+        match strategy.formulation {
+            Formulation::PhaseGemm => {
+                let buf = scratch.ensure(self.scratch_floats_backward_data_gemm());
+                for i in 0..dy.n {
+                    self.backward_data_gemm_image(dy.image(i), buf, dx.image_mut(i));
+                }
+            }
+            _ if strategy.workers > 1 => {
+                let buf = scratch.ensure(self.scratch_floats_backward_data());
+                for i in 0..dy.n {
+                    self.backward_data_par_image(dy.image(i), buf, dx.image_mut(i), strategy.workers);
+                }
+            }
+            _ => self.run_backward_data_batch(dy, scratch, dx),
+        }
+    }
+
+    /// One image's weight-grad contribution: per phase, the forward
+    /// slab is im2col'ed **transposed** (`gemm::im2col_cols` — A is
+    /// `[gemm_k, n_rows·n_cols]`), the dy phase is extracted densely
+    /// and packed at runtime as B, and the phase GEMM accumulates
+    /// (`C +=`) into the phase's dSub region — which is what makes the
+    /// batched variant free: images simply keep accumulating.
+    fn backward_weights_accumulate(
+        &self,
+        x: &[f32],
+        dy: &[f32],
+        work: &mut [f32],
+        dsub_area: &mut [f32],
+    ) {
+        let n_in = self.params.n_in;
+        let cin = self.params.cin;
+        let cout = self.params.cout;
+        let (slab_area, rest) = work.split_at_mut(self.slab_floats);
+        let (phase_area, rest) = rest.split_at_mut(self.phase_floats);
+        let (patch_area, packed_area) = rest.split_at_mut(self.patch_floats);
+        for pp in &self.phases {
+            let slab = &mut slab_area[pp.slab_off..pp.slab_off + pp.slab_len];
+            build_slab_view(x, n_in, n_in, cin, &pp.geom, slab);
+            let sub = &self.seg.subs[pp.geom.sub];
+            let patch = &mut patch_area[..pp.patch_len];
+            gemm::im2col_cols(
+                slab,
+                pp.slab_w,
+                cin,
+                sub.rows,
+                sub.cols,
+                pp.geom.n_cols,
+                pp.geom.n_rows,
+                patch,
+            );
+            let dyp = &mut phase_area[pp.phase_off..pp.phase_off + pp.phase_len];
+            self.fill_phase_dense(pp, dy, dyp);
+            let r_total = pp.geom.n_rows * pp.geom.n_cols;
+            let packed = &mut packed_area[..gemm::packed_b_floats(r_total, cout)];
+            gemm::pack_b(dyp, r_total, cout, packed);
+            gemm::gemm_packed(
+                patch,
+                packed,
+                &mut dsub_area[pp.dsub_off..pp.dsub_off + pp.dsub_len],
+                pp.gemm_k,
+                r_total,
+                cout,
+            );
+        }
+    }
+
+    /// Scatter the per-phase dSub accumulators into the full `dK`: each
+    /// sub-kernel's taps live at `(r + 2u, s + 2v)` of the full kernel
+    /// (`(r, s) = (sub/2, sub%2)`), and the phase→sub map is a parity
+    /// bijection, so each tap is written exactly once.  Sub-kernels
+    /// whose phase is empty (degenerate geometries) never touched any
+    /// output, so their taps correctly stay zero.
+    fn scatter_dsubs(&self, dsub_area: &[f32], dk: &mut Kernel) {
+        dk.data.fill(0.0);
+        let cin = self.params.cin;
+        let cout = self.params.cout;
+        for pp in &self.phases {
+            let (r, s) = (pp.geom.sub / 2, pp.geom.sub % 2);
+            let sub = &self.seg.subs[pp.geom.sub];
+            let d = &dsub_area[pp.dsub_off..pp.dsub_off + pp.dsub_len];
+            for u in 0..sub.rows {
+                for v in 0..sub.cols {
+                    let src = (u * sub.cols + v) * cin * cout;
+                    let dst = dk.idx(r + 2 * u, s + 2 * v, 0, 0);
+                    dk.data[dst..dst + cin * cout].copy_from_slice(&d[src..src + cin * cout]);
+                }
+            }
+        }
+    }
+
+    fn check_backward_weight_shapes(&self, x_shape: (usize, usize, usize), dy_shape: (usize, usize, usize), dk: &Kernel) {
+        assert_eq!(
+            x_shape,
+            (self.params.n_in, self.params.n_in, self.params.cin),
+            "plan: input shape mismatch"
+        );
+        assert_eq!(
+            dy_shape,
+            (self.out, self.out, self.params.cout),
+            "plan: dy shape mismatch"
+        );
+        assert_eq!(
+            (dk.n, dk.cin, dk.cout),
+            (self.params.n_k, self.params.cin, self.params.cout),
+            "plan: dk shape mismatch"
+        );
+    }
+
+    /// Gradient w.r.t. the kernel, planned route: per phase, a single
+    /// GEMM `dSub = patchᵀ · dy_phase` (the forward phase GEMM with
+    /// swapped operands), then one scatter into `dK`.  Within 1e-4 of
+    /// [`backward::grad_kernel_unified`](super::backward::grad_kernel_unified)
+    /// (the GEMM reassociates the `Σ_{oy,ox}` reduction through its
+    /// register tile); zero-alloc in steady state.
+    pub fn run_backward_weights(
+        &self,
+        x: &Feature,
+        dy: &Feature,
+        scratch: &mut Scratch,
+        dk: &mut Kernel,
+    ) {
+        self.check_backward_weight_shapes((x.h, x.w, x.c), (dy.h, dy.w, dy.c), dk);
+        let buf = scratch.ensure(self.scratch_floats_backward_weights());
+        let work_floats =
+            self.slab_floats + self.phase_floats + self.patch_floats + self.packed_dy_floats;
+        let (work, dsub_area) = buf.split_at_mut(work_floats);
+        dsub_area.fill(0.0);
+        self.backward_weights_accumulate(&x.data, &dy.data, work, dsub_area);
+        self.scatter_dsubs(dsub_area, dk);
+    }
+
+    /// Batched gradient w.r.t. the kernel: every image's phase GEMM
+    /// accumulates (`C +=`) into the same dSub regions, so the batch
+    /// sum costs no extra memory and one final scatter produces the
+    /// accumulated `dK` — equal within 1e-4 to summing `N` per-image
+    /// [`run_backward_weights`](Self::run_backward_weights) results.
+    pub fn run_backward_weights_batch(
+        &self,
+        x: &FeatureBatch,
+        dy: &FeatureBatch,
+        scratch: &mut Scratch,
+        dk: &mut Kernel,
+    ) {
+        assert_eq!(x.n, dy.n, "plan: batch size mismatch");
+        self.check_backward_weight_shapes((x.h, x.w, x.c), (dy.h, dy.w, dy.c), dk);
+        let buf = scratch.ensure(self.scratch_floats_backward_weights());
+        let work_floats =
+            self.slab_floats + self.phase_floats + self.patch_floats + self.packed_dy_floats;
+        let (work, dsub_area) = buf.split_at_mut(work_floats);
+        dsub_area.fill(0.0);
+        for i in 0..x.n {
+            self.backward_weights_accumulate(x.image(i), dy.image(i), work, dsub_area);
+        }
+        self.scatter_dsubs(dsub_area, dk);
+    }
+
+    /// A correctly-shaped input-gradient buffer for this plan.
+    pub fn new_input_grad(&self) -> Feature {
+        Feature::zeros(self.params.n_in, self.params.n_in, self.params.cin)
+    }
+
+    /// A correctly-shaped kernel-gradient buffer for this plan.
+    pub fn new_kernel_grad(&self) -> Kernel {
+        Kernel::zeros(self.params.n_k, self.params.cin, self.params.cout)
+    }
 }
 
 /// Reusable scratch arena for planned execution.
@@ -1493,5 +2099,239 @@ mod tests {
         let plan = ConvTransposePlan::new(ConvTransposeParams::new(6, 4, 2, 3, 2), &k);
         let got = plan.run_alloc(&x, &mut Scratch::for_plan(&plan));
         assert!(ops::max_abs_diff(&want, &got) < 1e-4);
+    }
+
+    fn max_abs(a: &[f32], b: &[f32]) -> f32 {
+        a.iter()
+            .zip(b)
+            .map(|(x, y)| (x - y).abs())
+            .fold(0.0f32, f32::max)
+    }
+
+    #[test]
+    fn backward_data_lanes_match_one_shot_unified() {
+        // Direct lane bit-identical to the one-shot unified route (same
+        // values, same accumulation order); GEMM lane within 1e-4; the
+        // parallel lane bit-identical to the serial direct one.  Dirty
+        // dx buffers must not leak (the lanes zero dx — phases overlap).
+        let mut rng = Rng::seeded(58);
+        for (n_in, nk, p, cin, cout) in [
+            (4, 5, 2, 3, 2),
+            (4, 4, 2, 3, 2),
+            (5, 3, 1, 2, 2),
+            (3, 4, 3, 2, 1),
+            (6, 4, 2, 2, 8),
+        ] {
+            let k = Kernel::random(nk, cin, cout, &mut rng);
+            let plan =
+                ConvTransposePlan::new(ConvTransposeParams::new(n_in, nk, p, cin, cout), &k);
+            let ho = plan.out_size();
+            let dy = Feature::random(ho, ho, cout, &mut rng);
+            let want = crate::conv::backward::grad_input_unified(&dy, &k, n_in, p);
+            let mut scratch = Scratch::new();
+            let mut dx = plan.new_input_grad();
+            dx.data.fill(f32::NAN);
+            plan.run_backward_data(&dy, &mut scratch, &mut dx);
+            assert_eq!(dx, want, "run_backward_data (n={n_in} k={nk} p={p})");
+            let mut dxg = plan.new_input_grad();
+            dxg.data.fill(f32::NAN);
+            plan.run_backward_data_gemm(&dy, &mut scratch, &mut dxg);
+            assert!(
+                max_abs(&dxg.data, &want.data) < 1e-4,
+                "run_backward_data_gemm (n={n_in} k={nk} p={p} cout={cout})"
+            );
+            for workers in [2, 3, 8] {
+                let mut dxp = plan.new_input_grad();
+                dxp.data.fill(f32::NAN);
+                plan.run_backward_data_par(&dy, &mut scratch, &mut dxp, workers);
+                assert_eq!(dxp, want, "run_backward_data_par({workers})");
+            }
+        }
+    }
+
+    #[test]
+    fn backward_weights_matches_one_shot_unified() {
+        let mut rng = Rng::seeded(59);
+        for (n_in, nk, p, cin, cout) in [
+            (4, 5, 2, 3, 2),
+            (4, 4, 2, 3, 2),
+            (5, 3, 1, 2, 2),
+            (3, 4, 3, 2, 1),
+            (6, 4, 2, 2, 8),
+        ] {
+            let k = Kernel::random(nk, cin, cout, &mut rng);
+            let plan =
+                ConvTransposePlan::new(ConvTransposeParams::new(n_in, nk, p, cin, cout), &k);
+            let ho = plan.out_size();
+            let x = Feature::random(n_in, n_in, cin, &mut rng);
+            let dy = Feature::random(ho, ho, cout, &mut rng);
+            let want = crate::conv::backward::grad_kernel_unified(&x, &dy, nk, p);
+            let mut scratch = Scratch::new();
+            let mut dk = plan.new_kernel_grad();
+            dk.data.fill(f32::NAN);
+            plan.run_backward_weights(&x, &dy, &mut scratch, &mut dk);
+            assert!(
+                max_abs(&dk.data, &want.data) < 1e-4,
+                "run_backward_weights (n={n_in} k={nk} p={p} cout={cout})"
+            );
+        }
+    }
+
+    #[test]
+    fn batched_backward_matches_sequential() {
+        // Batched data-grad is bit-identical to N sequential planned
+        // runs (it is N runs of the same core); batched weight-grad
+        // accumulates across the batch and matches the sum of per-image
+        // one-shot gradients within the GEMM tolerance.
+        let mut rng = Rng::seeded(60);
+        let (n_in, nk, p, cin, cout) = (4, 5, 2, 3, 2);
+        let k = Kernel::random(nk, cin, cout, &mut rng);
+        let plan = ConvTransposePlan::new(ConvTransposeParams::new(n_in, nk, p, cin, cout), &k);
+        let ho = plan.out_size();
+        for n in [1usize, 3, 5] {
+            let dyb = FeatureBatch::random(n, ho, ho, cout, &mut rng);
+            let xb = FeatureBatch::random(n, n_in, n_in, cin, &mut rng);
+            // Data grad.
+            let mut scratch = Scratch::new();
+            let mut dxb = FeatureBatch::zeros(n, n_in, n_in, cin);
+            dxb.data.fill(f32::NAN);
+            plan.run_backward_data_batch(&dyb, &mut scratch, &mut dxb);
+            for i in 0..n {
+                let want =
+                    crate::conv::backward::grad_input_unified(&dyb.feature(i), &k, n_in, p);
+                assert_eq!(dxb.image(i), &want.data[..], "batched dx image {i} (n={n})");
+            }
+            // Batched dispatch covers the backward search space.
+            for s in crate::tune::space::backward_search_space(4) {
+                let mut got = FeatureBatch::zeros(n, n_in, n_in, cin);
+                got.data.fill(f32::NAN);
+                plan.run_backward_data_batch_with(&s, &dyb, &mut scratch, &mut got);
+                for i in 0..n {
+                    let want =
+                        crate::conv::backward::grad_input_unified(&dyb.feature(i), &k, n_in, p);
+                    if s.formulation == Formulation::PhaseGemm {
+                        assert!(got.image(i).iter().all(|v| !v.is_nan()));
+                        assert!(
+                            max_abs(got.image(i), &want.data) < 1e-4,
+                            "{} diverged (image {i})",
+                            s.name()
+                        );
+                    } else {
+                        assert_eq!(got.image(i), &want.data[..], "{} (image {i})", s.name());
+                    }
+                }
+            }
+            // Weight grad: batch-accumulated == Σ per-image.
+            let mut want_sum = plan.new_kernel_grad();
+            for i in 0..n {
+                let di = crate::conv::backward::grad_kernel_unified(
+                    &xb.feature(i),
+                    &dyb.feature(i),
+                    nk,
+                    p,
+                );
+                for (w, d) in want_sum.data.iter_mut().zip(&di.data) {
+                    *w += d;
+                }
+            }
+            let mut dk_b = plan.new_kernel_grad();
+            dk_b.data.fill(f32::NAN);
+            plan.run_backward_weights_batch(&xb, &dyb, &mut scratch, &mut dk_b);
+            assert!(
+                max_abs(&dk_b.data, &want_sum.data) < 1e-3,
+                "run_backward_weights_batch (n={n})"
+            );
+        }
+    }
+
+    #[test]
+    fn backward_scratch_sizing_is_exact() {
+        let mut rng = Rng::seeded(61);
+        let k = Kernel::random(5, 3, 2, &mut rng);
+        let plan = ConvTransposePlan::new(ConvTransposeParams::new(4, 5, 2, 3, 2), &k);
+        let seg = segregate(&k);
+        let geoms = unified::phase_geometries(4, 5, 2);
+        let (cin, cout) = (3usize, 2usize);
+        let slab: usize = geoms
+            .iter()
+            .map(|g| (g.rows.1 - g.rows.0) * (g.cols.1 - g.cols.0) * cin)
+            .sum();
+        let phase: usize = geoms.iter().map(|g| g.n_rows * g.n_cols * cout).sum();
+        let pad: usize = geoms
+            .iter()
+            .map(|g| {
+                let s = &seg.subs[g.sub];
+                let sh = g.rows.1 - g.rows.0;
+                let sw = g.cols.1 - g.cols.0;
+                (sh + s.rows - 1) * (sw + s.cols - 1) * cout
+            })
+            .sum();
+        let patch_bwd: usize = geoms
+            .iter()
+            .map(|g| {
+                let s = &seg.subs[g.sub];
+                (g.rows.1 - g.rows.0) * (g.cols.1 - g.cols.0) * s.rows * s.cols * cout
+            })
+            .max()
+            .unwrap();
+        let patch_fwd: usize = geoms
+            .iter()
+            .map(|g| {
+                let s = &seg.subs[g.sub];
+                g.n_rows * g.n_cols * s.rows * s.cols * cin
+            })
+            .max()
+            .unwrap();
+        let packed_dy: usize = geoms
+            .iter()
+            .map(|g| gemm::packed_b_floats(g.n_rows * g.n_cols, cout))
+            .max()
+            .unwrap();
+        let dsub: usize = geoms
+            .iter()
+            .map(|g| {
+                let s = &seg.subs[g.sub];
+                s.rows * s.cols * cin * cout
+            })
+            .sum();
+        assert_eq!(plan.scratch_floats_backward_data(), slab + pad);
+        assert_eq!(
+            plan.scratch_floats_backward_data_gemm(),
+            slab + pad + patch_bwd
+        );
+        assert_eq!(
+            plan.scratch_floats_backward_weights(),
+            slab + phase + patch_fwd + packed_dy + dsub
+        );
+        assert_eq!(
+            plan.peak_scratch_floats_backward(),
+            plan.scratch_floats_backward_data_gemm()
+                .max(plan.scratch_floats_backward_weights())
+        );
+        // Cold arenas grow to exactly each lane's figure — the sizing
+        // functions are tight bounds, not estimates.
+        let ho = plan.out_size();
+        let dy = Feature::random(ho, ho, cout, &mut rng);
+        let x = Feature::random(4, 4, cin, &mut rng);
+        let mut dx = plan.new_input_grad();
+        let mut dk = plan.new_kernel_grad();
+        let mut scratch = Scratch::new();
+        plan.run_backward_data(&dy, &mut scratch, &mut dx);
+        assert_eq!(
+            scratch.capacity_floats(),
+            plan.scratch_floats_backward_data()
+        );
+        let mut scratch = Scratch::new();
+        plan.run_backward_data_gemm(&dy, &mut scratch, &mut dx);
+        assert_eq!(
+            scratch.capacity_floats(),
+            plan.scratch_floats_backward_data_gemm()
+        );
+        let mut scratch = Scratch::new();
+        plan.run_backward_weights(&x, &dy, &mut scratch, &mut dk);
+        assert_eq!(
+            scratch.capacity_floats(),
+            plan.scratch_floats_backward_weights()
+        );
     }
 }

@@ -111,10 +111,31 @@ fn dispatch(sub: &str, rest: &[String]) -> anyhow::Result<()> {
             Ok(())
         }
         "ablation" => {
-            let cmd = bench_command("ablation", "design-choice ablations");
+            let cmd = bench_command("ablation", "design-choice ablations").opt(
+                "json",
+                "write the backward snapshot (ablation 10 + training step) to this JSON path",
+                None,
+            );
             let a = cmd.parse(rest)?;
             let cfg = bench_cfg(&a)?;
-            ablation::run_all(&cfg);
+            if let Some(path) = a.get("json") {
+                // Snapshot mode: measure ablation 10 and the
+                // training-step column once, print them, and persist the
+                // document (the committed `BENCH_*.json` files).
+                let rows = ablation::backward_planning(GanModel::DcGan, &cfg, &[1, 4, 8]);
+                ablation::print_backward_planning(&rows);
+                let train = ablation::training_step(&cfg);
+                ablation::print_entries(
+                    "Training step — direct vs phase-GEMM backward (smallest Table-4 model)",
+                    &train,
+                );
+                let doc = ablation::backward_snapshot_json(&rows, &train);
+                std::fs::write(path, doc.to_string_compact())
+                    .map_err(|e| anyhow::anyhow!("writing {path}: {e}"))?;
+                println!("\nwrote {path}");
+            } else {
+                ablation::run_all(&cfg);
+            }
             Ok(())
         }
         "tune" => {
@@ -130,7 +151,8 @@ fn dispatch(sub: &str, rest: &[String]) -> anyhow::Result<()> {
             .opt("max-iters", "recorded iterations per candidate", Some("25"))
             .opt("min-time-ms", "min recorded milliseconds per candidate", Some("20"))
             .flag("no-cache", "tune in memory only (neither load nor persist)")
-            .flag("no-prune", "measure every candidate (no probe pruning)");
+            .flag("no-prune", "measure every candidate (no probe pruning)")
+            .flag("backward", "also tune the backward lanes (cached under 'bwd' keys)");
             let a = cmd.parse(rest)?;
             tune(&a)
         }
@@ -279,6 +301,39 @@ fn tune(a: &Args) -> anyhow::Result<()> {
         &["#", "layer", "strategy", "best", "vs serial", "cache"],
         &rows,
     );
+    if a.has_flag("backward") {
+        // Backward lanes (DESIGN.md §Backward-Execution): a separate,
+        // smaller space searched per layer, persisted under the
+        // disjoint `bwd` key namespace of the same cache file.
+        let mut bwd_rows = Vec::new();
+        for (i, lw) in generator.layers.iter().enumerate() {
+            let tuned = tuner.tune_layer_backward_cached(&lw.plan, &mut tuning_cache, &mut measurer);
+            bwd_rows.push(vec![
+                (i + 2).to_string(),
+                lw.spec.describe(),
+                tuned.strategy.name(),
+                timing::fmt_duration(tuned.best_seconds),
+                tuned
+                    .serial_seconds()
+                    .map(|s| report::speedup(s / tuned.best_seconds))
+                    .unwrap_or_else(|| "-".into()),
+                if tuned.cached {
+                    "hit".into()
+                } else {
+                    format!("miss ({} timed, {} pruned)", tuned.measured(), tuned.pruned())
+                },
+            ]);
+        }
+        report::print_table(
+            &format!(
+                "Autotune — {} per-layer backward winners ({})",
+                model.name(),
+                cache::host_fingerprint()
+            ),
+            &["#", "layer", "strategy", "best", "vs serial", "cache"],
+            &bwd_rows,
+        );
+    }
     tuning_cache.save()?;
     if let Some(p) = tuning_cache.path() {
         println!(

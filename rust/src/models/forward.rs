@@ -39,6 +39,12 @@ pub struct LayerWeights {
     /// speed changes.  `None` = the caller's lane decides (the
     /// pre-autotuner behavior).
     pub strategy: Option<ExecStrategy>,
+    /// Pinned backward-pass strategy (DESIGN.md §Backward-Execution):
+    /// the data-grad lane [`backward_with`](Self::backward_with) runs —
+    /// direct, phase-GEMM, or phase-row-parallel — typically the
+    /// `bwd`-keyed winner of `Tuner::tune_layer_backward_cached`.
+    /// `None` = the serial direct lane.
+    pub backward_strategy: Option<ExecStrategy>,
 }
 
 impl LayerWeights {
@@ -51,12 +57,19 @@ impl LayerWeights {
             plan,
             bias,
             strategy: None,
+            backward_strategy: None,
         }
     }
 
     /// Pin an autotuned execution strategy on this layer.
     pub fn with_strategy(mut self, strategy: ExecStrategy) -> LayerWeights {
         self.strategy = Some(strategy);
+        self
+    }
+
+    /// Pin an autotuned backward-pass strategy on this layer.
+    pub fn with_backward_strategy(mut self, strategy: ExecStrategy) -> LayerWeights {
+        self.backward_strategy = Some(strategy);
         self
     }
 
@@ -161,6 +174,74 @@ impl LayerWeights {
             },
         }
     }
+
+    /// One full layer backward step (DESIGN.md §Backward-Execution).
+    ///
+    /// Inputs are the layer's forward input `x`, its **post-activation**
+    /// output `y_post`, and the incoming gradient `dy` w.r.t. that
+    /// output.  The activation derivative is recovered from the
+    /// post-activation value alone — `tanh'` as `1 − y²` when `last`,
+    /// `relu'` as the sign gate `y > 0` otherwise — so the forward
+    /// trace never stores pre-activation maps.  Returns
+    /// `(dx, dkernel, dbias)`; the data-grad runs the pinned
+    /// [`backward_strategy`](Self::backward_strategy) lane when one is
+    /// set, the serial direct lane otherwise, and the weight-grad runs
+    /// the phase-GEMM accumulation — both through `scratch`.
+    pub fn backward_with(
+        &self,
+        x: &Feature,
+        y_post: &Feature,
+        dy: &Feature,
+        last: bool,
+        scratch: &mut Scratch,
+    ) -> (Feature, Kernel, Vec<f32>) {
+        assert_eq!(
+            (dy.h, dy.w, dy.c),
+            (y_post.h, y_post.w, y_post.c),
+            "layer backward: dy / y_post shape mismatch"
+        );
+        let mut dpre = dy.clone();
+        if last {
+            for (d, &y) in dpre.data.iter_mut().zip(&y_post.data) {
+                *d *= 1.0 - y * y;
+            }
+        } else {
+            for (d, &y) in dpre.data.iter_mut().zip(&y_post.data) {
+                if y <= 0.0 {
+                    *d = 0.0;
+                }
+            }
+        }
+        // Bias grad: per-channel spatial sum of the pre-activation grad
+        // (bias is broadcast-added over the spatial grid in `apply`).
+        let cout = self.spec.cout;
+        let mut db = vec![0.0f32; cout];
+        for px in dpre.data.chunks_exact(cout) {
+            for (b, &v) in db.iter_mut().zip(px) {
+                *b += v;
+            }
+        }
+        let mut dx = self.plan.new_input_grad();
+        match &self.backward_strategy {
+            Some(s) => self.plan.run_backward_data_with(s, &dpre, scratch, &mut dx),
+            None => self.plan.run_backward_data(&dpre, scratch, &mut dx),
+        }
+        let mut dk = self.plan.new_kernel_grad();
+        self.plan.run_backward_weights(x, &dpre, scratch, &mut dk);
+        (dx, dk, db)
+    }
+
+    /// Scratch floats [`backward_with`](Self::backward_with) needs:
+    /// the pinned data-grad lane's figure (direct when unpinned) joined
+    /// with the weight-grad phase-GEMM figure, both of which run
+    /// through the same arena.
+    pub fn scratch_floats_backward(&self) -> usize {
+        let data = match &self.backward_strategy {
+            Some(s) => self.plan.scratch_floats_backward_for(s),
+            None => self.plan.scratch_floats_backward_data(),
+        };
+        data.max(self.plan.scratch_floats_backward_weights())
+    }
 }
 
 /// A generator with materialized weights.
@@ -260,6 +341,24 @@ impl Generator {
     /// The pinned per-layer strategies, in layer order.
     pub fn strategies(&self) -> Vec<Option<ExecStrategy>> {
         self.layers.iter().map(|l| l.strategy).collect()
+    }
+
+    /// Pin per-layer backward strategies (the backward tuner's winners,
+    /// in layer order).  Panics on a length mismatch.
+    pub fn set_backward_strategies(&mut self, strategies: &[ExecStrategy]) {
+        assert_eq!(
+            strategies.len(),
+            self.layers.len(),
+            "one backward strategy per layer"
+        );
+        for (lw, s) in self.layers.iter_mut().zip(strategies) {
+            lw.backward_strategy = Some(*s);
+        }
+    }
+
+    /// The pinned per-layer backward strategies, in layer order.
+    pub fn backward_strategies(&self) -> Vec<Option<ExecStrategy>> {
+        self.layers.iter().map(|l| l.backward_strategy).collect()
     }
 
     /// Arena sized for the largest layer of this generator, honoring
@@ -711,6 +810,97 @@ mod tests {
             g.max_scratch_floats_batch(n, Lane::Serial)
         );
         g.clear_strategies();
+    }
+
+    #[test]
+    fn layer_backward_matches_one_shot_unified_grads() {
+        // `backward_with` = activation gate (from the post-activation
+        // map) → bias spatial sum → planned data-grad + weight-grad.
+        // Pin it against a hand-rolled gate feeding the one-shot
+        // unified reference, for both activations and for a pinned
+        // GEMM backward lane.
+        use crate::conv::backward::{grad_input_unified, grad_kernel_unified};
+        let g = tiny_generator();
+        let mut rng = Rng::seeded(65);
+        for (li, last) in [(0usize, false), (1usize, true)] {
+            let lw = &g.layers[li];
+            let spec = lw.spec;
+            let x = Feature::random(spec.n_in, spec.n_in, spec.cin, &mut rng);
+            let mut scratch = Scratch::with_floats(
+                lw.scratch_floats().max(lw.scratch_floats_backward()),
+            );
+            let mut y = lw.apply(&x, Algorithm::Unified, Lane::Serial, &mut scratch);
+            ops::add_bias_inplace(&mut y, &lw.bias);
+            if last {
+                ops::tanh_inplace(&mut y);
+            } else {
+                ops::relu_inplace(&mut y);
+            }
+            let dy = Feature::random(y.h, y.w, y.c, &mut rng);
+            let (dx, dk, db) = lw.backward_with(&x, &y, &dy, last, &mut scratch);
+            // Hand-rolled activation gate.
+            let mut dpre = dy.clone();
+            if last {
+                for (d, &yv) in dpre.data.iter_mut().zip(&y.data) {
+                    *d *= 1.0 - yv * yv;
+                }
+            } else {
+                for (d, &yv) in dpre.data.iter_mut().zip(&y.data) {
+                    if yv <= 0.0 {
+                        *d = 0.0;
+                    }
+                }
+            }
+            let want_dx = grad_input_unified(&dpre, &lw.kernel, spec.n_in, spec.padding);
+            let want_dk = grad_kernel_unified(&x, &dpre, spec.ksize, spec.padding);
+            // Unpinned backward runs the direct lane: bit-identical dx.
+            assert_eq!(dx, want_dx, "layer {li} dx diverged");
+            let dk_err = dk
+                .data
+                .iter()
+                .zip(&want_dk.data)
+                .map(|(a, b)| (a - b).abs())
+                .fold(0.0f32, f32::max);
+            assert!(dk_err < 1e-4, "layer {li} dk err {dk_err}");
+            let want_db: Vec<f32> = (0..spec.cout)
+                .map(|c| {
+                    dpre.data
+                        .iter()
+                        .skip(c)
+                        .step_by(spec.cout)
+                        .sum::<f32>()
+                })
+                .collect();
+            for (a, b) in db.iter().zip(&want_db) {
+                assert!((a - b).abs() < 1e-4, "db diverged");
+            }
+            // A pinned GEMM backward lane stays within the 1e-4
+            // reassociation contract.
+            let pinned = lw.clone().with_backward_strategy(ExecStrategy::serial_gemm());
+            assert!(pinned.scratch_floats_backward() >= lw.scratch_floats_backward());
+            let mut scratch2 = Scratch::with_floats(pinned.scratch_floats_backward());
+            let (dx2, _, _) = pinned.backward_with(&x, &y, &dy, last, &mut scratch2);
+            let dx_err = dx2
+                .data
+                .iter()
+                .zip(&want_dx.data)
+                .map(|(a, b)| (a - b).abs())
+                .fold(0.0f32, f32::max);
+            assert!(dx_err < 1e-4, "pinned GEMM dx err {dx_err}");
+        }
+    }
+
+    #[test]
+    fn backward_strategy_pins_settable_and_listable() {
+        use crate::tune::space::ParAxis;
+        let mut g = tiny_generator();
+        assert!(g.backward_strategies().iter().all(Option::is_none));
+        g.set_backward_strategies(&[
+            ExecStrategy::serial_gemm(),
+            ExecStrategy::parallel(2, ParAxis::PhaseRows),
+        ]);
+        assert!(g.backward_strategies().iter().all(Option::is_some));
+        assert_eq!(g.backward_strategies()[0], Some(ExecStrategy::serial_gemm()));
     }
 
     #[test]

@@ -4,6 +4,9 @@
 //!   transcribed verbatim from Table 4
 //! * [`forward`] — generator forward pass over any conv
 //!   [`Algorithm`](crate::conv::parallel::Algorithm)/[`Lane`](crate::conv::parallel::Lane)
+//! * [`train`] — the training step (DESIGN.md §Backward-Execution):
+//!   forward trace → planned backward lanes → SGD, driven by
+//!   [`TrainStep`]
 //!
 //! These are the *Rust-native* models used by the paper-table benches;
 //! the serving path runs the AOT-compiled JAX twins (see
@@ -11,7 +14,9 @@
 //! numerically consistent via the shared golden vectors.
 
 pub mod forward;
+pub mod train;
 pub mod zoo;
 
 pub use forward::{Generator, LayerWeights};
+pub use train::{ForwardTrace, GeneratorGrads, TrainStep};
 pub use zoo::{GanModel, LayerSpec};

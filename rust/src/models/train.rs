@@ -1,0 +1,427 @@
+//! Generator training step (DESIGN.md §Backward-Execution).
+//!
+//! The paper's Table 5/6 measure the *backward* stage of the unified
+//! kernel-segregated operation; this module closes the loop by running
+//! a real generator training step over the planned backward lanes of
+//! [`ConvTransposePlan`](crate::conv::plan::ConvTransposePlan):
+//!
+//! 1. [`Generator::forward_trace`] — the planned forward pass, keeping
+//!    the per-layer **post-activation** maps (the only state backward
+//!    needs: `tanh'` and `relu'` are both recoverable from the output).
+//! 2. [`Generator::backward_trace`] — reverse chain over
+//!    [`LayerWeights::backward_with`]: per layer an activation gate, a
+//!    bias spatial sum, the planned data-grad lane (direct / phase-GEMM
+//!    / phase-row-parallel, honoring pinned backward strategies) and the
+//!    phase-GEMM weight-grad — all through **one** scratch arena — then
+//!    the dense projection's gradient.
+//! 3. [`Generator::sgd_step`] — plain SGD; layers are re-frozen
+//!    ([`LayerWeights::new`]) because plans pack the segregated kernel
+//!    at construction, and every strategy pin survives the rebuild.
+//!
+//! [`TrainStep`] bundles the three into the driver
+//! `examples/training_step.rs` and the `training_step` bench column
+//! run: a fixed latent, a fixed target image, MSE loss.
+
+use crate::conv::parallel::{Algorithm, Lane};
+use crate::conv::plan::Scratch;
+use crate::tensor::{ops, Feature, Kernel};
+use crate::util::rng::Rng;
+
+use super::forward::{Generator, LayerWeights};
+
+/// Everything one backward pass needs from the forward pass: the
+/// latent, the post-ReLU projection map, and each layer's
+/// post-activation output (the last one is the generated image).
+#[derive(Debug, Clone)]
+pub struct ForwardTrace {
+    pub z: Vec<f32>,
+    /// Post-ReLU projection output (layer 0's input).
+    pub x0: Feature,
+    /// Per-layer post-activation outputs, in layer order.
+    pub acts: Vec<Feature>,
+}
+
+impl ForwardTrace {
+    /// The generated image (the last layer's post-tanh output).
+    pub fn output(&self) -> &Feature {
+        self.acts.last().expect("trace of an empty generator")
+    }
+}
+
+/// Gradients of every generator parameter, shaped like the parameters.
+#[derive(Debug, Clone)]
+pub struct GeneratorGrads {
+    pub proj_w: Vec<f32>,
+    pub proj_b: Vec<f32>,
+    /// Per-layer `(dkernel, dbias)`, in layer order.
+    pub layers: Vec<(Kernel, Vec<f32>)>,
+}
+
+impl Generator {
+    /// Forward pass that keeps what backward needs (planned unified
+    /// path, honoring pinned forward strategies).  Per image the
+    /// arithmetic is exactly [`forward_with`](Generator::forward_with);
+    /// the trace stores one post-activation clone per layer.
+    pub fn forward_trace(&self, z: &[f32], scratch: &mut Scratch) -> ForwardTrace {
+        let x0 = self.project(z);
+        let mut acts = Vec::with_capacity(self.layers.len());
+        let last = self.layers.len() - 1;
+        let mut x = x0.clone();
+        for (i, lw) in self.layers.iter().enumerate() {
+            x = lw.apply(&x, Algorithm::Unified, Lane::Serial, scratch);
+            ops::add_bias_inplace(&mut x, &lw.bias);
+            if i == last {
+                ops::tanh_inplace(&mut x);
+            } else {
+                ops::relu_inplace(&mut x);
+            }
+            acts.push(x.clone());
+        }
+        ForwardTrace {
+            z: z.to_vec(),
+            x0,
+            acts,
+        }
+    }
+
+    /// Reverse chain from `dy_out` (gradient w.r.t. the generated
+    /// image) down to every parameter, through one scratch arena.
+    pub fn backward_trace(
+        &self,
+        trace: &ForwardTrace,
+        dy_out: &Feature,
+        scratch: &mut Scratch,
+    ) -> GeneratorGrads {
+        assert_eq!(trace.acts.len(), self.layers.len(), "trace/layer mismatch");
+        let last = self.layers.len() - 1;
+        let mut layer_grads: Vec<Option<(Kernel, Vec<f32>)>> = vec![None; self.layers.len()];
+        let mut dy = dy_out.clone();
+        for i in (0..self.layers.len()).rev() {
+            let x = if i == 0 { &trace.x0 } else { &trace.acts[i - 1] };
+            let (dx, dk, db) =
+                self.layers[i].backward_with(x, &trace.acts[i], &dy, i == last, scratch);
+            layer_grads[i] = Some((dk, db));
+            dy = dx;
+        }
+        // Projection: `dy` is now the gradient w.r.t. the post-ReLU
+        // projection map.  Gate by the stored post-ReLU values, then
+        // dW[zi, o] = z[zi]·dpre[o] (exactly zero for zero latents —
+        // the same rows `project` skips).
+        let mut dpre = dy;
+        for (d, &v) in dpre.data.iter_mut().zip(&trace.x0.data) {
+            if v <= 0.0 {
+                *d = 0.0;
+            }
+        }
+        let out_len = dpre.data.len();
+        let mut proj_w = vec![0.0f32; self.proj_w.len()];
+        for (zi, &zv) in trace.z.iter().enumerate() {
+            if zv == 0.0 {
+                continue;
+            }
+            let row = &mut proj_w[zi * out_len..(zi + 1) * out_len];
+            for (g, &d) in row.iter_mut().zip(&dpre.data) {
+                *g = zv * d;
+            }
+        }
+        GeneratorGrads {
+            proj_w,
+            proj_b: dpre.data,
+            layers: layer_grads.into_iter().map(Option::unwrap).collect(),
+        }
+    }
+
+    /// One plain-SGD update: `w ← w − lr·g` for every parameter.  Each
+    /// layer is rebuilt through [`LayerWeights::new`] — plans freeze
+    /// the segregated, packed kernel at construction, so a weight
+    /// update means a re-freeze — with both strategy pins preserved.
+    pub fn sgd_step(&mut self, grads: &GeneratorGrads, lr: f32) {
+        assert_eq!(grads.layers.len(), self.layers.len(), "grads/layer mismatch");
+        assert_eq!(grads.proj_w.len(), self.proj_w.len());
+        assert_eq!(grads.proj_b.len(), self.proj_b.len());
+        for (w, g) in self.proj_w.iter_mut().zip(&grads.proj_w) {
+            *w -= lr * g;
+        }
+        for (b, g) in self.proj_b.iter_mut().zip(&grads.proj_b) {
+            *b -= lr * g;
+        }
+        for (lw, (dk, db)) in self.layers.iter_mut().zip(&grads.layers) {
+            let mut kernel = lw.kernel.clone();
+            for (w, g) in kernel.data.iter_mut().zip(&dk.data) {
+                *w -= lr * g;
+            }
+            let mut bias = lw.bias.clone();
+            for (b, g) in bias.iter_mut().zip(db) {
+                *b -= lr * g;
+            }
+            let strategy = lw.strategy;
+            let backward_strategy = lw.backward_strategy;
+            let mut rebuilt = LayerWeights::new(lw.spec, kernel, bias);
+            rebuilt.strategy = strategy;
+            rebuilt.backward_strategy = backward_strategy;
+            *lw = rebuilt;
+        }
+    }
+
+    /// Exact arena floats a full training step needs: the max over
+    /// layers of the forward figure joined with the backward figure
+    /// (forward and backward share one arena).
+    pub fn max_scratch_floats_train(&self) -> usize {
+        self.layers
+            .iter()
+            .map(|lw| lw.scratch_floats().max(lw.scratch_floats_backward()))
+            .max()
+            .unwrap_or(0)
+    }
+
+    /// Arena sized for [`max_scratch_floats_train`](Self::max_scratch_floats_train).
+    pub fn scratch_train(&self) -> Scratch {
+        Scratch::with_floats(self.max_scratch_floats_train())
+    }
+}
+
+/// A self-contained supervised training driver: a fixed latent, a
+/// fixed target image in tanh range, MSE loss, plain SGD — the
+/// smallest loop that exercises every backward lane end to end (what
+/// `examples/training_step.rs` and the `training_step` bench column
+/// run).
+#[derive(Debug)]
+pub struct TrainStep {
+    pub gen: Generator,
+    /// Fixed regression target (tanh range).
+    pub target: Feature,
+    /// SGD step size.
+    pub lr: f32,
+    scratch: Scratch,
+    z: Vec<f32>,
+}
+
+impl TrainStep {
+    /// Fixed latent and target drawn from `rng`; arena pre-sized for
+    /// the whole step.
+    pub fn new(gen: Generator, rng: &mut Rng, lr: f32) -> TrainStep {
+        let z: Vec<f32> = (0..gen.model.z_dim()).map(|_| rng.normal_f32()).collect();
+        let (h, w, c) = gen.output_shape();
+        let mut target = Feature::zeros(h, w, c);
+        for v in &mut target.data {
+            *v = (0.5 * rng.normal_f32()).tanh();
+        }
+        let scratch = gen.scratch_train();
+        TrainStep {
+            gen,
+            target,
+            lr,
+            scratch,
+            z,
+        }
+    }
+
+    /// MSE between an image and the target.
+    fn mse(&self, y: &Feature) -> f32 {
+        let n = y.data.len() as f32;
+        y.data
+            .iter()
+            .zip(&self.target.data)
+            .map(|(a, b)| (a - b) * (a - b))
+            .sum::<f32>()
+            / n
+    }
+
+    /// Current loss (forward only, no update).
+    pub fn loss(&mut self) -> f32 {
+        let trace = self.gen.forward_trace(&self.z, &mut self.scratch);
+        self.mse(trace.output())
+    }
+
+    /// One full step: forward → MSE loss → backward → SGD update.
+    /// Returns the loss *before* the update, so a strictly decreasing
+    /// sequence of returns certifies the gradients point downhill.
+    pub fn step(&mut self) -> f32 {
+        let trace = self.gen.forward_trace(&self.z, &mut self.scratch);
+        let y = trace.output();
+        let loss = self.mse(y);
+        let n = y.data.len() as f32;
+        let mut dy = Feature::zeros(y.h, y.w, y.c);
+        for ((d, &a), &b) in dy.data.iter_mut().zip(&y.data).zip(&self.target.data) {
+            *d = 2.0 * (a - b) / n;
+        }
+        let grads = self.gen.backward_trace(&trace, &dy, &mut self.scratch);
+        self.gen.sgd_step(&grads, self.lr);
+        loss
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::models::zoo::{GanModel, LayerSpec};
+    use crate::tensor::Kernel;
+
+    /// Two tiny layers over the GpGan skeleton (the forward.rs test
+    /// fixture, rebuilt here: test helpers don't cross module tests).
+    fn tiny_generator() -> Generator {
+        let mut rng = Rng::seeded(60);
+        let mut g = Generator::random(GanModel::GpGan, &mut rng);
+        let specs = [LayerSpec::gan(4, 8, 6), LayerSpec::gan(8, 6, 3)];
+        g.layers = specs
+            .iter()
+            .map(|&spec| {
+                let kernel = Kernel::random(spec.ksize, spec.cin, spec.cout, &mut rng);
+                LayerWeights::new(spec, kernel, vec![0.01; spec.cout])
+            })
+            .collect();
+        let z = g.model.z_dim();
+        let out0 = 4 * 4 * 8;
+        g.proj_w = vec![0.02; z * out0];
+        g.proj_b = vec![0.0; out0];
+        g
+    }
+
+    fn loss_of(g: &Generator, z: &[f32], target: &Feature) -> f32 {
+        let y = g.forward(z, Algorithm::Unified, Lane::Serial);
+        let n = y.data.len() as f32;
+        y.data
+            .iter()
+            .zip(&target.data)
+            .map(|(a, b)| (a - b) * (a - b))
+            .sum::<f32>()
+            / n
+    }
+
+    #[test]
+    fn generator_grads_match_finite_differences() {
+        // Central FD over a spread of parameters of every kind —
+        // projection weights/biases, both layers' kernels and biases —
+        // against the analytic chain.  eps/tol follow the repo's FD
+        // contract (f32 arithmetic).
+        let g = tiny_generator();
+        let mut rng = Rng::seeded(71);
+        let z: Vec<f32> = (0..g.model.z_dim()).map(|_| rng.normal_f32()).collect();
+        let (h, w, c) = g.output_shape();
+        let mut target = Feature::zeros(h, w, c);
+        for v in &mut target.data {
+            *v = (0.5 * rng.normal_f32()).tanh();
+        }
+        let mut scratch = g.scratch_train();
+        let trace = g.forward_trace(&z, &mut scratch);
+        let y = trace.output();
+        let n = y.data.len() as f32;
+        let mut dy = Feature::zeros(y.h, y.w, y.c);
+        for ((d, &a), &b) in dy.data.iter_mut().zip(&y.data).zip(&target.data) {
+            *d = 2.0 * (a - b) / n;
+        }
+        let grads = g.backward_trace(&trace, &dy, &mut scratch);
+        let eps = 1e-2f32;
+        let check = |got: f32, fd: f32, what: &str| {
+            assert!(
+                (got - fd).abs() <= 2e-2 * (1.0 + fd.abs()),
+                "{what}: analytic {got} vs FD {fd}"
+            );
+        };
+        // Projection weights: a deterministic spread of indices.
+        for i in (0..g.proj_w.len()).step_by(g.proj_w.len() / 5 + 1) {
+            let mut gp = g.clone();
+            gp.proj_w[i] += eps;
+            let mut gm = g.clone();
+            gm.proj_w[i] -= eps;
+            let fd = (loss_of(&gp, &z, &target) - loss_of(&gm, &z, &target)) / (2.0 * eps);
+            check(grads.proj_w[i], fd, &format!("proj_w[{i}]"));
+        }
+        for i in (0..g.proj_b.len()).step_by(g.proj_b.len() / 4 + 1) {
+            let mut gp = g.clone();
+            gp.proj_b[i] += eps;
+            let mut gm = g.clone();
+            gm.proj_b[i] -= eps;
+            let fd = (loss_of(&gp, &z, &target) - loss_of(&gm, &z, &target)) / (2.0 * eps);
+            check(grads.proj_b[i], fd, &format!("proj_b[{i}]"));
+        }
+        // Kernels and biases of both layers: perturbing a kernel means
+        // re-freezing the layer's plan.
+        for li in 0..g.layers.len() {
+            let klen = g.layers[li].kernel.data.len();
+            for i in (0..klen).step_by(klen / 5 + 1) {
+                let fd_at = |sign: f32| {
+                    let mut gg = g.clone();
+                    let mut kernel = gg.layers[li].kernel.clone();
+                    kernel.data[i] += sign * eps;
+                    let bias = gg.layers[li].bias.clone();
+                    gg.layers[li] = LayerWeights::new(gg.layers[li].spec, kernel, bias);
+                    loss_of(&gg, &z, &target)
+                };
+                let fd = (fd_at(1.0) - fd_at(-1.0)) / (2.0 * eps);
+                check(grads.layers[li].0.data[i], fd, &format!("layer{li}.kernel[{i}]"));
+            }
+            for i in 0..g.layers[li].bias.len() {
+                let fd_at = |sign: f32| {
+                    let mut gg = g.clone();
+                    gg.layers[li].bias[i] += sign * eps;
+                    loss_of(&gg, &z, &target)
+                };
+                let fd = (fd_at(1.0) - fd_at(-1.0)) / (2.0 * eps);
+                check(grads.layers[li].1[i], fd, &format!("layer{li}.bias[{i}]"));
+            }
+        }
+    }
+
+    #[test]
+    fn train_step_loss_strictly_decreases() {
+        // The CI gate in miniature: a few SGD steps on the MSE
+        // objective must move strictly downhill.
+        let g = tiny_generator();
+        let mut rng = Rng::seeded(72);
+        let mut ts = TrainStep::new(g, &mut rng, 0.05);
+        let mut losses = Vec::new();
+        for _ in 0..4 {
+            losses.push(ts.step());
+        }
+        for w in losses.windows(2) {
+            assert!(w[1] < w[0], "loss did not decrease: {losses:?}");
+        }
+        // And the post-update loss agrees with the next step's report.
+        let final_loss = ts.loss();
+        assert!(final_loss < *losses.last().unwrap());
+    }
+
+    #[test]
+    fn backward_trace_consistent_across_lanes_and_sgd_keeps_pins() {
+        // Pinned backward strategies change speed, not gradients: the
+        // GEMM and parallel data-grad lanes must agree with the direct
+        // chain within the 1e-4 reassociation contract, and SGD
+        // rebuilds must preserve every pin.
+        use crate::tune::space::{backward_search_space, ExecStrategy};
+        let g = tiny_generator();
+        let mut rng = Rng::seeded(73);
+        let z: Vec<f32> = (0..g.model.z_dim()).map(|_| rng.normal_f32()).collect();
+        let dy = Feature::random(16, 16, 3, &mut rng);
+        let mut scratch = g.scratch_train();
+        let trace = g.forward_trace(&z, &mut scratch);
+        let want = g.backward_trace(&trace, &dy, &mut scratch);
+        for s in backward_search_space(3) {
+            let mut gp = g.clone();
+            gp.set_backward_strategies(&[s, s]);
+            let mut scratch_p = gp.scratch_train();
+            let trace_p = gp.forward_trace(&z, &mut scratch_p);
+            assert_eq!(trace_p.output(), trace.output(), "forward must not change");
+            let got = gp.backward_trace(&trace_p, &dy, &mut scratch_p);
+            let err = got
+                .proj_w
+                .iter()
+                .zip(&want.proj_w)
+                .chain(got.proj_b.iter().zip(&want.proj_b))
+                .map(|(a, b)| (a - b).abs())
+                .fold(0.0f32, f32::max);
+            assert!(err < 1e-4, "{} grads diverged by {err}", s.name());
+            // SGD keeps the pins through the plan re-freeze.
+            gp.sgd_step(&got, 0.01);
+            assert!(gp.backward_strategies().iter().all(|p| *p == Some(s)));
+        }
+        // A forward pin survives too.
+        let mut gf = g.clone();
+        gf.set_strategies(&[ExecStrategy::serial_gemm(), ExecStrategy::serial()]);
+        let mut scratch_f = gf.scratch_train();
+        let trace_f = gf.forward_trace(&z, &mut scratch_f);
+        let grads_f = gf.backward_trace(&trace_f, &dy, &mut scratch_f);
+        gf.sgd_step(&grads_f, 0.01);
+        assert_eq!(gf.strategies()[0], Some(ExecStrategy::serial_gemm()));
+    }
+}

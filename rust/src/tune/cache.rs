@@ -181,8 +181,27 @@ impl TuningCache {
         }
     }
 
+    /// [`key`](Self::key) for a backward-pass verdict.  Backward
+    /// execution searches a different space (no fused lanes, no
+    /// per-element axis) over different work (data-grad + weight-grad),
+    /// so it gets a `bwd` suffix — disjoint from the batch `b{N}`
+    /// suffix, which is always digit-terminated — and can never shadow
+    /// a forward verdict.
+    pub fn key_backward(params: &ConvTransposeParams, space_workers: usize) -> String {
+        format!("{}bwd", Self::key(params, space_workers))
+    }
+
     pub fn get(&self, params: &ConvTransposeParams, space_workers: usize) -> Option<&CacheEntry> {
         self.get_batch(params, space_workers, 1)
+    }
+
+    /// Lookup under the backward key (see [`key_backward`](Self::key_backward)).
+    pub fn get_backward(
+        &self,
+        params: &ConvTransposeParams,
+        space_workers: usize,
+    ) -> Option<&CacheEntry> {
+        self.entries.get(&Self::key_backward(params, space_workers))
     }
 
     /// Lookup for a serving batch size (see [`key_batch`](Self::key_batch)).
@@ -232,6 +251,26 @@ impl TuningCache {
     ) {
         self.entries.insert(
             Self::key_batch(params, space_workers, batch),
+            CacheEntry {
+                strategy,
+                seconds,
+                candidates: candidates.to_vec(),
+            },
+        );
+    }
+
+    /// [`put_with_candidates`](Self::put_with_candidates) under the
+    /// backward key (what `Tuner::tune_layer_backward_cached` records).
+    pub fn put_backward_with_candidates(
+        &mut self,
+        params: &ConvTransposeParams,
+        space_workers: usize,
+        strategy: ExecStrategy,
+        seconds: f64,
+        candidates: &[(ExecStrategy, Option<f64>)],
+    ) {
+        self.entries.insert(
+            Self::key_backward(params, space_workers),
             CacheEntry {
                 strategy,
                 seconds,
@@ -344,6 +383,34 @@ mod tests {
         let hit = cache.get_batch(&params(4), 8, 4).unwrap();
         assert_eq!(hit.strategy, ExecStrategy::serial_gemm().fused());
         assert!(cache.get_batch(&params(4), 8, 2).is_none());
+    }
+
+    #[test]
+    fn backward_keys_disjoint_from_forward_and_batch_keys() {
+        let fwd = TuningCache::key(&params(4), 8);
+        let bwd = TuningCache::key_backward(&params(4), 8);
+        assert!(bwd.ends_with("w8bwd"), "{bwd}");
+        assert_ne!(bwd, fwd);
+        // `bwd` is letter-terminated; batch suffixes are `b{digits}`,
+        // so no batch size can collide with the backward namespace.
+        for batch in [1, 2, 4, 8, 100] {
+            assert_ne!(TuningCache::key_batch(&params(4), 8, batch), bwd);
+        }
+        let mut cache = TuningCache::in_memory();
+        cache.put_backward_with_candidates(
+            &params(4),
+            8,
+            ExecStrategy::serial_gemm(),
+            2e-4,
+            &[(ExecStrategy::serial(), Some(5e-4))],
+        );
+        assert!(cache.get(&params(4), 8).is_none(), "bwd must not shadow fwd");
+        assert!(cache.get_batch(&params(4), 8, 4).is_none());
+        let hit = cache.get_backward(&params(4), 8).unwrap();
+        assert_eq!(hit.strategy, ExecStrategy::serial_gemm());
+        assert_eq!(hit.candidates.len(), 1);
+        // And the narrower-space backward question stays distinct.
+        assert!(cache.get_backward(&params(4), 2).is_none());
     }
 
     #[test]

@@ -88,6 +88,21 @@ pub trait Measurer {
         let _ = batch;
         self.time_strategy(plan, strategy, incumbent)
     }
+
+    /// Best observed seconds for one **training-direction** step of
+    /// `plan` under `strategy`: data-grad through the strategy's
+    /// backward lane plus the weight-grad phase GEMM (DESIGN.md
+    /// §Backward-Execution).  Defaults to the forward measurement so
+    /// direction-oblivious test measurers keep working unchanged;
+    /// [`WallClockMeasurer`] overrides it with a real backward timing.
+    fn time_backward(
+        &mut self,
+        plan: &ConvTransposePlan,
+        strategy: &ExecStrategy,
+        incumbent: Option<f64>,
+    ) -> Option<f64> {
+        self.time_strategy(plan, strategy, incumbent)
+    }
 }
 
 /// Wall-clock [`Measurer`]: deterministic random input per layer
@@ -216,6 +231,37 @@ impl Measurer for WallClockMeasurer {
             })
         }
     }
+
+    /// Backward candidate: one timed step is a full training-direction
+    /// gradient — data-grad under `strategy` + the weight-grad phase
+    /// GEMM — over a deterministic dy, through a warm arena sized to
+    /// the backward peak (the steady state a `TrainStep` runs in).
+    fn time_backward(
+        &mut self,
+        plan: &ConvTransposePlan,
+        strategy: &ExecStrategy,
+        incumbent: Option<f64>,
+    ) -> Option<f64> {
+        let p = *plan.params();
+        let mut rng = Rng::seeded(
+            0x7EA5
+                ^ (0xB0D << 40)
+                ^ ((p.n_in as u64) << 16)
+                ^ ((p.cin as u64) << 8)
+                ^ (p.cout as u64),
+        );
+        let ho = plan.out_size();
+        let x = Feature::random(p.n_in, p.n_in, p.cin, &mut rng);
+        let dy = Feature::random(ho, ho, p.cout, &mut rng);
+        let mut scratch = Scratch::with_floats(plan.peak_scratch_floats_backward());
+        let mut dx = plan.new_input_grad();
+        let mut dk = plan.new_kernel_grad();
+        self.run_budgeted(incumbent, || {
+            plan.run_backward_data_with(strategy, &dy, &mut scratch, &mut dx);
+            plan.run_backward_weights(&x, &dy, &mut scratch, &mut dk);
+            dx.data[0] + dk.data[0]
+        })
+    }
 }
 
 #[cfg(test)]
@@ -286,6 +332,20 @@ mod tests {
         assert!(m
             .time_strategy_batch(&plan, &ExecStrategy::serial(), 1, None)
             .is_some());
+    }
+
+    #[test]
+    fn backward_measurement_times_every_backward_candidate() {
+        let plan = plan();
+        let mut m = WallClockMeasurer::new(MeasureBudget::quick());
+        for s in crate::tune::space::backward_search_space(2) {
+            let t = m.time_backward(&plan, &s, None);
+            assert!(t.is_some(), "{} not measured backward", s.name());
+            assert!(t.unwrap() >= 0.0);
+        }
+        // The prune contract holds in the backward direction too.
+        let t = m.time_backward(&plan, &ExecStrategy::serial(), Some(1e-15));
+        assert_eq!(t, None);
     }
 
     #[test]

@@ -14,7 +14,9 @@
 //!   worker count) × parallel axis (phase×row queue vs per-phase
 //!   rows) × batched dispatch (fused vs per-latent, DESIGN.md
 //!   §Batched-Execution), and the [`search_space`] /
-//!   [`search_space_batch`] enumerations
+//!   [`search_space_batch`] / [`backward_search_space`] enumerations
+//!   (the last covering the planned backward lanes of DESIGN.md
+//!   §Backward-Execution, cached under disjoint `bwd` keys)
 //! * [`measure`] — warmup + adaptive trials per candidate
 //!   (`util::timing::measure_for`) with probe-based early pruning of
 //!   candidates already 2× slower than the incumbent
@@ -39,5 +41,7 @@ pub mod tuner;
 
 pub use cache::{CacheEntry, TuningCache};
 pub use measure::{MeasureBudget, Measurer, WallClockMeasurer};
-pub use space::{search_space, search_space_batch, ExecStrategy, Formulation, ParAxis};
+pub use space::{
+    backward_search_space, search_space, search_space_batch, ExecStrategy, Formulation, ParAxis,
+};
 pub use tuner::{TunedPlan, Tuner};

@@ -306,6 +306,23 @@ pub fn search_space_batch(max_workers: usize, batch: usize) -> Vec<ExecStrategy>
     out
 }
 
+/// The **backward-direction** search space (DESIGN.md
+/// §Backward-Execution): the lanes
+/// [`ConvTransposePlan::run_backward_data_with`](crate::conv::plan::ConvTransposePlan::run_backward_data_with)
+/// dispatches — serial direct (element zero, seeding the incumbent
+/// like the forward spaces), serial GEMM, and the `(phase, slab-row)`
+/// parallel direct lane per candidate worker count.  A separate
+/// enumeration rather than a [`search_space`] extension: backward has
+/// no per-element formulation and no split-axis choice, and keeping it
+/// apart leaves the pinned forward space sizes untouched.
+pub fn backward_search_space(max_workers: usize) -> Vec<ExecStrategy> {
+    let mut out = vec![ExecStrategy::serial(), ExecStrategy::serial_gemm()];
+    for w in worker_counts(max_workers) {
+        out.push(ExecStrategy::parallel(w, ParAxis::PhaseRows));
+    }
+    out
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -373,6 +390,29 @@ mod tests {
             ExecStrategy::serial_per_element().fused(),
             ExecStrategy::serial_per_element()
         );
+    }
+
+    #[test]
+    fn backward_space_is_small_and_disjointly_defined() {
+        // Serial direct seeds the incumbent; the space holds exactly
+        // {serial, serial-gemm} + one parallel lane per worker count,
+        // every member dispatchable by run_backward_data_with.  The
+        // forward spaces keep their pinned sizes regardless.
+        assert_eq!(backward_search_space(1).len(), 2);
+        assert_eq!(backward_search_space(2).len(), 2 + 1);
+        assert_eq!(backward_search_space(8).len(), 2 + 3);
+        for max in [1, 2, 8] {
+            let space = backward_search_space(max);
+            assert_eq!(space[0], ExecStrategy::serial());
+            assert!(space.contains(&ExecStrategy::serial_gemm()));
+            assert!(!space.iter().any(|s| s.formulation == Formulation::PerElement));
+            assert!(!space.iter().any(|s| s.fused));
+            let mut names: Vec<String> = space.iter().map(ExecStrategy::name).collect();
+            names.sort();
+            names.dedup();
+            assert_eq!(names.len(), space.len());
+        }
+        assert!(backward_search_space(8).contains(&ExecStrategy::parallel(4, ParAxis::PhaseRows)));
     }
 
     #[test]

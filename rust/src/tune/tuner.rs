@@ -13,7 +13,7 @@ use crate::conv::ConvTransposeParams;
 
 use super::cache::TuningCache;
 use super::measure::{MeasureBudget, Measurer};
-use super::space::{search_space, search_space_batch, ExecStrategy};
+use super::space::{backward_search_space, search_space, search_space_batch, ExecStrategy};
 
 /// The tuning verdict for one layer shape.
 #[derive(Debug, Clone)]
@@ -165,6 +165,76 @@ impl Tuner {
         );
         tuned
     }
+
+    /// Exhaustive search over the *backward* strategy space (DESIGN.md
+    /// §Backward-Execution): direct, phase-GEMM, and phase-row-parallel
+    /// data-grad lanes, each timed running a full backward step
+    /// (data-grad + weight-grad) through
+    /// [`Measurer::time_backward`].  The space is
+    /// [`backward_search_space`] bounded by the same worker cap as the
+    /// forward space, so forward and backward verdicts share one cache
+    /// file under disjoint keys.
+    pub fn tune_layer_backward<M: Measurer>(
+        &self,
+        plan: &ConvTransposePlan,
+        measurer: &mut M,
+    ) -> TunedPlan {
+        let space = backward_search_space(self.space_workers());
+        assert!(!space.is_empty(), "tuner: empty backward search space");
+        let mut best: Option<(ExecStrategy, f64)> = None;
+        let mut candidates = Vec::with_capacity(space.len());
+        for s in &space {
+            let incumbent = best.as_ref().map(|b| b.1);
+            let t = measurer.time_backward(plan, s, incumbent);
+            if let Some(sec) = t {
+                let improves = match &best {
+                    None => true,
+                    Some((_, b)) => sec < *b,
+                };
+                if improves {
+                    best = Some((*s, sec));
+                }
+            }
+            candidates.push((*s, t));
+        }
+        let (strategy, best_seconds) =
+            best.expect("tuner: no backward candidate measured (first is never pruned)");
+        TunedPlan {
+            params: *plan.params(),
+            strategy,
+            best_seconds,
+            candidates,
+            cached: false,
+        }
+    }
+
+    /// [`tune_layer_backward`](Self::tune_layer_backward) through the
+    /// cache's `bwd`-suffixed key namespace.
+    pub fn tune_layer_backward_cached<M: Measurer>(
+        &self,
+        plan: &ConvTransposePlan,
+        cache: &mut TuningCache,
+        measurer: &mut M,
+    ) -> TunedPlan {
+        if let Some(entry) = cache.get_backward(plan.params(), self.space_workers()) {
+            return TunedPlan {
+                params: *plan.params(),
+                strategy: entry.strategy,
+                best_seconds: entry.seconds,
+                candidates: Vec::new(),
+                cached: true,
+            };
+        }
+        let tuned = self.tune_layer_backward(plan, measurer);
+        cache.put_backward_with_candidates(
+            plan.params(),
+            self.space_workers(),
+            tuned.strategy,
+            tuned.best_seconds,
+            &tuned.candidates,
+        );
+        tuned
+    }
 }
 
 #[cfg(test)]
@@ -253,6 +323,44 @@ mod tests {
         let again = tuner.tune_layer_cached(&plan(), &mut cache, &mut m);
         assert!(again.cached);
         assert_eq!(m.incumbents.len(), timed);
+    }
+
+    #[test]
+    fn backward_tuner_searches_backward_space_and_keys_by_bwd() {
+        // The Scripted measurer implements only `time_strategy`; the
+        // defaulted `Measurer::time_backward` routes through it, so the
+        // backward search exercises the same pruning contract.
+        let winner = ExecStrategy::serial_gemm();
+        let mut m = Scripted {
+            incumbents: Vec::new(),
+            winner,
+        };
+        let tuner = Tuner::new(2);
+        let tuned = tuner.tune_layer_backward(&plan(), &mut m);
+        assert_eq!(tuned.strategy, winner);
+        assert_eq!(tuned.best_seconds, 0.5);
+        assert_eq!(
+            tuned.candidates.len(),
+            backward_search_space(2).len(),
+            "every backward candidate must be visited"
+        );
+        assert_eq!(tuned.candidates[0].0, ExecStrategy::serial());
+        assert_eq!(m.incumbents[0], None, "serial seeds the incumbent");
+        assert!(tuned.serial_seconds().is_some());
+        // Cached roundtrip lives in the bwd namespace: the forward
+        // lookup must miss, the backward rerun must hit.
+        let mut cache = TuningCache::in_memory();
+        let first = tuner.tune_layer_backward_cached(&plan(), &mut cache, &mut m);
+        assert!(!first.cached);
+        assert!(cache.get(plan().params(), tuner.space_workers()).is_none());
+        assert!(cache
+            .get_backward(plan().params(), tuner.space_workers())
+            .is_some());
+        let timed = m.incumbents.len();
+        let again = tuner.tune_layer_backward_cached(&plan(), &mut cache, &mut m);
+        assert!(again.cached);
+        assert_eq!(m.incumbents.len(), timed, "hit must not measure");
+        assert_eq!(again.strategy, first.strategy);
     }
 
     #[test]

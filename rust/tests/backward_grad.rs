@@ -1,0 +1,210 @@
+//! End-to-end gradient checks for every backward route (DESIGN.md
+//! §Backward-Execution): central finite differences against the
+//! conventional one-shot gradients, the unified one-shot gradients,
+//! and the planned lanes (direct / phase-GEMM / phase-row-parallel
+//! data-grad, phase-GEMM weight-grad) over a grid of odd/even shapes,
+//! paddings 0–3 and `Cout ∈ {1, 3, 8}` — plus the batched contract:
+//! the planned batched backward is bit-identical to `N` sequential
+//! unplanned backwards on direct lanes and within 1e-4 on GEMM lanes
+//! (the PR-4 reassociation tolerance).
+//!
+//! The probe loss is `L = Σ w ⊙ y` for a fixed random `w`, so `L` is
+//! *linear* in both `x` and `k`: central differences carry no
+//! truncation term and a large step (0.5) keeps the f32 rounding noise
+//! far below the 1e-3 relative tolerance.
+
+use ukstc::conv::backward::{
+    grad_input_conventional, grad_input_unified, grad_kernel_conventional, grad_kernel_unified,
+};
+use ukstc::conv::plan::{ConvTransposePlan, Scratch};
+use ukstc::conv::{unified, ConvTransposeParams};
+use ukstc::tensor::{Feature, FeatureBatch, Kernel};
+use ukstc::tune::{backward_search_space, Formulation};
+use ukstc::util::rng::Rng;
+
+/// `L = Σ w ⊙ y`, accumulated in f64 so the FD quotient's rounding
+/// noise stays well under the comparison tolerance.
+fn probe_loss(y: &Feature, w: &Feature) -> f64 {
+    y.data
+        .iter()
+        .zip(&w.data)
+        .map(|(a, b)| (*a as f64) * (*b as f64))
+        .sum()
+}
+
+fn check(got: f32, fd: f64, what: &str) {
+    let fd = fd as f32;
+    assert!(
+        (got - fd).abs() <= 1e-3 * (1.0 + fd.abs()),
+        "{what}: analytic {got} vs central FD {fd}"
+    );
+}
+
+/// The shape grid: odd and even inputs and kernels, paddings 0–3,
+/// `Cout ∈ {1, 3, 8}`, skipping configurations whose padded upsampled
+/// map cannot host the kernel (`2·n_in + 2·p ≤ n_k`) or whose output
+/// would be empty.
+fn grid() -> Vec<(usize, usize, usize, usize, usize)> {
+    let mut cases = Vec::new();
+    for n_in in [3usize, 4, 5] {
+        for nk in [3usize, 4] {
+            for p in 0usize..=3 {
+                for cout in [1usize, 3, 8] {
+                    // out_size = 2·n_in + 2·p − n_k must be positive.
+                    if 2 * n_in + 2 * p <= nk {
+                        continue;
+                    }
+                    cases.push((n_in, nk, p, 2usize, cout));
+                }
+            }
+        }
+    }
+    cases
+}
+
+#[test]
+fn data_grad_routes_match_finite_differences() {
+    for (ci, &(n_in, nk, p, cin, cout)) in grid().iter().enumerate() {
+        let mut rng = Rng::seeded(0xBAD0 ^ (ci as u64));
+        let x = Feature::random(n_in, n_in, cin, &mut rng);
+        let k = Kernel::random(nk, cin, cout, &mut rng);
+        let y0 = unified::transpose_conv(&x, &k, p);
+        let w = Feature::random(y0.h, y0.w, y0.c, &mut rng);
+        // dL/dy = w for the linear probe loss.
+        let conv = grad_input_conventional(&w, &k, n_in, p);
+        let uni = grad_input_unified(&w, &k, n_in, p);
+        let plan = ConvTransposePlan::new(ConvTransposeParams::new(n_in, nk, p, cin, cout), &k);
+        let mut scratch = Scratch::with_floats(plan.peak_scratch_floats_backward());
+        let mut direct = plan.new_input_grad();
+        plan.run_backward_data(&w, &mut scratch, &mut direct);
+        let mut gemm = plan.new_input_grad();
+        plan.run_backward_data_gemm(&w, &mut scratch, &mut gemm);
+        let mut par = plan.new_input_grad();
+        plan.run_backward_data_par(&w, &mut scratch, &mut par, 3);
+        // The planned direct lanes reproduce the one-shot unified
+        // reference bit-for-bit; GEMM stays within 1e-4.
+        assert_eq!(direct, uni, "case {ci}: planned direct != one-shot");
+        assert_eq!(par, uni, "case {ci}: planned parallel != one-shot");
+        for (a, b) in gemm.data.iter().zip(&uni.data) {
+            assert!((a - b).abs() < 1e-4, "case {ci}: GEMM lane drifted");
+        }
+        let eps = 0.5f32;
+        let step = x.data.len() / 6 + 1;
+        for idx in (0..x.data.len()).step_by(step) {
+            let mut xp = x.clone();
+            xp.data[idx] += eps;
+            let mut xm = x.clone();
+            xm.data[idx] -= eps;
+            let fd = (probe_loss(&unified::transpose_conv(&xp, &k, p), &w)
+                - probe_loss(&unified::transpose_conv(&xm, &k, p), &w))
+                / (2.0 * eps as f64);
+            let what = format!("case {ci} (n{n_in} k{nk} p{p} co{cout}) dx[{idx}]");
+            check(conv.data[idx], fd, &format!("{what} conventional"));
+            check(uni.data[idx], fd, &format!("{what} unified"));
+            check(direct.data[idx], fd, &format!("{what} planned-direct"));
+            check(gemm.data[idx], fd, &format!("{what} planned-gemm"));
+            check(par.data[idx], fd, &format!("{what} planned-par"));
+        }
+    }
+}
+
+#[test]
+fn weight_grad_routes_match_finite_differences() {
+    for (ci, &(n_in, nk, p, cin, cout)) in grid().iter().enumerate() {
+        let mut rng = Rng::seeded(0xBAD1 ^ (ci as u64));
+        let x = Feature::random(n_in, n_in, cin, &mut rng);
+        let k = Kernel::random(nk, cin, cout, &mut rng);
+        let y0 = unified::transpose_conv(&x, &k, p);
+        let w = Feature::random(y0.h, y0.w, y0.c, &mut rng);
+        let conv = grad_kernel_conventional(&x, &w, nk, p);
+        let uni = grad_kernel_unified(&x, &w, nk, p);
+        let plan = ConvTransposePlan::new(ConvTransposeParams::new(n_in, nk, p, cin, cout), &k);
+        let mut scratch = Scratch::with_floats(plan.peak_scratch_floats_backward());
+        let mut planned = plan.new_kernel_grad();
+        plan.run_backward_weights(&x, &w, &mut scratch, &mut planned);
+        let eps = 0.5f32;
+        let step = k.data.len() / 6 + 1;
+        for idx in (0..k.data.len()).step_by(step) {
+            let mut kp = k.clone();
+            kp.data[idx] += eps;
+            let mut km = k.clone();
+            km.data[idx] -= eps;
+            let fd = (probe_loss(&unified::transpose_conv(&x, &kp, p), &w)
+                - probe_loss(&unified::transpose_conv(&x, &km, p), &w))
+                / (2.0 * eps as f64);
+            let what = format!("case {ci} (n{n_in} k{nk} p{p} co{cout}) dk[{idx}]");
+            check(conv.data[idx], fd, &format!("{what} conventional"));
+            check(uni.data[idx], fd, &format!("{what} unified"));
+            check(planned.data[idx], fd, &format!("{what} planned"));
+        }
+    }
+}
+
+#[test]
+fn planned_batched_backward_matches_sequential_unplanned() {
+    // The batched contract against the *unplanned* one-shot reference:
+    // direct lanes bit-identical to N sequential `grad_input_unified`
+    // calls, GEMM lanes within 1e-4; the batch-accumulated weight-grad
+    // within 1e-3 of the per-image sum (one extra reassociation per
+    // image).
+    let shapes = [
+        (4usize, 4usize, 2usize, 3usize, 8usize),
+        (5, 3, 1, 2, 3),
+        (3, 4, 3, 2, 1),
+        (6, 4, 2, 2, 8),
+    ];
+    for (si, &(n_in, nk, p, cin, cout)) in shapes.iter().enumerate() {
+        let mut rng = Rng::seeded(0xBAD2 ^ (si as u64));
+        let k = Kernel::random(nk, cin, cout, &mut rng);
+        let plan = ConvTransposePlan::new(ConvTransposeParams::new(n_in, nk, p, cin, cout), &k);
+        let out = plan.params().out_size();
+        for n in [1usize, 3, 5] {
+            let xb = FeatureBatch::random(n, n_in, n_in, cin, &mut rng);
+            let dyb = FeatureBatch::random(n, out, out, cout, &mut rng);
+            // Sequential unplanned reference.
+            let mut want_dx = Vec::with_capacity(n);
+            let mut want_dk = plan.new_kernel_grad();
+            for i in 0..n {
+                let xi = xb.feature(i);
+                let dyi = dyb.feature(i);
+                want_dx.push(grad_input_unified(&dyi, &k, n_in, p));
+                let dki = grad_kernel_unified(&xi, &dyi, nk, p);
+                for (a, b) in want_dk.data.iter_mut().zip(&dki.data) {
+                    *a += b;
+                }
+            }
+            let mut scratch = Scratch::with_floats(plan.peak_scratch_floats_backward());
+            for s in backward_search_space(4) {
+                let mut dxb = FeatureBatch::zeros(n, n_in, n_in, cin);
+                plan.run_backward_data_batch_with(&s, &dyb, &mut scratch, &mut dxb);
+                for (i, want) in want_dx.iter().enumerate() {
+                    if s.formulation == Formulation::PhaseGemm {
+                        let err = dxb
+                            .image(i)
+                            .iter()
+                            .zip(&want.data)
+                            .map(|(a, b)| (a - b).abs())
+                            .fold(0.0f32, f32::max);
+                        assert!(err < 1e-4, "{} image {i} err {err}", s.name());
+                    } else {
+                        assert_eq!(
+                            dxb.image(i),
+                            &want.data[..],
+                            "{} image {i} not bit-identical (shape {si}, n {n})",
+                            s.name()
+                        );
+                    }
+                }
+            }
+            let mut dk = plan.new_kernel_grad();
+            plan.run_backward_weights_batch(&xb, &dyb, &mut scratch, &mut dk);
+            let err = dk
+                .data
+                .iter()
+                .zip(&want_dk.data)
+                .map(|(a, b)| (a - b).abs())
+                .fold(0.0f32, f32::max);
+            assert!(err < 1e-3, "batched weight-grad err {err} (shape {si}, n {n})");
+        }
+    }
+}

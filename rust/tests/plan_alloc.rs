@@ -187,4 +187,87 @@ fn planned_path_is_zero_alloc_after_warmup() {
             "batched result diverged after arena reuse (image {i})"
         );
     }
+
+    // --- Part 5: the backward lanes (DESIGN.md §Backward-Execution)
+    // honor the same contract.  A dedicated plan (same geometry as
+    // `plan0`, kernel kept for the one-shot reference) proves first
+    // that the sizing is *exact*: each lane's `scratch_floats_backward*`
+    // figure is precisely what a cold arena grows to — no more, no less.
+    let k5 = Kernel::random(4, 16, 8, &mut rng);
+    let plan5 = ConvTransposePlan::new(ConvTransposeParams::new(4, 4, 2, 16, 8), &k5);
+    let out5 = plan5.params().out_size();
+    let dy0 = Feature::random(out5, out5, 8, &mut rng);
+    let x0 = Feature::random(4, 4, 16, &mut rng);
+    let mut dx0 = plan5.new_input_grad();
+    let mut dk0 = plan5.new_kernel_grad();
+    {
+        let mut cold = Scratch::new();
+        plan5.run_backward_data(&dy0, &mut cold, &mut dx0);
+        assert_eq!(
+            cold.capacity_floats(),
+            plan5.scratch_floats_backward_data(),
+            "backward-data direct sizing is not exact"
+        );
+        let mut cold = Scratch::new();
+        plan5.run_backward_data_gemm(&dy0, &mut cold, &mut dx0);
+        assert_eq!(
+            cold.capacity_floats(),
+            plan5.scratch_floats_backward_data_gemm(),
+            "backward-data GEMM sizing is not exact"
+        );
+        let mut cold = Scratch::new();
+        plan5.run_backward_weights(&x0, &dy0, &mut cold, &mut dk0);
+        assert_eq!(
+            cold.capacity_floats(),
+            plan5.scratch_floats_backward_weights(),
+            "backward-weights sizing is not exact"
+        );
+        assert_eq!(
+            plan5.peak_scratch_floats_backward(),
+            plan5
+                .scratch_floats_backward_data_gemm()
+                .max(plan5.scratch_floats_backward_weights()),
+            "backward peak must be the max over the lanes"
+        );
+    }
+    // Then steady state: with the shared arena at the backward
+    // high-water mark, every backward lane — single-image direct and
+    // GEMM data-grad, the batched data-grad, single and batched
+    // weight-grad — performs zero heap allocations.
+    let mut dxb = FeatureBatch::zeros(batch, 4, 4, 16);
+    let dyb = FeatureBatch::random(batch, out5, out5, 8, &mut rng);
+    // One warm-up round grows the shared arena to the backward
+    // high-water mark.
+    plan5.run_backward_data(&dy0, &mut scratch, &mut dx0);
+    plan5.run_backward_data_gemm(&dy0, &mut scratch, &mut dx0);
+    plan5.run_backward_data_batch(&dyb, &mut scratch, &mut dxb);
+    plan5.run_backward_weights(&x0, &dy0, &mut scratch, &mut dk0);
+    plan5.run_backward_weights_batch(&xb, &dyb, &mut scratch, &mut dk0);
+    let before = allocs();
+    for _ in 0..5 {
+        plan5.run_backward_data(&dy0, &mut scratch, &mut dx0);
+        plan5.run_backward_data_gemm(&dy0, &mut scratch, &mut dx0);
+        plan5.run_backward_data_batch(&dyb, &mut scratch, &mut dxb);
+        plan5.run_backward_weights(&x0, &dy0, &mut scratch, &mut dk0);
+        plan5.run_backward_weights_batch(&xb, &dyb, &mut scratch, &mut dk0);
+    }
+    assert_eq!(
+        allocs(),
+        before,
+        "backward lanes heap-allocated in steady state (warm arena)"
+    );
+    // And the reused-buffer results still match the one-shot reference.
+    use ukstc::conv::backward::{grad_input_unified, grad_kernel_unified};
+    let want_dx = grad_input_unified(&dy0, &k5, 4, 2);
+    plan5.run_backward_data(&dy0, &mut scratch, &mut dx0);
+    assert_eq!(dx0, want_dx, "backward data diverged after arena reuse");
+    plan5.run_backward_weights(&x0, &dy0, &mut scratch, &mut dk0);
+    let want_dk = grad_kernel_unified(&x0, &dy0, 4, 2);
+    let dk_err = dk0
+        .data
+        .iter()
+        .zip(&want_dk.data)
+        .map(|(a, b)| (a - b).abs())
+        .fold(0.0f32, f32::max);
+    assert!(dk_err < 1e-4, "backward weights diverged after arena reuse");
 }
