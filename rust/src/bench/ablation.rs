@@ -20,7 +20,9 @@
 //! 8. **Direct vs phase-GEMM** (DESIGN.md §GEMM-Execution): the
 //!    planned correlation path against the packed phase-GEMM engine,
 //!    per Table-4 DC-GAN layer, with achieved GFLOP/s — locating the
-//!    crossover on large-`Cout` layers.
+//!    crossover on large-`Cout` layers.  Reports the active microkernel
+//!    ISA per row and, on SIMD hosts, a forced-scalar GEMM column
+//!    (DESIGN.md §SIMD-Dispatch).
 //! 9. **Fused batch vs per-latent** (DESIGN.md §Batched-Execution):
 //!    the fused batched GEMM lane against a per-latent loop of the
 //!    same engine, per Table-4 layer and batch size — how the
@@ -38,6 +40,7 @@ use std::collections::BTreeMap;
 use crate::conv::backward::{grad_input_unified, grad_kernel_unified};
 use crate::conv::parallel::{run, Algorithm, Lane};
 use crate::conv::plan::{ConvTransposePlan, Scratch};
+use crate::conv::simd::Isa;
 use crate::conv::{conventional, dilated, flops, im2col, unified, ConvTransposeParams};
 use crate::models::zoo::GanModel;
 use crate::models::{Generator, TrainStep};
@@ -315,7 +318,15 @@ pub fn autotune(cfg: &BenchConfig) -> Vec<Entry> {
 pub struct GemmCrossRow {
     pub layer: String,
     pub direct: Entry,
+    /// Phase-GEMM through the host's active microkernel lane.
     pub gemm: Entry,
+    /// The microkernel lane the `gemm` column ran (DESIGN.md
+    /// §SIMD-Dispatch).
+    pub isa: Isa,
+    /// Phase-GEMM forced onto the portable scalar microkernel — the
+    /// SIMD-vs-scalar A/B.  `None` on scalar hosts, where it would
+    /// duplicate `gemm`.
+    pub gemm_scalar: Option<Entry>,
     pub macs: u64,
 }
 
@@ -343,10 +354,21 @@ pub fn gemm_crossover(model: GanModel, cfg: &BenchConfig) -> Vec<GemmCrossRow> {
                 out.data[0]
             })
             .with_macs(macs);
+            let isa = Isa::active();
+            let gemm_scalar = (isa != Isa::Scalar).then(|| {
+                let pinned = ExecStrategy::serial_gemm().with_isa(Isa::Scalar);
+                Entry::measure("phase-gemm/scalar", cfg, || {
+                    plan.run_with(&pinned, &x, &mut scratch, &mut out);
+                    out.data[0]
+                })
+                .with_macs(macs)
+            });
             GemmCrossRow {
                 layer: spec.describe(),
                 direct,
                 gemm,
+                isa,
+                gemm_scalar,
                 macs,
             }
         })
@@ -362,9 +384,16 @@ pub fn print_gemm_crossover(rows: &[GemmCrossRow]) {
                 r.layer.clone(),
                 timing::fmt_duration(r.direct.seconds),
                 timing::fmt_duration(r.gemm.seconds),
+                r.isa.name().into(),
                 report::gflops_cell(r.macs, r.direct.seconds),
                 report::gflops_cell(r.macs, r.gemm.seconds),
                 report::speedup(r.direct.seconds / r.gemm.seconds),
+                // SIMD-vs-scalar microkernel A/B: how much of the GEMM
+                // column the vector lane is worth ("-" on scalar hosts).
+                r.gemm_scalar
+                    .as_ref()
+                    .map(|e| report::speedup(e.seconds / r.gemm.seconds))
+                    .unwrap_or_else(|| "-".into()),
             ]
         })
         .collect();
@@ -374,9 +403,11 @@ pub fn print_gemm_crossover(rows: &[GemmCrossRow]) {
             "layer",
             "direct",
             "phase-gemm",
+            "isa",
             "direct GF/s",
             "gemm GF/s",
             "gemm speedup",
+            "vs scalar ukernel",
         ],
         &table,
     );
@@ -826,6 +857,13 @@ mod tests {
             assert!(r.direct.seconds > 0.0 && r.gemm.seconds > 0.0, "{}", r.layer);
             assert_eq!(r.direct.macs, Some(r.macs));
             assert!(r.macs > 0);
+            // The ISA column reports the active microkernel; the
+            // scalar A/B exists exactly when a vector lane is active.
+            assert_eq!(r.isa, Isa::active());
+            assert_eq!(r.gemm_scalar.is_some(), Isa::active() != Isa::Scalar);
+            if let Some(e) = &r.gemm_scalar {
+                assert!(e.seconds > 0.0);
+            }
         }
         print_gemm_crossover(&rows);
     }

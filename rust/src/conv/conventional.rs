@@ -11,7 +11,7 @@
 use crate::tensor::{ops, Feature};
 use crate::util::threadpool;
 
-use super::TapSet;
+use super::{simd, TapSet};
 
 /// VALID stride-1 cross-correlation of `x` with `taps`, serial, dense.
 ///
@@ -86,7 +86,12 @@ pub(crate) fn correlate_rows<T: TapSet>(
     // General path: tap-outer so each `[Cin, Cout]` tap matrix is
     // streamed once per output row instead of once per pixel (pixel-
     // outer was tried and regressed large-Cout layers ~25% — the tap
-    // matrices blow L2; EXPERIMENTS.md §Perf iteration 1).
+    // matrices blow L2; EXPERIMENTS.md §Perf iteration 1).  The inner
+    // rank-1 update dispatches to the active SIMD lane's saxpy
+    // (mul+add, never FMA), which is bit-identical to the scalar loop
+    // per output lane — the `==` contract with the one-shot reference
+    // survives (DESIGN.md §SIMD-Dispatch).
+    let saxpy = simd::saxpy_kernel();
     for oy in row_lo..row_hi {
         let row_base = (oy - row_lo) * wo * cout;
         for u in 0..kr {
@@ -97,10 +102,7 @@ pub(crate) fn correlate_rows<T: TapSet>(
                     let px = &in_row[(ox + v) * cin..(ox + v + 1) * cin];
                     let acc = &mut out[row_base + ox * cout..row_base + (ox + 1) * cout];
                     for (ci, &xv) in px.iter().enumerate() {
-                        let trow = &tap[ci * cout..(ci + 1) * cout];
-                        for (a, &t) in acc.iter_mut().zip(trow) {
-                            *a += xv * t;
-                        }
+                        saxpy(acc, xv, &tap[ci * cout..(ci + 1) * cout]);
                     }
                 }
             }

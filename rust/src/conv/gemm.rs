@@ -21,26 +21,41 @@
 //!   iteration (plus a remainder loop), keeping the accumulator chain
 //!   fed without reassociating any single output element's sum.
 //! * **B-panel packing** — [`pack_b`] lays `B[k×n]` out as
-//!   column-panels of width [`NR`] ([`packed_b_floats`] floats,
-//!   zero-padded at the ragged right edge), so the microkernel streams
-//!   one contiguous, aligned panel instead of striding across `B`
-//!   rows.  The conv plan packs each segregated sub-kernel **once at
-//!   construction**; steady-state execution never re-packs.
+//!   column-panels of width [`panel_width`](simd::panel_width)
+//!   ([`packed_b_floats`] floats, zero-padded at the ragged right
+//!   edge), so the microkernel streams one contiguous, aligned panel
+//!   instead of striding across `B` rows.  The panel width equals the
+//!   **active SIMD lane's** register-tile columns
+//!   (`simd::Microkernel`), so plan-time packing always produces the
+//!   width whichever kernel will run expects.  The conv plan packs
+//!   each segregated sub-kernel **once at construction**; steady-state
+//!   execution never re-packs.
+//! * **SIMD dispatch** — [`gemm_packed`] runs the process-wide active
+//!   [`Isa`] lane (AVX2+FMA / AVX-512 / NEON tile kernels from
+//!   [`conv::simd`](super::simd), scalar fallback); [`gemm_packed_isa`]
+//!   pins a lane explicitly — the tuner's microkernel axis and the
+//!   equivalence tests go through it.  Ragged edges always take the
+//!   scalar tile, whatever the lane (DESIGN.md §SIMD-Dispatch).
 //! * **Cache blocking** — the K dimension is processed in [`KC`]-sized
-//!   blocks, panel-inner, so one `KC×NR` panel block (≈8 KB) stays
-//!   L1-resident while every row tile sweeps over it.
+//!   blocks, panel-inner, so one `KC×nr` panel block (8–32 KB) stays
+//!   L1/L2-resident while every row tile sweeps over it.
 //!
 //! Accumulation order per output element is `kk` ascending — identical
 //! to the naive triple loop — but the *tiling* is still free to change
-//! which element a partial sum lands in when shapes are ragged, and
-//! future splits (multi-accumulator K, threaded K) would reassociate;
-//! callers therefore compare GEMM results with a 1e-4 tolerance, never
+//! which element a partial sum lands in when shapes are ragged, the
+//! vector lanes' FMA contracts the mul+add rounding, and future splits
+//! (multi-accumulator K, threaded K) would reassociate; callers
+//! therefore compare GEMM results with a 1e-4 tolerance, never
 //! bit-identity (DESIGN.md §GEMM-Execution).
 
-/// Register-tile rows (output rows accumulated in registers at once).
+use super::simd::{self, Isa, Microkernel};
+
+/// Scalar register-tile rows (output rows accumulated at once).
 pub const MR: usize = 4;
-/// Register-tile columns — one `[f32; NR]` accumulator row maps onto a
-/// 256-bit vector register.
+/// Scalar register-tile columns — one `[f32; NR]` accumulator row maps
+/// onto a 256-bit vector register.  Vector lanes widen this
+/// ([`Isa::tile`]); the *panel* width of packed operands follows the
+/// active lane, not this constant.
 pub const NR: usize = 8;
 /// K-dimension cache block: `KC × NR` packed-panel floats ≈ 8 KB,
 /// comfortably L1-resident.
@@ -49,26 +64,42 @@ pub const KC: usize = 256;
 pub const KU: usize = 4;
 
 /// Floats required by [`pack_b`] for a `k×n` operand: `n` rounded up
-/// to whole [`NR`] panels.
+/// to whole panels of the active lane's width.
 pub fn packed_b_floats(k: usize, n: usize) -> usize {
-    n.div_ceil(NR) * NR * k
+    packed_b_floats_for(simd::panel_width(), k, n)
+}
+
+/// [`packed_b_floats`] at an explicit panel width `pnr` — the
+/// tile-parameterized form the equivalence tests pin layouts with.
+pub fn packed_b_floats_for(pnr: usize, k: usize, n: usize) -> usize {
+    n.div_ceil(pnr) * pnr * k
 }
 
 /// Pack row-major `b[k×n]` into the panel layout the microkernel
-/// streams: panel `jp` (columns `jp*NR..`) occupies
-/// `packed[jp*k*NR..(jp+1)*k*NR]`, row-of-panel `kk` holding the NR
-/// consecutive columns (zero-padded past the edge).  Every element of
-/// `packed` is written, so a dirty buffer is safe to reuse.
+/// streams, at the active lane's panel width (see [`pack_b_for`]).
 pub fn pack_b(b: &[f32], k: usize, n: usize, packed: &mut [f32]) {
+    pack_b_for(simd::panel_width(), b, k, n, packed)
+}
+
+/// [`pack_b`] at an explicit panel width `pnr`: panel `jp` (columns
+/// `jp*pnr..`) occupies `packed[jp*k*pnr..(jp+1)*k*pnr]`, row-of-panel
+/// `kk` holding the `pnr` consecutive columns (zero-padded past the
+/// edge).  Every element of `packed` is written, so a dirty buffer is
+/// safe to reuse.
+pub fn pack_b_for(pnr: usize, b: &[f32], k: usize, n: usize, packed: &mut [f32]) {
     assert_eq!(b.len(), k * n, "pack_b: operand size mismatch");
-    assert_eq!(packed.len(), packed_b_floats(k, n), "pack_b: packed size mismatch");
-    let panels = n.div_ceil(NR);
+    assert_eq!(
+        packed.len(),
+        packed_b_floats_for(pnr, k, n),
+        "pack_b: packed size mismatch"
+    );
+    let panels = n.div_ceil(pnr);
     for jp in 0..panels {
-        let j0 = jp * NR;
-        let nr = NR.min(n - j0);
-        let panel = &mut packed[jp * k * NR..(jp + 1) * k * NR];
+        let j0 = jp * pnr;
+        let nr = pnr.min(n - j0);
+        let panel = &mut packed[jp * k * pnr..(jp + 1) * k * pnr];
         for kk in 0..k {
-            let dst = &mut panel[kk * NR..(kk + 1) * NR];
+            let dst = &mut panel[kk * pnr..(kk + 1) * pnr];
             let src = &b[kk * n + j0..kk * n + j0 + nr];
             dst[..nr].copy_from_slice(src);
             dst[nr..].fill(0.0);
@@ -148,33 +179,140 @@ fn tile(
     }
 }
 
+/// Widest vector tile supported ([`Isa::Avx512`]'s 8×32) — bounds the
+/// generic tile's stack accumulator.
+const MR_MAX: usize = 8;
+const NR_MAX: usize = 32;
+
+/// Scalar tile over a panel of arbitrary width `pnr` — the fallback
+/// path for ragged edges of the vector lanes and for the forced-scalar
+/// microkernel on hosts whose packed panels are wider than [`NR`].
+/// Same per-element accumulation order (`kk` ascending) as every other
+/// tile.
+#[inline]
+#[allow(clippy::too_many_arguments)]
+fn tile_any(
+    a: &[f32],
+    lda: usize,
+    i0: usize,
+    mr: usize,
+    k0: usize,
+    kc: usize,
+    panel: &[f32],
+    c: &mut [f32],
+    ldc: usize,
+    j0: usize,
+    nr: usize,
+    pnr: usize,
+) {
+    debug_assert!(mr <= MR_MAX && nr <= NR_MAX && nr <= pnr && panel.len() >= kc * pnr);
+    let mut acc = [[0f32; NR_MAX]; MR_MAX];
+    for (i, row) in acc.iter_mut().enumerate().take(mr) {
+        row[..nr].copy_from_slice(&c[(i0 + i) * ldc + j0..][..nr]);
+    }
+    for kk in 0..kc {
+        let b = &panel[kk * pnr..kk * pnr + nr];
+        for (i, row) in acc.iter_mut().enumerate().take(mr) {
+            let av = a[(i0 + i) * lda + k0 + kk];
+            for (cv, &bv) in row.iter_mut().zip(b) {
+                *cv += av * bv;
+            }
+        }
+    }
+    for (i, row) in acc.iter().enumerate().take(mr) {
+        c[(i0 + i) * ldc + j0..][..nr].copy_from_slice(&row[..nr]);
+    }
+}
+
 /// `c[m×n] += a[m×k] · B` with `B` pre-packed by [`pack_b`] — the
 /// steady-state entry point of the phase-GEMM plan (operands packed
-/// once at plan construction, zero allocations here).
+/// once at plan construction, zero allocations here).  Runs the
+/// process-wide active SIMD lane ([`Isa::active`]).
 pub fn gemm_packed(a: &[f32], packed_b: &[f32], c: &mut [f32], m: usize, k: usize, n: usize) {
+    gemm_packed_with(&Microkernel::active(), a, packed_b, c, m, k, n)
+}
+
+/// [`gemm_packed`] with the microkernel lane pinned — the tuner's
+/// microkernel axis (`ExecStrategy::isa`) dispatches through this.  An
+/// unavailable lane degrades to scalar ([`Microkernel::for_isa`]), so
+/// strategies decoded from foreign-host caches stay runnable.
+pub fn gemm_packed_isa(
+    isa: Isa,
+    a: &[f32],
+    packed_b: &[f32],
+    c: &mut [f32],
+    m: usize,
+    k: usize,
+    n: usize,
+) {
+    gemm_packed_with(&Microkernel::for_isa(isa), a, packed_b, c, m, k, n)
+}
+
+/// The dispatch core: K-blocked, panel-inner sweep handing full
+/// `uk.mr × pnr` tiles to the lane's vector kernel and every ragged
+/// edge to the scalar tile.  `packed_b` must be packed at the active
+/// panel width — the only width [`Microkernel::for_isa`] hands out.
+fn gemm_packed_with(
+    uk: &Microkernel,
+    a: &[f32],
+    packed_b: &[f32],
+    c: &mut [f32],
+    m: usize,
+    k: usize,
+    n: usize,
+) {
+    let pnr = simd::panel_width();
+    debug_assert!(uk.kernel.is_none() || uk.nr == pnr, "panel width mismatch");
     assert_eq!(a.len(), m * k, "gemm_packed: A size mismatch");
     assert_eq!(
         packed_b.len(),
-        packed_b_floats(k, n),
+        packed_b_floats_for(pnr, k, n),
         "gemm_packed: packed B size mismatch"
     );
     assert_eq!(c.len(), m * n, "gemm_packed: C size mismatch");
     if m == 0 || n == 0 || k == 0 {
         return;
     }
-    let panels = n.div_ceil(NR);
+    let panels = n.div_ceil(pnr);
     let mut k0 = 0;
     while k0 < k {
         let kc = KC.min(k - k0);
         for jp in 0..panels {
-            let j0 = jp * NR;
-            let nr = NR.min(n - j0);
-            let panel = &packed_b[jp * k * NR + k0 * NR..][..kc * NR];
+            let j0 = jp * pnr;
+            let nr = pnr.min(n - j0);
+            let panel = &packed_b[jp * k * pnr + k0 * pnr..][..kc * pnr];
             let mut i0 = 0;
             while i0 < m {
-                let mr = MR.min(m - i0);
-                tile(a, k, i0, mr, k0, kc, panel, c, n, j0, nr);
-                i0 += MR;
+                let mr = uk.mr.min(m - i0);
+                match uk.kernel {
+                    Some(f) if mr == uk.mr && nr == pnr => {
+                        // SAFETY: the TileKernel contract (conv::simd):
+                        // full tile, so `i0 + uk.mr <= m`, `j0 + pnr <=
+                        // n`, `k0 + kc <= k` — every pointer below
+                        // spans in-bounds rows of the slices sliced
+                        // above, and `for_isa` only returns a vector
+                        // kernel whose target features were
+                        // runtime-detected.
+                        unsafe {
+                            f(
+                                a.as_ptr().add(i0 * k + k0),
+                                k,
+                                panel.as_ptr(),
+                                c.as_mut_ptr().add(i0 * n + j0),
+                                n,
+                                kc,
+                            )
+                        }
+                    }
+                    // Scalar lane on native-width panels: the classic
+                    // 4×8 tile (its fast path needs mr ≤ MR, which
+                    // only the scalar lane's row step guarantees).
+                    None if pnr == NR => tile(a, k, i0, mr, k0, kc, panel, c, n, j0, nr),
+                    // Ragged edges of any vector lane, and the scalar
+                    // lane on wider-than-native panels.
+                    _ => tile_any(a, k, i0, mr, k0, kc, panel, c, n, j0, nr, pnr),
+                }
+                i0 += uk.mr;
             }
         }
         k0 += KC;
@@ -335,27 +473,92 @@ mod tests {
 
     #[test]
     fn packed_layout_and_reuse() {
-        let (k, n) = (3, NR + 2); // two panels, second ragged
+        // Panel layout pinned at every tile width the dispatch table
+        // hands out (8 = scalar/neon, 16 = avx2, 32 = avx512) — the
+        // layout is tile-parameterized, not hardcoded to NR.
         let mut rng = Rng::seeded(0x6E35);
+        for pnr in [8usize, 16, 32] {
+            let (k, n) = (3, pnr + 2); // two panels, second ragged
+            let b = random_mat(k, n, &mut rng);
+            let mut packed = vec![f32::NAN; packed_b_floats_for(pnr, k, n)];
+            pack_b_for(pnr, &b, k, n, &mut packed);
+            assert_eq!(packed.len(), 2 * pnr * k);
+            // Panel 0, row kk = b[kk][0..pnr]; panel 1 zero-padded.
+            for kk in 0..k {
+                assert_eq!(&packed[kk * pnr..(kk + 1) * pnr], &b[kk * n..kk * n + pnr]);
+                let p1 = &packed[k * pnr + kk * pnr..k * pnr + (kk + 1) * pnr];
+                assert_eq!(&p1[..2], &b[kk * n + pnr..kk * n + pnr + 2]);
+                assert!(p1[2..].iter().all(|&v| v == 0.0), "edge padding not zeroed");
+            }
+        }
+        // gemm_packed on an active-width pre-packed operand is
+        // bit-identical to the one-shot (same lane, same packing).
+        let (m, k, n) = (6, 3, simd::panel_width() + 2);
         let b = random_mat(k, n, &mut rng);
         let mut packed = vec![f32::NAN; packed_b_floats(k, n)];
         pack_b(&b, k, n, &mut packed);
-        assert_eq!(packed.len(), 2 * NR * k);
-        // Panel 0, row kk = b[kk][0..NR]; panel 1 zero-padded.
-        for kk in 0..k {
-            assert_eq!(&packed[kk * NR..(kk + 1) * NR], &b[kk * n..kk * n + NR]);
-            let p1 = &packed[k * NR + kk * NR..k * NR + (kk + 1) * NR];
-            assert_eq!(&p1[..2], &b[kk * n + NR..kk * n + NR + 2]);
-            assert!(p1[2..].iter().all(|&v| v == 0.0), "edge padding not zeroed");
-        }
-        // gemm_packed on the pre-packed operand matches the one-shot.
-        let m = 6;
         let a = random_mat(m, k, &mut rng);
         let mut want = vec![0.0f32; m * n];
         gemm_tiled(&a, &b, &mut want, m, k, n);
         let mut got = vec![0.0f32; m * n];
         gemm_packed(&a, &packed, &mut got, m, k, n);
         assert_eq!(got, want);
+    }
+
+    #[test]
+    fn every_supported_lane_matches_scalar_on_ragged_edges() {
+        // The microkernel axis must not change results: each lane the
+        // host supports (vector + forced-scalar fallback on the same
+        // packed operands) matches the scalar microkernel within the
+        // phase-GEMM tolerance on m/n/k straddling every tile bound.
+        let mut rng = Rng::seeded(0x6E38);
+        let lanes = Isa::supported();
+        for &m in &[1, MR, 5, 6, 7, 8, 9, 2 * MR_MAX + 3] {
+            for &n in &[1, 7, 8, 15, 16, 17, 31, 32, 33, 2 * NR_MAX + 5] {
+                for &k in &[1, KU + 1, 37] {
+                    let a = random_mat(m, k, &mut rng);
+                    let b = random_mat(k, n, &mut rng);
+                    let mut packed = vec![f32::NAN; packed_b_floats(k, n)];
+                    pack_b(&b, k, n, &mut packed);
+                    let base = random_mat(m, n, &mut rng);
+                    let mut want = base.clone();
+                    gemm_packed_isa(Isa::Scalar, &a, &packed, &mut want, m, k, n);
+                    for &isa in &lanes {
+                        let mut got = base.clone();
+                        gemm_packed_isa(isa, &a, &packed, &mut got, m, k, n);
+                        close(&want, &got, 1e-4).unwrap_or_else(|e| {
+                            panic!("isa={isa} m={m} n={n} k={k}: {e}")
+                        });
+                    }
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn forced_scalar_lane_runs_on_active_panels() {
+        // The forced-fallback guarantee end-to-end: scalar-pinned GEMM
+        // consumes the active-lane packing (whatever its width) and
+        // matches the naive reference.
+        let (m, k, n) = (7, KC + 5, 2 * simd::panel_width() + 3);
+        let mut rng = Rng::seeded(0x6E39);
+        let a = random_mat(m, k, &mut rng);
+        let b = random_mat(k, n, &mut rng);
+        let mut packed = vec![f32::NAN; packed_b_floats(k, n)];
+        pack_b(&b, k, n, &mut packed);
+        let mut want = vec![0.0f32; m * n];
+        gemm_naive(&a, &b, &mut want, m, k, n);
+        let mut got = vec![0.0f32; m * n];
+        gemm_packed_isa(Isa::Scalar, &a, &packed, &mut got, m, k, n);
+        assert!(close(&want, &got, 1e-3).is_ok());
+        // Unavailable vector lanes degrade to scalar, bit-identically.
+        for isa in [Isa::Avx2, Isa::Avx512, Isa::Neon] {
+            if !isa.is_available() {
+                let mut degraded = vec![0.0f32; m * n];
+                gemm_packed_isa(isa, &a, &packed, &mut degraded, m, k, n);
+                assert_eq!(degraded, got, "{isa} fallback must be the scalar lane");
+            }
+        }
     }
 
     #[test]

@@ -10,6 +10,9 @@
 //! * [`im2col`] — GEMM-based transpose conv (§5 discussion baseline)
 //! * [`gemm`] — register-blocked, cache-tiled f32 microkernel behind
 //!   the planned phase-GEMM formulation and the im2col lanes
+//! * [`simd`] — runtime ISA dispatch (AVX2+FMA / AVX-512 / NEON with
+//!   scalar fallback) for the GEMM microkernel and the direct inner
+//!   loops
 //! * [`dilated`] — segregated-input dilated convolution (§5 future work)
 //! * [`flops`] — analytic MAC counts
 //! * [`memory`] — analytic buffer accounting (matches the paper's
@@ -32,6 +35,7 @@ pub mod memory;
 pub mod parallel;
 pub mod plan;
 pub mod segregation;
+pub mod simd;
 pub mod stride;
 pub mod unified;
 

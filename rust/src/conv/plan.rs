@@ -61,7 +61,17 @@
 //! batched variant accumulates `dK` across the whole batch for free
 //! (`C +=`).  Direct backward lanes are bit-identical to the one-shot
 //! [`backward`](super::backward) routes; GEMM lanes match within 1e-4
-//! (same reassociation contract as forward).
+//! (same reassociation contract as forward).  The **fused** backward
+//! ([`run_backward`](ConvTransposePlan::run_backward)) produces both
+//! gradients in one pass, extracting each `dy` phase from the output
+//! map **once** and sharing it between the weight GEMM and the padded
+//! data-grad frame — the unfused pair strides `dy` twice per phase.
+//!
+//! Every GEMM lane executes through the runtime-dispatched SIMD
+//! microkernel (`conv::simd`, DESIGN.md §SIMD-Dispatch); strategy
+//! dispatch ([`run_with`](ConvTransposePlan::run_with) and friends)
+//! pins the lane to [`ExecStrategy::isa`] so tuned verdicts mean what
+//! they measured.
 
 use crate::tensor::{Feature, FeatureBatch, Kernel, SubKernel};
 use crate::tune::space::{ExecStrategy, Formulation, ParAxis};
@@ -71,6 +81,7 @@ use super::backward::flip_sub;
 use super::conventional::correlate_rows;
 use super::gemm;
 use super::im2col::kernel_matrix;
+use super::simd::Isa;
 use super::segregation::{segregate, Segregated};
 use super::unified::{
     build_slab, build_slab_view, phase_geometries, scatter_rows, scatter_rows_view, PhaseGeometry,
@@ -609,15 +620,23 @@ impl ConvTransposePlan {
     /// Equivalent to [`run`](Self::run) within 1e-4 — the register
     /// tile reassociates f32 sums, so bit-identity is not promised.
     pub fn run_gemm(&self, x: &Feature, scratch: &mut Scratch, out: &mut Feature) {
+        self.run_gemm_isa(Isa::active(), x, scratch, out);
+    }
+
+    /// [`run_gemm`](Self::run_gemm) with the microkernel lane pinned —
+    /// what [`run_with`](Self::run_with) dispatches so a tuned
+    /// [`ExecStrategy::isa`] means what it measured (DESIGN.md
+    /// §SIMD-Dispatch).  Unavailable lanes degrade to scalar.
+    fn run_gemm_isa(&self, isa: Isa, x: &Feature, scratch: &mut Scratch, out: &mut Feature) {
         self.check_shapes(x, out);
         let buf = scratch.ensure(self.scratch_floats());
-        self.run_gemm_image(&x.data, buf, &mut out.data);
+        self.run_gemm_image(isa, &x.data, buf, &mut out.data);
     }
 
     /// Serial phase-GEMM core over raw image views (`buf` laid out as
     /// [`scratch_floats`](Self::scratch_floats): slabs | phases |
     /// patch).  Factored from [`run_gemm`](Self::run_gemm) unchanged.
-    fn run_gemm_image(&self, x: &[f32], buf: &mut [f32], out: &mut [f32]) {
+    fn run_gemm_image(&self, isa: Isa, x: &[f32], buf: &mut [f32], out: &mut [f32]) {
         let n_in = self.params.n_in;
         let cin = self.params.cin;
         let cout = self.params.cout;
@@ -641,7 +660,8 @@ impl ConvTransposePlan {
             );
             let phase = &mut phase_area[pp.phase_off..pp.phase_off + pp.phase_len];
             phase.fill(0.0);
-            gemm::gemm_packed(
+            gemm::gemm_packed_isa(
+                isa,
                 patch,
                 &pp.packed_kernel,
                 phase,
@@ -677,9 +697,22 @@ impl ConvTransposePlan {
         out: &mut Feature,
         workers: usize,
     ) {
+        self.run_gemm_par_rows_isa(Isa::active(), x, scratch, out, workers)
+    }
+
+    /// [`run_gemm_par_rows`](Self::run_gemm_par_rows) with the
+    /// microkernel lane pinned (see [`run_gemm_isa`](Self::run_gemm_isa)).
+    fn run_gemm_par_rows_isa(
+        &self,
+        isa: Isa,
+        x: &Feature,
+        scratch: &mut Scratch,
+        out: &mut Feature,
+        workers: usize,
+    ) {
         let workers = workers.max(1);
         if workers == 1 {
-            return self.run_gemm(x, scratch, out);
+            return self.run_gemm_isa(isa, x, scratch, out);
         }
         self.check_shapes(x, out);
         let cin = self.params.cin;
@@ -720,7 +753,8 @@ impl ConvTransposePlan {
                         patch,
                     );
                     row.fill(0.0);
-                    gemm::gemm_packed(
+                    gemm::gemm_packed_isa(
+                        isa,
                         patch,
                         &pp.packed_kernel,
                         row,
@@ -895,6 +929,18 @@ impl ConvTransposePlan {
     /// GEMM's M extent), hence within the same 1e-4 of the direct
     /// reference.
     pub fn run_gemm_batch(&self, x: &FeatureBatch, scratch: &mut Scratch, out: &mut FeatureBatch) {
+        self.run_gemm_batch_isa(Isa::active(), x, scratch, out);
+    }
+
+    /// [`run_gemm_batch`](Self::run_gemm_batch) with the microkernel
+    /// lane pinned (see [`run_gemm_isa`](Self::run_gemm_isa)).
+    fn run_gemm_batch_isa(
+        &self,
+        isa: Isa,
+        x: &FeatureBatch,
+        scratch: &mut Scratch,
+        out: &mut FeatureBatch,
+    ) {
         self.check_batch_shapes(x, out);
         let n = x.n;
         let cout = self.params.cout;
@@ -905,7 +951,8 @@ impl ConvTransposePlan {
             self.stack_phase_patches(pp, x, slab_area, patch_area);
             let phase = &mut phase_area[..n * pp.phase_len];
             phase.fill(0.0);
-            gemm::gemm_packed(
+            gemm::gemm_packed_isa(
+                isa,
                 &patch_area[..n * pp.patch_len],
                 &pp.packed_kernel,
                 phase,
@@ -942,9 +989,22 @@ impl ConvTransposePlan {
         out: &mut FeatureBatch,
         workers: usize,
     ) {
+        self.run_gemm_batch_par_isa(Isa::active(), x, scratch, out, workers)
+    }
+
+    /// [`run_gemm_batch_par`](Self::run_gemm_batch_par) with the
+    /// microkernel lane pinned (see [`run_gemm_isa`](Self::run_gemm_isa)).
+    fn run_gemm_batch_par_isa(
+        &self,
+        isa: Isa,
+        x: &FeatureBatch,
+        scratch: &mut Scratch,
+        out: &mut FeatureBatch,
+        workers: usize,
+    ) {
         let workers = workers.max(1);
         if workers == 1 {
-            return self.run_gemm_batch(x, scratch, out);
+            return self.run_gemm_batch_isa(isa, x, scratch, out);
         }
         self.check_batch_shapes(x, out);
         let n = x.n;
@@ -965,7 +1025,8 @@ impl ConvTransposePlan {
                     .collect();
                 threadpool::parallel_drain(jobs, workers, |(prow, row)| {
                     row.fill(0.0);
-                    gemm::gemm_packed(
+                    gemm::gemm_packed_isa(
+                        isa,
                         prow,
                         &pp.packed_kernel,
                         row,
@@ -1023,9 +1084,9 @@ impl ConvTransposePlan {
             }
             Formulation::PhaseGemm => {
                 if strategy.workers <= 1 {
-                    self.run_gemm_batch(x, scratch, out);
+                    self.run_gemm_batch_isa(strategy.isa, x, scratch, out);
                 } else {
-                    self.run_gemm_batch_par(x, scratch, out, strategy.workers);
+                    self.run_gemm_batch_par_isa(strategy.isa, x, scratch, out, strategy.workers);
                 }
             }
             Formulation::PerElement => {
@@ -1083,9 +1144,9 @@ impl ConvTransposePlan {
             }
             Formulation::PhaseGemm => {
                 if strategy.workers <= 1 {
-                    self.run_gemm(x, scratch, out);
+                    self.run_gemm_isa(strategy.isa, x, scratch, out);
                 } else {
-                    self.run_gemm_par_rows(x, scratch, out, strategy.workers);
+                    self.run_gemm_par_rows_isa(strategy.isa, x, scratch, out, strategy.workers);
                 }
             }
             Formulation::PerElement => {
@@ -1151,11 +1212,31 @@ impl ConvTransposePlan {
             + self.dsub_floats
     }
 
+    /// Exact scratch floats of the **fused** backward lanes
+    /// ([`run_backward`](Self::run_backward) /
+    /// [`run_backward_with`](Self::run_backward_with) /
+    /// [`run_backward_batch`](Self::run_backward_batch)), which produce
+    /// both gradients in one pass, extracting each `dy` phase **once**:
+    /// slabs (x-slab, then reused as the dslab area) | dense dy phases
+    /// | padded dy frames | one shared im2col patch region (max of the
+    /// forward-patch and backward-patch claims — the weight GEMM has
+    /// consumed the patch before the data GEMM refills it) |
+    /// runtime-packed dy panel | per-phase dSub accumulators.
+    pub fn scratch_floats_backward_fused(&self) -> usize {
+        self.slab_floats
+            + self.phase_floats
+            + self.pad_floats
+            + self.patch_floats.max(self.patch_bwd_floats)
+            + self.packed_dy_floats
+            + self.dsub_floats
+    }
+
     /// Worst-case scratch floats any backward lane of this plan can
     /// demand — what training arenas are sized to.
     pub fn peak_scratch_floats_backward(&self) -> usize {
         self.scratch_floats_backward_data_gemm()
             .max(self.scratch_floats_backward_weights())
+            .max(self.scratch_floats_backward_fused())
     }
 
     fn check_backward_shapes(&self, dy: &Feature, dx: &Feature) {
@@ -1208,6 +1289,25 @@ impl ConvTransposePlan {
                 let dst = ((py + sr - 1) * pp.pad_w + (px + sc - 1)) * cout;
                 pad[dst..dst + cout].copy_from_slice(&dy[src..src + cout]);
             }
+        }
+    }
+
+    /// [`fill_pad_phase`](Self::fill_pad_phase) from an
+    /// already-extracted dense phase
+    /// ([`fill_phase_dense`](Self::fill_phase_dense)): one contiguous
+    /// `n_cols·Cout` row copy per phase row instead of re-striding `dy`
+    /// pixel by pixel — the sharing step of the fused backward.
+    /// Byte-identical output to `fill_pad_phase` (same values into the
+    /// same frame positions), so the fused direct data-grad stays
+    /// bit-identical to [`run_backward_data`](Self::run_backward_data).
+    fn fill_pad_from_dense(&self, pp: &PhasePlan, dyp: &[f32], pad: &mut [f32]) {
+        let cout = self.params.cout;
+        let (sr, sc) = (pp.flipped.rows, pp.flipped.cols);
+        let row = pp.geom.n_cols * cout;
+        pad.fill(0.0);
+        for py in 0..pp.geom.n_rows {
+            let dst = ((py + sr - 1) * pp.pad_w + (sc - 1)) * cout;
+            pad[dst..dst + row].copy_from_slice(&dyp[py * row..(py + 1) * row]);
         }
     }
 
@@ -1278,7 +1378,7 @@ impl ConvTransposePlan {
 
     /// GEMM backward-data core: the padded dy phase is im2col'ed and
     /// multiplied by the flipped sub-kernel packed at construction.
-    fn backward_data_gemm_image(&self, dy: &[f32], buf: &mut [f32], dx: &mut [f32]) {
+    fn backward_data_gemm_image(&self, isa: Isa, dy: &[f32], buf: &mut [f32], dx: &mut [f32]) {
         dx.fill(0.0);
         let cin = self.params.cin;
         let cout = self.params.cout;
@@ -1301,7 +1401,8 @@ impl ConvTransposePlan {
             );
             let dslab = &mut dslab_area[pp.slab_off..pp.slab_off + pp.slab_len];
             dslab.fill(0.0);
-            gemm::gemm_packed(
+            gemm::gemm_packed_isa(
+                isa,
                 patch,
                 &pp.packed_flip,
                 dslab,
@@ -1376,9 +1477,21 @@ impl ConvTransposePlan {
     /// of [`run_backward_data`](Self::run_backward_data) (the same f32
     /// reassociation contract as the forward GEMM lanes).
     pub fn run_backward_data_gemm(&self, dy: &Feature, scratch: &mut Scratch, dx: &mut Feature) {
+        self.run_backward_data_gemm_isa(Isa::active(), dy, scratch, dx);
+    }
+
+    /// [`run_backward_data_gemm`](Self::run_backward_data_gemm) with
+    /// the microkernel lane pinned (see [`run_gemm_isa`](Self::run_gemm_isa)).
+    fn run_backward_data_gemm_isa(
+        &self,
+        isa: Isa,
+        dy: &Feature,
+        scratch: &mut Scratch,
+        dx: &mut Feature,
+    ) {
         self.check_backward_shapes(dy, dx);
         let buf = scratch.ensure(self.scratch_floats_backward_data_gemm());
-        self.backward_data_gemm_image(&dy.data, buf, &mut dx.data);
+        self.backward_data_gemm_image(isa, &dy.data, buf, &mut dx.data);
     }
 
     /// Parallel direct backward-data lane: `(phase, slab-row)` jobs
@@ -1413,7 +1526,7 @@ impl ConvTransposePlan {
         dx: &mut Feature,
     ) {
         match strategy.formulation {
-            Formulation::PhaseGemm => self.run_backward_data_gemm(dy, scratch, dx),
+            Formulation::PhaseGemm => self.run_backward_data_gemm_isa(strategy.isa, dy, scratch, dx),
             _ => {
                 if strategy.workers <= 1 {
                     self.run_backward_data(dy, scratch, dx);
@@ -1457,7 +1570,7 @@ impl ConvTransposePlan {
             Formulation::PhaseGemm => {
                 let buf = scratch.ensure(self.scratch_floats_backward_data_gemm());
                 for i in 0..dy.n {
-                    self.backward_data_gemm_image(dy.image(i), buf, dx.image_mut(i));
+                    self.backward_data_gemm_image(strategy.isa, dy.image(i), buf, dx.image_mut(i));
                 }
             }
             _ if strategy.workers > 1 => {
@@ -1478,6 +1591,7 @@ impl ConvTransposePlan {
     /// batched variant free: images simply keep accumulating.
     fn backward_weights_accumulate(
         &self,
+        isa: Isa,
         x: &[f32],
         dy: &[f32],
         work: &mut [f32],
@@ -1509,7 +1623,8 @@ impl ConvTransposePlan {
             let r_total = pp.geom.n_rows * pp.geom.n_cols;
             let packed = &mut packed_area[..gemm::packed_b_floats(r_total, cout)];
             gemm::pack_b(dyp, r_total, cout, packed);
-            gemm::gemm_packed(
+            gemm::gemm_packed_isa(
+                isa,
                 patch,
                 packed,
                 &mut dsub_area[pp.dsub_off..pp.dsub_off + pp.dsub_len],
@@ -1581,7 +1696,7 @@ impl ConvTransposePlan {
             self.slab_floats + self.phase_floats + self.patch_floats + self.packed_dy_floats;
         let (work, dsub_area) = buf.split_at_mut(work_floats);
         dsub_area.fill(0.0);
-        self.backward_weights_accumulate(&x.data, &dy.data, work, dsub_area);
+        self.backward_weights_accumulate(Isa::active(), &x.data, &dy.data, work, dsub_area);
         self.scatter_dsubs(dsub_area, dk);
     }
 
@@ -1605,7 +1720,257 @@ impl ConvTransposePlan {
         let (work, dsub_area) = buf.split_at_mut(work_floats);
         dsub_area.fill(0.0);
         for i in 0..x.n {
-            self.backward_weights_accumulate(x.image(i), dy.image(i), work, dsub_area);
+            self.backward_weights_accumulate(Isa::active(), x.image(i), dy.image(i), work, dsub_area);
+        }
+        self.scatter_dsubs(dsub_area, dk);
+    }
+
+    /// Fused backward core: both gradients of one image in a single
+    /// pass over the phases, extracting each `dy` phase **once** (the
+    /// unfused route — [`run_backward_data`](Self::run_backward_data)
+    /// then [`run_backward_weights`](Self::run_backward_weights) —
+    /// re-extracts every phase from `dy` twice, striding the full
+    /// output map both times).
+    ///
+    /// Pass A (per phase): build the x-slab, im2col it transposed for
+    /// the weight GEMM, extract the dense dy phase once, pack it, run
+    /// the weight GEMM into the phase's dSub accumulator (`C +=`, so
+    /// batches accumulate for free), and build the padded dy frame from
+    /// the *dense* phase by contiguous row copies
+    /// ([`fill_pad_from_dense`](Self::fill_pad_from_dense)).
+    ///
+    /// Pass B: the data gradient from the shared pads — by then every
+    /// x-slab has been consumed into its patch, so the slab area is
+    /// reused as the dslab area (`slab_len` is the same quantity in
+    /// both roles).  The lane is the strategy's: serial direct
+    /// (bit-identical to `run_backward_data`), `(phase, slab-row)`
+    /// parallel direct, or the phase GEMM on `strategy.isa`.
+    ///
+    /// `buf` is laid out per
+    /// [`scratch_floats_backward_fused`](Self::scratch_floats_backward_fused)
+    /// minus the trailing dSub area, which persists across batch images
+    /// and is passed separately.
+    fn backward_fused_image(
+        &self,
+        strategy: &ExecStrategy,
+        x: &[f32],
+        dy: &[f32],
+        buf: &mut [f32],
+        dx: &mut [f32],
+        dsub_area: &mut [f32],
+    ) {
+        let n_in = self.params.n_in;
+        let cin = self.params.cin;
+        let cout = self.params.cout;
+        // The weight grad is always a GEMM; pin its lane only when the
+        // strategy actually carries a microkernel axis (PhaseGemm), so
+        // a scalar-pinned candidate measures a fully scalar step.
+        let wisa = if strategy.formulation == Formulation::PhaseGemm {
+            strategy.isa
+        } else {
+            Isa::active()
+        };
+        let (slab_area, rest) = buf.split_at_mut(self.slab_floats);
+        let (phase_area, rest) = rest.split_at_mut(self.phase_floats);
+        let (pad_area, rest) = rest.split_at_mut(self.pad_floats);
+        let (patch_area, packed_area) =
+            rest.split_at_mut(self.patch_floats.max(self.patch_bwd_floats));
+        for pp in &self.phases {
+            let slab = &mut slab_area[pp.slab_off..pp.slab_off + pp.slab_len];
+            build_slab_view(x, n_in, n_in, cin, &pp.geom, slab);
+            let sub = &self.seg.subs[pp.geom.sub];
+            let patch = &mut patch_area[..pp.patch_len];
+            gemm::im2col_cols(
+                slab,
+                pp.slab_w,
+                cin,
+                sub.rows,
+                sub.cols,
+                pp.geom.n_cols,
+                pp.geom.n_rows,
+                patch,
+            );
+            let dyp = &mut phase_area[pp.phase_off..pp.phase_off + pp.phase_len];
+            self.fill_phase_dense(pp, dy, dyp);
+            let r_total = pp.geom.n_rows * pp.geom.n_cols;
+            let packed = &mut packed_area[..gemm::packed_b_floats(r_total, cout)];
+            gemm::pack_b(dyp, r_total, cout, packed);
+            gemm::gemm_packed_isa(
+                wisa,
+                patch,
+                packed,
+                &mut dsub_area[pp.dsub_off..pp.dsub_off + pp.dsub_len],
+                pp.gemm_k,
+                r_total,
+                cout,
+            );
+            self.fill_pad_from_dense(pp, dyp, &mut pad_area[pp.pad_off..pp.pad_off + pp.pad_len]);
+        }
+        dx.fill(0.0);
+        match strategy.formulation {
+            Formulation::PhaseGemm => {
+                for pp in &self.phases {
+                    let patch = &mut patch_area[..pp.patch_bwd_len];
+                    gemm::im2col_rows(
+                        &pad_area[pp.pad_off..pp.pad_off + pp.pad_len],
+                        pp.pad_w,
+                        cout,
+                        pp.flipped.rows,
+                        pp.flipped.cols,
+                        pp.slab_w,
+                        0,
+                        pp.slab_h,
+                        patch,
+                    );
+                    let dslab = &mut slab_area[pp.slab_off..pp.slab_off + pp.slab_len];
+                    dslab.fill(0.0);
+                    gemm::gemm_packed_isa(
+                        strategy.isa,
+                        patch,
+                        &pp.packed_flip,
+                        dslab,
+                        pp.slab_h * pp.slab_w,
+                        pp.gemm_k_bwd,
+                        cin,
+                    );
+                    self.accumulate_dslab(pp, dslab, dx);
+                }
+            }
+            _ if strategy.workers > 1 => {
+                {
+                    let pads: &[f32] = pad_area;
+                    let mut jobs: Vec<(usize, usize, &mut [f32])> = Vec::new();
+                    let mut rest: &mut [f32] = &mut slab_area[..];
+                    for (pi, pp) in self.phases.iter().enumerate() {
+                        let (mine, tail) = rest.split_at_mut(pp.slab_len);
+                        rest = tail;
+                        let row_len = pp.slab_w * cin;
+                        for (ri, row) in mine.chunks_mut(row_len).enumerate() {
+                            jobs.push((pi, ri, row));
+                        }
+                    }
+                    threadpool::parallel_drain(jobs, strategy.workers, |(pi, ri, row)| {
+                        let pp = &self.phases[pi];
+                        row.fill(0.0);
+                        correlate_rows(
+                            &pads[pp.pad_off..pp.pad_off + pp.pad_len],
+                            pp.pad_w,
+                            &pp.flipped,
+                            row,
+                            pp.slab_w,
+                            ri,
+                            ri + 1,
+                        );
+                    });
+                }
+                for pp in &self.phases {
+                    self.accumulate_dslab(
+                        pp,
+                        &slab_area[pp.slab_off..pp.slab_off + pp.slab_len],
+                        dx,
+                    );
+                }
+            }
+            _ => {
+                for pp in &self.phases {
+                    let dslab = &mut slab_area[pp.slab_off..pp.slab_off + pp.slab_len];
+                    dslab.fill(0.0);
+                    correlate_rows(
+                        &pad_area[pp.pad_off..pp.pad_off + pp.pad_len],
+                        pp.pad_w,
+                        &pp.flipped,
+                        dslab,
+                        pp.slab_w,
+                        0,
+                        pp.slab_h,
+                    );
+                    self.accumulate_dslab(pp, dslab, dx);
+                }
+            }
+        }
+    }
+
+    /// Fused backward, serial: both gradients in one pass with each
+    /// `dy` phase extracted once (see
+    /// [`backward_fused_image`](Self::backward_fused_image)).  `dx` is
+    /// bit-identical to [`run_backward_data`](Self::run_backward_data)
+    /// and `dk` to [`run_backward_weights`](Self::run_backward_weights)
+    /// — same lanes over the same extracted values; zero-alloc in
+    /// steady state like every planned lane.
+    pub fn run_backward(
+        &self,
+        x: &Feature,
+        dy: &Feature,
+        scratch: &mut Scratch,
+        dx: &mut Feature,
+        dk: &mut Kernel,
+    ) {
+        self.run_backward_with(&ExecStrategy::serial(), x, dy, scratch, dx, dk);
+    }
+
+    /// Fused backward under an autotuned [`ExecStrategy`]: the data
+    /// gradient runs the strategy's lane (serial/parallel direct or
+    /// phase GEMM on `strategy.isa` — the same dispatch as
+    /// [`run_backward_data_with`](Self::run_backward_data_with)); the
+    /// weight gradient is always the phase GEMM, on `strategy.isa` for
+    /// GEMM strategies and the active lane otherwise.
+    pub fn run_backward_with(
+        &self,
+        strategy: &ExecStrategy,
+        x: &Feature,
+        dy: &Feature,
+        scratch: &mut Scratch,
+        dx: &mut Feature,
+        dk: &mut Kernel,
+    ) {
+        self.check_backward_shapes(dy, dx);
+        self.check_backward_weight_shapes((x.h, x.w, x.c), (dy.h, dy.w, dy.c), dk);
+        let total = self.scratch_floats_backward_fused();
+        let buf = scratch.ensure(total);
+        let (work, dsub_area) = buf.split_at_mut(total - self.dsub_floats);
+        dsub_area.fill(0.0);
+        self.backward_fused_image(strategy, &x.data, &dy.data, work, &mut dx.data, dsub_area);
+        self.scatter_dsubs(dsub_area, dk);
+    }
+
+    /// Fused batched backward: per-image data gradients plus the
+    /// batch-accumulated kernel gradient through **one** fused region —
+    /// each image's dy phases extracted once, dSubs accumulating across
+    /// the batch (`C +=`), one final scatter.  `dx` images are
+    /// bit-identical to per-image [`run_backward_with`](Self::run_backward_with)
+    /// calls and `dk` matches
+    /// [`run_backward_weights_batch`](Self::run_backward_weights_batch).
+    pub fn run_backward_batch(
+        &self,
+        x: &FeatureBatch,
+        dy: &FeatureBatch,
+        scratch: &mut Scratch,
+        dx: &mut FeatureBatch,
+        dk: &mut Kernel,
+    ) {
+        self.run_backward_batch_with(&ExecStrategy::serial(), x, dy, scratch, dx, dk);
+    }
+
+    /// [`run_backward_batch`](Self::run_backward_batch) under a
+    /// strategy (see [`run_backward_with`](Self::run_backward_with)).
+    pub fn run_backward_batch_with(
+        &self,
+        strategy: &ExecStrategy,
+        x: &FeatureBatch,
+        dy: &FeatureBatch,
+        scratch: &mut Scratch,
+        dx: &mut FeatureBatch,
+        dk: &mut Kernel,
+    ) {
+        assert_eq!(x.n, dy.n, "plan: batch size mismatch");
+        self.check_backward_batch_shapes(dy, dx);
+        self.check_backward_weight_shapes((x.h, x.w, x.c), (dy.h, dy.w, dy.c), dk);
+        let total = self.scratch_floats_backward_fused();
+        let buf = scratch.ensure(total);
+        let (work, dsub_area) = buf.split_at_mut(total - self.dsub_floats);
+        dsub_area.fill(0.0);
+        for i in 0..x.n {
+            self.backward_fused_image(strategy, x.image(i), dy.image(i), work, dx.image_mut(i), dsub_area);
         }
         self.scatter_dsubs(dsub_area, dk);
     }
@@ -2245,6 +2610,100 @@ mod tests {
     }
 
     #[test]
+    fn fused_backward_matches_unfused_lanes() {
+        // The fused lane extracts each dy phase once and must reproduce
+        // the unfused pair exactly: dx bit-identical to
+        // run_backward_data for direct strategies (the shared pad is
+        // byte-identical, the correlation is the same), dk within the
+        // GEMM tolerance for every strategy (bit-identical when the
+        // weight GEMM runs the same lane).
+        let mut rng = Rng::seeded(62);
+        for (n_in, nk, p, cin, cout) in [
+            (4, 5, 2, 3, 2),
+            (4, 4, 2, 3, 2),
+            (5, 3, 1, 2, 2),
+            (3, 4, 3, 2, 1),
+            (6, 4, 2, 2, 8),
+        ] {
+            let k = Kernel::random(nk, cin, cout, &mut rng);
+            let plan =
+                ConvTransposePlan::new(ConvTransposeParams::new(n_in, nk, p, cin, cout), &k);
+            let ho = plan.out_size();
+            let x = Feature::random(n_in, n_in, cin, &mut rng);
+            let dy = Feature::random(ho, ho, cout, &mut rng);
+            let mut scratch = Scratch::new();
+            let mut want_dx = plan.new_input_grad();
+            plan.run_backward_data(&dy, &mut scratch, &mut want_dx);
+            let mut want_dk = plan.new_kernel_grad();
+            plan.run_backward_weights(&x, &dy, &mut scratch, &mut want_dk);
+            for s in crate::tune::space::backward_search_space(4) {
+                let mut dx = plan.new_input_grad();
+                let mut dk = plan.new_kernel_grad();
+                dx.data.fill(f32::NAN);
+                dk.data.fill(f32::NAN);
+                plan.run_backward_with(&s, &x, &dy, &mut scratch, &mut dx, &mut dk);
+                if s.formulation == Formulation::PhaseGemm {
+                    assert!(dx.data.iter().all(|v| !v.is_nan()), "{} left NaNs", s.name());
+                    assert!(max_abs(&dx.data, &want_dx.data) < 1e-4, "{} dx", s.name());
+                } else {
+                    assert_eq!(dx, want_dx, "{} dx (n={n_in} k={nk} p={p})", s.name());
+                }
+                assert!(max_abs(&dk.data, &want_dk.data) < 1e-4, "{} dk", s.name());
+            }
+            // The default entry point is the serial direct strategy and
+            // runs the weight GEMM on the same (active) lane as the
+            // unfused route — both gradients land bit-identical.
+            let mut dx = plan.new_input_grad();
+            let mut dk = plan.new_kernel_grad();
+            plan.run_backward(&x, &dy, &mut scratch, &mut dx, &mut dk);
+            assert_eq!(dx, want_dx, "run_backward dx (n={n_in})");
+            assert!(
+                dk.data
+                    .iter()
+                    .zip(&want_dk.data)
+                    .all(|(a, b)| a.to_bits() == b.to_bits()),
+                "run_backward dk (n={n_in})"
+            );
+        }
+    }
+
+    #[test]
+    fn fused_batched_backward_matches_per_image() {
+        let mut rng = Rng::seeded(63);
+        let (n_in, nk, p, cin, cout) = (4, 5, 2, 3, 2);
+        let k = Kernel::random(nk, cin, cout, &mut rng);
+        let plan = ConvTransposePlan::new(ConvTransposeParams::new(n_in, nk, p, cin, cout), &k);
+        let ho = plan.out_size();
+        for n in [1usize, 3, 5] {
+            let xb = FeatureBatch::random(n, n_in, n_in, cin, &mut rng);
+            let dyb = FeatureBatch::random(n, ho, ho, cout, &mut rng);
+            let mut scratch = Scratch::new();
+            let mut dxb = FeatureBatch::zeros(n, n_in, n_in, cin);
+            let mut dkb = plan.new_kernel_grad();
+            dxb.data.fill(f32::NAN);
+            dkb.data.fill(f32::NAN);
+            plan.run_backward_batch(&xb, &dyb, &mut scratch, &mut dxb, &mut dkb);
+            // Each dx image bit-identical to the single-image direct
+            // lane; the accumulated dk bit-identical to the unfused
+            // batched weight grad (same GEMMs in the same order).
+            for i in 0..n {
+                let mut want_dx = plan.new_input_grad();
+                plan.run_backward_data(&dyb.feature(i), &mut scratch, &mut want_dx);
+                assert_eq!(dxb.image(i), &want_dx.data[..], "fused batch dx image {i}");
+            }
+            let mut want_dk = plan.new_kernel_grad();
+            plan.run_backward_weights_batch(&xb, &dyb, &mut scratch, &mut want_dk);
+            assert!(
+                dkb.data
+                    .iter()
+                    .zip(&want_dk.data)
+                    .all(|(a, b)| a.to_bits() == b.to_bits()),
+                "fused batch dk (n={n})"
+            );
+        }
+    }
+
+    #[test]
     fn backward_scratch_sizing_is_exact() {
         let mut rng = Rng::seeded(61);
         let k = Kernel::random(5, 3, 2, &mut rng);
@@ -2304,9 +2763,14 @@ mod tests {
             slab + phase + patch_fwd + packed_dy + dsub
         );
         assert_eq!(
+            plan.scratch_floats_backward_fused(),
+            slab + phase + pad + patch_fwd.max(patch_bwd) + packed_dy + dsub
+        );
+        assert_eq!(
             plan.peak_scratch_floats_backward(),
             plan.scratch_floats_backward_data_gemm()
                 .max(plan.scratch_floats_backward_weights())
+                .max(plan.scratch_floats_backward_fused())
         );
         // Cold arenas grow to exactly each lane's figure — the sizing
         // functions are tight bounds, not estimates.
@@ -2332,6 +2796,12 @@ mod tests {
         assert_eq!(
             scratch.capacity_floats(),
             plan.scratch_floats_backward_weights()
+        );
+        let mut scratch = Scratch::new();
+        plan.run_backward(&x, &dy, &mut scratch, &mut dx, &mut dk);
+        assert_eq!(
+            scratch.capacity_floats(),
+            plan.scratch_floats_backward_fused()
         );
     }
 }

@@ -1,0 +1,618 @@
+//! Runtime ISA dispatch for the phase-GEMM microkernel and the direct
+//! per-phase inner loops (DESIGN.md §GEMM-Execution §SIMD-Dispatch).
+//!
+//! The phase-segregated formulation keeps every inner loop dense and
+//! branch-free — exactly the shape SIMD wants (GANAX's argument for
+//! phase-segregated deconvolution, PAPERS.md).  This module turns that
+//! shape into explicit `std::arch` lanes:
+//!
+//! * **[`Isa`]** — the lane taxonomy: `scalar` (portable reference),
+//!   `avx2` (AVX2+FMA, 8-wide f32), `avx512` (AVX-512F, 16-wide) and
+//!   `neon` (AArch64, 4-wide).  Detection runs **once per process**
+//!   ([`Isa::active`], `std::arch` runtime feature macros behind a
+//!   `OnceLock`) so steady-state execution never re-detects and never
+//!   allocates.
+//! * **[`Microkernel`]** — the dispatch table entry: register-tile
+//!   geometry (`mr × nr`) plus the `#[target_feature]` tile kernel for
+//!   the lane.  The B-panel width of the packed GEMM operands
+//!   (`gemm::pack_b`) equals the *active* lane's `nr`, so plan-time
+//!   packing always produces the panel width the production kernel
+//!   streams; the scalar lane reads panels of any width and is
+//!   therefore always available as fallback and correctness reference.
+//! * **[`saxpy_kernel`]** — the direct formulation's rank-1 update
+//!   (`acc[co] += x · tap[co]`), vectorized with **mul+add, never FMA**:
+//!   each output lane accumulates in exactly the scalar order and
+//!   rounding, keeping the direct lanes' bit-identity contract with the
+//!   one-shot reference (`tests/conv_properties.rs`) intact.
+//!
+//! ## Tile geometry per ISA
+//!
+//! | lane   | tile (mr×nr) | vector regs used              |
+//! |--------|--------------|-------------------------------|
+//! | scalar | 4×8          | LLVM-allocated from `[[f32;8];4]` |
+//! | avx2   | 6×16         | 12 acc + 2 B + 1 bcast of 16 ymm |
+//! | avx512 | 8×32         | 16 acc + 2 B + 1 bcast of 32 zmm |
+//! | neon   | 8×8          | 16 acc + 2 B + 1 dup of 32 q-regs |
+//!
+//! ## Safety
+//!
+//! Every intrinsic block lives inside a `#[target_feature]` function
+//! that is only ever *selected* after the matching `std::arch` runtime
+//! detection macro returned true ([`Isa::detect`]), and only ever
+//! *called* through [`Microkernel::for_isa`], which falls back to the
+//! scalar lane for any ISA the host did not report.  The tile kernels'
+//! pointer contract (documented on [`TileKernel`]) is discharged by the
+//! single call site in `gemm::gemm_packed_with`, which only takes the
+//! vector path for full `mr × nr` tiles inside bounds-checked slices.
+//! The crate denies `unsafe_op_in_unsafe_fn`, so every unsafe operation
+//! below sits in an explicit `unsafe` block with this argument.
+
+use std::sync::OnceLock;
+
+/// One SIMD instruction-set lane of the phase-GEMM microkernel.
+///
+/// `scalar` is always available; a vector lane is *available* only when
+/// it is the host's detected best lane ([`Isa::active`]) — panel
+/// geometry follows the active lane, so a narrower vector kernel could
+/// not read the packed operands anyway.  Unavailable lanes silently
+/// degrade to scalar ([`Microkernel::for_isa`]), which keeps decoded
+/// tuning-cache strategies from foreign hosts runnable.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash)]
+pub enum Isa {
+    /// Portable scalar tile — fallback and correctness reference.
+    Scalar,
+    /// AVX2 + FMA, 256-bit lanes (x86-64).
+    Avx2,
+    /// AVX-512F, 512-bit lanes (x86-64).
+    Avx512,
+    /// NEON, 128-bit lanes (AArch64).
+    Neon,
+}
+
+impl Isa {
+    /// Stable lane name — used in strategy names, cache fingerprints
+    /// (`cpu{n}+{isa}`) and the CLI `--isa` flag.
+    pub fn name(self) -> &'static str {
+        match self {
+            Isa::Scalar => "scalar",
+            Isa::Avx2 => "avx2",
+            Isa::Avx512 => "avx512",
+            Isa::Neon => "neon",
+        }
+    }
+
+    /// Inverse of [`name`](Self::name); `None` for unknown names.
+    pub fn parse(name: &str) -> Option<Isa> {
+        match name {
+            "scalar" => Some(Isa::Scalar),
+            "avx2" => Some(Isa::Avx2),
+            "avx512" => Some(Isa::Avx512),
+            "neon" => Some(Isa::Neon),
+            _ => None,
+        }
+    }
+
+    /// Native register-tile geometry `(mr, nr)` of the lane's kernel.
+    pub fn tile(self) -> (usize, usize) {
+        match self {
+            Isa::Scalar => (4, 8),
+            Isa::Avx2 => (6, 16),
+            Isa::Avx512 => (8, 32),
+            Isa::Neon => (8, 8),
+        }
+    }
+
+    /// Raw runtime feature detection: the best lane this host supports.
+    /// Callers want [`active`](Self::active), which runs this once.
+    pub fn detect() -> Isa {
+        #[cfg(target_arch = "x86_64")]
+        {
+            if std::arch::is_x86_feature_detected!("avx512f") {
+                return Isa::Avx512;
+            }
+            if std::arch::is_x86_feature_detected!("avx2")
+                && std::arch::is_x86_feature_detected!("fma")
+            {
+                return Isa::Avx2;
+            }
+        }
+        #[cfg(target_arch = "aarch64")]
+        {
+            if std::arch::is_aarch64_feature_detected!("neon") {
+                return Isa::Neon;
+            }
+        }
+        Isa::Scalar
+    }
+
+    /// The process-wide selected lane: detected once, cached forever.
+    /// Everything downstream — panel width of the packed operands,
+    /// default GEMM dispatch, the tuning-cache host fingerprint — keys
+    /// off this single selection, so it can never change mid-process.
+    pub fn active() -> Isa {
+        static ACTIVE: OnceLock<Isa> = OnceLock::new();
+        *ACTIVE.get_or_init(Isa::detect)
+    }
+
+    /// The lanes usable on this host, production lane first: the
+    /// detected vector lane (if any) then `scalar`.  This is what the
+    /// tuner's microkernel axis enumerates.
+    pub fn supported() -> Vec<Isa> {
+        match Isa::active() {
+            Isa::Scalar => vec![Isa::Scalar],
+            vector => vec![vector, Isa::Scalar],
+        }
+    }
+
+    /// True when [`Microkernel::for_isa`] would run this lane natively
+    /// (rather than degrade to scalar).
+    pub fn is_available(self) -> bool {
+        self == Isa::Scalar || self == Isa::active()
+    }
+}
+
+impl std::fmt::Display for Isa {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        f.write_str(self.name())
+    }
+}
+
+/// Full-tile kernel contract: computes
+/// `C[0..mr, 0..nr] += A[0..mr, 0..kc] · panel` where
+///
+/// * `a` points at the tile's first A element, row stride `lda`, and
+///   `mr` rows × `kc` elements are readable;
+/// * `panel` is the `kc × nr` packed B block (contiguous,
+///   [`pack_b`](super::gemm::pack_b) layout);
+/// * `c` points at the tile's first C element, row stride `ldc`, and
+///   `mr` rows × `nr` elements are readable and writable;
+/// * the required target features were runtime-detected.
+///
+/// Unaligned access is allowed (the kernels use unaligned loads).
+pub(crate) type TileKernel =
+    unsafe fn(a: *const f32, lda: usize, panel: *const f32, c: *mut f32, ldc: usize, kc: usize);
+
+/// One row of the microkernel dispatch table: the lane, its register
+/// tile, and (for vector lanes) the `#[target_feature]` tile kernel.
+/// `kernel == None` means the generic scalar tile path runs.
+#[derive(Clone, Copy)]
+pub struct Microkernel {
+    pub isa: Isa,
+    /// Register-tile rows the kernel computes at once.
+    pub mr: usize,
+    /// Register-tile columns == the B-panel width the kernel streams.
+    pub nr: usize,
+    pub(crate) kernel: Option<TileKernel>,
+}
+
+impl std::fmt::Debug for Microkernel {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        f.debug_struct("Microkernel")
+            .field("isa", &self.isa)
+            .field("mr", &self.mr)
+            .field("nr", &self.nr)
+            .field("vector", &self.kernel.is_some())
+            .finish()
+    }
+}
+
+impl Microkernel {
+    /// The scalar row of the table.  Its `nr` follows the **active**
+    /// panel width so the scalar lane can always consume whatever the
+    /// plan packed — the forced-fallback guarantee.
+    pub fn scalar() -> Microkernel {
+        Microkernel {
+            isa: Isa::Scalar,
+            mr: Isa::Scalar.tile().0,
+            nr: panel_width(),
+            kernel: None,
+        }
+    }
+
+    /// The table row for `isa`, degrading to [`scalar`](Self::scalar)
+    /// when the lane is not available on this host (wrong arch,
+    /// feature not detected, or not the active lane — panel widths
+    /// would mismatch).  Never panics: any `Isa` decoded from a tuning
+    /// cache is safe to execute.
+    pub fn for_isa(isa: Isa) -> Microkernel {
+        if isa == Isa::Scalar || !isa.is_available() {
+            return Microkernel::scalar();
+        }
+        Microkernel::vector(isa).unwrap_or_else(Microkernel::scalar)
+    }
+
+    /// The dispatch table's row for the process-wide active lane.
+    pub fn active() -> Microkernel {
+        Microkernel::for_isa(Isa::active())
+    }
+
+    #[cfg(target_arch = "x86_64")]
+    fn vector(isa: Isa) -> Option<Microkernel> {
+        let (mr, nr) = isa.tile();
+        let kernel: TileKernel = match isa {
+            Isa::Avx2 => x86::tile_avx2,
+            Isa::Avx512 => x86::tile_avx512,
+            _ => return None,
+        };
+        Some(Microkernel {
+            isa,
+            mr,
+            nr,
+            kernel: Some(kernel),
+        })
+    }
+
+    #[cfg(target_arch = "aarch64")]
+    fn vector(isa: Isa) -> Option<Microkernel> {
+        let (mr, nr) = isa.tile();
+        let kernel: TileKernel = match isa {
+            Isa::Neon => arm::tile_neon,
+            _ => return None,
+        };
+        Some(Microkernel {
+            isa,
+            mr,
+            nr,
+            kernel: Some(kernel),
+        })
+    }
+
+    #[cfg(not(any(target_arch = "x86_64", target_arch = "aarch64")))]
+    fn vector(_isa: Isa) -> Option<Microkernel> {
+        None
+    }
+}
+
+/// The B-panel width every packed GEMM operand in this process uses:
+/// the active lane's `nr`.  `gemm::pack_b` / `gemm::packed_b_floats`
+/// derive from this, so plan-time packing, runtime `dy` packing and the
+/// analytic memory accounting (`conv::memory`) all agree by
+/// construction.
+pub fn panel_width() -> usize {
+    Isa::active().tile().1
+}
+
+/// The direct formulation's inner rank-1 update as a plain function
+/// pointer: `acc[j] += x * t[j]` for every `j`.  Mul+add only (no FMA,
+/// no horizontal reduction), so every lane is **bit-identical** to the
+/// scalar loop — the direct lanes' `==` contract with the one-shot
+/// reference survives vectorization.
+pub(crate) type SaxpyFn = fn(&mut [f32], f32, &[f32]);
+
+/// The active lane's saxpy, selected once per process.  Hot callers
+/// (`conventional::correlate_rows`) hoist the returned pointer out of
+/// their pixel loops.
+pub(crate) fn saxpy_kernel() -> SaxpyFn {
+    static SAXPY: OnceLock<SaxpyFn> = OnceLock::new();
+    *SAXPY.get_or_init(|| saxpy_for(Isa::active()))
+}
+
+/// The saxpy lane for `isa`, degrading to scalar when unavailable —
+/// the test seam for per-lane bit-identity.
+pub(crate) fn saxpy_for(isa: Isa) -> SaxpyFn {
+    if !isa.is_available() {
+        return saxpy_scalar;
+    }
+    match isa {
+        Isa::Scalar => saxpy_scalar,
+        #[cfg(target_arch = "x86_64")]
+        Isa::Avx2 => saxpy_avx2,
+        #[cfg(target_arch = "x86_64")]
+        Isa::Avx512 => saxpy_avx512,
+        #[cfg(target_arch = "aarch64")]
+        Isa::Neon => saxpy_neon,
+        #[allow(unreachable_patterns)]
+        _ => saxpy_scalar,
+    }
+}
+
+fn saxpy_scalar(acc: &mut [f32], x: f32, t: &[f32]) {
+    debug_assert_eq!(acc.len(), t.len());
+    for (a, &tv) in acc.iter_mut().zip(t) {
+        *a += x * tv;
+    }
+}
+
+#[cfg(target_arch = "x86_64")]
+fn saxpy_avx2(acc: &mut [f32], x: f32, t: &[f32]) {
+    // SAFETY: only reachable through `saxpy_for` after `is_available`
+    // confirmed the runtime detection saw AVX2 (§Safety above).
+    unsafe { x86::saxpy_avx2(acc, x, t) }
+}
+
+#[cfg(target_arch = "x86_64")]
+fn saxpy_avx512(acc: &mut [f32], x: f32, t: &[f32]) {
+    // SAFETY: as `saxpy_avx2`, for AVX-512F.
+    unsafe { x86::saxpy_avx512(acc, x, t) }
+}
+
+#[cfg(target_arch = "aarch64")]
+fn saxpy_neon(acc: &mut [f32], x: f32, t: &[f32]) {
+    // SAFETY: as the x86 wrappers, for NEON.
+    unsafe { arm::saxpy_neon(acc, x, t) }
+}
+
+#[cfg(target_arch = "x86_64")]
+mod x86 {
+    use core::arch::x86_64::*;
+
+    /// AVX2+FMA 6×16 tile (12 ymm accumulators, 2 B vectors, 1
+    /// broadcast).  Contract: [`TileKernel`](super::TileKernel) with
+    /// `mr = 6`, `nr = 16`.
+    #[target_feature(enable = "avx2,fma")]
+    pub(super) unsafe fn tile_avx2(
+        a: *const f32,
+        lda: usize,
+        panel: *const f32,
+        c: *mut f32,
+        ldc: usize,
+        kc: usize,
+    ) {
+        // SAFETY: the caller (gemm_packed_with) discharges the
+        // TileKernel pointer contract — every load/store below stays
+        // inside the mr×kc A strip, the kc×16 panel block and the
+        // mr×16 C tile it sliced bounds-checked before taking raw
+        // pointers; unaligned intrinsics are used throughout.
+        unsafe {
+            let mut acc = [[_mm256_setzero_ps(); 2]; 6];
+            for (i, row) in acc.iter_mut().enumerate() {
+                row[0] = _mm256_loadu_ps(c.add(i * ldc));
+                row[1] = _mm256_loadu_ps(c.add(i * ldc + 8));
+            }
+            for kk in 0..kc {
+                let b0 = _mm256_loadu_ps(panel.add(kk * 16));
+                let b1 = _mm256_loadu_ps(panel.add(kk * 16 + 8));
+                for (i, row) in acc.iter_mut().enumerate() {
+                    let av = _mm256_set1_ps(*a.add(i * lda + kk));
+                    row[0] = _mm256_fmadd_ps(av, b0, row[0]);
+                    row[1] = _mm256_fmadd_ps(av, b1, row[1]);
+                }
+            }
+            for (i, row) in acc.iter().enumerate() {
+                _mm256_storeu_ps(c.add(i * ldc), row[0]);
+                _mm256_storeu_ps(c.add(i * ldc + 8), row[1]);
+            }
+        }
+    }
+
+    /// AVX-512F 8×32 tile (16 zmm accumulators, 2 B vectors, 1
+    /// broadcast).  Contract: [`TileKernel`](super::TileKernel) with
+    /// `mr = 8`, `nr = 32`.
+    #[target_feature(enable = "avx512f")]
+    pub(super) unsafe fn tile_avx512(
+        a: *const f32,
+        lda: usize,
+        panel: *const f32,
+        c: *mut f32,
+        ldc: usize,
+        kc: usize,
+    ) {
+        // SAFETY: same pointer contract as `tile_avx2`, at nr = 32.
+        unsafe {
+            let mut acc = [[_mm512_setzero_ps(); 2]; 8];
+            for (i, row) in acc.iter_mut().enumerate() {
+                row[0] = _mm512_loadu_ps(c.add(i * ldc));
+                row[1] = _mm512_loadu_ps(c.add(i * ldc + 16));
+            }
+            for kk in 0..kc {
+                let b0 = _mm512_loadu_ps(panel.add(kk * 32));
+                let b1 = _mm512_loadu_ps(panel.add(kk * 32 + 16));
+                for (i, row) in acc.iter_mut().enumerate() {
+                    let av = _mm512_set1_ps(*a.add(i * lda + kk));
+                    row[0] = _mm512_fmadd_ps(av, b0, row[0]);
+                    row[1] = _mm512_fmadd_ps(av, b1, row[1]);
+                }
+            }
+            for (i, row) in acc.iter().enumerate() {
+                _mm512_storeu_ps(c.add(i * ldc), row[0]);
+                _mm512_storeu_ps(c.add(i * ldc + 16), row[1]);
+            }
+        }
+    }
+
+    /// `acc += x · t` lanewise, mul+add (bit-identical to scalar).
+    #[target_feature(enable = "avx2")]
+    pub(super) unsafe fn saxpy_avx2(acc: &mut [f32], x: f32, t: &[f32]) {
+        debug_assert_eq!(acc.len(), t.len());
+        let n = acc.len();
+        // SAFETY: j + 8 <= n is checked before every 8-wide block; the
+        // pointers derive from the equal-length slices above.
+        unsafe {
+            let xv = _mm256_set1_ps(x);
+            let mut j = 0;
+            while j + 8 <= n {
+                let av = _mm256_loadu_ps(acc.as_ptr().add(j));
+                let tv = _mm256_loadu_ps(t.as_ptr().add(j));
+                _mm256_storeu_ps(
+                    acc.as_mut_ptr().add(j),
+                    _mm256_add_ps(av, _mm256_mul_ps(xv, tv)),
+                );
+                j += 8;
+            }
+            while j < n {
+                *acc.get_unchecked_mut(j) += x * t.get_unchecked(j);
+                j += 1;
+            }
+        }
+    }
+
+    /// `acc += x · t` lanewise, mul+add (bit-identical to scalar).
+    #[target_feature(enable = "avx512f")]
+    pub(super) unsafe fn saxpy_avx512(acc: &mut [f32], x: f32, t: &[f32]) {
+        debug_assert_eq!(acc.len(), t.len());
+        let n = acc.len();
+        // SAFETY: as `saxpy_avx2`, 16-wide.
+        unsafe {
+            let xv = _mm512_set1_ps(x);
+            let mut j = 0;
+            while j + 16 <= n {
+                let av = _mm512_loadu_ps(acc.as_ptr().add(j));
+                let tv = _mm512_loadu_ps(t.as_ptr().add(j));
+                _mm512_storeu_ps(
+                    acc.as_mut_ptr().add(j),
+                    _mm512_add_ps(av, _mm512_mul_ps(xv, tv)),
+                );
+                j += 16;
+            }
+            while j < n {
+                *acc.get_unchecked_mut(j) += x * t.get_unchecked(j);
+                j += 1;
+            }
+        }
+    }
+}
+
+#[cfg(target_arch = "aarch64")]
+mod arm {
+    use core::arch::aarch64::*;
+
+    /// NEON 8×8 tile (16 q-register accumulators, 2 B vectors, 1 dup).
+    /// Contract: [`TileKernel`](super::TileKernel) with `mr = 8`,
+    /// `nr = 8`.
+    #[target_feature(enable = "neon")]
+    pub(super) unsafe fn tile_neon(
+        a: *const f32,
+        lda: usize,
+        panel: *const f32,
+        c: *mut f32,
+        ldc: usize,
+        kc: usize,
+    ) {
+        // SAFETY: the caller (gemm_packed_with) discharges the
+        // TileKernel pointer contract (see the x86 tiles).
+        unsafe {
+            let mut acc = [[vdupq_n_f32(0.0); 2]; 8];
+            for (i, row) in acc.iter_mut().enumerate() {
+                row[0] = vld1q_f32(c.add(i * ldc));
+                row[1] = vld1q_f32(c.add(i * ldc + 4));
+            }
+            for kk in 0..kc {
+                let b0 = vld1q_f32(panel.add(kk * 8));
+                let b1 = vld1q_f32(panel.add(kk * 8 + 4));
+                for (i, row) in acc.iter_mut().enumerate() {
+                    let av = vdupq_n_f32(*a.add(i * lda + kk));
+                    row[0] = vfmaq_f32(row[0], av, b0);
+                    row[1] = vfmaq_f32(row[1], av, b1);
+                }
+            }
+            for (i, row) in acc.iter().enumerate() {
+                vst1q_f32(c.add(i * ldc), row[0]);
+                vst1q_f32(c.add(i * ldc + 4), row[1]);
+            }
+        }
+    }
+
+    /// `acc += x · t` lanewise, mul+add (bit-identical to scalar).
+    #[target_feature(enable = "neon")]
+    pub(super) unsafe fn saxpy_neon(acc: &mut [f32], x: f32, t: &[f32]) {
+        debug_assert_eq!(acc.len(), t.len());
+        let n = acc.len();
+        // SAFETY: j + 4 <= n is checked before every 4-wide block; the
+        // pointers derive from the equal-length slices above.
+        unsafe {
+            let xv = vdupq_n_f32(x);
+            let mut j = 0;
+            while j + 4 <= n {
+                let av = vld1q_f32(acc.as_ptr().add(j));
+                let tv = vld1q_f32(t.as_ptr().add(j));
+                vst1q_f32(acc.as_mut_ptr().add(j), vaddq_f32(av, vmulq_f32(xv, tv)));
+                j += 4;
+            }
+            while j < n {
+                *acc.get_unchecked_mut(j) += x * t.get_unchecked(j);
+                j += 1;
+            }
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::rng::Rng;
+
+    #[test]
+    fn scalar_lane_is_always_available() {
+        // The forced-fallback guarantee: whatever the host, the scalar
+        // row of the dispatch table exists, carries the active panel
+        // width, and has no vector kernel to mis-dispatch to.
+        assert!(Isa::Scalar.is_available());
+        let uk = Microkernel::for_isa(Isa::Scalar);
+        assert_eq!(uk.isa, Isa::Scalar);
+        assert!(uk.kernel.is_none());
+        assert_eq!(uk.nr, panel_width());
+        assert!(Isa::supported().contains(&Isa::Scalar));
+        assert_eq!(*Isa::supported().last().unwrap(), Isa::Scalar);
+    }
+
+    #[test]
+    fn unavailable_lanes_degrade_to_scalar_not_panic() {
+        // Decoded cache strategies from foreign hosts must stay
+        // runnable: every Isa value yields a usable kernel.
+        for isa in [Isa::Scalar, Isa::Avx2, Isa::Avx512, Isa::Neon] {
+            let uk = Microkernel::for_isa(isa);
+            if isa.is_available() {
+                assert_eq!(uk.isa, isa, "{isa} detected but not dispatched");
+                if isa != Isa::Scalar {
+                    assert!(uk.kernel.is_some(), "{isa} lane missing its kernel");
+                    assert_eq!((uk.mr, uk.nr), isa.tile());
+                }
+            } else {
+                assert_eq!(uk.isa, Isa::Scalar, "{isa} must degrade to scalar");
+                assert!(uk.kernel.is_none());
+            }
+            let _ = saxpy_for(isa); // must not panic either
+        }
+    }
+
+    #[test]
+    fn active_selection_is_stable_and_supported() {
+        let a = Isa::active();
+        assert_eq!(a, Isa::active(), "active lane must never change");
+        assert!(a.is_available());
+        assert_eq!(Isa::supported()[0], a);
+        assert_eq!(panel_width(), a.tile().1);
+        let uk = Microkernel::active();
+        assert_eq!(uk.isa, a);
+        assert_eq!(uk.nr, panel_width());
+    }
+
+    #[test]
+    fn isa_names_roundtrip() {
+        for isa in [Isa::Scalar, Isa::Avx2, Isa::Avx512, Isa::Neon] {
+            assert_eq!(Isa::parse(isa.name()), Some(isa));
+            assert_eq!(format!("{isa}"), isa.name());
+        }
+        assert_eq!(Isa::parse("sse9"), None);
+        // Tile geometry sanity: nr is a multiple of the scalar tile's 8
+        // so ragged-edge handling can share panel strides.
+        for isa in [Isa::Scalar, Isa::Avx2, Isa::Avx512, Isa::Neon] {
+            let (mr, nr) = isa.tile();
+            assert!(mr >= 1 && nr % 8 == 0, "{isa}: tile {mr}x{nr}");
+        }
+    }
+
+    #[test]
+    fn saxpy_lanes_bit_identical_to_scalar() {
+        // The direct formulation's bit-identity contract: every
+        // available lane must produce the exact scalar bits, on every
+        // length that straddles the vector width (incl. the remainder
+        // loop and length-0/1 edges).
+        let mut rng = Rng::seeded(0x51D);
+        for isa in Isa::supported() {
+            let f = saxpy_for(isa);
+            for n in [0usize, 1, 3, 4, 7, 8, 9, 15, 16, 17, 31, 32, 33, 40] {
+                let mut t = vec![0.0f32; n];
+                rng.fill_normal(&mut t);
+                let mut base = vec![0.0f32; n];
+                rng.fill_normal(&mut base);
+                let x = 0.37f32;
+                let mut want = base.clone();
+                saxpy_scalar(&mut want, x, &t);
+                let mut got = base.clone();
+                f(&mut got, x, &t);
+                assert_eq!(want, got, "isa={isa} n={n} must be bit-identical");
+            }
+        }
+    }
+}

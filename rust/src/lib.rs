@@ -53,6 +53,11 @@
 //! The one-shot entry points ([`conv::unified::transpose_conv`]) remain
 //! for single calls and as the bit-identical reference for the plan.
 
+// The SIMD microkernels (`conv::simd`) are the crate's only real
+// unsafe surface; every unsafe operation there must sit in an explicit
+// block with its own safety argument (DESIGN.md §SIMD-Dispatch).
+#![deny(unsafe_op_in_unsafe_fn)]
+
 pub mod bench;
 pub mod conv;
 pub mod coordinator;

@@ -15,6 +15,7 @@
 use std::sync::Arc;
 
 use ukstc::bench::{ablation, report, serving, table2, table3, table4, BenchConfig};
+use ukstc::conv::simd::Isa;
 use ukstc::coordinator::backend::RustBackend;
 use ukstc::coordinator::{Coordinator, CoordinatorConfig};
 use ukstc::models::{GanModel, Generator};
@@ -145,6 +146,11 @@ fn dispatch(sub: &str, rest: &[String]) -> anyhow::Result<()> {
             )
             .opt("model", "dcgan|artgan|gpgan|ebgan|smallest", Some("smallest"))
             .opt("batch", "serving batch size to tune for (adds fused lanes)", Some("1"))
+            .opt(
+                "isa",
+                "pin GEMM lanes to one microkernel: scalar|avx2|avx512|neon|best",
+                None,
+            )
             .opt("cache", "tuning-cache JSON path", Some("tuning-cache.json"))
             .opt("workers", "max worker count in the search space", None)
             .opt("warmup", "warmup iterations per candidate", Some("1"))
@@ -250,18 +256,35 @@ fn tune(a: &Args) -> anyhow::Result<()> {
         min_time_s: a.get_f64("min-time-ms", 20.0)? / 1e3,
         max_iters: a.get_usize("max-iters", 25)?.max(1),
     };
-    let tuner = Tuner::for_batch(max_workers, batch).with_budget(budget);
+    let mut tuner = Tuner::for_batch(max_workers, batch).with_budget(budget);
+    // `--isa` pins the GEMM candidates to one microkernel lane
+    // (DESIGN.md §SIMD-Dispatch): `best` is the host's detected lane,
+    // `scalar` the portable fallback; direct lanes always survive.
+    if let Some(pin) = a.get("isa") {
+        let isa = match pin {
+            "best" => Isa::active(),
+            name => Isa::parse(name).ok_or_else(|| {
+                anyhow::anyhow!("unknown --isa '{name}' (scalar|avx2|avx512|neon|best)")
+            })?,
+        };
+        tuner = tuner.pin_isa(isa);
+    }
+    let isa_label = match tuner.isa_pin {
+        Some(isa) => format!("isa {} pinned", isa.name()),
+        None => format!("isa {}", Isa::active().name()),
+    };
     let mut tuning_cache = if a.has_flag("no-cache") {
         TuningCache::in_memory()
     } else {
         TuningCache::load(std::path::Path::new(a.get_or("cache", "tuning-cache.json")))?
     };
     log::info!(
-        "tuning {} at batch {} ({} strategies, fingerprint {})",
+        "tuning {} at batch {} ({} strategies, fingerprint {}, {})",
         model.name(),
         batch,
         tuner.space.len(),
-        cache::host_fingerprint()
+        cache::host_fingerprint(),
+        isa_label
     );
     // Weights are irrelevant to timing (the kernels are
     // data-independent); the layer *plans* carry everything the
@@ -293,10 +316,11 @@ fn tune(a: &Args) -> anyhow::Result<()> {
     }
     report::print_table(
         &format!(
-            "Autotune — {} per-layer winners (batch {}, {})",
+            "Autotune — {} per-layer winners (batch {}, {}, {})",
             model.name(),
             batch,
-            cache::host_fingerprint()
+            cache::host_fingerprint(),
+            isa_label
         ),
         &["#", "layer", "strategy", "best", "vs serial", "cache"],
         &rows,
@@ -326,9 +350,10 @@ fn tune(a: &Args) -> anyhow::Result<()> {
         }
         report::print_table(
             &format!(
-                "Autotune — {} per-layer backward winners ({})",
+                "Autotune — {} per-layer backward winners ({}, {})",
                 model.name(),
-                cache::host_fingerprint()
+                cache::host_fingerprint(),
+                isa_label
             ),
             &["#", "layer", "strategy", "best", "vs serial", "cache"],
             &bwd_rows,

@@ -183,10 +183,12 @@ impl LayerWeights {
     /// post-activation value alone — `tanh'` as `1 − y²` when `last`,
     /// `relu'` as the sign gate `y > 0` otherwise — so the forward
     /// trace never stores pre-activation maps.  Returns
-    /// `(dx, dkernel, dbias)`; the data-grad runs the pinned
-    /// [`backward_strategy`](Self::backward_strategy) lane when one is
-    /// set, the serial direct lane otherwise, and the weight-grad runs
-    /// the phase-GEMM accumulation — both through `scratch`.
+    /// `(dx, dkernel, dbias)`; both conv gradients run the **fused**
+    /// backward ([`ConvTransposePlan::run_backward_with`]), which
+    /// extracts each `dy` phase once and shares it between the
+    /// weight-grad GEMM and the data-grad lane — the pinned
+    /// [`backward_strategy`](Self::backward_strategy) when one is set,
+    /// the serial direct lane otherwise — through `scratch`.
     pub fn backward_with(
         &self,
         x: &Feature,
@@ -222,25 +224,20 @@ impl LayerWeights {
             }
         }
         let mut dx = self.plan.new_input_grad();
-        match &self.backward_strategy {
-            Some(s) => self.plan.run_backward_data_with(s, &dpre, scratch, &mut dx),
-            None => self.plan.run_backward_data(&dpre, scratch, &mut dx),
-        }
         let mut dk = self.plan.new_kernel_grad();
-        self.plan.run_backward_weights(x, &dpre, scratch, &mut dk);
+        let serial = ExecStrategy::serial();
+        let strategy = self.backward_strategy.as_ref().unwrap_or(&serial);
+        self.plan
+            .run_backward_with(strategy, x, &dpre, scratch, &mut dx, &mut dk);
         (dx, dk, db)
     }
 
     /// Scratch floats [`backward_with`](Self::backward_with) needs:
-    /// the pinned data-grad lane's figure (direct when unpinned) joined
-    /// with the weight-grad phase-GEMM figure, both of which run
-    /// through the same arena.
+    /// the fused backward figure — one shared dense-phase region plus
+    /// the larger of the forward/backward im2col patches — which covers
+    /// every data-grad lane a pin can select.
     pub fn scratch_floats_backward(&self) -> usize {
-        let data = match &self.backward_strategy {
-            Some(s) => self.plan.scratch_floats_backward_for(s),
-            None => self.plan.scratch_floats_backward_data(),
-        };
-        data.max(self.plan.scratch_floats_backward_weights())
+        self.plan.scratch_floats_backward_fused()
     }
 }
 

@@ -37,12 +37,24 @@ use super::space::ExecStrategy;
 pub const CACHE_VERSION: usize = 1;
 
 /// Host fingerprint baked into every key: tuned worker counts only
-/// transfer between hosts with the same available parallelism.
+/// transfer between hosts with the same available parallelism, and —
+/// since the microkernel axis (DESIGN.md §SIMD-Dispatch) — the same
+/// active SIMD lane.  Scalar hosts keep the historic `cpu{n}` form so
+/// their existing cache entries stay valid verbatim; vector hosts
+/// fingerprint as `cpu{n}+{isa}` (e.g. `cpu8+avx2`), so verdicts
+/// measured scalar-only correctly *miss* there and the layer re-tunes
+/// over the wider space.  Keys are opaque strings: legacy `cpu{n}`
+/// entries still load and coexist in the same file.
 pub fn host_fingerprint() -> String {
     let cores = std::thread::available_parallelism()
         .map(|n| n.get())
         .unwrap_or(1);
-    format!("cpu{cores}")
+    let isa = crate::conv::simd::Isa::active();
+    if isa == crate::conv::simd::Isa::Scalar {
+        format!("cpu{cores}")
+    } else {
+        format!("cpu{cores}+{}", isa.name())
+    }
 }
 
 /// One cached verdict.
@@ -358,6 +370,24 @@ mod tests {
         // A narrower search space is a different question.
         assert_ne!(TuningCache::key(&params(4), 2), a);
         assert!(a.ends_with("w8"), "{a}");
+    }
+
+    #[test]
+    fn fingerprint_carries_isa_on_vector_hosts_only() {
+        use crate::conv::simd::Isa;
+        let fp = host_fingerprint();
+        let cores = std::thread::available_parallelism()
+            .map(|n| n.get())
+            .unwrap_or(1);
+        match Isa::active() {
+            // Scalar hosts keep the historic form byte-for-byte — their
+            // pre-SIMD cache entries must stay hits.
+            Isa::Scalar => assert_eq!(fp, format!("cpu{cores}")),
+            isa => assert_eq!(fp, format!("cpu{cores}+{}", isa.name())),
+        }
+        // The `+{isa}` suffix can't collide with the `w{n}` / `b{n}` /
+        // `bwd` key suffixes, and stays parseable as an opaque key.
+        assert!(!fp.contains('w') && !fp.contains('@'), "{fp}");
     }
 
     #[test]

@@ -233,9 +233,12 @@ impl Measurer for WallClockMeasurer {
     }
 
     /// Backward candidate: one timed step is a full training-direction
-    /// gradient — data-grad under `strategy` + the weight-grad phase
-    /// GEMM — over a deterministic dy, through a warm arena sized to
-    /// the backward peak (the steady state a `TrainStep` runs in).
+    /// gradient — both gradients through the **fused** backward lane
+    /// ([`ConvTransposePlan::run_backward_with`]), which extracts each
+    /// `dy` phase once and shares it between the weight-grad GEMM and
+    /// the strategy's data-grad lane — over a deterministic dy, through
+    /// a warm arena sized to the backward peak (the steady state a
+    /// `TrainStep` runs in).
     fn time_backward(
         &mut self,
         plan: &ConvTransposePlan,
@@ -257,8 +260,7 @@ impl Measurer for WallClockMeasurer {
         let mut dx = plan.new_input_grad();
         let mut dk = plan.new_kernel_grad();
         self.run_budgeted(incumbent, || {
-            plan.run_backward_data_with(strategy, &dy, &mut scratch, &mut dx);
-            plan.run_backward_weights(&x, &dy, &mut scratch, &mut dk);
+            plan.run_backward_with(strategy, &x, &dy, &mut scratch, &mut dx, &mut dk);
             dx.data[0] + dk.data[0]
         })
     }

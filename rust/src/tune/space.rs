@@ -17,6 +17,7 @@
 
 use std::collections::BTreeMap;
 
+use crate::conv::simd::Isa;
 use crate::util::json::Json;
 
 /// Which formulation of Algorithm 2 executes the layer.
@@ -105,6 +106,16 @@ pub struct ExecStrategy {
     /// batched search space ([`search_space_batch`]) carries both so
     /// the tuner measures the fusion win instead of assuming it.
     pub fused: bool,
+    /// The microkernel axis (DESIGN.md §SIMD-Dispatch): which SIMD lane
+    /// the phase-GEMM lanes execute with.  The GEMM constructors
+    /// default to the host's active lane ([`Isa::active`]); the search
+    /// spaces additionally carry scalar-pinned GEMM variants on vector
+    /// hosts so the tuner *measures* the vector win per layer instead
+    /// of assuming it.  Normalized to `Isa::Scalar` for the direct
+    /// formulations (their inner loops always run the active lane's
+    /// bit-identical saxpy — there is nothing to tune), so `Eq` stays
+    /// semantic.
+    pub isa: Isa,
 }
 
 impl ExecStrategy {
@@ -117,6 +128,7 @@ impl ExecStrategy {
             workers: 1,
             axis: ParAxis::PhaseRows,
             fused: false,
+            isa: Isa::Scalar,
         }
     }
 
@@ -127,6 +139,7 @@ impl ExecStrategy {
             workers: 1,
             axis: ParAxis::PhaseRows,
             fused: false,
+            isa: Isa::Scalar,
         }
     }
 
@@ -138,6 +151,7 @@ impl ExecStrategy {
             axis: if workers == 1 { ParAxis::PhaseRows } else { axis },
             workers,
             fused: false,
+            isa: Isa::Scalar,
         }
     }
 
@@ -148,30 +162,46 @@ impl ExecStrategy {
             workers: workers.max(1),
             axis: ParAxis::PhaseRows,
             fused: false,
+            isa: Isa::Scalar,
         }
     }
 
     /// Serial phase-GEMM lane (planned packed operands + tiled
-    /// microkernel).
+    /// microkernel), on the host's active SIMD lane.
     pub fn serial_gemm() -> ExecStrategy {
         ExecStrategy {
             formulation: Formulation::PhaseGemm,
             workers: 1,
             axis: ParAxis::PhaseRows,
             fused: false,
+            isa: Isa::active(),
         }
     }
 
     /// Row-parallel phase-GEMM lane over `workers` threads (the GEMM
     /// formulation always splits by output rows within a phase, so the
-    /// axis is normalized like the per-element lane's).
+    /// axis is normalized like the per-element lane's), on the host's
+    /// active SIMD lane.
     pub fn gemm_parallel(workers: usize) -> ExecStrategy {
         ExecStrategy {
             formulation: Formulation::PhaseGemm,
             workers: workers.max(1),
             axis: ParAxis::PhaseRows,
             fused: false,
+            isa: Isa::active(),
         }
+    }
+
+    /// Pin the microkernel axis.  Meaningful only for the phase-GEMM
+    /// formulation — the direct formulations normalize it away so `Eq`
+    /// stays semantic (their inner loops are not strategy-dispatched).
+    pub fn with_isa(mut self, isa: Isa) -> ExecStrategy {
+        self.isa = if self.formulation == Formulation::PhaseGemm {
+            isa
+        } else {
+            Isa::Scalar
+        };
+        self
     }
 
     /// Mark this strategy for fused batched dispatch
@@ -187,10 +217,13 @@ impl ExecStrategy {
         self.workers == 1
     }
 
-    /// Compact display name, e.g. `phase/par4/rows` or
-    /// `phase-gemm/serial/fused`.
+    /// Compact display name, e.g. `phase/par4/rows`,
+    /// `phase-gemm/serial/avx2` or `phase-gemm/par4/fused`.  The
+    /// microkernel axis appears only on non-scalar GEMM lanes (before
+    /// the `/fused` suffix), so scalar-host names are unchanged from
+    /// pre-SIMD releases.
     pub fn name(&self) -> String {
-        let base = match (self.formulation, self.workers) {
+        let mut base = match (self.formulation, self.workers) {
             (f, 1) => format!("{}/serial", f.name()),
             (Formulation::PerElement, w) => format!("per-element/par{w}"),
             (Formulation::PhaseGemm, w) => format!("phase-gemm/par{w}"),
@@ -198,6 +231,9 @@ impl ExecStrategy {
                 format!("phase/par{w}/{}", self.axis.name())
             }
         };
+        if self.formulation == Formulation::PhaseGemm && self.isa != Isa::Scalar {
+            base = format!("{base}/{}", self.isa.name());
+        }
         if self.fused {
             format!("{base}/fused")
         } else {
@@ -206,8 +242,9 @@ impl ExecStrategy {
     }
 
     /// JSON encoding for the tuning cache (`util::json`).  The `fused`
-    /// field is written only when set, so pre-batching caches and the
-    /// documented examples stay byte-stable.
+    /// and `isa` fields are written only when set / non-scalar, so
+    /// pre-batching and pre-SIMD caches and the documented examples
+    /// stay byte-stable.
     pub fn to_json(&self) -> Json {
         let mut m = BTreeMap::new();
         m.insert(
@@ -219,12 +256,17 @@ impl ExecStrategy {
         if self.fused {
             m.insert("fused".to_string(), Json::Bool(true));
         }
+        if self.isa != Isa::Scalar {
+            m.insert("isa".to_string(), Json::Str(self.isa.name().to_string()));
+        }
         Json::Obj(m)
     }
 
     /// Decode from the cache encoding; `None` on any malformed field.
-    /// A missing `fused` field decodes as per-latent (the only lane
-    /// that existed when such caches were written).
+    /// A missing `fused` field decodes as per-latent, and a missing
+    /// `isa` field decodes as scalar — the only lanes that existed when
+    /// such caches were written, so legacy verdicts keep their
+    /// historically-correct meaning.
     pub fn from_json(v: &Json) -> Option<ExecStrategy> {
         let formulation = Formulation::from_name(v.get("formulation")?.as_str()?)?;
         let workers = v.get("workers")?.as_usize()?;
@@ -237,6 +279,11 @@ impl ExecStrategy {
             Formulation::PerElement => ExecStrategy::per_element_parallel(workers),
             Formulation::PhaseGemm => ExecStrategy::gemm_parallel(workers),
         };
+        let isa = match v.get("isa") {
+            None => Isa::Scalar,
+            Some(j) => Isa::parse(j.as_str()?)?,
+        };
+        let s = s.with_isa(isa);
         match v.get("fused") {
             None => Some(s),
             Some(f) => {
@@ -268,18 +315,29 @@ fn worker_counts(max_workers: usize) -> Vec<usize> {
 /// The full search space for a machine with `max_workers` usable
 /// threads: all three formulations serial, then every candidate
 /// worker count × lane (two phase-decomposed axes, per-element rows,
-/// phase-GEMM rows).  [`ExecStrategy::serial`] is always element zero.
+/// phase-GEMM rows).  On vector hosts every GEMM lane additionally
+/// appears scalar-pinned (the microkernel axis, DESIGN.md
+/// §SIMD-Dispatch) — [`Isa::supported`] is `{active, scalar}`, so the
+/// space enumerates exactly the lanes the host can execute.
+/// [`ExecStrategy::serial`] is always element zero.
 pub fn search_space(max_workers: usize) -> Vec<ExecStrategy> {
+    let vector_host = Isa::active() != Isa::Scalar;
     let mut out = vec![
         ExecStrategy::serial(),
         ExecStrategy::serial_per_element(),
         ExecStrategy::serial_gemm(),
     ];
+    if vector_host {
+        out.push(ExecStrategy::serial_gemm().with_isa(Isa::Scalar));
+    }
     for w in worker_counts(max_workers) {
         out.push(ExecStrategy::parallel(w, ParAxis::PhaseRows));
         out.push(ExecStrategy::parallel(w, ParAxis::Rows));
         out.push(ExecStrategy::per_element_parallel(w));
         out.push(ExecStrategy::gemm_parallel(w));
+        if vector_host {
+            out.push(ExecStrategy::gemm_parallel(w).with_isa(Isa::Scalar));
+        }
     }
     out
 }
@@ -298,10 +356,17 @@ pub fn search_space_batch(max_workers: usize, batch: usize) -> Vec<ExecStrategy>
     if batch <= 1 {
         return out;
     }
+    let vector_host = Isa::active() != Isa::Scalar;
     out.push(ExecStrategy::serial_gemm().fused());
+    if vector_host {
+        out.push(ExecStrategy::serial_gemm().with_isa(Isa::Scalar).fused());
+    }
     for w in worker_counts(max_workers) {
         out.push(ExecStrategy::parallel(w, ParAxis::PhaseRows).fused());
         out.push(ExecStrategy::gemm_parallel(w).fused());
+        if vector_host {
+            out.push(ExecStrategy::gemm_parallel(w).with_isa(Isa::Scalar).fused());
+        }
     }
     out
 }
@@ -310,13 +375,17 @@ pub fn search_space_batch(max_workers: usize, batch: usize) -> Vec<ExecStrategy>
 /// §Backward-Execution): the lanes
 /// [`ConvTransposePlan::run_backward_data_with`](crate::conv::plan::ConvTransposePlan::run_backward_data_with)
 /// dispatches — serial direct (element zero, seeding the incumbent
-/// like the forward spaces), serial GEMM, and the `(phase, slab-row)`
-/// parallel direct lane per candidate worker count.  A separate
+/// like the forward spaces), serial GEMM (scalar-pinned as well on
+/// vector hosts), and the `(phase, slab-row)` parallel direct lane per
+/// candidate worker count.  A separate
 /// enumeration rather than a [`search_space`] extension: backward has
 /// no per-element formulation and no split-axis choice, and keeping it
 /// apart leaves the pinned forward space sizes untouched.
 pub fn backward_search_space(max_workers: usize) -> Vec<ExecStrategy> {
     let mut out = vec![ExecStrategy::serial(), ExecStrategy::serial_gemm()];
+    if Isa::active() != Isa::Scalar {
+        out.push(ExecStrategy::serial_gemm().with_isa(Isa::Scalar));
+    }
     for w in worker_counts(max_workers) {
         out.push(ExecStrategy::parallel(w, ParAxis::PhaseRows));
     }
@@ -334,13 +403,41 @@ mod tests {
         }
     }
 
+    /// 1 on vector hosts (each GEMM lane gains a scalar-pinned twin),
+    /// 0 on scalar hosts — keeps the size pins exact on every CI ISA.
+    fn extra() -> usize {
+        usize::from(Isa::active() != Isa::Scalar)
+    }
+
     #[test]
     fn space_sizes() {
-        // max 1 → only the three serial lanes; each worker count adds 4.
-        assert_eq!(search_space(1).len(), 3);
-        assert_eq!(search_space(2).len(), 3 + 4); // w ∈ {2}
-        assert_eq!(search_space(8).len(), 3 + 3 * 4); // w ∈ {2, 4, 8}
+        // max 1 → only the serial lanes; each worker count adds 4
+        // (+ the scalar-pinned GEMM twin on vector hosts).
+        let e = extra();
+        assert_eq!(search_space(1).len(), 3 + e);
+        assert_eq!(search_space(2).len(), 3 + e + (4 + e)); // w ∈ {2}
+        assert_eq!(search_space(8).len(), 3 + e + 3 * (4 + e)); // w ∈ {2, 4, 8}
         assert_eq!(worker_counts(6), vec![2, 4, 6]);
+    }
+
+    #[test]
+    fn vector_hosts_carry_scalar_pinned_gemm_lanes() {
+        // The microkernel axis: the space holds exactly the ISA lanes
+        // the host supports — every GEMM worker count × Isa::supported().
+        let space = search_space(4);
+        for isa in Isa::supported() {
+            assert!(space.contains(&ExecStrategy::serial_gemm().with_isa(isa)));
+            assert!(space.contains(&ExecStrategy::gemm_parallel(4).with_isa(isa)));
+        }
+        // No GEMM lane carries an ISA the host can't run.
+        for s in &space {
+            assert!(s.isa.is_available(), "{}", s.name());
+        }
+        // Direct formulations normalize the axis away.
+        assert_eq!(
+            ExecStrategy::serial().with_isa(Isa::Avx512),
+            ExecStrategy::serial()
+        );
     }
 
     #[test]
@@ -379,10 +476,12 @@ mod tests {
         assert!(batched.contains(&ExecStrategy::serial_gemm().fused()));
         assert!(batched.contains(&ExecStrategy::gemm_parallel(4).fused()));
         assert!(batched.contains(&ExecStrategy::parallel(2, ParAxis::PhaseRows).fused()));
-        // 1 fused serial gemm + 2 fused lanes per worker count {2, 4}.
-        assert_eq!(batched.len(), base.len() + 1 + 2 * 2);
+        // 1 fused serial gemm + 2 fused lanes per worker count {2, 4}
+        // (+ scalar-pinned GEMM twins on vector hosts).
+        let e = extra();
+        assert_eq!(batched.len(), base.len() + (1 + e) + (2 + e) * 2);
         assert_eq!(
-            ExecStrategy::serial_gemm().fused().name(),
+            ExecStrategy::serial_gemm().with_isa(Isa::Scalar).fused().name(),
             "phase-gemm/serial/fused"
         );
         // The per-element formulation has no fused lane — normalized away.
@@ -395,12 +494,14 @@ mod tests {
     #[test]
     fn backward_space_is_small_and_disjointly_defined() {
         // Serial direct seeds the incumbent; the space holds exactly
-        // {serial, serial-gemm} + one parallel lane per worker count,
-        // every member dispatchable by run_backward_data_with.  The
-        // forward spaces keep their pinned sizes regardless.
-        assert_eq!(backward_search_space(1).len(), 2);
-        assert_eq!(backward_search_space(2).len(), 2 + 1);
-        assert_eq!(backward_search_space(8).len(), 2 + 3);
+        // {serial, serial-gemm (× supported ISA lanes)} + one parallel
+        // lane per worker count, every member dispatchable by
+        // run_backward_data_with.  The forward spaces keep their
+        // pinned sizes regardless.
+        let e = extra();
+        assert_eq!(backward_search_space(1).len(), 2 + e);
+        assert_eq!(backward_search_space(2).len(), 2 + e + 1);
+        assert_eq!(backward_search_space(8).len(), 2 + e + 3);
         for max in [1, 2, 8] {
             let space = backward_search_space(max);
             assert_eq!(space[0], ExecStrategy::serial());
@@ -424,8 +525,22 @@ mod tests {
         );
         assert_eq!(ExecStrategy::per_element_parallel(0).workers, 1);
         assert_eq!(ExecStrategy::gemm_parallel(1), ExecStrategy::serial_gemm());
-        assert_eq!(ExecStrategy::serial_gemm().name(), "phase-gemm/serial");
-        assert_eq!(ExecStrategy::gemm_parallel(4).name(), "phase-gemm/par4");
+        // Scalar GEMM names carry no ISA suffix (pre-SIMD stability);
+        // vector lanes append it before any /fused.
+        let scalar = ExecStrategy::serial_gemm().with_isa(Isa::Scalar);
+        assert_eq!(scalar.name(), "phase-gemm/serial");
+        assert_eq!(
+            ExecStrategy::gemm_parallel(4).with_isa(Isa::Scalar).name(),
+            "phase-gemm/par4"
+        );
+        assert_eq!(
+            ExecStrategy::gemm_parallel(4).with_isa(Isa::Avx2).name(),
+            "phase-gemm/par4/avx2"
+        );
+        assert_eq!(
+            ExecStrategy::serial_gemm().with_isa(Isa::Neon).fused().name(),
+            "phase-gemm/serial/neon/fused"
+        );
     }
 
     #[test]
@@ -445,6 +560,8 @@ mod tests {
             r#"{"formulation":"gpu","workers":2,"axis":"rows"}"#,
             r#"{"formulation":"phase","workers":2,"axis":"cols"}"#,
             r#"{"workers":2,"axis":"rows"}"#,
+            r#"{"formulation":"phase-gemm","workers":2,"axis":"phase-rows","isa":"sse9"}"#,
+            r#"{"formulation":"phase-gemm","workers":2,"axis":"phase-rows","isa":7}"#,
             r#"[1,2,3]"#,
         ] {
             let v = crate::util::json::parse(bad).unwrap();

@@ -9,11 +9,14 @@
 //! layer shape.
 
 use crate::conv::plan::ConvTransposePlan;
+use crate::conv::simd::Isa;
 use crate::conv::ConvTransposeParams;
 
 use super::cache::TuningCache;
 use super::measure::{MeasureBudget, Measurer};
-use super::space::{backward_search_space, search_space, search_space_batch, ExecStrategy};
+use super::space::{
+    backward_search_space, search_space, search_space_batch, ExecStrategy, Formulation,
+};
 
 /// The tuning verdict for one layer shape.
 #[derive(Debug, Clone)]
@@ -68,6 +71,11 @@ pub struct Tuner {
     /// their verdicts live under the batch-suffixed cache key
     /// (DESIGN.md §Batched-Execution).
     pub batch: usize,
+    /// When set (`ukstc tune --isa`), GEMM candidates are restricted to
+    /// this microkernel lane — forward, batched, and backward spaces
+    /// alike.  Direct lanes always survive the pin, so element zero
+    /// (the serial seed) is never filtered out.
+    pub isa_pin: Option<Isa>,
 }
 
 impl Tuner {
@@ -77,6 +85,7 @@ impl Tuner {
             space: search_space(max_workers),
             budget: MeasureBudget::default(),
             batch: 1,
+            isa_pin: None,
         }
     }
 
@@ -90,11 +99,27 @@ impl Tuner {
             space: search_space_batch(max_workers, batch),
             budget: MeasureBudget::default(),
             batch,
+            isa_pin: None,
         }
     }
 
     pub fn with_budget(mut self, budget: MeasureBudget) -> Tuner {
         self.budget = budget;
+        self
+    }
+
+    /// Pin the GEMM candidates to one microkernel lane (`ukstc tune
+    /// --isa scalar|best`): PhaseGemm strategies whose [`Isa`] differs
+    /// from `isa` are dropped from the forward space now and from the
+    /// backward space at [`tune_layer_backward`](Self::tune_layer_backward)
+    /// time.  Non-GEMM strategies are untouched — in particular the
+    /// serial direct seed at element zero — so a pin to a lane the
+    /// space doesn't carry degrades to a direct-only search rather
+    /// than an empty one.
+    pub fn pin_isa(mut self, isa: Isa) -> Tuner {
+        self.space
+            .retain(|s| s.formulation != Formulation::PhaseGemm || s.isa == isa);
+        self.isa_pin = Some(isa);
         self
     }
 
@@ -179,7 +204,10 @@ impl Tuner {
         plan: &ConvTransposePlan,
         measurer: &mut M,
     ) -> TunedPlan {
-        let space = backward_search_space(self.space_workers());
+        let mut space = backward_search_space(self.space_workers());
+        if let Some(isa) = self.isa_pin {
+            space.retain(|s| s.formulation != Formulation::PhaseGemm || s.isa == isa);
+        }
         assert!(!space.is_empty(), "tuner: empty backward search space");
         let mut best: Option<(ExecStrategy, f64)> = None;
         let mut candidates = Vec::with_capacity(space.len());
@@ -361,6 +389,50 @@ mod tests {
         assert!(again.cached);
         assert_eq!(m.incumbents.len(), timed, "hit must not measure");
         assert_eq!(again.strategy, first.strategy);
+    }
+
+    #[test]
+    fn isa_pin_keeps_direct_lanes_and_matching_gemm() {
+        // Every supported lane can be pinned; the pin filters only
+        // GEMM candidates and never touches the serial seed or the
+        // space's worker bound.
+        for isa in Isa::supported() {
+            let tuner = Tuner::new(4).pin_isa(isa);
+            assert_eq!(tuner.isa_pin, Some(isa));
+            assert_eq!(tuner.space[0], ExecStrategy::serial(), "seed survives the pin");
+            assert!(tuner
+                .space
+                .iter()
+                .all(|s| s.formulation != Formulation::PhaseGemm || s.isa == isa));
+            assert!(
+                tuner
+                    .space
+                    .iter()
+                    .any(|s| s.formulation == Formulation::PhaseGemm && s.isa == isa),
+                "pin to {} must keep that lane's GEMM candidates",
+                isa.name()
+            );
+            assert_eq!(tuner.space_workers(), 4, "direct parallel lanes keep the bound");
+            // The backward search honors the same pin: every visited
+            // GEMM candidate carries the pinned lane.
+            let mut m = Scripted {
+                incumbents: Vec::new(),
+                winner: ExecStrategy::serial(),
+            };
+            let tuned = tuner.tune_layer_backward(&plan(), &mut m);
+            assert_eq!(tuned.candidates[0].0, ExecStrategy::serial());
+            assert!(tuned
+                .candidates
+                .iter()
+                .all(|(s, _)| s.formulation != Formulation::PhaseGemm || s.isa == isa));
+        }
+        // Pinning scalar always leaves at least the serial GEMM lane:
+        // the space carries a scalar-pinned twin on vector hosts and
+        // the native serial GEMM on scalar hosts.
+        let scalar = Tuner::new(2).pin_isa(Isa::Scalar);
+        assert!(scalar
+            .space
+            .contains(&ExecStrategy::serial_gemm().with_isa(Isa::Scalar)));
     }
 
     #[test]

@@ -222,11 +222,24 @@ fn planned_path_is_zero_alloc_after_warmup() {
             plan5.scratch_floats_backward_weights(),
             "backward-weights sizing is not exact"
         );
+        // The fused backward (one dy-phase extraction shared between
+        // data-grad and weight-grad) has its own exact figure: the
+        // shared dense-phase regions plus the *larger* of the forward
+        // and backward im2col patches, plus the packed-dy and dsub
+        // regions.
+        let mut cold = Scratch::new();
+        plan5.run_backward(&x0, &dy0, &mut cold, &mut dx0, &mut dk0);
+        assert_eq!(
+            cold.capacity_floats(),
+            plan5.scratch_floats_backward_fused(),
+            "fused backward sizing is not exact"
+        );
         assert_eq!(
             plan5.peak_scratch_floats_backward(),
             plan5
                 .scratch_floats_backward_data_gemm()
-                .max(plan5.scratch_floats_backward_weights()),
+                .max(plan5.scratch_floats_backward_weights())
+                .max(plan5.scratch_floats_backward_fused()),
             "backward peak must be the max over the lanes"
         );
     }
@@ -243,6 +256,8 @@ fn planned_path_is_zero_alloc_after_warmup() {
     plan5.run_backward_data_batch(&dyb, &mut scratch, &mut dxb);
     plan5.run_backward_weights(&x0, &dy0, &mut scratch, &mut dk0);
     plan5.run_backward_weights_batch(&xb, &dyb, &mut scratch, &mut dk0);
+    plan5.run_backward(&x0, &dy0, &mut scratch, &mut dx0, &mut dk0);
+    plan5.run_backward_batch(&xb, &dyb, &mut scratch, &mut dxb, &mut dk0);
     let before = allocs();
     for _ in 0..5 {
         plan5.run_backward_data(&dy0, &mut scratch, &mut dx0);
@@ -250,6 +265,8 @@ fn planned_path_is_zero_alloc_after_warmup() {
         plan5.run_backward_data_batch(&dyb, &mut scratch, &mut dxb);
         plan5.run_backward_weights(&x0, &dy0, &mut scratch, &mut dk0);
         plan5.run_backward_weights_batch(&xb, &dyb, &mut scratch, &mut dk0);
+        plan5.run_backward(&x0, &dy0, &mut scratch, &mut dx0, &mut dk0);
+        plan5.run_backward_batch(&xb, &dyb, &mut scratch, &mut dxb, &mut dk0);
     }
     assert_eq!(
         allocs(),
@@ -270,4 +287,15 @@ fn planned_path_is_zero_alloc_after_warmup() {
         .map(|(a, b)| (a - b).abs())
         .fold(0.0f32, f32::max);
     assert!(dk_err < 1e-4, "backward weights diverged after arena reuse");
+    // The fused lane too: dx bit-identical to the unfused direct lane,
+    // dk within the GEMM reassociation tolerance.
+    plan5.run_backward(&x0, &dy0, &mut scratch, &mut dx0, &mut dk0);
+    assert_eq!(dx0, want_dx, "fused backward dx diverged after arena reuse");
+    let dk_err = dk0
+        .data
+        .iter()
+        .zip(&want_dk.data)
+        .map(|(a, b)| (a - b).abs())
+        .fold(0.0f32, f32::max);
+    assert!(dk_err < 1e-4, "fused backward dk diverged after arena reuse");
 }

@@ -1,0 +1,111 @@
+//! SIMD microkernel equivalence at the plan level (DESIGN.md
+//! §SIMD-Dispatch): every ISA lane the host supports must agree with
+//! the forced-scalar lane — through the full planned phase-GEMM
+//! pipeline (segregate → im2col → pack → tiled GEMM → scatter) — over
+//! the whole geometry envelope: paddings 0–3, `Cout` below / at / past
+//! the register tile width, odd and even grids.
+//!
+//! The scalar lane is the correctness reference: it is always
+//! available ([`Isa::is_available`] for `Scalar` is unconditionally
+//! true), and the vector lanes differ from it only by FMA contraction
+//! and reduction reassociation inside the register tile, so the
+//! agreement bound is the crate-wide 1e-4 GEMM tolerance.  The direct
+//! (non-GEMM) formulations are *bit-identical* across hosts by
+//! contract — their saxpy dispatch uses mul+add, never FMA — which the
+//! direct reference check below exercises implicitly.
+
+use ukstc::conv::plan::{ConvTransposePlan, Scratch};
+use ukstc::conv::simd::Isa;
+use ukstc::conv::ConvTransposeParams;
+use ukstc::tensor::{ops, Feature, Kernel};
+use ukstc::tune::space::ExecStrategy;
+use ukstc::util::rng::Rng;
+
+#[test]
+fn every_supported_lane_matches_scalar_across_geometry_envelope() {
+    // Scalar is always a valid pin — the portable fallback every
+    // dispatch can degrade to.
+    assert!(Isa::Scalar.is_available());
+    let mut rng = Rng::seeded(0x51D);
+    let cin = 3;
+    for n_in in [4usize, 5] {
+        for padding in 0..=3usize {
+            for cout in [1usize, 3, 8, 17] {
+                let p = ConvTransposeParams::new(n_in, 4, padding, cin, cout);
+                let k = Kernel::random(4, cin, cout, &mut rng);
+                let plan = ConvTransposePlan::new(p, &k);
+                let x = Feature::random(n_in, n_in, cin, &mut rng);
+                let mut scratch = Scratch::with_floats(plan.scratch_floats());
+                // Direct serial reference (the plan's bit-exact lane).
+                let mut direct = plan.new_output();
+                plan.run(&x, &mut scratch, &mut direct);
+                // Forced-scalar GEMM: the correctness reference for the
+                // microkernel axis.
+                let scalar_pin = ExecStrategy::serial_gemm().with_isa(Isa::Scalar);
+                let mut scalar = plan.new_output();
+                plan.run_with(&scalar_pin, &x, &mut scratch, &mut scalar);
+                let base_err = ops::max_abs_diff(&scalar, &direct);
+                assert!(
+                    base_err < 1e-4,
+                    "scalar GEMM vs direct: {base_err} (n={n_in} p={padding} cout={cout})"
+                );
+                for isa in Isa::supported() {
+                    for strategy in [
+                        ExecStrategy::serial_gemm().with_isa(isa),
+                        ExecStrategy::gemm_parallel(3).with_isa(isa),
+                    ] {
+                        let mut got = plan.new_output();
+                        plan.run_with(&strategy, &x, &mut scratch, &mut got);
+                        assert!(
+                            got.data.iter().all(|v| v.is_finite()),
+                            "{} produced non-finite output (n={n_in} p={padding} cout={cout})",
+                            strategy.name()
+                        );
+                        let err = ops::max_abs_diff(&got, &scalar);
+                        assert!(
+                            err < 1e-4,
+                            "{} vs forced scalar: {err} (n={n_in} p={padding} cout={cout})",
+                            strategy.name()
+                        );
+                    }
+                }
+            }
+        }
+    }
+}
+
+#[test]
+fn backward_lanes_match_scalar_across_isa_pins() {
+    // The backward phase-GEMM lanes run the same microkernel dispatch;
+    // pin each supported lane through the fused backward and compare
+    // gradients against the forced-scalar pin.
+    let mut rng = Rng::seeded(0x51D2);
+    let (n_in, cin, cout) = (5usize, 3usize, 8usize);
+    let p = ConvTransposeParams::new(n_in, 4, 2, cin, cout);
+    let k = Kernel::random(4, cin, cout, &mut rng);
+    let plan = ConvTransposePlan::new(p, &k);
+    let ho = p.out_size();
+    let x = Feature::random(n_in, n_in, cin, &mut rng);
+    let dy = Feature::random(ho, ho, cout, &mut rng);
+    let mut scratch = Scratch::with_floats(plan.peak_scratch_floats_backward());
+    let run = |isa: Isa, scratch: &mut Scratch| {
+        let s = ExecStrategy::serial_gemm().with_isa(isa);
+        let mut dx = plan.new_input_grad();
+        let mut dk = plan.new_kernel_grad();
+        plan.run_backward_with(&s, &x, &dy, scratch, &mut dx, &mut dk);
+        (dx, dk)
+    };
+    let (dx_ref, dk_ref) = run(Isa::Scalar, &mut scratch);
+    for isa in Isa::supported() {
+        let (dx, dk) = run(isa, &mut scratch);
+        let dx_err = ops::max_abs_diff(&dx, &dx_ref);
+        assert!(dx_err < 1e-4, "{} dx vs scalar: {dx_err}", isa.name());
+        let dk_err = dk
+            .data
+            .iter()
+            .zip(&dk_ref.data)
+            .map(|(a, b)| (a - b).abs())
+            .fold(0.0f32, f32::max);
+        assert!(dk_err < 1e-4, "{} dk vs scalar: {dk_err}", isa.name());
+    }
+}

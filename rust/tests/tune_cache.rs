@@ -107,6 +107,80 @@ fn cache_roundtrips_through_json_file() {
 }
 
 #[test]
+fn legacy_and_isa_fingerprint_entries_coexist_in_one_file() {
+    // Migration contract (DESIGN.md §SIMD-Dispatch): cache keys are
+    // opaque strings, so one version-1 file can simultaneously hold
+    //   * legacy scalar-host entries   (`...@cpu{n}w{k}`),
+    //   * batched entries              (`...w{k}b{N}`),
+    //   * backward entries             (`...w{k}bwd`),
+    //   * new SIMD-host entries        (`...@cpu{n}+{isa}w{k}`),
+    // and strategies written before the microkernel axis existed (no
+    // "isa" field) decode as the scalar lane they were measured on.
+    let dir = std::env::temp_dir().join(format!("ukstc-tune-migrate-{}", std::process::id()));
+    std::fs::create_dir_all(&dir).unwrap();
+    let path = dir.join("mixed.json");
+    std::fs::write(
+        &path,
+        concat!(
+            r#"{"version":1,"entries":{"#,
+            // Legacy scalar host, pre-SIMD GEMM verdict: no "isa" field.
+            r#""n4k4p2ci3co2@cpu8w2":"#,
+            r#"{"seconds":1e-4,"strategy":{"axis":"phase-rows","formulation":"phase-gemm","workers":1}},"#,
+            // Batched key on the same legacy host.
+            r#""n4k4p2ci3co2@cpu8w2b4":"#,
+            r#"{"seconds":2e-4,"strategy":{"axis":"phase-rows","formulation":"phase-gemm","workers":1,"fused":true}},"#,
+            // Backward key on the same legacy host.
+            r#""n4k4p2ci3co2@cpu8w2bwd":"#,
+            r#"{"seconds":3e-4,"strategy":{"axis":"phase-rows","formulation":"phase","workers":1}},"#,
+            // New-style SIMD host: `+avx2` fingerprint, explicit isa.
+            r#""n4k4p2ci3co2@cpu8+avx2w2":"#,
+            r#"{"seconds":4e-5,"strategy":{"axis":"phase-rows","formulation":"phase-gemm","workers":1,"isa":"avx2"}}"#,
+            r#"}}"#
+        ),
+    )
+    .unwrap();
+    let mut cache = TuningCache::load(&path).unwrap();
+    assert_eq!(cache.len(), 4, "all four key styles must load");
+
+    // The decoded strategies mean what they measured: a pre-SIMD GEMM
+    // verdict is the scalar microkernel, an explicit "isa" survives the
+    // roundtrip, and unknown lanes are a load error (not silent data).
+    use ukstc::conv::simd::Isa;
+    use ukstc::util::json;
+    let legacy = json::parse(
+        r#"{"axis":"phase-rows","formulation":"phase-gemm","workers":1}"#,
+    )
+    .unwrap();
+    assert_eq!(
+        ExecStrategy::from_json(&legacy),
+        Some(ExecStrategy::serial_gemm().with_isa(Isa::Scalar))
+    );
+    let tagged = json::parse(
+        r#"{"axis":"phase-rows","formulation":"phase-gemm","workers":2,"isa":"avx2"}"#,
+    )
+    .unwrap();
+    assert_eq!(
+        ExecStrategy::from_json(&tagged),
+        Some(ExecStrategy::gemm_parallel(2).with_isa(Isa::Avx2))
+    );
+
+    // A verdict recorded on *this* host coexists with all of the above
+    // under the current fingerprint (ISA-suffixed on SIMD hosts).
+    let p = ConvTransposeParams::new(4, 4, 2, 3, 2);
+    cache.put(&p, 2, ExecStrategy::serial_gemm(), 5e-5);
+    cache.save().unwrap();
+    let reloaded = TuningCache::load(&path).unwrap();
+    let hit = reloaded.get(&p, 2).expect("current-host entry must load back");
+    assert_eq!(hit.strategy, ExecStrategy::serial_gemm());
+    // 4 foreign entries + the current-host one — unless this host's
+    // fingerprint happens to be the hand-authored `cpu8` one, in which
+    // case the put overwrote the legacy entry.
+    assert!(reloaded.len() >= 4);
+
+    std::fs::remove_file(&path).ok();
+}
+
+#[test]
 fn malformed_cache_is_an_error_not_a_crash() {
     let dir = std::env::temp_dir().join(format!("ukstc-tune-bad-{}", std::process::id()));
     std::fs::create_dir_all(&dir).unwrap();
