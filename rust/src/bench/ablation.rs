@@ -44,6 +44,7 @@ use crate::conv::simd::Isa;
 use crate::conv::{conventional, dilated, flops, im2col, unified, ConvTransposeParams};
 use crate::models::zoo::GanModel;
 use crate::models::{Generator, TrainStep};
+use crate::obs::{registry, trace};
 use crate::tensor::{Feature, FeatureBatch, Kernel};
 use crate::tune::{ExecStrategy, MeasureBudget, ParAxis, Tuner, WallClockMeasurer};
 use crate::util::json::Json;
@@ -640,6 +641,71 @@ pub fn training_step(cfg: &BenchConfig) -> Vec<Entry> {
     vec![direct, gemm]
 }
 
+/// Ablation 11: span-recorder overhead A/B (ISSUE 8 acceptance) — the
+/// planned serial forward with tracing disabled vs enabled.  The
+/// disabled row is the baseline the <1% budget is judged against; the
+/// enabled row prices the two clock reads + ring push per span.
+pub fn tracing_overhead(cfg: &BenchConfig) -> Vec<Entry> {
+    let model = GanModel::smallest();
+    let mut rng = Rng::seeded(0xB0);
+    let gen = Generator::random(model, &mut rng);
+    let mut scratch = gen.scratch();
+    let z: Vec<f32> = (0..gen.model.z_dim()).map(|_| rng.normal_f32()).collect();
+    let was_enabled = trace::enabled();
+    trace::disable();
+    let off = Entry::measure(
+        format!("planned forward ({}, tracing off)", model.name()),
+        cfg,
+        || gen.forward_with(&z, Algorithm::Unified, Lane::Serial, &mut scratch),
+    );
+    trace::enable();
+    let on = Entry::measure(
+        format!("planned forward ({}, tracing on)", model.name()),
+        cfg,
+        || gen.forward_with(&z, Algorithm::Unified, Lane::Serial, &mut scratch),
+    );
+    if !was_enabled {
+        trace::disable();
+        trace::clear();
+    }
+    vec![off, on]
+}
+
+/// The `observability` section of the `BENCH_*.json` snapshot: a traced
+/// forward of `model` (DC-GAN in the CLI) rolled up per (name, lane),
+/// the process-wide registry snapshot, and the ablation-11 overhead A/B
+/// — per-phase attribution in machine-readable form, not just
+/// end-to-end wall clock.
+pub fn observability_json(model: GanModel, cfg: &BenchConfig) -> Json {
+    let overhead = tracing_overhead(cfg);
+    let mut rng = Rng::seeded(0xB1);
+    let gen = Generator::random(model, &mut rng);
+    let mut scratch = gen.scratch();
+    let z: Vec<f32> = (0..gen.model.z_dim()).map(|_| rng.normal_f32()).collect();
+    let was_enabled = trace::enabled();
+    trace::enable();
+    trace::clear();
+    let _ = gen.forward_with(&z, Algorithm::Unified, Lane::Serial, &mut scratch);
+    if !was_enabled {
+        trace::disable();
+    }
+    let spans = trace::drain();
+    let overhead_objs = overhead
+        .iter()
+        .map(|e| {
+            let mut o = BTreeMap::new();
+            o.insert("name".to_string(), Json::Str(e.name.clone()));
+            o.insert("seconds".to_string(), Json::Num(e.seconds));
+            Json::Obj(o)
+        })
+        .collect();
+    let mut doc = BTreeMap::new();
+    doc.insert("trace_rollup".to_string(), trace::rollup_json(&spans));
+    doc.insert("registry".to_string(), registry::global().json_snapshot());
+    doc.insert("tracing_overhead".to_string(), Json::Arr(overhead_objs));
+    Json::Obj(doc)
+}
+
 /// Serialize ablation 10 plus the `training_step` column into the
 /// `BENCH_*.json` snapshot document (what `ukstc ablation --json PATH`
 /// writes): stable key order, seconds + speedups, no derived columns
@@ -732,6 +798,10 @@ pub fn run_all(cfg: &BenchConfig) {
     print_entries(
         "Training step — direct vs phase-GEMM backward (smallest Table-4 model)",
         &training_step(cfg),
+    );
+    print_entries(
+        "Ablation 11 — span-recorder overhead (planned forward, off vs on)",
+        &tracing_overhead(cfg),
     );
 }
 
@@ -847,6 +917,33 @@ mod tests {
             panic!("missing training_step array");
         };
         assert_eq!(ts.len(), 2);
+    }
+
+    #[test]
+    fn observability_snapshot_has_rollup_registry_and_overhead() {
+        // Serializes with the obs::trace unit tests — both toggle the
+        // process-wide recorder flag.
+        let _gate = trace::test_gate().lock().unwrap();
+        let doc = observability_json(GanModel::smallest(), &quick());
+        assert!(!trace::enabled(), "tracing must be restored to off");
+        let text = doc.to_string_compact();
+        let parsed = crate::util::json::parse(&text).unwrap();
+        let Some(Json::Arr(rollup)) = parsed.get("trace_rollup") else {
+            panic!("missing trace_rollup array");
+        };
+        // The traced DC-GAN forward yields at least the four layer
+        // spans plus the projection and the model-level span.
+        let names: Vec<&str> = rollup
+            .iter()
+            .filter_map(|r| r.get("name").and_then(Json::as_str))
+            .collect();
+        assert!(names.contains(&"layer.forward"), "{names:?}");
+        assert!(names.contains(&"gen.forward"), "{names:?}");
+        assert!(parsed.get("registry").and_then(|r| r.get("counters")).is_some());
+        let Some(Json::Arr(overhead)) = parsed.get("tracing_overhead") else {
+            panic!("missing tracing_overhead array");
+        };
+        assert_eq!(overhead.len(), 2);
     }
 
     #[test]

@@ -261,6 +261,11 @@ fn gemm_packed_with(
     k: usize,
     n: usize,
 ) {
+    // Registry handle cached in a Lazy so the steady-state cost is one
+    // relaxed fetch_add (the name lookup allocates; warmup pays it).
+    static PACKED_CALLS: once_cell::sync::Lazy<std::sync::Arc<crate::obs::registry::Counter>> =
+        once_cell::sync::Lazy::new(|| crate::obs::registry::counter("gemm.packed_calls"));
+    PACKED_CALLS.inc();
     let pnr = simd::panel_width();
     debug_assert!(uk.kernel.is_none() || uk.nr == pnr, "panel width mismatch");
     assert_eq!(a.len(), m * k, "gemm_packed: A size mismatch");

@@ -73,6 +73,7 @@
 //! pins the lane to [`ExecStrategy::isa`] so tuned verdicts mean what
 //! they measured.
 
+use crate::obs::trace;
 use crate::tensor::{Feature, FeatureBatch, Kernel, SubKernel};
 use crate::tune::space::{ExecStrategy, Formulation, ParAxis};
 use crate::util::threadpool;
@@ -451,7 +452,8 @@ impl ConvTransposePlan {
         let cin = self.params.cin;
         let cout = self.params.cout;
         let (slab_area, phase_area) = buf.split_at_mut(self.slab_floats);
-        for pp in &self.phases {
+        for (pi, pp) in self.phases.iter().enumerate() {
+            let _phase_span = trace::span("conv.phase", "direct", trace::NONE, pi as u32);
             build_slab_view(
                 x,
                 n_in,
@@ -642,7 +644,8 @@ impl ConvTransposePlan {
         let cout = self.params.cout;
         let (slab_area, rest) = buf.split_at_mut(self.slab_floats);
         let (phase_area, patch_area) = rest.split_at_mut(self.phase_floats);
-        for pp in &self.phases {
+        for (pi, pp) in self.phases.iter().enumerate() {
+            let _phase_span = trace::span("conv.phase", isa.gemm_lane_tag(), trace::NONE, pi as u32);
             let slab = &mut slab_area[pp.slab_off..pp.slab_off + pp.slab_len];
             build_slab_view(x, n_in, n_in, cin, &pp.geom, slab);
             let sub = &self.seg.subs[pp.geom.sub];
@@ -1074,6 +1077,7 @@ impl ConvTransposePlan {
         scratch: &mut Scratch,
         out: &mut FeatureBatch,
     ) {
+        let _span = trace::span("conv.forward_batch", strategy.lane_tag(), trace::NONE, trace::NONE);
         match strategy.formulation {
             Formulation::PhaseDecomposed => {
                 if strategy.workers <= 1 {
@@ -1131,6 +1135,7 @@ impl ConvTransposePlan {
         scratch: &mut Scratch,
         out: &mut Feature,
     ) {
+        let _span = trace::span("conv.forward", strategy.lane_tag(), trace::NONE, trace::NONE);
         match strategy.formulation {
             Formulation::PhaseDecomposed => {
                 if strategy.workers <= 1 {
@@ -1923,6 +1928,7 @@ impl ConvTransposePlan {
         dx: &mut Feature,
         dk: &mut Kernel,
     ) {
+        let _span = trace::span("conv.backward", strategy.lane_tag(), trace::NONE, trace::NONE);
         self.check_backward_shapes(dy, dx);
         self.check_backward_weight_shapes((x.h, x.w, x.c), (dy.h, dy.w, dy.c), dk);
         let total = self.scratch_floats_backward_fused();
@@ -1962,6 +1968,7 @@ impl ConvTransposePlan {
         dx: &mut FeatureBatch,
         dk: &mut Kernel,
     ) {
+        let _span = trace::span("conv.backward_batch", strategy.lane_tag(), trace::NONE, trace::NONE);
         assert_eq!(x.n, dy.n, "plan: batch size mismatch");
         self.check_backward_batch_shapes(dy, dx);
         self.check_backward_weight_shapes((x.h, x.w, x.c), (dy.h, dy.w, dy.c), dk);

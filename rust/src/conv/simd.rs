@@ -92,6 +92,17 @@ impl Isa {
         }
     }
 
+    /// Trace-lane tag for phase-GEMM spans (`obs::trace`): the GEMM
+    /// family plus the dispatched microkernel, e.g. `gemm/avx2`.
+    pub fn gemm_lane_tag(self) -> &'static str {
+        match self {
+            Isa::Scalar => "gemm/scalar",
+            Isa::Avx2 => "gemm/avx2",
+            Isa::Avx512 => "gemm/avx512",
+            Isa::Neon => "gemm/neon",
+        }
+    }
+
     /// Native register-tile geometry `(mr, nr)` of the lane's kernel.
     pub fn tile(self) -> (usize, usize) {
         match self {

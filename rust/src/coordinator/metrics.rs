@@ -1,11 +1,27 @@
 //! Serving metrics: counters + latency histograms with cheap recording
 //! on the hot path and consistent snapshots for reporting.
+//!
+//! Every recording call is lock-free on the counter stores: the
+//! batch-size distribution is a fixed array of `AtomicU64` sized by the
+//! lane's `max_batch` at construction, so [`Metrics::record_batch`] is
+//! one relaxed `fetch_add` (it used to take a `Mutex<Vec<u64>>` and
+//! possibly resize it mid-serve).  Only the latency histograms keep a
+//! mutex, and those are uncontended per lane.
+//!
+//! `Metrics` also implements [`Collector`], so a serving lane registered
+//! with `obs::registry` exports its snapshot through the process-wide
+//! registry (`serve.<model>.*` samples in `ukstc metrics`).
 
 use std::sync::atomic::{AtomicU64, Ordering};
 use std::sync::Mutex;
 use std::time::Instant;
 
+use crate::obs::registry::Collector;
 use crate::util::stats::LatencyHistogram;
+
+/// Default batch-size distribution width when no policy is given —
+/// comfortably above every `BatchPolicy::max_batch` in the repo.
+pub const DEFAULT_MAX_BATCH: usize = 64;
 
 /// Aggregated service metrics (one per model lane).
 #[derive(Debug)]
@@ -20,7 +36,10 @@ pub struct Metrics {
     /// log-spaced latency buckets).  Batch count, mean and quantiles
     /// are all derived from this one store — operators see whether
     /// `BatchPolicy` actually forms batches for the fused lane.
-    batch_size_counts: Mutex<Vec<u64>>,
+    /// Fixed-size and atomic: recording is one relaxed `fetch_add`,
+    /// never a lock; sizes beyond the construction-time cap clamp into
+    /// the top slot.
+    batch_size_counts: Box<[AtomicU64]>,
     queue_hist: Mutex<LatencyHistogram>,
     total_hist: Mutex<LatencyHistogram>,
 }
@@ -32,13 +51,22 @@ impl Default for Metrics {
 }
 
 impl Metrics {
+    /// Metrics with the [`DEFAULT_MAX_BATCH`] distribution width.
     pub fn new() -> Metrics {
+        Self::for_max_batch(DEFAULT_MAX_BATCH)
+    }
+
+    /// Metrics whose batch-size distribution covers sizes
+    /// `0..=max_batch` exactly (the coordinator passes its
+    /// `BatchPolicy::max_batch`).
+    pub fn for_max_batch(max_batch: usize) -> Metrics {
+        let slots = max_batch.max(1) + 1;
         Metrics {
             started: Instant::now(),
             submitted: AtomicU64::new(0),
             rejected: AtomicU64::new(0),
             completed: AtomicU64::new(0),
-            batch_size_counts: Mutex::new(Vec::new()),
+            batch_size_counts: (0..slots).map(|_| AtomicU64::new(0)).collect(),
             queue_hist: Mutex::new(LatencyHistogram::new()),
             total_hist: Mutex::new(LatencyHistogram::new()),
         }
@@ -53,11 +81,8 @@ impl Metrics {
     }
 
     pub fn record_batch(&self, size: usize) {
-        let mut counts = self.batch_size_counts.lock().unwrap();
-        if counts.len() <= size {
-            counts.resize(size + 1, 0);
-        }
-        counts[size] += 1;
+        let idx = size.min(self.batch_size_counts.len() - 1);
+        self.batch_size_counts[idx].fetch_add(1, Ordering::Relaxed);
     }
 
     /// Exact quantile of the recorded batch sizes (0 when none yet).
@@ -87,7 +112,11 @@ impl Metrics {
         let completed = self.completed.load(Ordering::Relaxed);
         let qh = self.queue_hist.lock().unwrap();
         let th = self.total_hist.lock().unwrap();
-        let sizes = self.batch_size_counts.lock().unwrap();
+        let sizes: Vec<u64> = self
+            .batch_size_counts
+            .iter()
+            .map(|c| c.load(Ordering::Relaxed))
+            .collect();
         let elapsed = self.started.elapsed().as_secs_f64();
         let batches: u64 = sizes.iter().sum();
         let size_sum: u64 = sizes
@@ -118,6 +147,27 @@ impl Metrics {
             total_p95_s: th.quantile(0.95),
             total_p99_s: th.quantile(0.99),
         }
+    }
+}
+
+impl Collector for Metrics {
+    fn collect(&self) -> Vec<(String, f64)> {
+        let s = self.snapshot();
+        vec![
+            ("submitted".to_string(), s.submitted as f64),
+            ("rejected".to_string(), s.rejected as f64),
+            ("completed".to_string(), s.completed as f64),
+            ("batches".to_string(), s.batches as f64),
+            ("mean_batch_size".to_string(), s.mean_batch_size),
+            ("batch_p50".to_string(), s.batch_p50),
+            ("batch_p95".to_string(), s.batch_p95),
+            ("throughput_rps".to_string(), s.throughput_rps),
+            ("queue_p50_s".to_string(), s.queue_p50_s),
+            ("queue_p95_s".to_string(), s.queue_p95_s),
+            ("total_p50_s".to_string(), s.total_p50_s),
+            ("total_p95_s".to_string(), s.total_p95_s),
+            ("total_p99_s".to_string(), s.total_p99_s),
+        ]
     }
 }
 
@@ -220,5 +270,37 @@ mod tests {
         m.record_submit();
         m.record_completion(0.0, 0.001);
         assert!(m.snapshot().summary().contains("req/s"));
+    }
+
+    #[test]
+    fn batch_sizes_beyond_cap_clamp_into_top_slot() {
+        let m = Metrics::for_max_batch(4);
+        m.record_batch(3);
+        m.record_batch(100); // clamps to slot 4
+        let s = m.snapshot();
+        assert_eq!(s.batches, 2);
+        assert!((s.mean_batch_size - 3.5).abs() < 1e-12);
+        assert_eq!(s.batch_p95, 4.0);
+    }
+
+    #[test]
+    fn collector_exports_snapshot_figures() {
+        let m = Metrics::new();
+        m.record_submit();
+        m.record_batch(2);
+        m.record_completion(0.001, 0.002);
+        let samples = m.collect();
+        let get = |k: &str| {
+            samples
+                .iter()
+                .find(|(name, _)| name == k)
+                .map(|(_, v)| *v)
+                .unwrap()
+        };
+        assert_eq!(get("submitted"), 1.0);
+        assert_eq!(get("completed"), 1.0);
+        assert_eq!(get("batches"), 1.0);
+        assert_eq!(get("mean_batch_size"), 2.0);
+        assert!(get("total_p50_s") > 0.0);
     }
 }

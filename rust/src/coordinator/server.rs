@@ -167,7 +167,13 @@ impl Builder {
                 anyhow::bail!("duplicate backend for model '{name}'");
             }
             let queue = Arc::new(BoundedQueue::new(self.queue_capacity));
-            let metrics = Arc::new(Metrics::new());
+            let metrics = Arc::new(Metrics::for_max_batch(self.policy.max_batch));
+            // Weak registration: the lane's metrics show up in the
+            // process-wide registry (`serve.<model>.*`) for as long as
+            // the coordinator lives, and vanish with it.
+            let weak: std::sync::Weak<dyn crate::obs::registry::Collector> =
+                Arc::downgrade(&metrics);
+            crate::obs::registry::register_collector(&format!("serve.{name}"), weak);
             let mut workers = Vec::with_capacity(self.workers_per_model);
             for w in 0..self.workers_per_model {
                 let (q, b, m, p) = (

@@ -33,7 +33,15 @@ pub fn worker_loop(
         let size = batch.len();
         metrics.record_batch(size);
         let latents: Vec<Vec<f32>> = batch.iter().map(|e| e.request.latent.clone()).collect();
-        let images = backend.generate(&latents);
+        let images = {
+            let _span = crate::obs::trace::span(
+                "serve.batch",
+                "backend",
+                crate::obs::trace::NONE,
+                crate::obs::trace::NONE,
+            );
+            backend.generate(&latents)
+        };
         debug_assert_eq!(images.len(), size);
         let service_s = formed_at.elapsed().as_secs_f64();
         for (env, image) in batch.into_iter().zip(images) {

@@ -21,6 +21,8 @@
 //! * [`coordinator`] — serving layer: router, batcher, workers, metrics
 //! * [`tune`] — per-layer execution-strategy autotuner with a
 //!   persisted tuning cache
+//! * [`obs`] — observability: span tracing (chrome://tracing export,
+//!   flame tables) and the process-wide perf-counter registry
 //! * [`bench`] — benchmark harness regenerating every paper table
 //! * [`util`] — offline-image substrates: JSON, RNG, CLI, stats,
 //!   thread pool, property-testing
@@ -62,6 +64,7 @@ pub mod bench;
 pub mod conv;
 pub mod coordinator;
 pub mod models;
+pub mod obs;
 pub mod runtime;
 pub mod tensor;
 pub mod tune;

@@ -9,19 +9,25 @@
 //! ukstc ablation                     # design-choice ablations
 //! ukstc tune [--model M] ...         # autotune per-layer strategies
 //! ukstc serve [--config F] ...       # run the serving coordinator demo
+//! ukstc trace forward|train|serve    # span-trace a workload → chrome://tracing JSON
+//! ukstc metrics [--json]             # dump the process-wide perf-counter registry
 //! ukstc info                         # model zoo + analytic summaries
 //! ```
 
 use std::sync::Arc;
 
 use ukstc::bench::{ablation, report, serving, table2, table3, table4, BenchConfig};
+use ukstc::conv::parallel::{Algorithm, Lane};
 use ukstc::conv::simd::Isa;
 use ukstc::coordinator::backend::RustBackend;
-use ukstc::coordinator::{Coordinator, CoordinatorConfig};
-use ukstc::models::{GanModel, Generator};
+use ukstc::coordinator::batcher::BatchPolicy;
+use ukstc::coordinator::{Coordinator, CoordinatorConfig, GenRequest};
+use ukstc::models::{GanModel, Generator, TrainStep};
+use ukstc::obs::{registry, trace as obs_trace};
 use ukstc::runtime::{Engine, PjrtBackend};
 use ukstc::tune::{cache, MeasureBudget, Tuner, TuningCache, WallClockMeasurer};
 use ukstc::util::cli::{Args, Command};
+use ukstc::util::json::Json;
 use ukstc::util::logging;
 use ukstc::util::rng::Rng;
 use ukstc::util::threadpool;
@@ -31,6 +37,7 @@ use ukstc::workload::generator::poisson_trace;
 
 fn main() {
     logging::init();
+    obs_trace::init_from_env();
     let args: Vec<String> = std::env::args().skip(1).collect();
     let sub = args.first().map(String::as_str).unwrap_or("help");
     let rest = args.get(1..).unwrap_or(&[]).to_vec();
@@ -130,7 +137,15 @@ fn dispatch(sub: &str, rest: &[String]) -> anyhow::Result<()> {
                     "Training step — direct vs phase-GEMM backward (smallest Table-4 model)",
                     &train,
                 );
-                let doc = ablation::backward_snapshot_json(&rows, &train);
+                let mut doc = ablation::backward_snapshot_json(&rows, &train);
+                if let Json::Obj(map) = &mut doc {
+                    // Observability section: span roll-up + registry +
+                    // tracing-overhead A/B (ISSUE 8).
+                    map.insert(
+                        "observability".to_string(),
+                        ablation::observability_json(GanModel::DcGan, &cfg),
+                    );
+                }
                 std::fs::write(path, doc.to_string_compact())
                     .map_err(|e| anyhow::anyhow!("writing {path}: {e}"))?;
                 println!("\nwrote {path}");
@@ -163,6 +178,8 @@ fn dispatch(sub: &str, rest: &[String]) -> anyhow::Result<()> {
             tune(&a)
         }
         "serve" => serve(rest),
+        "trace" => cmd_trace(rest),
+        "metrics" => cmd_metrics(rest),
         "serve-ab" => {
             let cmd = Command::new(
                 "serve-ab",
@@ -370,6 +387,166 @@ fn tune(a: &Args) -> anyhow::Result<()> {
     Ok(())
 }
 
+fn parse_model(name: &str) -> anyhow::Result<GanModel> {
+    match name {
+        "smallest" => Ok(GanModel::smallest()),
+        _ => GanModel::from_name(name)
+            .ok_or_else(|| anyhow::anyhow!("unknown model '{name}'")),
+    }
+}
+
+/// One in-process serving burst against a fresh coordinator, so the
+/// serving counters (`serve.<model>.*`) and the worker's `serve.batch`
+/// spans have data.  Returns the still-running coordinator: its
+/// metrics are registered with a `Weak`, so callers keep it alive
+/// until after any registry dump.
+fn serve_burst(model: GanModel, requests: usize) -> anyhow::Result<Coordinator> {
+    let backend = RustBackend::new(model, Algorithm::Unified, Lane::Serial, 0x5EED, 8);
+    let coord = Coordinator::builder()
+        .queue_capacity(requests.max(16))
+        .workers_per_model(2)
+        .batch_policy(BatchPolicy {
+            max_batch: 8,
+            max_delay: std::time::Duration::from_millis(2),
+        })
+        .register(Arc::new(backend))
+        .start()?;
+    let mut rng = Rng::seeded(0x5EED);
+    let mut pending = Vec::new();
+    for i in 0..requests {
+        let mut latent = vec![0.0f32; model.z_dim()];
+        rng.fill_normal(&mut latent);
+        let req = GenRequest::new(i as u64, model.name().to_string(), latent);
+        pending.push(coord.submit_blocking(req)?);
+    }
+    for rx in pending {
+        let _ = rx.recv();
+    }
+    Ok(coord)
+}
+
+/// `ukstc trace`: record spans around one workload, write the
+/// chrome://tracing JSON, and print the flame table plus a coverage
+/// check (per-layer spans vs the end-to-end span).
+fn cmd_trace(rest: &[String]) -> anyhow::Result<()> {
+    let cmd = Command::new(
+        "trace",
+        "trace one workload (forward|train|serve) → chrome://tracing JSON + flame table",
+    )
+    .opt("model", "dcgan|artgan|gpgan|ebgan|smallest", Some("dcgan"))
+    .opt("iters", "traced iterations (forward/train) or requests (serve)", Some("2"))
+    .opt("out", "chrome://tracing JSON output path", Some("trace.json"))
+    .opt("capacity", "per-thread span-ring capacity (spans)", None);
+    let a = cmd.parse(rest)?;
+    let workload = a.positional.first().map(String::as_str).unwrap_or("forward");
+    let model = parse_model(a.get_or("model", "dcgan"))?;
+    let iters = a.get_usize("iters", 2)?.max(1);
+    match a.get_usize("capacity", 0)? {
+        0 => obs_trace::enable(),
+        cap => obs_trace::enable_with_capacity(cap),
+    }
+    obs_trace::clear();
+    match workload {
+        "forward" => {
+            let mut rng = Rng::seeded(0xACE5);
+            let generator = Generator::random(model, &mut rng);
+            let mut z = vec![0.0f32; model.z_dim()];
+            rng.fill_normal(&mut z);
+            let mut scratch = generator.scratch();
+            for _ in 0..iters {
+                std::hint::black_box(generator.forward_with(
+                    &z,
+                    Algorithm::Unified,
+                    Lane::Serial,
+                    &mut scratch,
+                ));
+            }
+        }
+        "train" => {
+            let mut rng = Rng::seeded(0xACE5);
+            let generator = Generator::random(model, &mut rng);
+            let mut step = TrainStep::new(generator, &mut rng, 1e-3);
+            for _ in 0..iters {
+                std::hint::black_box(step.step());
+            }
+        }
+        "serve" => {
+            drop(serve_burst(model, iters.max(8))?);
+        }
+        other => anyhow::bail!("unknown workload '{other}' (forward|train|serve)"),
+    }
+    let spans = obs_trace::drain();
+    let dropped = obs_trace::dropped();
+    obs_trace::disable();
+    let out = a.get_or("out", "trace.json");
+    std::fs::write(out, obs_trace::chrome_trace(&spans).to_string_compact())
+        .map_err(|e| anyhow::anyhow!("writing {out}: {e}"))?;
+    let rows: Vec<Vec<String>> = obs_trace::flame_table(&spans)
+        .into_iter()
+        .map(|r| {
+            vec![
+                r.name.to_string(),
+                r.lane.to_string(),
+                r.count.to_string(),
+                timing::fmt_duration(r.total_s),
+                timing::fmt_duration(r.self_s),
+            ]
+        })
+        .collect();
+    report::print_table(
+        &format!("Flame table — {} {} ({} spans)", model.name(), workload, spans.len()),
+        &["span", "lane", "count", "total", "self"],
+        &rows,
+    );
+    // Coverage: the per-layer spans (plus the dense projection) should
+    // account for nearly all of the enclosing end-to-end span — a gap
+    // means un-instrumented time (ISSUE 8 acceptance: within 10%).
+    let layers = obs_trace::total_seconds(&spans, "layer.forward")
+        + obs_trace::total_seconds(&spans, "layer.backward")
+        + obs_trace::total_seconds(&spans, "gen.project");
+    let e2e = obs_trace::total_seconds(&spans, "gen.forward")
+        + obs_trace::total_seconds(&spans, "gen.forward_batch")
+        + obs_trace::total_seconds(&spans, "train.step");
+    if e2e > 0.0 {
+        println!(
+            "\ncoverage: layer spans {} / end-to-end {} = {:.1}%",
+            timing::fmt_duration(layers),
+            timing::fmt_duration(e2e),
+            100.0 * layers / e2e
+        );
+    }
+    if dropped > 0 {
+        println!("note: {dropped} spans dropped (ring full) — raise --capacity");
+    }
+    println!("wrote {out} ({} spans)", spans.len());
+    Ok(())
+}
+
+/// `ukstc metrics`: run a small in-process serving burst so the
+/// counters have data, then dump the process-wide registry.
+fn cmd_metrics(rest: &[String]) -> anyhow::Result<()> {
+    let cmd = Command::new(
+        "metrics",
+        "populate and dump the process-wide perf-counter registry",
+    )
+    .opt("model", "dcgan|artgan|gpgan|ebgan|smallest", Some("smallest"))
+    .opt("requests", "serving-burst size used to populate the counters", Some("16"))
+    .flag("json", "emit the registry as JSON instead of Prometheus text");
+    let a = cmd.parse(rest)?;
+    let model = parse_model(a.get_or("model", "smallest"))?;
+    let requests = a.get_usize("requests", 16)?.max(1);
+    let coord = serve_burst(model, requests)?;
+    if a.has_flag("json") {
+        println!("{}", registry::global().json_snapshot().to_string_compact());
+    } else {
+        print!("{}", registry::global().prometheus_text());
+    }
+    // The lane's collector is Weak-registered: keep the coordinator
+    // alive until after the dump.
+    drop(coord);
+    Ok(())
+}
+
 /// `ukstc serve`: run the coordinator on a Poisson trace, native or
 /// PJRT backend, from a JSON config or flags.
 fn serve(rest: &[String]) -> anyhow::Result<()> {
@@ -485,5 +662,7 @@ subcommands:
   tune       autotune per-layer execution strategies (persists a tuning cache)
   serve      run the serving coordinator on a Poisson trace
   serve-ab   serving matrix: unified planned/unplanned vs conventional
+  trace      span-trace a workload (forward|train|serve) → chrome://tracing JSON
+  metrics    dump the process-wide perf-counter registry (Prometheus text or --json)
   info       model zoo + analytic memory summaries
 common bench flags: --scale F --warmup N --iters N --workers N --image-size N";

@@ -16,6 +16,7 @@
 use crate::conv::parallel::{run_seg, Algorithm, Lane};
 use crate::conv::plan::{ConvTransposePlan, Scratch};
 use crate::conv::segregation::Segregated;
+use crate::obs::trace;
 use crate::tensor::{ops, Feature, FeatureBatch, Kernel};
 use crate::tune::space::ExecStrategy;
 use crate::util::rng::Rng;
@@ -76,6 +77,21 @@ impl LayerWeights {
     /// The pre-segregated kernel (owned by the plan).
     pub fn seg(&self) -> &Segregated {
         self.plan.seg()
+    }
+
+    /// Trace-lane tag of this layer's pinned forward strategy
+    /// (`direct` when none is pinned — the lane-driven dispatches all
+    /// run the direct formulation).
+    pub fn lane_tag(&self) -> &'static str {
+        self.strategy.as_ref().map_or("direct", ExecStrategy::lane_tag)
+    }
+
+    /// Trace-lane tag of the pinned backward strategy (`direct` when
+    /// unpinned, matching [`backward_with`](Self::backward_with)).
+    pub fn backward_lane_tag(&self) -> &'static str {
+        self.backward_strategy
+            .as_ref()
+            .map_or("direct", ExecStrategy::lane_tag)
     }
 
     /// One transpose conv under `alg`/`lane`.  The unified algorithm
@@ -294,6 +310,7 @@ impl Generator {
 
     /// Latent → first feature map (dense + ReLU).
     pub fn project(&self, z: &[f32]) -> Feature {
+        let _span = trace::span("gen.project", "dense", trace::NONE, trace::NONE);
         let spec0 = self.layers[0].spec;
         let (n0, c0) = (spec0.n_in, spec0.cin);
         let out_len = n0 * n0 * c0;
@@ -412,10 +429,16 @@ impl Generator {
         lane: Lane,
         scratch: &mut Scratch,
     ) -> Feature {
+        let _span = trace::span("gen.forward", "model", trace::NONE, trace::NONE);
         let mut x = self.project(z);
         let last = self.layers.len() - 1;
         for (i, lw) in self.layers.iter().enumerate() {
-            x = lw.apply(&x, alg, lane, scratch);
+            {
+                // Layer numbers follow Table 4 (the projection is layer 1).
+                let _layer_span =
+                    trace::span("layer.forward", lw.lane_tag(), (i + 2) as u32, trace::NONE);
+                x = lw.apply(&x, alg, lane, scratch);
+            }
             ops::add_bias_inplace(&mut x, &lw.bias);
             if i == last {
                 ops::tanh_inplace(&mut x);
@@ -450,6 +473,7 @@ impl Generator {
         lane: Lane,
         scratch: &mut Scratch,
     ) -> FeatureBatch {
+        let _span = trace::span("gen.forward_batch", "model", trace::NONE, trace::NONE);
         let spec0 = self.layers[0].spec;
         let (n0, c0) = (spec0.n_in, spec0.cin);
         let n = latents.len();
@@ -461,7 +485,11 @@ impl Generator {
         let last = self.layers.len() - 1;
         for (i, lw) in self.layers.iter().enumerate() {
             let mut y = lw.plan.new_batch_output(n);
-            lw.apply_batch(&x, lane, scratch, &mut y);
+            {
+                let _layer_span =
+                    trace::span("layer.forward", lw.lane_tag(), (i + 2) as u32, trace::NONE);
+                lw.apply_batch(&x, lane, scratch, &mut y);
+            }
             x = y;
             ops::add_bias_batch_inplace(&mut x, &lw.bias);
             if i == last {

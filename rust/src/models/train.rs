@@ -24,6 +24,7 @@
 
 use crate::conv::parallel::{Algorithm, Lane};
 use crate::conv::plan::Scratch;
+use crate::obs::trace as obs_trace;
 use crate::tensor::{ops, Feature, Kernel};
 use crate::util::rng::Rng;
 
@@ -63,12 +64,22 @@ impl Generator {
     /// arithmetic is exactly [`forward_with`](Generator::forward_with);
     /// the trace stores one post-activation clone per layer.
     pub fn forward_trace(&self, z: &[f32], scratch: &mut Scratch) -> ForwardTrace {
+        let _span = obs_trace::span("gen.forward", "model", obs_trace::NONE, obs_trace::NONE);
         let x0 = self.project(z);
         let mut acts = Vec::with_capacity(self.layers.len());
         let last = self.layers.len() - 1;
         let mut x = x0.clone();
         for (i, lw) in self.layers.iter().enumerate() {
-            x = lw.apply(&x, Algorithm::Unified, Lane::Serial, scratch);
+            {
+                // Table-4 numbering: the projection is layer 1.
+                let _layer_span = obs_trace::span(
+                    "layer.forward",
+                    lw.lane_tag(),
+                    (i + 2) as u32,
+                    obs_trace::NONE,
+                );
+                x = lw.apply(&x, Algorithm::Unified, Lane::Serial, scratch);
+            }
             ops::add_bias_inplace(&mut x, &lw.bias);
             if i == last {
                 ops::tanh_inplace(&mut x);
@@ -92,14 +103,22 @@ impl Generator {
         dy_out: &Feature,
         scratch: &mut Scratch,
     ) -> GeneratorGrads {
+        let _span = obs_trace::span("gen.backward", "model", obs_trace::NONE, obs_trace::NONE);
         assert_eq!(trace.acts.len(), self.layers.len(), "trace/layer mismatch");
         let last = self.layers.len() - 1;
         let mut layer_grads: Vec<Option<(Kernel, Vec<f32>)>> = vec![None; self.layers.len()];
         let mut dy = dy_out.clone();
         for i in (0..self.layers.len()).rev() {
             let x = if i == 0 { &trace.x0 } else { &trace.acts[i - 1] };
+            let _layer_span = obs_trace::span(
+                "layer.backward",
+                self.layers[i].backward_lane_tag(),
+                (i + 2) as u32,
+                obs_trace::NONE,
+            );
             let (dx, dk, db) =
                 self.layers[i].backward_with(x, &trace.acts[i], &dy, i == last, scratch);
+            drop(_layer_span);
             layer_grads[i] = Some((dk, db));
             dy = dx;
         }
@@ -237,16 +256,30 @@ impl TrainStep {
     /// Returns the loss *before* the update, so a strictly decreasing
     /// sequence of returns certifies the gradients point downhill.
     pub fn step(&mut self) -> f32 {
-        let trace = self.gen.forward_trace(&self.z, &mut self.scratch);
+        let _span = obs_trace::span("train.step", "model", obs_trace::NONE, obs_trace::NONE);
+        let trace = {
+            let _s = obs_trace::span("train.forward", "model", obs_trace::NONE, obs_trace::NONE);
+            self.gen.forward_trace(&self.z, &mut self.scratch)
+        };
         let y = trace.output();
-        let loss = self.mse(y);
-        let n = y.data.len() as f32;
-        let mut dy = Feature::zeros(y.h, y.w, y.c);
-        for ((d, &a), &b) in dy.data.iter_mut().zip(&y.data).zip(&self.target.data) {
-            *d = 2.0 * (a - b) / n;
+        let (loss, dy) = {
+            let _s = obs_trace::span("train.loss", "model", obs_trace::NONE, obs_trace::NONE);
+            let loss = self.mse(y);
+            let n = y.data.len() as f32;
+            let mut dy = Feature::zeros(y.h, y.w, y.c);
+            for ((d, &a), &b) in dy.data.iter_mut().zip(&y.data).zip(&self.target.data) {
+                *d = 2.0 * (a - b) / n;
+            }
+            (loss, dy)
+        };
+        let grads = {
+            let _s = obs_trace::span("train.backward", "model", obs_trace::NONE, obs_trace::NONE);
+            self.gen.backward_trace(&trace, &dy, &mut self.scratch)
+        };
+        {
+            let _s = obs_trace::span("train.sgd", "model", obs_trace::NONE, obs_trace::NONE);
+            self.gen.sgd_step(&grads, self.lr);
         }
-        let grads = self.gen.backward_trace(&trace, &dy, &mut self.scratch);
-        self.gen.sgd_step(&grads, self.lr);
         loss
     }
 }

@@ -1,0 +1,31 @@
+//! Observability: span tracing and the process-wide metrics registry
+//! (DESIGN.md §Observability).
+//!
+//! Two halves, both zero-dependency and allocation-disciplined:
+//!
+//! * [`trace`] — a span recorder for the execution hot paths.  Spans
+//!   are `{name, lane, layer, phase, t_start, t_end}` records written
+//!   into preallocated per-thread ring buffers.  Recording is gated by
+//!   one process-wide flag (`UKSTC_TRACE` / [`trace::enable`]); when
+//!   the flag is off, opening a span is a single relaxed atomic load —
+//!   no clock read, no allocation, no shared-cache-line write — so the
+//!   planned execution lanes keep their zero-alloc steady-state
+//!   contract (`tests/plan_alloc.rs` Part 6) and pay well under 1% on
+//!   the forward path (ablation 11).  Exporters produce
+//!   chrome://tracing JSON and a self-time flame table.
+//! * [`registry`] — a process-wide counter/gauge/histogram registry
+//!   with Prometheus-style text exposition and a hand-rolled JSON
+//!   snapshot (`util::json`; the crate carries no serde).  The serving
+//!   coordinator's per-lane [`Metrics`](crate::coordinator::metrics::Metrics)
+//!   export through it as a [`registry::Collector`], and the tuner /
+//!   phase-GEMM engine feed counters into it directly.
+//!
+//! Naming scheme: dot-separated `subsystem.metric` keys
+//! (`tune.candidates_measured`, `gemm.packed_calls`,
+//! `serve.<model>.completed`); span names are `subsystem.operation`
+//! (`gen.forward`, `layer.forward`, `conv.phase`, `train.step`,
+//! `serve.batch`) with the executing lane (`direct`, `gemm/avx2`, …)
+//! carried as a tag, never encoded into the name.
+
+pub mod registry;
+pub mod trace;

@@ -1,0 +1,362 @@
+//! Process-wide perf-counter registry (DESIGN.md §Observability).
+//!
+//! Counters, gauges and [`LatencyHistogram`]s registered by name, plus
+//! [`Collector`]s — live metric sources (the serving coordinator's
+//! per-lane [`Metrics`](crate::coordinator::metrics::Metrics)) that are sampled
+//! at exposition time through a `Weak` reference, so a dropped lane
+//! disappears from the output instead of pinning its metrics alive.
+//!
+//! Recording is lock-free (`Relaxed` atomics) for counters and gauges;
+//! histograms share the mutex discipline of
+//! [`LatencyHistogram`]-in-`Metrics`.  Registration allocates (name
+//! lookup), so hot call sites cache their `Arc<Counter>` in a
+//! `Lazy` static and pay one `fetch_add` per event thereafter.
+//!
+//! Two expositions, both hand-rolled (the crate carries no serde):
+//! [`Registry::prometheus_text`] (text format: `# TYPE` headers,
+//! `ukstc_`-prefixed sanitized names, summary quantiles for
+//! histograms) and [`Registry::json_snapshot`] (`util::json`).
+
+use std::collections::BTreeMap;
+use std::fmt::Write as _;
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::{Arc, Mutex, Weak};
+
+use once_cell::sync::Lazy;
+
+use crate::util::json::Json;
+use crate::util::stats::LatencyHistogram;
+
+/// Monotone event counter (relaxed `fetch_add` on record).
+#[derive(Debug, Default)]
+pub struct Counter(AtomicU64);
+
+impl Counter {
+    pub fn inc(&self) {
+        self.add(1);
+    }
+
+    pub fn add(&self, n: u64) {
+        self.0.fetch_add(n, Ordering::Relaxed);
+    }
+
+    pub fn get(&self) -> u64 {
+        self.0.load(Ordering::Relaxed)
+    }
+}
+
+/// Last-write-wins f64 gauge (stored as bits in an atomic).
+#[derive(Debug, Default)]
+pub struct Gauge(AtomicU64);
+
+impl Gauge {
+    pub fn set(&self, v: f64) {
+        self.0.store(v.to_bits(), Ordering::Relaxed);
+    }
+
+    pub fn get(&self) -> f64 {
+        f64::from_bits(self.0.load(Ordering::Relaxed))
+    }
+}
+
+/// A live metric source sampled at exposition time.  Implementors
+/// return `(suffix, value)` pairs; the registry prefixes each with the
+/// name the collector was registered under.
+pub trait Collector: Send + Sync {
+    fn collect(&self) -> Vec<(String, f64)>;
+}
+
+/// Named metric store.  Use [`global`] (and the module-level shorthands
+/// [`counter`]/[`gauge`]/[`histogram`]/[`register_collector`]) for the
+/// process-wide instance; constructing a private `Registry` is for
+/// tests.
+#[derive(Default)]
+pub struct Registry {
+    counters: Mutex<BTreeMap<String, Arc<Counter>>>,
+    gauges: Mutex<BTreeMap<String, Arc<Gauge>>>,
+    hists: Mutex<BTreeMap<String, Arc<Mutex<LatencyHistogram>>>>,
+    collectors: Mutex<BTreeMap<String, Weak<dyn Collector>>>,
+}
+
+impl Registry {
+    /// Get-or-register the counter `name`.
+    pub fn counter(&self, name: &str) -> Arc<Counter> {
+        self.counters
+            .lock()
+            .unwrap()
+            .entry(name.to_string())
+            .or_default()
+            .clone()
+    }
+
+    /// Get-or-register the gauge `name`.
+    pub fn gauge(&self, name: &str) -> Arc<Gauge> {
+        self.gauges
+            .lock()
+            .unwrap()
+            .entry(name.to_string())
+            .or_default()
+            .clone()
+    }
+
+    /// Get-or-register the latency histogram `name`.
+    pub fn histogram(&self, name: &str) -> Arc<Mutex<LatencyHistogram>> {
+        self.hists
+            .lock()
+            .unwrap()
+            .entry(name.to_string())
+            .or_insert_with(|| Arc::new(Mutex::new(LatencyHistogram::new())))
+            .clone()
+    }
+
+    /// Register (or replace) the collector exported under `name`.  The
+    /// registry holds only a `Weak`; when the collector's owner drops
+    /// it, its samples vanish from the expositions.
+    pub fn register_collector(&self, name: &str, c: Weak<dyn Collector>) {
+        self.collectors
+            .lock()
+            .unwrap()
+            .insert(name.to_string(), c);
+    }
+
+    /// Flat point-in-time view: every counter, gauge, histogram
+    /// quantile (`.p50`/`.p95`/`.p99`/`.count`) and live collector
+    /// sample (prefixed `<collector>.`), keyed by dotted name.
+    pub fn samples(&self) -> BTreeMap<String, f64> {
+        let mut out = BTreeMap::new();
+        for (name, c) in self.counters.lock().unwrap().iter() {
+            out.insert(name.clone(), c.get() as f64);
+        }
+        for (name, g) in self.gauges.lock().unwrap().iter() {
+            out.insert(name.clone(), g.get());
+        }
+        for (name, h) in self.hists.lock().unwrap().iter() {
+            let h = h.lock().unwrap();
+            out.insert(format!("{name}.p50"), h.quantile(0.50));
+            out.insert(format!("{name}.p95"), h.quantile(0.95));
+            out.insert(format!("{name}.p99"), h.quantile(0.99));
+            out.insert(format!("{name}.count"), h.count() as f64);
+        }
+        let mut collectors = self.collectors.lock().unwrap();
+        collectors.retain(|_, w| w.strong_count() > 0);
+        for (prefix, w) in collectors.iter() {
+            if let Some(c) = w.upgrade() {
+                for (suffix, v) in c.collect() {
+                    out.insert(format!("{prefix}.{suffix}"), v);
+                }
+            }
+        }
+        out
+    }
+
+    /// Prometheus text exposition: counters as `counter`, gauges and
+    /// collector samples as `gauge`, histograms as `summary` quantiles.
+    /// Metric names are `ukstc_`-prefixed with non-alphanumerics
+    /// folded to `_`.
+    pub fn prometheus_text(&self) -> String {
+        let mut s = String::new();
+        for (name, c) in self.counters.lock().unwrap().iter() {
+            let m = metric_name(name);
+            let _ = writeln!(s, "# TYPE {m} counter");
+            let _ = writeln!(s, "{m} {}", c.get());
+        }
+        for (name, g) in self.gauges.lock().unwrap().iter() {
+            let m = metric_name(name);
+            let _ = writeln!(s, "# TYPE {m} gauge");
+            let _ = writeln!(s, "{m} {}", g.get());
+        }
+        for (name, h) in self.hists.lock().unwrap().iter() {
+            let m = metric_name(name);
+            let h = h.lock().unwrap();
+            let _ = writeln!(s, "# TYPE {m} summary");
+            for (q, label) in [(0.50, "0.5"), (0.95, "0.95"), (0.99, "0.99")] {
+                let _ = writeln!(s, "{m}{{quantile=\"{label}\"}} {}", h.quantile(q));
+            }
+            let _ = writeln!(s, "{m}_count {}", h.count());
+        }
+        let mut collectors = self.collectors.lock().unwrap();
+        collectors.retain(|_, w| w.strong_count() > 0);
+        for (prefix, w) in collectors.iter() {
+            if let Some(c) = w.upgrade() {
+                for (suffix, v) in c.collect() {
+                    let m = metric_name(&format!("{prefix}.{suffix}"));
+                    let _ = writeln!(s, "# TYPE {m} gauge");
+                    let _ = writeln!(s, "{m} {v}");
+                }
+            }
+        }
+        s
+    }
+
+    /// JSON snapshot (`util::json`, no serde): `{"counters": {...},
+    /// "gauges": {...}, "histograms": {name: {p50, p95, p99, count}},
+    /// "collected": {...}}`.
+    pub fn json_snapshot(&self) -> Json {
+        let mut counters = BTreeMap::new();
+        for (name, c) in self.counters.lock().unwrap().iter() {
+            counters.insert(name.clone(), Json::Num(c.get() as f64));
+        }
+        let mut gauges = BTreeMap::new();
+        for (name, g) in self.gauges.lock().unwrap().iter() {
+            gauges.insert(name.clone(), Json::Num(g.get()));
+        }
+        let mut hists = BTreeMap::new();
+        for (name, h) in self.hists.lock().unwrap().iter() {
+            let h = h.lock().unwrap();
+            let mut m = BTreeMap::new();
+            m.insert("p50".to_string(), Json::Num(h.quantile(0.50)));
+            m.insert("p95".to_string(), Json::Num(h.quantile(0.95)));
+            m.insert("p99".to_string(), Json::Num(h.quantile(0.99)));
+            m.insert("count".to_string(), Json::Num(h.count() as f64));
+            hists.insert(name.clone(), Json::Obj(m));
+        }
+        let mut collected = BTreeMap::new();
+        let mut collectors = self.collectors.lock().unwrap();
+        collectors.retain(|_, w| w.strong_count() > 0);
+        for (prefix, w) in collectors.iter() {
+            if let Some(c) = w.upgrade() {
+                for (suffix, v) in c.collect() {
+                    collected.insert(format!("{prefix}.{suffix}"), Json::Num(v));
+                }
+            }
+        }
+        let mut doc = BTreeMap::new();
+        doc.insert("counters".to_string(), Json::Obj(counters));
+        doc.insert("gauges".to_string(), Json::Obj(gauges));
+        doc.insert("histograms".to_string(), Json::Obj(hists));
+        doc.insert("collected".to_string(), Json::Obj(collected));
+        Json::Obj(doc)
+    }
+}
+
+/// Prometheus-legal metric name: `ukstc_` prefix, non-alphanumerics
+/// folded to `_`.
+fn metric_name(name: &str) -> String {
+    let mut s = String::with_capacity(name.len() + 6);
+    s.push_str("ukstc_");
+    for ch in name.chars() {
+        s.push(if ch.is_ascii_alphanumeric() { ch } else { '_' });
+    }
+    s
+}
+
+static GLOBAL: Lazy<Registry> = Lazy::new(Registry::default);
+
+/// The process-wide registry every subsystem records into.
+pub fn global() -> &'static Registry {
+    &GLOBAL
+}
+
+/// Get-or-register a counter in the [`global`] registry.
+pub fn counter(name: &str) -> Arc<Counter> {
+    GLOBAL.counter(name)
+}
+
+/// Get-or-register a gauge in the [`global`] registry.
+pub fn gauge(name: &str) -> Arc<Gauge> {
+    GLOBAL.gauge(name)
+}
+
+/// Get-or-register a histogram in the [`global`] registry.
+pub fn histogram(name: &str) -> Arc<Mutex<LatencyHistogram>> {
+    GLOBAL.histogram(name)
+}
+
+/// Register a collector in the [`global`] registry.
+pub fn register_collector(name: &str, c: Weak<dyn Collector>) {
+    GLOBAL.register_collector(name, c)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn counters_and_gauges_roundtrip() {
+        let r = Registry::default();
+        let c = r.counter("test.events");
+        c.inc();
+        c.add(4);
+        // Re-registration returns the same underlying counter.
+        assert_eq!(r.counter("test.events").get(), 5);
+        let g = r.gauge("test.depth");
+        g.set(2.5);
+        assert_eq!(r.gauge("test.depth").get(), 2.5);
+        let s = r.samples();
+        assert_eq!(s["test.events"], 5.0);
+        assert_eq!(s["test.depth"], 2.5);
+    }
+
+    #[test]
+    fn histogram_quantiles_in_samples() {
+        let r = Registry::default();
+        let h = r.histogram("test.latency");
+        for _ in 0..100 {
+            h.lock().unwrap().record(0.010);
+        }
+        let s = r.samples();
+        assert_eq!(s["test.latency.count"], 100.0);
+        assert!(s["test.latency.p50"] >= 0.010);
+        assert!(s["test.latency.p99"] >= s["test.latency.p50"]);
+    }
+
+    #[test]
+    fn prometheus_text_format() {
+        let r = Registry::default();
+        r.counter("tune.cache_hits").add(3);
+        r.gauge("pool.workers").set(8.0);
+        r.histogram("serve.latency").lock().unwrap().record(0.001);
+        let text = r.prometheus_text();
+        assert!(text.contains("# TYPE ukstc_tune_cache_hits counter"), "{text}");
+        assert!(text.contains("ukstc_tune_cache_hits 3"), "{text}");
+        assert!(text.contains("# TYPE ukstc_pool_workers gauge"), "{text}");
+        assert!(text.contains("ukstc_pool_workers 8"), "{text}");
+        assert!(text.contains("# TYPE ukstc_serve_latency summary"), "{text}");
+        assert!(text.contains("ukstc_serve_latency{quantile=\"0.95\"}"), "{text}");
+        assert!(text.contains("ukstc_serve_latency_count 1"), "{text}");
+    }
+
+    #[test]
+    fn json_snapshot_parses_and_carries_sections() {
+        let r = Registry::default();
+        r.counter("a.b").inc();
+        r.gauge("c.d").set(1.5);
+        r.histogram("e.f").lock().unwrap().record(0.5);
+        let text = r.json_snapshot().to_string_compact();
+        let back = crate::util::json::parse(&text).unwrap();
+        assert_eq!(back.get("counters").unwrap().get("a.b").unwrap().as_f64(), Some(1.0));
+        assert_eq!(back.get("gauges").unwrap().get("c.d").unwrap().as_f64(), Some(1.5));
+        let hist = back.get("histograms").unwrap().get("e.f").unwrap();
+        assert_eq!(hist.get("count").unwrap().as_f64(), Some(1.0));
+        assert!(hist.get("p50").unwrap().as_f64().unwrap() >= 0.5);
+    }
+
+    #[test]
+    fn collector_prefixes_and_weak_lifecycle() {
+        struct Fake;
+        impl Collector for Fake {
+            fn collect(&self) -> Vec<(String, f64)> {
+                vec![("completed".to_string(), 7.0), ("rejected".to_string(), 1.0)]
+            }
+        }
+        let r = Registry::default();
+        let fake: Arc<Fake> = Arc::new(Fake);
+        let weak: Weak<Fake> = Arc::downgrade(&fake);
+        r.register_collector("serve.dcgan", weak);
+        let s = r.samples();
+        assert_eq!(s["serve.dcgan.completed"], 7.0);
+        assert_eq!(s["serve.dcgan.rejected"], 1.0);
+        assert!(r.prometheus_text().contains("ukstc_serve_dcgan_completed 7"));
+        // Dropping the owner removes the samples (weak registration).
+        drop(fake);
+        assert!(!r.samples().contains_key("serve.dcgan.completed"));
+        assert!(!r.prometheus_text().contains("serve_dcgan"));
+    }
+
+    #[test]
+    fn global_registry_is_shared() {
+        counter("test.global.shared").add(2);
+        assert_eq!(global().counter("test.global.shared").get(), 2);
+        assert!(global().samples().contains_key("test.global.shared"));
+    }
+}

@@ -151,10 +151,12 @@ impl WallClockMeasurer {
         if self.prune {
             if let Some(best) = incumbent {
                 if probe > PRUNE_FACTOR * best {
+                    crate::obs::registry::counter("tune.candidates_pruned").inc();
                     return None;
                 }
             }
         }
+        crate::obs::registry::counter("tune.candidates_measured").inc();
         let b = self.budget;
         let m = if b.max_iters < 3 {
             // measure_for insists on ≥3 samples; honor 1/2-trial budgets.

@@ -217,6 +217,17 @@ impl ExecStrategy {
         self.workers == 1
     }
 
+    /// Trace-lane tag (`obs::trace`): which executing lane a span under
+    /// this strategy should be attributed to.  `&'static str` so span
+    /// recording stays allocation-free.
+    pub fn lane_tag(&self) -> &'static str {
+        match self.formulation {
+            Formulation::PhaseDecomposed => "direct",
+            Formulation::PerElement => "per-element",
+            Formulation::PhaseGemm => self.isa.gemm_lane_tag(),
+        }
+    }
+
     /// Compact display name, e.g. `phase/par4/rows`,
     /// `phase-gemm/serial/avx2` or `phase-gemm/par4/fused`.  The
     /// microkernel axis appears only on non-scalar GEMM lanes (before

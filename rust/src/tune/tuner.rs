@@ -171,6 +171,7 @@ impl Tuner {
         measurer: &mut M,
     ) -> TunedPlan {
         if let Some(entry) = cache.get_batch(plan.params(), self.space_workers(), self.batch) {
+            crate::obs::registry::counter("tune.cache_hits").inc();
             return TunedPlan {
                 params: *plan.params(),
                 strategy: entry.strategy,
@@ -179,6 +180,7 @@ impl Tuner {
                 cached: true,
             };
         }
+        crate::obs::registry::counter("tune.cache_misses").inc();
         let tuned = self.tune_layer(plan, measurer);
         cache.put_with_candidates_batch(
             plan.params(),
@@ -245,6 +247,7 @@ impl Tuner {
         measurer: &mut M,
     ) -> TunedPlan {
         if let Some(entry) = cache.get_backward(plan.params(), self.space_workers()) {
+            crate::obs::registry::counter("tune.cache_hits").inc();
             return TunedPlan {
                 params: *plan.params(),
                 strategy: entry.strategy,
@@ -253,6 +256,7 @@ impl Tuner {
                 cached: true,
             };
         }
+        crate::obs::registry::counter("tune.cache_misses").inc();
         let tuned = self.tune_layer_backward(plan, measurer);
         cache.put_backward_with_candidates(
             plan.params(),

@@ -1,7 +1,23 @@
 //! Minimal leveled logger backend for the `log` facade.
 //!
-//! Stderr sink with RFC-ish timestamps relative to process start; level
-//! from `UKSTC_LOG` (error|warn|info|debug|trace, default info).
+//! Stderr sink with RFC-ish timestamps relative to process start.
+//! `UKSTC_LOG` follows the familiar `env_logger` grammar, reduced to
+//! what an offline binary needs: a default level plus per-target
+//! overrides, e.g.
+//!
+//! ```text
+//! UKSTC_LOG=info                       # default level only
+//! UKSTC_LOG=debug                      # everything at debug
+//! UKSTC_LOG=info,ukstc::tune=debug     # tuner chatty, rest at info
+//! UKSTC_LOG=warn,ukstc::coordinator=trace,ukstc::conv=debug
+//! ```
+//!
+//! An override applies to the named target and everything below it at a
+//! module boundary: `ukstc::tune` matches `ukstc::tune` and
+//! `ukstc::tune::measure`, but not `ukstc::tuner2`.  The most specific
+//! (longest) matching override wins.  Unknown level words fall back to
+//! `info` rather than erroring — a typo in an env var should never kill
+//! the process.
 
 use std::sync::Once;
 use std::time::Instant;
@@ -11,11 +27,92 @@ use once_cell::sync::Lazy;
 
 static START: Lazy<Instant> = Lazy::new(Instant::now);
 
-struct StderrLogger;
+/// Parsed `UKSTC_LOG` directive set: a default level plus per-target
+/// overrides, longest target first so the first match is the winner.
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub struct Spec {
+    default: LevelFilter,
+    /// `(target, level)`, sorted by descending target length.
+    overrides: Vec<(String, LevelFilter)>,
+}
+
+fn parse_level(word: &str) -> Option<LevelFilter> {
+    match word {
+        "off" => Some(LevelFilter::Off),
+        "error" => Some(LevelFilter::Error),
+        "warn" => Some(LevelFilter::Warn),
+        "info" => Some(LevelFilter::Info),
+        "debug" => Some(LevelFilter::Debug),
+        "trace" => Some(LevelFilter::Trace),
+        _ => None,
+    }
+}
+
+impl Spec {
+    /// Parse a `UKSTC_LOG` value.  Comma-separated directives; a bare
+    /// level sets the default, `target=level` adds an override.
+    /// Malformed pieces are ignored (the default stays `info`).
+    pub fn parse(s: &str) -> Spec {
+        let mut default = LevelFilter::Info;
+        let mut overrides: Vec<(String, LevelFilter)> = Vec::new();
+        for piece in s.split(',') {
+            let piece = piece.trim();
+            if piece.is_empty() {
+                continue;
+            }
+            match piece.split_once('=') {
+                None => {
+                    if let Some(lvl) = parse_level(piece) {
+                        default = lvl;
+                    }
+                }
+                Some((target, word)) => {
+                    if let Some(lvl) = parse_level(word.trim()) {
+                        let target = target.trim();
+                        if !target.is_empty() {
+                            overrides.push((target.to_string(), lvl));
+                        }
+                    }
+                }
+            }
+        }
+        // Longest target first: the most specific override wins.
+        overrides.sort_by(|a, b| b.0.len().cmp(&a.0.len()).then_with(|| a.0.cmp(&b.0)));
+        Spec { default, overrides }
+    }
+
+    /// The effective level for one log target.
+    pub fn level_for(&self, target: &str) -> LevelFilter {
+        for (t, lvl) in &self.overrides {
+            // Module-boundary prefix match: `ukstc::tune` covers
+            // `ukstc::tune::measure` but not `ukstc::tuner2`.
+            if target == t || (target.starts_with(t) && target[t.len()..].starts_with("::")) {
+                return *lvl;
+            }
+        }
+        self.default
+    }
+
+    /// The loosest level any directive allows — what
+    /// `log::set_max_level` gets, so the facade's early-out stays
+    /// correct while per-target filtering happens in [`log::Log::enabled`].
+    pub fn max(&self) -> LevelFilter {
+        self.overrides
+            .iter()
+            .map(|(_, l)| *l)
+            .chain(std::iter::once(self.default))
+            .max()
+            .unwrap_or(LevelFilter::Info)
+    }
+}
+
+struct StderrLogger {
+    spec: Spec,
+}
 
 impl log::Log for StderrLogger {
     fn enabled(&self, metadata: &Metadata) -> bool {
-        metadata.level() <= log::max_level()
+        metadata.level() <= self.spec.level_for(metadata.target())
     }
 
     fn log(&self, record: &Record) {
@@ -37,30 +134,76 @@ impl log::Log for StderrLogger {
 }
 
 static INIT: Once = Once::new();
-static LOGGER: StderrLogger = StderrLogger;
 
-/// Install the logger (idempotent).  Level from `UKSTC_LOG` env var.
+/// Install the logger (idempotent).  Directives from `UKSTC_LOG`.
 pub fn init() {
     INIT.call_once(|| {
         Lazy::force(&START);
-        let level = match std::env::var("UKSTC_LOG").as_deref() {
-            Ok("error") => LevelFilter::Error,
-            Ok("warn") => LevelFilter::Warn,
-            Ok("debug") => LevelFilter::Debug,
-            Ok("trace") => LevelFilter::Trace,
-            _ => LevelFilter::Info,
-        };
-        let _ = log::set_logger(&LOGGER);
-        log::set_max_level(level);
+        let spec = Spec::parse(&std::env::var("UKSTC_LOG").unwrap_or_default());
+        log::set_max_level(spec.max());
+        // Leaked once per process: `log::set_logger` wants 'static.
+        let logger: &'static StderrLogger = Box::leak(Box::new(StderrLogger { spec }));
+        let _ = log::set_logger(logger);
     });
 }
 
 #[cfg(test)]
 mod tests {
+    use super::*;
+
     #[test]
     fn init_idempotent() {
         super::init();
         super::init();
         log::info!("logger smoke test");
+    }
+
+    #[test]
+    fn bare_level_sets_default() {
+        let s = Spec::parse("debug");
+        assert_eq!(s.level_for("ukstc::conv"), LevelFilter::Debug);
+        assert_eq!(s.max(), LevelFilter::Debug);
+    }
+
+    #[test]
+    fn empty_and_garbage_fall_back_to_info() {
+        for raw in ["", "verbose", "=debug", "ukstc::tune=chatty"] {
+            let s = Spec::parse(raw);
+            assert_eq!(s.level_for("anything"), LevelFilter::Info, "raw={raw:?}");
+        }
+    }
+
+    #[test]
+    fn per_target_override_beats_default() {
+        let s = Spec::parse("info,ukstc::tune=debug");
+        assert_eq!(s.level_for("ukstc::tune"), LevelFilter::Debug);
+        assert_eq!(s.level_for("ukstc::tune::measure"), LevelFilter::Debug);
+        assert_eq!(s.level_for("ukstc::conv"), LevelFilter::Info);
+        // Module-boundary match only: no accidental prefix capture.
+        assert_eq!(s.level_for("ukstc::tuner2"), LevelFilter::Info);
+        assert_eq!(s.max(), LevelFilter::Debug);
+    }
+
+    #[test]
+    fn most_specific_override_wins() {
+        let s = Spec::parse("warn,ukstc=info,ukstc::tune=trace");
+        assert_eq!(s.level_for("ukstc::tune::space"), LevelFilter::Trace);
+        assert_eq!(s.level_for("ukstc::conv"), LevelFilter::Info);
+        assert_eq!(s.level_for("other_crate"), LevelFilter::Warn);
+        assert_eq!(s.max(), LevelFilter::Trace);
+    }
+
+    #[test]
+    fn off_silences_a_target() {
+        let s = Spec::parse("debug,ukstc::coordinator=off");
+        assert_eq!(s.level_for("ukstc::coordinator::worker"), LevelFilter::Off);
+        assert_eq!(s.max(), LevelFilter::Debug);
+    }
+
+    #[test]
+    fn whitespace_tolerated() {
+        let s = Spec::parse(" info , ukstc::tune = debug ");
+        assert_eq!(s.level_for("ukstc::tune"), LevelFilter::Debug);
+        assert_eq!(s.level_for("ukstc::conv"), LevelFilter::Info);
     }
 }

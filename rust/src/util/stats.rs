@@ -250,4 +250,75 @@ mod tests {
         a.merge(&b);
         assert_eq!(a.count(), 2);
     }
+
+    #[test]
+    fn histogram_empty_quantiles_are_zero() {
+        let h = LatencyHistogram::new();
+        assert_eq!(h.count(), 0);
+        for q in [0.0, 0.5, 0.95, 0.99, 1.0] {
+            assert_eq!(h.quantile(q), 0.0, "q={q}");
+        }
+    }
+
+    #[test]
+    fn histogram_single_sample_every_quantile_brackets_it() {
+        let mut h = LatencyHistogram::new();
+        h.record(0.00042);
+        assert_eq!(h.count(), 1);
+        // Every quantile lands on the one occupied bucket's upper
+        // bound: at least the sample, within one 1.2× bucket of it.
+        for q in [0.01, 0.5, 0.99, 1.0] {
+            let v = h.quantile(q);
+            assert!(v >= 0.00042 && v <= 0.00042 * 1.2, "q={q} v={v}");
+        }
+    }
+
+    #[test]
+    fn histogram_top_bucket_saturates_to_infinity() {
+        let mut h = LatencyHistogram::new();
+        h.record(1e9); // way past the 60s top finite bound
+        h.record(f64::INFINITY);
+        assert_eq!(h.count(), 2);
+        assert_eq!(h.quantile(0.99), f64::INFINITY);
+        // Sub-second samples still dominate the low quantiles.
+        for _ in 0..98 {
+            h.record(0.001);
+        }
+        assert!(h.quantile(0.5) < 0.002);
+        assert_eq!(h.quantile(1.0), f64::INFINITY);
+    }
+
+    #[test]
+    fn histogram_merge_equals_recording_everything_once() {
+        use crate::util::prop::{forall, Config};
+        // Buckets are fixed at construction, so merge must be *exactly*
+        // record-concatenation: same counts, same quantiles.
+        forall(Config::default().cases(50), "hist-merge-roundtrip", |rng| {
+            let na = rng.below(40);
+            let nb = rng.below(40);
+            let mut a = LatencyHistogram::new();
+            let mut b = LatencyHistogram::new();
+            let mut all = LatencyHistogram::new();
+            let mut sample = |rng: &mut crate::util::rng::Rng| {
+                // Spread across the full range, µs to beyond-top-bucket.
+                10f64.powf(rng.uniform() * 9.0 - 7.0)
+            };
+            for _ in 0..na {
+                let s = sample(rng);
+                a.record(s);
+                all.record(s);
+            }
+            for _ in 0..nb {
+                let s = sample(rng);
+                b.record(s);
+                all.record(s);
+            }
+            a.merge(&b);
+            let mut ok = a.count() == all.count();
+            for q in [0.25, 0.5, 0.9, 0.95, 0.99] {
+                ok &= a.quantile(q) == all.quantile(q);
+            }
+            ((na, nb), ok)
+        });
+    }
 }

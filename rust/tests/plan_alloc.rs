@@ -298,4 +298,61 @@ fn planned_path_is_zero_alloc_after_warmup() {
         .map(|(a, b)| (a - b).abs())
         .fold(0.0f32, f32::max);
     assert!(dk_err < 1e-4, "fused backward dk diverged after arena reuse");
+
+    // --- Part 6: the span recorder (ISSUE 8) preserves the contract.
+    // Every run path above now opens trace spans; parts 1–5 therefore
+    // already prove the *disabled* recorder adds no allocations.  Make
+    // that explicit, then prove the *enabled* recorder costs exactly
+    // one bounded per-thread setup and is allocation-free in steady
+    // state (the ring is preallocated and overwrites in place).
+    use ukstc::obs::trace;
+    assert!(!trace::enabled(), "tracing must start disabled in this binary");
+    let before = allocs();
+    for _ in 0..5 {
+        for ((x, plan, _), out) in cases.iter().zip(&mut outs) {
+            plan.run_with(&gemm, x, &mut scratch, out);
+        }
+    }
+    assert_eq!(
+        allocs(),
+        before,
+        "disabled tracing allocated on the instrumented run path"
+    );
+    // Enabled: the first recorded span on this thread builds its ring
+    // (Arc + preallocated slot Vec + drain-list registration) — a
+    // small one-time setup, nothing more.
+    trace::enable_with_capacity(64);
+    let before = allocs();
+    {
+        let (x, plan, _) = &cases[0];
+        plan.run_with(&gemm, x, &mut scratch, &mut outs[0]);
+    }
+    let setup = allocs() - before;
+    assert!(
+        setup <= 16,
+        "tracing-enabled first run should cost only the ring setup, got {setup} allocations"
+    );
+    // Steady state with tracing on: the ring fills, then overwrites
+    // oldest in place — zero heap allocations either way.
+    let before = allocs();
+    for _ in 0..5 {
+        for ((x, plan, _), out) in cases.iter().zip(&mut outs) {
+            plan.run_with(&gemm, x, &mut scratch, out);
+        }
+    }
+    assert_eq!(
+        allocs(),
+        before,
+        "enabled tracing allocated in steady state (warm ring)"
+    );
+    trace::disable();
+    let spans = trace::drain();
+    assert!(
+        spans.iter().any(|r| r.name == "conv.forward"),
+        "traced runs should have recorded conv.forward spans"
+    );
+    assert!(
+        spans.iter().any(|r| r.name == "conv.phase"),
+        "traced runs should have recorded per-phase spans"
+    );
 }
