@@ -34,12 +34,22 @@
 //!    whole forward→loss→backward→SGD step.  [`backward_snapshot_json`]
 //!    serializes this ablation into the committed `BENCH_*.json`
 //!    snapshots.
+//! 11. **Span-recorder overhead** (DESIGN.md §Observability): the
+//!    planned forward with tracing off vs on — prices the two clock
+//!    reads + ring push per span against the <1% budget.
+//! 12. **Reduced precision** (DESIGN.md §Reduced-Precision): the
+//!    planned serial phase-GEMM engine at f32/f16/bf16/int8 packed-B
+//!    storage, per Table-4 DC-GAN layer — latency, max-abs drift vs
+//!    the layer's f32 lane, and packed-operand bytes in one row.
+//!    [`precision_json`] serializes this ablation into the
+//!    `BENCH_*.json` snapshots.
 
 use std::collections::BTreeMap;
 
 use crate::conv::backward::{grad_input_unified, grad_kernel_unified};
 use crate::conv::parallel::{run, Algorithm, Lane};
 use crate::conv::plan::{ConvTransposePlan, Scratch};
+use crate::conv::quant::Precision;
 use crate::conv::simd::Isa;
 use crate::conv::{conventional, dilated, flops, im2col, unified, ConvTransposeParams};
 use crate::models::zoo::GanModel;
@@ -610,6 +620,121 @@ pub fn print_backward_planning(rows: &[BackwardRow]) {
     );
 }
 
+/// Ablation 12 (DESIGN.md §Reduced-Precision): the planned serial
+/// phase-GEMM engine at every storage precision, per Table-4 layer.
+/// Latency, max-abs drift against the layer's own f32 phase-GEMM
+/// output, and the packed-operand bytes at that precision land in one
+/// row — speed, accuracy, and footprint of the same lane, side by
+/// side.
+pub struct PrecisionRow {
+    pub layer: String,
+    pub precision: Precision,
+    pub entry: Entry,
+    /// Max |Δ| vs the f32 phase-GEMM output of the same layer and
+    /// input (0 for the f32 row itself).
+    pub max_abs: f64,
+    /// Plan-resident packed-B bytes at this precision
+    /// (`ConvTransposePlan::packed_operand_bytes`).
+    pub packed_bytes: usize,
+    pub macs: u64,
+}
+
+/// Measure the per-precision phase-GEMM lanes per layer of `model`
+/// (the printed ablation uses DC-GAN; tests use the lighter GP-GAN).
+pub fn precision_lanes(model: GanModel, cfg: &BenchConfig) -> Vec<PrecisionRow> {
+    let mut rng = Rng::seeded(0xFB);
+    let mut rows = Vec::new();
+    for spec in model.layers() {
+        let x = Feature::random(spec.n_in, spec.n_in, spec.cin, &mut rng);
+        let k = Kernel::random(spec.ksize, spec.cin, spec.cout, &mut rng);
+        let plan = ConvTransposePlan::new(spec.params(), &k);
+        let macs = flops::unified(plan.params());
+        let mut scratch = Scratch::for_plan(&plan);
+        let mut out = plan.new_output();
+        let mut reference = plan.new_output();
+        plan.run_gemm(&x, &mut scratch, &mut reference);
+        for p in Precision::ALL {
+            let pinned = ExecStrategy::serial_gemm().with_precision(p);
+            let entry = Entry::measure(format!("phase-gemm/{}", p.name()), cfg, || {
+                plan.run_with(&pinned, &x, &mut scratch, &mut out);
+                out.data[0]
+            })
+            .with_macs(macs);
+            let max_abs = f64::from(crate::tensor::ops::max_abs_diff(&reference, &out));
+            rows.push(PrecisionRow {
+                layer: spec.describe(),
+                precision: p,
+                entry,
+                max_abs,
+                packed_bytes: plan.packed_operand_bytes(p),
+                macs,
+            });
+        }
+    }
+    rows
+}
+
+/// Print the ablation-12 table (per-precision phase-GEMM lanes).
+pub fn print_precision_lanes(rows: &[PrecisionRow]) {
+    let mut f32_seconds = 0.0;
+    let table: Vec<Vec<String>> = rows
+        .iter()
+        .map(|r| {
+            if r.precision == Precision::F32 {
+                f32_seconds = r.entry.seconds;
+            }
+            vec![
+                r.layer.clone(),
+                r.precision.name().into(),
+                timing::fmt_duration(r.entry.seconds),
+                report::gflops_cell(r.macs, r.entry.seconds),
+                report::speedup(f32_seconds / r.entry.seconds),
+                format!("{:.3e}", r.max_abs),
+                r.packed_bytes.to_string(),
+            ]
+        })
+        .collect();
+    report::print_table(
+        "Ablation 12 — phase-GEMM storage precision (planned serial, Table-4 DC-GAN layers)",
+        &[
+            "layer",
+            "precision",
+            "median",
+            "GF/s",
+            "vs f32 lane",
+            "max-abs vs f32",
+            "packed B",
+        ],
+        &table,
+    );
+}
+
+/// The `precision` section of the `BENCH_*.json` snapshot: ablation 12
+/// serialized — one object per (layer, precision) with latency, drift
+/// and operand footprint, so the f16 2× / int8 4× packed-operand
+/// claims and the drift budgets are machine-checkable.
+pub fn precision_json(model: GanModel, cfg: &BenchConfig) -> Json {
+    let rows = precision_lanes(model, cfg)
+        .into_iter()
+        .map(|r| {
+            let mut o = BTreeMap::new();
+            o.insert("layer".to_string(), Json::Str(r.layer));
+            o.insert(
+                "precision".to_string(),
+                Json::Str(r.precision.name().to_string()),
+            );
+            o.insert("seconds".to_string(), Json::Num(r.entry.seconds));
+            o.insert("max_abs_vs_f32".to_string(), Json::Num(r.max_abs));
+            o.insert(
+                "packed_operand_bytes".to_string(),
+                Json::Num(r.packed_bytes as f64),
+            );
+            Json::Obj(o)
+        })
+        .collect();
+    Json::Arr(rows)
+}
+
 /// The `training_step` bench column: a full forward→MSE→backward→SGD
 /// step on the smallest Table-4 generator, direct vs phase-GEMM
 /// backward data-grad lanes ([`TrainStep`]).
@@ -803,6 +928,7 @@ pub fn run_all(cfg: &BenchConfig) {
         "Ablation 11 — span-recorder overhead (planned forward, off vs on)",
         &tracing_overhead(cfg),
     );
+    print_precision_lanes(&precision_lanes(GanModel::DcGan, cfg));
 }
 
 #[cfg(test)]
@@ -944,6 +1070,53 @@ mod tests {
             panic!("missing tracing_overhead array");
         };
         assert_eq!(overhead.len(), 2);
+    }
+
+    #[test]
+    fn precision_lanes_cover_stack() {
+        let rows = precision_lanes(GanModel::GpGan, &quick());
+        let layers = GanModel::GpGan.layers().len();
+        assert_eq!(rows.len(), Precision::ALL.len() * layers);
+        for chunk in rows.chunks(Precision::ALL.len()) {
+            // Rows come in ALL order per layer; the f32 row is the
+            // same lane as the reference, so its drift is exactly 0.
+            assert_eq!(chunk[0].precision, Precision::F32);
+            assert_eq!(chunk[0].max_abs, 0.0, "{}", chunk[0].layer);
+            for r in chunk {
+                assert!(r.entry.seconds > 0.0, "{}", r.layer);
+                assert!(r.max_abs.is_finite(), "{}", r.layer);
+                assert_eq!(r.entry.macs, Some(r.macs));
+            }
+            // Operand footprint must shrink with storage width: f16
+            // and bf16 share one u16 layout at half the f32 bytes or
+            // better, int8 at a quarter or better (QNR=8 padding can
+            // only help the quantized side; panel width ≥ QNR).
+            let f32b = chunk[0].packed_bytes;
+            assert_eq!(chunk[1].packed_bytes, chunk[2].packed_bytes);
+            assert!(f32b >= 2 * chunk[1].packed_bytes, "{}", chunk[0].layer);
+            assert!(f32b >= 4 * chunk[3].packed_bytes, "{}", chunk[0].layer);
+        }
+        print_precision_lanes(&rows);
+        // The snapshot section round-trips through the JSON layer.
+        let doc = precision_json(GanModel::GpGan, &quick());
+        let text = doc.to_string_compact();
+        let parsed = crate::util::json::parse(&text).unwrap();
+        let Json::Arr(items) = parsed else {
+            panic!("precision section must be an array");
+        };
+        assert_eq!(items.len(), rows.len());
+        assert_eq!(
+            items[0].get("precision").and_then(Json::as_str),
+            Some("f32")
+        );
+        assert!(items[0]
+            .get("max_abs_vs_f32")
+            .and_then(Json::as_f64)
+            .is_some());
+        assert!(items[0]
+            .get("packed_operand_bytes")
+            .and_then(Json::as_f64)
+            .is_some());
     }
 
     #[test]

@@ -43,11 +43,21 @@
 //! Accumulation order per output element is `kk` ascending — identical
 //! to the naive triple loop — but the *tiling* is still free to change
 //! which element a partial sum lands in when shapes are ragged, the
-//! vector lanes' FMA contracts the mul+add rounding, and future splits
-//! (multi-accumulator K, threaded K) would reassociate; callers
-//! therefore compare GEMM results with a 1e-4 tolerance, never
-//! bit-identity (DESIGN.md §GEMM-Execution).
+//! vector lanes' FMA contracts the mul+add rounding, and the x86 tiles
+//! run **split-K** (two K-interleaved accumulator chains summed at the
+//! epilogue, `conv::simd`), which reassociates; callers therefore
+//! compare GEMM results with a 1e-4 tolerance, never bit-identity
+//! (DESIGN.md §GEMM-Execution).
+//!
+//! **Reduced-precision panels** (DESIGN.md §Reduced-Precision): the
+//! quantized B panels pack through `conv::quant` at the fixed
+//! ISA-independent width [`quant::QNR`]; [`gemm_packed_q16`] /
+//! [`gemm_packed_q8`] are the quantized analogues of
+//! [`gemm_packed_isa`], dispatching to the AVX2 widening kernels when
+//! the host has them and to the bit-identical scalar references
+//! otherwise.
 
+use super::quant::{self, Precision};
 use super::simd::{self, Isa, Microkernel};
 
 /// Scalar register-tile rows (output rows accumulated at once).
@@ -322,6 +332,100 @@ fn gemm_packed_with(
         }
         k0 += KC;
     }
+}
+
+/// Quantized analogue of [`gemm_packed_isa`] for 16-bit-float
+/// operands: `C += A·B` with A the quantized im2col patch and B a
+/// panel packed by [`quant::pack_b_q16`] (width [`quant::QNR`],
+/// ISA-independent).  `precision` picks the decoder (`F16` or `Bf16` —
+/// anything else panics); any non-scalar `isa` requests the AVX2
+/// widening lane, which runs when the host has AVX2 (+F16C for f16)
+/// and degrades to the **bit-identical** scalar reference otherwise,
+/// so quantized strategies decoded from foreign-host caches stay
+/// runnable with unchanged results.
+pub fn gemm_packed_q16(
+    isa: Isa,
+    precision: Precision,
+    a: &[u16],
+    packed_b: &[u16],
+    c: &mut [f32],
+    m: usize,
+    k: usize,
+    n: usize,
+) {
+    assert_eq!(a.len(), m * k, "gemm_packed_q16: A size mismatch");
+    assert_eq!(
+        packed_b.len(),
+        quant::packed_qb_elems(k, n),
+        "gemm_packed_q16: packed B size mismatch"
+    );
+    assert_eq!(c.len(), m * n, "gemm_packed_q16: C size mismatch");
+    if m == 0 || n == 0 || k == 0 {
+        return;
+    }
+    #[cfg(not(target_arch = "x86_64"))]
+    let _ = isa; // no widening lanes off x86 yet — scalar reference runs
+    #[cfg(target_arch = "x86_64")]
+    {
+        if isa != Isa::Scalar {
+            match precision {
+                Precision::F16 if simd::quant_f16c_available() => {
+                    simd::gemm_q16_f16_avx2(a, packed_b, c, m, k, n);
+                    return;
+                }
+                Precision::Bf16 if simd::quant_avx2_available() => {
+                    simd::gemm_q16_bf16_avx2(a, packed_b, c, m, k, n);
+                    return;
+                }
+                _ => {}
+            }
+        }
+    }
+    let from_bits = match precision {
+        Precision::F16 => quant::f16_bits_to_f32 as fn(u16) -> f32,
+        Precision::Bf16 => quant::bf16_bits_to_f32,
+        p => panic!("gemm_packed_q16: {} is not a 16-bit precision", p.name()),
+    };
+    quant::gemm_q16_scalar(a, packed_b, from_bits, c, m, k, n)
+}
+
+/// Quantized analogue of [`gemm_packed_isa`] for int8 operands:
+/// `C += (a_scale·A) · (B ⊙ b_scales)` with B packed by
+/// [`quant::pack_b_q8`].  i32 accumulation is exact, so the AVX2 lane
+/// and the scalar reference are bit-identical unconditionally.
+#[allow(clippy::too_many_arguments)]
+pub fn gemm_packed_q8(
+    isa: Isa,
+    a: &[i8],
+    a_scale: f32,
+    packed_b: &[i8],
+    b_scales: &[f32],
+    c: &mut [f32],
+    m: usize,
+    k: usize,
+    n: usize,
+) {
+    assert_eq!(a.len(), m * k, "gemm_packed_q8: A size mismatch");
+    assert_eq!(
+        packed_b.len(),
+        quant::packed_qb_elems(k, n),
+        "gemm_packed_q8: packed B size mismatch"
+    );
+    assert_eq!(b_scales.len(), n, "gemm_packed_q8: one scale per column");
+    assert_eq!(c.len(), m * n, "gemm_packed_q8: C size mismatch");
+    if m == 0 || n == 0 || k == 0 {
+        return;
+    }
+    #[cfg(not(target_arch = "x86_64"))]
+    let _ = isa; // no widening lanes off x86 yet — scalar reference runs
+    #[cfg(target_arch = "x86_64")]
+    {
+        if isa != Isa::Scalar && simd::quant_avx2_available() {
+            simd::gemm_q8_avx2(a, a_scale, packed_b, b_scales, c, m, k, n);
+            return;
+        }
+    }
+    quant::gemm_q8_scalar(a, a_scale, packed_b, b_scales, c, m, k, n)
 }
 
 /// `c[m×n] += a[m×k] · b[k×n]`, row-major — packs `b` into a transient

@@ -13,6 +13,7 @@
 //!   Verified: N=224, P=2, C=3 → `1,827,900 B = 1.8279 MB` (decimal) ✓.
 
 use super::gemm::packed_b_floats;
+use super::quant::{packed_qb_elems, Precision};
 use super::unified::phase_geometries;
 use super::ConvTransposeParams;
 
@@ -124,6 +125,12 @@ pub struct PlannedScratch {
     /// Plan-resident packed GEMM operands (not arena scratch, but very
     /// much resident memory the old accounting ignored).
     pub packed_kernel_floats: usize,
+    /// Plan-resident quantized B-panel **elements** (sum over phases,
+    /// `Cout` padded to the fixed `QNR = 8` quant panel width).  One
+    /// element is 2 bytes for f16/bf16 storage and 1 byte for int8;
+    /// int8 per-column scales are plan metadata and excluded, matching
+    /// `ConvTransposePlan::packed_operand_bytes`.
+    pub packed_qpanel_elems: usize,
 }
 
 impl PlannedScratch {
@@ -159,7 +166,44 @@ impl PlannedScratch {
     /// the honest Table-5-style resident figure for one planned layer
     /// serving batches of `n`.
     pub fn peak_batch_bytes(&self, n: usize) -> usize {
-        (self.peak_batch_floats(n) + self.packed_kernel_floats) * F32
+        self.peak_batch_bytes_at(n, Precision::F32)
+    }
+
+    /// Packed-B operand bytes at `precision`: the resident weight-panel
+    /// footprint a deployment shipping only that precision holds.
+    /// Geometry-only twin of `ConvTransposePlan::packed_operand_bytes`
+    /// (pinned element-for-element by the `conv::memory` tests), so
+    /// `ukstc info` can print the f16 2× / int8 4× rows for
+    /// EB-GAN-sized layers without building the plan.
+    pub fn packed_operand_bytes(&self, precision: Precision) -> usize {
+        if precision.is_quantized() {
+            self.packed_qpanel_elems * precision.operand_bytes()
+        } else {
+            self.packed_kernel_floats * F32
+        }
+    }
+
+    /// Quantized-A arena bytes the reduced-precision lanes add on top
+    /// of the f32 arena at batch `n`: the im2col patch re-encoded at
+    /// the operand width (`Scratch::ensure_quant` sizing; zero for
+    /// f32, which quantizes nothing).
+    pub fn quant_arena_bytes(&self, n: usize, precision: Precision) -> usize {
+        if precision.is_quantized() {
+            n.max(1) * self.patch_floats * precision.operand_bytes()
+        } else {
+            0
+        }
+    }
+
+    /// [`peak_batch_bytes`](Self::peak_batch_bytes) at an explicit
+    /// execution precision: f32 peak arena + the quantized patch arena
+    /// + the packed operands at that precision.  (The f32 arena does
+    /// not shrink under quantized execution — im2col and accumulation
+    /// stay f32 — only the operand copies change width.)
+    pub fn peak_batch_bytes_at(&self, n: usize, precision: Precision) -> usize {
+        self.peak_batch_floats(n) * F32
+            + self.quant_arena_bytes(n, precision)
+            + self.packed_operand_bytes(precision)
     }
 }
 
@@ -171,6 +215,7 @@ pub fn planned_scratch(p: &ConvTransposeParams) -> PlannedScratch {
         max_phase_floats: 0,
         patch_floats: 0,
         packed_kernel_floats: 0,
+        packed_qpanel_elems: 0,
     };
     for g in phase_geometries(p.n_in, p.n_k, p.padding) {
         let slab_h = g.rows.1 - g.rows.0;
@@ -186,6 +231,7 @@ pub fn planned_scratch(p: &ConvTransposeParams) -> PlannedScratch {
         s.max_phase_floats = s.max_phase_floats.max(phase);
         s.patch_floats = s.patch_floats.max(g.n_rows * g.n_cols * k);
         s.packed_kernel_floats += packed_b_floats(k, p.cout);
+        s.packed_qpanel_elems += packed_qb_elems(k, p.cout);
     }
     s
 }
@@ -308,6 +354,14 @@ mod tests {
                 plan.packed_operand_floats(),
                 "packed n={n}"
             );
+            for prec in Precision::ALL {
+                assert_eq!(
+                    s.packed_operand_bytes(prec),
+                    plan.packed_operand_bytes(prec),
+                    "packed {} n={n}",
+                    prec.name()
+                );
+            }
             for b in [1usize, 4, 8] {
                 assert_eq!(s.gemm_batch_floats(b), plan.scratch_floats_gemm_batch(b));
                 assert_eq!(s.batch_par_floats(b), plan.scratch_floats_batch_par(b));
@@ -335,6 +389,53 @@ mod tests {
         let s = planned_scratch(&p);
         assert!(s.peak_batch_bytes(8) > s.peak_batch_bytes(1));
         assert_eq!(footprint_planned(&p, 0), footprint_planned(&p, 1));
+    }
+
+    #[test]
+    fn per_precision_packed_operand_reduction_on_table4() {
+        // The ISSUE acceptance bar: on every Table-4 layer (with the
+        // models' real channel trajectories, not the C_out = 1 savings
+        // rows), f16/bf16 packed operands are at least 2x smaller than
+        // f32 and int8 at least 4x.  Structurally guaranteed because
+        // the f32 panels pad C_out to the active ISA width (>= 8) at
+        // 4 B/elem while qpanels pad to QNR = 8 at 2 B / 1 B — but the
+        // claim ships as a test, not an argument.  Geometry-only, so
+        // the EB-GAN stack costs nothing to check.
+        let dcgan = [(4, 1024, 512), (8, 512, 256), (16, 256, 128), (32, 128, 3)];
+        let ebgan = [
+            (4, 2048, 1024),
+            (8, 1024, 512),
+            (16, 512, 256),
+            (32, 256, 128),
+            (64, 128, 64),
+            (128, 64, 3),
+        ];
+        for (n, cin, cout) in dcgan.iter().chain(&ebgan) {
+            let p = ConvTransposeParams::gan_layer().with_io(*n, *cin, *cout);
+            let s = planned_scratch(&p);
+            let f32b = s.packed_operand_bytes(Precision::F32);
+            let f16b = s.packed_operand_bytes(Precision::F16);
+            let i8b = s.packed_operand_bytes(Precision::Int8);
+            assert_eq!(f16b, s.packed_operand_bytes(Precision::Bf16));
+            assert!(f32b >= 2 * f16b, "f16 2x on N={n} Cout={cout}");
+            assert!(f32b >= 4 * i8b, "int8 4x on N={n} Cout={cout}");
+            // Peak-scratch rows: f32 row is the legacy figure; the
+            // quantized rows add exactly the re-encoded patch arena on
+            // top of the (unchanged) f32 arena + smaller operands.
+            for b in [1usize, 8] {
+                assert_eq!(s.peak_batch_bytes_at(b, Precision::F32), s.peak_batch_bytes(b));
+                for prec in Precision::QUANTIZED {
+                    assert_eq!(
+                        s.peak_batch_bytes_at(b, prec),
+                        s.peak_batch_floats(b) * F32
+                            + b * s.patch_floats * prec.operand_bytes()
+                            + s.packed_operand_bytes(prec)
+                    );
+                }
+            }
+            assert_eq!(s.quant_arena_bytes(4, Precision::F32), 0);
+            assert_eq!(s.quant_arena_bytes(0, Precision::Int8), s.patch_floats);
+        }
     }
 
     #[test]

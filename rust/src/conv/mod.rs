@@ -13,6 +13,8 @@
 //! * [`simd`] — runtime ISA dispatch (AVX2+FMA / AVX-512 / NEON with
 //!   scalar fallback) for the GEMM microkernel and the direct inner
 //!   loops
+//! * [`quant`] — reduced-precision (f16/bf16/int8) operand storage and
+//!   widening GEMM kernels behind the `Precision` strategy axis
 //! * [`dilated`] — segregated-input dilated convolution (§5 future work)
 //! * [`flops`] — analytic MAC counts
 //! * [`memory`] — analytic buffer accounting (matches the paper's
@@ -34,6 +36,7 @@ pub mod im2col;
 pub mod memory;
 pub mod parallel;
 pub mod plan;
+pub mod quant;
 pub mod segregation;
 pub mod simd;
 pub mod stride;

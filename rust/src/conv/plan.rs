@@ -82,6 +82,7 @@ use super::backward::flip_sub;
 use super::conventional::correlate_rows;
 use super::gemm;
 use super::im2col::kernel_matrix;
+use super::quant::{self, Precision};
 use super::simd::Isa;
 use super::segregation::{segregate, Segregated};
 use super::unified::{
@@ -111,6 +112,18 @@ struct PhasePlan {
     /// (`gemm::pack_b` over the tap-major `[gemm_k, Cout]` matrix),
     /// laid out once here so steady-state GEMM execution never packs.
     packed_kernel: Vec<f32>,
+    /// Reduced-precision twins of `packed_kernel` (DESIGN.md
+    /// §Reduced-Precision): the same `[gemm_k, Cout]` matrix packed
+    /// into width-`quant::QNR` panels as f16 / bf16 bit patterns and
+    /// symmetric-absmax int8, frozen here so quantized steady state
+    /// never converts or re-quantizes weights.  ~1.25× plan-resident
+    /// weight memory; execution reads exactly one of the four panels.
+    qpanel_f16: Vec<u16>,
+    qpanel_bf16: Vec<u16>,
+    qpanel_i8: Vec<i8>,
+    /// Per-output-channel scales of `qpanel_i8` (len `Cout`):
+    /// `q[k][j] · qscale_i8[j]` recovers the f32 weight.
+    qscale_i8: Vec<f32>,
     /// Slab height in pixels (`rows.1 - rows.0 = n_rows + sub.rows - 1`).
     slab_h: usize,
     /// Flipped sub-kernel (spatial flip + Cin/Cout transpose) — the
@@ -215,8 +228,31 @@ impl ConvTransposePlan {
                 let gemm_k = sub.rows * sub.cols * params.cin;
                 let patch_len = geom.n_rows * geom.n_cols * gemm_k;
                 patch_floats = patch_floats.max(patch_len);
+                let bmat = kernel_matrix(sub);
                 let mut packed_kernel = vec![0.0f32; gemm::packed_b_floats(gemm_k, params.cout)];
-                gemm::pack_b(&kernel_matrix(sub), gemm_k, params.cout, &mut packed_kernel);
+                gemm::pack_b(&bmat, gemm_k, params.cout, &mut packed_kernel);
+                // Reduced-precision weight panels, quantized once here
+                // (per-output-channel absmax scales for int8).
+                let qelems = quant::packed_qb_elems(gemm_k, params.cout);
+                let mut qpanel_f16 = vec![0u16; qelems];
+                quant::pack_b_q16(
+                    &bmat,
+                    gemm_k,
+                    params.cout,
+                    quant::f32_to_f16_bits,
+                    &mut qpanel_f16,
+                );
+                let mut qpanel_bf16 = vec![0u16; qelems];
+                quant::pack_b_q16(
+                    &bmat,
+                    gemm_k,
+                    params.cout,
+                    quant::f32_to_bf16_bits,
+                    &mut qpanel_bf16,
+                );
+                let qscale_i8 = quant::col_absmax_scales(&bmat, gemm_k, params.cout);
+                let mut qpanel_i8 = vec![0i8; qelems];
+                quant::pack_b_q8(&bmat, gemm_k, params.cout, &qscale_i8, &mut qpanel_i8);
                 // Backward lowering, frozen here too: the flipped
                 // sub-kernel (data-grad taps, packed as `[gemm_k_bwd,
                 // Cin]`), the padded-dy frame the full correlation runs
@@ -248,6 +284,10 @@ impl ConvTransposePlan {
                     gemm_k,
                     patch_len,
                     packed_kernel,
+                    qpanel_f16,
+                    qpanel_bf16,
+                    qpanel_i8,
+                    qscale_i8,
                     slab_h,
                     flipped,
                     pad_w,
@@ -389,6 +429,40 @@ impl ConvTransposePlan {
     /// claim on the arena beyond the direct paths).
     pub fn patch_region_floats(&self) -> usize {
         self.patch_floats
+    }
+
+    /// Bytes of the plan-resident packed B operands at `precision`
+    /// (DESIGN.md §Reduced-Precision).  The quantized figures count
+    /// panel elements only — the int8 per-channel scales are plan
+    /// metadata (`4·Cout` bytes per phase, amortized over `gemm_k`
+    /// rows) and are excluded so the ratios reflect the streamed
+    /// operand traffic.  Quantized panels pad `Cout` to
+    /// [`quant::QNR`] where the f32 panels pad to the active ISA's
+    /// (wider) tile, so f16 is **at least** 2× smaller and int8 at
+    /// least 4× — more on ragged `Cout` (e.g. the RGB head).
+    pub fn packed_operand_bytes(&self, precision: Precision) -> usize {
+        match precision {
+            Precision::F32 => self.packed_operand_floats() * std::mem::size_of::<f32>(),
+            Precision::F16 => self.phases.iter().map(|p| p.qpanel_f16.len() * 2).sum(),
+            Precision::Bf16 => self.phases.iter().map(|p| p.qpanel_bf16.len() * 2).sum(),
+            Precision::Int8 => self.phases.iter().map(|p| p.qpanel_i8.len()).sum(),
+        }
+    }
+
+    /// Exact quantized-patch arena requirement in **elements** (u16 for
+    /// f16/bf16, i8 for int8) of the single-image quantized lanes: the
+    /// quantized copy of the shared im2col patch region, one element
+    /// per patch float.  The arena element count is precision-
+    /// independent; only the byte width differs.
+    pub fn quant_patch_elems(&self) -> usize {
+        self.patch_floats
+    }
+
+    /// Exact quantized-patch arena elements of the fused batched
+    /// quantized lanes at batch size `n` (the quantized copy of the
+    /// stacked `[N·rows, K]` patch operand, largest phase).
+    pub fn quant_patch_elems_batch(&self, n: usize) -> usize {
+        n * self.patch_floats
     }
 
     /// A correctly-shaped output buffer for this plan.
@@ -781,6 +855,452 @@ impl ConvTransposePlan {
         }
     }
 
+    /// Serial quantized phase-GEMM lane (DESIGN.md §Reduced-Precision):
+    /// the same phases as [`run_gemm`](Self::run_gemm), but the im2col
+    /// patch is quantized into the arena's reduced-precision lane and
+    /// multiplied by the matching weight panel frozen at construction
+    /// through the widening kernels ([`gemm::gemm_packed_q16`] /
+    /// [`gemm::gemm_packed_q8`] — f32 accumulation throughout).  int8
+    /// activations take one symmetric absmax scale per phase, computed
+    /// from the f32 patch just filled.  Zero-alloc in steady state
+    /// (the quantized lanes of the arena grow once, to
+    /// [`quant_patch_elems`](Self::quant_patch_elems)); within the
+    /// documented per-precision drift bound of the f32 reference.
+    fn run_gemm_quant_isa(
+        &self,
+        isa: Isa,
+        precision: Precision,
+        x: &Feature,
+        scratch: &mut Scratch,
+        out: &mut Feature,
+    ) {
+        self.check_shapes(x, out);
+        let (q16_n, q8_n) = quant_elem_split(precision, self.quant_patch_elems());
+        let (buf, q16, q8) = scratch.ensure_quant(self.scratch_floats(), q16_n, q8_n);
+        self.run_gemm_quant_image(isa, precision, &x.data, buf, q16, q8, &mut out.data);
+    }
+
+    /// Serial quantized core over raw image views (`buf` laid out as
+    /// [`scratch_floats`](Self::scratch_floats); exactly one of
+    /// `q16`/`q8` is non-empty, per the precision).
+    #[allow(clippy::too_many_arguments)]
+    fn run_gemm_quant_image(
+        &self,
+        isa: Isa,
+        precision: Precision,
+        x: &[f32],
+        buf: &mut [f32],
+        q16: &mut [u16],
+        q8: &mut [i8],
+        out: &mut [f32],
+    ) {
+        let n_in = self.params.n_in;
+        let cin = self.params.cin;
+        let cout = self.params.cout;
+        let (slab_area, rest) = buf.split_at_mut(self.slab_floats);
+        let (phase_area, patch_area) = rest.split_at_mut(self.phase_floats);
+        for (pi, pp) in self.phases.iter().enumerate() {
+            let _phase_span = trace::span("conv.phase", precision.name(), trace::NONE, pi as u32);
+            let slab = &mut slab_area[pp.slab_off..pp.slab_off + pp.slab_len];
+            build_slab_view(x, n_in, n_in, cin, &pp.geom, slab);
+            let sub = &self.seg.subs[pp.geom.sub];
+            let patch = &mut patch_area[..pp.patch_len];
+            gemm::im2col_rows(
+                slab,
+                pp.slab_w,
+                cin,
+                sub.rows,
+                sub.cols,
+                pp.geom.n_cols,
+                0,
+                pp.geom.n_rows,
+                patch,
+            );
+            let m = pp.geom.n_rows * pp.geom.n_cols;
+            let phase = &mut phase_area[pp.phase_off..pp.phase_off + pp.phase_len];
+            phase.fill(0.0);
+            match precision {
+                Precision::F16 => {
+                    let qa = &mut q16[..pp.patch_len];
+                    quant::quantize_f16(patch, qa);
+                    gemm::gemm_packed_q16(
+                        isa,
+                        precision,
+                        qa,
+                        &pp.qpanel_f16,
+                        phase,
+                        m,
+                        pp.gemm_k,
+                        cout,
+                    );
+                }
+                Precision::Bf16 => {
+                    let qa = &mut q16[..pp.patch_len];
+                    quant::quantize_bf16(patch, qa);
+                    gemm::gemm_packed_q16(
+                        isa,
+                        precision,
+                        qa,
+                        &pp.qpanel_bf16,
+                        phase,
+                        m,
+                        pp.gemm_k,
+                        cout,
+                    );
+                }
+                Precision::Int8 => {
+                    let qa = &mut q8[..pp.patch_len];
+                    let a_scale = quant::int8_scale(quant::absmax(patch));
+                    quant::quantize_i8(patch, a_scale, qa);
+                    gemm::gemm_packed_q8(
+                        isa,
+                        qa,
+                        a_scale,
+                        &pp.qpanel_i8,
+                        &pp.qscale_i8,
+                        phase,
+                        m,
+                        pp.gemm_k,
+                        cout,
+                    );
+                }
+                Precision::F32 => unreachable!("f32 dispatches the exact GEMM lane"),
+            }
+            scatter_rows_view(
+                out,
+                self.out,
+                cout,
+                phase,
+                pp.geom.rp,
+                pp.geom.sp,
+                pp.geom.n_rows,
+                pp.geom.n_cols,
+            );
+        }
+    }
+
+    /// Row-parallel quantized phase-GEMM lane: like
+    /// [`run_gemm_par_rows`](Self::run_gemm_par_rows), every job
+    /// im2cols its own patch rows, quantizes them into its disjoint
+    /// slice of the arena's reduced-precision lane, and runs the
+    /// widening GEMM against the shared frozen panel.  f16/bf16 are
+    /// bit-identical to the serial quantized lane (elementwise
+    /// conversion, same per-element accumulation order); int8 takes a
+    /// **per-row** activation scale (each job's GEMM applies its own),
+    /// which can only tighten the phase-wide serial scale — the same
+    /// drift bound holds for both.
+    #[allow(clippy::too_many_arguments)]
+    fn run_gemm_quant_par_rows_isa(
+        &self,
+        isa: Isa,
+        precision: Precision,
+        x: &Feature,
+        scratch: &mut Scratch,
+        out: &mut Feature,
+        workers: usize,
+    ) {
+        let workers = workers.max(1);
+        if workers == 1 {
+            return self.run_gemm_quant_isa(isa, precision, x, scratch, out);
+        }
+        self.check_shapes(x, out);
+        let cin = self.params.cin;
+        let cout = self.params.cout;
+        let (q16_n, q8_n) = quant_elem_split(precision, self.quant_patch_elems());
+        let (buf, q16, q8) = scratch.ensure_quant(self.scratch_floats(), q16_n, q8_n);
+        {
+            let (slab_area, rest) = buf.split_at_mut(self.slab_floats);
+            let (phase_area, patch_area) = rest.split_at_mut(self.phase_floats);
+            for pp in &self.phases {
+                let slab = &mut slab_area[pp.slab_off..pp.slab_off + pp.slab_len];
+                build_slab(x, &pp.geom, slab);
+            }
+            let slab_area: &[f32] = slab_area;
+            let mut rest: &mut [f32] = phase_area;
+            for pp in &self.phases {
+                let (mine, tail) = rest.split_at_mut(pp.phase_len);
+                rest = tail;
+                let sub = &self.seg.subs[pp.geom.sub];
+                let row_len = pp.geom.n_cols * cout;
+                let patch_row_len = pp.geom.n_cols * pp.gemm_k;
+                let im2col_row = |ri: usize, patch: &mut [f32]| {
+                    let slab = &slab_area[pp.slab_off..pp.slab_off + pp.slab_len];
+                    gemm::im2col_rows(
+                        slab,
+                        pp.slab_w,
+                        cin,
+                        sub.rows,
+                        sub.cols,
+                        pp.geom.n_cols,
+                        ri,
+                        ri + 1,
+                        patch,
+                    );
+                };
+                if precision == Precision::Int8 {
+                    let jobs: Vec<(usize, &mut [f32], &mut [f32], &mut [i8])> = mine
+                        .chunks_mut(row_len)
+                        .zip(patch_area[..pp.patch_len].chunks_mut(patch_row_len))
+                        .zip(q8[..pp.patch_len].chunks_mut(patch_row_len))
+                        .enumerate()
+                        .map(|(ri, ((row, patch), qrow))| (ri, row, patch, qrow))
+                        .collect();
+                    threadpool::parallel_drain(jobs, workers, |(ri, row, patch, qrow)| {
+                        im2col_row(ri, patch);
+                        let a_scale = quant::int8_scale(quant::absmax(patch));
+                        quant::quantize_i8(patch, a_scale, qrow);
+                        row.fill(0.0);
+                        gemm::gemm_packed_q8(
+                            isa,
+                            qrow,
+                            a_scale,
+                            &pp.qpanel_i8,
+                            &pp.qscale_i8,
+                            row,
+                            pp.geom.n_cols,
+                            pp.gemm_k,
+                            cout,
+                        );
+                    });
+                } else {
+                    let (panel, convert): (&[u16], fn(&[f32], &mut [u16])) =
+                        if precision == Precision::F16 {
+                            (&pp.qpanel_f16, quant::quantize_f16)
+                        } else {
+                            (&pp.qpanel_bf16, quant::quantize_bf16)
+                        };
+                    let jobs: Vec<(usize, &mut [f32], &mut [f32], &mut [u16])> = mine
+                        .chunks_mut(row_len)
+                        .zip(patch_area[..pp.patch_len].chunks_mut(patch_row_len))
+                        .zip(q16[..pp.patch_len].chunks_mut(patch_row_len))
+                        .enumerate()
+                        .map(|(ri, ((row, patch), qrow))| (ri, row, patch, qrow))
+                        .collect();
+                    threadpool::parallel_drain(jobs, workers, |(ri, row, patch, qrow)| {
+                        im2col_row(ri, patch);
+                        convert(patch, qrow);
+                        row.fill(0.0);
+                        gemm::gemm_packed_q16(
+                            isa,
+                            precision,
+                            qrow,
+                            panel,
+                            row,
+                            pp.geom.n_cols,
+                            pp.gemm_k,
+                            cout,
+                        );
+                    });
+                }
+            }
+        }
+        let phase_area = &buf[self.slab_floats..];
+        for pp in &self.phases {
+            scatter_rows(
+                out,
+                &phase_area[pp.phase_off..pp.phase_off + pp.phase_len],
+                pp.geom.rp,
+                pp.geom.sp,
+                pp.geom.n_rows,
+                pp.geom.n_cols,
+            );
+        }
+    }
+
+    /// Fused batched quantized phase-GEMM lane: the stacked
+    /// `[N·rows, K]` patch operand of
+    /// [`run_gemm_batch`](Self::run_gemm_batch) is quantized whole and
+    /// multiplied by the frozen panel in one widening GEMM per phase.
+    /// f16/bf16 are bit-identical to `N` sequential quantized runs
+    /// (elementwise conversion; the stacked M extent does not change
+    /// per-element accumulation order); int8 takes one **batch-wide**
+    /// activation scale per phase, so it matches the per-image lane
+    /// within the drift bound rather than bit-for-bit.
+    fn run_gemm_quant_batch_isa(
+        &self,
+        isa: Isa,
+        precision: Precision,
+        x: &FeatureBatch,
+        scratch: &mut Scratch,
+        out: &mut FeatureBatch,
+    ) {
+        self.check_batch_shapes(x, out);
+        let n = x.n;
+        let cout = self.params.cout;
+        let (q16_n, q8_n) = quant_elem_split(precision, self.quant_patch_elems_batch(n));
+        let (buf, q16, q8) = scratch.ensure_quant(self.scratch_floats_gemm_batch(n), q16_n, q8_n);
+        let (slab_area, rest) = buf.split_at_mut(self.slab_floats);
+        let (phase_area, patch_area) = rest.split_at_mut(n * self.max_phase_floats());
+        for pp in &self.phases {
+            self.stack_phase_patches(pp, x, slab_area, patch_area);
+            let patch = &patch_area[..n * pp.patch_len];
+            let m = n * pp.geom.n_rows * pp.geom.n_cols;
+            let phase = &mut phase_area[..n * pp.phase_len];
+            phase.fill(0.0);
+            match precision {
+                Precision::F16 => {
+                    let qa = &mut q16[..n * pp.patch_len];
+                    quant::quantize_f16(patch, qa);
+                    gemm::gemm_packed_q16(
+                        isa,
+                        precision,
+                        qa,
+                        &pp.qpanel_f16,
+                        phase,
+                        m,
+                        pp.gemm_k,
+                        cout,
+                    );
+                }
+                Precision::Bf16 => {
+                    let qa = &mut q16[..n * pp.patch_len];
+                    quant::quantize_bf16(patch, qa);
+                    gemm::gemm_packed_q16(
+                        isa,
+                        precision,
+                        qa,
+                        &pp.qpanel_bf16,
+                        phase,
+                        m,
+                        pp.gemm_k,
+                        cout,
+                    );
+                }
+                Precision::Int8 => {
+                    let qa = &mut q8[..n * pp.patch_len];
+                    let a_scale = quant::int8_scale(quant::absmax(patch));
+                    quant::quantize_i8(patch, a_scale, qa);
+                    gemm::gemm_packed_q8(
+                        isa,
+                        qa,
+                        a_scale,
+                        &pp.qpanel_i8,
+                        &pp.qscale_i8,
+                        phase,
+                        m,
+                        pp.gemm_k,
+                        cout,
+                    );
+                }
+                Precision::F32 => unreachable!("f32 dispatches the exact GEMM lane"),
+            }
+            for i in 0..n {
+                scatter_rows_view(
+                    out.image_mut(i),
+                    self.out,
+                    cout,
+                    &phase[i * pp.phase_len..(i + 1) * pp.phase_len],
+                    pp.geom.rp,
+                    pp.geom.sp,
+                    pp.geom.n_rows,
+                    pp.geom.n_cols,
+                );
+            }
+        }
+    }
+
+    /// Row-parallel fused batched quantized lane: the stacked patch is
+    /// built image-serially like
+    /// [`run_gemm_batch_par`](Self::run_gemm_batch_par), then each
+    /// per-output-row job quantizes its patch rows into its disjoint
+    /// quantized-lane slice and runs the widening GEMM (per-row int8
+    /// activation scales, like the single-image parallel lane).
+    #[allow(clippy::too_many_arguments)]
+    fn run_gemm_quant_batch_par_isa(
+        &self,
+        isa: Isa,
+        precision: Precision,
+        x: &FeatureBatch,
+        scratch: &mut Scratch,
+        out: &mut FeatureBatch,
+        workers: usize,
+    ) {
+        let workers = workers.max(1);
+        if workers == 1 {
+            return self.run_gemm_quant_batch_isa(isa, precision, x, scratch, out);
+        }
+        self.check_batch_shapes(x, out);
+        let n = x.n;
+        let cout = self.params.cout;
+        let (q16_n, q8_n) = quant_elem_split(precision, self.quant_patch_elems_batch(n));
+        let (buf, q16, q8) = scratch.ensure_quant(self.scratch_floats_gemm_batch(n), q16_n, q8_n);
+        let (slab_area, rest) = buf.split_at_mut(self.slab_floats);
+        let (phase_area, patch_area) = rest.split_at_mut(n * self.max_phase_floats());
+        for pp in &self.phases {
+            self.stack_phase_patches(pp, x, slab_area, patch_area);
+            {
+                let row_len = pp.geom.n_cols * cout;
+                let patch_row_len = pp.geom.n_cols * pp.gemm_k;
+                let patch: &[f32] = &patch_area[..n * pp.patch_len];
+                if precision == Precision::Int8 {
+                    let jobs: Vec<(&[f32], &mut [f32], &mut [i8])> = phase_area
+                        [..n * pp.phase_len]
+                        .chunks_mut(row_len)
+                        .zip(patch.chunks(patch_row_len))
+                        .zip(q8[..n * pp.patch_len].chunks_mut(patch_row_len))
+                        .map(|((row, prow), qrow)| (prow, row, qrow))
+                        .collect();
+                    threadpool::parallel_drain(jobs, workers, |(prow, row, qrow)| {
+                        let a_scale = quant::int8_scale(quant::absmax(prow));
+                        quant::quantize_i8(prow, a_scale, qrow);
+                        row.fill(0.0);
+                        gemm::gemm_packed_q8(
+                            isa,
+                            qrow,
+                            a_scale,
+                            &pp.qpanel_i8,
+                            &pp.qscale_i8,
+                            row,
+                            pp.geom.n_cols,
+                            pp.gemm_k,
+                            cout,
+                        );
+                    });
+                } else {
+                    let (panel, convert): (&[u16], fn(&[f32], &mut [u16])) =
+                        if precision == Precision::F16 {
+                            (&pp.qpanel_f16, quant::quantize_f16)
+                        } else {
+                            (&pp.qpanel_bf16, quant::quantize_bf16)
+                        };
+                    let jobs: Vec<(&[f32], &mut [f32], &mut [u16])> = phase_area
+                        [..n * pp.phase_len]
+                        .chunks_mut(row_len)
+                        .zip(patch.chunks(patch_row_len))
+                        .zip(q16[..n * pp.patch_len].chunks_mut(patch_row_len))
+                        .map(|((row, prow), qrow)| (prow, row, qrow))
+                        .collect();
+                    threadpool::parallel_drain(jobs, workers, |(prow, row, qrow)| {
+                        convert(prow, qrow);
+                        row.fill(0.0);
+                        gemm::gemm_packed_q16(
+                            isa,
+                            precision,
+                            qrow,
+                            panel,
+                            row,
+                            pp.geom.n_cols,
+                            pp.gemm_k,
+                            cout,
+                        );
+                    });
+                }
+            }
+            for i in 0..n {
+                scatter_rows_view(
+                    out.image_mut(i),
+                    self.out,
+                    cout,
+                    &phase_area[i * pp.phase_len..(i + 1) * pp.phase_len],
+                    pp.geom.rp,
+                    pp.geom.sp,
+                    pp.geom.n_rows,
+                    pp.geom.n_cols,
+                );
+            }
+        }
+    }
+
     /// Batched direct serial lane (DESIGN.md §Batched-Execution): the
     /// whole [`FeatureBatch`] through **one** direct scratch region,
     /// image by image.  Bit-identical to `N` sequential
@@ -1063,6 +1583,8 @@ impl ConvTransposePlan {
     /// loop of the per-element formulation (no batch structure to
     /// exploit there).  The per-latent execution of a strategy is the
     /// caller's loop over [`run_with`] — that is the serving A/B lane.
+    /// Quantized GEMM strategies dispatch the fused quantized lanes
+    /// (stacked widening GEMMs; batch-wide int8 activation scales).
     ///
     /// [`run_batch`]: Self::run_batch
     /// [`run_batch_par`]: Self::run_batch_par
@@ -1087,7 +1609,20 @@ impl ConvTransposePlan {
                 }
             }
             Formulation::PhaseGemm => {
-                if strategy.workers <= 1 {
+                if strategy.precision.is_quantized() {
+                    if strategy.workers <= 1 {
+                        self.run_gemm_quant_batch_isa(strategy.isa, strategy.precision, x, scratch, out);
+                    } else {
+                        self.run_gemm_quant_batch_par_isa(
+                            strategy.isa,
+                            strategy.precision,
+                            x,
+                            scratch,
+                            out,
+                            strategy.workers,
+                        );
+                    }
+                } else if strategy.workers <= 1 {
                     self.run_gemm_batch_isa(strategy.isa, x, scratch, out);
                 } else {
                     self.run_gemm_batch_par_isa(strategy.isa, x, scratch, out, strategy.workers);
@@ -1128,6 +1663,9 @@ impl ConvTransposePlan {
     /// `tests/conv_properties.rs` pins with `==`; the
     /// [`Formulation::PhaseGemm`] strategies reassociate f32 sums
     /// through the register tile and are pinned within 1e-4 instead.
+    /// Quantized GEMM strategies ([`ExecStrategy::precision`], DESIGN.md
+    /// §Reduced-Precision) dispatch the widening lanes and are pinned
+    /// to the per-precision drift bounds.
     pub fn run_with(
         &self,
         strategy: &ExecStrategy,
@@ -1148,7 +1686,20 @@ impl ConvTransposePlan {
                 }
             }
             Formulation::PhaseGemm => {
-                if strategy.workers <= 1 {
+                if strategy.precision.is_quantized() {
+                    if strategy.workers <= 1 {
+                        self.run_gemm_quant_isa(strategy.isa, strategy.precision, x, scratch, out);
+                    } else {
+                        self.run_gemm_quant_par_rows_isa(
+                            strategy.isa,
+                            strategy.precision,
+                            x,
+                            scratch,
+                            out,
+                            strategy.workers,
+                        );
+                    }
+                } else if strategy.workers <= 1 {
                     self.run_gemm_isa(strategy.isa, x, scratch, out);
                 } else {
                     self.run_gemm_par_rows_isa(strategy.isa, x, scratch, out, strategy.workers);
@@ -1993,26 +2544,50 @@ impl ConvTransposePlan {
     }
 }
 
+/// Quantized-lane arena split for one precision: `(u16 elems, i8
+/// elems)` — exactly one is non-zero for a quantized precision, both
+/// zero for f32 (the exact lane touches no quantized arena).
+fn quant_elem_split(precision: Precision, elems: usize) -> (usize, usize) {
+    match precision {
+        Precision::F16 | Precision::Bf16 => (elems, 0),
+        Precision::Int8 => (0, elems),
+        Precision::F32 => (0, 0),
+    }
+}
+
 /// Reusable scratch arena for planned execution.
 ///
 /// One flat `Vec<f32>` that grows to the high-water mark of the plans
 /// run through it and never shrinks.  Safe to thread through
 /// differently-shaped layers back to back: plans write every scratch
 /// byte they read, so no run observes another run's data.
+///
+/// The quantized lanes (DESIGN.md §Reduced-Precision) carry two more
+/// grow-only arenas — a `u16` lane for f16/bf16 patch bits and an `i8`
+/// lane for int8 — sized by the same exact-requirement discipline
+/// ([`ConvTransposePlan::quant_patch_elems`] and its batch variant),
+/// so quantized steady state is zero-alloc like every other lane.
+/// f32-only deployments never grow them past zero.
 #[derive(Debug, Clone, Default)]
 pub struct Scratch {
     buf: Vec<f32>,
+    qbuf16: Vec<u16>,
+    qbuf8: Vec<i8>,
 }
 
 impl Scratch {
     /// An empty arena (grows on first use).
     pub fn new() -> Scratch {
-        Scratch { buf: Vec::new() }
+        Scratch::default()
     }
 
-    /// An arena pre-sized to exactly `n` floats.
+    /// An arena pre-sized to exactly `n` floats (quantized lanes grow
+    /// on first quantized use).
     pub fn with_floats(n: usize) -> Scratch {
-        Scratch { buf: vec![0.0; n] }
+        Scratch {
+            buf: vec![0.0; n],
+            ..Scratch::default()
+        }
     }
 
     /// An arena pre-sized for one plan (its steady state from call one).
@@ -2037,6 +2612,18 @@ impl Scratch {
         self.buf.len()
     }
 
+    /// Current u16 quantized-lane size in elements (f16/bf16 patch
+    /// bits; zero until a 16-bit quantized lane runs).
+    pub fn q16_capacity_elems(&self) -> usize {
+        self.qbuf16.len()
+    }
+
+    /// Current i8 quantized-lane size in elements (int8 patch values;
+    /// zero until an int8 lane runs).
+    pub fn q8_capacity_elems(&self) -> usize {
+        self.qbuf8.len()
+    }
+
     /// Borrow the first `n` floats, growing only if the arena is
     /// smaller than `n` (never in steady state).
     fn ensure(&mut self, n: usize) -> &mut [f32] {
@@ -2044,6 +2631,32 @@ impl Scratch {
             self.buf.resize(n, 0.0);
         }
         &mut self.buf[..n]
+    }
+
+    /// [`ensure`](Self::ensure) plus the quantized lanes: borrow the
+    /// first `n` floats, `q16` u16 elements, and `q8` i8 elements, each
+    /// lane growing only if smaller (never in steady state).  Distinct
+    /// fields, so the three mutable borrows coexist.
+    fn ensure_quant(
+        &mut self,
+        n: usize,
+        q16: usize,
+        q8: usize,
+    ) -> (&mut [f32], &mut [u16], &mut [i8]) {
+        if self.buf.len() < n {
+            self.buf.resize(n, 0.0);
+        }
+        if self.qbuf16.len() < q16 {
+            self.qbuf16.resize(q16, 0);
+        }
+        if self.qbuf8.len() < q8 {
+            self.qbuf8.resize(q8, 0);
+        }
+        (
+            &mut self.buf[..n],
+            &mut self.qbuf16[..q16],
+            &mut self.qbuf8[..q8],
+        )
     }
 }
 
@@ -2442,6 +3055,202 @@ mod tests {
             .sum();
         assert_eq!(plan.packed_operand_floats(), packed);
         assert_eq!(plan.patch_region_floats(), max_patch);
+    }
+
+    /// Analytic worst-case drift of a quantized phase GEMM vs the f32
+    /// reference: `K` products, each off by at most the operands'
+    /// representation error (relative 2⁻¹¹ for f16, 2⁻⁸ for bf16;
+    /// absolute `absmax/254` per side for symmetric int8), with slack
+    /// for the f32 accumulation itself.
+    fn drift_bound(p: Precision, k_depth: usize, amax: f32, bmax: f32) -> f32 {
+        let k = k_depth as f32;
+        match p {
+            Precision::F16 => 4.0 * k * amax * bmax / 2048.0,
+            Precision::Bf16 => 4.0 * k * amax * bmax / 256.0,
+            Precision::Int8 => 2.0 * k * amax * bmax * (2.0 / 254.0),
+            Precision::F32 => 1e-4,
+        }
+    }
+
+    #[test]
+    fn quantized_lanes_within_drift_bounds() {
+        // Every quantized precision, serial and row-parallel, on an
+        // odd-output and an even-output shape with ragged and exact
+        // Cout: within the analytic drift bound of the f32 GEMM lane,
+        // NaN-free on dirty buffers; the 16-bit parallel lanes
+        // bit-identical to their serial quantized reference
+        // (elementwise conversion, same per-element order).
+        let mut rng = Rng::seeded(64);
+        for (n_in, nk, p, cin, cout) in [(4, 5, 2, 3, 2), (4, 4, 2, 3, 8), (5, 3, 1, 2, 17)] {
+            let x = Feature::random(n_in, n_in, cin, &mut rng);
+            let k = Kernel::random(nk, cin, cout, &mut rng);
+            let plan =
+                ConvTransposePlan::new(ConvTransposeParams::new(n_in, nk, p, cin, cout), &k);
+            let mut scratch = Scratch::new();
+            let mut want = plan.new_output();
+            plan.run_gemm(&x, &mut scratch, &mut want);
+            let k_depth = nk * nk * cin; // ≥ any phase's gemm_k
+            let amax = quant::absmax(&x.data).max(1.0);
+            let bmax = quant::absmax(&k.data);
+            for prec in Precision::QUANTIZED {
+                let bound = drift_bound(prec, k_depth, amax, bmax);
+                let s = ExecStrategy::serial_gemm().with_precision(prec);
+                let mut got = plan.new_output();
+                got.data.fill(f32::NAN);
+                plan.run_with(&s, &x, &mut scratch, &mut got);
+                assert!(got.data.iter().all(|v| !v.is_nan()), "{} left NaNs", s.name());
+                let drift = max_abs(&got.data, &want.data);
+                assert!(
+                    drift < bound,
+                    "{} drift {drift} ≥ bound {bound} (n={n_in} k={nk} p={p} cout={cout})",
+                    s.name()
+                );
+                for workers in [2, 3, 8] {
+                    let sp = ExecStrategy::gemm_parallel(workers).with_precision(prec);
+                    let mut par = plan.new_output();
+                    par.data.fill(f32::NAN);
+                    plan.run_with(&sp, &x, &mut scratch, &mut par);
+                    if prec == Precision::Int8 {
+                        // Per-row activation scales: bound, not bits.
+                        assert!(
+                            max_abs(&par.data, &want.data) < bound,
+                            "{} diverged",
+                            sp.name()
+                        );
+                    } else {
+                        assert_eq!(par, got, "{} != serial quantized lane", sp.name());
+                    }
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn quantized_batched_lanes_match_per_image() {
+        // Fused batched quantized lanes vs N per-image quantized runs:
+        // bit-identical for f16/bf16 (stacked M never changes
+        // per-element order), drift-bounded for int8 (batch-wide vs
+        // per-phase activation scales), and within the analytic bound
+        // of the f32 reference throughout.
+        let mut rng = Rng::seeded(65);
+        let (n_in, nk, p, cin, cout) = (4, 5, 2, 3, 2);
+        let k = Kernel::random(nk, cin, cout, &mut rng);
+        let plan = ConvTransposePlan::new(ConvTransposeParams::new(n_in, nk, p, cin, cout), &k);
+        for n in [1usize, 3] {
+            let xb = FeatureBatch::random(n, n_in, n_in, cin, &mut rng);
+            let want_f32 = sequential_reference(&plan, &xb, true);
+            let k_depth = nk * nk * cin;
+            let amax = quant::absmax(&xb.data).max(1.0);
+            let bmax = quant::absmax(&k.data);
+            for prec in Precision::QUANTIZED {
+                let bound = drift_bound(prec, k_depth, amax, bmax);
+                let s = ExecStrategy::serial_gemm().with_precision(prec);
+                // Per-image quantized reference through run_with.
+                let mut scratch = Scratch::new();
+                let mut want_q = plan.new_batch_output(n);
+                for i in 0..n {
+                    let xi = xb.feature(i);
+                    let mut oi = plan.new_output();
+                    plan.run_with(&s, &xi, &mut scratch, &mut oi);
+                    want_q.image_mut(i).copy_from_slice(&oi.data);
+                }
+                let fused = s.fused();
+                let mut got = plan.new_batch_output(n);
+                got.data.fill(f32::NAN);
+                plan.run_batch_with(&fused, &xb, &mut scratch, &mut got);
+                assert!(got.data.iter().all(|v| !v.is_nan()), "{} left NaNs", fused.name());
+                if prec == Precision::Int8 {
+                    assert!(
+                        crate::tensor::ops::max_abs_diff_batch(&got, &want_q) < bound,
+                        "{} vs per-image (n={n})",
+                        fused.name()
+                    );
+                } else {
+                    assert_eq!(got, want_q, "{} != per-image quantized (n={n})", fused.name());
+                }
+                assert!(
+                    crate::tensor::ops::max_abs_diff_batch(&got, &want_f32) < bound,
+                    "{} vs f32 reference (n={n})",
+                    fused.name()
+                );
+                for workers in [2, 3] {
+                    let sp = ExecStrategy::gemm_parallel(workers)
+                        .with_precision(prec)
+                        .fused();
+                    let mut par = plan.new_batch_output(n);
+                    par.data.fill(f32::NAN);
+                    plan.run_batch_with(&sp, &xb, &mut scratch, &mut par);
+                    if prec == Precision::Int8 {
+                        assert!(
+                            crate::tensor::ops::max_abs_diff_batch(&par, &want_f32) < bound,
+                            "{} diverged (n={n})",
+                            sp.name()
+                        );
+                    } else {
+                        assert_eq!(par, got, "{} != serial fused (n={n})", sp.name());
+                    }
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn quantized_scratch_sizing_is_exact() {
+        // The quantized arenas grow to exactly the documented element
+        // counts — and only the lane the precision uses; the f32 arena
+        // figure is unchanged from the exact GEMM lane.
+        let mut rng = Rng::seeded(66);
+        let k = Kernel::random(5, 3, 2, &mut rng);
+        let plan = ConvTransposePlan::new(ConvTransposeParams::new(4, 5, 2, 3, 2), &k);
+        assert_eq!(plan.quant_patch_elems(), plan.patch_region_floats());
+        assert_eq!(plan.quant_patch_elems_batch(3), 3 * plan.patch_region_floats());
+        let x = Feature::random(4, 4, 3, &mut rng);
+        let mut out = plan.new_output();
+        let mut scratch = Scratch::new();
+        let f16 = ExecStrategy::serial_gemm().with_precision(Precision::F16);
+        plan.run_with(&f16, &x, &mut scratch, &mut out);
+        assert_eq!(scratch.capacity_floats(), plan.scratch_floats());
+        assert_eq!(scratch.q16_capacity_elems(), plan.quant_patch_elems());
+        assert_eq!(scratch.q8_capacity_elems(), 0);
+        let mut scratch = Scratch::new();
+        let i8s = ExecStrategy::serial_gemm().with_precision(Precision::Int8);
+        plan.run_with(&i8s, &x, &mut scratch, &mut out);
+        assert_eq!(scratch.q16_capacity_elems(), 0);
+        assert_eq!(scratch.q8_capacity_elems(), plan.quant_patch_elems());
+        // Batched: the quantized lane grows to the stacked figure.
+        let n = 3;
+        let xb = FeatureBatch::random(n, 4, 4, 3, &mut rng);
+        let mut outb = plan.new_batch_output(n);
+        let mut scratch = Scratch::new();
+        plan.run_batch_with(&f16.fused(), &xb, &mut scratch, &mut outb);
+        assert_eq!(scratch.capacity_floats(), plan.scratch_floats_gemm_batch(n));
+        assert_eq!(scratch.q16_capacity_elems(), plan.quant_patch_elems_batch(n));
+        // The f32 lane never touches the quantized arenas.
+        let mut scratch = Scratch::new();
+        plan.run_gemm(&x, &mut scratch, &mut out);
+        assert_eq!(scratch.q16_capacity_elems(), 0);
+        assert_eq!(scratch.q8_capacity_elems(), 0);
+    }
+
+    #[test]
+    fn packed_operand_bytes_shrink_per_precision() {
+        // ≥2× for the 16-bit formats and ≥4× for int8 vs the f32
+        // panels (exact when the panel widths coincide, better when
+        // the f32 panels pad Cout to a wider vector tile).
+        let mut rng = Rng::seeded(67);
+        for (nk, cin, cout) in [(4, 8, 4), (4, 3, 17), (5, 3, 2)] {
+            let k = Kernel::random(nk, cin, cout, &mut rng);
+            let plan =
+                ConvTransposePlan::new(ConvTransposeParams::new(4, nk, 2, cin, cout), &k);
+            let f32b = plan.packed_operand_bytes(Precision::F32);
+            assert_eq!(f32b, plan.packed_operand_floats() * 4);
+            assert_eq!(
+                plan.packed_operand_bytes(Precision::F16),
+                plan.packed_operand_bytes(Precision::Bf16)
+            );
+            assert!(f32b >= 2 * plan.packed_operand_bytes(Precision::F16));
+            assert!(f32b >= 4 * plan.packed_operand_bytes(Precision::Int8));
+        }
     }
 
     #[test]

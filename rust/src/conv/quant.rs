@@ -1,0 +1,687 @@
+//! Reduced-precision storage and widening GEMM kernels for the packed
+//! phase-GEMM engine (DESIGN.md §Reduced-Precision).
+//!
+//! PR 5 made the batched phase-GEMM path bandwidth-bound, so operand
+//! bytes are the throughput lever: this module halves (f16/bf16) or
+//! quarters (int8) both sides of every phase GEMM while keeping **all
+//! accumulation in f32** (i32 for int8, scaled back to f32 at the
+//! epilogue).  Storage formats:
+//!
+//! * **f16** — IEEE 754 binary16 stored as `u16` bits.  Conversion is
+//!   round-to-nearest-even, handles subnormal halves exactly, overflows
+//!   to ±Inf, and *preserves NaN* (quieted: a mantissa bit is forced so
+//!   a NaN payload never collapses to Inf).  ~3 decimal digits
+//!   (ε = 2⁻¹¹), range ±65504.
+//! * **bf16** — the top 16 bits of the f32 pattern (sign, full 8-bit
+//!   exponent, 7 mantissa bits) with round-to-nearest-even on the
+//!   dropped half.  Same range as f32, ε = 2⁻⁸; NaN preserved
+//!   (quieted).
+//! * **int8** — symmetric absmax: `q = round(v / scale)` clamped to
+//!   `[-127, 127]` with `scale = absmax / 127` (scale 1.0 when the
+//!   tensor is all-zero).  Weights carry one scale per output channel
+//!   per phase (computed at plan time); the im2col patch carries one
+//!   scale per phase per call.
+//!
+//! The widening kernels here are the always-available scalar
+//! references; `conv/simd.rs` provides AVX2 lanes (F16C convert-on-load
+//! for f16, `i32`-widening multiplies for int8) that are **bit-identical**
+//! to these references — both sides use plain mul+add (never FMA) in
+//! the same k-ascending order, and the int8 path accumulates exactly in
+//! `i32` before one scaled f32 epilogue per output element.
+//!
+//! Quantized B panels reuse the [`gemm::pack_b_for`] layout at a fixed
+//! panel width of [`QNR`] = 8 columns, so one panel geometry serves
+//! every ISA (the AVX2 widening kernels consume 8 columns per step).
+
+use super::gemm;
+
+/// Fixed panel width (columns) for quantized B panels — every quantized
+/// lane, scalar or SIMD, consumes [`QNR`]-column panels, so the packed
+/// layout is ISA-independent (unlike the f32 panels, which follow the
+/// active microkernel's tile width).
+pub const QNR: usize = 8;
+
+/// Element count of a quantized packed B panel for a `k × n` matrix:
+/// the [`gemm::packed_b_floats_for`] figure at panel width [`QNR`].
+pub fn packed_qb_elems(k: usize, n: usize) -> usize {
+    gemm::packed_b_floats_for(QNR, k, n)
+}
+
+// ---------------------------------------------------------------------------
+// Precision axis
+// ---------------------------------------------------------------------------
+
+/// Storage precision of a phase-GEMM lane's packed operands.
+///
+/// `F32` is the full-precision engine (the packed panels PR 4 built);
+/// the quantized variants swap in the reduced-precision panels and the
+/// widening kernels from this module.  Accumulation is f32 (i32 for
+/// `Int8`) in every case — precision only changes what is *stored and
+/// streamed*, never the accumulator.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash, Default)]
+pub enum Precision {
+    #[default]
+    F32,
+    F16,
+    Bf16,
+    Int8,
+}
+
+impl Precision {
+    /// Every precision, f32 first (reporting order).
+    pub const ALL: [Precision; 4] = [
+        Precision::F32,
+        Precision::F16,
+        Precision::Bf16,
+        Precision::Int8,
+    ];
+
+    /// The reduced-precision lanes only.
+    pub const QUANTIZED: [Precision; 3] = [Precision::F16, Precision::Bf16, Precision::Int8];
+
+    /// Canonical lowercase name (used in strategy names, JSON, cache
+    /// keys and the CLI).
+    pub fn name(self) -> &'static str {
+        match self {
+            Precision::F32 => "f32",
+            Precision::F16 => "f16",
+            Precision::Bf16 => "bf16",
+            Precision::Int8 => "int8",
+        }
+    }
+
+    /// Parse a [`name`](Self::name) back; `None` for unknown spellings.
+    pub fn parse(s: &str) -> Option<Precision> {
+        match s {
+            "f32" => Some(Precision::F32),
+            "f16" => Some(Precision::F16),
+            "bf16" => Some(Precision::Bf16),
+            "int8" => Some(Precision::Int8),
+            _ => None,
+        }
+    }
+
+    /// Bytes per stored operand element.
+    pub fn operand_bytes(self) -> usize {
+        match self {
+            Precision::F32 => 4,
+            Precision::F16 | Precision::Bf16 => 2,
+            Precision::Int8 => 1,
+        }
+    }
+
+    /// True for the reduced-precision lanes.
+    pub fn is_quantized(self) -> bool {
+        self != Precision::F32
+    }
+}
+
+// ---------------------------------------------------------------------------
+// f16 / bf16 bit conversions
+// ---------------------------------------------------------------------------
+
+/// f32 → IEEE binary16 bits, round-to-nearest-even.
+///
+/// Overflow (|x| ≥ 65520) → ±Inf; f32 subnormals (and anything below
+/// 2⁻²⁵) flush to ±0; values in the half-subnormal range convert to
+/// exact subnormal halves; NaN is preserved quieted (sign kept, a high
+/// mantissa bit forced so the payload never reads as Inf).
+pub fn f32_to_f16_bits(x: f32) -> u16 {
+    let bits = x.to_bits();
+    let sign = ((bits >> 16) & 0x8000) as u16;
+    let exp = ((bits >> 23) & 0xff) as i32;
+    let man = bits & 0x007f_ffff;
+    if exp == 0xff {
+        // Inf stays Inf; NaN stays NaN (quieted).
+        return if man == 0 { sign | 0x7c00 } else { sign | 0x7e00 };
+    }
+    let unbiased = exp - 127;
+    if unbiased >= 16 {
+        return sign | 0x7c00; // overflow → ±Inf
+    }
+    if unbiased >= -14 {
+        // Normal half: top 10 mantissa bits, RNE on the dropped 13.
+        let man10 = man >> 13;
+        let rest = man & 0x1fff;
+        let mut h = (sign as u32) | (((unbiased + 15) as u32) << 10) | man10;
+        if rest > 0x1000 || (rest == 0x1000 && (man10 & 1) == 1) {
+            h += 1; // a carry ripples into the exponent correctly
+        }
+        return h as u16;
+    }
+    if unbiased >= -25 && exp != 0 {
+        // Subnormal half: the implicit leading 1 becomes explicit.  In
+        // units of 2⁻²⁴ the value is `full × 2^(unbiased+1)` with
+        // `full` the 24-bit significand, so shift right by
+        // `-(unbiased+1)` ∈ [14, 24] with RNE.
+        let full = man | 0x0080_0000;
+        let shift = (-(unbiased + 1)) as u32;
+        let kept = full >> shift;
+        let rest = full & ((1u32 << shift) - 1);
+        let halfway = 1u32 << (shift - 1);
+        let mut h = kept;
+        if rest > halfway || (rest == halfway && (kept & 1) == 1) {
+            h += 1; // may carry into the first normal half — still correct
+        }
+        return sign | h as u16;
+    }
+    sign // underflow (incl. every f32 subnormal) → ±0
+}
+
+/// IEEE binary16 bits → f32 (exact: every half is representable).
+pub fn f16_bits_to_f32(h: u16) -> f32 {
+    let sign = ((h & 0x8000) as u32) << 16;
+    let exp = ((h >> 10) & 0x1f) as u32;
+    let man = (h & 0x3ff) as u32;
+    if exp == 0x1f {
+        return f32::from_bits(sign | 0x7f80_0000 | (man << 13));
+    }
+    if exp == 0 {
+        if man == 0 {
+            return f32::from_bits(sign); // ±0
+        }
+        // Subnormal half `man × 2⁻²⁴`: normalize to an f32 normal.
+        let p = 31 - man.leading_zeros(); // top set bit, 0..=9
+        let man32 = (man << (23 - p)) & 0x007f_ffff;
+        return f32::from_bits(sign | ((p + 103) << 23) | man32);
+    }
+    f32::from_bits(sign | ((exp + 112) << 23) | (man << 13))
+}
+
+/// f32 → bfloat16 bits (top 16 bits), round-to-nearest-even.
+/// NaN preserved quieted; Inf stays Inf; f32 subnormals become bf16
+/// subnormals exactly (same exponent range).
+pub fn f32_to_bf16_bits(x: f32) -> u16 {
+    let bits = x.to_bits();
+    if x.is_nan() {
+        // Truncation could zero the payload and read as Inf — force a
+        // mantissa bit instead.
+        return ((bits >> 16) as u16) | 0x0040;
+    }
+    let round = 0x7fff + ((bits >> 16) & 1);
+    ((bits + round) >> 16) as u16
+}
+
+/// bfloat16 bits → f32 (exact by construction).
+pub fn bf16_bits_to_f32(h: u16) -> f32 {
+    f32::from_bits((h as u32) << 16)
+}
+
+// ---------------------------------------------------------------------------
+// int8 symmetric absmax
+// ---------------------------------------------------------------------------
+
+/// Largest |x| over the slice (0.0 for an empty slice; NaN ignored by
+/// `max` semantics only if another element dominates — quantizing NaN
+/// data is undefined and clamps to 0).
+pub fn absmax(xs: &[f32]) -> f32 {
+    xs.iter().fold(0.0f32, |m, &v| m.max(v.abs()))
+}
+
+/// Symmetric absmax scale: `absmax / 127`, or 1.0 for an all-zero
+/// tensor (everything quantizes to 0 either way, and the epilogue
+/// never divides).
+pub fn int8_scale(absmax: f32) -> f32 {
+    if absmax > 0.0 {
+        absmax / 127.0
+    } else {
+        1.0
+    }
+}
+
+/// Quantize `src` to int8 under `scale`: `round(v / scale)` clamped to
+/// `[-127, 127]` (the symmetric range — -128 is never produced).
+pub fn quantize_i8(src: &[f32], scale: f32, dst: &mut [i8]) {
+    debug_assert_eq!(src.len(), dst.len());
+    let inv = 1.0 / scale;
+    for (d, &v) in dst.iter_mut().zip(src) {
+        *d = (v * inv).round().clamp(-127.0, 127.0) as i8;
+    }
+}
+
+/// Quantize `src` into f16 bit patterns.
+pub fn quantize_f16(src: &[f32], dst: &mut [u16]) {
+    debug_assert_eq!(src.len(), dst.len());
+    for (d, &v) in dst.iter_mut().zip(src) {
+        *d = f32_to_f16_bits(v);
+    }
+}
+
+/// Quantize `src` into bf16 bit patterns.
+pub fn quantize_bf16(src: &[f32], dst: &mut [u16]) {
+    debug_assert_eq!(src.len(), dst.len());
+    for (d, &v) in dst.iter_mut().zip(src) {
+        *d = f32_to_bf16_bits(v);
+    }
+}
+
+// ---------------------------------------------------------------------------
+// Quantized B-panel packing (layout = gemm::pack_b_for at width QNR)
+// ---------------------------------------------------------------------------
+
+/// Pack a row-major `k × n` B matrix into [`QNR`]-column u16 panels
+/// under `to_bits` (f16 or bf16 conversion).  Layout contract matches
+/// [`gemm::pack_b_for`]: panel `jp` occupies
+/// `packed[jp·k·QNR .. (jp+1)·k·QNR]`, row `kk` within it holds QNR
+/// consecutive columns, zero-padded past `n`.  Every element of
+/// `packed` is written, so a dirty buffer is safe to reuse.
+pub fn pack_b_q16(b: &[f32], k: usize, n: usize, to_bits: fn(f32) -> u16, packed: &mut [u16]) {
+    assert_eq!(b.len(), k * n, "B must be k x n row-major");
+    assert_eq!(packed.len(), packed_qb_elems(k, n), "packed B size");
+    let zero = to_bits(0.0);
+    let panels = n.div_ceil(QNR);
+    for jp in 0..panels {
+        let j0 = jp * QNR;
+        let jn = QNR.min(n - j0);
+        let base = jp * k * QNR;
+        for kk in 0..k {
+            let dst = &mut packed[base + kk * QNR..base + (kk + 1) * QNR];
+            let src = &b[kk * n + j0..kk * n + j0 + jn];
+            for (d, &v) in dst[..jn].iter_mut().zip(src) {
+                *d = to_bits(v);
+            }
+            for d in &mut dst[jn..] {
+                *d = zero;
+            }
+        }
+    }
+}
+
+/// Per-output-channel symmetric scales for a row-major `k × n` B
+/// matrix: `scales[j] = absmax(column j) / 127` (1.0 for an all-zero
+/// column).
+pub fn col_absmax_scales(b: &[f32], k: usize, n: usize) -> Vec<f32> {
+    assert_eq!(b.len(), k * n, "B must be k x n row-major");
+    let mut scales = vec![0.0f32; n];
+    for row in b.chunks_exact(n) {
+        for (m, &v) in scales.iter_mut().zip(row) {
+            *m = m.max(v.abs());
+        }
+    }
+    for m in &mut scales {
+        *m = int8_scale(*m);
+    }
+    scales
+}
+
+/// Pack a row-major `k × n` B matrix into [`QNR`]-column int8 panels,
+/// column `j` quantized under `scales[j]`.  Same layout contract as
+/// [`pack_b_q16`]; padding columns are 0.
+pub fn pack_b_q8(b: &[f32], k: usize, n: usize, scales: &[f32], packed: &mut [i8]) {
+    assert_eq!(b.len(), k * n, "B must be k x n row-major");
+    assert_eq!(scales.len(), n, "one scale per column");
+    assert_eq!(packed.len(), packed_qb_elems(k, n), "packed B size");
+    let panels = n.div_ceil(QNR);
+    for jp in 0..panels {
+        let j0 = jp * QNR;
+        let jn = QNR.min(n - j0);
+        let base = jp * k * QNR;
+        for kk in 0..k {
+            let dst = &mut packed[base + kk * QNR..base + (kk + 1) * QNR];
+            for (jj, d) in dst.iter_mut().enumerate() {
+                *d = if jj < jn {
+                    let v = b[kk * n + j0 + jj];
+                    (v / scales[j0 + jj]).round().clamp(-127.0, 127.0) as i8
+                } else {
+                    0
+                };
+            }
+        }
+    }
+}
+
+// ---------------------------------------------------------------------------
+// Scalar widening GEMM references (C += dequant(A) · dequant(B))
+// ---------------------------------------------------------------------------
+
+/// `C += A·B` with both operands stored as 16-bit floats (`from_bits`
+/// is the f16 or bf16 decoder), B packed by [`pack_b_q16`].  f32
+/// accumulation, plain mul+add in k-ascending order — the contract the
+/// AVX2 widening lane in `conv/simd.rs` reproduces bit-identically.
+pub fn gemm_q16_scalar(
+    a: &[u16],
+    packed_b: &[u16],
+    from_bits: fn(u16) -> f32,
+    c: &mut [f32],
+    m: usize,
+    k: usize,
+    n: usize,
+) {
+    assert_eq!(a.len(), m * k, "A must be m x k");
+    assert_eq!(packed_b.len(), packed_qb_elems(k, n), "packed B size");
+    assert_eq!(c.len(), m * n, "C must be m x n");
+    let panels = n.div_ceil(QNR);
+    for jp in 0..panels {
+        let j0 = jp * QNR;
+        let jn = QNR.min(n - j0);
+        let panel = &packed_b[jp * k * QNR..(jp + 1) * k * QNR];
+        for i in 0..m {
+            let arow = &a[i * k..(i + 1) * k];
+            let mut acc = [0.0f32; QNR];
+            for (kk, &ab) in arow.iter().enumerate() {
+                let av = from_bits(ab);
+                let brow = &panel[kk * QNR..(kk + 1) * QNR];
+                for (s, &bb) in acc.iter_mut().zip(brow) {
+                    *s += av * from_bits(bb);
+                }
+            }
+            for (jj, &s) in acc[..jn].iter().enumerate() {
+                c[i * n + j0 + jj] += s;
+            }
+        }
+    }
+}
+
+/// `C += (a_scale · A) · (B ⊙ b_scales)` with int8 operands, B packed
+/// by [`pack_b_q8`].  Accumulation is **exact i32**; each output gets
+/// one f32 epilogue `c += (acc as f32) * (a_scale * b_scales[j])` — the
+/// identical op the AVX2 lane performs, so scalar and SIMD int8 results
+/// are bit-identical.
+pub fn gemm_q8_scalar(
+    a: &[i8],
+    a_scale: f32,
+    packed_b: &[i8],
+    b_scales: &[f32],
+    c: &mut [f32],
+    m: usize,
+    k: usize,
+    n: usize,
+) {
+    assert_eq!(a.len(), m * k, "A must be m x k");
+    assert_eq!(packed_b.len(), packed_qb_elems(k, n), "packed B size");
+    assert_eq!(b_scales.len(), n, "one scale per column");
+    assert_eq!(c.len(), m * n, "C must be m x n");
+    let panels = n.div_ceil(QNR);
+    for jp in 0..panels {
+        let j0 = jp * QNR;
+        let jn = QNR.min(n - j0);
+        let panel = &packed_b[jp * k * QNR..(jp + 1) * k * QNR];
+        for i in 0..m {
+            let arow = &a[i * k..(i + 1) * k];
+            let mut acc = [0i32; QNR];
+            for (kk, &ab) in arow.iter().enumerate() {
+                let av = ab as i32;
+                let brow = &panel[kk * QNR..(kk + 1) * QNR];
+                for (s, &bb) in acc.iter_mut().zip(brow) {
+                    *s += av * bb as i32;
+                }
+            }
+            for (jj, &s) in acc[..jn].iter().enumerate() {
+                c[i * n + j0 + jj] += (s as f32) * (a_scale * b_scales[j0 + jj]);
+            }
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::rng::Rng;
+
+    fn roundtrip_f16(x: f32) -> f32 {
+        f16_bits_to_f32(f32_to_f16_bits(x))
+    }
+
+    fn roundtrip_bf16(x: f32) -> f32 {
+        bf16_bits_to_f32(f32_to_bf16_bits(x))
+    }
+
+    #[test]
+    fn f16_specials_exact() {
+        // ±0 keep their sign bit.
+        assert_eq!(f32_to_f16_bits(0.0), 0x0000);
+        assert_eq!(f32_to_f16_bits(-0.0), 0x8000);
+        assert_eq!(roundtrip_f16(0.0).to_bits(), 0.0f32.to_bits());
+        assert_eq!(roundtrip_f16(-0.0).to_bits(), (-0.0f32).to_bits());
+        // Inf round-trips; overflow saturates to Inf.
+        assert_eq!(f32_to_f16_bits(f32::INFINITY), 0x7c00);
+        assert_eq!(f32_to_f16_bits(f32::NEG_INFINITY), 0xfc00);
+        assert_eq!(roundtrip_f16(1e30), f32::INFINITY);
+        assert_eq!(roundtrip_f16(-1e30), f32::NEG_INFINITY);
+        // NaN preserved (quieted) — documented contract.
+        assert!(roundtrip_f16(f32::NAN).is_nan());
+        // Exact powers of two and small integers are lossless.
+        for v in [1.0f32, -2.0, 0.5, 1024.0, 65504.0, 3.25, -0.125] {
+            assert_eq!(roundtrip_f16(v), v, "{v} must be f16-exact");
+        }
+    }
+
+    #[test]
+    fn f16_subnormals_exact() {
+        // The smallest subnormal half is 2⁻²⁴; all its multiples up to
+        // the normal threshold 2⁻¹⁴ are exactly representable.
+        let ulp = 2.0f32.powi(-24);
+        for mult in [1.0f32, 2.0, 3.0, 511.0, 1023.0] {
+            let v = ulp * mult;
+            assert_eq!(roundtrip_f16(v), v, "subnormal {mult}·2⁻²⁴");
+            assert_eq!(roundtrip_f16(-v), -v);
+        }
+        // Smallest normal half.
+        let min_norm = 2.0f32.powi(-14);
+        assert_eq!(roundtrip_f16(min_norm), min_norm);
+        assert_eq!(f32_to_f16_bits(min_norm), 0x0400);
+        // Below half the smallest subnormal → ±0 (documented flush);
+        // f32 subnormals flush too.
+        assert_eq!(f32_to_f16_bits(2.0f32.powi(-26)), 0x0000);
+        assert_eq!(f32_to_f16_bits(-2.0f32.powi(-26)), 0x8000);
+        assert_eq!(f32_to_f16_bits(f32::MIN_POSITIVE / 2.0), 0x0000);
+        // Ties round to even: exactly 2⁻²⁵ is halfway between 0 and
+        // 2⁻²⁴ → even → 0.
+        assert_eq!(f32_to_f16_bits(2.0f32.powi(-25)), 0x0000);
+        // Just above the tie rounds up to the smallest subnormal.
+        assert_eq!(f16_bits_to_f32(f32_to_f16_bits(1.1 * ulp / 2.0 * 2.0)), ulp);
+    }
+
+    #[test]
+    fn f16_round_to_nearest_even() {
+        // 1 + 2⁻¹¹ is exactly halfway between 1.0 and the next half
+        // (1 + 2⁻¹⁰) → ties-to-even keeps 1.0.
+        let tie = 1.0 + 2.0f32.powi(-11);
+        assert_eq!(roundtrip_f16(tie), 1.0);
+        // 1 + 3·2⁻¹¹ is halfway between 1+2⁻¹⁰ and 1+2·2⁻¹⁰ → even →
+        // 1 + 2·2⁻¹⁰.
+        let tie2 = 1.0 + 3.0 * 2.0f32.powi(-11);
+        assert_eq!(roundtrip_f16(tie2), 1.0 + 2.0 * 2.0f32.powi(-10));
+        // Just above a tie rounds up.
+        assert_eq!(roundtrip_f16(tie + 2.0f32.powi(-20)), 1.0 + 2.0f32.powi(-10));
+        // Rounding can carry into the exponent: the largest value below
+        // 2.0 that rounds up.
+        assert_eq!(roundtrip_f16(2.0 - 2.0f32.powi(-12)), 2.0);
+    }
+
+    #[test]
+    fn f16_relative_error_bound() {
+        // |x - rt(x)| ≤ 2⁻¹¹·|x| over the normal range.
+        let mut rng = Rng::seeded(901);
+        for _ in 0..2000 {
+            let x = rng.normal_f32() * 100.0;
+            let err = (roundtrip_f16(x) - x).abs();
+            assert!(
+                err <= 2.0f32.powi(-11) * x.abs() + 1e-30,
+                "f16 rel err too large at {x}: {err}"
+            );
+        }
+    }
+
+    #[test]
+    fn bf16_specials_and_bound() {
+        assert_eq!(f32_to_bf16_bits(0.0), 0x0000);
+        assert_eq!(f32_to_bf16_bits(-0.0), 0x8000);
+        assert_eq!(roundtrip_bf16(f32::INFINITY), f32::INFINITY);
+        assert!(roundtrip_bf16(f32::NAN).is_nan());
+        // bf16 keeps the f32 exponent range: huge and tiny magnitudes
+        // survive (unlike f16).
+        assert!((roundtrip_bf16(1e30) - 1e30).abs() <= 2.0f32.powi(-8) * 1e30);
+        let tiny = f32::MIN_POSITIVE; // f32 min normal is bf16-exact
+        assert_eq!(roundtrip_bf16(tiny), tiny);
+        // Powers of two are exact; RNE on the dropped 16 bits.
+        for v in [1.0f32, -4.0, 0.25, 3.0, -1.5] {
+            assert_eq!(roundtrip_bf16(v), v);
+        }
+        let mut rng = Rng::seeded(902);
+        for _ in 0..2000 {
+            let x = rng.normal_f32() * 100.0;
+            let err = (roundtrip_bf16(x) - x).abs();
+            assert!(
+                err <= 2.0f32.powi(-8) * x.abs() + 1e-30,
+                "bf16 rel err too large at {x}: {err}"
+            );
+        }
+        // RNE tie: 1 + 2⁻⁸ is halfway between 1.0 and 1 + 2⁻⁷ → 1.0.
+        assert_eq!(roundtrip_bf16(1.0 + 2.0f32.powi(-8)), 1.0);
+    }
+
+    #[test]
+    fn int8_scale_invariants() {
+        // absmax maps to exactly ±127; zero tensor gets scale 1.0.
+        let xs = [0.5f32, -2.0, 1.25, 0.0];
+        let s = int8_scale(absmax(&xs));
+        assert_eq!(s, 2.0 / 127.0);
+        let mut q = [0i8; 4];
+        quantize_i8(&xs, s, &mut q);
+        assert_eq!(q[1], -127);
+        // Dequantized absmax is exact: -127 · (2/127) = -2.
+        assert_eq!(q[1] as f32 * s, -2.0);
+        assert_eq!(int8_scale(absmax(&[0.0, -0.0])), 1.0);
+        let mut qz = [7i8; 2];
+        quantize_i8(&[0.0, -0.0], 1.0, &mut qz);
+        assert_eq!(qz, [0, 0]);
+        // Quantization error is at most scale/2 per element.
+        let mut rng = Rng::seeded(903);
+        let xs: Vec<f32> = (0..512).map(|_| rng.normal_f32()).collect();
+        let s = int8_scale(absmax(&xs));
+        let mut q = vec![0i8; xs.len()];
+        quantize_i8(&xs, s, &mut q);
+        for (&v, &qi) in xs.iter().zip(&q) {
+            assert!((v - qi as f32 * s).abs() <= s / 2.0 + 1e-7);
+            assert!(qi >= -127, "-128 must never be produced");
+        }
+    }
+
+    #[test]
+    fn col_scales_per_column() {
+        // 2×3 B: columns have absmax 4, 0, 0.5.
+        let b = [4.0f32, 0.0, -0.5, -1.0, 0.0, 0.25];
+        let s = col_absmax_scales(&b, 2, 3);
+        assert_eq!(s, vec![4.0 / 127.0, 1.0, 0.5 / 127.0]);
+    }
+
+    fn gemm_ref(a: &[f32], b: &[f32], m: usize, k: usize, n: usize) -> Vec<f32> {
+        let mut c = vec![0.0f32; m * n];
+        for i in 0..m {
+            for kk in 0..k {
+                for j in 0..n {
+                    c[i * n + j] += a[i * k + kk] * b[kk * n + j];
+                }
+            }
+        }
+        c
+    }
+
+    #[test]
+    fn q16_gemm_matches_dequantized_reference() {
+        // The quantized GEMM must equal the f32 GEMM over the
+        // *dequantized* operands within accumulation tolerance — the
+        // quantization error itself is bounded separately.
+        let mut rng = Rng::seeded(904);
+        for (m, k, n) in [(3usize, 7usize, 5usize), (4, 16, 17), (1, 1, 1), (2, 9, 8)] {
+            let a: Vec<f32> = (0..m * k).map(|_| rng.normal_f32()).collect();
+            let b: Vec<f32> = (0..k * n).map(|_| rng.normal_f32()).collect();
+            for (to, from) in [
+                (f32_to_f16_bits as fn(f32) -> u16, f16_bits_to_f32 as fn(u16) -> f32),
+                (f32_to_bf16_bits, bf16_bits_to_f32),
+            ] {
+                let mut aq = vec![0u16; a.len()];
+                for (d, &v) in aq.iter_mut().zip(&a) {
+                    *d = to(v);
+                }
+                let mut bq = vec![0u16; packed_qb_elems(k, n)];
+                pack_b_q16(&b, k, n, to, &mut bq);
+                let adq: Vec<f32> = aq.iter().map(|&v| from(v)).collect();
+                let bdq: Vec<f32> = b.iter().map(|&v| from(to(v))).collect();
+                let want = gemm_ref(&adq, &bdq, m, k, n);
+                let mut c = vec![0.0f32; m * n];
+                gemm_q16_scalar(&aq, &bq, from, &mut c, m, k, n);
+                for (got, want) in c.iter().zip(&want) {
+                    assert!((got - want).abs() < 1e-4, "q16 {m}x{k}x{n}");
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn q8_gemm_matches_dequantized_reference() {
+        let mut rng = Rng::seeded(905);
+        for (m, k, n) in [(3usize, 7usize, 5usize), (4, 16, 17), (2, 9, 8)] {
+            let a: Vec<f32> = (0..m * k).map(|_| rng.normal_f32()).collect();
+            let b: Vec<f32> = (0..k * n).map(|_| rng.normal_f32()).collect();
+            let a_scale = int8_scale(absmax(&a));
+            let mut aq = vec![0i8; a.len()];
+            quantize_i8(&a, a_scale, &mut aq);
+            let b_scales = col_absmax_scales(&b, k, n);
+            let mut bq = vec![0i8; packed_qb_elems(k, n)];
+            pack_b_q8(&b, k, n, &b_scales, &mut bq);
+            // Dequantized reference.
+            let adq: Vec<f32> = aq.iter().map(|&q| q as f32 * a_scale).collect();
+            let bdq: Vec<f32> = b
+                .iter()
+                .enumerate()
+                .map(|(idx, &v)| {
+                    let s = b_scales[idx % n];
+                    (v / s).round().clamp(-127.0, 127.0) * s
+                })
+                .collect();
+            let want = gemm_ref(&adq, &bdq, m, k, n);
+            let mut c = vec![0.0f32; m * n];
+            gemm_q8_scalar(&aq, a_scale, &bq, &b_scales, &mut c, m, k, n);
+            for (got, want) in c.iter().zip(&want) {
+                assert!((got - want).abs() < 1e-3, "q8 {m}x{k}x{n}: {got} vs {want}");
+            }
+        }
+    }
+
+    #[test]
+    fn packed_q_layout_zero_pads_and_overwrites() {
+        // n = 5 → one QNR panel with 3 padding columns, all written
+        // even on a dirty buffer.
+        let k = 2;
+        let n = 5;
+        let b: Vec<f32> = (0..k * n).map(|i| i as f32 + 1.0).collect();
+        let mut packed = vec![0xffffu16; packed_qb_elems(k, n)];
+        pack_b_q16(&b, k, n, f32_to_bf16_bits, &mut packed);
+        assert_eq!(packed.len(), QNR * k);
+        for kk in 0..k {
+            let row = &packed[kk * QNR..(kk + 1) * QNR];
+            for j in 0..n {
+                assert_eq!(bf16_bits_to_f32(row[j]), b[kk * n + j]);
+            }
+            for &pad in &row[n..] {
+                assert_eq!(bf16_bits_to_f32(pad), 0.0);
+            }
+        }
+        let mut packed8 = vec![-1i8; packed_qb_elems(k, n)];
+        let scales = col_absmax_scales(&b, k, n);
+        pack_b_q8(&b, k, n, &scales, &mut packed8);
+        for kk in 0..k {
+            let row = &packed8[kk * QNR..(kk + 1) * QNR];
+            for &pad in &row[n..] {
+                assert_eq!(pad, 0, "padding columns must be written to 0");
+            }
+        }
+    }
+
+    #[test]
+    fn precision_names_roundtrip() {
+        for p in Precision::ALL {
+            assert_eq!(Precision::parse(p.name()), Some(p));
+        }
+        assert_eq!(Precision::parse("fp16"), None);
+        assert_eq!(Precision::default(), Precision::F32);
+        assert_eq!(Precision::F32.operand_bytes(), 4);
+        assert_eq!(Precision::F16.operand_bytes(), 2);
+        assert_eq!(Precision::Bf16.operand_bytes(), 2);
+        assert_eq!(Precision::Int8.operand_bytes(), 1);
+        assert!(!Precision::F32.is_quantized());
+        assert!(Precision::QUANTIZED.iter().all(|p| p.is_quantized()));
+    }
+}

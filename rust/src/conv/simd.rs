@@ -27,12 +27,28 @@
 //!
 //! ## Tile geometry per ISA
 //!
-//! | lane   | tile (mr×nr) | vector regs used              |
-//! |--------|--------------|-------------------------------|
+//! The x86 f32 tiles run **split-K**: two K-interleaved accumulator
+//! sets (even/odd taps) summed at the epilogue, halving the FMA-chain
+//! depth per output element (reassociation covered by the callers'
+//! 1e-4 GEMM tolerance).
+//!
+//! | lane   | tile (mr×nr) | accumulators                      |
+//! |--------|--------------|-----------------------------------|
 //! | scalar | 4×8          | LLVM-allocated from `[[f32;8];4]` |
-//! | avx2   | 6×16         | 12 acc + 2 B + 1 bcast of 16 ymm |
-//! | avx512 | 8×32         | 16 acc + 2 B + 1 bcast of 32 zmm |
+//! | avx2   | 6×16         | 2×12 ymm chains (split-K; partial spill) |
+//! | avx512 | 8×32         | 2×16 zmm chains (split-K; exactly fills 32 regs) |
 //! | neon   | 8×8          | 16 acc + 2 B + 1 dup of 32 q-regs |
+//!
+//! ## Reduced-precision widening lanes
+//!
+//! The quantized phase-GEMM kernels (`conv::quant`) get AVX2 lanes
+//! here: `gemm_q16_f16_avx2` converts f16 (F16C `vcvtph2ps`) panels to
+//! f32 on load, `gemm_q16_bf16_avx2` widens bf16 with an integer
+//! shift, and `gemm_q8_avx2` widens int8 to i32 and accumulates
+//! exactly.  All use plain mul+add
+//! in the scalar kernels' k-ascending order, so they are
+//! **bit-identical** to the `conv::quant` scalar references on finite
+//! data — the quantized lanes keep one numeric contract across ISAs.
 //!
 //! ## Safety
 //!
@@ -343,13 +359,108 @@ fn saxpy_neon(acc: &mut [f32], x: f32, t: &[f32]) {
     unsafe { arm::saxpy_neon(acc, x, t) }
 }
 
+/// True when the AVX2 widening lanes for the bf16/int8 quantized GEMMs
+/// can run on this host.  Detected independently of the active f32
+/// lane: quantized panels have a fixed ISA-independent width
+/// ([`quant::QNR`](super::quant::QNR)), so the widening kernels are
+/// usable even when the f32 engine runs AVX-512 (or scalar on an
+/// FMA-less AVX2 host).
+pub(crate) fn quant_avx2_available() -> bool {
+    #[cfg(target_arch = "x86_64")]
+    {
+        static OK: OnceLock<bool> = OnceLock::new();
+        *OK.get_or_init(|| std::arch::is_x86_feature_detected!("avx2"))
+    }
+    #[cfg(not(target_arch = "x86_64"))]
+    {
+        false
+    }
+}
+
+/// True when the AVX2 + F16C f16 widening lane can run (the f16 kernel
+/// converts packed halves with `vcvtph2ps`).
+pub(crate) fn quant_f16c_available() -> bool {
+    #[cfg(target_arch = "x86_64")]
+    {
+        static OK: OnceLock<bool> = OnceLock::new();
+        *OK.get_or_init(|| {
+            quant_avx2_available() && std::arch::is_x86_feature_detected!("f16c")
+        })
+    }
+    #[cfg(not(target_arch = "x86_64"))]
+    {
+        false
+    }
+}
+
+/// AVX2+F16C f16 widening GEMM (bit-identical to
+/// `quant::gemm_q16_scalar` with the f16 decoder).
+#[cfg(target_arch = "x86_64")]
+pub(crate) fn gemm_q16_f16_avx2(
+    a: &[u16],
+    packed_b: &[u16],
+    c: &mut [f32],
+    m: usize,
+    k: usize,
+    n: usize,
+) {
+    // SAFETY: callers gate on `quant_f16c_available()`; the operand
+    // bounds are asserted by the `gemm` driver before dispatch and
+    // re-checked by the kernel's debug asserts.
+    unsafe { x86::gemm_q16_f16(a, packed_b, c, m, k, n) }
+}
+
+/// AVX2 bf16 widening GEMM (bit-identical to `quant::gemm_q16_scalar`
+/// with the bf16 decoder).
+#[cfg(target_arch = "x86_64")]
+pub(crate) fn gemm_q16_bf16_avx2(
+    a: &[u16],
+    packed_b: &[u16],
+    c: &mut [f32],
+    m: usize,
+    k: usize,
+    n: usize,
+) {
+    // SAFETY: callers gate on `quant_avx2_available()`; bounds as above.
+    unsafe { x86::gemm_q16_bf16(a, packed_b, c, m, k, n) }
+}
+
+/// AVX2 int8 widening GEMM with exact i32 accumulation (bit-identical
+/// to `quant::gemm_q8_scalar`).
+#[cfg(target_arch = "x86_64")]
+#[allow(clippy::too_many_arguments)]
+pub(crate) fn gemm_q8_avx2(
+    a: &[i8],
+    a_scale: f32,
+    packed_b: &[i8],
+    b_scales: &[f32],
+    c: &mut [f32],
+    m: usize,
+    k: usize,
+    n: usize,
+) {
+    // SAFETY: callers gate on `quant_avx2_available()`; bounds as above.
+    unsafe { x86::gemm_q8(a, a_scale, packed_b, b_scales, c, m, k, n) }
+}
+
 #[cfg(target_arch = "x86_64")]
 mod x86 {
     use core::arch::x86_64::*;
 
-    /// AVX2+FMA 6×16 tile (12 ymm accumulators, 2 B vectors, 1
-    /// broadcast).  Contract: [`TileKernel`](super::TileKernel) with
-    /// `mr = 6`, `nr = 16`.
+    use crate::conv::quant::{self, QNR};
+
+    /// AVX2+FMA 6×16 tile, split-K: **two K-interleaved accumulator
+    /// sets** (even taps in one, odd taps in the other) summed at the
+    /// epilogue, so each output element is fed by two independent FMA
+    /// chains of half the depth — halving the latency-bound
+    /// serialization of the K loop.  The doubled set (24 virtual ymm
+    /// accumulators) exceeds the 16 architectural registers, so LLVM
+    /// spills part of one chain; the hot B/broadcast operands stay
+    /// registered and the chain split still shortens the critical
+    /// path.  Splitting reassociates the per-element sum — covered by
+    /// the callers' 1e-4 GEMM tolerance (see `conv::gemm`), verified
+    /// by `tests/simd_equiv.rs`.  Contract:
+    /// [`TileKernel`](super::TileKernel) with `mr = 6`, `nr = 16`.
     #[target_feature(enable = "avx2,fma")]
     pub(super) unsafe fn tile_avx2(
         a: *const f32,
@@ -365,12 +476,31 @@ mod x86 {
         // mr×16 C tile it sliced bounds-checked before taking raw
         // pointers; unaligned intrinsics are used throughout.
         unsafe {
+            // Even chain starts from C, odd chain from zero; the
+            // epilogue adds the two partial sums.
             let mut acc = [[_mm256_setzero_ps(); 2]; 6];
+            let mut odd = [[_mm256_setzero_ps(); 2]; 6];
             for (i, row) in acc.iter_mut().enumerate() {
                 row[0] = _mm256_loadu_ps(c.add(i * ldc));
                 row[1] = _mm256_loadu_ps(c.add(i * ldc + 8));
             }
-            for kk in 0..kc {
+            let mut kk = 0;
+            while kk + 2 <= kc {
+                let b0 = _mm256_loadu_ps(panel.add(kk * 16));
+                let b1 = _mm256_loadu_ps(panel.add(kk * 16 + 8));
+                let d0 = _mm256_loadu_ps(panel.add((kk + 1) * 16));
+                let d1 = _mm256_loadu_ps(panel.add((kk + 1) * 16 + 8));
+                for i in 0..6 {
+                    let av = _mm256_set1_ps(*a.add(i * lda + kk));
+                    acc[i][0] = _mm256_fmadd_ps(av, b0, acc[i][0]);
+                    acc[i][1] = _mm256_fmadd_ps(av, b1, acc[i][1]);
+                    let aw = _mm256_set1_ps(*a.add(i * lda + kk + 1));
+                    odd[i][0] = _mm256_fmadd_ps(aw, d0, odd[i][0]);
+                    odd[i][1] = _mm256_fmadd_ps(aw, d1, odd[i][1]);
+                }
+                kk += 2;
+            }
+            if kk < kc {
                 let b0 = _mm256_loadu_ps(panel.add(kk * 16));
                 let b1 = _mm256_loadu_ps(panel.add(kk * 16 + 8));
                 for (i, row) in acc.iter_mut().enumerate() {
@@ -380,15 +510,19 @@ mod x86 {
                 }
             }
             for (i, row) in acc.iter().enumerate() {
-                _mm256_storeu_ps(c.add(i * ldc), row[0]);
-                _mm256_storeu_ps(c.add(i * ldc + 8), row[1]);
+                _mm256_storeu_ps(c.add(i * ldc), _mm256_add_ps(row[0], odd[i][0]));
+                _mm256_storeu_ps(c.add(i * ldc + 8), _mm256_add_ps(row[1], odd[i][1]));
             }
         }
     }
 
-    /// AVX-512F 8×32 tile (16 zmm accumulators, 2 B vectors, 1
-    /// broadcast).  Contract: [`TileKernel`](super::TileKernel) with
-    /// `mr = 8`, `nr = 32`.
+    /// AVX-512F 8×32 tile, split-K: two K-interleaved accumulator sets
+    /// summed at the epilogue (see `tile_avx2`).  The doubled set — 32
+    /// zmm accumulators — exactly fills the 32 architectural AVX-512
+    /// registers, so both chains stay registered (B vectors and the
+    /// broadcast re-materialize from memory).  Reassociation covered by
+    /// the callers' 1e-4 tolerance.  Contract:
+    /// [`TileKernel`](super::TileKernel) with `mr = 8`, `nr = 32`.
     #[target_feature(enable = "avx512f")]
     pub(super) unsafe fn tile_avx512(
         a: *const f32,
@@ -401,11 +535,28 @@ mod x86 {
         // SAFETY: same pointer contract as `tile_avx2`, at nr = 32.
         unsafe {
             let mut acc = [[_mm512_setzero_ps(); 2]; 8];
+            let mut odd = [[_mm512_setzero_ps(); 2]; 8];
             for (i, row) in acc.iter_mut().enumerate() {
                 row[0] = _mm512_loadu_ps(c.add(i * ldc));
                 row[1] = _mm512_loadu_ps(c.add(i * ldc + 16));
             }
-            for kk in 0..kc {
+            let mut kk = 0;
+            while kk + 2 <= kc {
+                let b0 = _mm512_loadu_ps(panel.add(kk * 32));
+                let b1 = _mm512_loadu_ps(panel.add(kk * 32 + 16));
+                let d0 = _mm512_loadu_ps(panel.add((kk + 1) * 32));
+                let d1 = _mm512_loadu_ps(panel.add((kk + 1) * 32 + 16));
+                for i in 0..8 {
+                    let av = _mm512_set1_ps(*a.add(i * lda + kk));
+                    acc[i][0] = _mm512_fmadd_ps(av, b0, acc[i][0]);
+                    acc[i][1] = _mm512_fmadd_ps(av, b1, acc[i][1]);
+                    let aw = _mm512_set1_ps(*a.add(i * lda + kk + 1));
+                    odd[i][0] = _mm512_fmadd_ps(aw, d0, odd[i][0]);
+                    odd[i][1] = _mm512_fmadd_ps(aw, d1, odd[i][1]);
+                }
+                kk += 2;
+            }
+            if kk < kc {
                 let b0 = _mm512_loadu_ps(panel.add(kk * 32));
                 let b1 = _mm512_loadu_ps(panel.add(kk * 32 + 16));
                 for (i, row) in acc.iter_mut().enumerate() {
@@ -415,8 +566,147 @@ mod x86 {
                 }
             }
             for (i, row) in acc.iter().enumerate() {
-                _mm512_storeu_ps(c.add(i * ldc), row[0]);
-                _mm512_storeu_ps(c.add(i * ldc + 16), row[1]);
+                _mm512_storeu_ps(c.add(i * ldc), _mm512_add_ps(row[0], odd[i][0]));
+                _mm512_storeu_ps(c.add(i * ldc + 16), _mm512_add_ps(row[1], odd[i][1]));
+            }
+        }
+    }
+
+    /// f16 widening GEMM over [`QNR`]-column panels: each panel row of
+    /// 8 halves converts with one `vcvtph2ps`, the A element decodes in
+    /// software (both conversions are exact, so scalar and vector see
+    /// identical f32 operands), and the accumulator uses mul+add in
+    /// k-ascending order — bit-identical to `quant::gemm_q16_scalar`
+    /// on finite data.
+    #[target_feature(enable = "avx2,f16c")]
+    pub(super) unsafe fn gemm_q16_f16(
+        a: &[u16],
+        packed_b: &[u16],
+        c: &mut [f32],
+        m: usize,
+        k: usize,
+        n: usize,
+    ) {
+        debug_assert_eq!(a.len(), m * k);
+        debug_assert_eq!(packed_b.len(), quant::packed_qb_elems(k, n));
+        debug_assert_eq!(c.len(), m * n);
+        let panels = n.div_ceil(QNR);
+        // SAFETY: every panel pointer below reads 8 u16 at offset
+        // kk·QNR of a k·QNR-element panel slice (kk < k), and the
+        // epilogue stores into a local [f32; QNR] — all in bounds.
+        unsafe {
+            for jp in 0..panels {
+                let j0 = jp * QNR;
+                let jn = QNR.min(n - j0);
+                let panel = &packed_b[jp * k * QNR..(jp + 1) * k * QNR];
+                for i in 0..m {
+                    let arow = &a[i * k..(i + 1) * k];
+                    let mut acc = _mm256_setzero_ps();
+                    for (kk, &ab) in arow.iter().enumerate() {
+                        let av = _mm256_set1_ps(quant::f16_bits_to_f32(ab));
+                        let bh = _mm_loadu_si128(panel.as_ptr().add(kk * QNR) as *const __m128i);
+                        let bv = _mm256_cvtph_ps(bh);
+                        acc = _mm256_add_ps(_mm256_mul_ps(av, bv), acc);
+                    }
+                    let mut buf = [0.0f32; QNR];
+                    _mm256_storeu_ps(buf.as_mut_ptr(), acc);
+                    for (jj, &s) in buf[..jn].iter().enumerate() {
+                        c[i * n + j0 + jj] += s;
+                    }
+                }
+            }
+        }
+    }
+
+    /// bf16 widening GEMM: panel rows widen with an integer
+    /// `u16 → u32 << 16` (exact by construction).  Same mul+add
+    /// contract as `gemm_q16_f16`.
+    #[target_feature(enable = "avx2")]
+    pub(super) unsafe fn gemm_q16_bf16(
+        a: &[u16],
+        packed_b: &[u16],
+        c: &mut [f32],
+        m: usize,
+        k: usize,
+        n: usize,
+    ) {
+        debug_assert_eq!(a.len(), m * k);
+        debug_assert_eq!(packed_b.len(), quant::packed_qb_elems(k, n));
+        debug_assert_eq!(c.len(), m * n);
+        let panels = n.div_ceil(QNR);
+        // SAFETY: bounds as `gemm_q16_f16`.
+        unsafe {
+            for jp in 0..panels {
+                let j0 = jp * QNR;
+                let jn = QNR.min(n - j0);
+                let panel = &packed_b[jp * k * QNR..(jp + 1) * k * QNR];
+                for i in 0..m {
+                    let arow = &a[i * k..(i + 1) * k];
+                    let mut acc = _mm256_setzero_ps();
+                    for (kk, &ab) in arow.iter().enumerate() {
+                        let av = _mm256_set1_ps(quant::bf16_bits_to_f32(ab));
+                        let bh = _mm_loadu_si128(panel.as_ptr().add(kk * QNR) as *const __m128i);
+                        let bv = _mm256_castsi256_ps(_mm256_slli_epi32(
+                            _mm256_cvtepu16_epi32(bh),
+                            16,
+                        ));
+                        acc = _mm256_add_ps(_mm256_mul_ps(av, bv), acc);
+                    }
+                    let mut buf = [0.0f32; QNR];
+                    _mm256_storeu_ps(buf.as_mut_ptr(), acc);
+                    for (jj, &s) in buf[..jn].iter().enumerate() {
+                        c[i * n + j0 + jj] += s;
+                    }
+                }
+            }
+        }
+    }
+
+    /// int8 widening GEMM: panel rows widen `i8 → i32`, products
+    /// accumulate **exactly** in i32 (`vpmulld` + `vpaddd`), and each
+    /// output gets the same single scaled f32 epilogue as the scalar
+    /// kernel — bit-identical to `quant::gemm_q8_scalar` always
+    /// (integer accumulation has no rounding to reassociate).
+    #[target_feature(enable = "avx2")]
+    #[allow(clippy::too_many_arguments)]
+    pub(super) unsafe fn gemm_q8(
+        a: &[i8],
+        a_scale: f32,
+        packed_b: &[i8],
+        b_scales: &[f32],
+        c: &mut [f32],
+        m: usize,
+        k: usize,
+        n: usize,
+    ) {
+        debug_assert_eq!(a.len(), m * k);
+        debug_assert_eq!(packed_b.len(), quant::packed_qb_elems(k, n));
+        debug_assert_eq!(b_scales.len(), n);
+        debug_assert_eq!(c.len(), m * n);
+        let panels = n.div_ceil(QNR);
+        // SAFETY: each `_mm_loadl_epi64` reads 8 bytes at offset
+        // kk·QNR of a k·QNR-byte panel slice (kk < k); stores hit a
+        // local [i32; QNR].
+        unsafe {
+            for jp in 0..panels {
+                let j0 = jp * QNR;
+                let jn = QNR.min(n - j0);
+                let panel = &packed_b[jp * k * QNR..(jp + 1) * k * QNR];
+                for i in 0..m {
+                    let arow = &a[i * k..(i + 1) * k];
+                    let mut acc = _mm256_setzero_si256();
+                    for (kk, &ab) in arow.iter().enumerate() {
+                        let av = _mm256_set1_epi32(ab as i32);
+                        let bh = _mm_loadl_epi64(panel.as_ptr().add(kk * QNR) as *const __m128i);
+                        let bv = _mm256_cvtepi8_epi32(bh);
+                        acc = _mm256_add_epi32(_mm256_mullo_epi32(av, bv), acc);
+                    }
+                    let mut buf = [0i32; QNR];
+                    _mm256_storeu_si256(buf.as_mut_ptr() as *mut __m256i, acc);
+                    for (jj, &s) in buf[..jn].iter().enumerate() {
+                        c[i * n + j0 + jj] += (s as f32) * (a_scale * b_scales[j0 + jj]);
+                    }
+                }
             }
         }
     }
@@ -600,6 +890,65 @@ mod tests {
         for isa in [Isa::Scalar, Isa::Avx2, Isa::Avx512, Isa::Neon] {
             let (mr, nr) = isa.tile();
             assert!(mr >= 1 && nr % 8 == 0, "{isa}: tile {mr}x{nr}");
+        }
+    }
+
+    #[test]
+    #[cfg_attr(not(target_arch = "x86_64"), allow(unused))]
+    fn quantized_widening_lanes_bit_identical_to_scalar() {
+        // The quantized lanes keep one numeric contract across ISAs:
+        // on any host where the AVX2 widening kernels run, they must
+        // produce the exact bits of the conv::quant scalar references
+        // (mul+add, k-ascending; int8 accumulates exactly in i32).
+        #[cfg(target_arch = "x86_64")]
+        {
+            use crate::conv::quant::{self, packed_qb_elems};
+            if !quant_avx2_available() {
+                return;
+            }
+            let mut rng = Rng::seeded(0x0A16);
+            for (m, k, n) in [(1usize, 1usize, 1usize), (3, 7, 5), (6, 37, 17), (4, 16, 8)] {
+                let mut af = vec![0.0f32; m * k];
+                let mut bf = vec![0.0f32; k * n];
+                rng.fill_normal(&mut af);
+                rng.fill_normal(&mut bf);
+                let mut base = vec![0.0f32; m * n];
+                rng.fill_normal(&mut base);
+                // bf16 (AVX2 only).
+                let mut aq = vec![0u16; m * k];
+                quant::quantize_bf16(&af, &mut aq);
+                let mut bq = vec![0u16; packed_qb_elems(k, n)];
+                quant::pack_b_q16(&bf, k, n, quant::f32_to_bf16_bits, &mut bq);
+                let mut want = base.clone();
+                quant::gemm_q16_scalar(&aq, &bq, quant::bf16_bits_to_f32, &mut want, m, k, n);
+                let mut got = base.clone();
+                gemm_q16_bf16_avx2(&aq, &bq, &mut got, m, k, n);
+                assert_eq!(want, got, "bf16 lane m={m} k={k} n={n}");
+                // f16 (needs F16C on top of AVX2).
+                if quant_f16c_available() {
+                    let mut aq = vec![0u16; m * k];
+                    quant::quantize_f16(&af, &mut aq);
+                    let mut bq = vec![0u16; packed_qb_elems(k, n)];
+                    quant::pack_b_q16(&bf, k, n, quant::f32_to_f16_bits, &mut bq);
+                    let mut want = base.clone();
+                    quant::gemm_q16_scalar(&aq, &bq, quant::f16_bits_to_f32, &mut want, m, k, n);
+                    let mut got = base.clone();
+                    gemm_q16_f16_avx2(&aq, &bq, &mut got, m, k, n);
+                    assert_eq!(want, got, "f16 lane m={m} k={k} n={n}");
+                }
+                // int8: exact integer accumulation, identical epilogue.
+                let a_scale = quant::int8_scale(quant::absmax(&af));
+                let mut a8 = vec![0i8; m * k];
+                quant::quantize_i8(&af, a_scale, &mut a8);
+                let b_scales = quant::col_absmax_scales(&bf, k, n);
+                let mut b8 = vec![0i8; packed_qb_elems(k, n)];
+                quant::pack_b_q8(&bf, k, n, &b_scales, &mut b8);
+                let mut want = base.clone();
+                quant::gemm_q8_scalar(&a8, a_scale, &b8, &b_scales, &mut want, m, k, n);
+                let mut got = base.clone();
+                gemm_q8_avx2(&a8, a_scale, &b8, &b_scales, &mut got, m, k, n);
+                assert_eq!(want, got, "int8 lane m={m} k={k} n={n}");
+            }
         }
     }
 

@@ -8,6 +8,7 @@
 //! ukstc table4 [--model M] ...       # regenerate Table 4 (GAN ablation)
 //! ukstc ablation                     # design-choice ablations
 //! ukstc tune [--model M] ...         # autotune per-layer strategies
+//! ukstc accuracy [--precision P] ... # quantized-lane drift vs the f32 reference
 //! ukstc serve [--config F] ...       # run the serving coordinator demo
 //! ukstc trace forward|train|serve    # span-trace a workload → chrome://tracing JSON
 //! ukstc metrics [--json]             # dump the process-wide perf-counter registry
@@ -18,6 +19,7 @@ use std::sync::Arc;
 
 use ukstc::bench::{ablation, report, serving, table2, table3, table4, BenchConfig};
 use ukstc::conv::parallel::{Algorithm, Lane};
+use ukstc::conv::quant::Precision;
 use ukstc::conv::simd::Isa;
 use ukstc::coordinator::backend::RustBackend;
 use ukstc::coordinator::batcher::BatchPolicy;
@@ -25,6 +27,8 @@ use ukstc::coordinator::{Coordinator, CoordinatorConfig, GenRequest};
 use ukstc::models::{GanModel, Generator, TrainStep};
 use ukstc::obs::{registry, trace as obs_trace};
 use ukstc::runtime::{Engine, PjrtBackend};
+use ukstc::tensor::{ops, Feature};
+use ukstc::tune::space::ExecStrategy;
 use ukstc::tune::{cache, MeasureBudget, Tuner, TuningCache, WallClockMeasurer};
 use ukstc::util::cli::{Args, Command};
 use ukstc::util::json::Json;
@@ -145,6 +149,13 @@ fn dispatch(sub: &str, rest: &[String]) -> anyhow::Result<()> {
                         "observability".to_string(),
                         ablation::observability_json(GanModel::DcGan, &cfg),
                     );
+                    // Precision section: ablation 12 — per-layer
+                    // latency/drift/footprint of the quantized
+                    // phase-GEMM lanes (ISSUE 9).
+                    map.insert(
+                        "precision".to_string(),
+                        ablation::precision_json(GanModel::DcGan, &cfg),
+                    );
                 }
                 std::fs::write(path, doc.to_string_compact())
                     .map_err(|e| anyhow::anyhow!("writing {path}: {e}"))?;
@@ -166,6 +177,11 @@ fn dispatch(sub: &str, rest: &[String]) -> anyhow::Result<()> {
                 "pin GEMM lanes to one microkernel: scalar|avx2|avx512|neon|best",
                 None,
             )
+            .opt(
+                "precision",
+                "pin GEMM lanes to one storage precision: f32|f16|bf16|int8",
+                None,
+            )
             .opt("cache", "tuning-cache JSON path", Some("tuning-cache.json"))
             .opt("workers", "max worker count in the search space", None)
             .opt("warmup", "warmup iterations per candidate", Some("1"))
@@ -176,6 +192,22 @@ fn dispatch(sub: &str, rest: &[String]) -> anyhow::Result<()> {
             .flag("backward", "also tune the backward lanes (cached under 'bwd' keys)");
             let a = cmd.parse(rest)?;
             tune(&a)
+        }
+        "accuracy" => {
+            let cmd = Command::new(
+                "accuracy",
+                "reduced-precision drift report: quantized GEMM lanes vs the f32 reference",
+            )
+            .opt("model", "dcgan|artgan|gpgan|ebgan|smallest|all", Some("smallest"))
+            .opt("precision", "f16|bf16|int8|all", Some("all"))
+            .opt("latents", "random latents compared per model", Some("2"))
+            .opt(
+                "max-drift",
+                "exit nonzero unless every max-abs drift is within this bound",
+                None,
+            );
+            let a = cmd.parse(rest)?;
+            accuracy(&a)
         }
         "serve" => serve(rest),
         "trace" => cmd_trace(rest),
@@ -244,6 +276,30 @@ fn dispatch(sub: &str, rest: &[String]) -> anyhow::Result<()> {
                     arena(8),
                     packed
                 );
+                // Reduced-precision rows (DESIGN.md §Reduced-Precision):
+                // the packed-operand footprint a deployment shipping
+                // only that precision holds, and the worst-layer peak
+                // scratch (f32 arena + quantized patch arena + packed
+                // operands) — so the f16 2× / int8 4× operand claims
+                // are reproducible straight from the CLI.
+                for p in Precision::ALL {
+                    let packed_p: usize =
+                        scratches.iter().map(|s| s.packed_operand_bytes(p)).sum();
+                    let peak = |b: usize| {
+                        scratches
+                            .iter()
+                            .map(|s| s.peak_batch_bytes_at(b, p))
+                            .max()
+                            .unwrap_or(0)
+                    };
+                    println!(
+                        "  {:5} packed_operands={} B peak_scratch(b=1)={} B peak_scratch(b=8)={} B",
+                        p.name(),
+                        packed_p,
+                        peak(1),
+                        peak(8)
+                    );
+                }
             }
             Ok(())
         }
@@ -286,10 +342,21 @@ fn tune(a: &Args) -> anyhow::Result<()> {
         };
         tuner = tuner.pin_isa(isa);
     }
-    let isa_label = match tuner.isa_pin {
+    // `--precision` swaps the GEMM candidates for their
+    // reduced-precision twins (DESIGN.md §Reduced-Precision); the
+    // verdict caches under the `+{prec}` key namespace.
+    if let Some(name) = a.get("precision") {
+        let precision = Precision::parse(name)
+            .ok_or_else(|| anyhow::anyhow!("unknown --precision '{name}' (f32|f16|bf16|int8)"))?;
+        tuner = tuner.pin_precision(precision);
+    }
+    let mut isa_label = match tuner.isa_pin {
         Some(isa) => format!("isa {} pinned", isa.name()),
         None => format!("isa {}", Isa::active().name()),
     };
+    if tuner.precision.is_quantized() {
+        isa_label.push_str(&format!(", precision {} pinned", tuner.precision.name()));
+    }
     let mut tuning_cache = if a.has_flag("no-cache") {
         TuningCache::in_memory()
     } else {
@@ -383,6 +450,94 @@ fn tune(a: &Args) -> anyhow::Result<()> {
             p.display(),
             tuning_cache.len()
         );
+    }
+    Ok(())
+}
+
+/// `ukstc accuracy`: the reduced-precision drift harness (DESIGN.md
+/// §Reduced-Precision).  Each selected zoo model runs its forward pass
+/// twice per latent — once with every layer pinned to the f32
+/// phase-GEMM lane, once pinned to the quantized twin — so the
+/// comparison isolates operand storage from formulation.  Reports
+/// max-abs and PSNR (peak 1.0: the final activation is tanh) on the
+/// output images; `--max-drift` turns the report into a CI gate.
+fn accuracy(a: &Args) -> anyhow::Result<()> {
+    let models: Vec<GanModel> = match a.get_or("model", "smallest") {
+        "all" => GanModel::all().to_vec(),
+        "smallest" => vec![GanModel::smallest()],
+        name => vec![GanModel::from_name(name)
+            .ok_or_else(|| anyhow::anyhow!("unknown model '{name}'"))?],
+    };
+    let precisions: Vec<Precision> = match a.get_or("precision", "all") {
+        "all" => Precision::QUANTIZED.to_vec(),
+        name => vec![Precision::parse(name).ok_or_else(|| {
+            anyhow::anyhow!("unknown --precision '{name}' (f32|f16|bf16|int8)")
+        })?],
+    };
+    let latents = a.get_usize("latents", 2)?.max(1);
+    let gate: Option<f64> = match a.get("max-drift") {
+        Some(s) => Some(
+            s.parse::<f64>()
+                .map_err(|e| anyhow::anyhow!("bad --max-drift '{s}': {e}"))?,
+        ),
+        None => None,
+    };
+    let mut rows = Vec::new();
+    let mut worst_overall = 0.0f64;
+    for model in models {
+        let mut rng = Rng::seeded(0xACC0);
+        let mut generator = Generator::random(model, &mut rng);
+        let layers = generator.layers.len();
+        let zs: Vec<Vec<f32>> = (0..latents)
+            .map(|_| {
+                let mut z = vec![0.0f32; model.z_dim()];
+                rng.fill_normal(&mut z);
+                z
+            })
+            .collect();
+        generator.set_strategies(&vec![ExecStrategy::serial_gemm(); layers]);
+        let refs: Vec<Feature> = zs
+            .iter()
+            .map(|z| generator.forward(z, Algorithm::Unified, Lane::Serial))
+            .collect();
+        for &p in &precisions {
+            generator
+                .set_strategies(&vec![ExecStrategy::serial_gemm().with_precision(p); layers]);
+            let mut max_abs = 0.0f64;
+            let mut min_psnr = f64::INFINITY;
+            for (z, want) in zs.iter().zip(&refs) {
+                let got = generator.forward(z, Algorithm::Unified, Lane::Serial);
+                max_abs = max_abs.max(f64::from(ops::max_abs_diff(want, &got)));
+                min_psnr = min_psnr.min(ops::psnr(want, &got, 1.0));
+            }
+            worst_overall = worst_overall.max(max_abs);
+            rows.push(vec![
+                model.name().to_string(),
+                p.name().to_string(),
+                format!("{max_abs:.3e}"),
+                if min_psnr.is_infinite() {
+                    "inf".into()
+                } else {
+                    format!("{min_psnr:.1} dB")
+                },
+                match gate {
+                    Some(t) => if max_abs <= t { "ok" } else { "FAIL" }.to_string(),
+                    None => "-".into(),
+                },
+            ]);
+        }
+    }
+    report::print_table(
+        "Accuracy — quantized phase-GEMM lanes vs f32 (final tanh outputs)",
+        &["model", "precision", "max-abs", "PSNR", "gate"],
+        &rows,
+    );
+    if let Some(t) = gate {
+        anyhow::ensure!(
+            worst_overall <= t,
+            "max-abs drift {worst_overall:.3e} exceeds --max-drift {t:.3e}"
+        );
+        println!("\nall drifts within --max-drift {t:.1e}");
     }
     Ok(())
 }
@@ -660,6 +815,7 @@ subcommands:
   table4     regenerate Table 4 (GAN-layer ablation)
   ablation   design-choice ablations (formulation, GEMM, dilated, lanes, tuning)
   tune       autotune per-layer execution strategies (persists a tuning cache)
+  accuracy   reduced-precision drift vs f32 (max-abs + PSNR; --max-drift gates)
   serve      run the serving coordinator on a Poisson trace
   serve-ab   serving matrix: unified planned/unplanned vs conventional
   trace      span-trace a workload (forward|train|serve) → chrome://tracing JSON

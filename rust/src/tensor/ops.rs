@@ -103,6 +103,44 @@ pub fn max_abs_diff(a: &Feature, b: &Feature) -> f32 {
         .fold(0.0, f32::max)
 }
 
+/// Peak signal-to-noise ratio of `got` against the reference `want`,
+/// in dB, at an explicit signal `peak` (1.0 for tanh outputs):
+/// `10·log10(peak² / MSE)` with the MSE accumulated in f64.
+/// Bit-identical inputs (and the degenerate empty pair) return
+/// `f64::INFINITY` — the `ukstc accuracy` harness prints that as
+/// `inf dB`, meaning "no drift at all".
+pub fn psnr_slice(want: &[f32], got: &[f32], peak: f64) -> f64 {
+    assert_eq!(want.len(), got.len(), "psnr length mismatch");
+    assert!(peak > 0.0, "psnr peak must be positive");
+    if want.is_empty() {
+        return f64::INFINITY;
+    }
+    let mse = want
+        .iter()
+        .zip(got)
+        .map(|(a, b)| {
+            let d = f64::from(*a) - f64::from(*b);
+            d * d
+        })
+        .sum::<f64>()
+        / want.len() as f64;
+    if mse == 0.0 {
+        f64::INFINITY
+    } else {
+        10.0 * (peak * peak / mse).log10()
+    }
+}
+
+/// [`psnr_slice`] over two equally-shaped maps.
+pub fn psnr(want: &Feature, got: &Feature, peak: f64) -> f64 {
+    assert_eq!(
+        (want.h, want.w, want.c),
+        (got.h, got.w, got.c),
+        "psnr shape mismatch"
+    );
+    psnr_slice(&want.data, &got.data, peak)
+}
+
 /// Elementwise ReLU over a raw f32 slice — shared by the single-image
 /// and batched epilogues (identical arithmetic, so the batched forward
 /// stays bit-identical to per-image execution).
@@ -268,6 +306,21 @@ mod tests {
         // Empty batches are fine (the coordinator never forms them, but
         // the ops must not panic on the degenerate shape).
         add_bias_batch_inplace(&mut FeatureBatch::zeros(0, 2, 2, 2), &[0.0, 0.0]);
+    }
+
+    #[test]
+    fn psnr_known_values_and_identity() {
+        let mut rng = Rng::seeded(6);
+        let x = Feature::random(3, 4, 2, &mut rng);
+        assert_eq!(psnr(&x, &x, 1.0), f64::INFINITY);
+        // Uniform error of 0.1 against peak 1.0: MSE = 0.01 → 20 dB.
+        let want = vec![0.0f32; 16];
+        let got = vec![0.1f32; 16];
+        assert!((psnr_slice(&want, &got, 1.0) - 20.0).abs() < 1e-6);
+        // Doubling the peak adds 10·log10(4) ≈ 6.02 dB.
+        let d = psnr_slice(&want, &got, 2.0) - psnr_slice(&want, &got, 1.0);
+        assert!((d - 20.0 * 2f64.log10()).abs() < 1e-9);
+        assert_eq!(psnr_slice(&[], &[], 1.0), f64::INFINITY);
     }
 
     #[test]

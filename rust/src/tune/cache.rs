@@ -28,6 +28,7 @@
 use std::collections::BTreeMap;
 use std::path::{Path, PathBuf};
 
+use crate::conv::quant::Precision;
 use crate::conv::ConvTransposeParams;
 use crate::util::json::{self, Json};
 
@@ -176,7 +177,24 @@ impl TuningCache {
     /// verdicts.  Batch 1 keeps the historic key, so existing cache
     /// files stay valid.
     pub fn key_batch(params: &ConvTransposeParams, space_workers: usize, batch: usize) -> String {
-        let base = format!(
+        Self::key_batch_at(params, space_workers, batch, Precision::F32)
+    }
+
+    /// [`key_batch`](Self::key_batch) for a precision-pinned search
+    /// (`ukstc tune --precision`): quantized pins answer a different
+    /// question (the GEMM candidates are the reduced-precision twins),
+    /// so they get a `+{prec}` suffix following the fingerprint's
+    /// `+{isa}` pattern.  An f32 pin keeps the historic key
+    /// byte-for-byte — pre-precision cache files stay hits — and the
+    /// `+` delimiter keeps the namespace disjoint from the
+    /// digit-terminated `b{N}` and letter-terminated `bwd` suffixes.
+    pub fn key_batch_at(
+        params: &ConvTransposeParams,
+        space_workers: usize,
+        batch: usize,
+        precision: Precision,
+    ) -> String {
+        let mut key = format!(
             "n{}k{}p{}ci{}co{}@{}w{}",
             params.n_in,
             params.n_k,
@@ -186,11 +204,13 @@ impl TuningCache {
             host_fingerprint(),
             space_workers
         );
-        if batch <= 1 {
-            base
-        } else {
-            format!("{base}b{batch}")
+        if batch > 1 {
+            key.push_str(&format!("b{batch}"));
         }
+        if precision.is_quantized() {
+            key.push_str(&format!("+{}", precision.name()));
+        }
+        key
     }
 
     /// [`key`](Self::key) for a backward-pass verdict.  Backward
@@ -223,7 +243,20 @@ impl TuningCache {
         space_workers: usize,
         batch: usize,
     ) -> Option<&CacheEntry> {
-        self.entries.get(&Self::key_batch(params, space_workers, batch))
+        self.get_batch_at(params, space_workers, batch, Precision::F32)
+    }
+
+    /// Lookup under the precision-pinned key (see
+    /// [`key_batch_at`](Self::key_batch_at)).
+    pub fn get_batch_at(
+        &self,
+        params: &ConvTransposeParams,
+        space_workers: usize,
+        batch: usize,
+        precision: Precision,
+    ) -> Option<&CacheEntry> {
+        self.entries
+            .get(&Self::key_batch_at(params, space_workers, batch, precision))
     }
 
     pub fn put(
@@ -261,8 +294,33 @@ impl TuningCache {
         seconds: f64,
         candidates: &[(ExecStrategy, Option<f64>)],
     ) {
+        self.put_with_candidates_batch_at(
+            params,
+            space_workers,
+            batch,
+            Precision::F32,
+            strategy,
+            seconds,
+            candidates,
+        );
+    }
+
+    /// [`put_with_candidates_batch`](Self::put_with_candidates_batch)
+    /// under the precision-pinned key (what a `--precision` tune
+    /// records).
+    #[allow(clippy::too_many_arguments)]
+    pub fn put_with_candidates_batch_at(
+        &mut self,
+        params: &ConvTransposeParams,
+        space_workers: usize,
+        batch: usize,
+        precision: Precision,
+        strategy: ExecStrategy,
+        seconds: f64,
+        candidates: &[(ExecStrategy, Option<f64>)],
+    ) {
         self.entries.insert(
-            Self::key_batch(params, space_workers, batch),
+            Self::key_batch_at(params, space_workers, batch, precision),
             CacheEntry {
                 strategy,
                 seconds,
@@ -441,6 +499,71 @@ mod tests {
         assert_eq!(hit.candidates.len(), 1);
         // And the narrower-space backward question stays distinct.
         assert!(cache.get_backward(&params(4), 2).is_none());
+    }
+
+    #[test]
+    fn precision_keys_disjoint_and_f32_legacy_stable() {
+        // An f32 pin IS the historic key, byte for byte: caches written
+        // before the precision axis existed keep hitting.
+        let legacy = TuningCache::key(&params(4), 8);
+        assert_eq!(
+            TuningCache::key_batch_at(&params(4), 8, 1, Precision::F32),
+            legacy
+        );
+        // Quantized pins suffix `+{prec}` after every other suffix.
+        let f16 = TuningCache::key_batch_at(&params(4), 8, 1, Precision::F16);
+        assert!(f16.ends_with("w8+f16"), "{f16}");
+        let b4i8 = TuningCache::key_batch_at(&params(4), 8, 4, Precision::Int8);
+        assert!(b4i8.ends_with("w8b4+int8"), "{b4i8}");
+        // All four precisions (x batch) are pairwise disjoint.
+        let mut keys: Vec<String> = Vec::new();
+        for b in [1, 4] {
+            for p in Precision::ALL {
+                keys.push(TuningCache::key_batch_at(&params(4), 8, b, p));
+            }
+        }
+        for (i, a) in keys.iter().enumerate() {
+            for b in &keys[i + 1..] {
+                assert_ne!(a, b);
+            }
+        }
+        // Lookups honor the namespace: a quantized verdict never
+        // shadows the f32 one, and vice versa.
+        let mut cache = TuningCache::in_memory();
+        let quant = ExecStrategy::serial_gemm().with_precision(Precision::F16);
+        cache.put_with_candidates_batch_at(&params(4), 8, 1, Precision::F16, quant, 1e-4, &[]);
+        assert!(cache.get(&params(4), 8).is_none(), "+f16 must not shadow f32");
+        assert!(cache
+            .get_batch_at(&params(4), 8, 1, Precision::Bf16)
+            .is_none());
+        let hit = cache.get_batch_at(&params(4), 8, 1, Precision::F16).unwrap();
+        assert_eq!(hit.strategy, quant);
+        // And the strategy's own JSON (with its precision field)
+        // survives the file roundtrip under the suffixed key.
+        let dir = std::env::temp_dir().join(format!("ukstc-cache-prec-{}", std::process::id()));
+        std::fs::create_dir_all(&dir).unwrap();
+        let path = dir.join("cache.json");
+        let mut backed = TuningCache::backed(&path);
+        backed.put_with_candidates_batch_at(
+            &params(4),
+            8,
+            1,
+            Precision::F16,
+            quant,
+            1e-4,
+            &[(quant, Some(1e-4))],
+        );
+        backed.save().unwrap();
+        let text = std::fs::read_to_string(&path).unwrap();
+        assert!(text.contains(r#""precision":"f16""#), "{text}");
+        assert!(text.contains("+f16"), "{text}");
+        let reloaded = TuningCache::load(&path).unwrap();
+        let entry = reloaded
+            .get_batch_at(&params(4), 8, 1, Precision::F16)
+            .unwrap();
+        assert_eq!(entry.strategy, quant);
+        assert_eq!(entry.strategy.precision, Precision::F16);
+        std::fs::remove_file(&path).ok();
     }
 
     #[test]

@@ -17,6 +17,7 @@
 
 use std::collections::BTreeMap;
 
+use crate::conv::quant::Precision;
 use crate::conv::simd::Isa;
 use crate::util::json::Json;
 
@@ -116,6 +117,18 @@ pub struct ExecStrategy {
     /// bit-identical saxpy — there is nothing to tune), so `Eq` stays
     /// semantic.
     pub isa: Isa,
+    /// The operand-precision axis (DESIGN.md §Reduced-Precision): which
+    /// storage format the phase-GEMM lanes execute with.  `F32` is the
+    /// exact engine; the quantized formats
+    /// ([`Precision::QUANTIZED`]) store both packed operands in
+    /// reduced precision and accumulate in f32 through the widening
+    /// kernels, trading bounded drift for operand bandwidth.  The
+    /// default search spaces stay f32-only — quantized lanes enter
+    /// via [`ExecStrategy::with_precision`] (pinned tuning /
+    /// `ukstc accuracy`), keeping every existing verdict exact.
+    /// Normalized to `F32` for the direct formulations (they have no
+    /// quantized lanes), so `Eq` stays semantic.
+    pub precision: Precision,
 }
 
 impl ExecStrategy {
@@ -129,6 +142,7 @@ impl ExecStrategy {
             axis: ParAxis::PhaseRows,
             fused: false,
             isa: Isa::Scalar,
+            precision: Precision::F32,
         }
     }
 
@@ -140,6 +154,7 @@ impl ExecStrategy {
             axis: ParAxis::PhaseRows,
             fused: false,
             isa: Isa::Scalar,
+            precision: Precision::F32,
         }
     }
 
@@ -152,6 +167,7 @@ impl ExecStrategy {
             workers,
             fused: false,
             isa: Isa::Scalar,
+            precision: Precision::F32,
         }
     }
 
@@ -163,6 +179,7 @@ impl ExecStrategy {
             axis: ParAxis::PhaseRows,
             fused: false,
             isa: Isa::Scalar,
+            precision: Precision::F32,
         }
     }
 
@@ -175,6 +192,7 @@ impl ExecStrategy {
             axis: ParAxis::PhaseRows,
             fused: false,
             isa: Isa::active(),
+            precision: Precision::F32,
         }
     }
 
@@ -189,6 +207,7 @@ impl ExecStrategy {
             axis: ParAxis::PhaseRows,
             fused: false,
             isa: Isa::active(),
+            precision: Precision::F32,
         }
     }
 
@@ -200,6 +219,19 @@ impl ExecStrategy {
             isa
         } else {
             Isa::Scalar
+        };
+        self
+    }
+
+    /// Pin the operand-precision axis.  Meaningful only for the
+    /// phase-GEMM formulation — the direct formulations have no
+    /// quantized lanes, so the axis is normalized to `F32` and `Eq`
+    /// stays semantic (mirrors [`with_isa`](Self::with_isa)).
+    pub fn with_precision(mut self, precision: Precision) -> ExecStrategy {
+        self.precision = if self.formulation == Formulation::PhaseGemm {
+            precision
+        } else {
+            Precision::F32
         };
         self
     }
@@ -232,7 +264,9 @@ impl ExecStrategy {
     /// `phase-gemm/serial/avx2` or `phase-gemm/par4/fused`.  The
     /// microkernel axis appears only on non-scalar GEMM lanes (before
     /// the `/fused` suffix), so scalar-host names are unchanged from
-    /// pre-SIMD releases.
+    /// pre-SIMD releases; the precision axis likewise appears only on
+    /// quantized lanes (after the ISA, before `/fused`), so every f32
+    /// name is unchanged from pre-quantization releases.
     pub fn name(&self) -> String {
         let mut base = match (self.formulation, self.workers) {
             (f, 1) => format!("{}/serial", f.name()),
@@ -245,6 +279,9 @@ impl ExecStrategy {
         if self.formulation == Formulation::PhaseGemm && self.isa != Isa::Scalar {
             base = format!("{base}/{}", self.isa.name());
         }
+        if self.precision != Precision::F32 {
+            base = format!("{base}/{}", self.precision.name());
+        }
         if self.fused {
             format!("{base}/fused")
         } else {
@@ -252,10 +289,11 @@ impl ExecStrategy {
         }
     }
 
-    /// JSON encoding for the tuning cache (`util::json`).  The `fused`
-    /// and `isa` fields are written only when set / non-scalar, so
-    /// pre-batching and pre-SIMD caches and the documented examples
-    /// stay byte-stable.
+    /// JSON encoding for the tuning cache (`util::json`).  The `fused`,
+    /// `isa` and `precision` fields are written only when set /
+    /// non-scalar / non-f32, so pre-batching, pre-SIMD and
+    /// pre-quantization caches and the documented examples stay
+    /// byte-stable.
     pub fn to_json(&self) -> Json {
         let mut m = BTreeMap::new();
         m.insert(
@@ -270,14 +308,21 @@ impl ExecStrategy {
         if self.isa != Isa::Scalar {
             m.insert("isa".to_string(), Json::Str(self.isa.name().to_string()));
         }
+        if self.precision != Precision::F32 {
+            m.insert(
+                "precision".to_string(),
+                Json::Str(self.precision.name().to_string()),
+            );
+        }
         Json::Obj(m)
     }
 
     /// Decode from the cache encoding; `None` on any malformed field.
-    /// A missing `fused` field decodes as per-latent, and a missing
-    /// `isa` field decodes as scalar — the only lanes that existed when
-    /// such caches were written, so legacy verdicts keep their
-    /// historically-correct meaning.
+    /// A missing `fused` field decodes as per-latent, a missing `isa`
+    /// field decodes as scalar, and a missing `precision` field decodes
+    /// as f32 — the only lanes that existed when such caches were
+    /// written, so legacy verdicts keep their historically-correct
+    /// meaning.
     pub fn from_json(v: &Json) -> Option<ExecStrategy> {
         let formulation = Formulation::from_name(v.get("formulation")?.as_str()?)?;
         let workers = v.get("workers")?.as_usize()?;
@@ -294,7 +339,11 @@ impl ExecStrategy {
             None => Isa::Scalar,
             Some(j) => Isa::parse(j.as_str()?)?,
         };
-        let s = s.with_isa(isa);
+        let precision = match v.get("precision") {
+            None => Precision::F32,
+            Some(j) => Precision::parse(j.as_str()?)?,
+        };
+        let s = s.with_isa(isa).with_precision(precision);
         match v.get("fused") {
             None => Some(s),
             Some(f) => {
@@ -561,6 +610,78 @@ mod tests {
             let decoded =
                 ExecStrategy::from_json(&crate::util::json::parse(&encoded).unwrap()).unwrap();
             assert_eq!(decoded, s, "{encoded}");
+        }
+    }
+
+    #[test]
+    fn precision_axis_is_gemm_only_and_defaults_f32() {
+        // Every constructor and every default-space member is f32 —
+        // quantized lanes never enter the default spaces, so the size
+        // pins above and every existing verdict stay exact.
+        for s in search_space_batch(8, 4) {
+            assert_eq!(s.precision, Precision::F32, "{}", s.name());
+        }
+        // with_precision pins GEMM lanes; direct formulations
+        // normalize the axis away (mirrors with_isa).
+        let q = ExecStrategy::serial_gemm().with_precision(Precision::F16);
+        assert_eq!(q.precision, Precision::F16);
+        assert_eq!(
+            ExecStrategy::serial().with_precision(Precision::Int8),
+            ExecStrategy::serial()
+        );
+        assert_eq!(
+            ExecStrategy::serial_per_element().with_precision(Precision::Bf16),
+            ExecStrategy::serial_per_element()
+        );
+        // F32 pin is the identity.
+        assert_eq!(
+            ExecStrategy::serial_gemm().with_precision(Precision::F32),
+            ExecStrategy::serial_gemm()
+        );
+    }
+
+    #[test]
+    fn precision_names_and_json() {
+        // Name suffix sits after the ISA, before /fused; f32 names are
+        // byte-stable (no suffix).
+        let q = ExecStrategy::gemm_parallel(4)
+            .with_isa(Isa::Avx2)
+            .with_precision(Precision::F16);
+        assert_eq!(q.name(), "phase-gemm/par4/avx2/f16");
+        assert_eq!(q.fused().name(), "phase-gemm/par4/avx2/f16/fused");
+        assert_eq!(
+            ExecStrategy::serial_gemm()
+                .with_isa(Isa::Scalar)
+                .with_precision(Precision::Int8)
+                .name(),
+            "phase-gemm/serial/int8"
+        );
+        // JSON: emitted only when quantized; decode applies it after
+        // the ISA; legacy encodings (no field) decode as f32.
+        for p in Precision::QUANTIZED {
+            let s = ExecStrategy::serial_gemm().with_precision(p);
+            let encoded = s.to_json().to_string_compact();
+            assert!(
+                encoded.contains(&format!("\"precision\":\"{}\"", p.name())),
+                "{encoded}"
+            );
+            let decoded =
+                ExecStrategy::from_json(&crate::util::json::parse(&encoded).unwrap()).unwrap();
+            assert_eq!(decoded, s, "{encoded}");
+        }
+        let f32_enc = ExecStrategy::serial_gemm().to_json().to_string_compact();
+        assert!(!f32_enc.contains("precision"), "{f32_enc}");
+        let legacy = r#"{"formulation":"phase-gemm","workers":2,"axis":"phase-rows"}"#;
+        let decoded =
+            ExecStrategy::from_json(&crate::util::json::parse(legacy).unwrap()).unwrap();
+        assert_eq!(decoded.precision, Precision::F32);
+        // Malformed precision fields reject like malformed ISAs.
+        for bad in [
+            r#"{"formulation":"phase-gemm","workers":2,"axis":"phase-rows","precision":"f8"}"#,
+            r#"{"formulation":"phase-gemm","workers":2,"axis":"phase-rows","precision":16}"#,
+        ] {
+            let v = crate::util::json::parse(bad).unwrap();
+            assert_eq!(ExecStrategy::from_json(&v), None, "{bad}");
         }
     }
 

@@ -9,6 +9,7 @@
 //! layer shape.
 
 use crate::conv::plan::ConvTransposePlan;
+use crate::conv::quant::Precision;
 use crate::conv::simd::Isa;
 use crate::conv::ConvTransposeParams;
 
@@ -76,6 +77,14 @@ pub struct Tuner {
     /// alike.  Direct lanes always survive the pin, so element zero
     /// (the serial seed) is never filtered out.
     pub isa_pin: Option<Isa>,
+    /// Storage precision of the searched GEMM candidates (`ukstc tune
+    /// --precision`).  `F32` (the default) is the historic search;
+    /// quantized pins swap every PhaseGemm candidate for its
+    /// reduced-precision twin and cache the verdict under the
+    /// `+{prec}`-suffixed key.  Forward-only: the backward space has no
+    /// quantized dispatch, so [`tune_layer_backward`](Self::tune_layer_backward)
+    /// always searches f32.
+    pub precision: Precision,
 }
 
 impl Tuner {
@@ -86,6 +95,7 @@ impl Tuner {
             budget: MeasureBudget::default(),
             batch: 1,
             isa_pin: None,
+            precision: Precision::F32,
         }
     }
 
@@ -100,6 +110,7 @@ impl Tuner {
             budget: MeasureBudget::default(),
             batch,
             isa_pin: None,
+            precision: Precision::F32,
         }
     }
 
@@ -120,6 +131,23 @@ impl Tuner {
         self.space
             .retain(|s| s.formulation != Formulation::PhaseGemm || s.isa == isa);
         self.isa_pin = Some(isa);
+        self
+    }
+
+    /// Pin the GEMM candidates' storage precision (`ukstc tune
+    /// --precision f16|bf16|int8`): every PhaseGemm candidate in the
+    /// forward space is replaced by its `with_precision` twin, so the
+    /// search measures the widening kernels against the untouched
+    /// direct lanes and the verdict answers "best strategy *at this
+    /// precision*".  Direct candidates are normalized to f32 by
+    /// `with_precision`, i.e. unchanged — the serial seed at element
+    /// zero survives.  An `F32` pin is the identity, keeping the
+    /// historic cache key valid.
+    pub fn pin_precision(mut self, precision: Precision) -> Tuner {
+        for s in &mut self.space {
+            *s = s.with_precision(precision);
+        }
+        self.precision = precision;
         self
     }
 
@@ -170,7 +198,9 @@ impl Tuner {
         cache: &mut TuningCache,
         measurer: &mut M,
     ) -> TunedPlan {
-        if let Some(entry) = cache.get_batch(plan.params(), self.space_workers(), self.batch) {
+        if let Some(entry) =
+            cache.get_batch_at(plan.params(), self.space_workers(), self.batch, self.precision)
+        {
             crate::obs::registry::counter("tune.cache_hits").inc();
             return TunedPlan {
                 params: *plan.params(),
@@ -182,10 +212,11 @@ impl Tuner {
         }
         crate::obs::registry::counter("tune.cache_misses").inc();
         let tuned = self.tune_layer(plan, measurer);
-        cache.put_with_candidates_batch(
+        cache.put_with_candidates_batch_at(
             plan.params(),
             self.space_workers(),
             self.batch,
+            self.precision,
             tuned.strategy,
             tuned.best_seconds,
             &tuned.candidates,
@@ -437,6 +468,51 @@ mod tests {
         assert!(scalar
             .space
             .contains(&ExecStrategy::serial_gemm().with_isa(Isa::Scalar)));
+    }
+
+    #[test]
+    fn precision_pin_quantizes_gemm_lanes_and_keys_by_precision() {
+        // The pin swaps PhaseGemm candidates for their quantized twins
+        // and leaves direct lanes (and the serial seed) untouched.
+        let tuner = Tuner::new(4).pin_precision(Precision::F16);
+        assert_eq!(tuner.precision, Precision::F16);
+        assert_eq!(tuner.space[0], ExecStrategy::serial(), "seed survives the pin");
+        assert_eq!(tuner.space.len(), Tuner::new(4).space.len(), "pin is a map, not a filter");
+        for s in &tuner.space {
+            match s.formulation {
+                Formulation::PhaseGemm => assert_eq!(s.precision, Precision::F16),
+                _ => assert_eq!(s.precision, Precision::F32),
+            }
+        }
+        assert!(tuner
+            .space
+            .iter()
+            .any(|s| s.formulation == Formulation::PhaseGemm));
+        assert_eq!(tuner.space_workers(), 4);
+        // An f32 pin is the identity.
+        assert_eq!(Tuner::new(4).pin_precision(Precision::F32).space, Tuner::new(4).space);
+        // Verdicts live under the +f16 key: the unpinned tuner misses,
+        // the pinned one hits without re-measuring.
+        let winner = ExecStrategy::serial_gemm().with_precision(Precision::F16);
+        let mut m = Scripted {
+            incumbents: Vec::new(),
+            winner,
+        };
+        let mut cache = TuningCache::in_memory();
+        let tuned = tuner.tune_layer_cached(&plan(), &mut cache, &mut m);
+        assert_eq!(tuned.strategy, winner);
+        assert!(cache.get(plan().params(), tuner.space_workers()).is_none());
+        assert!(cache
+            .get_batch_at(plan().params(), tuner.space_workers(), 1, Precision::F16)
+            .is_some());
+        let timed = m.incumbents.len();
+        let again = tuner.tune_layer_cached(&plan(), &mut cache, &mut m);
+        assert!(again.cached);
+        assert_eq!(m.incumbents.len(), timed, "hit must not measure");
+        // The backward search stays f32 even under a quantized pin —
+        // the backward lanes have no quantized dispatch to measure.
+        let bwd = tuner.tune_layer_backward(&plan(), &mut m);
+        assert!(bwd.candidates.iter().all(|(s, _)| s.precision == Precision::F32));
     }
 
     #[test]

@@ -355,4 +355,107 @@ fn planned_path_is_zero_alloc_after_warmup() {
         spans.iter().any(|r| r.name == "conv.phase"),
         "traced runs should have recorded per-phase spans"
     );
+
+    // --- Part 7: the quantized phase-GEMM lanes (ISSUE 9, DESIGN.md
+    // §Reduced-Precision) extend the contract.  Exact sizing first: a
+    // cold arena grows its f32 region to `scratch_floats` and its
+    // reduced-precision lane to exactly `quant_patch_elems` elements —
+    // and the u16 (f16/bf16) and i8 arenas grow independently, each
+    // only when its own lane first runs.
+    use ukstc::conv::quant::Precision;
+    let f16 = ExecStrategy::serial_gemm().with_precision(Precision::F16);
+    let bf16 = ExecStrategy::serial_gemm().with_precision(Precision::Bf16);
+    let int8 = ExecStrategy::serial_gemm().with_precision(Precision::Int8);
+    let x0c = &cases[0].0;
+    let mut out7 = plan0.new_output();
+    let mut outb7 = plan0.new_batch_output(batch);
+    {
+        let mut cold = Scratch::new();
+        plan0.run_with(&f16, x0c, &mut cold, &mut out7);
+        assert_eq!(
+            cold.capacity_floats(),
+            plan0.scratch_floats(),
+            "quantized serial f32-region sizing is not exact"
+        );
+        assert_eq!(
+            cold.q16_capacity_elems(),
+            plan0.quant_patch_elems(),
+            "16-bit quantized-patch sizing is not exact"
+        );
+        assert_eq!(
+            cold.q8_capacity_elems(),
+            0,
+            "the 16-bit lane must not grow the int8 arena"
+        );
+        plan0.run_with(&int8, x0c, &mut cold, &mut out7);
+        assert_eq!(
+            cold.q8_capacity_elems(),
+            plan0.quant_patch_elems(),
+            "int8 quantized-patch sizing is not exact"
+        );
+        assert_eq!(
+            cold.q16_capacity_elems(),
+            plan0.quant_patch_elems(),
+            "the int8 lane must not grow the 16-bit arena"
+        );
+        // Fused batched quantized sizing: the stacked [N·rows, K]
+        // patch quantizes whole — exactly N× the per-image elements.
+        plan0.run_batch_with(&f16, &xb, &mut cold, &mut outb7);
+        assert_eq!(
+            cold.q16_capacity_elems(),
+            plan0.quant_patch_elems_batch(batch),
+            "batched 16-bit quantized-patch sizing is not exact"
+        );
+        assert_eq!(
+            cold.capacity_floats(),
+            plan0.scratch_floats_gemm_batch(batch).max(plan0.scratch_floats()),
+            "batched quantized f32-region sizing is not exact"
+        );
+    }
+    // Steady state: warm the shared arena across every serial
+    // quantized lane (single-image and fused batched, all three
+    // precisions), then nothing allocates — the quantized patch lives
+    // in the arena's reduced-precision lanes and the quantized packed
+    // panels (and int8 scales) live in the plan.
+    for s in [&f16, &bf16, &int8] {
+        plan0.run_with(s, x0c, &mut scratch, &mut out7);
+        plan0.run_batch_with(s, &xb, &mut scratch, &mut outb7);
+    }
+    let before = allocs();
+    for _ in 0..5 {
+        for s in [&f16, &bf16, &int8] {
+            plan0.run_with(s, x0c, &mut scratch, &mut out7);
+            plan0.run_batch_with(s, &xb, &mut scratch, &mut outb7);
+        }
+    }
+    assert_eq!(
+        allocs(),
+        before,
+        "quantized lanes heap-allocated in steady state (warm arena)"
+    );
+    // Results stay within the documented drift bound after all that
+    // reuse (int8 ran last — the loosest lane; bound per DESIGN.md
+    // §Reduced-Precision: ≤ cin·⌈k/2⌉² products per output element,
+    // each operand within absmax/254 of its f32 value, 2× margin).
+    let want = unified::transpose_conv_seg(x0c, plan0.seg(), 2);
+    let amax = x0c.data.iter().fold(0.0f32, |m, v| m.max(v.abs()));
+    let kmax = plan0
+        .seg()
+        .subs
+        .iter()
+        .flat_map(|s| &s.data)
+        .fold(0.0f32, |m, v| m.max(v.abs()));
+    let bound = (16 * 2 * 2) as f32 * amax * kmax / 64.0;
+    assert!(
+        ops::max_abs_diff(&out7, &want) <= bound,
+        "int8 lane diverged past its drift bound after arena reuse"
+    );
+    for i in 0..batch {
+        let want = unified::transpose_conv_seg(&xb.feature(i), plan0.seg(), 2);
+        let got = Feature::from_vec(want.h, want.w, want.c, outb7.image(i).to_vec());
+        assert!(
+            ops::max_abs_diff(&got, &want) <= bound,
+            "batched int8 lane diverged past its drift bound (image {i})"
+        );
+    }
 }

@@ -15,6 +15,7 @@
 //! direct reference check below exercises implicitly.
 
 use ukstc::conv::plan::{ConvTransposePlan, Scratch};
+use ukstc::conv::quant::Precision;
 use ukstc::conv::simd::Isa;
 use ukstc::conv::ConvTransposeParams;
 use ukstc::tensor::{ops, Feature, Kernel};
@@ -66,6 +67,89 @@ fn every_supported_lane_matches_scalar_across_geometry_envelope() {
                             err < 1e-4,
                             "{} vs forced scalar: {err} (n={n_in} p={padding} cout={cout})",
                             strategy.name()
+                        );
+                    }
+                }
+            }
+        }
+    }
+}
+
+#[test]
+fn quantized_lanes_bounded_drift_across_geometry_envelope() {
+    // DESIGN.md §Reduced-Precision: the quantized phase-GEMM lanes
+    // store the packed B panel (and the im2col patch) at reduced
+    // precision but accumulate in f32 (exact i32 for int8), so their
+    // drift against the f32 lane is bounded by per-product operand
+    // rounding summed over the ≤ cin·⌈k/2⌉² contributions per output
+    // element.  The bound below is that triangle-inequality worst case
+    // with a 2× margin — scale-aware (amax·kmax), not a magic epsilon,
+    // so it stays meaningful across the whole geometry envelope.
+    let mut rng = Rng::seeded(0x51D3);
+    let cin = 3;
+    for n_in in [4usize, 5] {
+        for padding in 0..=3usize {
+            for cout in [1usize, 3, 8, 17] {
+                let p = ConvTransposeParams::new(n_in, 4, padding, cin, cout);
+                let k = Kernel::random(4, cin, cout, &mut rng);
+                let plan = ConvTransposePlan::new(p, &k);
+                let x = Feature::random(n_in, n_in, cin, &mut rng);
+                let mut scratch = Scratch::with_floats(plan.scratch_floats());
+                let mut reference = plan.new_output();
+                plan.run_with(&ExecStrategy::serial_gemm(), &x, &mut scratch, &mut reference);
+                let amax = x.data.iter().fold(0.0f32, |m, v| m.max(v.abs()));
+                let kmax = k.data.iter().fold(0.0f32, |m, v| m.max(v.abs()));
+                // ≤ cin·2·2 products per output element for a 4×4
+                // kernel (each phase sub-kernel is 2×2), each term at
+                // most amax·kmax in magnitude.
+                let unit = (cin * 2 * 2) as f32 * amax * kmax;
+                for (prec, coeff) in [
+                    // f16: ≤ 2·2^-11 relative per product (both
+                    // operands stored), bound 2^-9 = 2× margin.
+                    (Precision::F16, 1.0 / 512.0),
+                    // bf16: ≤ 2·2^-8 relative per product, 2× margin.
+                    (Precision::Bf16, 1.0 / 64.0),
+                    // int8: ≤ absmax/254 absolute per operand (symmetric
+                    // absmax scale, round-to-nearest), ≈ amax·kmax/127
+                    // per product, 2× margin.
+                    (Precision::Int8, 1.0 / 64.0),
+                ] {
+                    let pinned = ExecStrategy::serial_gemm().with_precision(prec);
+                    let mut got = plan.new_output();
+                    plan.run_with(&pinned, &x, &mut scratch, &mut got);
+                    assert!(
+                        got.data.iter().all(|v| v.is_finite()),
+                        "{} produced non-finite output (n={n_in} p={padding} cout={cout})",
+                        pinned.name()
+                    );
+                    let err = ops::max_abs_diff(&got, &reference);
+                    let bound = coeff * unit;
+                    assert!(
+                        err <= bound,
+                        "{} vs f32: {err} > bound {bound} (n={n_in} p={padding} cout={cout})",
+                        pinned.name()
+                    );
+                    // Cross-lane agreement of the same precision: the
+                    // 16-bit lanes carry no scales and accumulate in a
+                    // fixed k-order per output row, so the row-parallel
+                    // dispatch is bit-identical to serial; int8 swaps
+                    // per-phase for per-row patch scales, which moves
+                    // the result only within the quantization bound.
+                    let par = ExecStrategy::gemm_parallel(3).with_precision(prec);
+                    let mut par_out = plan.new_output();
+                    plan.run_with(&par, &x, &mut scratch, &mut par_out);
+                    let par_err = ops::max_abs_diff(&par_out, &got);
+                    if prec == Precision::Int8 {
+                        assert!(
+                            par_err <= 2.0 * bound,
+                            "{} vs serial int8: {par_err} (n={n_in} p={padding} cout={cout})",
+                            par.name()
+                        );
+                    } else {
+                        assert_eq!(
+                            par_err, 0.0,
+                            "{} must be bit-identical to serial (n={n_in} p={padding} cout={cout})",
+                            par.name()
                         );
                     }
                 }
