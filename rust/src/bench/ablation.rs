@@ -43,10 +43,18 @@
 //!    the layer's f32 lane, and packed-operand bytes in one row.
 //!    [`precision_json`] serializes this ablation into the
 //!    `BENCH_*.json` snapshots.
+//! 13. **Fused vs separate epilogue** (DESIGN.md §Fused-Epilogue): the
+//!    phase-GEMM engine storing bias+activation in-register straight
+//!    into the strided output vs the historic slab → scatter →
+//!    separate bias/activation passes, per Table-4 layer × batch size,
+//!    with GF/s and the analytic epilogue bytes each route moves.
+//!    [`fusion_json`] serializes this ablation into the `fusion`
+//!    section of the `BENCH_*.json` snapshots.
 
 use std::collections::BTreeMap;
 
 use crate::conv::backward::{grad_input_unified, grad_kernel_unified};
+use crate::conv::gemm;
 use crate::conv::parallel::{run, Algorithm, Lane};
 use crate::conv::plan::{ConvTransposePlan, Scratch};
 use crate::conv::quant::Precision;
@@ -735,6 +743,153 @@ pub fn precision_json(model: GanModel, cfg: &BenchConfig) -> Json {
     Json::Arr(rows)
 }
 
+/// Ablation 13 (DESIGN.md §Fused-Epilogue): one row per
+/// `(Table-4 layer, batch size)` — the planned phase-GEMM engine with
+/// the layer epilogue (per-channel bias + ReLU) applied the historic
+/// way (phase slab → `scatter_rows` → separate bias pass → separate
+/// activation pass) vs fused in-register into the strided output
+/// store.  Same packed operands, identical MACs — the delta is pure
+/// memory traffic, so the row also carries the analytic epilogue
+/// bytes of each route: the phases partition the output, so per
+/// output float the separate route moves 7 floats (slab write, slab
+/// read, scatter write, bias read+write, activation read+write) where
+/// the fused route moves 1 (the single epilogue store).
+pub struct EpilogueFusionRow {
+    pub layer: String,
+    pub batch: usize,
+    /// Slab + scatter + separate bias/activation passes.
+    pub separate: Entry,
+    /// Bias+activation folded into the strided GEMM store.
+    pub fused: Entry,
+    /// Analytic output-side bytes of the separate route (7 floats per
+    /// output element).
+    pub separate_bytes: u64,
+    /// Analytic output-side bytes of the fused route (1 float per
+    /// output element).
+    pub fused_bytes: u64,
+    /// Analytic MACs per batch (shared by both routes).
+    pub macs: u64,
+}
+
+/// Measure the fused-vs-separate epilogue per layer of `model` at each
+/// batch size (the printed ablation uses DC-GAN and batches 1/4/8;
+/// tests use the lighter GP-GAN).
+pub fn epilogue_fusion(
+    model: GanModel,
+    cfg: &BenchConfig,
+    batches: &[usize],
+) -> Vec<EpilogueFusionRow> {
+    let mut rng = Rng::seeded(0xFC);
+    let sep = ExecStrategy::serial_gemm().fused();
+    let fus = ExecStrategy::serial_gemm().fused().fused_epilogue();
+    let mut rows = Vec::new();
+    for spec in model.layers() {
+        let k = Kernel::random(spec.ksize, spec.cin, spec.cout, &mut rng);
+        let plan = ConvTransposePlan::new(spec.params(), &k);
+        let bias = Feature::random(1, 1, spec.cout, &mut rng).data;
+        for &n in batches {
+            let n = n.max(1);
+            let xb = FeatureBatch::random(n, spec.n_in, spec.n_in, spec.cin, &mut rng);
+            let macs = n as u64 * flops::unified(plan.params());
+            // The separate route's arena covers the fused one (which
+            // drops the phase region entirely).
+            let mut scratch = Scratch::with_floats(plan.scratch_floats_for_batch(&sep, n));
+            let mut outb = plan.new_batch_output(n);
+            let epi = gemm::Epilogue {
+                bias: Some(&bias[..]),
+                act: gemm::Activation::Relu,
+            };
+            let separate = Entry::measure(format!("separate b{n}"), cfg, || {
+                plan.run_batch_with_epilogue(&sep, &xb, &mut scratch, &mut outb, &epi);
+                outb.data[0]
+            })
+            .with_macs(macs);
+            let fused = Entry::measure(format!("fused b{n}"), cfg, || {
+                plan.run_batch_with_epilogue(&fus, &xb, &mut scratch, &mut outb, &epi);
+                outb.data[0]
+            })
+            .with_macs(macs);
+            let out_floats = outb.data.len() as u64;
+            rows.push(EpilogueFusionRow {
+                layer: spec.describe(),
+                batch: n,
+                separate,
+                fused,
+                separate_bytes: 7 * 4 * out_floats,
+                fused_bytes: 4 * out_floats,
+                macs,
+            });
+        }
+    }
+    rows
+}
+
+/// Print the ablation-13 table (fused vs separate epilogue, per layer
+/// × batch size).
+pub fn print_epilogue_fusion(rows: &[EpilogueFusionRow]) {
+    let table: Vec<Vec<String>> = rows
+        .iter()
+        .map(|r| {
+            vec![
+                r.layer.clone(),
+                r.batch.to_string(),
+                timing::fmt_duration(r.separate.seconds),
+                timing::fmt_duration(r.fused.seconds),
+                report::gflops_cell(r.macs, r.separate.seconds),
+                report::gflops_cell(r.macs, r.fused.seconds),
+                format!("{} → {}", r.separate_bytes, r.fused_bytes),
+                report::speedup(r.separate.seconds / r.fused.seconds),
+            ]
+        })
+        .collect();
+    report::print_table(
+        "Ablation 13 — fused vs separate epilogue (planned phase-GEMM, Table-4 DC-GAN layers)",
+        &[
+            "layer",
+            "batch",
+            "separate",
+            "fused",
+            "separate GF/s",
+            "fused GF/s",
+            "epilogue bytes",
+            "fused speedup",
+        ],
+        &table,
+    );
+}
+
+/// The `fusion` section of the `BENCH_*.json` snapshot: ablation 13
+/// serialized — one object per (layer, batch) with both latencies, the
+/// speedup, and the analytic epilogue bytes, so the retired memory
+/// pass is machine-checkable.
+pub fn fusion_json(model: GanModel, cfg: &BenchConfig, batches: &[usize]) -> Json {
+    let rows = epilogue_fusion(model, cfg, batches)
+        .into_iter()
+        .map(|r| {
+            let mut o = BTreeMap::new();
+            o.insert("layer".to_string(), Json::Str(r.layer));
+            o.insert("batch".to_string(), Json::Num(r.batch as f64));
+            o.insert("separate_s".to_string(), Json::Num(r.separate.seconds));
+            o.insert("fused_s".to_string(), Json::Num(r.fused.seconds));
+            o.insert(
+                "fused_speedup".to_string(),
+                Json::Num(r.separate.seconds / r.fused.seconds),
+            );
+            o.insert(
+                "separate_epilogue_bytes".to_string(),
+                Json::Num(r.separate_bytes as f64),
+            );
+            o.insert(
+                "fused_epilogue_bytes".to_string(),
+                Json::Num(r.fused_bytes as f64),
+            );
+            o.insert("macs".to_string(), Json::Num(r.macs as f64));
+            Json::Obj(o)
+        })
+        .collect();
+    Json::Arr(rows)
+}
+
 /// The `training_step` bench column: a full forward→MSE→backward→SGD
 /// step on the smallest Table-4 generator, direct vs phase-GEMM
 /// backward data-grad lanes ([`TrainStep`]).
@@ -929,6 +1084,7 @@ pub fn run_all(cfg: &BenchConfig) {
         &tracing_overhead(cfg),
     );
     print_precision_lanes(&precision_lanes(GanModel::DcGan, cfg));
+    print_epilogue_fusion(&epilogue_fusion(GanModel::DcGan, cfg, &[1, 4, 8]));
 }
 
 #[cfg(test)]
@@ -1115,6 +1271,38 @@ mod tests {
             .is_some());
         assert!(items[0]
             .get("packed_operand_bytes")
+            .and_then(Json::as_f64)
+            .is_some());
+    }
+
+    #[test]
+    fn epilogue_fusion_covers_layers_and_batches() {
+        let rows = epilogue_fusion(GanModel::GpGan, &quick(), &[1, 3]);
+        assert_eq!(rows.len(), 2 * GanModel::GpGan.layers().len());
+        for r in &rows {
+            assert!(r.separate.seconds > 0.0 && r.fused.seconds > 0.0, "{}", r.layer);
+            assert!(r.batch == 1 || r.batch == 3);
+            assert_eq!(r.fused.macs, Some(r.macs));
+            assert_eq!(r.separate.macs, Some(r.macs));
+            // Phases partition the output, so the analytic epilogue
+            // traffic is exactly 7 floats (slab write+read, scatter
+            // write, bias RMW, activation RMW) vs the single fused
+            // store per output element.
+            assert_eq!(r.separate_bytes, 7 * r.fused_bytes, "{}", r.layer);
+            assert!(r.fused_bytes > 0);
+        }
+        print_epilogue_fusion(&rows);
+        // The snapshot section round-trips through the JSON layer.
+        let doc = fusion_json(GanModel::GpGan, &quick(), &[1, 3]);
+        let text = doc.to_string_compact();
+        let parsed = crate::util::json::parse(&text).unwrap();
+        let Json::Arr(items) = parsed else {
+            panic!("fusion section must be an array");
+        };
+        assert_eq!(items.len(), rows.len());
+        assert!(items[0].get("fused_speedup").and_then(Json::as_f64).is_some());
+        assert!(items[0]
+            .get("separate_epilogue_bytes")
             .and_then(Json::as_f64)
             .is_some());
     }

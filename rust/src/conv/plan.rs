@@ -74,8 +74,9 @@
 //! they measured.
 
 use crate::obs::trace;
+use crate::tensor::ops;
 use crate::tensor::{Feature, FeatureBatch, Kernel, SubKernel};
-use crate::tune::space::{ExecStrategy, Formulation, ParAxis};
+use crate::tune::space::{EpilogueMode, ExecStrategy, Formulation, ParAxis};
 use crate::util::threadpool;
 
 use super::backward::flip_sub;
@@ -360,8 +361,9 @@ impl ConvTransposePlan {
     /// output and use no scratch at all, but sizing them like the
     /// direct paths keeps one arena safely shared across pins).
     pub fn scratch_floats_for(&self, strategy: &ExecStrategy) -> usize {
-        match strategy.formulation {
-            Formulation::PhaseGemm => self.scratch_floats(),
+        match (strategy.formulation, strategy.epilogue) {
+            (Formulation::PhaseGemm, EpilogueMode::Fused) => self.scratch_floats_gemm_fused(),
+            (Formulation::PhaseGemm, EpilogueMode::Separate) => self.scratch_floats(),
             _ => self.scratch_floats_direct(),
         }
     }
@@ -387,6 +389,29 @@ impl ConvTransposePlan {
         self.slab_floats + n * (self.max_phase_floats() + self.patch_floats)
     }
 
+    /// Exact scratch floats of the fused-epilogue GEMM lanes
+    /// ([`run_gemm_fused`](Self::run_gemm_fused) /
+    /// [`run_gemm_fused_par_rows`](Self::run_gemm_fused_par_rows),
+    /// DESIGN.md §Fused-Epilogue): slabs + the im2col patch region
+    /// only.  Strictly smaller than [`scratch_floats`](Self::scratch_floats)
+    /// whenever the layer has any output — the accumulator tiles store
+    /// straight into the strided output, so the phase-slab region is
+    /// never claimed.
+    pub fn scratch_floats_gemm_fused(&self) -> usize {
+        self.slab_floats + self.patch_floats
+    }
+
+    /// Exact scratch floats of the fused-epilogue batched GEMM lanes
+    /// ([`run_gemm_fused_batch`](Self::run_gemm_fused_batch) /
+    /// [`run_gemm_fused_batch_par`](Self::run_gemm_fused_batch_par))
+    /// for batch size `n`: one reusable slab area plus `n` stacked
+    /// im2col patch regions — the `n ×` phase-output region of
+    /// [`scratch_floats_gemm_batch`](Self::scratch_floats_gemm_batch)
+    /// is never claimed.
+    pub fn scratch_floats_gemm_batch_fused(&self, n: usize) -> usize {
+        self.slab_floats + n * self.patch_floats
+    }
+
     /// Exact scratch floats of the image-parallel batched direct lane
     /// ([`run_batch_par`](Self::run_batch_par)): one full direct region
     /// per image, so every `(image, phase, row)` job owns disjoint
@@ -401,9 +426,12 @@ impl ConvTransposePlan {
     /// direct lane loops images through one direct region, and the
     /// per-element lanes allocate their own buffers).
     pub fn scratch_floats_for_batch(&self, strategy: &ExecStrategy, n: usize) -> usize {
-        match strategy.formulation {
-            Formulation::PhaseGemm => self.scratch_floats_gemm_batch(n),
-            Formulation::PhaseDecomposed if strategy.workers > 1 => {
+        match (strategy.formulation, strategy.epilogue) {
+            (Formulation::PhaseGemm, EpilogueMode::Fused) => {
+                self.scratch_floats_gemm_batch_fused(n)
+            }
+            (Formulation::PhaseGemm, EpilogueMode::Separate) => self.scratch_floats_gemm_batch(n),
+            (Formulation::PhaseDecomposed, _) if strategy.workers > 1 => {
                 self.scratch_floats_batch_par(n)
             }
             _ => self.scratch_floats_direct(),
@@ -852,6 +880,467 @@ impl ConvTransposePlan {
                 pp.geom.n_rows,
                 pp.geom.n_cols,
             );
+        }
+    }
+
+    // ------------------------------------------- fused-epilogue lanes
+
+    /// The [`gemm::StridedDst`] mapping one phase's GEMM rows onto the
+    /// interleaved output (DESIGN.md §Fused-Epilogue): row-major phase
+    /// row `py`, col `px` lands at output pixel
+    /// `(rp + 2·py, sp + 2·px)`.  `img_rows`/`img_stride` thread the
+    /// batched variant (phase rows repeat per image, `img_rows = 0`
+    /// means single image).
+    fn phase_dst<'a>(
+        &self,
+        pp: &PhasePlan,
+        out: &'a mut [f32],
+        img_rows: usize,
+        img_stride: usize,
+    ) -> gemm::StridedDst<'a> {
+        let cout = self.params.cout;
+        gemm::StridedDst {
+            out,
+            base: (pp.geom.rp * self.out + pp.geom.sp) * cout,
+            col_stride: 2 * cout,
+            row_stride: 2 * self.out * cout,
+            n_cols: pp.geom.n_cols,
+            img_rows,
+            img_stride,
+        }
+    }
+
+    /// [`phase_dst`](Self::phase_dst) restricted to one output row (the
+    /// row-parallel fused lanes hand each job a disjoint
+    /// `out_w·Cout` row slice): every GEMM row `r < n_cols` maps into
+    /// the same output row, so the row stride is never taken.
+    fn phase_row_dst<'a>(&self, pp: &PhasePlan, row: &'a mut [f32]) -> gemm::StridedDst<'a> {
+        let cout = self.params.cout;
+        gemm::StridedDst {
+            out: row,
+            base: pp.geom.sp * cout,
+            col_stride: 2 * cout,
+            row_stride: 0,
+            n_cols: pp.geom.n_cols,
+            img_rows: 0,
+            img_stride: 0,
+        }
+    }
+
+    /// Epilogue-only drain of one phase's strided output rows — the
+    /// `k = 0` degenerate of the row-parallel fused lanes (zero-tap
+    /// sub-kernel): the GEMM contributes nothing, but the phase still
+    /// owns its rows, so bias + activation must be stored over zero
+    /// accumulators exactly like the separate path's scatter of a
+    /// zero slab.
+    fn fused_epilogue_only_rows(
+        &self,
+        pp: &PhasePlan,
+        out: &mut [f32],
+        workers: usize,
+        epi: &gemm::Epilogue<'_>,
+    ) {
+        let cout = self.params.cout;
+        let row_floats = self.out * cout;
+        let jobs: Vec<&mut [f32]> = out
+            .chunks_mut(row_floats)
+            .skip(pp.geom.rp)
+            .step_by(2)
+            .take(pp.geom.n_rows)
+            .collect();
+        threadpool::parallel_drain(jobs, workers, |row| {
+            let mut dst = self.phase_row_dst(pp, row);
+            gemm::gemm_packed_fused(Isa::Scalar, &[], &[], pp.geom.n_cols, 0, cout, &mut dst, epi);
+        });
+    }
+
+    /// Serial fused-epilogue phase-GEMM lane (DESIGN.md
+    /// §Fused-Epilogue): identical phase walk to
+    /// [`run_gemm`](Self::run_gemm), but each accumulator tile stores
+    /// **directly** into the strided output positions with `epi`'s
+    /// bias + activation applied in-register — no phase slab, no
+    /// scatter pass, no separate epilogue pass.  Scalar microkernels
+    /// are bit-identical to slab + scatter + apply (the slab
+    /// store/reload is an exact f32 round-trip); vector lanes hold the
+    /// usual 1e-4 reassociation contract.  Zero-alloc in steady state
+    /// with the strictly smaller
+    /// [`scratch_floats_gemm_fused`](Self::scratch_floats_gemm_fused)
+    /// arena claim.
+    pub fn run_gemm_fused(
+        &self,
+        x: &Feature,
+        scratch: &mut Scratch,
+        out: &mut Feature,
+        epi: &gemm::Epilogue<'_>,
+    ) {
+        self.run_gemm_fused_isa(Isa::active(), x, scratch, out, epi);
+    }
+
+    /// [`run_gemm_fused`](Self::run_gemm_fused) with the microkernel
+    /// lane pinned (see [`run_gemm_isa`](Self::run_gemm_isa)).
+    fn run_gemm_fused_isa(
+        &self,
+        isa: Isa,
+        x: &Feature,
+        scratch: &mut Scratch,
+        out: &mut Feature,
+        epi: &gemm::Epilogue<'_>,
+    ) {
+        self.check_shapes(x, out);
+        let buf = scratch.ensure(self.scratch_floats_gemm_fused());
+        self.run_gemm_fused_image(isa, &x.data, buf, &mut out.data, epi);
+    }
+
+    /// Serial fused core over raw image views (`buf` laid out as
+    /// [`scratch_floats_gemm_fused`](Self::scratch_floats_gemm_fused):
+    /// slabs | patch — no phase area).
+    fn run_gemm_fused_image(
+        &self,
+        isa: Isa,
+        x: &[f32],
+        buf: &mut [f32],
+        out: &mut [f32],
+        epi: &gemm::Epilogue<'_>,
+    ) {
+        let n_in = self.params.n_in;
+        let cin = self.params.cin;
+        let cout = self.params.cout;
+        let (slab_area, patch_area) = buf.split_at_mut(self.slab_floats);
+        for (pi, pp) in self.phases.iter().enumerate() {
+            let _phase_span = trace::span("conv.phase", isa.gemm_lane_tag(), trace::NONE, pi as u32);
+            let slab = &mut slab_area[pp.slab_off..pp.slab_off + pp.slab_len];
+            build_slab_view(x, n_in, n_in, cin, &pp.geom, slab);
+            let sub = &self.seg.subs[pp.geom.sub];
+            let patch = &mut patch_area[..pp.patch_len];
+            gemm::im2col_rows(
+                slab,
+                pp.slab_w,
+                cin,
+                sub.rows,
+                sub.cols,
+                pp.geom.n_cols,
+                0,
+                pp.geom.n_rows,
+                patch,
+            );
+            let mut dst = self.phase_dst(pp, out, 0, 0);
+            gemm::gemm_packed_fused(
+                isa,
+                patch,
+                &pp.packed_kernel,
+                pp.geom.n_rows * pp.geom.n_cols,
+                pp.gemm_k,
+                cout,
+                &mut dst,
+                epi,
+            );
+        }
+    }
+
+    /// Row-parallel fused-epilogue phase-GEMM lane: like
+    /// [`run_gemm_par_rows`](Self::run_gemm_par_rows), but every job
+    /// owns the **output row itself** (a disjoint `out_w·Cout` slice
+    /// reached by striding the output's rows by 2 from `rp`) instead
+    /// of a phase-slab row, and its GEMM stores tiles straight into
+    /// the strided columns with the epilogue folded in — the scatter
+    /// loop disappears entirely.
+    pub fn run_gemm_fused_par_rows(
+        &self,
+        x: &Feature,
+        scratch: &mut Scratch,
+        out: &mut Feature,
+        workers: usize,
+        epi: &gemm::Epilogue<'_>,
+    ) {
+        self.run_gemm_fused_par_rows_isa(Isa::active(), x, scratch, out, workers, epi);
+    }
+
+    /// [`run_gemm_fused_par_rows`](Self::run_gemm_fused_par_rows) with
+    /// the microkernel lane pinned.
+    fn run_gemm_fused_par_rows_isa(
+        &self,
+        isa: Isa,
+        x: &Feature,
+        scratch: &mut Scratch,
+        out: &mut Feature,
+        workers: usize,
+        epi: &gemm::Epilogue<'_>,
+    ) {
+        let workers = workers.max(1);
+        if workers == 1 {
+            return self.run_gemm_fused_isa(isa, x, scratch, out, epi);
+        }
+        self.check_shapes(x, out);
+        let cin = self.params.cin;
+        let cout = self.params.cout;
+        let row_floats = self.out * cout;
+        let buf = scratch.ensure(self.scratch_floats_gemm_fused());
+        let (slab_area, patch_area) = buf.split_at_mut(self.slab_floats);
+        for pp in &self.phases {
+            let slab = &mut slab_area[pp.slab_off..pp.slab_off + pp.slab_len];
+            build_slab(x, &pp.geom, slab);
+        }
+        let slab_area: &[f32] = slab_area;
+        for pp in &self.phases {
+            let sub = &self.seg.subs[pp.geom.sub];
+            let patch_row_len = pp.geom.n_cols * pp.gemm_k;
+            if patch_row_len == 0 {
+                self.fused_epilogue_only_rows(pp, &mut out.data, workers, epi);
+                continue;
+            }
+            let jobs: Vec<(usize, &mut [f32], &mut [f32])> = out
+                .data
+                .chunks_mut(row_floats)
+                .skip(pp.geom.rp)
+                .step_by(2)
+                .take(pp.geom.n_rows)
+                .zip(patch_area[..pp.patch_len].chunks_mut(patch_row_len))
+                .enumerate()
+                .map(|(ri, (row, patch))| (ri, row, patch))
+                .collect();
+            threadpool::parallel_drain(jobs, workers, |(ri, row, patch)| {
+                let slab = &slab_area[pp.slab_off..pp.slab_off + pp.slab_len];
+                gemm::im2col_rows(
+                    slab,
+                    pp.slab_w,
+                    cin,
+                    sub.rows,
+                    sub.cols,
+                    pp.geom.n_cols,
+                    ri,
+                    ri + 1,
+                    patch,
+                );
+                let mut dst = self.phase_row_dst(pp, row);
+                gemm::gemm_packed_fused(
+                    isa,
+                    patch,
+                    &pp.packed_kernel,
+                    pp.geom.n_cols,
+                    pp.gemm_k,
+                    cout,
+                    &mut dst,
+                    epi,
+                );
+            });
+        }
+    }
+
+    /// Serial quantized fused-epilogue lane (DESIGN.md
+    /// §Fused-Epilogue / §Reduced-Precision): the quantized phase walk
+    /// of [`run_gemm_quant_isa`](Self::run_gemm_quant_isa) with the
+    /// widening GEMM storing straight into the strided output — the
+    /// int8 dequantization scale folds into the same epilogue step as
+    /// the bias + activation.  The quantized fused drivers are the
+    /// scalar panel loops, so this lane is **bit-identical** to the
+    /// separate quantized lane followed by the epilogue pass.
+    fn run_gemm_fused_quant(
+        &self,
+        precision: Precision,
+        x: &Feature,
+        scratch: &mut Scratch,
+        out: &mut Feature,
+        epi: &gemm::Epilogue<'_>,
+    ) {
+        self.check_shapes(x, out);
+        let (q16_n, q8_n) = quant_elem_split(precision, self.quant_patch_elems());
+        let (buf, q16, q8) = scratch.ensure_quant(self.scratch_floats_gemm_fused(), q16_n, q8_n);
+        let n_in = self.params.n_in;
+        let cin = self.params.cin;
+        let cout = self.params.cout;
+        let (slab_area, patch_area) = buf.split_at_mut(self.slab_floats);
+        for (pi, pp) in self.phases.iter().enumerate() {
+            let _phase_span = trace::span("conv.phase", precision.name(), trace::NONE, pi as u32);
+            let slab = &mut slab_area[pp.slab_off..pp.slab_off + pp.slab_len];
+            build_slab_view(&x.data, n_in, n_in, cin, &pp.geom, slab);
+            let sub = &self.seg.subs[pp.geom.sub];
+            let patch = &mut patch_area[..pp.patch_len];
+            gemm::im2col_rows(
+                slab,
+                pp.slab_w,
+                cin,
+                sub.rows,
+                sub.cols,
+                pp.geom.n_cols,
+                0,
+                pp.geom.n_rows,
+                patch,
+            );
+            let m = pp.geom.n_rows * pp.geom.n_cols;
+            let mut dst = self.phase_dst(pp, &mut out.data, 0, 0);
+            match precision {
+                Precision::F16 => {
+                    let qa = &mut q16[..pp.patch_len];
+                    quant::quantize_f16(patch, qa);
+                    gemm::gemm_packed_q16_fused(
+                        precision,
+                        qa,
+                        &pp.qpanel_f16,
+                        m,
+                        pp.gemm_k,
+                        cout,
+                        &mut dst,
+                        epi,
+                    );
+                }
+                Precision::Bf16 => {
+                    let qa = &mut q16[..pp.patch_len];
+                    quant::quantize_bf16(patch, qa);
+                    gemm::gemm_packed_q16_fused(
+                        precision,
+                        qa,
+                        &pp.qpanel_bf16,
+                        m,
+                        pp.gemm_k,
+                        cout,
+                        &mut dst,
+                        epi,
+                    );
+                }
+                Precision::Int8 => {
+                    let qa = &mut q8[..pp.patch_len];
+                    let a_scale = quant::int8_scale(quant::absmax(patch));
+                    quant::quantize_i8(patch, a_scale, qa);
+                    gemm::gemm_packed_q8_fused(
+                        qa,
+                        a_scale,
+                        &pp.qpanel_i8,
+                        &pp.qscale_i8,
+                        m,
+                        pp.gemm_k,
+                        cout,
+                        &mut dst,
+                        epi,
+                    );
+                }
+                Precision::F32 => unreachable!("f32 dispatches the exact fused GEMM lane"),
+            }
+        }
+    }
+
+    /// Row-parallel quantized fused-epilogue lane: every job im2cols
+    /// its row, quantizes it into its disjoint slice of the arena's
+    /// reduced-precision lane (per-row int8 activation scales, like
+    /// [`run_gemm_quant_par_rows_isa`](Self::run_gemm_quant_par_rows_isa)),
+    /// and stores the widening GEMM straight into its strided output
+    /// row with the epilogue folded in.
+    #[allow(clippy::too_many_arguments)]
+    fn run_gemm_fused_quant_par_rows(
+        &self,
+        precision: Precision,
+        x: &Feature,
+        scratch: &mut Scratch,
+        out: &mut Feature,
+        workers: usize,
+        epi: &gemm::Epilogue<'_>,
+    ) {
+        let workers = workers.max(1);
+        if workers == 1 {
+            return self.run_gemm_fused_quant(precision, x, scratch, out, epi);
+        }
+        self.check_shapes(x, out);
+        let cin = self.params.cin;
+        let cout = self.params.cout;
+        let row_floats = self.out * cout;
+        let (q16_n, q8_n) = quant_elem_split(precision, self.quant_patch_elems());
+        let (buf, q16, q8) = scratch.ensure_quant(self.scratch_floats_gemm_fused(), q16_n, q8_n);
+        let (slab_area, patch_area) = buf.split_at_mut(self.slab_floats);
+        for pp in &self.phases {
+            let slab = &mut slab_area[pp.slab_off..pp.slab_off + pp.slab_len];
+            build_slab(x, &pp.geom, slab);
+        }
+        let slab_area: &[f32] = slab_area;
+        for pp in &self.phases {
+            let sub = &self.seg.subs[pp.geom.sub];
+            let patch_row_len = pp.geom.n_cols * pp.gemm_k;
+            if patch_row_len == 0 {
+                self.fused_epilogue_only_rows(pp, &mut out.data, workers, epi);
+                continue;
+            }
+            let im2col_row = |ri: usize, patch: &mut [f32]| {
+                let slab = &slab_area[pp.slab_off..pp.slab_off + pp.slab_len];
+                gemm::im2col_rows(
+                    slab,
+                    pp.slab_w,
+                    cin,
+                    sub.rows,
+                    sub.cols,
+                    pp.geom.n_cols,
+                    ri,
+                    ri + 1,
+                    patch,
+                );
+            };
+            match precision {
+                Precision::F16 | Precision::Bf16 => {
+                    let panel: &[u16] = if precision == Precision::F16 {
+                        &pp.qpanel_f16
+                    } else {
+                        &pp.qpanel_bf16
+                    };
+                    let jobs: Vec<(usize, &mut [f32], &mut [f32], &mut [u16])> = out
+                        .data
+                        .chunks_mut(row_floats)
+                        .skip(pp.geom.rp)
+                        .step_by(2)
+                        .take(pp.geom.n_rows)
+                        .zip(patch_area[..pp.patch_len].chunks_mut(patch_row_len))
+                        .zip(q16[..pp.patch_len].chunks_mut(patch_row_len))
+                        .enumerate()
+                        .map(|(ri, ((row, patch), qrow))| (ri, row, patch, qrow))
+                        .collect();
+                    threadpool::parallel_drain(jobs, workers, |(ri, row, patch, qrow)| {
+                        im2col_row(ri, patch);
+                        if precision == Precision::F16 {
+                            quant::quantize_f16(patch, qrow);
+                        } else {
+                            quant::quantize_bf16(patch, qrow);
+                        }
+                        let mut dst = self.phase_row_dst(pp, row);
+                        gemm::gemm_packed_q16_fused(
+                            precision,
+                            qrow,
+                            panel,
+                            pp.geom.n_cols,
+                            pp.gemm_k,
+                            cout,
+                            &mut dst,
+                            epi,
+                        );
+                    });
+                }
+                Precision::Int8 => {
+                    let jobs: Vec<(usize, &mut [f32], &mut [f32], &mut [i8])> = out
+                        .data
+                        .chunks_mut(row_floats)
+                        .skip(pp.geom.rp)
+                        .step_by(2)
+                        .take(pp.geom.n_rows)
+                        .zip(patch_area[..pp.patch_len].chunks_mut(patch_row_len))
+                        .zip(q8[..pp.patch_len].chunks_mut(patch_row_len))
+                        .enumerate()
+                        .map(|(ri, ((row, patch), qrow))| (ri, row, patch, qrow))
+                        .collect();
+                    threadpool::parallel_drain(jobs, workers, |(ri, row, patch, qrow)| {
+                        im2col_row(ri, patch);
+                        let a_scale = quant::int8_scale(quant::absmax(patch));
+                        quant::quantize_i8(patch, a_scale, qrow);
+                        let mut dst = self.phase_row_dst(pp, row);
+                        gemm::gemm_packed_q8_fused(
+                            qrow,
+                            a_scale,
+                            &pp.qpanel_i8,
+                            &pp.qscale_i8,
+                            pp.geom.n_cols,
+                            pp.gemm_k,
+                            cout,
+                            &mut dst,
+                            epi,
+                        );
+                    });
+                }
+                Precision::F32 => unreachable!("f32 dispatches the exact fused GEMM lane"),
+            }
         }
     }
 
@@ -1574,6 +2063,365 @@ impl ConvTransposePlan {
         }
     }
 
+    /// Batched fused-epilogue phase-GEMM lane (DESIGN.md
+    /// §Fused-Epilogue): the stacked `[N·rows, K]` patch operand of
+    /// [`run_gemm_batch`](Self::run_gemm_batch) multiplied in a single
+    /// GEMM per phase, with every accumulator tile storing straight
+    /// into the owning image's strided output rows
+    /// (`img_rows`/`img_stride` on the [`gemm::StridedDst`]) and the
+    /// epilogue folded in — the `n ×` phase region and the per-image
+    /// scatter loop both disappear.
+    pub fn run_gemm_fused_batch(
+        &self,
+        x: &FeatureBatch,
+        scratch: &mut Scratch,
+        out: &mut FeatureBatch,
+        epi: &gemm::Epilogue<'_>,
+    ) {
+        self.run_gemm_fused_batch_isa(Isa::active(), x, scratch, out, epi);
+    }
+
+    /// [`run_gemm_fused_batch`](Self::run_gemm_fused_batch) with the
+    /// microkernel lane pinned.
+    fn run_gemm_fused_batch_isa(
+        &self,
+        isa: Isa,
+        x: &FeatureBatch,
+        scratch: &mut Scratch,
+        out: &mut FeatureBatch,
+        epi: &gemm::Epilogue<'_>,
+    ) {
+        self.check_batch_shapes(x, out);
+        let n = x.n;
+        let cout = self.params.cout;
+        let img_stride = out.image_floats();
+        let buf = scratch.ensure(self.scratch_floats_gemm_batch_fused(n));
+        let (slab_area, patch_area) = buf.split_at_mut(self.slab_floats);
+        for (pi, pp) in self.phases.iter().enumerate() {
+            let _phase_span = trace::span("conv.phase", isa.gemm_lane_tag(), trace::NONE, pi as u32);
+            self.stack_phase_patches(pp, x, slab_area, patch_area);
+            let img_rows = pp.geom.n_rows * pp.geom.n_cols;
+            let mut dst = self.phase_dst(pp, &mut out.data, img_rows, img_stride);
+            gemm::gemm_packed_fused(
+                isa,
+                &patch_area[..n * pp.patch_len],
+                &pp.packed_kernel,
+                n * img_rows,
+                pp.gemm_k,
+                cout,
+                &mut dst,
+                epi,
+            );
+        }
+    }
+
+    /// Row-parallel batched fused-epilogue lane: the stacked patch is
+    /// built image-serially (like
+    /// [`run_gemm_batch_par`](Self::run_gemm_batch_par)), then every
+    /// `(image, phase-row)` output row drains as its own fused GEMM
+    /// job across the pool — each job owns a disjoint output row and
+    /// its contiguous patch rows, so no post-GEMM scatter or epilogue
+    /// pass exists.
+    pub fn run_gemm_fused_batch_par(
+        &self,
+        x: &FeatureBatch,
+        scratch: &mut Scratch,
+        out: &mut FeatureBatch,
+        workers: usize,
+        epi: &gemm::Epilogue<'_>,
+    ) {
+        self.run_gemm_fused_batch_par_isa(Isa::active(), x, scratch, out, workers, epi);
+    }
+
+    /// [`run_gemm_fused_batch_par`](Self::run_gemm_fused_batch_par)
+    /// with the microkernel lane pinned.
+    fn run_gemm_fused_batch_par_isa(
+        &self,
+        isa: Isa,
+        x: &FeatureBatch,
+        scratch: &mut Scratch,
+        out: &mut FeatureBatch,
+        workers: usize,
+        epi: &gemm::Epilogue<'_>,
+    ) {
+        let workers = workers.max(1);
+        if workers == 1 {
+            return self.run_gemm_fused_batch_isa(isa, x, scratch, out, epi);
+        }
+        self.check_batch_shapes(x, out);
+        let n = x.n;
+        let cout = self.params.cout;
+        let out_h = self.out;
+        let row_floats = out_h * cout;
+        let buf = scratch.ensure(self.scratch_floats_gemm_batch_fused(n));
+        let (slab_area, patch_area) = buf.split_at_mut(self.slab_floats);
+        for pp in &self.phases {
+            self.stack_phase_patches(pp, x, slab_area, patch_area);
+            let patch_row_len = pp.geom.n_cols * pp.gemm_k;
+            if patch_row_len == 0 {
+                for i in 0..n {
+                    self.fused_epilogue_only_rows(pp, out.image_mut(i), workers, epi);
+                }
+                continue;
+            }
+            let patch: &[f32] = &patch_area[..n * pp.patch_len];
+            // Global output row `g` belongs to image `g / out_h` at
+            // height `y = g % out_h`; the phase owns it iff `y` sits on
+            // its parity grid within the phase's row count.
+            let jobs: Vec<(&[f32], &mut [f32])> = out
+                .data
+                .chunks_mut(row_floats)
+                .enumerate()
+                .filter_map(|(g, row)| {
+                    let (i, y) = (g / out_h, g % out_h);
+                    if y < pp.geom.rp || (y - pp.geom.rp) % 2 != 0 {
+                        return None;
+                    }
+                    let ri = (y - pp.geom.rp) / 2;
+                    if ri >= pp.geom.n_rows {
+                        return None;
+                    }
+                    let pr = i * pp.geom.n_rows + ri;
+                    Some((&patch[pr * patch_row_len..(pr + 1) * patch_row_len], row))
+                })
+                .collect();
+            threadpool::parallel_drain(jobs, workers, |(prow, row)| {
+                let mut dst = self.phase_row_dst(pp, row);
+                gemm::gemm_packed_fused(
+                    isa,
+                    prow,
+                    &pp.packed_kernel,
+                    pp.geom.n_cols,
+                    pp.gemm_k,
+                    cout,
+                    &mut dst,
+                    epi,
+                );
+            });
+        }
+    }
+
+    /// Serial batched quantized fused-epilogue lane: the stacked
+    /// quantized GEMM of
+    /// [`run_gemm_quant_batch_isa`](Self::run_gemm_quant_batch_isa)
+    /// (batch-wide int8 activation scale) storing straight into every
+    /// image's strided rows with the dequant scale folded into the
+    /// epilogue.
+    fn run_gemm_fused_quant_batch(
+        &self,
+        precision: Precision,
+        x: &FeatureBatch,
+        scratch: &mut Scratch,
+        out: &mut FeatureBatch,
+        epi: &gemm::Epilogue<'_>,
+    ) {
+        self.check_batch_shapes(x, out);
+        let n = x.n;
+        let cout = self.params.cout;
+        let img_stride = out.image_floats();
+        let (q16_n, q8_n) = quant_elem_split(precision, self.quant_patch_elems_batch(n));
+        let (buf, q16, q8) =
+            scratch.ensure_quant(self.scratch_floats_gemm_batch_fused(n), q16_n, q8_n);
+        let (slab_area, patch_area) = buf.split_at_mut(self.slab_floats);
+        for (pi, pp) in self.phases.iter().enumerate() {
+            let _phase_span = trace::span("conv.phase", precision.name(), trace::NONE, pi as u32);
+            self.stack_phase_patches(pp, x, slab_area, patch_area);
+            let patch = &patch_area[..n * pp.patch_len];
+            let img_rows = pp.geom.n_rows * pp.geom.n_cols;
+            let m = n * img_rows;
+            let mut dst = self.phase_dst(pp, &mut out.data, img_rows, img_stride);
+            match precision {
+                Precision::F16 => {
+                    let qa = &mut q16[..n * pp.patch_len];
+                    quant::quantize_f16(patch, qa);
+                    gemm::gemm_packed_q16_fused(
+                        precision,
+                        qa,
+                        &pp.qpanel_f16,
+                        m,
+                        pp.gemm_k,
+                        cout,
+                        &mut dst,
+                        epi,
+                    );
+                }
+                Precision::Bf16 => {
+                    let qa = &mut q16[..n * pp.patch_len];
+                    quant::quantize_bf16(patch, qa);
+                    gemm::gemm_packed_q16_fused(
+                        precision,
+                        qa,
+                        &pp.qpanel_bf16,
+                        m,
+                        pp.gemm_k,
+                        cout,
+                        &mut dst,
+                        epi,
+                    );
+                }
+                Precision::Int8 => {
+                    let qa = &mut q8[..n * pp.patch_len];
+                    let a_scale = quant::int8_scale(quant::absmax(patch));
+                    quant::quantize_i8(patch, a_scale, qa);
+                    gemm::gemm_packed_q8_fused(
+                        qa,
+                        a_scale,
+                        &pp.qpanel_i8,
+                        &pp.qscale_i8,
+                        m,
+                        pp.gemm_k,
+                        cout,
+                        &mut dst,
+                        epi,
+                    );
+                }
+                Precision::F32 => unreachable!("f32 dispatches the exact fused GEMM lane"),
+            }
+        }
+    }
+
+    /// Row-parallel batched quantized fused-epilogue lane: stacked
+    /// patch built image-serially, then every `(image, phase-row)`
+    /// output row quantizes its own patch rows (per-row int8 scales,
+    /// like
+    /// [`run_gemm_quant_batch_par_isa`](Self::run_gemm_quant_batch_par_isa))
+    /// and stores its widening GEMM straight into the strided output.
+    #[allow(clippy::too_many_arguments)]
+    fn run_gemm_fused_quant_batch_par(
+        &self,
+        precision: Precision,
+        x: &FeatureBatch,
+        scratch: &mut Scratch,
+        out: &mut FeatureBatch,
+        workers: usize,
+        epi: &gemm::Epilogue<'_>,
+    ) {
+        let workers = workers.max(1);
+        if workers == 1 {
+            return self.run_gemm_fused_quant_batch(precision, x, scratch, out, epi);
+        }
+        self.check_batch_shapes(x, out);
+        let n = x.n;
+        let cout = self.params.cout;
+        let out_h = self.out;
+        let row_floats = out_h * cout;
+        let (q16_n, q8_n) = quant_elem_split(precision, self.quant_patch_elems_batch(n));
+        let (buf, q16, q8) =
+            scratch.ensure_quant(self.scratch_floats_gemm_batch_fused(n), q16_n, q8_n);
+        let (slab_area, patch_area) = buf.split_at_mut(self.slab_floats);
+        for pp in &self.phases {
+            self.stack_phase_patches(pp, x, slab_area, patch_area);
+            let patch_row_len = pp.geom.n_cols * pp.gemm_k;
+            if patch_row_len == 0 {
+                for i in 0..n {
+                    self.fused_epilogue_only_rows(pp, out.image_mut(i), workers, epi);
+                }
+                continue;
+            }
+            let patch: &[f32] = &patch_area[..n * pp.patch_len];
+            // The filtered row walk visits `pr = i·n_rows + ri` in
+            // strictly increasing order (images ascend, rows within an
+            // image ascend), so zipping with the in-order quantized row
+            // chunks keeps every job's arena slice aligned to its rows.
+            match precision {
+                Precision::F16 | Precision::Bf16 => {
+                    let panel: &[u16] = if precision == Precision::F16 {
+                        &pp.qpanel_f16
+                    } else {
+                        &pp.qpanel_bf16
+                    };
+                    let jobs: Vec<(&[f32], &mut [u16], &mut [f32])> = out
+                        .data
+                        .chunks_mut(row_floats)
+                        .enumerate()
+                        .filter_map(|(g, row)| {
+                            let (i, y) = (g / out_h, g % out_h);
+                            if y < pp.geom.rp || (y - pp.geom.rp) % 2 != 0 {
+                                return None;
+                            }
+                            let ri = (y - pp.geom.rp) / 2;
+                            if ri >= pp.geom.n_rows {
+                                return None;
+                            }
+                            let pr = i * pp.geom.n_rows + ri;
+                            Some((pr, row))
+                        })
+                        .zip(q16[..n * pp.patch_len].chunks_mut(patch_row_len))
+                        .map(|((pr, row), qrow)| {
+                            (
+                                &patch[pr * patch_row_len..(pr + 1) * patch_row_len],
+                                qrow,
+                                row,
+                            )
+                        })
+                        .collect();
+                    threadpool::parallel_drain(jobs, workers, |(prow, qrow, row)| {
+                        if precision == Precision::F16 {
+                            quant::quantize_f16(prow, qrow);
+                        } else {
+                            quant::quantize_bf16(prow, qrow);
+                        }
+                        let mut dst = self.phase_row_dst(pp, row);
+                        gemm::gemm_packed_q16_fused(
+                            precision,
+                            qrow,
+                            panel,
+                            pp.geom.n_cols,
+                            pp.gemm_k,
+                            cout,
+                            &mut dst,
+                            epi,
+                        );
+                    });
+                }
+                Precision::Int8 => {
+                    let jobs: Vec<(&[f32], &mut [i8], &mut [f32])> = out
+                        .data
+                        .chunks_mut(row_floats)
+                        .enumerate()
+                        .filter_map(|(g, row)| {
+                            let (i, y) = (g / out_h, g % out_h);
+                            if y < pp.geom.rp || (y - pp.geom.rp) % 2 != 0 {
+                                return None;
+                            }
+                            let ri = (y - pp.geom.rp) / 2;
+                            if ri >= pp.geom.n_rows {
+                                return None;
+                            }
+                            let pr = i * pp.geom.n_rows + ri;
+                            Some((pr, row))
+                        })
+                        .zip(q8[..n * pp.patch_len].chunks_mut(patch_row_len))
+                        .map(|((pr, row), qrow)| {
+                            (
+                                &patch[pr * patch_row_len..(pr + 1) * patch_row_len],
+                                qrow,
+                                row,
+                            )
+                        })
+                        .collect();
+                    threadpool::parallel_drain(jobs, workers, |(prow, qrow, row)| {
+                        let a_scale = quant::int8_scale(quant::absmax(prow));
+                        quant::quantize_i8(prow, a_scale, qrow);
+                        let mut dst = self.phase_row_dst(pp, row);
+                        gemm::gemm_packed_q8_fused(
+                            qrow,
+                            a_scale,
+                            &pp.qpanel_i8,
+                            &pp.qscale_i8,
+                            pp.geom.n_cols,
+                            pp.gemm_k,
+                            cout,
+                            &mut dst,
+                            epi,
+                        );
+                    });
+                }
+                Precision::F32 => unreachable!("f32 dispatches the exact fused GEMM lane"),
+            }
+        }
+    }
+
     /// Execute a whole batch under an [`ExecStrategy`], **fused**: the
     /// batched analogue of [`run_with`](Self::run_with), dispatching to
     /// [`run_batch`]/[`run_batch_par`] (direct — bit-identical to `N`
@@ -1609,7 +2457,9 @@ impl ConvTransposePlan {
                 }
             }
             Formulation::PhaseGemm => {
-                if strategy.precision.is_quantized() {
+                if strategy.epilogue == EpilogueMode::Fused {
+                    self.dispatch_gemm_fused_batch(strategy, x, scratch, out, &gemm::Epilogue::none());
+                } else if strategy.precision.is_quantized() {
                     if strategy.workers <= 1 {
                         self.run_gemm_quant_batch_isa(strategy.isa, strategy.precision, x, scratch, out);
                     } else {
@@ -1686,7 +2536,9 @@ impl ConvTransposePlan {
                 }
             }
             Formulation::PhaseGemm => {
-                if strategy.precision.is_quantized() {
+                if strategy.epilogue == EpilogueMode::Fused {
+                    self.dispatch_gemm_fused(strategy, x, scratch, out, &gemm::Epilogue::none());
+                } else if strategy.precision.is_quantized() {
                     if strategy.workers <= 1 {
                         self.run_gemm_quant_isa(strategy.isa, strategy.precision, x, scratch, out);
                     } else {
@@ -1723,6 +2575,123 @@ impl ConvTransposePlan {
                 };
                 out.data.copy_from_slice(&got.data);
             }
+        }
+    }
+
+    /// Dispatch the fused-epilogue GEMM lane family for `strategy`
+    /// (single image): precision picks the exact or widening fused
+    /// drivers, workers pick serial vs row-parallel.  The epilogue is
+    /// the caller's — strategy measurement and [`run_with`](Self::run_with)
+    /// pass the neutral epilogue, serving passes the layer's bias +
+    /// activation.
+    fn dispatch_gemm_fused(
+        &self,
+        strategy: &ExecStrategy,
+        x: &Feature,
+        scratch: &mut Scratch,
+        out: &mut Feature,
+        epi: &gemm::Epilogue<'_>,
+    ) {
+        if strategy.precision.is_quantized() {
+            if strategy.workers <= 1 {
+                self.run_gemm_fused_quant(strategy.precision, x, scratch, out, epi);
+            } else {
+                self.run_gemm_fused_quant_par_rows(
+                    strategy.precision,
+                    x,
+                    scratch,
+                    out,
+                    strategy.workers,
+                    epi,
+                );
+            }
+        } else if strategy.workers <= 1 {
+            self.run_gemm_fused_isa(strategy.isa, x, scratch, out, epi);
+        } else {
+            self.run_gemm_fused_par_rows_isa(strategy.isa, x, scratch, out, strategy.workers, epi);
+        }
+    }
+
+    /// Batched analogue of
+    /// [`dispatch_gemm_fused`](Self::dispatch_gemm_fused).
+    fn dispatch_gemm_fused_batch(
+        &self,
+        strategy: &ExecStrategy,
+        x: &FeatureBatch,
+        scratch: &mut Scratch,
+        out: &mut FeatureBatch,
+        epi: &gemm::Epilogue<'_>,
+    ) {
+        if strategy.precision.is_quantized() {
+            if strategy.workers <= 1 {
+                self.run_gemm_fused_quant_batch(strategy.precision, x, scratch, out, epi);
+            } else {
+                self.run_gemm_fused_quant_batch_par(
+                    strategy.precision,
+                    x,
+                    scratch,
+                    out,
+                    strategy.workers,
+                    epi,
+                );
+            }
+        } else if strategy.workers <= 1 {
+            self.run_gemm_fused_batch_isa(strategy.isa, x, scratch, out, epi);
+        } else {
+            self.run_gemm_fused_batch_par_isa(strategy.isa, x, scratch, out, strategy.workers, epi);
+        }
+    }
+
+    /// Execute under `strategy` with the layer epilogue (per-channel
+    /// bias + activation) owned by the plan (DESIGN.md
+    /// §Fused-Epilogue).  Fused-epilogue GEMM strategies store `epi`
+    /// in-register on the way to the strided output; every other
+    /// strategy runs exactly as [`run_with`](Self::run_with) followed
+    /// by a separate epilogue pass over the output (a no-op when `epi`
+    /// is neutral).  `run_with` itself executes fused-epilogue
+    /// strategies with the **neutral** epilogue, so the two entry
+    /// points agree on what a strategy computes — callers that apply
+    /// their own epilogue keep calling `run_with` unchanged.
+    pub fn run_with_epilogue(
+        &self,
+        strategy: &ExecStrategy,
+        x: &Feature,
+        scratch: &mut Scratch,
+        out: &mut Feature,
+        epi: &gemm::Epilogue<'_>,
+    ) {
+        if strategy.formulation == Formulation::PhaseGemm
+            && strategy.epilogue == EpilogueMode::Fused
+        {
+            let _span = trace::span("conv.forward", strategy.lane_tag(), trace::NONE, trace::NONE);
+            self.dispatch_gemm_fused(strategy, x, scratch, out, epi);
+        } else {
+            self.run_with(strategy, x, scratch, out);
+            apply_epilogue_slice(&mut out.data, epi);
+        }
+    }
+
+    /// Batched analogue of
+    /// [`run_with_epilogue`](Self::run_with_epilogue): the fused
+    /// batched dispatch of [`run_batch_with`](Self::run_batch_with)
+    /// with the epilogue owned by the plan.
+    pub fn run_batch_with_epilogue(
+        &self,
+        strategy: &ExecStrategy,
+        x: &FeatureBatch,
+        scratch: &mut Scratch,
+        out: &mut FeatureBatch,
+        epi: &gemm::Epilogue<'_>,
+    ) {
+        if strategy.formulation == Formulation::PhaseGemm
+            && strategy.epilogue == EpilogueMode::Fused
+        {
+            let _span =
+                trace::span("conv.forward_batch", strategy.lane_tag(), trace::NONE, trace::NONE);
+            self.dispatch_gemm_fused_batch(strategy, x, scratch, out, epi);
+        } else {
+            self.run_batch_with(strategy, x, scratch, out);
+            apply_epilogue_slice(&mut out.data, epi);
         }
     }
 
@@ -2555,6 +3524,22 @@ fn quant_elem_split(precision: Precision, elems: usize) -> (usize, usize) {
     }
 }
 
+/// The separate-epilogue pass over a raw output slice — what the
+/// non-fused half of the [`ConvTransposePlan::run_with_epilogue`]
+/// contract executes after the strategy runs (bias then activation,
+/// matching [`gemm::Epilogue`]'s in-register order).  A no-op for the
+/// neutral epilogue.
+fn apply_epilogue_slice(out: &mut [f32], epi: &gemm::Epilogue<'_>) {
+    if let Some(bias) = epi.bias {
+        ops::add_bias_slice_inplace(out, bias);
+    }
+    match epi.act {
+        gemm::Activation::None => {}
+        gemm::Activation::Relu => ops::relu_slice_inplace(out),
+        gemm::Activation::Tanh => ops::tanh_slice_inplace(out),
+    }
+}
+
 /// Reusable scratch arena for planned execution.
 ///
 /// One flat `Vec<f32>` that grows to the high-water mark of the plans
@@ -2880,6 +3865,324 @@ mod tests {
                         "row-parallel GEMM ({workers}) != serial GEMM (cout={cout})"
                     );
                 }
+            }
+        }
+    }
+
+    #[test]
+    fn fused_lanes_match_separate_plus_epilogue() {
+        // Tentpole acceptance (ISSUE 10): the fused-epilogue lanes
+        // equal slab + scatter + separate-epilogue — bit-identical
+        // with the scalar microkernel (the phase-slab store/reload is
+        // an exact f32 round-trip and both sides accumulate
+        // k-ascending), ≤ 1e-4 on the active vector lane (the fused
+        // driver's single full-K call reassociates the split-K
+        // blocking).  Grid: paddings 0–3 × odd/even outputs ×
+        // activations {none, relu, tanh} × bias {absent, present}.
+        let mut rng = Rng::seeded(60);
+        let acts = [
+            gemm::Activation::None,
+            gemm::Activation::Relu,
+            gemm::Activation::Tanh,
+        ];
+        for (n_in, nk, p, cin, cout) in [
+            (4, 5, 2, 3, 2),  // odd output
+            (4, 4, 2, 3, 5),  // even output, ragged cout
+            (5, 3, 1, 2, 3),  // odd padding
+            (3, 4, 3, 2, 2),  // padding 3
+            (3, 5, 0, 1, 4),  // no padding
+        ] {
+            let x = Feature::random(n_in, n_in, cin, &mut rng);
+            let k = Kernel::random(nk, cin, cout, &mut rng);
+            let plan =
+                ConvTransposePlan::new(ConvTransposeParams::new(n_in, nk, p, cin, cout), &k);
+            let mut scratch = Scratch::for_plan(&plan);
+            let bias = Feature::random(1, 1, cout, &mut rng).data;
+            for act in acts {
+                for with_bias in [false, true] {
+                    let epi = gemm::Epilogue {
+                        bias: with_bias.then_some(&bias[..]),
+                        act,
+                    };
+                    let mut want = plan.new_output();
+                    plan.run_gemm_isa(Isa::Scalar, &x, &mut scratch, &mut want);
+                    apply_epilogue_slice(&mut want.data, &epi);
+                    let mut got = plan.new_output();
+                    got.data.fill(f32::NAN);
+                    plan.run_gemm_fused_isa(Isa::Scalar, &x, &mut scratch, &mut got, &epi);
+                    assert_eq!(
+                        got, want,
+                        "scalar fused != separate (n={n_in} k={nk} p={p} act={act:?} bias={with_bias})"
+                    );
+                    // Scalar row-parallel fused: same bit-exact
+                    // contract (the scalar tile accumulates every
+                    // element k-ascending whatever the row tiling).
+                    for workers in [2, 3] {
+                        let mut par = plan.new_output();
+                        par.data.fill(f32::NAN);
+                        plan.run_gemm_fused_par_rows_isa(
+                            Isa::Scalar,
+                            &x,
+                            &mut scratch,
+                            &mut par,
+                            workers,
+                            &epi,
+                        );
+                        assert_eq!(par, want, "scalar fused par({workers}) != separate");
+                    }
+                    // Active ISA: the 1e-4 reassociation contract, and
+                    // every output element overwritten.
+                    let mut vec_got = plan.new_output();
+                    vec_got.data.fill(f32::NAN);
+                    plan.run_gemm_fused(&x, &mut scratch, &mut vec_got, &epi);
+                    assert!(vec_got.data.iter().all(|v| !v.is_nan()));
+                    assert!(
+                        ops::max_abs_diff(&vec_got, &want) < 1e-4,
+                        "active fused diverged (n={n_in} k={nk} p={p} act={act:?})"
+                    );
+                    for workers in [2, 3] {
+                        let mut par = plan.new_output();
+                        par.data.fill(f32::NAN);
+                        plan.run_gemm_fused_par_rows(&x, &mut scratch, &mut par, workers, &epi);
+                        assert!(par.data.iter().all(|v| !v.is_nan()));
+                        assert!(
+                            ops::max_abs_diff(&par, &want) < 1e-4,
+                            "active fused par({workers}) diverged"
+                        );
+                    }
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn fused_batch_lanes_match_separate_plus_epilogue() {
+        let mut rng = Rng::seeded(61);
+        for (n_in, nk, p, cin, cout, n) in [(4, 5, 2, 3, 2, 3), (4, 4, 2, 2, 3, 2)] {
+            let k = Kernel::random(nk, cin, cout, &mut rng);
+            let plan =
+                ConvTransposePlan::new(ConvTransposeParams::new(n_in, nk, p, cin, cout), &k);
+            let xb = FeatureBatch::random(n, n_in, n_in, cin, &mut rng);
+            let mut scratch = Scratch::new();
+            let bias = Feature::random(1, 1, cout, &mut rng).data;
+            let epi = gemm::Epilogue {
+                bias: Some(&bias[..]),
+                act: gemm::Activation::Relu,
+            };
+            let mut want = plan.new_batch_output(n);
+            plan.run_gemm_batch(&xb, &mut scratch, &mut want);
+            apply_epilogue_slice(&mut want.data, &epi);
+            let mut got = plan.new_batch_output(n);
+            got.data.fill(f32::NAN);
+            plan.run_gemm_fused_batch(&xb, &mut scratch, &mut got, &epi);
+            assert!(got.data.iter().all(|v| !v.is_nan()));
+            assert!(ops::max_abs_diff_batch(&got, &want) < 1e-4, "fused batch diverged");
+            for workers in [2, 3] {
+                let mut par = plan.new_batch_output(n);
+                par.data.fill(f32::NAN);
+                plan.run_gemm_fused_batch_par(&xb, &mut scratch, &mut par, workers, &epi);
+                assert!(par.data.iter().all(|v| !v.is_nan()));
+                assert!(
+                    ops::max_abs_diff_batch(&par, &want) < 1e-4,
+                    "fused batch par({workers}) diverged"
+                );
+            }
+            // Per-image fused agrees with the stacked batched fused
+            // GEMM within the same contract.
+            let mut seq = plan.new_batch_output(n);
+            for i in 0..n {
+                let xi = xb.feature(i);
+                let mut oi = plan.new_output();
+                plan.run_gemm_fused(&xi, &mut scratch, &mut oi, &epi);
+                seq.image_mut(i).copy_from_slice(&oi.data);
+            }
+            assert!(ops::max_abs_diff_batch(&seq, &got) < 1e-4);
+        }
+    }
+
+    #[test]
+    fn fused_quant_lanes_bit_identical_to_separate_plus_epilogue() {
+        // The quantized fused drivers are the scalar panel loops with
+        // the dequant scale folded into the epilogue store — the same
+        // arithmetic sequence as the separate quantized lane followed
+        // by the epilogue pass, so equality is exact for every
+        // precision and every worker count (per-row int8 scales match
+        // per-row, batch-wide match batch-wide).
+        let mut rng = Rng::seeded(62);
+        let (n_in, nk, p, cin, cout) = (4, 5, 2, 3, 3);
+        let k = Kernel::random(nk, cin, cout, &mut rng);
+        let plan = ConvTransposePlan::new(ConvTransposeParams::new(n_in, nk, p, cin, cout), &k);
+        let x = Feature::random(n_in, n_in, cin, &mut rng);
+        let xb = FeatureBatch::random(2, n_in, n_in, cin, &mut rng);
+        let mut scratch = Scratch::new();
+        let bias = Feature::random(1, 1, cout, &mut rng).data;
+        let epi = gemm::Epilogue {
+            bias: Some(&bias[..]),
+            act: gemm::Activation::Tanh,
+        };
+        for prec in Precision::QUANTIZED {
+            let mut want = plan.new_output();
+            plan.run_gemm_quant_isa(Isa::Scalar, prec, &x, &mut scratch, &mut want);
+            apply_epilogue_slice(&mut want.data, &epi);
+            let mut got = plan.new_output();
+            got.data.fill(f32::NAN);
+            plan.run_gemm_fused_quant(prec, &x, &mut scratch, &mut got, &epi);
+            assert_eq!(got, want, "{} fused != separate", prec.name());
+            for workers in [2, 3] {
+                let mut wpar = plan.new_output();
+                plan.run_gemm_quant_par_rows_isa(
+                    Isa::Scalar,
+                    prec,
+                    &x,
+                    &mut scratch,
+                    &mut wpar,
+                    workers,
+                );
+                apply_epilogue_slice(&mut wpar.data, &epi);
+                let mut gpar = plan.new_output();
+                gpar.data.fill(f32::NAN);
+                plan.run_gemm_fused_quant_par_rows(
+                    prec,
+                    &x,
+                    &mut scratch,
+                    &mut gpar,
+                    workers,
+                    &epi,
+                );
+                assert_eq!(gpar, wpar, "{} fused par({workers})", prec.name());
+            }
+            let mut wb = plan.new_batch_output(2);
+            plan.run_gemm_quant_batch_isa(Isa::Scalar, prec, &xb, &mut scratch, &mut wb);
+            apply_epilogue_slice(&mut wb.data, &epi);
+            let mut gb = plan.new_batch_output(2);
+            gb.data.fill(f32::NAN);
+            plan.run_gemm_fused_quant_batch(prec, &xb, &mut scratch, &mut gb, &epi);
+            assert_eq!(gb.data, wb.data, "{} fused batch", prec.name());
+            for workers in [2, 3] {
+                let mut wbp = plan.new_batch_output(2);
+                plan.run_gemm_quant_batch_par_isa(
+                    Isa::Scalar,
+                    prec,
+                    &xb,
+                    &mut scratch,
+                    &mut wbp,
+                    workers,
+                );
+                apply_epilogue_slice(&mut wbp.data, &epi);
+                let mut gbp = plan.new_batch_output(2);
+                gbp.data.fill(f32::NAN);
+                plan.run_gemm_fused_quant_batch_par(
+                    prec,
+                    &xb,
+                    &mut scratch,
+                    &mut gbp,
+                    workers,
+                    &epi,
+                );
+                assert_eq!(gbp.data, wbp.data, "{} fused batch par({workers})", prec.name());
+            }
+        }
+    }
+
+    #[test]
+    fn fused_scratch_sizing_is_exact_and_smaller() {
+        // ISSUE 10 acceptance: the fused lanes claim a strictly
+        // smaller exact arena than their separate counterparts (the
+        // phase region disappears), and cold arenas grow to exactly
+        // the fused figure.
+        let mut rng = Rng::seeded(63);
+        let k = Kernel::random(5, 3, 2, &mut rng);
+        let plan = ConvTransposePlan::new(ConvTransposeParams::new(4, 5, 2, 3, 2), &k);
+        assert!(plan.scratch_floats_gemm_fused() < plan.scratch_floats());
+        assert_eq!(
+            plan.scratch_floats_gemm_fused(),
+            plan.scratch_floats() - plan.phase_floats
+        );
+        assert!(plan.scratch_floats_gemm_batch_fused(3) < plan.scratch_floats_gemm_batch(3));
+        assert_eq!(
+            plan.scratch_floats_gemm_batch_fused(3),
+            plan.scratch_floats_gemm_batch(3) - 3 * plan.max_phase_floats()
+        );
+        // Cold arenas grow to exactly the fused requirement.
+        let x = Feature::random(4, 4, 3, &mut rng);
+        let mut scratch = Scratch::new();
+        let mut out = plan.new_output();
+        plan.run_gemm_fused(&x, &mut scratch, &mut out, &gemm::Epilogue::none());
+        assert_eq!(scratch.capacity_floats(), plan.scratch_floats_gemm_fused());
+        let xb = FeatureBatch::random(3, 4, 4, 3, &mut rng);
+        let mut bscratch = Scratch::new();
+        let mut bout = plan.new_batch_output(3);
+        plan.run_gemm_fused_batch(&xb, &mut bscratch, &mut bout, &gemm::Epilogue::none());
+        assert_eq!(
+            bscratch.capacity_floats(),
+            plan.scratch_floats_gemm_batch_fused(3)
+        );
+        // Strategy-keyed sizing picks the fused figures.
+        let f = ExecStrategy::serial_gemm().fused_epilogue();
+        assert_eq!(plan.scratch_floats_for(&f), plan.scratch_floats_gemm_fused());
+        assert_eq!(
+            plan.scratch_floats_for_batch(&f, 3),
+            plan.scratch_floats_gemm_batch_fused(3)
+        );
+        assert_eq!(
+            plan.scratch_floats_for(&ExecStrategy::serial_gemm()),
+            plan.scratch_floats()
+        );
+    }
+
+    #[test]
+    fn run_with_epilogue_agrees_across_search_space() {
+        // Every strategy — fused or separate epilogue, any
+        // formulation — produces the reference "forward + bias +
+        // activation" through run_with_epilogue: exact for the direct
+        // formulations, ≤ 1e-4 for the GEMM formulation.
+        let mut rng = Rng::seeded(64);
+        let (n_in, nk, p, cin, cout) = (4, 4, 2, 3, 2);
+        let x = Feature::random(n_in, n_in, cin, &mut rng);
+        let k = Kernel::random(nk, cin, cout, &mut rng);
+        let plan = ConvTransposePlan::new(ConvTransposeParams::new(n_in, nk, p, cin, cout), &k);
+        let mut scratch = Scratch::for_plan(&plan);
+        let bias = Feature::random(1, 1, cout, &mut rng).data;
+        let epi = gemm::Epilogue {
+            bias: Some(&bias[..]),
+            act: gemm::Activation::Relu,
+        };
+        let mut want = plan.new_output();
+        plan.run(&x, &mut scratch, &mut want);
+        apply_epilogue_slice(&mut want.data, &epi);
+        for s in crate::tune::space::search_space(4) {
+            let mut got = plan.new_output();
+            got.data.fill(f32::NAN);
+            plan.run_with_epilogue(&s, &x, &mut scratch, &mut got, &epi);
+            assert!(got.data.iter().all(|v| !v.is_nan()), "{} left NaNs", s.name());
+            if s.formulation == Formulation::PhaseGemm {
+                assert!(ops::max_abs_diff(&got, &want) < 1e-4, "{}", s.name());
+            } else {
+                assert_eq!(got, want, "{}", s.name());
+            }
+        }
+        // Batched entry point over the batched space.
+        let xb = FeatureBatch::random(3, n_in, n_in, cin, &mut rng);
+        let mut wantb = plan.new_batch_output(3);
+        for i in 0..3 {
+            let xi = xb.feature(i);
+            let mut oi = plan.new_output();
+            plan.run(&xi, &mut scratch, &mut oi);
+            wantb.image_mut(i).copy_from_slice(&oi.data);
+        }
+        apply_epilogue_slice(&mut wantb.data, &epi);
+        let mut bscratch = Scratch::with_floats(
+            plan.peak_scratch_floats_batch(3).max(plan.scratch_floats()),
+        );
+        for s in crate::tune::space::search_space_batch(4, 3) {
+            let mut got = plan.new_batch_output(3);
+            got.data.fill(f32::NAN);
+            plan.run_batch_with_epilogue(&s, &xb, &mut bscratch, &mut got, &epi);
+            assert!(got.data.iter().all(|v| !v.is_nan()), "{} left NaNs", s.name());
+            if s.formulation == Formulation::PhaseGemm {
+                assert!(ops::max_abs_diff_batch(&got, &wantb) < 1e-4, "{}", s.name());
+            } else {
+                assert_eq!(got.data, wantb.data, "{}", s.name());
             }
         }
     }

@@ -44,11 +44,14 @@
 //! The quantized phase-GEMM kernels (`conv::quant`) get AVX2 lanes
 //! here: `gemm_q16_f16_avx2` converts f16 (F16C `vcvtph2ps`) panels to
 //! f32 on load, `gemm_q16_bf16_avx2` widens bf16 with an integer
-//! shift, and `gemm_q8_avx2` widens int8 to i32 and accumulates
-//! exactly.  All use plain mul+add
-//! in the scalar kernels' k-ascending order, so they are
-//! **bit-identical** to the `conv::quant` scalar references on finite
-//! data — the quantized lanes keep one numeric contract across ISAs.
+//! shift, and `gemm_q8_avx2` runs **`vpmaddwd` i16→i32 k-pairs**
+//! (sign-extended, so the pair sum is bounded at `2·127²` and can
+//! never saturate) with an exact-widening odd-k tail.  The float
+//! lanes use plain mul+add in the scalar kernels' k-ascending order
+//! and the int8 lane accumulates exactly in i32 (associative), so all
+//! are **bit-identical** to the `conv::quant` scalar references on
+//! finite data — the quantized lanes keep one numeric contract across
+//! ISAs.
 //!
 //! ## Safety
 //!
@@ -425,8 +428,8 @@ pub(crate) fn gemm_q16_bf16_avx2(
     unsafe { x86::gemm_q16_bf16(a, packed_b, c, m, k, n) }
 }
 
-/// AVX2 int8 widening GEMM with exact i32 accumulation (bit-identical
-/// to `quant::gemm_q8_scalar`).
+/// AVX2 int8 GEMM via sign-extended `madd` i16→i32 k-pairs with exact
+/// i32 accumulation (bit-identical to `quant::gemm_q8_scalar`).
 #[cfg(target_arch = "x86_64")]
 #[allow(clippy::too_many_arguments)]
 pub(crate) fn gemm_q8_avx2(
@@ -662,11 +665,19 @@ mod x86 {
         }
     }
 
-    /// int8 widening GEMM: panel rows widen `i8 → i32`, products
-    /// accumulate **exactly** in i32 (`vpmulld` + `vpaddd`), and each
-    /// output gets the same single scaled f32 epilogue as the scalar
-    /// kernel — bit-identical to `quant::gemm_q8_scalar` always
-    /// (integer accumulation has no rounding to reassociate).
+    /// int8 GEMM via **`vpmaddwd` k-pairs**: taps `kk` and `kk+1`
+    /// sign-extend to i16 (`vpmovsxbw`) and interleave so each 32-bit
+    /// lane of `_mm256_madd_epi16` computes
+    /// `a[kk]·b[kk][j] + a[kk+1]·b[kk+1][j]` — two MACs per lane per
+    /// instruction, versus one for the old `vpmulld`+`vpaddd` widening
+    /// loop.  The pair product is exact: `|a|,|b| ≤ 127` bounds each
+    /// term at `127² = 16129` and the pair sum at `32258`, far inside
+    /// i32, so `madd` can never saturate (unlike `maddubs`, whose
+    /// u8×i8 i16 pair-sum saturates — that is why the sign-extended
+    /// `madd` form is used).  i32 accumulation is associative, so the
+    /// lane stays **bit-identical** to `quant::gemm_q8_scalar` always,
+    /// with the same single scaled f32 epilogue.  The odd-k remainder
+    /// runs one exact widened tap.
     #[target_feature(enable = "avx2")]
     #[allow(clippy::too_many_arguments)]
     pub(super) unsafe fn gemm_q8(
@@ -685,8 +696,8 @@ mod x86 {
         debug_assert_eq!(c.len(), m * n);
         let panels = n.div_ceil(QNR);
         // SAFETY: each `_mm_loadl_epi64` reads 8 bytes at offset
-        // kk·QNR of a k·QNR-byte panel slice (kk < k); stores hit a
-        // local [i32; QNR].
+        // kk·QNR of a k·QNR-byte panel slice (kk < k, and kk+1 < k on
+        // the paired path); stores hit a local [i32; QNR].
         unsafe {
             for jp in 0..panels {
                 let j0 = jp * QNR;
@@ -695,8 +706,30 @@ mod x86 {
                 for i in 0..m {
                     let arow = &a[i * k..(i + 1) * k];
                     let mut acc = _mm256_setzero_si256();
-                    for (kk, &ab) in arow.iter().enumerate() {
-                        let av = _mm256_set1_epi32(ab as i32);
+                    let mut kk = 0;
+                    while kk + 2 <= k {
+                        // Broadcast the A pair as alternating i16
+                        // lanes [a0, a1, a0, a1, ...].
+                        let pair = ((arow[kk + 1] as i16 as u16 as u32) << 16)
+                            | (arow[kk] as i16 as u16 as u32);
+                        let av = _mm256_set1_epi32(pair as i32);
+                        let b0 = _mm_cvtepi8_epi16(_mm_loadl_epi64(
+                            panel.as_ptr().add(kk * QNR) as *const __m128i,
+                        ));
+                        let b1 = _mm_cvtepi8_epi16(_mm_loadl_epi64(
+                            panel.as_ptr().add((kk + 1) * QNR) as *const __m128i,
+                        ));
+                        // Interleave to [b0[j], b1[j]] i16 pairs so
+                        // madd's j-th i32 lane sums exactly the two
+                        // taps of output column j.
+                        let lo = _mm_unpacklo_epi16(b0, b1);
+                        let hi = _mm_unpackhi_epi16(b0, b1);
+                        let bv = _mm256_set_m128i(hi, lo);
+                        acc = _mm256_add_epi32(_mm256_madd_epi16(bv, av), acc);
+                        kk += 2;
+                    }
+                    if kk < k {
+                        let av = _mm256_set1_epi32(arow[kk] as i32);
                         let bh = _mm_loadl_epi64(panel.as_ptr().add(kk * QNR) as *const __m128i);
                         let bv = _mm256_cvtepi8_epi32(bh);
                         acc = _mm256_add_epi32(_mm256_mullo_epi32(av, bv), acc);

@@ -10,6 +10,7 @@ use std::sync::Mutex;
 
 use crate::conv::parallel::{Algorithm, Lane};
 use crate::conv::plan::Scratch;
+use crate::conv::quant::Precision;
 use crate::models::{Generator, GanModel};
 use crate::tensor::Feature;
 use crate::tune::{ExecStrategy, Tuner, TuningCache, WallClockMeasurer};
@@ -61,6 +62,9 @@ pub struct RustBackend {
     /// `false` → loop the batch per latent instead of the fused
     /// batched forward (the fused-vs-per-latent serving A/B lane).
     fused_batch: bool,
+    /// Storage precision the quantized autotune settled on (`F32`
+    /// when no quantized search ran or none passed its budget).
+    serving_precision: Precision,
     /// Warm scratch arenas, reused across batches.  Bounded by the
     /// number of concurrent `generate` workers.
     arenas: Mutex<Vec<Scratch>>,
@@ -87,6 +91,7 @@ impl RustBackend {
             batch_workers: 1,
             planned: true,
             fused_batch: true,
+            serving_precision: Precision::F32,
             arenas: Mutex::new(Vec::new()),
         }
     }
@@ -189,6 +194,133 @@ impl RustBackend {
             log::warn!("could not persist tuning cache: {e}");
         }
         self
+    }
+
+    /// Tune every layer under `tuner` through `cache`, returning the
+    /// per-layer winners plus the summed best seconds (the model-level
+    /// figure the precision search compares).
+    fn tuned_strategies(
+        &self,
+        tuner: &Tuner,
+        cache: &mut TuningCache,
+        measurer: &mut WallClockMeasurer,
+    ) -> (Vec<ExecStrategy>, f64) {
+        let mut total = 0.0;
+        let strategies = self
+            .generator
+            .layers
+            .iter()
+            .map(|lw| {
+                let tuned = tuner.tune_layer_cached(&lw.plan, cache, measurer);
+                log::info!(
+                    "autotune {} {}: {} ({}){}",
+                    self.generator.model.name(),
+                    lw.spec.describe(),
+                    tuned.strategy.name(),
+                    crate::util::timing::fmt_duration(tuned.best_seconds),
+                    if tuned.cached { " [cache hit]" } else { "" }
+                );
+                total += tuned.best_seconds;
+                tuned.strategy
+            })
+            .collect();
+        (strategies, total)
+    }
+
+    /// [`with_autotune`](Self::with_autotune) extended with a
+    /// **precision search** (ISSUE 10 / DESIGN.md §Reduced-Precision):
+    /// after the f32 search, every quantized [`Precision`] lane is
+    /// tuned per layer (verdicts cache under the `+{prec}`-suffixed
+    /// keys), and a candidate precision is adopted only when its
+    /// summed per-layer time beats the incumbent **and** a
+    /// whole-model probe forward drifts at most `accuracy_budget`
+    /// (max-abs elementwise, in the generator's tanh output range
+    /// `[-1, 1]`) from the f32-tuned reference.  A budget of `0.0`
+    /// therefore always serves f32.
+    pub fn with_autotune_quantized(self, cache_path: Option<&Path>, accuracy_budget: f32) -> Self {
+        self.with_autotune_tuner_quantized(
+            cache_path,
+            &Tuner::new(threadpool::default_parallelism()),
+            accuracy_budget,
+        )
+    }
+
+    /// [`with_autotune_quantized`](Self::with_autotune_quantized) with
+    /// an explicit base tuner (search space + measurement budget).
+    /// The quantized searches are the base tuner under
+    /// [`Tuner::pin_precision`], so batch size and worker bound carry
+    /// over and all verdicts share one cache file.
+    pub fn with_autotune_tuner_quantized(
+        mut self,
+        cache_path: Option<&Path>,
+        tuner: &Tuner,
+        accuracy_budget: f32,
+    ) -> Self {
+        let mut cache = match cache_path {
+            Some(p) => TuningCache::load(p).unwrap_or_else(|e| {
+                log::warn!("tuning cache {}: {e}; re-tuning from scratch", p.display());
+                TuningCache::backed(p)
+            }),
+            None => TuningCache::in_memory(),
+        };
+        let mut measurer = WallClockMeasurer::new(tuner.budget);
+        let (mut best, mut best_secs) = self.tuned_strategies(tuner, &mut cache, &mut measurer);
+        // Deterministic probe latent; the f32-tuned forward is the
+        // accuracy reference (within its own 1e-4 GEMM contract of the
+        // untuned model — the budget gates *additional* quantization
+        // drift).
+        let mut rng = Rng::seeded(0xACC);
+        let z: Vec<f32> = (0..self.generator.model.z_dim())
+            .map(|_| rng.normal_f32())
+            .collect();
+        let mut probe_gen = self.generator.clone();
+        probe_gen.set_strategies(&best);
+        let reference = probe_gen.forward(&z, Algorithm::Unified, Lane::Serial);
+        let mut chosen = Precision::F32;
+        for prec in Precision::QUANTIZED {
+            let qt = tuner.clone().pin_precision(prec);
+            let (strats, secs) = self.tuned_strategies(&qt, &mut cache, &mut measurer);
+            if secs >= best_secs {
+                log::info!(
+                    "autotune precision {}: {} ≥ incumbent {} — skipped",
+                    prec.name(),
+                    crate::util::timing::fmt_duration(secs),
+                    crate::util::timing::fmt_duration(best_secs)
+                );
+                continue;
+            }
+            probe_gen.set_strategies(&strats);
+            let probe = probe_gen.forward(&z, Algorithm::Unified, Lane::Serial);
+            let drift = crate::tensor::ops::max_abs_diff(&probe, &reference);
+            if drift <= accuracy_budget {
+                log::info!(
+                    "autotune precision {}: accepted (drift {drift:.2e} ≤ budget {accuracy_budget:.2e})",
+                    prec.name()
+                );
+                best = strats;
+                best_secs = secs;
+                chosen = prec;
+            } else {
+                log::info!(
+                    "autotune precision {}: rejected (drift {drift:.2e} > budget {accuracy_budget:.2e})",
+                    prec.name()
+                );
+            }
+        }
+        log::info!("autotune precision verdict: {}", chosen.name());
+        self.serving_precision = chosen;
+        self.generator.set_strategies(&best);
+        if let Err(e) = cache.save() {
+            log::warn!("could not persist tuning cache: {e}");
+        }
+        self
+    }
+
+    /// The storage precision the quantized autotune settled on
+    /// (`F32` unless [`with_autotune_quantized`](Self::with_autotune_quantized)
+    /// accepted a faster quantized lane within its accuracy budget).
+    pub fn serving_precision(&self) -> Precision {
+        self.serving_precision
     }
 
     /// Whether this backend runs the planned execution path.
@@ -414,6 +546,62 @@ mod tests {
                     "autotune changed output beyond the GEMM tolerance"
                 );
             }
+        }
+    }
+
+    #[test]
+    fn quantized_autotune_zero_budget_serves_f32() {
+        // ISSUE 10 satellite: a 0.0 accuracy budget can never accept a
+        // quantized lane (quantization always drifts), so the verdict
+        // is f32 and every pinned strategy stays full precision.
+        use crate::tune::MeasureBudget;
+        let tuner = Tuner::new(2).with_budget(MeasureBudget::quick());
+        let b = tiny_backend(Algorithm::Unified).with_autotune_tuner_quantized(None, &tuner, 0.0);
+        assert_eq!(b.serving_precision(), Precision::F32);
+        assert!(b
+            .generator
+            .strategies()
+            .iter()
+            .all(|s| s.unwrap().precision == Precision::F32));
+        let imgs = b.generate(&[vec![0.2; b.z_dim()]]);
+        assert_eq!(imgs.len(), 1);
+    }
+
+    #[test]
+    fn quantized_autotune_respects_accuracy_budget() {
+        // With a generous budget the search may or may not adopt a
+        // quantized lane (speed is machine-dependent) — but whatever it
+        // picks must (a) pin one consistent precision across the GEMM
+        // layers matching `serving_precision`, and (b) serve outputs
+        // within the budget of the f32-tuned reference.
+        use crate::tune::{Formulation, MeasureBudget};
+        let budget = 0.05f32;
+        let tuner = Tuner::new(2).with_budget(MeasureBudget::quick());
+        let f32_tuned = tiny_backend(Algorithm::Unified).with_autotune_tuner(None, &tuner);
+        let quant =
+            tiny_backend(Algorithm::Unified).with_autotune_tuner_quantized(None, &tuner, budget);
+        let chosen = quant.serving_precision();
+        for s in quant.generator.strategies() {
+            let s = s.unwrap();
+            match s.formulation {
+                Formulation::PhaseGemm => assert_eq!(s.precision, chosen),
+                _ => assert_eq!(s.precision, Precision::F32),
+            }
+        }
+        let latents: Vec<Vec<f32>> = (0..2)
+            .map(|i| vec![0.06 * (i + 1) as f32; quant.z_dim()])
+            .collect();
+        let got = quant.generate(&latents);
+        let want = f32_tuned.generate(&latents);
+        for (g, w) in got.iter().zip(&want) {
+            let drift = crate::tensor::ops::max_abs_diff(g, w);
+            // Budget on top of the GEMM lanes' own reassociation
+            // contract (both backends' f32 searches may pick different
+            // strategies, each ≤1e-4 from the direct reference).
+            assert!(
+                drift <= budget + 1e-3,
+                "served drift {drift} exceeds accuracy budget"
+            );
         }
     }
 

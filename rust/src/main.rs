@@ -125,7 +125,7 @@ fn dispatch(sub: &str, rest: &[String]) -> anyhow::Result<()> {
         "ablation" => {
             let cmd = bench_command("ablation", "design-choice ablations").opt(
                 "json",
-                "write the backward snapshot (ablation 10 + training step) to this JSON path",
+                "write the bench snapshot (ablations 10-13 + training step) to this JSON path",
                 None,
             );
             let a = cmd.parse(rest)?;
@@ -155,6 +155,12 @@ fn dispatch(sub: &str, rest: &[String]) -> anyhow::Result<()> {
                     map.insert(
                         "precision".to_string(),
                         ablation::precision_json(GanModel::DcGan, &cfg),
+                    );
+                    // Fusion section: ablation 13 — fused vs separate
+                    // epilogue per Table-4 layer × batch (ISSUE 10).
+                    map.insert(
+                        "fusion".to_string(),
+                        ablation::fusion_json(GanModel::DcGan, &cfg, &[1, 4, 8]),
                     );
                 }
                 std::fs::write(path, doc.to_string_compact())
@@ -718,6 +724,12 @@ fn serve(rest: &[String]) -> anyhow::Result<()> {
             "tune-cache",
             "autotune the rust backend through this cache (batched for max-batch)",
             None,
+        )
+        .opt(
+            "quantize-budget",
+            "with --tune-cache: also try f16/bf16/int8 lanes, serving the fastest \
+             whose whole-model drift stays within this max-abs budget",
+            None,
         );
     let a = cmd.parse(rest)?;
 
@@ -763,12 +775,24 @@ fn serve(rest: &[String]) -> anyhow::Result<()> {
             cfg.max_batch,
         );
         if let Some(path) = a.get("tune-cache") {
-            backend = backend.with_autotune_batch(Some(std::path::Path::new(path)), cfg.max_batch);
+            backend = if let Some(budget) = a.get("quantize-budget") {
+                let budget: f32 = budget
+                    .parse()
+                    .map_err(|e| anyhow::anyhow!("--quantize-budget '{budget}': {e}"))?;
+                backend.with_autotune_tuner_quantized(
+                    Some(std::path::Path::new(path)),
+                    &Tuner::for_batch(threadpool::default_parallelism(), cfg.max_batch),
+                    budget,
+                )
+            } else {
+                backend.with_autotune_batch(Some(std::path::Path::new(path)), cfg.max_batch)
+            };
         }
         println!(
-            "backend: rust, {} batch lane (max_batch={})",
+            "backend: rust, {} batch lane (max_batch={}, serving precision {})",
             if backend.is_fused_batch() { "fused" } else { "per-latent" },
-            cfg.max_batch
+            cfg.max_batch,
+            backend.serving_precision().name()
         );
         model_name = model.name().to_string();
         z_dim = model.z_dim();

@@ -13,6 +13,7 @@
 //! allocations.  One arena, sized for the largest layer, is threaded
 //! through the whole stack.
 
+use crate::conv::gemm;
 use crate::conv::parallel::{run_seg, Algorithm, Lane};
 use crate::conv::plan::{ConvTransposePlan, Scratch};
 use crate::conv::segregation::Segregated;
@@ -118,6 +119,51 @@ impl LayerWeights {
         }
     }
 
+    /// One transpose conv **with its layer epilogue** — per-channel
+    /// bias plus the activation (`tanh` when `last`, ReLU otherwise) —
+    /// in a single call.  When the pinned strategy carries the
+    /// fused-epilogue axis (DESIGN.md §Fused-Epilogue), the planned
+    /// GEMM lane applies bias+activation in-register as each tile
+    /// stores into the strided output and the separate post-pass is
+    /// skipped entirely; every other dispatch runs the historic
+    /// conv-then-apply sequence.  Either way the result equals
+    /// [`apply`](Self::apply) followed by bias + activation within the
+    /// lane's accuracy contract (bit-identical off the fused lanes).
+    pub fn apply_act(
+        &self,
+        x: &Feature,
+        alg: Algorithm,
+        lane: Lane,
+        last: bool,
+        scratch: &mut Scratch,
+    ) -> Feature {
+        let act = if last {
+            gemm::Activation::Tanh
+        } else {
+            gemm::Activation::Relu
+        };
+        if alg == Algorithm::Unified {
+            if let Some(strategy) = &self.strategy {
+                let epi = gemm::Epilogue {
+                    bias: Some(&self.bias),
+                    act,
+                };
+                let mut out = self.plan.new_output();
+                self.plan
+                    .run_with_epilogue(strategy, x, scratch, &mut out, &epi);
+                return out;
+            }
+        }
+        let mut out = self.apply(x, alg, lane, scratch);
+        ops::add_bias_inplace(&mut out, &self.bias);
+        if last {
+            ops::tanh_inplace(&mut out);
+        } else {
+            ops::relu_inplace(&mut out);
+        }
+        out
+    }
+
     /// Pre-plan dispatch (per-call geometry + buffer allocation) — the
     /// comparison lane for the planned-vs-unplanned ablation and A/B
     /// serving bench.
@@ -170,6 +216,56 @@ impl LayerWeights {
                 Lane::Serial => self.plan.run_batch(x, scratch, out),
                 Lane::Parallel(w) => self.plan.run_batch_par(x, scratch, out, w),
             },
+        }
+    }
+
+    /// Batched analogue of [`apply_act`](Self::apply_act): the whole
+    /// micro-batch through the conv **and** its bias+activation
+    /// epilogue.  A pinned fused-epilogue strategy stores the epilogue
+    /// in-register from the batched GEMM tiles; other pins route the
+    /// per-latent or batched lane and finish with the separate
+    /// epilogue pass; unpinned dispatch keeps the historic
+    /// conv-then-apply sequence bit-identically.
+    pub fn apply_batch_act(
+        &self,
+        x: &FeatureBatch,
+        lane: Lane,
+        last: bool,
+        scratch: &mut Scratch,
+        out: &mut FeatureBatch,
+    ) {
+        let act = if last {
+            gemm::Activation::Tanh
+        } else {
+            gemm::Activation::Relu
+        };
+        let epi = gemm::Epilogue {
+            bias: Some(&self.bias[..]),
+            act,
+        };
+        match &self.strategy {
+            Some(s) if s.fused => self.plan.run_batch_with_epilogue(s, x, scratch, out, &epi),
+            Some(s) => {
+                // Per-latent pin: one input/output pair reused across
+                // the loop (see `apply_batch`), epilogue fused or
+                // separate per the strategy's axis.
+                let mut xi = Feature::zeros(x.h, x.w, x.c);
+                let mut oi = self.plan.new_output();
+                for i in 0..x.n {
+                    xi.data.copy_from_slice(x.image(i));
+                    self.plan.run_with_epilogue(s, &xi, scratch, &mut oi, &epi);
+                    out.image_mut(i).copy_from_slice(&oi.data);
+                }
+            }
+            None => {
+                self.apply_batch(x, lane, scratch, out);
+                ops::add_bias_batch_inplace(out, &self.bias);
+                if last {
+                    ops::tanh_batch_inplace(out);
+                } else {
+                    ops::relu_batch_inplace(out);
+                }
+            }
         }
     }
 
@@ -433,18 +529,13 @@ impl Generator {
         let mut x = self.project(z);
         let last = self.layers.len() - 1;
         for (i, lw) in self.layers.iter().enumerate() {
-            {
-                // Layer numbers follow Table 4 (the projection is layer 1).
-                let _layer_span =
-                    trace::span("layer.forward", lw.lane_tag(), (i + 2) as u32, trace::NONE);
-                x = lw.apply(&x, alg, lane, scratch);
-            }
-            ops::add_bias_inplace(&mut x, &lw.bias);
-            if i == last {
-                ops::tanh_inplace(&mut x);
-            } else {
-                ops::relu_inplace(&mut x);
-            }
+            // Layer numbers follow Table 4 (the projection is layer 1).
+            // The bias+activation epilogue belongs to the layer — a
+            // pinned fused-epilogue strategy applies it in-register
+            // inside `apply_act` (DESIGN.md §Fused-Epilogue).
+            let _layer_span =
+                trace::span("layer.forward", lw.lane_tag(), (i + 2) as u32, trace::NONE);
+            x = lw.apply_act(&x, alg, lane, i == last, scratch);
         }
         x
     }
@@ -488,15 +579,9 @@ impl Generator {
             {
                 let _layer_span =
                     trace::span("layer.forward", lw.lane_tag(), (i + 2) as u32, trace::NONE);
-                lw.apply_batch(&x, lane, scratch, &mut y);
+                lw.apply_batch_act(&x, lane, i == last, scratch, &mut y);
             }
             x = y;
-            ops::add_bias_batch_inplace(&mut x, &lw.bias);
-            if i == last {
-                ops::tanh_batch_inplace(&mut x);
-            } else {
-                ops::relu_batch_inplace(&mut x);
-            }
         }
         x
     }
@@ -784,6 +869,53 @@ mod tests {
             assert_eq!(per_latent.image(i), &w.data[..], "per-latent pin diverged");
         }
         g.clear_strategies();
+    }
+
+    #[test]
+    fn fused_epilogue_pins_match_reference_through_model() {
+        // ISSUE 10: strategies carrying the fused-epilogue axis apply
+        // bias + ReLU/tanh in-register inside the GEMM store and must
+        // match the conv-then-apply reference within the GEMM lanes'
+        // 1e-4 contract — single-image and batched dispatch alike, and
+        // the fused pin must never claim *more* scratch than its
+        // separate twin.
+        use crate::tune::space::ExecStrategy;
+        let mut g = tiny_generator();
+        let z = vec![0.12; g.model.z_dim()];
+        let want = g.forward(&z, Algorithm::Unified, Lane::Serial);
+        g.set_strategies(&[
+            ExecStrategy::serial_gemm().fused_epilogue(),
+            ExecStrategy::gemm_parallel(2).fused_epilogue(),
+        ]);
+        let got = g.forward(&z, Algorithm::Unified, Lane::Serial);
+        assert!(
+            max_abs_diff(&got, &want) < 1e-4,
+            "fused-epilogue pins diverged through the generator"
+        );
+        for (lw, sep) in g.layers.iter().zip([
+            ExecStrategy::serial_gemm(),
+            ExecStrategy::gemm_parallel(2),
+        ]) {
+            assert!(lw.scratch_floats() < lw.plan.scratch_floats_for(&sep));
+        }
+        // Batched: fused-epilogue on the stacked batched GEMM.
+        let latents: Vec<Vec<f32>> = (0..3)
+            .map(|i| vec![0.03 * (i + 1) as f32; g.model.z_dim()])
+            .collect();
+        g.set_strategies(&[
+            ExecStrategy::serial_gemm().fused().fused_epilogue(),
+            ExecStrategy::gemm_parallel(2).fused().fused_epilogue(),
+        ]);
+        let fb = g.forward_batch(&latents, Lane::Serial);
+        g.clear_strategies();
+        for (i, zi) in latents.iter().enumerate() {
+            let w = g.forward(zi, Algorithm::Unified, Lane::Serial);
+            let img = Feature::from_vec(16, 16, 3, fb.image(i).to_vec());
+            assert!(
+                max_abs_diff(&img, &w) < 1e-4,
+                "batched fused-epilogue diverged on image {i}"
+            );
+        }
     }
 
     #[test]

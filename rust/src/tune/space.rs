@@ -86,6 +86,39 @@ impl ParAxis {
     }
 }
 
+/// Where the layer epilogue (per-channel bias + activation) executes
+/// for the phase-GEMM formulation (DESIGN.md §Fused-Epilogue).
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash)]
+pub enum EpilogueMode {
+    /// Phase GEMMs write a contiguous phase slab, `scatter_rows`
+    /// recombines it into the strided output, and the caller applies
+    /// bias + activation as a separate full pass (the historical
+    /// three-pass shape).
+    Separate,
+    /// GEMM accumulator tiles store directly into the strided output
+    /// positions with bias + activation applied in-register
+    /// (`ConvTransposePlan::run_gemm_fused*`) — no phase slab, no
+    /// scatter pass, no epilogue pass.
+    Fused,
+}
+
+impl EpilogueMode {
+    pub fn name(&self) -> &'static str {
+        match self {
+            EpilogueMode::Separate => "separate",
+            EpilogueMode::Fused => "fused",
+        }
+    }
+
+    fn from_name(name: &str) -> Option<EpilogueMode> {
+        match name {
+            "separate" => Some(EpilogueMode::Separate),
+            "fused" => Some(EpilogueMode::Fused),
+            _ => None,
+        }
+    }
+}
+
 /// One point in the execution-strategy space for a planned layer.
 ///
 /// Constructed through the helpers so the serial lane is canonical
@@ -129,6 +162,15 @@ pub struct ExecStrategy {
     /// Normalized to `F32` for the direct formulations (they have no
     /// quantized lanes), so `Eq` stays semantic.
     pub precision: Precision,
+    /// The epilogue axis (DESIGN.md §Fused-Epilogue): whether the
+    /// phase-GEMM lanes store accumulator tiles straight into the
+    /// strided output with bias + activation folded in
+    /// ([`EpilogueMode::Fused`]) or keep the historical slab → scatter
+    /// → separate-epilogue shape ([`EpilogueMode::Separate`]).
+    /// Normalized to `Separate` for the non-GEMM formulations (their
+    /// writes are already direct; only the GEMM lanes have a slab to
+    /// skip), so `Eq` stays semantic.
+    pub epilogue: EpilogueMode,
 }
 
 impl ExecStrategy {
@@ -143,6 +185,7 @@ impl ExecStrategy {
             fused: false,
             isa: Isa::Scalar,
             precision: Precision::F32,
+            epilogue: EpilogueMode::Separate,
         }
     }
 
@@ -155,6 +198,7 @@ impl ExecStrategy {
             fused: false,
             isa: Isa::Scalar,
             precision: Precision::F32,
+            epilogue: EpilogueMode::Separate,
         }
     }
 
@@ -168,6 +212,7 @@ impl ExecStrategy {
             fused: false,
             isa: Isa::Scalar,
             precision: Precision::F32,
+            epilogue: EpilogueMode::Separate,
         }
     }
 
@@ -180,6 +225,7 @@ impl ExecStrategy {
             fused: false,
             isa: Isa::Scalar,
             precision: Precision::F32,
+            epilogue: EpilogueMode::Separate,
         }
     }
 
@@ -193,6 +239,7 @@ impl ExecStrategy {
             fused: false,
             isa: Isa::active(),
             precision: Precision::F32,
+            epilogue: EpilogueMode::Separate,
         }
     }
 
@@ -208,6 +255,7 @@ impl ExecStrategy {
             fused: false,
             isa: Isa::active(),
             precision: Precision::F32,
+            epilogue: EpilogueMode::Separate,
         }
     }
 
@@ -232,6 +280,20 @@ impl ExecStrategy {
             precision
         } else {
             Precision::F32
+        };
+        self
+    }
+
+    /// Pin the epilogue axis to in-register fusion
+    /// (DESIGN.md §Fused-Epilogue).  Meaningful only for the
+    /// phase-GEMM formulation — the direct formulations have no phase
+    /// slab to skip, so the axis is normalized to `Separate` and `Eq`
+    /// stays semantic (mirrors [`with_isa`](Self::with_isa)).
+    pub fn fused_epilogue(mut self) -> ExecStrategy {
+        self.epilogue = if self.formulation == Formulation::PhaseGemm {
+            EpilogueMode::Fused
+        } else {
+            EpilogueMode::Separate
         };
         self
     }
@@ -266,7 +328,12 @@ impl ExecStrategy {
     /// the `/fused` suffix), so scalar-host names are unchanged from
     /// pre-SIMD releases; the precision axis likewise appears only on
     /// quantized lanes (after the ISA, before `/fused`), so every f32
-    /// name is unchanged from pre-quantization releases.
+    /// name is unchanged from pre-quantization releases; the epilogue
+    /// axis appears as `/fuse` only on fused-epilogue GEMM lanes
+    /// (after the precision, before the batched `/fused` suffix —
+    /// `/fuse` is the epilogue, `/fused` is batched dispatch), so
+    /// every separate-epilogue name is unchanged from pre-fusion
+    /// releases.
     pub fn name(&self) -> String {
         let mut base = match (self.formulation, self.workers) {
             (f, 1) => format!("{}/serial", f.name()),
@@ -281,6 +348,9 @@ impl ExecStrategy {
         }
         if self.precision != Precision::F32 {
             base = format!("{base}/{}", self.precision.name());
+        }
+        if self.epilogue == EpilogueMode::Fused {
+            base = format!("{base}/fuse");
         }
         if self.fused {
             format!("{base}/fused")
@@ -314,13 +384,20 @@ impl ExecStrategy {
                 Json::Str(self.precision.name().to_string()),
             );
         }
+        if self.epilogue == EpilogueMode::Fused {
+            m.insert(
+                "epilogue".to_string(),
+                Json::Str(self.epilogue.name().to_string()),
+            );
+        }
         Json::Obj(m)
     }
 
     /// Decode from the cache encoding; `None` on any malformed field.
     /// A missing `fused` field decodes as per-latent, a missing `isa`
-    /// field decodes as scalar, and a missing `precision` field decodes
-    /// as f32 — the only lanes that existed when such caches were
+    /// field decodes as scalar, a missing `precision` field decodes
+    /// as f32, and a missing `epilogue` field decodes as the separate
+    /// epilogue — the only lanes that existed when such caches were
     /// written, so legacy verdicts keep their historically-correct
     /// meaning.
     pub fn from_json(v: &Json) -> Option<ExecStrategy> {
@@ -344,6 +421,13 @@ impl ExecStrategy {
             Some(j) => Precision::parse(j.as_str()?)?,
         };
         let s = s.with_isa(isa).with_precision(precision);
+        let s = match v.get("epilogue") {
+            None => s,
+            Some(j) => match EpilogueMode::from_name(j.as_str()?)? {
+                EpilogueMode::Fused => s.fused_epilogue(),
+                EpilogueMode::Separate => s,
+            },
+        };
         match v.get("fused") {
             None => Some(s),
             Some(f) => {
@@ -378,7 +462,10 @@ fn worker_counts(max_workers: usize) -> Vec<usize> {
 /// phase-GEMM rows).  On vector hosts every GEMM lane additionally
 /// appears scalar-pinned (the microkernel axis, DESIGN.md
 /// §SIMD-Dispatch) — [`Isa::supported`] is `{active, scalar}`, so the
-/// space enumerates exactly the lanes the host can execute.
+/// space enumerates exactly the lanes the host can execute.  Every
+/// active-ISA GEMM lane also appears with the fused epilogue (the
+/// epilogue axis, DESIGN.md §Fused-Epilogue) so the tuner *measures*
+/// the skipped slab+scatter pass per layer instead of assuming it.
 /// [`ExecStrategy::serial`] is always element zero.
 pub fn search_space(max_workers: usize) -> Vec<ExecStrategy> {
     let vector_host = Isa::active() != Isa::Scalar;
@@ -386,6 +473,7 @@ pub fn search_space(max_workers: usize) -> Vec<ExecStrategy> {
         ExecStrategy::serial(),
         ExecStrategy::serial_per_element(),
         ExecStrategy::serial_gemm(),
+        ExecStrategy::serial_gemm().fused_epilogue(),
     ];
     if vector_host {
         out.push(ExecStrategy::serial_gemm().with_isa(Isa::Scalar));
@@ -395,6 +483,7 @@ pub fn search_space(max_workers: usize) -> Vec<ExecStrategy> {
         out.push(ExecStrategy::parallel(w, ParAxis::Rows));
         out.push(ExecStrategy::per_element_parallel(w));
         out.push(ExecStrategy::gemm_parallel(w));
+        out.push(ExecStrategy::gemm_parallel(w).fused_epilogue());
         if vector_host {
             out.push(ExecStrategy::gemm_parallel(w).with_isa(Isa::Scalar));
         }
@@ -410,7 +499,9 @@ pub fn search_space(max_workers: usize) -> Vec<ExecStrategy> {
 /// row-parallel GEMM, and the fused image×row direct queue per worker
 /// count.  The per-latent serial default stays element zero, so the
 /// incumbent pruning baseline is the pre-batching behavior and a fused
-/// verdict can only come from measuring it faster.
+/// verdict can only come from measuring it faster.  The batched GEMM
+/// variants additionally appear with the fused epilogue (stacked phase
+/// GEMMs storing straight into every image's strided rows).
 pub fn search_space_batch(max_workers: usize, batch: usize) -> Vec<ExecStrategy> {
     let mut out = search_space(max_workers);
     if batch <= 1 {
@@ -418,12 +509,14 @@ pub fn search_space_batch(max_workers: usize, batch: usize) -> Vec<ExecStrategy>
     }
     let vector_host = Isa::active() != Isa::Scalar;
     out.push(ExecStrategy::serial_gemm().fused());
+    out.push(ExecStrategy::serial_gemm().fused().fused_epilogue());
     if vector_host {
         out.push(ExecStrategy::serial_gemm().with_isa(Isa::Scalar).fused());
     }
     for w in worker_counts(max_workers) {
         out.push(ExecStrategy::parallel(w, ParAxis::PhaseRows).fused());
         out.push(ExecStrategy::gemm_parallel(w).fused());
+        out.push(ExecStrategy::gemm_parallel(w).fused().fused_epilogue());
         if vector_host {
             out.push(ExecStrategy::gemm_parallel(w).with_isa(Isa::Scalar).fused());
         }
@@ -471,12 +564,13 @@ mod tests {
 
     #[test]
     fn space_sizes() {
-        // max 1 → only the serial lanes; each worker count adds 4
+        // max 1 → only the serial lanes (3 formulations + the
+        // fused-epilogue GEMM twin); each worker count adds 5
         // (+ the scalar-pinned GEMM twin on vector hosts).
         let e = extra();
-        assert_eq!(search_space(1).len(), 3 + e);
-        assert_eq!(search_space(2).len(), 3 + e + (4 + e)); // w ∈ {2}
-        assert_eq!(search_space(8).len(), 3 + e + 3 * (4 + e)); // w ∈ {2, 4, 8}
+        assert_eq!(search_space(1).len(), 4 + e);
+        assert_eq!(search_space(2).len(), 4 + e + (5 + e)); // w ∈ {2}
+        assert_eq!(search_space(8).len(), 4 + e + 3 * (5 + e)); // w ∈ {2, 4, 8}
         assert_eq!(worker_counts(6), vec![2, 4, 6]);
     }
 
@@ -536,10 +630,13 @@ mod tests {
         assert!(batched.contains(&ExecStrategy::serial_gemm().fused()));
         assert!(batched.contains(&ExecStrategy::gemm_parallel(4).fused()));
         assert!(batched.contains(&ExecStrategy::parallel(2, ParAxis::PhaseRows).fused()));
-        // 1 fused serial gemm + 2 fused lanes per worker count {2, 4}
-        // (+ scalar-pinned GEMM twins on vector hosts).
+        assert!(batched.contains(&ExecStrategy::serial_gemm().fused().fused_epilogue()));
+        assert!(batched.contains(&ExecStrategy::gemm_parallel(4).fused().fused_epilogue()));
+        // 2 fused serial gemms (separate + fused epilogue) + 3 fused
+        // lanes per worker count {2, 4} (+ scalar-pinned GEMM twins on
+        // vector hosts).
         let e = extra();
-        assert_eq!(batched.len(), base.len() + (1 + e) + (2 + e) * 2);
+        assert_eq!(batched.len(), base.len() + (2 + e) + (3 + e) * 2);
         assert_eq!(
             ExecStrategy::serial_gemm().with_isa(Isa::Scalar).fused().name(),
             "phase-gemm/serial/fused"
@@ -568,6 +665,10 @@ mod tests {
             assert!(space.contains(&ExecStrategy::serial_gemm()));
             assert!(!space.iter().any(|s| s.formulation == Formulation::PerElement));
             assert!(!space.iter().any(|s| s.fused));
+            // Backward lanes have no fused-epilogue variant (the
+            // backward GEMMs accumulate into dx, there is no bias /
+            // activation epilogue to fold).
+            assert!(!space.iter().any(|s| s.epilogue == EpilogueMode::Fused));
             let mut names: Vec<String> = space.iter().map(ExecStrategy::name).collect();
             names.sort();
             names.dedup();
@@ -679,6 +780,74 @@ mod tests {
         for bad in [
             r#"{"formulation":"phase-gemm","workers":2,"axis":"phase-rows","precision":"f8"}"#,
             r#"{"formulation":"phase-gemm","workers":2,"axis":"phase-rows","precision":16}"#,
+        ] {
+            let v = crate::util::json::parse(bad).unwrap();
+            assert_eq!(ExecStrategy::from_json(&v), None, "{bad}");
+        }
+    }
+
+    #[test]
+    fn epilogue_axis_is_gemm_only_and_defaults_separate() {
+        // Every constructor defaults to the separate epilogue, so
+        // pre-fusion behavior is the baseline the tuner prunes against.
+        assert_eq!(ExecStrategy::serial_gemm().epilogue, EpilogueMode::Separate);
+        // fused_epilogue pins GEMM lanes; direct formulations
+        // normalize the axis away (mirrors with_isa/with_precision).
+        let f = ExecStrategy::serial_gemm().fused_epilogue();
+        assert_eq!(f.epilogue, EpilogueMode::Fused);
+        assert_eq!(
+            ExecStrategy::serial().fused_epilogue(),
+            ExecStrategy::serial()
+        );
+        assert_eq!(
+            ExecStrategy::serial_per_element().fused_epilogue(),
+            ExecStrategy::serial_per_element()
+        );
+        // Both epilogue modes of every GEMM lane are enumerated, so
+        // the tuner measures the fusion win instead of assuming it.
+        let space = search_space(4);
+        assert!(space.contains(&ExecStrategy::serial_gemm().fused_epilogue()));
+        assert!(space.contains(&ExecStrategy::gemm_parallel(4).fused_epilogue()));
+        // The axis composes with the others and names append /fuse
+        // after the precision, before any batched /fused.
+        assert_eq!(f.name(), "phase-gemm/serial/fuse");
+        assert_eq!(
+            ExecStrategy::gemm_parallel(4)
+                .with_isa(Isa::Avx2)
+                .with_precision(Precision::F16)
+                .fused_epilogue()
+                .fused()
+                .name(),
+            "phase-gemm/par4/avx2/f16/fuse/fused"
+        );
+    }
+
+    #[test]
+    fn epilogue_json_omitted_means_separate() {
+        // Separate-epilogue encodings carry no field, so every
+        // pre-fusion cache line is byte-stable and decodes unchanged.
+        let sep = ExecStrategy::serial_gemm().to_json().to_string_compact();
+        assert!(!sep.contains("epilogue"), "{sep}");
+        let fused = ExecStrategy::serial_gemm().fused_epilogue();
+        let encoded = fused.to_json().to_string_compact();
+        assert!(encoded.contains("\"epilogue\":\"fused\""), "{encoded}");
+        let decoded =
+            ExecStrategy::from_json(&crate::util::json::parse(&encoded).unwrap()).unwrap();
+        assert_eq!(decoded, fused, "{encoded}");
+        // Legacy line (no epilogue field) decodes as separate.
+        let legacy = r#"{"formulation":"phase-gemm","workers":2,"axis":"phase-rows"}"#;
+        let decoded =
+            ExecStrategy::from_json(&crate::util::json::parse(legacy).unwrap()).unwrap();
+        assert_eq!(decoded.epilogue, EpilogueMode::Separate);
+        // An explicit "separate" also decodes (forward-compat with
+        // hand-edited caches); malformed values reject.
+        let explicit = r#"{"formulation":"phase-gemm","workers":2,"axis":"phase-rows","epilogue":"separate"}"#;
+        let decoded =
+            ExecStrategy::from_json(&crate::util::json::parse(explicit).unwrap()).unwrap();
+        assert_eq!(decoded.epilogue, EpilogueMode::Separate);
+        for bad in [
+            r#"{"formulation":"phase-gemm","workers":2,"axis":"phase-rows","epilogue":"inline"}"#,
+            r#"{"formulation":"phase-gemm","workers":2,"axis":"phase-rows","epilogue":1}"#,
         ] {
             let v = crate::util::json::parse(bad).unwrap();
             assert_eq!(ExecStrategy::from_json(&v), None, "{bad}");

@@ -458,4 +458,80 @@ fn planned_path_is_zero_alloc_after_warmup() {
             "batched int8 lane diverged past its drift bound (image {i})"
         );
     }
+
+    // --- Part 8: the fused-epilogue lanes (ISSUE 10, DESIGN.md
+    // §Fused-Epilogue) tighten the contract: GEMM tiles store straight
+    // into the strided output, so the arena drops the phase-slab
+    // region entirely.  Exact sizing first — and *strictly smaller*
+    // than the separate route's figure.
+    use ukstc::conv::gemm::{Activation, Epilogue};
+    let fused = ExecStrategy::serial_gemm().fused_epilogue();
+    let bias8 = Feature::random(1, 1, 8, &mut rng).data;
+    let epi8 = Epilogue {
+        bias: Some(&bias8[..]),
+        act: Activation::Relu,
+    };
+    let mut out8 = plan0.new_output();
+    let mut outb8 = plan0.new_batch_output(batch);
+    {
+        let mut cold = Scratch::new();
+        plan0.run_with_epilogue(&fused, x0c, &mut cold, &mut out8, &epi8);
+        assert_eq!(
+            cold.capacity_floats(),
+            plan0.scratch_floats_gemm_fused(),
+            "fused-epilogue sizing is not exact"
+        );
+        assert!(
+            plan0.scratch_floats_gemm_fused() < plan0.scratch_floats(),
+            "fused epilogue must need strictly less scratch than slab+scatter"
+        );
+        let fused_b = ExecStrategy::serial_gemm().fused().fused_epilogue();
+        let mut cold = Scratch::new();
+        plan0.run_batch_with_epilogue(&fused_b, &xb, &mut cold, &mut outb8, &epi8);
+        assert_eq!(
+            cold.capacity_floats(),
+            plan0.scratch_floats_gemm_batch_fused(batch),
+            "batched fused-epilogue sizing is not exact"
+        );
+        assert!(
+            plan0.scratch_floats_gemm_batch_fused(batch) < plan0.scratch_floats_gemm_batch(batch),
+            "batched fused epilogue must need strictly less scratch"
+        );
+    }
+    // Steady state: the fused single-image, batched, and quantized
+    // lanes touch only the warm arena, the plan's packed operands, and
+    // the caller's output — zero heap allocations.
+    let fused_b = ExecStrategy::serial_gemm().fused().fused_epilogue();
+    let f16_fused = ExecStrategy::serial_gemm()
+        .with_precision(Precision::F16)
+        .fused_epilogue();
+    plan0.run_with_epilogue(&fused, x0c, &mut scratch, &mut out8, &epi8);
+    plan0.run_batch_with_epilogue(&fused_b, &xb, &mut scratch, &mut outb8, &epi8);
+    plan0.run_with_epilogue(&f16_fused, x0c, &mut scratch, &mut out8, &epi8);
+    let before = allocs();
+    for _ in 0..5 {
+        plan0.run_with_epilogue(&fused, x0c, &mut scratch, &mut out8, &epi8);
+        plan0.run_batch_with_epilogue(&fused_b, &xb, &mut scratch, &mut outb8, &epi8);
+        plan0.run_with_epilogue(&f16_fused, x0c, &mut scratch, &mut out8, &epi8);
+    }
+    assert_eq!(
+        allocs(),
+        before,
+        "fused-epilogue lanes heap-allocated in steady state (warm arena)"
+    );
+    // Results stay correct after all that reuse: the f32 fused lane
+    // ran via run_with_epilogue, so compare against the separate
+    // reference with the same bias+ReLU applied (GEMM reassociation
+    // tolerance).
+    plan0.run_with_epilogue(&fused, x0c, &mut scratch, &mut out8, &epi8);
+    let mut want8 = unified::transpose_conv_seg(x0c, plan0.seg(), 2);
+    for px in want8.data.chunks_exact_mut(8) {
+        for (v, b) in px.iter_mut().zip(&bias8) {
+            *v = (*v + b).max(0.0);
+        }
+    }
+    assert!(
+        ops::max_abs_diff(&out8, &want8) < 1e-4,
+        "fused-epilogue result diverged after arena reuse"
+    );
 }

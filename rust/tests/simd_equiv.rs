@@ -145,6 +145,21 @@ fn quantized_lanes_bounded_drift_across_geometry_envelope() {
                             "{} vs serial int8: {par_err} (n={n_in} p={padding} cout={cout})",
                             par.name()
                         );
+                        // The int8 microkernel accumulates exactly in
+                        // i32 (the AVX2 madd-pair lane widens every
+                        // product before summing), so pinning any
+                        // vector ISA is *bit-identical* to the forced
+                        // scalar int8 lane — not just drift-bounded.
+                        let scalar_int8 = ExecStrategy::serial_gemm()
+                            .with_isa(Isa::Scalar)
+                            .with_precision(prec);
+                        let mut scalar_out = plan.new_output();
+                        plan.run_with(&scalar_int8, &x, &mut scratch, &mut scalar_out);
+                        assert_eq!(
+                            scalar_out.data, got.data,
+                            "int8 vector lane must be bit-identical to scalar \
+                             (n={n_in} p={padding} cout={cout})"
+                        );
                     } else {
                         assert_eq!(
                             par_err, 0.0,
